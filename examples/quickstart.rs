@@ -1,0 +1,91 @@
+//! Quickstart: generate a small workload, start the serving stack over
+//! the compiled artifacts, align a batch, and cross-check against the
+//! CPU oracle.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::datagen::{generate, Family, GenConfig};
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::normalize::znormed;
+
+fn main() -> Result<()> {
+    // 1. a workload: 8 ECG-like queries, half of them planted (warped +
+    //    noised) into a 2048-sample reference stream — paper §4's setup
+    let cfg = GenConfig {
+        batch: 8,
+        qlen: 128,
+        reflen: 2048,
+        seed: 7,
+        planted_fraction: 0.5,
+        noise: 0.02,
+        family: Family::Ecg,
+    };
+    let ds = generate(&cfg);
+    println!(
+        "workload: {} queries × {} vs reference of {}",
+        ds.batch(),
+        ds.qlen,
+        ds.reference.len()
+    );
+
+    // 2. the serving stack over the AOT artifacts (layer 3 → PJRT)
+    let service = SdtwService::start(
+        ServiceOptions {
+            variant: "pipeline_b8_m128_n2048_w16".into(),
+            batch_deadline: Duration::from_millis(5),
+            ..Default::default()
+        },
+        ds.reference.clone(),
+    )?;
+
+    // 3. align the batch
+    let queries: Vec<Vec<f32>> = (0..ds.batch()).map(|i| ds.query(i).to_vec()).collect();
+    let responses = service.align_many(&queries, AlignOptions::default())?;
+
+    // 4. compare with the CPU oracle (the paper's correctness protocol)
+    let rn = znormed(&ds.reference);
+    println!("\n  q   device cost   oracle cost     end   planted?");
+    for (i, r) in responses.iter().enumerate() {
+        let want = sdtw(&znormed(ds.query(i)), &rn, Dist::Sq);
+        let planted = ds.truth[i]
+            .map(|e| format!("@{}..{}", e.start, e.end))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "  {i}   {:11.4}   {:11.4}   {:5}   {planted}",
+            r.cost, want.cost, r.end
+        );
+        assert!(
+            (r.cost - want.cost).abs() <= 0.01 * want.cost.max(1.0),
+            "device/oracle mismatch on q{i}"
+        );
+    }
+
+    // planted queries should be cheaper than decoys on average
+    let (mut planted_sum, mut planted_n, mut decoy_sum, mut decoy_n) = (0f32, 0, 0f32, 0);
+    for (i, r) in responses.iter().enumerate() {
+        if ds.truth[i].is_some() {
+            planted_sum += r.cost;
+            planted_n += 1;
+        } else {
+            decoy_sum += r.cost;
+            decoy_n += 1;
+        }
+    }
+    if planted_n > 0 && decoy_n > 0 {
+        println!(
+            "\nmean cost: planted {:.3} vs decoy {:.3}",
+            planted_sum / planted_n as f32,
+            decoy_sum / decoy_n as f32
+        );
+    }
+    println!("\nmetrics: {}", service.metrics().render());
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run): boots the
+//! full stack — TCP server → coordinator (dynamic batcher) → PJRT
+//! runtime executing the AOT pipeline artifact — then drives it with
+//! concurrent clients replaying a generated workload, and reports
+//! latency percentiles + throughput.
+//!
+//! Everything on the serve path is Rust; Python was only involved when
+//! `make artifacts` lowered the kernels.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_e2e [-- --quick]
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::datagen::{generate, Family, GenConfig};
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::normalize::znormed;
+use sdtw_repro::server::{Client, Server};
+use sdtw_repro::util::stats::percentile;
+
+const VARIANT: &str = "pipeline_b8_m128_n2048_w16";
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_clients = if quick { 4 } else { 8 };
+    let requests_per_client = if quick { 24 } else { 100 };
+
+    // 1. workload: ECG stream + mixed planted/decoy queries
+    let cfg = GenConfig {
+        batch: 64,
+        qlen: 128,
+        reflen: 2048,
+        seed: 11,
+        planted_fraction: 0.5,
+        noise: 0.02,
+        family: Family::Ecg,
+    };
+    let ds = Arc::new(generate(&cfg));
+
+    // 2. boot the stack: service (2 workers) + TCP server on a free port
+    let service = Arc::new(SdtwService::start(
+        ServiceOptions {
+            variant: VARIANT.into(),
+            workers: 2,
+            batch_deadline: Duration::from_millis(4),
+            ..Default::default()
+        },
+        ds.reference.clone(),
+    )?);
+    let server = Server::bind(service.clone(), "127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let stop = server.stop_flag();
+    let server_thread = std::thread::spawn(move || server.serve());
+    println!("server on {addr}: {n_clients} clients × {requests_per_client} requests");
+
+    // 3. concurrent clients replaying queries over TCP
+    let errors = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let ds = ds.clone();
+        let errors = errors.clone();
+        handles.push(std::thread::spawn(move || -> Vec<(usize, f32, f64)> {
+            let mut client = Client::connect(&addr).expect("connect");
+            client.ping().expect("ping");
+            let mut out = Vec::new();
+            for k in 0..requests_per_client {
+                let qi = (c * 31 + k * 7) % ds.batch();
+                let t = Instant::now();
+                match client.align(ds.query(qi), AlignOptions::default()) {
+                    Ok((cost, _end, _server_ms)) => {
+                        out.push((qi, cost, t.elapsed().as_secs_f64() * 1e3));
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            out
+        }));
+    }
+    let mut all: Vec<(usize, f32, f64)> = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // 4. stop the server
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap()?;
+
+    // 5. verify a sample of responses against the CPU oracle
+    let rn = znormed(&ds.reference);
+    for &(qi, cost, _) in all.iter().step_by(all.len().max(1) / 16 + 1) {
+        let want = sdtw(&znormed(ds.query(qi)), &rn, Dist::Sq);
+        assert!(
+            (cost - want.cost).abs() <= 0.01 * want.cost.max(1.0),
+            "q{qi}: served {cost} vs oracle {}",
+            want.cost
+        );
+    }
+
+    // 6. report
+    let lat: Vec<f64> = all.iter().map(|&(_, _, ms)| ms).collect();
+    let total = all.len();
+    let qps = total as f64 / wall_s;
+    let m = service.metrics();
+    println!("\n== serve_e2e results ==");
+    println!("requests      : {total} ok, {} errors", errors.load(Ordering::Relaxed));
+    println!("wall time     : {wall_s:.2} s  ({qps:.1} queries/s end-to-end)");
+    println!(
+        "client latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+        percentile(&lat, 50.0),
+        percentile(&lat, 95.0),
+        percentile(&lat, 99.0),
+        percentile(&lat, 100.0)
+    );
+    println!(
+        "service       : batches={} padding={:.1}% device_gsps={:.6} busy={:.0} ms",
+        m.batches,
+        m.padding_fraction() * 100.0,
+        m.device_gsps,
+        m.busy_ms
+    );
+    println!(
+        "batching      : {:.1} rows/batch mean (kernel B=8)",
+        m.real_rows as f64 / m.batches.max(1) as f64
+    );
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "no request may fail");
+    assert_eq!(total, n_clients * requests_per_client);
+    println!("\nserve_e2e OK — record these numbers in EXPERIMENTS.md §E2E");
+    Ok(())
+}

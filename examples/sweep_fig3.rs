@@ -1,0 +1,62 @@
+//! Regenerate the paper's Figure 3: throughput as a function of the
+//! segment (thread-coarsening) width.
+//!
+//! The paper measured a peak around width 14 with ~30 % improvement over
+//! width 2, degrading for larger widths.  Our TPU-shaped kernel has the
+//! same knob (inner scan width W vs N/W carry steps — DESIGN.md §1), so
+//! the *shape* of the curve is the reproduction target; absolute numbers
+//! come from the CPU-PJRT substitute (DESIGN.md §4).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example sweep_fig3 [-- --quick]
+//! ```
+
+use anyhow::Result;
+
+use sdtw_repro::experiments::fig3_sweep;
+use sdtw_repro::util::stats::Protocol;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let protocol = if quick { Protocol::QUICK } else { Protocol::PAPER };
+    let table = fig3_sweep(std::path::Path::new("artifacts"), 42, protocol)?;
+    table.print();
+
+    // summarize the curve shape the way the paper discusses it
+    let gsps: Vec<(u64, f64)> = table
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                r.cells[0].parse::<u64>().unwrap(),
+                r.cells[1].parse::<f64>().unwrap(),
+            )
+        })
+        .collect();
+    let (w_peak, g_peak) = gsps
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let g_w2 = gsps.iter().find(|(w, _)| *w == 2).map(|(_, g)| *g);
+    println!("peak at width {w_peak} ({g_peak:.6} Gsps)");
+    if let Some(g2) = g_w2 {
+        println!(
+            "improvement over width 2: {:+.1}% (paper: ≈ +30% at width 14)",
+            (g_peak / g2 - 1.0) * 100.0
+        );
+    }
+    if let (Some(first), Some(last)) = (gsps.first(), gsps.last()) {
+        println!(
+            "curve: rises from w={} then degrades by w={} — {}",
+            first.0,
+            last.0,
+            if g_peak > first.1 && g_peak > last.1 {
+                "U-shape reproduced"
+            } else {
+                "U-shape NOT reproduced (investigate)"
+            }
+        );
+    }
+    Ok(())
+}

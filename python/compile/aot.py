@@ -1,0 +1,211 @@
+"""AOT driver: lower every model variant to an HLO-text artifact.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces ``artifacts/<name>.hlo.txt`` per variant plus
+``artifacts/manifest.json`` describing shapes/dtypes/params, which the
+Rust runtime (``rust/src/runtime/artifact.rs``) reads to compile and
+route executables.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Variant inventory mirrors DESIGN.md §3:
+  * table-1 shapes (scaled; see DESIGN.md §4 for the substitution note),
+  * the Figure-3 segment-width sweep,
+  * dtype ablation (f32 / bf16 / f16 — the paper's __half2 fidelity),
+  * Discussion-§8 extensions (pruned, uint8-quantized),
+  * serve-path shapes for the coordinator + server examples.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# canonical shapes (DESIGN.md §4: paper shape 512x2000 vs 100k is scaled for
+# the CPU-PJRT substrate, preserving the M:N ratio ~1:16 and batch>1)
+# ---------------------------------------------------------------------------
+
+MAIN = dict(b=32, m=256, n=4096)     # "table-1" shape
+SERVE = dict(b=8, m=128, n=2048)     # low-latency serving shape
+PAPER_MU = dict(b=64, m=500, n=10000)  # closest-to-paper shape (slow bench)
+
+FIG3_WIDTHS = [2, 4, 8, 14, 16, 24, 32, 64]
+DTYPES = ["f32", "bf16", "f16"]
+PRUNE_THRESHOLD = 4.0  # (2 sigma)^2 separation on z-normalized data
+DEFAULT_W = 16
+
+
+def _nm(kind: str, b: int, m: int, n: int | None = None,
+        w: int | None = None, dtype: str | None = None,
+        tag: str | None = None) -> str:
+    parts = [kind, f"b{b}", f"m{m}"]
+    if n is not None:
+        parts.append(f"n{n}")
+    if w is not None:
+        parts.append(f"w{w}")
+    if dtype is not None and dtype != "f32":
+        parts.append(dtype)
+    if tag:
+        parts.append(tag)
+    return "_".join(parts)
+
+
+def build_variants() -> list[dict]:
+    """The full artifact inventory. Each entry: manifest metadata + a
+    zero-arg builder returning (fn, example_args)."""
+    v: list[dict] = []
+
+    def add(name, kind, maker, *, b, m, n=None, w=None, dtype="f32",
+            prune=None, extra=None):
+        entry = {
+            "name": name,
+            "kind": kind,
+            "file": f"{name}.hlo.txt",
+            "batch": b,
+            "qlen": m,
+            "reflen": n,
+            "segment_width": w,
+            "dtype": dtype,
+            "prune_threshold": prune,
+        }
+        if extra:
+            entry.update(extra)
+        entry["_maker"] = maker
+        v.append(entry)
+
+    # --- normalizers (paper §5.1) ------------------------------------
+    for shape in (MAIN, SERVE):
+        b, m = shape["b"], shape["m"]
+        add(_nm("znorm", b, m), "normalizer",
+            lambda b=b, m=m: model.make_normalizer(b, m), b=b, m=m)
+    for n in sorted({MAIN["n"], SERVE["n"], PAPER_MU["n"]}):
+        # reference normalizer: one (1, N) "batch"
+        add(_nm("znorm", 1, n), "normalizer",
+            lambda n=n: model.make_normalizer(1, n), b=1, m=n)
+
+    # --- table-1 kernels ----------------------------------------------
+    b, m, n = MAIN["b"], MAIN["m"], MAIN["n"]
+    add(_nm("sdtw", b, m, n, DEFAULT_W), "sdtw",
+        lambda: model.make_sdtw(b, m, n, segment_width=DEFAULT_W),
+        b=b, m=m, n=n, w=DEFAULT_W)
+    add(_nm("pipeline", b, m, n, DEFAULT_W), "pipeline",
+        lambda: model.make_pipeline(b, m, n, segment_width=DEFAULT_W),
+        b=b, m=m, n=n, w=DEFAULT_W)
+
+    # --- serve path -----------------------------------------------------
+    sb, sm, sn = SERVE["b"], SERVE["m"], SERVE["n"]
+    add(_nm("pipeline", sb, sm, sn, DEFAULT_W), "pipeline",
+        lambda: model.make_pipeline(sb, sm, sn, segment_width=DEFAULT_W),
+        b=sb, m=sm, n=sn, w=DEFAULT_W)
+
+    # --- Figure-3 sweep: segment width at the serve shape ---------------
+    for w in FIG3_WIDTHS:
+        add(_nm("sdtw", sb, sm, sn, w), "sdtw",
+            lambda w=w: model.make_sdtw(sb, sm, sn, segment_width=w),
+            b=sb, m=sm, n=sn, w=w)
+
+    # --- dtype ablation (the paper's __half2 fidelity) -------------------
+    for dt in DTYPES[1:]:  # f32 covered by the sweep entry at w=16
+        add(_nm("sdtw", sb, sm, sn, DEFAULT_W, dt), "sdtw",
+            lambda dt=dt: model.make_sdtw(sb, sm, sn,
+                                          segment_width=DEFAULT_W,
+                                          acc_dtype=dt),
+            b=sb, m=sm, n=sn, w=DEFAULT_W, dtype=dt)
+
+    # --- scan-implementation ablation (layout / closed-form choice) ------
+    for impl in ("unrolled", "unrolled_t", "cummin"):
+        for w in (2, 8, 16, 32):
+            add(_nm("sdtw", sb, sm, sn, w, tag=f"scan_{impl}"), "sdtw",
+                lambda impl=impl, w=w: model.make_sdtw(
+                    sb, sm, sn, segment_width=w, scan_impl=impl),
+                b=sb, m=sm, n=sn, w=w,
+                extra={"ablation": "scan", "scan_impl": impl})
+
+    # --- Discussion-§8 extensions ----------------------------------------
+    add(_nm("sdtw", sb, sm, sn, DEFAULT_W, tag="pruned"), "sdtw",
+        lambda: model.make_sdtw(sb, sm, sn, segment_width=DEFAULT_W,
+                                prune_threshold=PRUNE_THRESHOLD),
+        b=sb, m=sm, n=sn, w=DEFAULT_W, prune=PRUNE_THRESHOLD)
+    add(_nm("pipeline", sb, sm, sn, DEFAULT_W, tag="quant"),
+        "quantized_pipeline",
+        lambda: model.make_quantized_pipeline(sb, sm, sn,
+                                              segment_width=DEFAULT_W),
+        b=sb, m=sm, n=sn, w=DEFAULT_W, extra={"quantized": True})
+
+    # --- closest-to-paper shape (slow on CPU; benches gate it) -----------
+    pb, pm, pn = PAPER_MU["b"], PAPER_MU["m"], PAPER_MU["n"]
+    add(_nm("sdtw", pb, pm, pn, 25), "sdtw",
+        lambda: model.make_sdtw(pb, pm, pn, segment_width=25),
+        b=pb, m=pm, n=pn, w=25, extra={"slow": True})
+
+    return v
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(entry: dict) -> str:
+    fn, args = entry["_maker"]()
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on variant names")
+    ap.add_argument("--force", action="store_true",
+                    help="regenerate even if the artifact file exists")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    variants = build_variants()
+    manifest = []
+    n_gen = 0
+    for entry in variants:
+        meta = {k: v for k, v in entry.items() if not k.startswith("_")}
+        manifest.append(meta)
+        if args.only and args.only not in entry["name"]:
+            continue
+        path = os.path.join(args.out, entry["file"])
+        if os.path.exists(path) and not args.force:
+            print(f"  [skip] {entry['name']}")
+            continue
+        text = lower_variant(entry)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        n_gen += 1
+        print(f"  [gen ] {entry['name']}  ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump({"version": 1, "variants": manifest}, f, indent=2)
+    print(f"wrote {mpath}: {len(manifest)} variants ({n_gen} regenerated)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

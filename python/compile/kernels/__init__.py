@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the sDTW reproduction.
+
+Modules:
+  * ``normalize`` -- batch z-normalization kernel (paper section 5.1)
+  * ``sdtw``      -- batched subsequence-DTW kernel (paper section 5.2)
+  * ``quantize``  -- uint8 codebook codec (paper Discussion section 8)
+  * ``ref``       -- pure-numpy oracles used by pytest and shared with the
+                     Rust test vectors
+"""
+
+from . import normalize, quantize, ref, sdtw  # noqa: F401

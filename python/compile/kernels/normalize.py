@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: batch z-normalization (paper §5.1).
+
+Hardware adaptation of the paper's HIP normalizer:
+
+  paper (AMD)                           this kernel (TPU Pallas)
+  -----------------------------------   --------------------------------
+  one block per query                   one grid program per query
+  shared-memory partial sums +          VMEM-resident block; sums are
+    parallel reduction tree               VPU reductions (jnp.sum)
+  thread coarsening (2 elems/thread)    implicit: the 8x128 VPU consumes
+                                          the whole row in vector ops
+  thread 0 writes mean/std to shmem     scalars broadcast from registers
+  paper's moment formula                identical: sumSq/n - mean^2
+
+The kernel is lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend (the CPU client used by the Rust runtime); on a real TPU
+the same source compiles through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_EPS = 1e-8
+
+
+def _znorm_kernel(x_ref, o_ref, *, eps: float):
+    """Normalize one (1, L) block to mean 0 / std 1.
+
+    Uses the paper's (cuDTW++-inherited) population-moment formula:
+        sum  /= n ; sumSq = sumSq/n - sum*sum
+    with a variance floor of ``eps`` (guards constant series; the HIP
+    version divides by zero there, we choose the defined behaviour).
+    """
+    x = x_ref[...].astype(jnp.float32)
+    n = x.shape[-1]
+    s = jnp.sum(x) / n
+    ss = jnp.sum(x * x) / n - s * s
+    std = jnp.sqrt(jnp.maximum(ss, eps))
+    o_ref[...] = ((x - s) / std).astype(o_ref.dtype)
+
+
+def znorm_batch(x: jax.Array, *, eps: float = DEFAULT_EPS,
+                interpret: bool = True) -> jax.Array:
+    """Normalize each row of ``x`` (B, L) independently.
+
+    Grid = (B,): block-per-query, exactly the paper's launch geometry.
+    """
+    b, l = x.shape
+    return pl.pallas_call(
+        functools.partial(_znorm_kernel, eps=eps),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, l), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def znorm_single(x: jax.Array, *, eps: float = DEFAULT_EPS,
+                 interpret: bool = True) -> jax.Array:
+    """Normalize one 1-D series (used for the reference, paper §5).
+
+    The reference (N ≈ 100k) still fits one VMEM block (400 KB f32), so a
+    single-program launch suffices; see DESIGN.md §1 for the budget.
+    """
+    return znorm_batch(x[None, :], eps=eps, interpret=interpret)[0]

@@ -1,0 +1,77 @@
+"""Layer-1: uint8 codebook quantization (paper Discussion §8).
+
+The paper proposes, as future work, quantizing the fp16 inputs down to
+uint8 via a codebook built from the reference distribution: "evenly divide
+the bulk of the distribution across uint8 values clamping any outliers to
+the extreme values".  This module implements that proposal:
+
+  * ``build_codebook``  — (lo, hi) range covering ±clip_sigma standard
+    deviations of the reference; outliers clamp to the extremes.
+  * ``quantize`` / ``dequantize`` — uniform affine uint8 codec.
+  * ``quantize_pair_kernel`` — a small Pallas kernel that encodes a batch
+    in one pass (grid over rows), so the codec itself also exercises the
+    kernel path.
+
+The quantized sDTW pipeline (model.make_quantized_pipeline) encodes both
+operands to uint8, decodes inside the compute graph, and runs the standard
+kernel — on real hardware the decode folds into the cost computation; the
+accuracy impact is what the ablation bench measures.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CLIP_SIGMA = 4.0
+
+
+def build_codebook(reference: jax.Array, clip_sigma: float = DEFAULT_CLIP_SIGMA):
+    """Return (lo, hi) scalars bracketing the bulk of the distribution."""
+    r = reference.astype(jnp.float32)
+    mu = jnp.mean(r)
+    sd = jnp.std(r)
+    lo = mu - clip_sigma * sd
+    hi = mu + clip_sigma * sd
+    hi = jnp.where(hi <= lo, lo + 1.0, hi)
+    return lo, hi
+
+
+def quantize(x: jax.Array, lo, hi) -> jax.Array:
+    """Affine-encode to uint8 codes, clamping outliers (paper §8)."""
+    t = jnp.clip((x.astype(jnp.float32) - lo) / (hi - lo), 0.0, 1.0)
+    return jnp.round(t * 255.0).astype(jnp.uint8)
+
+
+def dequantize(codes: jax.Array, lo, hi) -> jax.Array:
+    return lo + codes.astype(jnp.float32) * (hi - lo) / 255.0
+
+
+def _quantize_kernel(x_ref, lo_ref, hi_ref, o_ref):
+    """Encode one (1, L) row against the broadcast codebook scalars."""
+    lo = lo_ref[0, 0]
+    hi = hi_ref[0, 0]
+    t = jnp.clip((x_ref[...].astype(jnp.float32) - lo) / (hi - lo), 0.0, 1.0)
+    o_ref[...] = jnp.round(t * 255.0).astype(jnp.uint8)
+
+
+def quantize_batch(x: jax.Array, lo, hi, *, interpret: bool = True) -> jax.Array:
+    """Pallas batch encoder: grid over rows of ``x`` (B, L) → uint8 codes."""
+    b, l = x.shape
+    lo2 = jnp.asarray(lo, jnp.float32).reshape(1, 1)
+    hi2 = jnp.asarray(hi, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.uint8),
+        interpret=interpret,
+    )(x, lo2, hi2)

@@ -1,0 +1,279 @@
+"""Pure-numpy reference oracles for the sDTW stack.
+
+These are the build-time equivalents of the paper's "CPU-side sequential
+version ... with the strict purpose of producing the expected output of a
+[GPU] sDTW batch run for correctness evaluation" (paper §4, §6).  They are
+deliberately written as naive, cell-by-cell dynamic programs — slow but
+obviously correct — and serve as the ground truth for every Pallas kernel
+and for the Rust oracle via shared test vectors.
+
+Conventions (shared with rust/src/dtw/):
+  * query  q: shape (M,)   — the short pattern
+  * reference r: shape (N,) — the long series searched for the pattern
+  * subsequence semantics: row 0 is initialised to the local distance
+    (free start anywhere in the reference); the answer is the minimum of
+    the bottom row (free end), plus its argmin = match END position.
+  * distance: squared difference by default ("sq"), absolute ("abs")
+    selectable — matching cuDTW++/DTWax conventions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INF = np.float64(np.inf)
+
+
+# --------------------------------------------------------------------------
+# distances
+# --------------------------------------------------------------------------
+
+def local_dist(a, b, dist: str = "sq"):
+    """Pointwise local distance between two values/arrays."""
+    d = np.asarray(a, dtype=np.float64) - np.asarray(b, dtype=np.float64)
+    if dist == "sq":
+        return d * d
+    if dist == "abs":
+        return np.abs(d)
+    raise ValueError(f"unknown dist {dist!r}")
+
+
+# --------------------------------------------------------------------------
+# z-normalization (paper §5.1)
+# --------------------------------------------------------------------------
+
+def znorm_ref(x: np.ndarray, eps: float = 1e-8) -> np.ndarray:
+    """Standardize the last axis to mean 0 / std 1.
+
+    Uses the paper's cuDTW++-style moment formula::
+
+        sum  /= n
+        sumSq = sumSq/n - sum*sum
+
+    (population variance), with a floor of ``eps`` on the variance to match
+    the kernel's guard against constant series.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    n = x.shape[-1]
+    s = x.sum(axis=-1, keepdims=True) / n
+    ss = (x * x).sum(axis=-1, keepdims=True) / n - s * s
+    std = np.sqrt(np.maximum(ss, eps))
+    return (x - s) / std
+
+
+# --------------------------------------------------------------------------
+# sDTW — the full DP matrix, naive recurrence (paper eq. 1)
+# --------------------------------------------------------------------------
+
+def sdtw_matrix(q: np.ndarray, r: np.ndarray, dist: str = "sq",
+                prune_threshold: float | None = None) -> np.ndarray:
+    """Full (M, N) accumulated-cost matrix for subsequence DTW.
+
+    D(0, j)   = d(q0, rj)                       (free start)
+    D(i, 0)   = D(i-1, 0) + d(qi, r0)
+    D(i, j)   = min(D(i-1,j), D(i,j-1), D(i-1,j-1)) + d(qi, rj)
+
+    With ``prune_threshold`` set, any cell whose *local* distance exceeds
+    the threshold contributes +inf (the paper's proposed "INF tiles",
+    Discussion §8).
+    """
+    q = np.asarray(q, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    m, n = q.shape[0], r.shape[0]
+    D = np.empty((m, n), dtype=np.float64)
+
+    def cell_cost(i, j):
+        c = local_dist(q[i], r[j], dist)
+        if prune_threshold is not None and c > prune_threshold:
+            return INF
+        return c
+
+    for j in range(n):
+        D[0, j] = cell_cost(0, j)
+    for i in range(1, m):
+        D[i, 0] = D[i - 1, 0] + cell_cost(i, 0)
+        for j in range(1, n):
+            best = min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
+            D[i, j] = best + cell_cost(i, j)
+    return D
+
+
+def sdtw_ref(q: np.ndarray, r: np.ndarray, dist: str = "sq",
+             prune_threshold: float | None = None):
+    """(cost, end_position) of the best subsequence alignment of q in r."""
+    D = sdtw_matrix(q, r, dist, prune_threshold)
+    last = D[-1]
+    pos = int(np.argmin(last))
+    return float(last[pos]), pos
+
+
+def sdtw_batch_ref(queries: np.ndarray, r: np.ndarray, dist: str = "sq",
+                   prune_threshold: float | None = None):
+    """Batch version: queries (B, M) vs one reference (N,).
+
+    Returns (costs (B,), positions (B,)) — the expected output of one
+    batched kernel invocation.
+    """
+    costs, positions = [], []
+    for q in np.asarray(queries):
+        c, p = sdtw_ref(q, r, dist, prune_threshold)
+        costs.append(c)
+        positions.append(p)
+    return np.asarray(costs, dtype=np.float64), np.asarray(positions, dtype=np.int64)
+
+
+# --------------------------------------------------------------------------
+# banded variant (Sakoe-Chiba around each candidate start) — ablation oracle
+# --------------------------------------------------------------------------
+
+def sdtw_banded_ref(q: np.ndarray, r: np.ndarray, band: int, dist: str = "sq"):
+    """Subsequence DTW with a Sakoe-Chiba band of half-width ``band``
+    anchored at every candidate start column.
+
+    Exact but O(N^2 M) — oracle only, tiny inputs.  Returns (cost, end).
+    """
+    q = np.asarray(q, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    m, n = q.shape[0], r.shape[0]
+    best_cost = INF
+    best_end = 0
+    for s in range(n):  # candidate start column
+        width = min(n - s, m + band)
+        if width <= 0:
+            continue
+        D = np.full((m, width), INF)
+        hi0 = min(width, band + 1)
+        for j in range(hi0):
+            c = local_dist(q[0], r[s + j], dist)
+            D[0, j] = c if j == 0 else D[0, j - 1] + c
+        for i in range(1, m):
+            lo = max(0, i - band)
+            hi = min(width, i + band + 1)
+            for j in range(lo, hi):
+                c = local_dist(q[i], r[s + j], dist)
+                cands = [D[i - 1, j]] if j < width else []
+                if j > 0:
+                    cands += [D[i, j - 1], D[i - 1, j - 1]]
+                D[i, j] = min(cands) + c
+        for j in range(width):
+            if D[m - 1, j] < best_cost:
+                best_cost = D[m - 1, j]
+                best_end = s + j
+    return float(best_cost), int(best_end)
+
+
+# --------------------------------------------------------------------------
+# traceback — the warp path (paper §2's walk-back pass)
+# --------------------------------------------------------------------------
+
+def sdtw_traceback(q: np.ndarray, r: np.ndarray, dist: str = "sq"):
+    """Return (cost, path) where path is a list of (i, j) pairs from the
+    match start (i=0) to the match end (i=M-1), inclusive."""
+    D = sdtw_matrix(q, r, dist)
+    m, n = D.shape
+    j = int(np.argmin(D[-1]))
+    i = m - 1
+    path = [(i, j)]
+    while i > 0:
+        cands = [(D[i - 1, j], i - 1, j)]
+        if j > 0:
+            cands.append((D[i, j - 1], i, j - 1))
+            cands.append((D[i - 1, j - 1], i - 1, j - 1))
+        _, i, j = min(cands, key=lambda t: t[0])
+        path.append((i, j))
+    path.reverse()
+    return float(D[-1].min()), path
+
+
+# --------------------------------------------------------------------------
+# the (min,+) scan formulation — used to validate the kernel's algebra
+# against the naive recurrence in tests (mirrors rust/src/dtw/scan.rs)
+# --------------------------------------------------------------------------
+
+def sdtw_scan_ref(q: np.ndarray, r: np.ndarray, segment_width: int,
+                  dist: str = "sq", prune_threshold: float | None = None):
+    """Row-wise blocked (min,+) scan evaluation of the same DP.
+
+    Mirrors exactly what the Pallas kernel does, in float64: per row,
+      a_j = min(row_prev[j], row_prev[j-1]) + c_j     (vert/diag, vector op)
+      D_j = min(a_j, c_j + D_{j-1})                   (horizontal, scan)
+    where the horizontal recurrence is solved blockwise: each segment of
+    width W is scanned locally with carry-in = +inf, then carries are
+    propagated sequentially across segments using min-plus linearity:
+      D_j(X) = min(D_j(inf), prefix_cost_j + X).
+    """
+    q = np.asarray(q, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    m, n = q.shape[0], r.shape[0]
+    w = segment_width
+    n_pad = ((n + w - 1) // w) * w
+    s = n_pad // w
+
+    def costs(i):
+        c = local_dist(q[i], r, dist)
+        if prune_threshold is not None:
+            c = np.where(c > prune_threshold, INF, c)
+        # padded tail: infinite cost so it never participates
+        return np.concatenate([c, np.full(n_pad - n, INF)])
+
+    def scan_row(c, a):
+        cs = c.reshape(s, w)
+        as_ = a.reshape(s, w)
+        local = np.empty((s, w))
+        pref = np.empty((s, w))
+        d = np.full(s, INF)
+        p = np.zeros(s)
+        for k in range(w):
+            d = np.minimum(as_[:, k], cs[:, k] + d)
+            p = p + cs[:, k]
+            local[:, k] = d
+            pref[:, k] = p
+        carry_in = np.empty(s)
+        carry = INF
+        for seg in range(s):
+            carry_in[seg] = carry
+            carry = min(local[seg, -1], pref[seg, -1] + carry)
+        D = np.minimum(local, pref + carry_in[:, None])
+        return D.reshape(n_pad)
+
+    row = costs(0)  # free start: D(0,j) = c(0,j); padding stays INF
+    for i in range(1, m):
+        c = costs(i)
+        shifted = np.concatenate([[INF], row[:-1]])
+        a = np.minimum(row, shifted) + c
+        row = scan_row(c, a)
+    last = row[:n]
+    pos = int(np.argmin(last))
+    return float(last[pos]), pos
+
+
+# --------------------------------------------------------------------------
+# uint8 codebook quantization (paper Discussion §8)
+# --------------------------------------------------------------------------
+
+def build_codebook_ref(r: np.ndarray, clip_sigma: float = 4.0):
+    """Uniform codebook over the bulk of the reference distribution.
+
+    "get the distribution of floating point values and then evenly divide
+    the bulk of the distribution across uint8 values clamping any outliers
+    to the extreme values" — paper §8.
+    Returns (lo, hi): code k represents lo + k*(hi-lo)/255.
+    """
+    r = np.asarray(r, dtype=np.float64)
+    mu, sd = r.mean(), r.std()
+    lo = mu - clip_sigma * sd
+    hi = mu + clip_sigma * sd
+    if hi <= lo:  # constant series
+        hi = lo + 1.0
+    return float(lo), float(hi)
+
+
+def quantize_ref(x: np.ndarray, lo: float, hi: float) -> np.ndarray:
+    """Encode to uint8 codes with outlier clamping."""
+    x = np.asarray(x, dtype=np.float64)
+    t = np.clip((x - lo) / (hi - lo), 0.0, 1.0)
+    return np.round(t * 255.0).astype(np.uint8)
+
+
+def dequantize_ref(codes: np.ndarray, lo: float, hi: float) -> np.ndarray:
+    return lo + codes.astype(np.float64) * (hi - lo) / 255.0

@@ -1,0 +1,245 @@
+"""Layer-1 Pallas kernel: batched subsequence DTW (paper §5.2).
+
+This is the headline kernel of the reproduction.  The paper's HIP design
+and its TPU re-thinking (see DESIGN.md §1 for the full mapping):
+
+  paper (AMD HIP)                        this kernel (TPU Pallas)
+  ------------------------------------   ----------------------------------
+  one wavefront (64 lanes) per query,    one grid program per query,
+    sweeping anti-diagonals                sweeping query rows
+  each lane owns a reference *segment*   the reference row is split into
+    of `segment_width` elements            `segment_width`-wide segments
+  `__shfl_up` carries D(i, j-1) across   the horizontal dependency is a
+    lane boundaries every diagonal step    first-order (min,+) recurrence:
+                                             D_j = min(a_j, c_j + D_{j-1})
+                                           solved by a blocked two-pass
+                                           scan: W unrolled vector steps
+                                           (all segments in parallel on
+                                           the VPU) + one short sequential
+                                           carry scan across segments
+  double-buffered shared memory hands    the carry scan *is* the handoff;
+    the boundary column to the next        row state lives in VMEM across
+    wavefront                              `fori_loop` iterations
+  `__half2` packed fp16 + `__hmin2`      bf16/f16 accumulator variants
+  streamed bottom-row min extraction     min/argmin fused after the row
+                                           loop (the bottom row is the
+                                           final loop state — no second
+                                           pass over the matrix)
+
+Segment width W is the paper's thread-coarsening knob (their Figure 3):
+row-update depth is ~W (local scan) + N/W (carry propagation), so
+throughput is U-shaped in W exactly as the paper measures.
+
+Semantics (matches ``ref.sdtw_batch_ref`` and ``rust/src/dtw``):
+  D(0,j) = d(q0, rj);  D(i,0) = D(i-1,0) + d(qi, r0);
+  D(i,j) = min(D(i-1,j), D(i,j-1), D(i-1,j-1)) + d(qi, rj);
+  answer = (min_j D(M-1,j), argmin_j) — cost and match END position.
+
+Lowered with ``interpret=True``: the emitted HLO is backend-portable and
+is what the Rust PJRT runtime executes; real-TPU builds compile the same
+source through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_SEGMENT_WIDTH = 16
+
+# Local-scan implementations (DESIGN.md §1, EXPERIMENTS.md §Perf):
+#   unrolled    — paper-literal lane loop over (S, W) columns
+#   unrolled_t  — same loop, (W, S) transposed layout (contiguous slices)
+#   cummin      — closed form P + cummin(a - P) (f32, unpruned only)
+SCAN_IMPLS = ("unrolled", "unrolled_t", "cummin")
+DEFAULT_SCAN_IMPL = "unrolled_t"
+
+_ACC_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "f16": jnp.float16,
+}
+
+
+def acc_dtype_of(name: str):
+    """Accumulator dtype by short name ('f32' | 'bf16' | 'f16')."""
+    try:
+        return _ACC_DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown accumulator dtype {name!r}") from None
+
+
+def _blocked_minplus_scan(c, a, *, segment_width, inf, unrolled):
+    """Solve D_j = min(a_j, c_j + D_{j-1}), D_{-1} = +inf, blockwise.
+
+    ``c`` (costs) and ``a`` (vertical/diagonal candidates) are (N,) with
+    N divisible by ``segment_width``.  Three passes, mirroring the paper's
+    lane-local work + shuffle propagation:
+
+    1. local: every segment scanned with carry-in = +inf, vectorized
+       across the S = N/W segments (the paper's "threads work in almost
+       pure isolation").  Two implementations:
+         * ``unrolled=False`` (default): the closed form
+               local_k = P_k + cummin_{j<=k}(a_j - P_j),
+           with P the in-segment inclusive prefix-cost sum — two
+           cumulative ops along the segment axis instead of W strided
+           vector steps.  ~3-7x faster end-to-end (EXPERIMENTS.md §Perf)
+           but invalid when costs contain +inf (inf - inf = nan).
+         * ``unrolled=True``: W explicit min-plus steps — the literal
+           transcription of the paper's per-lane loop; required for the
+           pruned (INF-tile) variant.
+    2. carry: S sequential steps propagate the boundary value using
+       min-plus linearity  D_out = min(local_end, cost_sum + D_in)
+       (the paper's `__shfl_up`, collapsed to a scalar scan).
+    3. apply: D_j = min(local_j, prefix_cost_j + carry_in_segment).
+    """
+    n = c.shape[0]
+    w = segment_width
+    s = n // w
+
+    if unrolled == "cummin":
+        cs = c.reshape(s, w)
+        as_ = a.reshape(s, w)
+        pref = jnp.cumsum(cs, axis=1, dtype=c.dtype)   # (S, W) inclusive
+        local = pref + jax.lax.cummin(as_ - pref, axis=1)
+        local_end, pref_end = local[:, -1], pref[:, -1]
+
+        def apply(carry_in):
+            return jnp.minimum(local, pref + carry_in[:, None]).reshape(n)
+    else:
+        # unrolled lane loop; "unrolled_t" keeps the (W, S) transposed
+        # layout so each step slices a contiguous row instead of a
+        # strided column (layout ablation, EXPERIMENTS.md §Perf)
+        transposed = unrolled == "unrolled_t"
+        if transposed:
+            ct = c.reshape(s, w).T
+            at = a.reshape(s, w).T
+            col = lambda x, k: x[k]
+        else:
+            ct = c.reshape(s, w)
+            at = a.reshape(s, w)
+            col = lambda x, k: x[:, k]
+        d = jnp.full((s,), inf, dtype=c.dtype)
+        p = jnp.zeros((s,), dtype=c.dtype)
+        local_cols = []
+        pref_cols = []
+        for k in range(w):  # unrolled: W vector ops over all segments
+            d = jnp.minimum(col(at, k), col(ct, k) + d)
+            p = p + col(ct, k)
+            local_cols.append(d)
+            pref_cols.append(p)
+        axis = 0 if transposed else 1
+        local = jnp.stack(local_cols, axis=axis)
+        pref = jnp.stack(pref_cols, axis=axis)
+        local_end, pref_end = local_cols[-1], pref_cols[-1]
+
+        if transposed:
+            def apply(carry_in):
+                return jnp.minimum(local, pref + carry_in[None, :]).T.reshape(n)
+        else:
+            def apply(carry_in):
+                return jnp.minimum(local, pref + carry_in[:, None]).reshape(n)
+
+    def seg_step(carry, xs):
+        le, pe = xs
+        return jnp.minimum(le, pe + carry), carry
+
+    _, carry_in = jax.lax.scan(seg_step, inf, (local_end, pref_end))
+    return apply(carry_in)
+
+
+def _sdtw_kernel(q_ref, r_ref, cost_ref, pos_ref, *, n_real, segment_width,
+                 dist, prune_threshold, acc_dtype, scan_impl):
+    """One query (grid program) against the shared padded reference row."""
+    q = q_ref[0, :]
+    r = r_ref[0, :].astype(acc_dtype)
+    m = q.shape[0]
+    n_pad = r.shape[0]
+    inf = jnp.array(jnp.inf, dtype=acc_dtype)
+    pad_mask = jax.lax.iota(jnp.int32, n_pad) >= n_real
+
+    def costs(qi):
+        d = qi.astype(acc_dtype) - r
+        c = d * d if dist == "sq" else jnp.abs(d)
+        if prune_threshold is not None:
+            # Discussion §8: "far" cells become impassable INF tiles.
+            c = jnp.where(c > jnp.array(prune_threshold, acc_dtype), inf, c)
+        return jnp.where(pad_mask, inf, c)
+
+    # The cummin closed form would produce inf-inf=nan on INF tiles, and
+    # its extra subtraction (a - P) costs ~1 extra ulp per segment step —
+    # noticeable at half precision.  So the pruned and reduced-precision
+    # variants always use an unrolled lane loop (also the paper-literal
+    # structure); scan_impl picks the layout (EXPERIMENTS.md §Perf).
+    unrolled = scan_impl
+    if scan_impl == "cummin" and (prune_threshold is not None
+                                  or acc_dtype != jnp.float32):
+        unrolled = "unrolled_t"
+
+    def row_step(i, row):
+        c = costs(q[i])
+        shifted = jnp.concatenate([jnp.full((1,), inf, acc_dtype), row[:-1]])
+        a = jnp.minimum(row, shifted) + c  # vertical/diagonal candidates
+        return _blocked_minplus_scan(c, a, segment_width=segment_width,
+                                     inf=inf, unrolled=unrolled)
+
+    row0 = costs(q[0])  # free start: D(0,j) = d(q0, rj)
+    final = jax.lax.fori_loop(1, m, row_step, row0)
+    last = final[:n_real]
+    cost_ref[0, 0] = jnp.min(last).astype(cost_ref.dtype)
+    pos_ref[0, 0] = jnp.argmin(last).astype(jnp.int32)
+
+
+def sdtw_batch(queries: jax.Array, reference: jax.Array, *,
+               segment_width: int = DEFAULT_SEGMENT_WIDTH,
+               dist: str = "sq",
+               prune_threshold: float | None = None,
+               acc_dtype=jnp.float32,
+               scan_impl: str = DEFAULT_SCAN_IMPL,
+               interpret: bool = True):
+    """Align every row of ``queries`` (B, M) against ``reference`` (N,).
+
+    Returns ``(costs (B,) f32, end_positions (B,) i32)``.
+
+    The reference is padded up to a multiple of ``segment_width`` with
+    +inf-cost sentinels (never selected); min/argmin are taken over the
+    real columns only.  Grid = (B,): block-per-query, the paper's launch
+    geometry.
+    """
+    if isinstance(acc_dtype, str):
+        acc_dtype = acc_dtype_of(acc_dtype)
+    b, m = queries.shape
+    n = int(reference.shape[-1])
+    w = int(segment_width)
+    if w < 1:
+        raise ValueError("segment_width must be >= 1")
+    n_pad = ((n + w - 1) // w) * w
+    r = jnp.pad(reference.reshape(1, n), ((0, 0), (0, n_pad - n)))
+
+    if scan_impl not in SCAN_IMPLS:
+        raise ValueError(f"unknown scan_impl {scan_impl!r} (have {SCAN_IMPLS})")
+    kernel = functools.partial(
+        _sdtw_kernel, n_real=n, segment_width=w, dist=dist,
+        prune_threshold=prune_threshold, acc_dtype=acc_dtype,
+        scan_impl=scan_impl)
+    cost, pos = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, r)
+    return cost[:, 0], pos[:, 0]

@@ -1,0 +1,116 @@
+"""Layer-2: the JAX compute graphs composed from the Pallas kernels.
+
+Everything here is build-time only: functions are jit-lowered once by
+``aot.py`` into HLO text artifacts which the Rust runtime loads and runs;
+Python never sits on the request path.
+
+Pipelines (all pure, all calling the Layer-1 kernels):
+
+  * ``make_normalizer(b, m)``      — batch z-normalization only.
+  * ``make_sdtw(b, m, n, ...)``    — sDTW on *pre-normalized* inputs.
+  * ``make_pipeline(b, m, n, ...)``— the full serve path: normalize the
+    raw query batch, then align against the (already normalized)
+    reference.  This is what the coordinator dispatches per batch.
+  * ``make_quantized_pipeline`` — Discussion-§8 variant: uint8-encode
+    both operands, decode in-graph, align.  Measures the accuracy/perf
+    trade of the paper's proposed quantization.
+
+All shapes are static (XLA requirement); the coordinator pads partial
+batches up to ``b`` and masks the padding out of its responses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import normalize as knorm
+from .kernels import quantize as kquant
+from .kernels import sdtw as ksdtw
+
+
+def make_normalizer(b: int, m: int, *, eps: float = knorm.DEFAULT_EPS,
+                    interpret: bool = True):
+    """(B, M) raw queries → (B, M) z-normalized queries."""
+
+    def normalizer(queries):
+        return (knorm.znorm_batch(queries, eps=eps, interpret=interpret),)
+
+    return normalizer, (jax.ShapeDtypeStruct((b, m), jnp.float32),)
+
+
+def make_sdtw(b: int, m: int, n: int, *,
+              segment_width: int = ksdtw.DEFAULT_SEGMENT_WIDTH,
+              dist: str = "sq",
+              prune_threshold: float | None = None,
+              acc_dtype: str = "f32",
+              scan_impl: str = ksdtw.DEFAULT_SCAN_IMPL,
+              interpret: bool = True):
+    """(B, M) normalized queries × (N,) normalized reference → costs, ends."""
+
+    def sdtw(queries, reference):
+        return ksdtw.sdtw_batch(
+            queries, reference,
+            segment_width=segment_width, dist=dist,
+            prune_threshold=prune_threshold,
+            acc_dtype=acc_dtype, scan_impl=scan_impl, interpret=interpret)
+
+    args = (jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32))
+    return sdtw, args
+
+
+def make_pipeline(b: int, m: int, n: int, *,
+                  segment_width: int = ksdtw.DEFAULT_SEGMENT_WIDTH,
+                  dist: str = "sq",
+                  prune_threshold: float | None = None,
+                  acc_dtype: str = "f32",
+                  eps: float = knorm.DEFAULT_EPS,
+                  interpret: bool = True):
+    """The full request-path graph: znorm(queries) then sDTW vs reference.
+
+    The reference arrives already normalized (it is normalized once at
+    dataset-load time by the ``normalize_ref`` artifact), matching the
+    paper's flow where ``runSDTW`` orchestrates normalizer calls for both
+    operands up front.
+    """
+
+    def pipeline(raw_queries, reference):
+        q = knorm.znorm_batch(raw_queries, eps=eps, interpret=interpret)
+        return ksdtw.sdtw_batch(
+            q, reference,
+            segment_width=segment_width, dist=dist,
+            prune_threshold=prune_threshold,
+            acc_dtype=acc_dtype, interpret=interpret)
+
+    args = (jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32))
+    return pipeline, args
+
+
+def make_quantized_pipeline(b: int, m: int, n: int, *,
+                            segment_width: int = ksdtw.DEFAULT_SEGMENT_WIDTH,
+                            dist: str = "sq",
+                            clip_sigma: float = kquant.DEFAULT_CLIP_SIGMA,
+                            acc_dtype: str = "f32",
+                            eps: float = knorm.DEFAULT_EPS,
+                            interpret: bool = True):
+    """Discussion-§8 variant: codebook-quantize both operands to uint8,
+    dequantize in-graph, then align.  The codebook is built from the
+    reference distribution (as the paper proposes)."""
+
+    def pipeline(raw_queries, reference):
+        q = knorm.znorm_batch(raw_queries, eps=eps, interpret=interpret)
+        lo, hi = kquant.build_codebook(reference, clip_sigma)
+        qq = kquant.quantize_batch(q, lo, hi, interpret=interpret)
+        rq = kquant.quantize_batch(reference[None, :], lo, hi,
+                                   interpret=interpret)
+        qd = kquant.dequantize(qq, lo, hi)
+        rd = kquant.dequantize(rq[0], lo, hi)
+        return ksdtw.sdtw_batch(
+            qd, rd, segment_width=segment_width, dist=dist,
+            acc_dtype=acc_dtype, interpret=interpret)
+
+    args = (jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32))
+    return pipeline, args

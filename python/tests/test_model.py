@@ -1,0 +1,115 @@
+"""Layer-2 tests: pipeline composition and AOT artifact generation."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(99)
+
+
+class TestPipelines:
+    def test_pipeline_equals_composition(self):
+        b, m, n = 4, 16, 64
+        fn, _ = model.make_pipeline(b, m, n, segment_width=8)
+        raw = (RNG.normal(size=(b, m)) * 5 + 2).astype(np.float32)
+        r = RNG.normal(size=(n,)).astype(np.float32)
+        cost, pos = fn(jnp.asarray(raw), jnp.asarray(r))
+        qn = ref.znorm_ref(raw)
+        ec, ep = ref.sdtw_batch_ref(qn, r)
+        np.testing.assert_allclose(np.asarray(cost), ec, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(pos), ep)
+
+    def test_sdtw_entry(self):
+        b, m, n = 2, 8, 32
+        fn, args = model.make_sdtw(b, m, n, segment_width=4)
+        assert args[0].shape == (b, m) and args[1].shape == (n,)
+        qs = RNG.normal(size=(b, m)).astype(np.float32)
+        r = RNG.normal(size=(n,)).astype(np.float32)
+        cost, pos = fn(jnp.asarray(qs), jnp.asarray(r))
+        ec, ep = ref.sdtw_batch_ref(qs, r)
+        np.testing.assert_allclose(np.asarray(cost), ec, rtol=1e-5)
+
+    def test_normalizer_entry(self):
+        fn, args = model.make_normalizer(3, 48)
+        x = (RNG.normal(size=(3, 48)) * 9 - 4).astype(np.float32)
+        (out,) = fn(jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(out), ref.znorm_ref(x),
+                                   atol=1e-4)
+
+    def test_quantized_pipeline_close(self):
+        b, m, n = 2, 10, 48
+        fn, _ = model.make_quantized_pipeline(b, m, n, segment_width=8)
+        raw = (RNG.normal(size=(b, m)) * 3 + 1).astype(np.float32)
+        r = RNG.normal(size=(n,)).astype(np.float32)
+        cost, pos = fn(jnp.asarray(raw), jnp.asarray(r))
+        qn = ref.znorm_ref(raw)
+        ec, _ = ref.sdtw_batch_ref(qn, r)
+        np.testing.assert_allclose(np.asarray(cost), ec, rtol=0.1, atol=0.1)
+
+    def test_pipelines_jit_lowerable(self):
+        fn, args = model.make_pipeline(2, 8, 32, segment_width=4)
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered is not None
+
+
+class TestAot:
+    def test_variant_inventory_complete(self):
+        variants = aot.build_variants()
+        names = {v["name"] for v in variants}
+        assert len(names) == len(variants), "duplicate variant names"
+        kinds = {v["kind"] for v in variants}
+        assert kinds == {"normalizer", "sdtw", "pipeline",
+                         "quantized_pipeline"}
+        # fig3 sweep present at every width
+        for w in aot.FIG3_WIDTHS:
+            assert any(v["segment_width"] == w and v["kind"] == "sdtw"
+                       for v in variants), f"missing fig3 width {w}"
+        # dtype ablation present
+        assert {v["dtype"] for v in variants} >= {"f32", "bf16", "f16"}
+        # discussion-§8 extensions present
+        assert any(v["prune_threshold"] for v in variants)
+        assert any(v.get("quantized") for v in variants)
+
+    def test_hlo_text_roundtrip_format(self):
+        # smallest variant: lower and sanity-check the HLO text
+        fn, args = model.make_normalizer(2, 16)
+        lowered = jax.jit(fn).lower(*args)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ROOT" in text
+
+    def test_generate_and_manifest(self, tmp_path):
+        out = str(tmp_path)
+        rc = aot.main(["--out", out, "--only", "znorm_b1_m2048"])
+        assert rc == 0
+        mpath = os.path.join(out, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        assert manifest["version"] == 1
+        gen = [v for v in manifest["variants"]
+               if v["name"] == "znorm_b1_m2048"]
+        assert len(gen) == 1
+        assert os.path.exists(os.path.join(out, gen[0]["file"]))
+        with open(os.path.join(out, gen[0]["file"])) as f:
+            assert f.read().startswith("HloModule")
+
+    def test_skip_existing(self, tmp_path, capsys):
+        out = str(tmp_path)
+        aot.main(["--out", out, "--only", "znorm_b1_m2048"])
+        capsys.readouterr()
+        aot.main(["--out", out, "--only", "znorm_b1_m2048"])
+        assert "[skip]" in capsys.readouterr().out
+
+    def test_manifest_covers_all_files(self):
+        # variant file names are unique and well-formed
+        for v in aot.build_variants():
+            assert v["file"] == v["name"] + ".hlo.txt"
+            assert v["batch"] >= 1 and v["qlen"] >= 1

@@ -1,0 +1,85 @@
+"""Tests for the uint8 codebook codec (paper Discussion §8)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import quantize as kq
+from compile.kernels.sdtw import sdtw_batch
+
+
+class TestCodebook:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        r = rng.normal(size=500).astype(np.float32)
+        lo, hi = kq.build_codebook(jnp.asarray(r))
+        elo, ehi = ref.build_codebook_ref(r)
+        assert float(lo) == pytest.approx(elo, rel=1e-4)
+        assert float(hi) == pytest.approx(ehi, rel=1e-4)
+
+    def test_constant_series(self):
+        r = np.full(64, 3.0, dtype=np.float32)
+        lo, hi = kq.build_codebook(jnp.asarray(r))
+        assert float(hi) > float(lo)
+
+    def test_covers_bulk(self):
+        rng = np.random.default_rng(1)
+        r = rng.normal(size=10_000).astype(np.float32)
+        lo, hi = map(float, kq.build_codebook(jnp.asarray(r)))
+        inside = ((r >= lo) & (r <= hi)).mean()
+        assert inside > 0.999  # 4 sigma
+
+
+class TestCodec:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(4, 256), seed=st.integers(0, 2**31))
+    def test_roundtrip_error_bound(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n).astype(np.float32)
+        lo, hi = ref.build_codebook_ref(x)
+        codes = kq.quantize(jnp.asarray(x), lo, hi)
+        back = np.asarray(kq.dequantize(codes, lo, hi))
+        # in-range values reconstruct within half a quantization step
+        step = (hi - lo) / 255.0
+        inr = (x >= lo) & (x <= hi)
+        assert np.abs(back[inr] - x[inr]).max() <= step / 2 + 1e-6
+
+    def test_outliers_clamp(self):
+        lo, hi = -1.0, 1.0
+        x = jnp.asarray(np.array([-50.0, 50.0], dtype=np.float32))
+        codes = np.asarray(kq.quantize(x, lo, hi))
+        np.testing.assert_array_equal(codes, [0, 255])
+
+    def test_matches_ref_codec(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=128).astype(np.float32)
+        lo, hi = ref.build_codebook_ref(x)
+        a = np.asarray(kq.quantize(jnp.asarray(x), lo, hi))
+        b = ref.quantize_ref(x, lo, hi)
+        # float32 vs float64 rounding may differ by 1 code at bin edges
+        assert np.abs(a.astype(int) - b.astype(int)).max() <= 1
+
+    def test_pallas_batch_encoder(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(4, 96)).astype(np.float32)
+        lo, hi = ref.build_codebook_ref(x)
+        got = np.asarray(kq.quantize_batch(jnp.asarray(x), lo, hi))
+        want = np.asarray(kq.quantize(jnp.asarray(x), lo, hi))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestQuantizedAlignment:
+    def test_quantized_sdtw_close_to_exact(self):
+        # the Discussion-§8 claim to evaluate: uint8 codebook quantization
+        # should barely perturb the alignment result on z-normalized data
+        rng = np.random.default_rng(4)
+        qs = rng.normal(size=(3, 12)).astype(np.float32)
+        r = rng.normal(size=(64,)).astype(np.float32)
+        lo, hi = ref.build_codebook_ref(r)
+        qd = np.asarray(kq.dequantize(kq.quantize(jnp.asarray(qs), lo, hi), lo, hi))
+        rd = np.asarray(kq.dequantize(kq.quantize(jnp.asarray(r), lo, hi), lo, hi))
+        cq, pq = sdtw_batch(jnp.asarray(qd), jnp.asarray(rd), segment_width=8)
+        ce, pe = ref.sdtw_batch_ref(qs, r)
+        np.testing.assert_allclose(np.asarray(cq), ce, rtol=0.05, atol=0.05)

@@ -1,0 +1,62 @@
+//! Ablation: accumulator precision — f32 vs bf16 (TPU half) vs f16 (the
+//! paper's __half2 fidelity).  Reports throughput AND accuracy deltas
+//! against the f64 CPU oracle, which is the trade the paper's fp16
+//! choice (and its §8 quantization plans) buys into.
+//!
+//!   cargo bench --bench ablation_dtype
+
+use sdtw_repro::bench_harness::{banner, Table};
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::experiments::{measure_variant, Workload};
+use sdtw_repro::runtime::artifact::{Kind, Manifest};
+use sdtw_repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner("ablation_dtype", "f32 / bf16 / f16 at the serve shape");
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let engine = Engine::start(manifest.clone())?;
+    let handle = engine.handle();
+
+    let variants = ["sdtw_b8_m128_n2048_w16", "sdtw_b8_m128_n2048_w16_bf16",
+                    "sdtw_b8_m128_n2048_w16_f16"];
+    let base = manifest.require(variants[0])?;
+    let wl = Workload::for_variant(base, 42);
+
+    // oracle costs for the accuracy column
+    let oracle: Vec<f32> = (0..wl.b)
+        .map(|i| {
+            sdtw(&wl.queries_norm[i * wl.m..(i + 1) * wl.m], &wl.reference_norm, Dist::Sq)
+                .cost
+        })
+        .collect();
+
+    let mut table = Table::new(
+        &format!("Dtype ablation (B={}, M={}, N={})", wl.b, wl.m, wl.n),
+        &["dtype", "ms/batch", "Gcells/s", "max rel err"],
+    );
+    for name in variants {
+        let meta = manifest.require(name)?;
+        let s = measure_variant(&handle, meta, &wl, protocol)?;
+        // one extra run for the accuracy column
+        let out = handle.execute(name, wl.inputs_for(Kind::Sdtw))?;
+        let costs = out.outputs[0].as_f32()?;
+        let max_rel = costs
+            .iter()
+            .zip(&oracle)
+            .map(|(c, o)| ((c - o) / o.max(1e-3)).abs())
+            .fold(0f32, f32::max);
+        table.row(
+            name,
+            vec![
+                meta.dtype.clone(),
+                format!("{:.2}", s.mean_ms),
+                format!("{:.4}", s.gcups(wl.cells())),
+                format!("{:.2e}", max_rel),
+            ],
+        );
+    }
+    table.print();
+    println!("paper context: the HIP kernel computes entirely in __half2 fp16;");
+    println!("bf16 is the TPU-native equivalent (DESIGN.md §1).");
+    Ok(())
+}

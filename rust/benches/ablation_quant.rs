@@ -1,0 +1,60 @@
+//! Ablation: Discussion-§8 uint8 codebook quantization — throughput and
+//! accuracy of the quantized pipeline vs the exact pipeline.
+//!
+//!   cargo bench --bench ablation_quant
+
+use sdtw_repro::bench_harness::{banner, Table};
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::experiments::{measure_variant, Workload};
+use sdtw_repro::quant::Codebook;
+use sdtw_repro::runtime::artifact::{Kind, Manifest};
+use sdtw_repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner("ablation_quant", "exact vs uint8-codebook pipeline");
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let engine = Engine::start(manifest.clone())?;
+    let handle = engine.handle();
+
+    let exact = manifest.require("pipeline_b8_m128_n2048_w16")?;
+    let quant = manifest.require("pipeline_b8_m128_n2048_w16_quant")?;
+    let wl = Workload::for_variant(exact, 42);
+
+    let oracle: Vec<f32> = (0..wl.b)
+        .map(|i| {
+            sdtw(&wl.queries_norm[i * wl.m..(i + 1) * wl.m], &wl.reference_norm, Dist::Sq)
+                .cost
+        })
+        .collect();
+
+    let mut table = Table::new(
+        &format!("Quantization ablation (B={}, M={}, N={})", wl.b, wl.m, wl.n),
+        &["ms/batch", "max rel err vs oracle"],
+    );
+    for (label, meta) in [("exact f32 pipeline", exact), ("uint8 codebook pipeline", quant)] {
+        let s = measure_variant(&handle, meta, &wl, protocol)?;
+        let out = handle.execute(&meta.name, wl.inputs_for(Kind::Pipeline))?;
+        let costs = out.outputs[0].as_f32()?;
+        let max_rel = costs
+            .iter()
+            .zip(&oracle)
+            .map(|(c, o)| ((c - o) / o.max(1e-3)).abs())
+            .fold(0f32, f32::max);
+        table.row(
+            label,
+            vec![format!("{:.2}", s.mean_ms), format!("{:.2e}", max_rel)],
+        );
+    }
+    table.print();
+
+    // CPU-side codec error analysis (the §8 design numbers)
+    let cb = Codebook::from_series(&wl.reference_norm, 4.0);
+    println!(
+        "codebook [{:.3}, {:.3}] step {:.5}; max in-range reconstruction error {:.5}",
+        cb.lo,
+        cb.hi,
+        cb.step(),
+        cb.max_inrange_error(&wl.reference_norm)
+    );
+    Ok(())
+}

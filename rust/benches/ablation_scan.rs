@@ -1,0 +1,45 @@
+//! Ablation: local-scan implementation × segment width, on the deployed
+//! backend (xla_extension 0.5.1 CPU).  This is the measurement behind
+//! the kernel's DEFAULT_SCAN_IMPL choice — see EXPERIMENTS.md §Perf.
+//!
+//!   cargo bench --bench ablation_scan
+
+use sdtw_repro::bench_harness::{banner, Table};
+use sdtw_repro::experiments::{measure_variant, Workload};
+use sdtw_repro::runtime::artifact::Manifest;
+use sdtw_repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner("ablation_scan", "scan impl x width matrix");
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let engine = Engine::start(manifest.clone())?;
+    let handle = engine.handle();
+
+    let mut family: Vec<_> = manifest
+        .variants
+        .iter()
+        .filter(|v| v.ablation.as_deref() == Some("scan"))
+        .collect();
+    anyhow::ensure!(!family.is_empty(), "no scan-ablation variants; re-run make artifacts");
+    family.sort_by_key(|v| (v.scan_impl.clone(), v.segment_width));
+
+    let wl = Workload::for_variant(family[0], 42);
+    let mut table = Table::new(
+        &format!("Scan-impl ablation (B={}, M={}, N={})", wl.b, wl.m, wl.n),
+        &["impl", "width", "ms/batch", "Gcells/s"],
+    );
+    for meta in family {
+        let s = measure_variant(&handle, meta, &wl, protocol)?;
+        table.row(
+            &meta.name,
+            vec![
+                meta.scan_impl.clone().unwrap_or_default(),
+                format!("{}", meta.segment_width.unwrap_or(0)),
+                format!("{:.2}", s.mean_ms),
+                format!("{:.4}", s.gcups(wl.cells())),
+            ],
+        );
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Bench: the CPU baseline the paper frames against ("producing these
+//! expected outputs on the CPU is a time-consuming process", §4).
+//! Single-thread and all-core multithreaded sDTW over the same batch the
+//! compiled kernel serves, so EXPERIMENTS.md can report the
+//! device-vs-CPU ratio on identical work.
+//!
+//!   cargo bench --bench cpu_baseline
+
+use sdtw_repro::bench_harness::{banner, Table};
+use sdtw_repro::dtw::batch::{default_threads, sdtw_batch_cpu};
+use sdtw_repro::dtw::Dist;
+use sdtw_repro::experiments::{measure_variant, Workload};
+use sdtw_repro::runtime::artifact::Manifest;
+use sdtw_repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner("cpu_baseline", "CPU oracle vs compiled kernel, same batch");
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let meta = manifest.require("sdtw_b32_m256_n4096_w16")?;
+    let wl = Workload::for_variant(meta, 42);
+
+    let mut table = Table::new(
+        &format!("CPU baseline vs XLA kernel (B={}, M={}, N={})", wl.b, wl.m, wl.n),
+        &["ms/batch", "Gcells/s"],
+    );
+
+    let s1 = protocol.run(|| {
+        sdtw_batch_cpu(&wl.queries_norm, wl.m, &wl.reference_norm, Dist::Sq, 1);
+    });
+    table.row(
+        "CPU sequential (1 thread)",
+        vec![format!("{:.1}", s1.mean_ms), format!("{:.4}", s1.gcups(wl.cells()))],
+    );
+
+    let nt = default_threads();
+    let sn = protocol.run(|| {
+        sdtw_batch_cpu(&wl.queries_norm, wl.m, &wl.reference_norm, Dist::Sq, nt);
+    });
+    table.row(
+        &format!("CPU parallel ({nt} threads)"),
+        vec![format!("{:.1}", sn.mean_ms), format!("{:.4}", sn.gcups(wl.cells()))],
+    );
+
+    let engine = Engine::start(manifest.clone())?;
+    let sx = measure_variant(&engine.handle(), meta, &wl, protocol)?;
+    table.row(
+        "XLA compiled kernel",
+        vec![format!("{:.1}", sx.mean_ms), format!("{:.4}", sx.gcups(wl.cells()))],
+    );
+    table.print();
+    println!(
+        "speedup vs 1-thread CPU: kernel {:.1}x, {}-thread CPU {:.1}x",
+        s1.mean_ms / sx.mean_ms,
+        nt,
+        s1.mean_ms / sn.mean_ms
+    );
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Bench: paper Figure 3 — throughput vs segment (thread-coarsening)
+//! width.  Paper: peak ≈ width 14, ~+30 % over width 2, degrading after.
+//!
+//!   cargo bench --bench fig3_segment_width
+
+use sdtw_repro::bench_harness::banner;
+use sdtw_repro::experiments::fig3_sweep;
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner("fig3", "sweep family from manifest");
+    let table = fig3_sweep(std::path::Path::new("artifacts"), 42, protocol)?;
+    table.print();
+
+    let series: Vec<(u64, f64)> = table
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                r.cells[0].parse::<u64>().unwrap(),
+                r.cells[1].parse::<f64>().unwrap(),
+            )
+        })
+        .collect();
+    let (wp, gp) = series
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!("peak width {wp} ({gp:.6} Gsps); paper peak ≈ 14 (+30% over width 2)");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Bench: paper Table 1 — sDTW kernel + normalizer kernel average
+//! throughput (Gsps, eq. 3) and execution time over the paper's protocol
+//! (2 warm-up + 10 timed runs).
+//!
+//! Paper (AMD GPU, 512×2000 vs 100k):   sDTW 11036.5 ms, normalizer
+//! 0.0214 ms.  This harness runs the scaled shape (DESIGN.md §4) on the
+//! CPU-PJRT substitute and, with SDTW_BENCH_SLOW=1, the closest-to-paper
+//! 64×500 vs 10k shape.  Compare *ratios*, not absolutes.
+//!
+//!   cargo bench --bench table1           # scaled shape
+//!   SDTW_BENCH_SLOW=1 cargo bench --bench table1
+
+use sdtw_repro::bench_harness::{banner, slow_benches_enabled, Table};
+use sdtw_repro::experiments::{measure_variant, table1, Workload};
+use sdtw_repro::runtime::artifact::Manifest;
+use sdtw_repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let protocol = banner("table1", "B=32 M=256 N=4096 (paper: 512x2000 vs 100k)");
+
+    let table = table1(artifacts, 42, protocol)?;
+    table.print();
+    println!(
+        "paper Table 1 (for ratio comparison): sDTW 11036.5 ms, normalizer 0.0214 ms;\n\
+         note: the paper's printed Gsps values are inconsistent with its eq. 3 by ~10x\n\
+         (EXPERIMENTS.md §Table-1) — we report eq. 3 as printed."
+    );
+
+    if slow_benches_enabled() {
+        let manifest = Manifest::load(artifacts)?;
+        let meta = manifest.require("sdtw_b64_m500_n10000_w25")?;
+        let engine = Engine::start(manifest.clone())?;
+        let wl = Workload::for_variant(meta, 42);
+        let s = measure_variant(&engine.handle(), meta, &wl, protocol)?;
+        let mut t = Table::new(
+            "Table 1 (paper-μ shape, B=64 M=500 N=10000)",
+            &["Gsps", "ms", "std ms"],
+        );
+        t.row(
+            "sDTW kernel",
+            vec![
+                format!("{:.6}", s.gsps(wl.floats())),
+                format!("{:.1}", s.mean_ms),
+                format!("{:.1}", s.std_ms),
+            ],
+        );
+        t.print();
+    } else {
+        println!("(SDTW_BENCH_SLOW=1 adds the 64×500 vs 10k paper-μ shape)");
+    }
+    Ok(())
+}

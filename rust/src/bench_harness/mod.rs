@@ -1,0 +1,165 @@
+//! Benchmark harness implementing the paper's measurement protocol
+//! (§6: 2 warm-up runs + 10 timed runs, mean reported) and the table /
+//! series printers the bench binaries share.  `cargo bench` targets are
+//! `harness = false` binaries built on this module (no `criterion`
+//! offline — see DESIGN.md "Session caveats").
+
+use crate::util::stats::{Protocol, Summary};
+
+/// One row of a results table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<String>,
+}
+
+/// A printable results table (paper-style).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(Row { label: label.to_string(), cells });
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let label_w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .chain([5])
+            .max()
+            .unwrap();
+        for r in &self.rows {
+            for (i, c) in r.cells.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&format!("{:label_w$}", ""));
+        for (c, w) in self.columns.iter().zip(&widths) {
+            out.push_str(&format!("  {c:>w$}"));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!("{:label_w$}", r.label));
+            for (c, w) in r.cells.iter().zip(&widths) {
+                out.push_str(&format!("  {c:>w$}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// A benched kernel measurement in the paper's terms.
+#[derive(Clone, Debug)]
+pub struct KernelMeasurement {
+    pub name: String,
+    pub summary: Summary,
+    /// floats in the query batch — the paper's "floatsProcessed"
+    pub floats_processed: u64,
+    /// DP cell updates (0 for non-DP kernels like the normalizer)
+    pub cells: u64,
+}
+
+impl KernelMeasurement {
+    /// Table-1 style cells: throughput (Gsps) + execution time (ms).
+    pub fn table1_cells(&self) -> Vec<String> {
+        vec![
+            format!("{:.6}", self.summary.gsps(self.floats_processed)),
+            format!("{:.4}", self.summary.mean_ms),
+            format!("{:.4}", self.summary.std_ms),
+        ]
+    }
+}
+
+/// Measure a closure under the given protocol.
+pub fn measure<F: FnMut()>(name: &str, protocol: Protocol, floats: u64, cells: u64, f: F)
+    -> KernelMeasurement {
+    let summary = protocol.run(f);
+    KernelMeasurement {
+        name: name.to_string(),
+        summary,
+        floats_processed: floats,
+        cells,
+    }
+}
+
+/// Whether slow (paper-μ-scale) benches were requested.
+pub fn slow_benches_enabled() -> bool {
+    std::env::var("SDTW_BENCH_SLOW").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Use the quick protocol when iterating locally (SDTW_BENCH_QUICK=1).
+pub fn protocol_from_env() -> Protocol {
+    if std::env::var("SDTW_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+        Protocol::QUICK
+    } else {
+        Protocol::PAPER
+    }
+}
+
+/// Standard bench banner: prints shape + protocol, returns the protocol.
+pub fn banner(bench: &str, shape: &str) -> Protocol {
+    let p = protocol_from_env();
+    println!(
+        "[{bench}] shape {shape}; protocol: {} warmup + {} timed runs (paper §6)",
+        p.warmup, p.runs
+    );
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row("row1", vec!["1".into(), "2".into()]);
+        t.row("longer_row", vec!["33".into(), "4444".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("longer_row"));
+        // all rows end aligned: the widest cell defines the column
+        assert!(s.contains("4444"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row("r", vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn measure_counts_runs() {
+        let mut n = 0;
+        let m = measure("k", Protocol { warmup: 1, runs: 4 }, 100, 50, || n += 1);
+        assert_eq!(n, 5);
+        assert_eq!(m.summary.samples_ms.len(), 4);
+        assert_eq!(m.floats_processed, 100);
+        let cells = m.table1_cells();
+        assert_eq!(cells.len(), 3);
+    }
+}

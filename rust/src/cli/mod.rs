@@ -1,0 +1,272 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Supports the usual conventions: `--flag`, `--key value`, `--key=value`,
+//! positional arguments, subcommands, `--help` text generation, and typed
+//! accessors with good error messages.  The `sdtw` launcher defines its
+//! subcommands on top of this in `main.rs`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{opt}: {val:?} ({why})")]
+    BadValue { opt: String, val: String, why: String },
+    #[error("unexpected positional argument {0:?}")]
+    UnexpectedPositional(String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+/// Declaration of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    /// true if the option takes a value; false = boolean flag
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A small declarative command parser.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    /// names of accepted positionals, for help text only
+    positionals: Vec<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: false, help, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, help, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, help, default: Some(default) });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str) -> Self {
+        self.positionals.push(name);
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse a raw argument list (without argv[0]/subcommand).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if let Some(body) = raw.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .spec(name)
+                    .ok_or_else(|| CliError::UnknownOption(name.to_string()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.to_string()))?,
+                    };
+                    args.values.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::BadValue {
+                            opt: name.to_string(),
+                            val: inline_val.unwrap(),
+                            why: "flag takes no value".into(),
+                        });
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                if args.positional.len() >= self.positionals.len() {
+                    return Err(CliError::UnexpectedPositional(raw.clone()));
+                }
+                args.positional.push(raw.clone());
+            }
+        }
+        // install defaults
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                args.values.entry(spec.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUsage: sdtw {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [options]\n\nOptions:\n");
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{}\n      {}{}\n", o.name, val, o.help, def));
+        }
+        out
+    }
+}
+
+impl Args {
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_required(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|e| CliError::BadValue {
+                opt: name.to_string(),
+                val: raw.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Typed get with default (defaults installed by the spec or caller).
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, fallback: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(fallback))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("gen", "generate a dataset")
+            .opt_default("batch", "8", "queries per batch")
+            .opt("seed", "rng seed")
+            .flag("quick", "fast mode")
+            .positional("out")
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--batch", "32", "--quick", "file.bin"]))
+            .unwrap();
+        assert_eq!(a.get("batch"), Some("32"));
+        assert!(a.has("quick"));
+        assert_eq!(a.positional, vec!["file.bin"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cmd().parse(&argv(&["--batch=64"])).unwrap();
+        assert_eq!(a.get_parsed::<usize>("batch").unwrap(), Some(64));
+    }
+
+    #[test]
+    fn defaults_installed() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("seed"), None);
+    }
+
+    #[test]
+    fn typed_access_and_errors() {
+        let a = cmd().parse(&argv(&["--batch", "not_a_number"])).unwrap();
+        assert!(a.get_parsed::<usize>("batch").is_err());
+        assert_eq!(a.get_or("seed", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--seed"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["a", "b"])),
+            Err(CliError::UnexpectedPositional(_))
+        ));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--quick=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--batch"));
+        assert!(h.contains("default: 8"));
+        assert!(h.contains("<out>"));
+    }
+}

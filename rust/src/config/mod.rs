@@ -1,0 +1,14 @@
+//! Configuration system: a strict TOML subset (sections, `key = value`
+//! with string/int/float/bool scalars, `#` comments) parsed into typed
+//! lookups, plus the concrete [`ServeConfig`]/[`GenOptions`] structs the
+//! launcher builds from files + CLI overrides.
+//!
+//! Full TOML (arrays-of-tables, dates, multiline strings) is out of
+//! scope; everything this repo's configs need is covered and rejected
+//! inputs produce located errors.
+
+mod parse;
+mod schema;
+
+pub use parse::{ConfigDoc, ConfigError, Value};
+pub use schema::{GenOptions, ServeConfig};

@@ -1,0 +1,290 @@
+//! TOML-subset parser.  Grammar:
+//!
+//!   document  := line*
+//!   line      := ws (comment | section | pair)? ws
+//!   section   := '[' bare-key ']'
+//!   pair      := bare-key ws '=' ws value
+//!   value     := string | bool | float | int
+//!   string    := '"' (escape | char)* '"'
+//!   bare-key  := [A-Za-z0-9_.-]+
+//!
+//! Keys are stored as `section.key` (top-level pairs have no prefix).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config document: flat `section.key → value` map.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    values: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ConfigError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !is_bare_key(name) {
+                    return Err(ConfigError {
+                        line: line_no,
+                        msg: format!("bad section name {name:?}"),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ConfigError {
+                line: line_no,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if !is_bare_key(key) {
+                return Err(ConfigError {
+                    line: line_no,
+                    msg: format!("bad key {key:?}"),
+                });
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val).map_err(|msg| ConfigError { line: line_no, msg })?;
+            if values.insert(full_key.clone(), value).is_some() {
+                return Err(ConfigError {
+                    line: line_no,
+                    msg: format!("duplicate key {full_key:?}"),
+                });
+            }
+        }
+        Ok(ConfigDoc { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigDoc, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError {
+            line: 0,
+            msg: format!("cannot read {}: {e}", path.display()),
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+
+    /// Keys present in the doc but not in `known` — config typo guard.
+    pub fn unknown_keys<'a>(&'a self, known: &[&str]) -> Vec<&'a str> {
+        self.keys().filter(|k| !known.contains(k)).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    line
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = ConfigDoc::parse(
+            r#"
+            # top comment
+            name = "demo"
+            [serve]
+            port = 7071          # inline comment
+            deadline_ms = 2.5
+            verbose = true
+            variant = "pipeline_b8_m128_n2048_w16"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("demo"));
+        assert_eq!(doc.get_i64("serve.port"), Some(7071));
+        assert_eq!(doc.get_f64("serve.deadline_ms"), Some(2.5));
+        assert_eq!(doc.get_bool("serve.verbose"), Some(true));
+        assert_eq!(
+            doc.get_str("serve.variant"),
+            Some("pipeline_b8_m128_n2048_w16")
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = ConfigDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+        assert_eq!(doc.get_i64("x"), Some(3));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = ConfigDoc::parse(r#"s = "a\nb\t\"c\\" "#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a\nb\t\"c\\"));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = ConfigDoc::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = ConfigDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = ConfigDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = ConfigDoc::parse("a = 1\na = 2").unwrap_err();
+        assert!(err.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn unknown_keys_reported() {
+        let doc = ConfigDoc::parse("[serve]\nport = 1\ntypo = 2").unwrap();
+        let unknown = doc.unknown_keys(&["serve.port"]);
+        assert_eq!(unknown, vec!["serve.typo"]);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(ConfigDoc::parse("x = nope").is_err());
+        assert!(ConfigDoc::parse("x = \"open").is_err());
+        assert!(ConfigDoc::parse("bad key! = 1").is_err());
+    }
+}

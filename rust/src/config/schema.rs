@@ -1,0 +1,182 @@
+//! Typed configuration schemas built on [`super::ConfigDoc`].
+
+use std::path::PathBuf;
+
+use super::{ConfigDoc, ConfigError};
+
+/// Configuration of the serving stack (coordinator + server).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: PathBuf,
+    /// Pipeline variant name to serve (must exist in the manifest).
+    pub variant: String,
+    /// TCP bind address for the server.
+    pub addr: String,
+    /// Max time a partial batch may wait before dispatch.
+    pub batch_deadline_ms: f64,
+    /// Bounded request-queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Number of executor worker threads.
+    pub workers: usize,
+    /// Log level name.
+    pub log_level: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            variant: "pipeline_b8_m128_n2048_w16".to_string(),
+            addr: "127.0.0.1:7071".to_string(),
+            batch_deadline_ms: 5.0,
+            queue_depth: 1024,
+            workers: 2,
+            log_level: "info".to_string(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "serve.artifacts_dir",
+        "serve.variant",
+        "serve.addr",
+        "serve.batch_deadline_ms",
+        "serve.queue_depth",
+        "serve.workers",
+        "serve.log_level",
+    ];
+
+    /// Build from a parsed doc, with defaults for missing keys and an
+    /// error on unknown `serve.*` keys (typo guard).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<ServeConfig, ConfigError> {
+        let unknown: Vec<_> = doc
+            .keys()
+            .filter(|k| k.starts_with("serve.") && !Self::KNOWN_KEYS.contains(k))
+            .map(str::to_string)
+            .collect();
+        if !unknown.is_empty() {
+            return Err(ConfigError {
+                line: 0,
+                msg: format!("unknown serve keys: {unknown:?}"),
+            });
+        }
+        let d = ServeConfig::default();
+        let cfg = ServeConfig {
+            artifacts_dir: doc
+                .get_str("serve.artifacts_dir")
+                .map(PathBuf::from)
+                .unwrap_or(d.artifacts_dir),
+            variant: doc
+                .get_str("serve.variant")
+                .map(str::to_string)
+                .unwrap_or(d.variant),
+            addr: doc.get_str("serve.addr").map(str::to_string).unwrap_or(d.addr),
+            batch_deadline_ms: doc
+                .get_f64("serve.batch_deadline_ms")
+                .unwrap_or(d.batch_deadline_ms),
+            queue_depth: doc
+                .get_i64("serve.queue_depth")
+                .map(|v| v as usize)
+                .unwrap_or(d.queue_depth),
+            workers: doc
+                .get_i64("serve.workers")
+                .map(|v| v as usize)
+                .unwrap_or(d.workers),
+            log_level: doc
+                .get_str("serve.log_level")
+                .map(str::to_string)
+                .unwrap_or(d.log_level),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |msg: String| Err(ConfigError { line: 0, msg });
+        if self.batch_deadline_ms < 0.0 {
+            return err(format!("negative deadline {}", self.batch_deadline_ms));
+        }
+        if self.queue_depth == 0 {
+            return err("queue_depth must be >= 1".into());
+        }
+        if self.workers == 0 {
+            return err("workers must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Options of the `sdtw gen` CLI command (dataset generation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenOptions {
+    pub batch: usize,
+    pub qlen: usize,
+    pub reflen: usize,
+    pub seed: u64,
+    pub family: String,
+    pub planted_fraction: f64,
+    pub noise: f64,
+    pub out: PathBuf,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        Self {
+            batch: 8,
+            qlen: 128,
+            reflen: 2048,
+            seed: 42,
+            family: "cbf".to_string(),
+            planted_fraction: 0.5,
+            noise: 0.05,
+            out: PathBuf::from("dataset.sdtw"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn overrides_applied() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [serve]
+            variant = "sdtw_b8_m128_n2048_w14"
+            workers = 4
+            batch_deadline_ms = 1.5
+            "#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.variant, "sdtw_b8_m128_n2048_w14");
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.batch_deadline_ms, 1.5);
+        assert_eq!(cfg.queue_depth, ServeConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn typo_rejected() {
+        let doc = ConfigDoc::parse("[serve]\nworkerz = 4").unwrap();
+        let err = ServeConfig::from_doc(&doc).unwrap_err();
+        assert!(err.msg.contains("workerz"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let doc = ConfigDoc::parse("[serve]\nworkers = 0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[serve]\nbatch_deadline_ms = -1.0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Dynamic batching: assemble fixed-size kernel batches from a request
+//! stream under a latency deadline.
+//!
+//! The compiled kernels take a *static* batch size B (XLA shapes are
+//! static, exactly like the paper's fixed 512×2000 launch geometry), so
+//! the batcher's policy space is:
+//!   * dispatch as soon as B requests are waiting ("size trigger"), or
+//!   * dispatch a partial batch once the oldest request has waited
+//!     `deadline` ("deadline trigger"), padding the remaining rows.
+//! Padding rows are zero queries whose results are discarded; the
+//! padding fraction is tracked by metrics and benched by
+//! `ablation_batching`.
+
+use std::time::{Duration, Instant};
+
+use super::request::AlignRequest;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    /// Kernel batch size B (from the variant's manifest entry).
+    pub batch_size: usize,
+    /// Max wait from the oldest queued request to dispatch.
+    pub deadline: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(batch_size: usize, deadline: Duration) -> Self {
+        assert!(batch_size >= 1);
+        Self { batch_size, deadline }
+    }
+}
+
+/// An assembled batch headed for a worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<AlignRequest>,
+    /// Rows of padding added to reach the kernel's static batch size.
+    pub padding: usize,
+    /// When assembly completed (for queue-time metrics).
+    pub assembled: Instant,
+}
+
+impl Batch {
+    pub fn real(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Pure batch-assembly state machine (decisions only — IO-free and unit
+/// testable; the dispatcher loop feeds it).
+#[derive(Debug)]
+pub struct BatchAssembler {
+    policy: BatchPolicy,
+    pending: Vec<AlignRequest>,
+    oldest: Option<Instant>,
+}
+
+/// What the dispatcher should do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Wait up to this long for another request.
+    WaitFor(Duration),
+    /// Dispatch now.
+    Dispatch,
+    /// Nothing pending: block indefinitely for the next request.
+    Idle,
+}
+
+impl BatchAssembler {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, pending: Vec::with_capacity(policy.batch_size), oldest: None }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns `Dispatch` if the size trigger fired.
+    pub fn offer(&mut self, req: AlignRequest, now: Instant) -> Step {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(req);
+        self.next_step(now)
+    }
+
+    /// Decide the next action at time `now`.
+    pub fn next_step(&self, now: Instant) -> Step {
+        if self.pending.is_empty() {
+            return Step::Idle;
+        }
+        if self.pending.len() >= self.policy.batch_size {
+            return Step::Dispatch;
+        }
+        let waited = now.duration_since(self.oldest.expect("pending implies oldest"));
+        if waited >= self.policy.deadline {
+            Step::Dispatch
+        } else {
+            Step::WaitFor(self.policy.deadline - waited)
+        }
+    }
+
+    /// Take the assembled batch (caller decided to dispatch).
+    pub fn take(&mut self, now: Instant) -> Batch {
+        assert!(!self.pending.is_empty(), "nothing to dispatch");
+        let requests = std::mem::take(&mut self.pending);
+        self.oldest = None;
+        let padding = self.policy.batch_size.saturating_sub(requests.len());
+        Batch { requests, padding, assembled: now }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::AlignOptions;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> AlignRequest {
+        let (tx, _rx) = mpsc::sync_channel(1);
+        // keep _rx alive? dropped — sends will fail, fine for these tests
+        AlignRequest {
+            id,
+            query: vec![0.0; 4],
+            options: AlignOptions::default(),
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn policy(b: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy::new(b, Duration::from_millis(ms))
+    }
+
+    #[test]
+    fn size_trigger_dispatches_immediately() {
+        let mut a = BatchAssembler::new(policy(2, 1000));
+        let t = Instant::now();
+        assert_eq!(a.offer(req(1), t), Step::WaitFor(Duration::from_millis(1000)));
+        assert_eq!(a.offer(req(2), t), Step::Dispatch);
+        let b = a.take(t);
+        assert_eq!(b.real(), 2);
+        assert_eq!(b.padding, 0);
+        assert_eq!(a.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_trigger_pads() {
+        let mut a = BatchAssembler::new(policy(4, 10));
+        let t0 = Instant::now();
+        a.offer(req(1), t0);
+        let later = t0 + Duration::from_millis(11);
+        assert_eq!(a.next_step(later), Step::Dispatch);
+        let b = a.take(later);
+        assert_eq!(b.real(), 1);
+        assert_eq!(b.padding, 3);
+    }
+
+    #[test]
+    fn waitfor_shrinks_with_elapsed() {
+        let mut a = BatchAssembler::new(policy(4, 100));
+        let t0 = Instant::now();
+        a.offer(req(1), t0);
+        match a.next_step(t0 + Duration::from_millis(60)) {
+            Step::WaitFor(d) => {
+                assert!(d <= Duration::from_millis(40), "{d:?}");
+                assert!(d >= Duration::from_millis(20), "{d:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let a = BatchAssembler::new(policy(4, 100));
+        assert_eq!(a.next_step(Instant::now()), Step::Idle);
+    }
+
+    #[test]
+    fn deadline_anchored_to_oldest() {
+        // later arrivals must not extend the oldest request's deadline
+        let mut a = BatchAssembler::new(policy(8, 50));
+        let t0 = Instant::now();
+        a.offer(req(1), t0);
+        a.offer(req(2), t0 + Duration::from_millis(45));
+        assert_eq!(a.next_step(t0 + Duration::from_millis(51)), Step::Dispatch);
+    }
+
+    #[test]
+    fn order_preserved() {
+        let mut a = BatchAssembler::new(policy(3, 100));
+        let t = Instant::now();
+        a.offer(req(10), t);
+        a.offer(req(11), t);
+        a.offer(req(12), t);
+        let b = a.take(t);
+        let ids: Vec<_> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 11, 12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "nothing to dispatch")]
+    fn take_empty_panics() {
+        BatchAssembler::new(policy(2, 10)).take(Instant::now());
+    }
+}

@@ -1,0 +1,219 @@
+//! Service metrics: request/batch counters, padding waste, device busy
+//! time, end-to-end latency percentiles, and the paper's Gsps (eq. 3)
+//! computed over the serving window.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{gsps, LatencyHistogram};
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    requests: AtomicU64,
+    responses: AtomicU64,
+    errors: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    padded_rows: AtomicU64,
+    real_rows: AtomicU64,
+    /// floats processed (paper's metric: batch rows × qlen, real rows only)
+    floats: AtomicU64,
+    /// DP cells processed (real rows only)
+    cells: AtomicU64,
+    /// accumulated device execute time in microseconds
+    busy_us: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+    queue_time: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+            real_rows: AtomicU64::new(0),
+            floats: AtomicU64::new(0),
+            cells: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
+            latency: Mutex::new(LatencyHistogram::new()),
+            queue_time: Mutex::new(LatencyHistogram::new()),
+        }
+    }
+
+    pub fn on_submit(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, real: usize, padding: usize, qlen: usize, reflen: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.real_rows.fetch_add(real as u64, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padding as u64, Ordering::Relaxed);
+        self.floats
+            .fetch_add((real * qlen) as u64, Ordering::Relaxed);
+        self.cells
+            .fetch_add((real * qlen) as u64 * reflen as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_execute(&self, exec_ms: f64) {
+        self.busy_us
+            .fetch_add((exec_ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_response(&self, latency_ms: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record_ms(latency_ms);
+    }
+
+    pub fn on_queue_time(&self, ms: f64) {
+        self.queue_time.lock().unwrap().record_ms(ms);
+    }
+
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let latency = self.latency.lock().unwrap();
+        let queue = self.queue_time.lock().unwrap();
+        let floats = self.floats.load(Ordering::Relaxed);
+        let busy_ms = self.busy_us.load(Ordering::Relaxed) as f64 / 1e3;
+        let wall_ms = self.started.elapsed().as_secs_f64() * 1e3;
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            real_rows: self.real_rows.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            floats_processed: floats,
+            cells: self.cells.load(Ordering::Relaxed),
+            busy_ms,
+            wall_ms,
+            device_gsps: if busy_ms > 0.0 { gsps(floats, busy_ms) } else { 0.0 },
+            offered_gsps: if wall_ms > 0.0 { gsps(floats, wall_ms) } else { 0.0 },
+            latency_mean_ms: latency.mean_ms(),
+            latency_p50_ms: latency.percentile_ms(50.0),
+            latency_p95_ms: latency.percentile_ms(95.0),
+            latency_p99_ms: latency.percentile_ms(99.0),
+            queue_mean_ms: queue.mean_ms(),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time metrics readout.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub real_rows: u64,
+    pub padded_rows: u64,
+    pub floats_processed: u64,
+    pub cells: u64,
+    /// Device-side execute time (sum over batches).
+    pub busy_ms: f64,
+    /// Wall time since service start.
+    pub wall_ms: f64,
+    /// Paper eq. 3 over device busy time (kernel throughput).
+    pub device_gsps: f64,
+    /// Paper eq. 3 over wall time (offered/served throughput).
+    pub offered_gsps: f64,
+    pub latency_mean_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub queue_mean_ms: f64,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of kernel rows wasted on padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.real_rows + self.padded_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_rows as f64 / total as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} responses={} errors={} rejected={} batches={} \
+             padding={:.1}% device_gsps={:.6} offered_gsps={:.6} \
+             latency(mean/p50/p95/p99)={:.2}/{:.2}/{:.2}/{:.2} ms queue={:.2} ms",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.rejected,
+            self.batches,
+            self.padding_fraction() * 100.0,
+            self.device_gsps,
+            self.offered_gsps,
+            self.latency_mean_ms,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_p99_ms,
+            self.queue_mean_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(2, 6, 128, 2048);
+        m.on_execute(10.0);
+        m.on_response(12.0);
+        m.on_response(14.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.real_rows, 2);
+        assert_eq!(s.padded_rows, 6);
+        assert_eq!(s.floats_processed, 2 * 128);
+        assert_eq!(s.cells, 2 * 128 * 2048);
+        assert!((s.padding_fraction() - 0.75).abs() < 1e-12);
+        assert!((s.latency_mean_ms - 13.0).abs() < 1e-9);
+        assert!(s.busy_ms >= 9.9 && s.busy_ms <= 10.1);
+        // device gsps: 256 floats / 10ms = 256 / 1e7 s·1e9 = 2.56e-5
+        assert!((s.device_gsps - 2.56e-5).abs() < 1e-7, "{}", s.device_gsps);
+    }
+
+    #[test]
+    fn empty_snapshot_is_finite() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.device_gsps, 0.0);
+        assert_eq!(s.padding_fraction(), 0.0);
+        // render must not panic
+        let _ = s.render();
+    }
+}

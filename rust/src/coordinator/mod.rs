@@ -1,0 +1,42 @@
+//! Layer-3 coordinator — the serving system around the AOT kernels.
+//!
+//! The paper's kernel is batch-oriented ("batches of 512 queries of
+//! length 2,000"); what it leaves to the caller — collecting queries into
+//! full batches, normalizing the reference, routing to the right compiled
+//! shape, and getting results back to whoever asked — is this module, in
+//! the mold of a vLLM-style request router:
+//!
+//! ```text
+//!  submit() ──► BoundedQueue ──► dispatcher (deadline batcher)
+//!                                   │ round-robin
+//!                                   ▼
+//!                        BoundedQueue<Batch> ──► worker × W
+//!                                                  │ EngineHandle
+//!                                                  ▼
+//!                                        PJRT execute (artifact)
+//!                                                  │
+//!                reply channel per request ◄───────┘  + metrics
+//! ```
+//!
+//! * [`queue`]    — Mutex+Condvar bounded MPMC queue with close semantics
+//!   (backpressure for the paper's fixed-batch kernels).
+//! * [`batcher`]  — size/deadline batch assembly + padding policy.
+//! * [`router`]   — request → variant selection against the manifest.
+//! * [`worker`]   — tensor marshalling + execution + response fan-out.
+//! * [`metrics`]  — Gsps (paper eq. 3), latency percentiles, padding waste.
+//! * [`service`]  — [`service::SdtwService`], the public facade.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod service;
+pub mod worker;
+
+pub use batcher::{Batch, BatchPolicy};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use queue::BoundedQueue;
+pub use request::{AlignOptions, AlignRequest, AlignResponse, RequestId};
+pub use router::Router;
+pub use service::{SdtwService, ServiceOptions};

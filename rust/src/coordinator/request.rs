@@ -1,0 +1,79 @@
+//! Request/response types of the alignment service.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Client-facing alignment options (used by the router).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AlignOptions {
+    /// Route to the pruned kernel variant if available.
+    pub pruned: bool,
+    /// Route to the quantized pipeline if available.
+    pub quantized: bool,
+    /// Prefer a reduced-precision accumulator variant ("bf16"/"f16").
+    pub half: bool,
+}
+
+/// One alignment request: a raw (un-normalized) query against the
+/// service's reference.
+#[derive(Debug)]
+pub struct AlignRequest {
+    pub id: RequestId,
+    pub query: Vec<f32>,
+    pub options: AlignOptions,
+    /// Set at submission; used for end-to-end latency metrics.
+    pub submitted: Instant,
+    /// Where the response goes (one-shot).
+    pub reply: mpsc::SyncSender<Result<AlignResponse, String>>,
+}
+
+/// The alignment answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlignResponse {
+    pub id: RequestId,
+    /// Accumulated sDTW cost (+inf encodes "no match" under pruning).
+    pub cost: f32,
+    /// Match end position in the reference.
+    pub end: usize,
+    /// End-to-end latency in milliseconds (submit → response build).
+    pub latency_ms: f64,
+    /// Name of the variant that served the request.
+    pub variant: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_default_is_exact_f32() {
+        let o = AlignOptions::default();
+        assert!(!o.pruned && !o.quantized && !o.half);
+    }
+
+    #[test]
+    fn request_reply_roundtrip() {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = AlignRequest {
+            id: 7,
+            query: vec![1.0, 2.0],
+            options: AlignOptions::default(),
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        req.reply
+            .send(Ok(AlignResponse {
+                id: req.id,
+                cost: 0.5,
+                end: 3,
+                latency_ms: 1.0,
+                variant: "v".into(),
+            }))
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.end, 3);
+    }
+}

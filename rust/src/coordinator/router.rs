@@ -1,0 +1,177 @@
+//! Variant routing: pick the compiled artifact that should serve a
+//! request, given its query length, the service's reference length, and
+//! the request's accuracy/speed options.
+//!
+//! Routing rules (first match wins):
+//!   1. shape must match exactly — qlen == variant.qlen and
+//!      reflen == variant.reflen (static XLA shapes);
+//!   2. honor options: quantized → quantized pipeline; pruned → pruned
+//!      variant; half → smallest-precision dtype available;
+//!   3. otherwise the exact f32 pipeline (or sdtw kernel for
+//!      pre-normalized flows).
+
+use anyhow::{bail, Result};
+
+use super::request::AlignOptions;
+use crate::runtime::artifact::{Kind, Manifest, VariantMeta};
+
+/// Routes requests to manifest variants.
+#[derive(Clone, Debug)]
+pub struct Router {
+    manifest: Manifest,
+    /// Reference length the service was started with.
+    reflen: usize,
+}
+
+impl Router {
+    pub fn new(manifest: Manifest, reflen: usize) -> Router {
+        Router { manifest, reflen }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// All candidate variants for (qlen, reflen), any kind.
+    fn shape_matches(&self, qlen: usize) -> impl Iterator<Item = &VariantMeta> {
+        let reflen = self.reflen;
+        self.manifest
+            .variants
+            .iter()
+            .filter(move |v| v.qlen == qlen && v.reflen == Some(reflen))
+    }
+
+    /// Route a raw-query request (needs normalization → pipeline kinds).
+    pub fn route(&self, qlen: usize, opts: AlignOptions) -> Result<&VariantMeta> {
+        if opts.quantized {
+            if let Some(v) = self
+                .shape_matches(qlen)
+                .find(|v| v.kind == Kind::QuantizedPipeline)
+            {
+                return Ok(v);
+            }
+            bail!("no quantized pipeline for qlen={qlen}, reflen={}", self.reflen);
+        }
+        // pruned/half kernels were generated as `sdtw` kind (they take
+        // pre-normalized queries); serving them requires host-side znorm,
+        // which the worker applies when the routed kind is Sdtw.
+        if opts.pruned {
+            if let Some(v) = self
+                .shape_matches(qlen)
+                .find(|v| v.kind == Kind::Sdtw && v.prune_threshold.is_some())
+            {
+                return Ok(v);
+            }
+            bail!("no pruned variant for qlen={qlen}, reflen={}", self.reflen);
+        }
+        if opts.half {
+            for dt in ["bf16", "f16"] {
+                if let Some(v) = self.shape_matches(qlen).find(|v| {
+                    v.kind == Kind::Sdtw && v.dtype == dt && v.prune_threshold.is_none()
+                }) {
+                    return Ok(v);
+                }
+            }
+            bail!("no half-precision variant for qlen={qlen}, reflen={}", self.reflen);
+        }
+        if let Some(v) = self
+            .shape_matches(qlen)
+            .find(|v| v.kind == Kind::Pipeline && !v.quantized)
+        {
+            return Ok(v);
+        }
+        bail!(
+            "no pipeline variant for qlen={qlen}, reflen={} (available: {})",
+            self.reflen,
+            self.manifest
+                .variants
+                .iter()
+                .map(|v| format!("{}(m={},n={:?})", v.name, v.qlen, v.reflen))
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+
+    /// The batch size the service must assemble for this option set.
+    pub fn batch_size(&self, qlen: usize, opts: AlignOptions) -> Result<usize> {
+        Ok(self.route(qlen, opts)?.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("sdtw_router_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "version": 1,
+              "variants": [
+                {"name": "pipe", "kind": "pipeline", "file": "p.hlo.txt",
+                 "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16, "dtype": "f32"},
+                {"name": "sdtw_bf16", "kind": "sdtw", "file": "b.hlo.txt",
+                 "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16, "dtype": "bf16"},
+                {"name": "sdtw_pruned", "kind": "sdtw", "file": "pr.hlo.txt",
+                 "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16,
+                 "dtype": "f32", "prune_threshold": 4.0},
+                {"name": "quant", "kind": "quantized_pipeline", "file": "q.hlo.txt",
+                 "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16,
+                 "dtype": "f32", "quantized": true},
+                {"name": "other_shape", "kind": "pipeline", "file": "o.hlo.txt",
+                 "batch": 32, "qlen": 256, "reflen": 4096, "segment_width": 16, "dtype": "f32"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(Path::new(&dir)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        m
+    }
+
+    #[test]
+    fn default_routes_to_pipeline() {
+        let r = Router::new(manifest(), 2048);
+        let v = r.route(128, AlignOptions::default()).unwrap();
+        assert_eq!(v.name, "pipe");
+        assert_eq!(r.batch_size(128, AlignOptions::default()).unwrap(), 8);
+    }
+
+    #[test]
+    fn options_route_to_special_variants() {
+        let r = Router::new(manifest(), 2048);
+        let v = r
+            .route(128, AlignOptions { half: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(v.name, "sdtw_bf16");
+        let v = r
+            .route(128, AlignOptions { pruned: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(v.name, "sdtw_pruned");
+        let v = r
+            .route(128, AlignOptions { quantized: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(v.name, "quant");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let r = Router::new(manifest(), 2048);
+        assert!(r.route(999, AlignOptions::default()).is_err());
+        // qlen 256 exists but at reflen 4096, not the service's 2048
+        assert!(r.route(256, AlignOptions::default()).is_err());
+        let r4096 = Router::new(manifest(), 4096);
+        assert_eq!(r4096.route(256, AlignOptions::default()).unwrap().name, "other_shape");
+    }
+
+    #[test]
+    fn missing_option_variant_is_error() {
+        let r = Router::new(manifest(), 4096);
+        assert!(r
+            .route(256, AlignOptions { pruned: true, ..Default::default() })
+            .is_err());
+    }
+}

@@ -1,0 +1,356 @@
+//! [`SdtwService`] — the public facade of the serving stack.
+//!
+//! Owns: the request queue, the dispatcher thread (deadline batcher with
+//! per-variant assembly), W worker threads each with a private PJRT
+//! engine, the normalized reference, the router, and the metrics sink.
+//!
+//! ```no_run
+//! # use sdtw_repro::coordinator::{SdtwService, ServiceOptions, AlignOptions};
+//! let opts = ServiceOptions::default();
+//! let reference = vec![0.0f32; 2048];
+//! let service = SdtwService::start(opts, reference).unwrap();
+//! let resp = service.align_blocking(vec![0.0; 128], AlignOptions::default()).unwrap();
+//! println!("cost {} at {}", resp.cost, resp.end);
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{BatchAssembler, BatchPolicy, Step};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::queue::{BoundedQueue, PushError};
+use super::request::{AlignOptions, AlignRequest, AlignResponse};
+use super::router::Router;
+use super::worker::{worker_loop, RoutedBatch};
+use crate::config::ServeConfig;
+use crate::log_info;
+use crate::normalize;
+use crate::runtime::artifact::{Manifest, VariantMeta};
+use crate::runtime::Engine;
+
+/// Service construction options.
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    pub artifacts_dir: PathBuf,
+    /// Primary pipeline variant (fixes qlen/reflen/batch of the service).
+    pub variant: String,
+    pub batch_deadline: Duration,
+    pub queue_depth: usize,
+    pub workers: usize,
+    /// Compile the primary variant before accepting traffic.
+    pub preload: bool,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        let c = ServeConfig::default();
+        Self {
+            artifacts_dir: c.artifacts_dir,
+            variant: c.variant,
+            batch_deadline: Duration::from_secs_f64(c.batch_deadline_ms / 1e3),
+            queue_depth: c.queue_depth,
+            workers: c.workers,
+            preload: true,
+        }
+    }
+}
+
+impl ServiceOptions {
+    pub fn from_config(c: &ServeConfig) -> Self {
+        Self {
+            artifacts_dir: c.artifacts_dir.clone(),
+            variant: c.variant.clone(),
+            batch_deadline: Duration::from_secs_f64(c.batch_deadline_ms / 1e3),
+            queue_depth: c.queue_depth,
+            workers: c.workers,
+            preload: true,
+        }
+    }
+}
+
+/// The running service.
+pub struct SdtwService {
+    submit_q: Arc<BoundedQueue<AlignRequest>>,
+    metrics: Arc<Metrics>,
+    router: Arc<Router>,
+    primary: Arc<VariantMeta>,
+    next_id: AtomicU64,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    batch_q: Arc<BoundedQueue<RoutedBatch>>,
+}
+
+impl SdtwService {
+    /// Start the service over a raw (un-normalized) reference series.
+    pub fn start(opts: ServiceOptions, reference_raw: Vec<f32>) -> Result<SdtwService> {
+        let manifest = Manifest::load(&opts.artifacts_dir)?;
+        let primary = Arc::new(manifest.require(&opts.variant)?.clone());
+        let reflen = primary
+            .reflen
+            .context("primary variant must be an alignment variant")?;
+        anyhow::ensure!(
+            reference_raw.len() == reflen,
+            "reference length {} != variant reflen {reflen}",
+            reference_raw.len()
+        );
+
+        // normalize the reference once up front (paper §5: runSDTW
+        // orchestrates normalizer calls for both operands; same formula)
+        let mut reference = reference_raw;
+        normalize::znorm_paper(&mut reference);
+        let reference = Arc::new(reference);
+
+        let router = Arc::new(Router::new(manifest, reflen));
+        let metrics = Arc::new(Metrics::new());
+        let submit_q = Arc::new(BoundedQueue::<AlignRequest>::new(opts.queue_depth));
+        let batch_q = Arc::new(BoundedQueue::<RoutedBatch>::new(opts.workers * 2));
+
+        // workers, each with a private engine (PJRT objects are !Send)
+        let mut workers = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let engine = Engine::start(router.manifest().clone())
+                .with_context(|| format!("starting engine {w}"))?;
+            if opts.preload {
+                engine.handle().preload(&[primary.name.as_str()])?;
+            }
+            let q = batch_q.clone();
+            let h = engine.handle();
+            let r = reference.clone();
+            let m = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sdtw-worker-{w}"))
+                    .spawn(move || {
+                        // keep the engine alive for the worker's lifetime
+                        let _engine = engine;
+                        worker_loop(q, h, r, m);
+                    })?,
+            );
+        }
+
+        // dispatcher: deadline batching, per-variant assembly
+        let dispatcher = {
+            let submit_q = submit_q.clone();
+            let batch_q = batch_q.clone();
+            let router = router.clone();
+            let deadline = opts.batch_deadline;
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("sdtw-dispatcher".to_string())
+                .spawn(move || {
+                    dispatcher_loop(submit_q, batch_q, router, deadline, metrics)
+                })?
+        };
+
+        log_info!(
+            "service up: variant={} (B={}, M={}, N={}), {} workers, deadline {:?}",
+            primary.name,
+            primary.batch,
+            primary.qlen,
+            reflen,
+            opts.workers,
+            opts.batch_deadline
+        );
+        Ok(SdtwService {
+            submit_q,
+            metrics,
+            router,
+            primary,
+            next_id: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+            workers,
+            batch_q,
+        })
+    }
+
+    /// Expected query length (the primary variant's static M).
+    pub fn qlen(&self) -> usize {
+        self.primary.qlen
+    }
+
+    /// Reference length the service was started with.
+    pub fn reflen(&self) -> usize {
+        self.primary.reflen.unwrap_or(0)
+    }
+
+    /// Kernel batch size of the primary variant.
+    pub fn batch_size(&self) -> usize {
+        self.primary.batch
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a query; returns a receiver for the response.
+    /// Fails fast on shape mismatch, unroutable options, or backpressure.
+    pub fn submit(
+        &self,
+        query: Vec<f32>,
+        options: AlignOptions,
+    ) -> Result<mpsc::Receiver<Result<AlignResponse, String>>> {
+        // validate routability up front so errors are synchronous
+        self.router.route(query.len(), options)?;
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = AlignRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            query,
+            options,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.on_submit();
+        match self.submit_q.try_push(req) {
+            Ok(()) => Ok(rx),
+            Err(PushError::Full(_)) => {
+                self.metrics.on_reject();
+                anyhow::bail!("service overloaded (queue full)")
+            }
+            Err(PushError::Closed(_)) => anyhow::bail!("service shut down"),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn align_blocking(
+        &self,
+        query: Vec<f32>,
+        options: AlignOptions,
+    ) -> Result<AlignResponse> {
+        let rx = self.submit(query, options)?;
+        rx.recv()
+            .context("service dropped request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Convenience: align a whole set, preserving order.
+    pub fn align_many(
+        &self,
+        queries: &[Vec<f32>],
+        options: AlignOptions,
+    ) -> Result<Vec<AlignResponse>> {
+        let rxs = queries
+            .iter()
+            .map(|q| self.submit(q.clone(), options))
+            .collect::<Result<Vec<_>>>()?;
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .context("service dropped request")?
+                    .map_err(|e| anyhow::anyhow!(e))
+            })
+            .collect()
+    }
+
+    /// Graceful shutdown: drain queued work, then stop threads.
+    pub fn shutdown(&mut self) {
+        self.submit_q.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        self.batch_q.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for SdtwService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The dispatcher: assemble per-variant batches under one deadline clock.
+fn dispatcher_loop(
+    submit_q: Arc<BoundedQueue<AlignRequest>>,
+    batch_q: Arc<BoundedQueue<RoutedBatch>>,
+    router: Arc<Router>,
+    deadline: Duration,
+    _metrics: Arc<Metrics>,
+) {
+    // variant name → (meta, assembler)
+    let mut lanes: HashMap<String, (Arc<VariantMeta>, BatchAssembler)> = HashMap::new();
+
+    let dispatch = |lane: &mut (Arc<VariantMeta>, BatchAssembler),
+                    batch_q: &BoundedQueue<RoutedBatch>,
+                    now: Instant| {
+        let batch = lane.1.take(now);
+        let rb = RoutedBatch { variant: lane.0.clone(), batch };
+        // blocking push: backpressure propagates to the submit queue
+        let _ = batch_q.push(rb);
+    };
+
+    loop {
+        let now = Instant::now();
+        // next action across lanes: dispatch anything due, find min wait
+        let mut min_wait: Option<Duration> = None;
+        for lane in lanes.values_mut() {
+            match lane.1.next_step(now) {
+                Step::Dispatch => dispatch(lane, &batch_q, now),
+                Step::WaitFor(d) => {
+                    min_wait = Some(min_wait.map_or(d, |m: Duration| m.min(d)))
+                }
+                Step::Idle => {}
+            }
+        }
+
+        let incoming = match min_wait {
+            None => submit_q.pop().map(Ok).unwrap_or(Err(true)), // idle: block
+            Some(d) => match submit_q.pop_timeout(d) {
+                Ok(Some(r)) => Ok(r),
+                Ok(None) => Err(true),  // closed
+                Err(()) => Err(false),  // deadline tick
+            },
+        };
+
+        match incoming {
+            Ok(req) => {
+                let variant = match router.route(req.query.len(), req.options) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let _ = req.reply.try_send(Err(format!("unroutable: {e}")));
+                        continue;
+                    }
+                };
+                let lane = lanes.entry(variant.name.clone()).or_insert_with(|| {
+                    (
+                        Arc::new(variant.clone()),
+                        BatchAssembler::new(BatchPolicy::new(variant.batch, deadline)),
+                    )
+                });
+                if lane.1.offer(req, Instant::now()) == Step::Dispatch {
+                    dispatch(lane, &batch_q, Instant::now());
+                }
+            }
+            Err(closed) => {
+                if closed {
+                    // flush all partial batches, then exit
+                    let now = Instant::now();
+                    for lane in lanes.values_mut() {
+                        if lane.1.pending() > 0 {
+                            dispatch(lane, &batch_q, now);
+                        }
+                    }
+                    break;
+                }
+                // deadline tick: loop re-evaluates lanes
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Service behaviour over real artifacts is covered by
+    // tests/integration_coordinator.rs; pure components (queue, batcher,
+    // router, metrics) have their own unit tests.
+}

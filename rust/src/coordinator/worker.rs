@@ -1,0 +1,124 @@
+//! Batch executor workers: marshal an assembled batch into host tensors,
+//! run the routed variant on a PJRT engine, and fan results back out to
+//! the per-request reply channels.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::Batch;
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use super::request::AlignResponse;
+use crate::log_warn;
+use crate::normalize;
+use crate::runtime::artifact::{Kind, VariantMeta};
+use crate::runtime::{EngineHandle, HostTensor};
+
+/// A batch routed to a concrete variant.
+pub struct RoutedBatch {
+    pub variant: Arc<VariantMeta>,
+    pub batch: Batch,
+}
+
+/// Worker loop: pop routed batches until the queue closes.
+pub fn worker_loop(
+    queue: Arc<BoundedQueue<RoutedBatch>>,
+    engine: EngineHandle,
+    reference_norm: Arc<Vec<f32>>,
+    metrics: Arc<Metrics>,
+) {
+    while let Some(rb) = queue.pop() {
+        let variant = rb.variant.clone();
+        match execute_batch(&engine, &variant, &reference_norm, &rb, &metrics) {
+            Ok(responses) => {
+                for (req, resp) in rb.batch.requests.iter().zip(responses) {
+                    metrics.on_response(resp.latency_ms);
+                    if req.reply.try_send(Ok(resp)).is_err() {
+                        // caller went away; not a service error
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.on_error();
+                log_warn!("batch on {} failed: {e:#}", variant.name);
+                let msg = format!("execution failed: {e:#}");
+                for req in &rb.batch.requests {
+                    let _ = req.reply.try_send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Build inputs, execute, split outputs into per-request responses.
+fn execute_batch(
+    engine: &EngineHandle,
+    variant: &VariantMeta,
+    reference_norm: &[f32],
+    rb: &RoutedBatch,
+    metrics: &Arc<Metrics>,
+) -> Result<Vec<AlignResponse>> {
+    let b = variant.batch;
+    let m = variant.qlen;
+    let n = variant.reflen.context("alignment variant lacks reflen")?;
+    let batch = &rb.batch;
+    assert!(batch.requests.len() <= b, "batch overflow");
+
+    metrics.on_batch(batch.requests.len(), b - batch.requests.len(), m, n);
+    metrics.on_queue_time(batch.assembled.elapsed().as_secs_f64() * 1e3);
+
+    // assemble the (B, M) query tensor, zero-padding unused rows
+    let mut queries = vec![0f32; b * m];
+    for (row, req) in batch.requests.iter().enumerate() {
+        anyhow::ensure!(
+            req.query.len() == m,
+            "request {} qlen {} != variant qlen {m}",
+            req.id,
+            req.query.len()
+        );
+        queries[row * m..(row + 1) * m].copy_from_slice(&req.query);
+    }
+    // `sdtw`-kind variants take pre-normalized queries (the pipeline
+    // kinds normalize on device); match the paper's flow host-side.
+    if variant.kind == Kind::Sdtw {
+        normalize::znorm_batch(&mut queries[..batch.requests.len() * m], m);
+    }
+
+    let inputs = vec![
+        HostTensor::f32(&[b as i64, m as i64], queries)?,
+        HostTensor::f32(&[n as i64], reference_norm.to_vec())?,
+    ];
+    let result = engine.execute(&variant.name, inputs)?;
+    metrics.on_execute(result.exec_ms);
+
+    anyhow::ensure!(
+        result.outputs.len() == 2,
+        "expected (costs, positions), got {} outputs",
+        result.outputs.len()
+    );
+    let costs = result.outputs[0].as_f32()?;
+    let positions = result.outputs[1].as_i32()?;
+    anyhow::ensure!(costs.len() == b && positions.len() == b, "bad output shape");
+
+    let now = Instant::now();
+    Ok(batch
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(row, req)| AlignResponse {
+            id: req.id,
+            cost: costs[row],
+            end: positions[row].max(0) as usize,
+            latency_ms: now.duration_since(req.submitted).as_secs_f64() * 1e3,
+            variant: variant.name.clone(),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    // worker_loop is exercised end-to-end by tests/integration_coordinator.rs
+    // (it needs real artifacts); the marshalling invariants are covered there.
+}

@@ -1,0 +1,145 @@
+//! Cylinder–Bell–Funnel (Saito 1994) — the generator behind
+//! `pyts.datasets.make_cylinder_bell_funnel`, re-implemented from the
+//! published definition (pyts is unavailable offline; see DESIGN.md).
+//!
+//! For a series of length n:
+//!   c(t) = (6 + η) · 1[a <= t < b] + ε(t)                 (cylinder)
+//!   b(t) = (6 + η) · 1[a <= t < b] · (t-a)/(b-a) + ε(t)   (bell)
+//!   f(t) = (6 + η) · 1[a <= t < b] · (b-t)/(b-a) + ε(t)   (funnel)
+//! with η ~ N(0,1), ε(t) ~ N(0,1) iid, a ~ U{n/8 .. 3n/8},
+//! b - a ~ U{n/4 .. 3n/4} (clamped to the series end).
+
+use crate::util::rng::Xoshiro256;
+
+/// The three CBF shape classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CbfClass {
+    Cylinder,
+    Bell,
+    Funnel,
+}
+
+impl CbfClass {
+    pub fn random(rng: &mut Xoshiro256) -> CbfClass {
+        match rng.below(3) {
+            0 => CbfClass::Cylinder,
+            1 => CbfClass::Bell,
+            _ => CbfClass::Funnel,
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CbfClass> {
+        match s {
+            "cylinder" => Some(CbfClass::Cylinder),
+            "bell" => Some(CbfClass::Bell),
+            "funnel" => Some(CbfClass::Funnel),
+            _ => None,
+        }
+    }
+}
+
+/// One CBF series of length `n`.
+pub fn cbf_series(class: CbfClass, n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    assert!(n >= 8, "CBF needs n >= 8");
+    let a = (n / 8) + rng.below((n / 4).max(1) as u64) as usize; // U{n/8..3n/8}
+    let len = (n / 4) + rng.below((n / 2).max(1) as u64) as usize; // U{n/4..3n/4}
+    let b = (a + len).min(n - 1).max(a + 1);
+    let amp = 6.0 + rng.normal();
+
+    (0..n)
+        .map(|t| {
+            let noise = rng.normal();
+            let shape = if t >= a && t < b {
+                match class {
+                    CbfClass::Cylinder => amp,
+                    CbfClass::Bell => amp * (t - a) as f64 / (b - a) as f64,
+                    CbfClass::Funnel => amp * (b - t) as f64 / (b - a) as f64,
+                }
+            } else {
+                0.0
+            };
+            (shape + noise) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_and_determinism() {
+        let mut g1 = Xoshiro256::new(50);
+        let mut g2 = Xoshiro256::new(50);
+        let a = cbf_series(CbfClass::Bell, 128, &mut g1);
+        let b = cbf_series(CbfClass::Bell, 128, &mut g2);
+        assert_eq!(a.len(), 128);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cylinder_has_plateau() {
+        let mut g = Xoshiro256::new(51);
+        let s = cbf_series(CbfClass::Cylinder, 256, &mut g);
+        // the active region should push the mean well above the noise floor
+        let hi = s.iter().filter(|&&x| x > 3.0).count();
+        assert!(hi > 256 / 8, "plateau present ({hi} samples above 3)");
+    }
+
+    #[test]
+    fn bell_rises_funnel_falls() {
+        // average the shape over many draws to suppress noise
+        let mut rise = 0f64;
+        let mut fall = 0f64;
+        for seed in 0..40 {
+            let mut g = Xoshiro256::new(100 + seed);
+            let b = cbf_series(CbfClass::Bell, 128, &mut g);
+            let mut g = Xoshiro256::new(100 + seed);
+            let f = cbf_series(CbfClass::Funnel, 128, &mut g);
+            // correlation with t within the active window sign-codes slope
+            let slope = |s: &[f32]| {
+                let n = s.len() as f64;
+                let mean_t = (n - 1.0) / 2.0;
+                let mean_x = s.iter().map(|&x| x as f64).sum::<f64>() / n;
+                s.iter()
+                    .enumerate()
+                    .map(|(t, &x)| (t as f64 - mean_t) * (x as f64 - mean_x))
+                    .sum::<f64>()
+            };
+            rise += slope(&b);
+            fall += slope(&f);
+        }
+        assert!(rise > 0.0, "bell rises on average");
+        assert!(fall < 0.0, "funnel falls on average");
+    }
+
+    #[test]
+    fn classes_distinguishable_by_dtw() {
+        // same-class pairs should usually be closer than cross-class pairs
+        use crate::dtw::full::dtw;
+        use crate::dtw::Dist;
+        use crate::normalize::znormed;
+        let mut g = Xoshiro256::new(52);
+        let mut same = 0f64;
+        let mut cross = 0f64;
+        let k = 10;
+        for _ in 0..k {
+            let c1 = znormed(&cbf_series(CbfClass::Cylinder, 96, &mut g));
+            let c2 = znormed(&cbf_series(CbfClass::Cylinder, 96, &mut g));
+            let f1 = znormed(&cbf_series(CbfClass::Funnel, 96, &mut g));
+            same += dtw(&c1, &c2, Dist::Sq) as f64;
+            cross += dtw(&c1, &f1, Dist::Sq) as f64;
+        }
+        assert!(
+            same < cross,
+            "same-class mean {same} should be below cross-class {cross}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "n >= 8")]
+    fn tiny_series_rejected() {
+        let mut g = Xoshiro256::new(53);
+        cbf_series(CbfClass::Bell, 4, &mut g);
+    }
+}

@@ -1,0 +1,91 @@
+//! Synthetic ECG-like beat trains — the domain cuDTW++ (Schmidt & Hundt
+//! 2020) evaluates on.  Not a physiological model: a train of stylized
+//! PQRST-ish beats with jittered rate/amplitude plus baseline wander and
+//! noise, which is what subsequence search needs (quasi-periodic sharp
+//! features embedded in drift).
+
+use crate::util::rng::Xoshiro256;
+
+/// One stylized beat sampled at `len` points: small P bump, sharp QRS
+/// spike, medium T bump.
+fn beat(len: usize, amp: f64, out: &mut Vec<f32>) {
+    for k in 0..len {
+        let t = k as f64 / len as f64; // 0..1 across the beat
+        let p = 0.15 * gauss(t, 0.18, 0.025);
+        let q = -0.12 * gauss(t, 0.38, 0.008);
+        let r = 1.00 * gauss(t, 0.42, 0.010);
+        let s = -0.18 * gauss(t, 0.46, 0.009);
+        let tw = 0.35 * gauss(t, 0.70, 0.040);
+        out.push((amp * (p + q + r + s + tw)) as f32);
+    }
+}
+
+#[inline]
+fn gauss(t: f64, mu: f64, var: f64) -> f64 {
+    let d = t - mu;
+    (-d * d / (2.0 * var)).exp()
+}
+
+/// ECG-like series of length `n`: beats of jittered length/amplitude,
+/// slow baseline wander, and measurement noise.
+pub fn ecg_series(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n + 64);
+    let base_beat = 48usize;
+    while out.len() < n {
+        let jitter = 1.0 + 0.15 * rng.normal();
+        let len = ((base_beat as f64 * jitter) as usize).clamp(24, 96);
+        let amp = 5.0 * (1.0 + 0.1 * rng.normal());
+        beat(len, amp, &mut out);
+    }
+    out.truncate(n);
+    // baseline wander + noise
+    let mut phase = rng.uniform(0.0, std::f64::consts::TAU);
+    let wander_freq = rng.uniform(0.001, 0.004);
+    for (t, v) in out.iter_mut().enumerate() {
+        let wander = 0.6 * (phase + wander_freq * t as f64).sin();
+        *v += (wander + 0.08 * rng.normal()) as f32;
+        phase += 0.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_and_determinism() {
+        let mut g1 = Xoshiro256::new(70);
+        let mut g2 = Xoshiro256::new(70);
+        let a = ecg_series(512, &mut g1);
+        assert_eq!(a.len(), 512);
+        assert_eq!(a, ecg_series(512, &mut g2));
+    }
+
+    #[test]
+    fn has_sharp_r_peaks() {
+        let mut g = Xoshiro256::new(71);
+        let s = ecg_series(1024, &mut g);
+        let max = s.iter().cloned().fold(f32::MIN, f32::max);
+        let mean = s.iter().sum::<f32>() / s.len() as f32;
+        let peaks = s.iter().filter(|&&x| x > mean + 0.6 * (max - mean)).count();
+        assert!(peaks >= 8, "beat train should have many R peaks, got {peaks}");
+        assert!(peaks < s.len() / 8, "peaks are sparse features");
+    }
+
+    #[test]
+    fn quasi_periodic_self_similarity() {
+        // a beat-sized window should recur: sDTW of one beat against the
+        // rest of the series is much cheaper than a random query
+        use crate::dtw::{sdtw, Dist};
+        use crate::normalize::znormed;
+        let mut g = Xoshiro256::new(72);
+        let s = ecg_series(1024, &mut g);
+        let q = znormed(&s[100..148]);
+        let rest = znormed(&s[256..]);
+        let hit = sdtw(&q, &rest, Dist::Sq).cost;
+        let noise_q: Vec<f32> = znormed(&g.normal_vec_f32(48));
+        let miss = sdtw(&noise_q, &rest, Dist::Sq).cost;
+        assert!(hit < miss, "beat should match better: {hit} vs {miss}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Query embedding with time warping: extract a window of the reference,
+//! resample it at a random non-uniform rate (the "stretching across
+//! temporal space" DTW is built for, §2), add noise — producing queries
+//! with known ground-truth match windows for tests/examples.
+
+use crate::util::rng::Xoshiro256;
+
+/// Ground-truth record of where a query was taken from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Embedding {
+    /// First reference index of the source window.
+    pub start: usize,
+    /// Last reference index of the source window (inclusive).
+    pub end: usize,
+}
+
+/// Linearly resample `src` to `out_len` points (time-warp primitive).
+pub fn warp_resample(src: &[f32], out_len: usize) -> Vec<f32> {
+    assert!(src.len() >= 2 && out_len >= 2, "resample needs >= 2 points");
+    let scale = (src.len() - 1) as f64 / (out_len - 1) as f64;
+    (0..out_len)
+        .map(|i| {
+            let x = i as f64 * scale;
+            let k = (x.floor() as usize).min(src.len() - 2);
+            let frac = (x - k as f64) as f32;
+            src[k] * (1.0 - frac) + src[k + 1] * frac
+        })
+        .collect()
+}
+
+/// Extract a random window from `reference`, warp it to `qlen` samples
+/// with a random stretch factor in [0.7, 1.4], and add N(0, noise²).
+/// Returns the query and its ground-truth window.
+pub fn extract_warped(
+    reference: &[f32],
+    qlen: usize,
+    noise: f64,
+    rng: &mut Xoshiro256,
+) -> (Vec<f32>, Embedding) {
+    let stretch = rng.uniform(0.7, 1.4);
+    let src_len = ((qlen as f64 * stretch) as usize)
+        .clamp(4, reference.len().saturating_sub(1));
+    let start = rng.below((reference.len() - src_len) as u64 + 1) as usize;
+    let window = &reference[start..start + src_len];
+    let mut q = warp_resample(window, qlen);
+    for v in &mut q {
+        *v += (noise * rng.normal()) as f32;
+    }
+    (q, Embedding { start, end: start + src_len - 1 })
+}
+
+/// Overwrite a window of `reference` with a warped copy of `query`
+/// (the inverse operation: plant a known motif into a stream).
+/// Returns the planted window.
+pub fn embed_query(
+    reference: &mut [f32],
+    query: &[f32],
+    at: usize,
+    stretch: f64,
+    noise: f64,
+    rng: &mut Xoshiro256,
+) -> Embedding {
+    let out_len = ((query.len() as f64 * stretch) as usize)
+        .clamp(2, reference.len() - at);
+    let warped = warp_resample(query, out_len);
+    for (k, w) in warped.iter().enumerate() {
+        reference[at + k] = w + (noise * rng.normal()) as f32;
+    }
+    Embedding { start: at, end: at + out_len - 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::{sdtw, Dist};
+    use crate::normalize::znormed;
+
+    #[test]
+    fn resample_identity() {
+        let src = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(warp_resample(&src, 4), src.to_vec());
+    }
+
+    #[test]
+    fn resample_endpoints_preserved() {
+        let src = [5.0f32, -1.0, 2.0, 8.0, 0.0];
+        for out_len in [2, 3, 7, 20] {
+            let r = warp_resample(&src, out_len);
+            assert_eq!(r.len(), out_len);
+            assert!((r[0] - 5.0).abs() < 1e-6);
+            assert!((r[out_len - 1] - 0.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn resample_linear_is_exact() {
+        // resampling a linear ramp is exact at any rate
+        let src: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let r = warp_resample(&src, 19);
+        for (i, v) in r.iter().enumerate() {
+            assert!((v - i as f32 * 0.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn extract_warped_is_recoverable() {
+        let mut g = Xoshiro256::new(80);
+        let reference = g.normal_vec_f32(512);
+        let (q, emb) = extract_warped(&reference, 64, 0.01, &mut g);
+        assert_eq!(q.len(), 64);
+        assert!(emb.end < reference.len());
+        let m = sdtw(&znormed(&q), &znormed(&reference), Dist::Sq);
+        // the recovered end should be near the planted end
+        assert!(
+            (m.end as i64 - emb.end as i64).abs() <= 16,
+            "end {} vs planted {}",
+            m.end,
+            emb.end
+        );
+    }
+
+    #[test]
+    fn embed_overwrites_expected_window() {
+        let mut g = Xoshiro256::new(81);
+        let mut reference = vec![0f32; 256];
+        let query: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let emb = embed_query(&mut reference, &query, 100, 1.0, 0.0, &mut g);
+        assert_eq!(emb, Embedding { start: 100, end: 131 });
+        assert!(reference[..100].iter().all(|&x| x == 0.0));
+        assert!(reference[132..].iter().all(|&x| x == 0.0));
+        assert!(reference[100..132].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn stretch_clamps_at_reference_end() {
+        let mut g = Xoshiro256::new(82);
+        let mut reference = vec![0f32; 64];
+        let query = vec![1f32; 32];
+        let emb = embed_query(&mut reference, &query, 48, 2.0, 0.0, &mut g);
+        assert!(emb.end < 64);
+    }
+}

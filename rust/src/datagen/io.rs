@@ -1,0 +1,162 @@
+//! Tiny binary dataset format for passing workloads between CLI tools:
+//!
+//!   magic "SDTW" | version u32 | qlen u32 | batch u32 | reflen u32
+//!   | queries f32[batch*qlen] | reference f32[reflen]
+//!   | truth entries: batch × (flag u8, start u32, end u32)
+//!
+//! All little-endian.  No compression — datasets are scratch files.
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::{Dataset, Embedding};
+
+const MAGIC: &[u8; 4] = b"SDTW";
+const VERSION: u32 = 1;
+
+pub fn write_dataset(ds: &Dataset, path: &Path) -> io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(ds.qlen as u32).to_le_bytes())?;
+    f.write_all(&(ds.batch() as u32).to_le_bytes())?;
+    f.write_all(&(ds.reference.len() as u32).to_le_bytes())?;
+    for &x in &ds.queries {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    for &x in &ds.reference {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    for t in &ds.truth {
+        match t {
+            Some(e) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(e.start as u32).to_le_bytes())?;
+                f.write_all(&(e.end as u32).to_le_bytes())?;
+            }
+            None => {
+                f.write_all(&[0u8])?;
+                f.write_all(&0u32.to_le_bytes())?;
+                f.write_all(&0u32.to_le_bytes())?;
+            }
+        }
+    }
+    f.flush()
+}
+
+pub fn read_dataset(path: &Path) -> io::Result<Dataset> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported version {version}"),
+        ));
+    }
+    let qlen = read_u32(&mut f)? as usize;
+    let batch = read_u32(&mut f)? as usize;
+    let reflen = read_u32(&mut f)? as usize;
+    // sanity cap: refuse absurd headers rather than OOM
+    let total = batch
+        .checked_mul(qlen)
+        .and_then(|q| q.checked_add(reflen))
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "overflow"))?;
+    if total > 1 << 30 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "dataset too large"));
+    }
+    let queries = read_f32s(&mut f, batch * qlen)?;
+    let reference = read_f32s(&mut f, reflen)?;
+    let mut truth = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let mut flag = [0u8; 1];
+        f.read_exact(&mut flag)?;
+        let start = read_u32(&mut f)? as usize;
+        let end = read_u32(&mut f)? as usize;
+        truth.push(if flag[0] == 1 {
+            Some(Embedding { start, end })
+        } else {
+            None
+        });
+    }
+    Ok(Dataset { queries, qlen, reference, truth })
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> io::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenConfig};
+
+    #[test]
+    fn roundtrip() {
+        let ds = generate(&GenConfig { batch: 4, qlen: 16, reflen: 64, ..Default::default() });
+        let dir = std::env::temp_dir().join("sdtw_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.sdtw");
+        write_dataset(&ds, &path).unwrap();
+        let back = read_dataset(&path).unwrap();
+        assert_eq!(back.queries, ds.queries);
+        assert_eq!(back.reference, ds.reference);
+        assert_eq!(back.qlen, ds.qlen);
+        assert_eq!(back.truth, ds.truth);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sdtw_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_magic.sdtw");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_dataset(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let ds = generate(&GenConfig { batch: 2, qlen: 8, reflen: 32, ..Default::default() });
+        let dir = std::env::temp_dir().join("sdtw_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.sdtw");
+        write_dataset(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(read_dataset(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_absurd_header() {
+        let dir = std::env::temp_dir().join("sdtw_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("absurd.sdtw");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SDTW");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // qlen
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // batch
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // reflen
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_dataset(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

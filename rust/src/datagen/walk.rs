@@ -1,0 +1,71 @@
+//! Gaussian random walk series — the "financial time series" workload of
+//! paper §2 (identification of economic trends).  Drift/volatility are
+//! parameters so benches can shape trend-y vs noisy references.
+
+use crate::util::rng::Xoshiro256;
+
+/// Random walk: x_{t+1} = x_t + drift + vol·N(0,1), x_0 = 0.
+pub fn random_walk(n: usize, drift: f64, vol: f64, rng: &mut Xoshiro256) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    let mut x = 0f64;
+    for _ in 0..n {
+        out.push(x as f32);
+        x += drift + vol * rng.normal();
+    }
+    out
+}
+
+/// Ornstein–Uhlenbeck (mean-reverting) walk: used as a decoy family in
+/// the motif-search example (same marginal scale, different dynamics).
+pub fn ou_walk(n: usize, theta: f64, vol: f64, rng: &mut Xoshiro256) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    let mut x = 0f64;
+    for _ in 0..n {
+        out.push(x as f32);
+        x += -theta * x + vol * rng.normal();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_and_start() {
+        let mut g = Xoshiro256::new(60);
+        let w = random_walk(100, 0.0, 1.0, &mut g);
+        assert_eq!(w.len(), 100);
+        assert_eq!(w[0], 0.0);
+    }
+
+    #[test]
+    fn drift_shows_in_mean_slope() {
+        let mut g = Xoshiro256::new(61);
+        let w = random_walk(2000, 0.5, 0.1, &mut g);
+        assert!(w[1999] > 900.0, "drift 0.5 over 2000 steps ≈ +1000");
+    }
+
+    #[test]
+    fn zero_vol_is_deterministic_ramp() {
+        let mut g = Xoshiro256::new(62);
+        let w = random_walk(5, 2.0, 0.0, &mut g);
+        assert_eq!(w, vec![0.0, 2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn ou_reverts_to_mean() {
+        let mut g = Xoshiro256::new(63);
+        let w = ou_walk(5000, 0.2, 1.0, &mut g);
+        let tail_mean: f64 =
+            w[1000..].iter().map(|&x| x as f64).sum::<f64>() / 4000.0;
+        assert!(tail_mean.abs() < 1.0, "OU stays near 0, got {tail_mean}");
+        // variance stays bounded (vs a free walk which diffuses)
+        let var: f64 = w[1000..]
+            .iter()
+            .map(|&x| (x as f64 - tail_mean).powi(2))
+            .sum::<f64>()
+            / 4000.0;
+        assert!(var < 10.0, "bounded variance, got {var}");
+    }
+}

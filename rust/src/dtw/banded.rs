@@ -1,0 +1,130 @@
+//! Banded (Sakoe-Chiba) subsequence DTW — the constrained-DTW lineage the
+//! paper cites via Hundt et al. (2014).  The band bounds how far the warp
+//! path may deviate from the diagonal of its own match window, trading
+//! accuracy for an O(M·band) work bound per start column.
+//!
+//! For subsequence search the band is anchored per candidate start: we
+//! run a banded global DTW of the query against `r[s..]` for every s.
+//! This oracle is exact w.r.t. that definition (mirrors
+//! `ref.sdtw_banded_ref`) and is O(N·M·band) — fine for its role as an
+//! ablation baseline on scaled shapes.
+
+use super::{Dist, Match};
+
+/// Banded sDTW: Sakoe-Chiba half-width `band` anchored at each start.
+pub fn sdtw_banded(query: &[f32], reference: &[f32], band: usize, dist: Dist) -> Match {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!reference.is_empty(), "empty reference");
+    let m = query.len();
+    let n = reference.len();
+    let mut best = Match { cost: f32::INFINITY, end: 0 };
+
+    let mut prev = vec![f32::INFINITY; m + band + 1];
+    let mut cur = vec![f32::INFINITY; m + band + 1];
+
+    for s in 0..n {
+        let width = (n - s).min(m + band);
+        if width == 0 {
+            continue;
+        }
+        prev.iter_mut().for_each(|x| *x = f32::INFINITY);
+        cur.iter_mut().for_each(|x| *x = f32::INFINITY);
+
+        // row 0 within this window: monotone run along the band
+        let hi0 = width.min(band + 1);
+        let mut acc = 0f32;
+        for j in 0..hi0 {
+            acc += dist.eval(query[0], reference[s + j]);
+            prev[j] = acc;
+        }
+        let mut full_query_fits = true;
+        for i in 1..m {
+            let lo = i.saturating_sub(band);
+            let hi = (i + band + 1).min(width);
+            if lo >= hi {
+                // the band leaves row i no reachable column in this
+                // window: no full-query alignment starts at s
+                full_query_fits = false;
+                break;
+            }
+            cur.iter_mut().for_each(|x| *x = f32::INFINITY);
+            for j in lo..hi {
+                let c = dist.eval(query[i], reference[s + j]);
+                let mut b = prev[j]; // vertical
+                if j > 0 {
+                    b = b.min(cur[j - 1]).min(prev[j - 1]);
+                }
+                cur[j] = b + c;
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        if !full_query_fits {
+            continue;
+        }
+        for j in 0..width {
+            let v = prev[j];
+            if v < best.cost {
+                best = Match { cost: v, end: s + j };
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::subsequence::sdtw;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn wide_band_equals_unbanded() {
+        let mut g = Xoshiro256::new(14);
+        for _ in 0..10 {
+            let q = g.normal_vec_f32(5);
+            let r = g.normal_vec_f32(14);
+            let want = sdtw(&q, &r, Dist::Sq);
+            let got = sdtw_banded(&q, &r, 32, Dist::Sq);
+            assert!((got.cost - want.cost).abs() < 1e-5);
+            assert_eq!(got.end, want.end);
+        }
+    }
+
+    #[test]
+    fn banded_upper_bounds_unbanded() {
+        let mut g = Xoshiro256::new(15);
+        for _ in 0..20 {
+            let q = g.normal_vec_f32(6);
+            let r = g.normal_vec_f32(18);
+            let full = sdtw(&q, &r, Dist::Sq).cost;
+            for band in [0, 1, 2, 4] {
+                let b = sdtw_banded(&q, &r, band, Dist::Sq).cost;
+                assert!(b >= full - 1e-5, "band={band}: {b} < {full}");
+            }
+        }
+    }
+
+    #[test]
+    fn band_zero_is_lockstep_window_search() {
+        // band 0 forces the pure diagonal: best lockstep window
+        let q = [1.0f32, 2.0, 3.0];
+        let r = [9.0f32, 1.0, 2.0, 3.0, 9.0];
+        let m = sdtw_banded(&q, &r, 0, Dist::Sq);
+        assert!(m.cost.abs() < 1e-9);
+        assert_eq!(m.end, 3);
+    }
+
+    #[test]
+    fn monotone_in_band() {
+        // widening the band can only improve (or keep) the cost
+        let mut g = Xoshiro256::new(16);
+        let q = g.normal_vec_f32(7);
+        let r = g.normal_vec_f32(25);
+        let mut prev = f32::INFINITY;
+        for band in [0, 1, 2, 3, 5, 8, 16] {
+            let c = sdtw_banded(&q, &r, band, Dist::Sq).cost;
+            assert!(c <= prev + 1e-5, "band={band}");
+            prev = c;
+        }
+    }
+}

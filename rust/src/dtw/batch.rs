@@ -1,0 +1,123 @@
+//! Multi-threaded CPU batch baseline — the comparator for the paper's
+//! GPU-vs-CPU framing ("producing these expected outputs on the CPU is a
+//! time-consuming process", §4).  One query per task, work-stealing via a
+//! shared atomic cursor over the batch; scales to all cores with zero
+//! allocation in the per-cell loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::{subsequence::sdtw, Dist, Match};
+
+/// Align every query in `queries` (each of length `qlen`, stored
+/// contiguously — the paper's "no gaps, delimiters or extra metadata"
+/// layout) against `reference`, using `threads` worker threads.
+pub fn sdtw_batch_cpu(
+    queries: &[f32],
+    qlen: usize,
+    reference: &[f32],
+    dist: Dist,
+    threads: usize,
+) -> Vec<Match> {
+    assert!(qlen > 0, "qlen must be positive");
+    assert_eq!(queries.len() % qlen, 0, "batch not a multiple of qlen");
+    let b = queries.len() / qlen;
+    let threads = threads.max(1).min(b.max(1));
+
+    let mut out = vec![Match { cost: f32::NAN, end: 0 }; b];
+    if b == 0 {
+        return out;
+    }
+    let cursor = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let cursor = &cursor;
+            let out_ptr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= b {
+                    break;
+                }
+                let q = &queries[i * qlen..(i + 1) * qlen];
+                let m = sdtw(q, reference, dist);
+                // SAFETY: each index i is claimed by exactly one thread
+                // (fetch_add), and `out` outlives the scope.
+                unsafe { *out_ptr.0.add(i) = m };
+            });
+        }
+    });
+    out
+}
+
+/// Number of logical CPUs (used as the default worker count).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: raw pointer sharing is safe here because disjoint indices are
+// written by construction (see above).
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn mk(b: usize, m: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut g = Xoshiro256::new(seed);
+        (g.normal_vec_f32(b * m), g.normal_vec_f32(n))
+    }
+
+    #[test]
+    fn matches_sequential() {
+        let (qs, r) = mk(8, 12, 64, 20);
+        let par = sdtw_batch_cpu(&qs, 12, &r, Dist::Sq, 4);
+        for (i, m) in par.iter().enumerate() {
+            let want = sdtw(&qs[i * 12..(i + 1) * 12], &r, Dist::Sq);
+            assert_eq!(*m, want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_matches_many_threads() {
+        let (qs, r) = mk(5, 8, 40, 21);
+        let a = sdtw_batch_cpu(&qs, 8, &r, Dist::Sq, 1);
+        let b = sdtw_batch_cpu(&qs, 8, &r, Dist::Sq, 16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn thread_count_capped_at_batch() {
+        let (qs, r) = mk(2, 4, 16, 22);
+        let out = sdtw_batch_cpu(&qs, 4, &r, Dist::Sq, 64);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|m| m.cost.is_finite()));
+    }
+
+    #[test]
+    fn empty_batch() {
+        let r = [1.0f32, 2.0];
+        let out = sdtw_batch_cpu(&[], 4, &r, Dist::Sq, 4);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of qlen")]
+    fn ragged_batch_panics() {
+        let r = [1.0f32];
+        sdtw_batch_cpu(&[1.0, 2.0, 3.0], 2, &r, Dist::Sq, 1);
+    }
+
+    #[test]
+    fn abs_distance() {
+        let (qs, r) = mk(3, 6, 20, 23);
+        let par = sdtw_batch_cpu(&qs, 6, &r, Dist::Abs, 2);
+        for (i, m) in par.iter().enumerate() {
+            let want = sdtw(&qs[i * 6..(i + 1) * 6], &r, Dist::Abs);
+            assert_eq!(*m, want);
+        }
+    }
+}

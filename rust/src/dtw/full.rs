@@ -1,0 +1,92 @@
+//! Classic global DTW (paper §2 background): both series aligned across
+//! their full lengths, corner-to-corner.  Included as a substrate because
+//! (a) the paper's Background defines it and the examples contrast the
+//! two, and (b) global-DTW distance is the similarity metric used by the
+//! `motif_search` example's clustering step.
+
+use super::Dist;
+
+/// Global DTW distance between `x` and `y` (corner-to-corner path).
+pub fn dtw(x: &[f32], y: &[f32], dist: Dist) -> f32 {
+    assert!(!x.is_empty() && !y.is_empty(), "empty input");
+    let n = y.len();
+    let mut prev = vec![f32::INFINITY; n];
+    let mut cur = vec![f32::INFINITY; n];
+
+    prev[0] = dist.eval(x[0], y[0]);
+    for j in 1..n {
+        prev[j] = prev[j - 1] + dist.eval(x[0], y[j]);
+    }
+    for &xi in &x[1..] {
+        cur[0] = prev[0] + dist.eval(xi, y[0]);
+        for j in 1..n {
+            let best = prev[j].min(cur[j - 1]).min(prev[j - 1]);
+            cur[j] = best + dist.eval(xi, y[j]);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n - 1]
+}
+
+/// Euclidean (lockstep) distance for equal-length series: the baseline
+/// metric the paper's Background contrasts DTW against.
+pub fn euclidean_sq(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len(), "lockstep needs equal lengths");
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::subsequence::sdtw;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn identical_series_zero() {
+        let x = [1.0f32, 2.0, 3.0];
+        assert_eq!(dtw(&x, &x, Dist::Sq), 0.0);
+    }
+
+    #[test]
+    fn handles_time_stretch() {
+        let x = [0.0f32, 1.0, 2.0];
+        let y = [0.0f32, 0.0, 1.0, 1.0, 2.0, 2.0];
+        assert_eq!(dtw(&x, &y, Dist::Sq), 0.0);
+        // Euclidean on truncation would not be 0
+        assert!(euclidean_sq(&x, &y[..3]) > 0.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut g = Xoshiro256::new(5);
+        let x = g.normal_vec_f32(10);
+        let y = g.normal_vec_f32(14);
+        let a = dtw(&x, &y, Dist::Sq);
+        let b = dtw(&y, &x, Dist::Sq);
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    #[test]
+    fn subsequence_never_exceeds_global() {
+        // sDTW relaxes both endpoints, so cost(sdtw) <= cost(dtw)
+        let mut g = Xoshiro256::new(6);
+        for _ in 0..20 {
+            let q = g.normal_vec_f32(8);
+            let r = g.normal_vec_f32(20);
+            let s = sdtw(&q, &r, Dist::Sq).cost;
+            let f = dtw(&q, &r, Dist::Sq);
+            assert!(s <= f + 1e-5, "sdtw {s} > dtw {f}");
+        }
+    }
+
+    #[test]
+    fn single_elements() {
+        assert_eq!(dtw(&[2.0], &[5.0], Dist::Sq), 9.0);
+        assert_eq!(dtw(&[2.0], &[5.0], Dist::Abs), 3.0);
+    }
+
+    #[test]
+    fn euclidean_reference() {
+        assert_eq!(euclidean_sq(&[1.0, 2.0], &[3.0, 4.0]), 8.0);
+    }
+}

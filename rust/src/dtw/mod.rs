@@ -1,0 +1,81 @@
+//! CPU dynamic-time-warping substrate.
+//!
+//! This is the Rust build of the paper's "CPU-based sequential version of
+//! the algorithm ... with the strict purpose of producing the expected
+//! output of a [GPU] sDTW batch run for correctness evaluation" (§4, §6) —
+//! plus the baselines the evaluation implies:
+//!
+//! * [`full`]         — classic global DTW (background, §2)
+//! * [`subsequence`]  — the sDTW oracle: naive recurrence, free start/end
+//! * [`traceback`]    — the warp-path walk-back pass (§2)
+//! * [`banded`]       — Sakoe-Chiba constrained variant (Hundt et al. lineage)
+//! * [`pruned`]       — Discussion-§8 INF-tile early pruning
+//! * [`scan`]         — the (min,+) blocked-scan formulation the Pallas
+//!                      kernel uses, mirrored in Rust so the algorithm is
+//!                      validated independent of JAX
+//! * [`batch`]        — multi-threaded CPU batch baseline (the comparator
+//!                      for the GPU-vs-CPU framing)
+//!
+//! All functions share [`Dist`] and the conventions of
+//! `python/compile/kernels/ref.py` (bit-for-bit the same recurrence).
+
+pub mod banded;
+pub mod batch;
+pub mod full;
+pub mod pruned;
+pub mod scan;
+pub mod subsequence;
+pub mod traceback;
+
+pub use batch::sdtw_batch_cpu;
+pub use scan::sdtw_scan;
+pub use subsequence::{sdtw, sdtw_last_row, Match};
+pub use traceback::{sdtw_path, PathStep};
+
+/// Local distance measure between two samples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Dist {
+    /// Squared difference — cuDTW++/DTWax convention, the kernel default.
+    #[default]
+    Sq,
+    /// Absolute difference.
+    Abs,
+}
+
+impl Dist {
+    #[inline(always)]
+    pub fn eval(self, a: f32, b: f32) -> f32 {
+        let d = a - b;
+        match self {
+            Dist::Sq => d * d,
+            Dist::Abs => d.abs(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dist> {
+        match s {
+            "sq" => Some(Dist::Sq),
+            "abs" => Some(Dist::Abs),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_eval() {
+        assert_eq!(Dist::Sq.eval(3.0, 1.0), 4.0);
+        assert_eq!(Dist::Abs.eval(3.0, 1.0), 2.0);
+        assert_eq!(Dist::Sq.eval(1.0, 3.0), 4.0);
+    }
+
+    #[test]
+    fn dist_parse() {
+        assert_eq!(Dist::from_name("sq"), Some(Dist::Sq));
+        assert_eq!(Dist::from_name("abs"), Some(Dist::Abs));
+        assert_eq!(Dist::from_name("l2"), None);
+    }
+}

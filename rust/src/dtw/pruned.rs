@@ -1,0 +1,146 @@
+//! Early-pruning sDTW (paper Discussion §8): local distances above a
+//! threshold become +inf "INF tiles" that the warp path can never cross,
+//! skipping downstream work.  On the CPU baseline the win is explicit: we
+//! also count the cells whose full cost computation was skipped, which is
+//! the quantity the ablation bench reports alongside timing.
+
+use super::{subsequence::best_of_row, Dist, Match};
+
+/// Result of a pruned alignment plus pruning effectiveness counters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrunedMatch {
+    /// `cost` is +inf when every bottom-row cell was pruned (no match
+    /// under the threshold); `end` is 0 in that case.
+    pub cost: f32,
+    pub end: usize,
+    /// Cells whose local distance exceeded the threshold.
+    pub pruned_cells: u64,
+    /// Total cells (M*N).
+    pub total_cells: u64,
+}
+
+impl PrunedMatch {
+    pub fn as_match(&self) -> Match {
+        Match { cost: self.cost, end: self.end }
+    }
+
+    /// Fraction of cells pruned, in [0, 1].
+    pub fn pruned_fraction(&self) -> f64 {
+        if self.total_cells == 0 {
+            0.0
+        } else {
+            self.pruned_cells as f64 / self.total_cells as f64
+        }
+    }
+}
+
+/// sDTW with INF-tile pruning at `threshold` on the local distance.
+pub fn sdtw_pruned(
+    query: &[f32],
+    reference: &[f32],
+    threshold: f32,
+    dist: Dist,
+) -> PrunedMatch {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!reference.is_empty(), "empty reference");
+    let n = reference.len();
+    let mut prev = vec![0f32; n];
+    let mut cur = vec![0f32; n];
+    let mut pruned: u64 = 0;
+
+    let mut cell = |a: f32, b: f32| -> f32 {
+        let c = dist.eval(a, b);
+        if c > threshold {
+            pruned += 1;
+            f32::INFINITY
+        } else {
+            c
+        }
+    };
+
+    let q0 = query[0];
+    for (j, p) in prev.iter_mut().enumerate() {
+        *p = cell(q0, reference[j]);
+    }
+    for &qi in &query[1..] {
+        cur[0] = prev[0] + cell(qi, reference[0]);
+        for j in 1..n {
+            let best = prev[j].min(cur[j - 1]).min(prev[j - 1]);
+            // min-plus with inf: an INF tile poisons this cell entirely
+            cur[j] = best + cell(qi, reference[j]);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    let m = best_of_row(&prev);
+    PrunedMatch {
+        cost: m.cost,
+        end: if m.cost.is_finite() { m.end } else { 0 },
+        pruned_cells: pruned,
+        total_cells: (query.len() * n) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::subsequence::sdtw;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn loose_threshold_equals_exact() {
+        let mut g = Xoshiro256::new(11);
+        let q = g.normal_vec_f32(8);
+        let r = g.normal_vec_f32(40);
+        let exact = sdtw(&q, &r, Dist::Sq);
+        let pruned = sdtw_pruned(&q, &r, 1e9, Dist::Sq);
+        assert_eq!(pruned.as_match(), exact);
+        assert_eq!(pruned.pruned_cells, 0);
+    }
+
+    #[test]
+    fn pruned_upper_bounds_exact() {
+        let mut g = Xoshiro256::new(12);
+        for _ in 0..20 {
+            let q = g.normal_vec_f32(6);
+            let r = g.normal_vec_f32(30);
+            let exact = sdtw(&q, &r, Dist::Sq).cost;
+            let p = sdtw_pruned(&q, &r, 0.5, Dist::Sq);
+            assert!(p.cost >= exact - 1e-5, "{} < {}", p.cost, exact);
+        }
+    }
+
+    #[test]
+    fn tight_threshold_prunes_everything() {
+        let q = [0.0f32, 0.0];
+        let r = [10.0f32, 10.0, 10.0];
+        let p = sdtw_pruned(&q, &r, 1.0, Dist::Sq);
+        assert!(p.cost.is_infinite());
+        assert_eq!(p.pruned_cells, 6);
+        assert!((p.pruned_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn embedded_match_survives_pruning() {
+        // pruning must not disturb a genuine (near-zero-cost) match
+        let mut g = Xoshiro256::new(13);
+        let q = g.normal_vec_f32(12);
+        let mut r: Vec<f32> = (0..30).map(|_| g.normal() as f32 + 8.0).collect();
+        r.extend_from_slice(&q);
+        r.extend((0..20).map(|_| g.normal() as f32 + 8.0));
+        let exact = sdtw(&q, &r, Dist::Sq);
+        let p = sdtw_pruned(&q, &r, 4.0, Dist::Sq);
+        assert!((p.cost - exact.cost).abs() < 1e-5);
+        assert_eq!(p.end, exact.end);
+        assert!(p.pruned_cells > 0, "far-away region should prune");
+    }
+
+    #[test]
+    fn counters_consistent() {
+        let q = [0.0f32; 4];
+        let r = [0.0f32; 9];
+        let p = sdtw_pruned(&q, &r, 1.0, Dist::Sq);
+        assert_eq!(p.total_cells, 36);
+        assert_eq!(p.pruned_cells, 0);
+        assert_eq!(p.cost, 0.0);
+    }
+}

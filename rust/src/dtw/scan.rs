@@ -1,0 +1,166 @@
+//! The (min,+) blocked-scan formulation of the sDTW row update — the Rust
+//! mirror of the Pallas kernel's algorithm (see `kernels/sdtw.py` and
+//! DESIGN.md §1), so the core algebraic idea is validated in two
+//! independent implementations.
+//!
+//! Row update: with c_j the local costs and row_prev the previous row,
+//!   a_j = min(row_prev[j], row_prev[j-1]) + c_j      (vert/diag)
+//!   D_j = min(a_j, c_j + D_{j-1}),  D_{-1} = +inf    (horizontal)
+//! The horizontal recurrence is first-order linear over the (min,+)
+//! semiring, so the solution as a function of the incoming carry X is
+//!   D_j(X) = min(D_j(inf), prefix_cost_j + X)
+//! which lets each width-W segment be scanned locally (carry-in = inf)
+//! and the true carries propagated in one short sequential pass — the
+//! paper's thread-coarsening structure with `__shfl_up` replaced by
+//! algebra.
+
+use super::{subsequence::best_of_row, Dist, Match};
+
+/// sDTW via the blocked scan with the given segment width.
+/// Produces identical results to [`super::sdtw`] for every width >= 1.
+pub fn sdtw_scan(query: &[f32], reference: &[f32], width: usize, dist: Dist) -> Match {
+    let last = sdtw_scan_last_row(query, reference, width, dist);
+    best_of_row(&last[..reference.len()])
+}
+
+/// Bottom row of the DP computed via the blocked scan (padded columns
+/// stripped).  Exposed for tests that compare full rows.
+pub fn sdtw_scan_last_row(
+    query: &[f32],
+    reference: &[f32],
+    width: usize,
+    dist: Dist,
+) -> Vec<f32> {
+    assert!(width >= 1, "segment width must be >= 1");
+    assert!(!query.is_empty(), "empty query");
+    assert!(!reference.is_empty(), "empty reference");
+    let n = reference.len();
+    let n_pad = n.div_ceil(width) * width;
+    let segs = n_pad / width;
+
+    // local cost vector for row i, padded with +inf sentinels
+    let costs = |qi: f32, out: &mut Vec<f32>| {
+        out.clear();
+        out.extend(reference.iter().map(|&r| dist.eval(qi, r)));
+        out.resize(n_pad, f32::INFINITY);
+    };
+
+    let mut c = Vec::with_capacity(n_pad);
+    let mut row = Vec::with_capacity(n_pad);
+    let mut a = vec![0f32; n_pad];
+    let mut local = vec![0f32; n_pad];
+    let mut pref = vec![0f32; n_pad];
+
+    // row 0: free start
+    costs(query[0], &mut row);
+
+    for &qi in &query[1..] {
+        costs(qi, &mut c);
+        // vertical/diagonal candidates
+        a[0] = row[0] + c[0]; // diag at j=0 is +inf
+        for j in 1..n_pad {
+            a[j] = row[j].min(row[j - 1]) + c[j];
+        }
+        // pass 1: local scans per segment (carry-in = inf) + prefix costs
+        for s in 0..segs {
+            let base = s * width;
+            let mut d = f32::INFINITY;
+            let mut p = 0f32;
+            for k in 0..width {
+                let j = base + k;
+                d = a[j].min(c[j] + d);
+                p += c[j];
+                local[j] = d;
+                pref[j] = p;
+            }
+        }
+        // pass 2: sequential carry propagation across segments
+        // pass 3: apply carry within each segment
+        let mut carry = f32::INFINITY;
+        for s in 0..segs {
+            let base = s * width;
+            for k in 0..width {
+                let j = base + k;
+                row[j] = local[j].min(pref[j] + carry);
+            }
+            let end = base + width - 1;
+            carry = local[end].min(pref[end] + carry);
+        }
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::subsequence::{sdtw, sdtw_last_row};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn matches_naive_for_many_widths() {
+        let mut g = Xoshiro256::new(7);
+        let q = g.normal_vec_f32(10);
+        let r = g.normal_vec_f32(37);
+        let want = sdtw(&q, &r, Dist::Sq);
+        for w in [1, 2, 3, 5, 14, 16, 33, 37, 64] {
+            let got = sdtw_scan(&q, &r, w, Dist::Sq);
+            assert!(
+                (got.cost - want.cost).abs() < 1e-4,
+                "w={w}: {} vs {}",
+                got.cost,
+                want.cost
+            );
+            assert_eq!(got.end, want.end, "w={w}");
+        }
+    }
+
+    #[test]
+    fn full_row_matches_naive() {
+        let mut g = Xoshiro256::new(8);
+        let q = g.normal_vec_f32(6);
+        let r = g.normal_vec_f32(20);
+        let want = sdtw_last_row(&q, &r, Dist::Sq);
+        for w in [1, 4, 7, 20, 32] {
+            let got = sdtw_scan_last_row(&q, &r, w, Dist::Sq);
+            for (j, (a, b)) in got[..20].iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-4, "w={w} j={j}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_shapes_and_widths() {
+        let mut g = Xoshiro256::new(9);
+        for trial in 0..50 {
+            let m = 2 + (g.below(12) as usize);
+            let n = 2 + (g.below(48) as usize);
+            let w = 1 + (g.below(50) as usize);
+            let q = g.normal_vec_f32(m);
+            let r = g.normal_vec_f32(n);
+            let want = sdtw(&q, &r, Dist::Sq);
+            let got = sdtw_scan(&q, &r, w, Dist::Sq);
+            assert!(
+                (got.cost - want.cost).abs() < 1e-4,
+                "trial {trial} m={m} n={n} w={w}"
+            );
+            assert_eq!(got.end, want.end, "trial {trial} m={m} n={n} w={w}");
+        }
+    }
+
+    #[test]
+    fn abs_distance_supported() {
+        let mut g = Xoshiro256::new(10);
+        let q = g.normal_vec_f32(5);
+        let r = g.normal_vec_f32(17);
+        let want = sdtw(&q, &r, Dist::Abs);
+        let got = sdtw_scan(&q, &r, 4, Dist::Abs);
+        assert!((got.cost - want.cost).abs() < 1e-4);
+        assert_eq!(got.end, want.end);
+    }
+
+    #[test]
+    #[should_panic(expected = "segment width")]
+    fn zero_width_panics() {
+        sdtw_scan(&[1.0], &[1.0], 0, Dist::Sq);
+    }
+}

@@ -1,0 +1,146 @@
+//! The sDTW oracle: naive cell-by-cell recurrence (paper eq. 1).
+//!
+//! Semantics (identical to `ref.py` and the Pallas kernel):
+//!   D(0,j) = d(q0, rj)                    — free start
+//!   D(i,0) = D(i-1,0) + d(qi, r0)
+//!   D(i,j) = min(D(i-1,j), D(i,j-1), D(i-1,j-1)) + d(qi, rj)
+//!   answer = min over the bottom row (free end) + its argmin.
+//!
+//! Uses two rolling rows (O(N) memory) — this is also the single-threaded
+//! CPU baseline that `batch.rs` parallelizes.
+
+use super::Dist;
+
+/// Result of one subsequence alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Match {
+    /// Accumulated cost of the optimal alignment.
+    pub cost: f32,
+    /// Match END position: reference index aligned with the last query
+    /// element (argmin of the bottom row).
+    pub end: usize,
+}
+
+/// Align `query` against `reference`, returning the best match.
+///
+/// Panics on empty inputs (a zero-length query/reference has no defined
+/// alignment; the coordinator validates requests before dispatch).
+pub fn sdtw(query: &[f32], reference: &[f32], dist: Dist) -> Match {
+    let last = sdtw_last_row(query, reference, dist);
+    best_of_row(&last)
+}
+
+/// The full bottom row D(M-1, ·) — used by tests and by the streaming
+/// min-extraction checks against the kernel.
+pub fn sdtw_last_row(query: &[f32], reference: &[f32], dist: Dist) -> Vec<f32> {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!reference.is_empty(), "empty reference");
+    let n = reference.len();
+    let mut prev = vec![0f32; n];
+    let mut cur = vec![0f32; n];
+
+    // row 0: free start
+    let q0 = query[0];
+    for (j, p) in prev.iter_mut().enumerate() {
+        *p = dist.eval(q0, reference[j]);
+    }
+    for &qi in &query[1..] {
+        cur[0] = prev[0] + dist.eval(qi, reference[0]);
+        for j in 1..n {
+            let best = prev[j].min(cur[j - 1]).min(prev[j - 1]);
+            cur[j] = best + dist.eval(qi, reference[j]);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev
+}
+
+/// (min, argmin) over a bottom row.
+pub fn best_of_row(row: &[f32]) -> Match {
+    let mut best = f32::INFINITY;
+    let mut pos = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v < best {
+            best = v;
+            pos = j;
+        }
+    }
+    Match { cost: best, end: pos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn known_matrix() {
+        // mirrors python/tests/test_sdtw.py::TestOracle::test_known_matrix
+        let q = [0.0f32, 1.0];
+        let r = [2.0f32, 0.0, 1.0];
+        let last = sdtw_last_row(&q, &r, Dist::Sq);
+        assert_eq!(last, vec![5.0, 1.0, 0.0]);
+        let m = sdtw(&q, &r, Dist::Sq);
+        assert_eq!(m, Match { cost: 0.0, end: 2 });
+    }
+
+    #[test]
+    fn single_cell() {
+        let m = sdtw(&[1.0], &[1.0, 4.0], Dist::Sq);
+        assert_eq!(m, Match { cost: 0.0, end: 0 });
+    }
+
+    #[test]
+    fn embedded_query_has_zero_cost() {
+        let mut g = Xoshiro256::new(3);
+        let q = g.normal_vec_f32(16);
+        let mut r: Vec<f32> = (0..40).map(|_| g.normal() as f32 + 6.0).collect();
+        r.extend_from_slice(&q);
+        r.extend((0..30).map(|_| g.normal() as f32 + 6.0));
+        let m = sdtw(&q, &r, Dist::Sq);
+        assert!(m.cost.abs() < 1e-5, "cost {}", m.cost);
+        assert_eq!(m.end, 40 + 16 - 1);
+    }
+
+    #[test]
+    fn free_start_beats_global() {
+        // a query matching the END of the reference should still cost ~0
+        let q = [5.0f32, 6.0, 7.0];
+        let r = [0.0f32, 0.0, 0.0, 5.0, 6.0, 7.0];
+        let m = sdtw(&q, &r, Dist::Sq);
+        assert!(m.cost.abs() < 1e-9);
+        assert_eq!(m.end, 5);
+    }
+
+    #[test]
+    fn cost_nonnegative_and_monotone_in_query_len() {
+        let mut g = Xoshiro256::new(4);
+        let r = g.normal_vec_f32(64);
+        let q = g.normal_vec_f32(12);
+        let mut prev_cost = 0.0f32;
+        for m in 1..=q.len() {
+            let got = sdtw(&q[..m], &r, Dist::Sq);
+            assert!(got.cost >= 0.0);
+            // adding query rows can only add cost (each row adds >= 0)
+            assert!(got.cost >= prev_cost - 1e-5);
+            prev_cost = got.cost;
+        }
+    }
+
+    #[test]
+    fn warp_invariance_example() {
+        // DTW's raison d'être: a time-stretched copy still matches cheaply
+        let q = [0.0f32, 1.0, 2.0, 3.0];
+        let r = [9.0f32, 0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 9.0];
+        let m = sdtw(&q, &r, Dist::Sq);
+        assert!(m.cost.abs() < 1e-9, "stretched copy should be free");
+        // Euclidean (lockstep) on any window would pay: the contrast the
+        // paper's Background section draws
+    }
+
+    #[test]
+    #[should_panic(expected = "empty query")]
+    fn empty_query_panics() {
+        sdtw(&[], &[1.0], Dist::Sq);
+    }
+}

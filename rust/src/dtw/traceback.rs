@@ -1,0 +1,142 @@
+//! Warp-path traceback (paper §2: "the optimal warp path is found by
+//! walking back from the minimum valued tile in the last row").
+//!
+//! Needs the full O(M·N) matrix, so it is offered CPU-side only (the GPU
+//! kernel, like the paper's, returns cost + end position; callers who
+//! need the path re-run the matched window here — the window is M+ε wide,
+//! so this is cheap).
+
+use super::Dist;
+
+/// One step of the warp path: (query index, reference index).
+pub type PathStep = (usize, usize);
+
+/// Full DP matrix in row-major order (oracle/debug use).
+pub fn sdtw_full_matrix(query: &[f32], reference: &[f32], dist: Dist) -> Vec<f32> {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!reference.is_empty(), "empty reference");
+    let m = query.len();
+    let n = reference.len();
+    let mut d = vec![0f32; m * n];
+    for j in 0..n {
+        d[j] = dist.eval(query[0], reference[j]);
+    }
+    for i in 1..m {
+        d[i * n] = d[(i - 1) * n] + dist.eval(query[i], reference[0]);
+        for j in 1..n {
+            let best = d[(i - 1) * n + j]
+                .min(d[i * n + j - 1])
+                .min(d[(i - 1) * n + j - 1]);
+            d[i * n + j] = best + dist.eval(query[i], reference[j]);
+        }
+    }
+    d
+}
+
+/// (cost, path) of the optimal subsequence alignment; the path runs from
+/// the match start (row 0) to the match end (row M-1), inclusive.
+pub fn sdtw_path(query: &[f32], reference: &[f32], dist: Dist) -> (f32, Vec<PathStep>) {
+    let m = query.len();
+    let n = reference.len();
+    let d = sdtw_full_matrix(query, reference, dist);
+
+    // argmin of the bottom row
+    let mut j = 0usize;
+    let mut best = f32::INFINITY;
+    for (jj, &v) in d[(m - 1) * n..].iter().enumerate() {
+        if v < best {
+            best = v;
+            j = jj;
+        }
+    }
+    let mut i = m - 1;
+    let mut path = vec![(i, j)];
+    while i > 0 {
+        let mut cand = (d[(i - 1) * n + j], i - 1, j); // vertical
+        if j > 0 {
+            let h = d[i * n + j - 1];
+            if h < cand.0 {
+                cand = (h, i, j - 1);
+            }
+            let dg = d[(i - 1) * n + j - 1];
+            if dg <= cand.0 {
+                cand = (dg, i - 1, j - 1); // prefer diagonal on ties
+            }
+        }
+        i = cand.1;
+        j = cand.2;
+        path.push((i, j));
+    }
+    path.reverse();
+    (best, path)
+}
+
+/// The reference window [start, end] covered by a path.
+pub fn path_window(path: &[PathStep]) -> (usize, usize) {
+    let start = path.first().map(|&(_, j)| j).unwrap_or(0);
+    let end = path.last().map(|&(_, j)| j).unwrap_or(0);
+    (start, end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::subsequence::sdtw;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn path_is_connected_and_monotone() {
+        let mut g = Xoshiro256::new(17);
+        let q = g.normal_vec_f32(6);
+        let r = g.normal_vec_f32(20);
+        let (cost, path) = sdtw_path(&q, &r, Dist::Sq);
+        assert_eq!(path[0].0, 0, "path starts at query row 0");
+        assert_eq!(path.last().unwrap().0, q.len() - 1);
+        for w in path.windows(2) {
+            let (i0, j0) = w[0];
+            let (i1, j1) = w[1];
+            assert!(
+                (i1 == i0 + 1 && j1 == j0)
+                    || (i1 == i0 && j1 == j0 + 1)
+                    || (i1 == i0 + 1 && j1 == j0 + 1),
+                "illegal step {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // cost agrees with the rolling-row oracle
+        let m = sdtw(&q, &r, Dist::Sq);
+        assert!((cost - m.cost).abs() < 1e-5);
+        assert_eq!(path.last().unwrap().1, m.end);
+    }
+
+    #[test]
+    fn path_cost_sums_to_reported_cost() {
+        let mut g = Xoshiro256::new(18);
+        let q = g.normal_vec_f32(5);
+        let r = g.normal_vec_f32(15);
+        let (cost, path) = sdtw_path(&q, &r, Dist::Sq);
+        let sum: f32 = path.iter().map(|&(i, j)| Dist::Sq.eval(q[i], r[j])).sum();
+        assert!((sum - cost).abs() < 1e-4, "path sum {sum} vs cost {cost}");
+    }
+
+    #[test]
+    fn embedded_query_window_recovered() {
+        let mut g = Xoshiro256::new(19);
+        let q = g.normal_vec_f32(10);
+        let mut r: Vec<f32> = (0..25).map(|_| g.normal() as f32 + 7.0).collect();
+        r.extend_from_slice(&q);
+        r.extend((0..15).map(|_| g.normal() as f32 + 7.0));
+        let (cost, path) = sdtw_path(&q, &r, Dist::Sq);
+        assert!(cost.abs() < 1e-5);
+        let (start, end) = path_window(&path);
+        assert_eq!(start, 25);
+        assert_eq!(end, 25 + 10 - 1);
+    }
+
+    #[test]
+    fn full_matrix_matches_known() {
+        let d = sdtw_full_matrix(&[0.0, 1.0], &[2.0, 0.0, 1.0], Dist::Sq);
+        assert_eq!(d, vec![4.0, 0.0, 1.0, 5.0, 1.0, 0.0]);
+    }
+}

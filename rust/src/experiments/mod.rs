@@ -1,0 +1,209 @@
+//! Shared experiment drivers: the code that regenerates the paper's
+//! tables/figures, used by the bench binaries, the examples, and the CLI
+//! (`sdtw sweep`).  Each function returns a printable
+//! [`crate::bench_harness::Table`] so every caller reports identical rows.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench_harness::Table;
+use crate::normalize;
+use crate::runtime::artifact::{Kind, Manifest, VariantMeta};
+use crate::runtime::{Engine, EngineHandle, HostTensor};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::{Protocol, Summary};
+
+/// A prepared workload for a given variant shape.
+pub struct Workload {
+    pub queries_raw: Vec<f32>,
+    pub queries_norm: Vec<f32>,
+    pub reference_norm: Vec<f32>,
+    pub b: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl Workload {
+    /// Deterministic normal workload matching the variant's shape.
+    pub fn for_variant(meta: &VariantMeta, seed: u64) -> Workload {
+        let b = meta.batch;
+        let m = meta.qlen;
+        let n = meta.reflen.unwrap_or(0);
+        let mut rng = Xoshiro256::new(seed);
+        let queries_raw: Vec<f32> = (0..b * m)
+            .map(|_| rng.normal_ms(3.0, 2.0) as f32) // off-scale: exercises znorm
+            .collect();
+        let mut queries_norm = queries_raw.clone();
+        normalize::znorm_batch(&mut queries_norm, m);
+        let reference_norm = normalize::znormed(&rng.normal_vec_f32(n.max(1)));
+        Workload { queries_raw, queries_norm, reference_norm, b, m, n }
+    }
+
+    /// Inputs for an alignment variant (normalized or raw per kind).
+    pub fn inputs_for(&self, kind: Kind) -> Vec<HostTensor> {
+        let queries = match kind {
+            Kind::Sdtw => self.queries_norm.clone(),
+            _ => self.queries_raw.clone(),
+        };
+        vec![
+            HostTensor::f32(&[self.b as i64, self.m as i64], queries).unwrap(),
+            HostTensor::f32(&[self.n as i64], self.reference_norm.clone()).unwrap(),
+        ]
+    }
+
+    pub fn floats(&self) -> u64 {
+        (self.b * self.m) as u64
+    }
+
+    pub fn cells(&self) -> u64 {
+        self.floats() * self.n as u64
+    }
+}
+
+/// Time one variant under `protocol` on a fresh engine workload.
+pub fn measure_variant(
+    handle: &EngineHandle,
+    meta: &VariantMeta,
+    workload: &Workload,
+    protocol: Protocol,
+) -> Result<Summary> {
+    handle.preload(&[meta.name.as_str()])?;
+    let kind = meta.kind;
+    let mut failed = None;
+    let summary = protocol.run(|| {
+        if let Err(e) = handle.execute(&meta.name, workload.inputs_for(kind)) {
+            failed = Some(e);
+        }
+    });
+    if let Some(e) = failed {
+        return Err(e);
+    }
+    Ok(summary)
+}
+
+/// Table 1: sDTW kernel + normalizer kernel throughput/exec time at the
+/// main scaled shape (see DESIGN.md §4 for the scale substitution).
+pub fn table1(artifacts: &Path, seed: u64, protocol: Protocol) -> Result<Table> {
+    let manifest = Manifest::load(artifacts)?;
+    let engine = Engine::start(manifest.clone())?;
+    let handle = engine.handle();
+
+    // main-shape sdtw kernel + matching normalizer, like the paper's pair
+    let sdtw = manifest.require("sdtw_b32_m256_n4096_w16")?;
+    let znorm = manifest.require("znorm_b32_m256")?;
+
+    let wl = Workload::for_variant(sdtw, seed);
+    let mut table = Table::new(
+        &format!(
+            "Table 1 — kernel performance (B={}, M={}, N={}; paper: 512×2000 vs 100k)",
+            wl.b, wl.m, wl.n
+        ),
+        &["Gsps", "ms", "std ms"],
+    );
+
+    let s = measure_variant(&handle, sdtw, &wl, protocol)?;
+    table.row(
+        "sDTW kernel",
+        vec![
+            format!("{:.6}", s.gsps(wl.floats())),
+            format!("{:.3}", s.mean_ms),
+            format!("{:.3}", s.std_ms),
+        ],
+    );
+
+    // normalizer: (B, M) raw queries only
+    handle.preload(&[znorm.name.as_str()])?;
+    let mut failed = None;
+    let zs = protocol.run(|| {
+        let input =
+            HostTensor::f32(&[wl.b as i64, wl.m as i64], wl.queries_raw.clone()).unwrap();
+        if let Err(e) = handle.execute(&znorm.name, vec![input]) {
+            failed = Some(e);
+        }
+    });
+    if let Some(e) = failed {
+        return Err(e);
+    }
+    table.row(
+        "Normalizer kernel",
+        vec![
+            format!("{:.6}", zs.gsps(wl.floats())),
+            format!("{:.4}", zs.mean_ms),
+            format!("{:.4}", zs.std_ms),
+        ],
+    );
+    Ok(table)
+}
+
+/// Figure 3: throughput as a function of segment width.
+pub fn fig3_sweep(artifacts: &Path, seed: u64, protocol: Protocol) -> Result<Table> {
+    let manifest = Manifest::load(artifacts)?;
+    let family = manifest.fig3_family();
+    anyhow::ensure!(!family.is_empty(), "no fig3 sweep variants in manifest");
+    let engine = Engine::start(manifest.clone())?;
+    let handle = engine.handle();
+
+    let wl = Workload::for_variant(family[0], seed);
+    let mut table = Table::new(
+        &format!(
+            "Figure 3 — segment width sweep (B={}, M={}, N={}; paper peak ≈ 14)",
+            wl.b, wl.m, wl.n
+        ),
+        &["width", "Gsps", "Gcells/s", "ms/batch"],
+    );
+    for meta in family {
+        let s = measure_variant(&handle, meta, &wl, protocol)?;
+        table.row(
+            &meta.name,
+            vec![
+                format!("{}", meta.segment_width.unwrap_or(0)),
+                format!("{:.6}", s.gsps(wl.floats())),
+                format!("{:.4}", s.gcups(wl.cells())),
+                format!("{:.2}", s.mean_ms),
+            ],
+        );
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_shapes_and_determinism() {
+        let meta = VariantMeta {
+            name: "t".into(),
+            kind: Kind::Sdtw,
+            file: "t.hlo.txt".into(),
+            batch: 2,
+            qlen: 8,
+            reflen: Some(32),
+            segment_width: Some(4),
+            dtype: "f32".into(),
+            prune_threshold: None,
+            quantized: false,
+            slow: false,
+            ablation: None,
+            scan_impl: None,
+        };
+        let a = Workload::for_variant(&meta, 7);
+        let b = Workload::for_variant(&meta, 7);
+        assert_eq!(a.queries_raw, b.queries_raw);
+        assert_eq!(a.reference_norm, b.reference_norm);
+        assert_eq!(a.floats(), 16);
+        assert_eq!(a.cells(), 16 * 32);
+        let inputs = a.inputs_for(Kind::Sdtw);
+        assert_eq!(inputs[0].dims, vec![2, 8]);
+        assert_eq!(inputs[1].dims, vec![32]);
+        // normalized rows have ~zero mean
+        let q = inputs[0].as_f32().unwrap();
+        let mean: f32 = q[..8].iter().sum::<f32>() / 8.0;
+        assert!(mean.abs() < 1e-4);
+        // pipeline kind gets the raw (off-scale) queries
+        let raw = a.inputs_for(Kind::Pipeline);
+        let mean_raw: f32 = raw[0].as_f32().unwrap()[..8].iter().sum::<f32>() / 8.0;
+        assert!(mean_raw.abs() > 0.5, "raw queries keep their offset");
+    }
+}

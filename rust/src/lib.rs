@@ -1,0 +1,30 @@
+//! # sdtw_repro — "Optimizing sDTW for AMD GPUs", rebuilt as a
+//! Rust + JAX + Pallas three-layer stack.
+//!
+//! Layer 1 (build time): Pallas kernels in `python/compile/kernels/`.
+//! Layer 2 (build time): JAX pipelines in `python/compile/model.py`,
+//! AOT-lowered to HLO-text artifacts by `python/compile/aot.py`.
+//! Layer 3 (this crate): the serving coordinator; loads the artifacts via
+//! PJRT ([`runtime`]) and runs them on the request path with dynamic
+//! batching ([`coordinator`]), fronted by a TCP server ([`server`]) and a
+//! CLI (`sdtw` binary).
+//!
+//! CPU substrates ([`dtw`], [`normalize`], [`quant`], [`datagen`]) provide
+//! the paper's correctness oracle, the CPU baseline, and workload
+//! generation.  See DESIGN.md for the paper↔module map and EXPERIMENTS.md
+//! for reproduction results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod dtw;
+pub mod normalize;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod testutil;
+pub mod util;
+
+pub mod bench_harness;
+pub mod experiments;

@@ -1,0 +1,319 @@
+//! `sdtw` — the launcher binary.
+//!
+//! Subcommands:
+//!   gen      generate a synthetic dataset (paper §4's generator)
+//!   align    run a dataset through the serving stack, verify vs the CPU
+//!            oracle, print metrics
+//!   serve    start the TCP server over a generated reference
+//!   sweep    regenerate the Figure-3 segment-width series
+//!   inspect  list the artifact manifest
+//!
+//! `sdtw <cmd> --help` prints per-command options.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use sdtw_repro::cli::Command;
+use sdtw_repro::config::{ConfigDoc, ServeConfig};
+use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::datagen::{self, GenConfig};
+use sdtw_repro::dtw::{self, Dist};
+use sdtw_repro::normalize;
+use sdtw_repro::runtime::artifact::Manifest;
+use sdtw_repro::server::Server;
+use sdtw_repro::util::logger::{self, Level};
+use sdtw_repro::log_info;
+use sdtw_repro::util::stats::Protocol;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    if let Ok(level) = std::env::var("SDTW_LOG") {
+        if let Some(l) = Level::from_str_loose(&level) {
+            logger::set_level(l);
+        }
+    }
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest.to_vec()),
+        None => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    match cmd {
+        "gen" => cmd_gen(rest),
+        "align" => cmd_align(rest),
+        "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
+        "inspect" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}; try `sdtw help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sdtw — subsequence-DTW serving stack (paper reproduction)\n\n\
+         Commands:\n\
+         \x20 gen      generate a synthetic dataset\n\
+         \x20 align    align a dataset through the serving stack\n\
+         \x20 serve    start the TCP server\n\
+         \x20 sweep    segment-width sweep (Figure 3)\n\
+         \x20 inspect  list artifact variants\n\n\
+         Run `sdtw <command> --help` for options."
+    );
+}
+
+fn maybe_help(cmd: &Command, raw: &[String]) -> bool {
+    if raw.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", cmd.help());
+        true
+    } else {
+        false
+    }
+}
+
+// ---------------------------------------------------------------- gen
+
+fn cmd_gen(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("gen", "generate a synthetic dataset (paper §4)")
+        .opt_default("batch", "8", "queries in the batch")
+        .opt_default("qlen", "128", "query length")
+        .opt_default("reflen", "2048", "reference length")
+        .opt_default("seed", "42", "rng seed")
+        .opt_default("family", "cbf", "workload family: cbf|walk|ecg")
+        .opt_default("planted", "0.5", "fraction of queries planted in the reference")
+        .opt_default("noise", "0.05", "noise added to planted queries")
+        .opt_default("out", "dataset.sdtw", "output file");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+    let family = datagen::Family::from_name(a.get("family").unwrap())
+        .context("family must be cbf|walk|ecg")?;
+    let cfg = GenConfig {
+        batch: a.get_or("batch", 8usize)?,
+        qlen: a.get_or("qlen", 128usize)?,
+        reflen: a.get_or("reflen", 2048usize)?,
+        seed: a.get_or("seed", 42u64)?,
+        planted_fraction: a.get_or("planted", 0.5f64)?,
+        noise: a.get_or("noise", 0.05f64)?,
+        family,
+    };
+    let ds = datagen::generate(&cfg);
+    let out = PathBuf::from(a.get("out").unwrap());
+    datagen::io::write_dataset(&ds, &out)?;
+    println!(
+        "wrote {}: {} queries × {} vs reference {} ({} planted)",
+        out.display(),
+        ds.batch(),
+        ds.qlen,
+        ds.reference.len(),
+        ds.truth.iter().filter(|t| t.is_some()).count()
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- align
+
+fn cmd_align(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("align", "align a dataset through the serving stack")
+        .opt_default("artifacts", "artifacts", "artifacts directory")
+        .opt("dataset", "dataset file from `sdtw gen` (default: generate ad hoc)")
+        .opt_default("variant", "pipeline_b8_m128_n2048_w16", "pipeline variant")
+        .opt_default("workers", "1", "engine workers")
+        .opt_default("deadline-ms", "5", "batch deadline (ms)")
+        .flag("pruned", "route to the pruned kernel")
+        .flag("half", "route to the reduced-precision kernel")
+        .flag("quantized", "route to the quantized pipeline")
+        .flag("verify", "cross-check against the CPU oracle");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+
+    let artifacts = PathBuf::from(a.get("artifacts").unwrap());
+    let variant = a.get("variant").unwrap().to_string();
+    let manifest = Manifest::load(&artifacts)?;
+    let meta = manifest.require(&variant)?.clone();
+    let reflen = meta.reflen.context("variant must be an alignment kind")?;
+
+    let ds = match a.get("dataset") {
+        Some(path) => datagen::io::read_dataset(std::path::Path::new(path))?,
+        None => datagen::generate(&GenConfig {
+            batch: meta.batch,
+            qlen: meta.qlen,
+            reflen,
+            ..Default::default()
+        }),
+    };
+    anyhow::ensure!(ds.qlen == meta.qlen, "dataset qlen {} != variant {}", ds.qlen, meta.qlen);
+    anyhow::ensure!(
+        ds.reference.len() == reflen,
+        "dataset reflen {} != variant {}",
+        ds.reference.len(),
+        reflen
+    );
+
+    let opts = ServiceOptions {
+        artifacts_dir: artifacts,
+        variant,
+        batch_deadline: Duration::from_secs_f64(a.get_or("deadline-ms", 5.0f64)? / 1e3),
+        workers: a.get_or("workers", 1usize)?,
+        ..Default::default()
+    };
+    let service = SdtwService::start(opts, ds.reference.clone())?;
+    let align_opts = AlignOptions {
+        pruned: a.has("pruned"),
+        half: a.has("half"),
+        quantized: a.has("quantized"),
+    };
+
+    let queries: Vec<Vec<f32>> = (0..ds.batch()).map(|i| ds.query(i).to_vec()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = service.align_many(&queries, align_opts)?;
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+
+    for (i, r) in responses.iter().enumerate() {
+        let truth = ds.truth[i]
+            .map(|e| format!(" (planted @{}..{})", e.start, e.end))
+            .unwrap_or_default();
+        println!(
+            "q{i:3}: cost {:10.4}  end {:6}  {:.2} ms  [{}]{}",
+            r.cost, r.end, r.latency_ms, r.variant, truth
+        );
+    }
+    println!("\n{} queries in {:.1} ms; {}", ds.batch(), wall, service.metrics().render());
+
+    if a.has("verify") {
+        let rn = normalize::znormed(&ds.reference);
+        let mut worst = 0f32;
+        for (i, r) in responses.iter().enumerate() {
+            let qn = normalize::znormed(ds.query(i));
+            let want = dtw::sdtw(&qn, &rn, Dist::Sq);
+            let err = (r.cost - want.cost).abs() / want.cost.max(1.0);
+            worst = worst.max(err);
+            anyhow::ensure!(
+                err < 0.05 || align_opts.quantized || align_opts.half,
+                "q{i}: service {} vs oracle {}",
+                r.cost,
+                want.cost
+            );
+        }
+        println!("verify OK (worst relative error {worst:.2e})");
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- serve
+
+fn cmd_serve(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("serve", "start the TCP alignment server")
+        .opt("config", "TOML config file ([serve] section)")
+        .opt("addr", "bind address (overrides config)")
+        .opt("variant", "pipeline variant (overrides config)")
+        .opt("workers", "engine workers (overrides config)")
+        .opt_default("seed", "42", "reference generator seed")
+        .opt_default("family", "ecg", "reference family: cbf|walk|ecg");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+
+    let mut cfg = match a.get("config") {
+        Some(path) => ServeConfig::from_doc(&ConfigDoc::load(std::path::Path::new(path))?)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(addr) = a.get("addr") {
+        cfg.addr = addr.to_string();
+    }
+    if let Some(v) = a.get("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(w) = a.get_parsed::<usize>("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(l) = Level::from_str_loose(&cfg.log_level) {
+        logger::set_level(l);
+    }
+
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let meta = manifest.require(&cfg.variant)?;
+    let reflen = meta.reflen.context("variant must be an alignment kind")?;
+    let family = datagen::Family::from_name(a.get("family").unwrap())
+        .context("family must be cbf|walk|ecg")?;
+    let mut rng = sdtw_repro::util::rng::Xoshiro256::new(a.get_or("seed", 42u64)?);
+    let reference = family.series(reflen, &mut rng);
+    log_info!("serving a generated {} reference of length {reflen}", a.get("family").unwrap());
+
+    let service = Arc::new(SdtwService::start(ServiceOptions::from_config(&cfg), reference)?);
+    let server = Server::bind(service, &cfg.addr)?;
+    println!("listening on {} — Ctrl-C to stop", server.local_addr()?);
+    server.serve()
+}
+
+// -------------------------------------------------------------- sweep
+
+fn cmd_sweep(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("sweep", "segment-width sweep (paper Figure 3)")
+        .opt_default("artifacts", "artifacts", "artifacts directory")
+        .opt_default("seed", "42", "workload seed")
+        .flag("quick", "1 warmup + 3 runs instead of the paper protocol");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+    let protocol = if a.has("quick") { Protocol::QUICK } else { Protocol::PAPER };
+    let table = sdtw_repro::experiments::fig3_sweep(
+        &PathBuf::from(a.get("artifacts").unwrap()),
+        a.get_or("seed", 42u64)?,
+        protocol,
+    )?;
+    table.print();
+    Ok(())
+}
+
+// ------------------------------------------------------------ inspect
+
+fn cmd_inspect(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("inspect", "list the artifact manifest")
+        .opt_default("artifacts", "artifacts", "artifacts directory");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+    let manifest = Manifest::load(&PathBuf::from(a.get("artifacts").unwrap()))?;
+    println!("{} variants in {}:", manifest.variants.len(), manifest.dir.display());
+    for v in &manifest.variants {
+        println!(
+            "  {:38} kind={:<18} B={:<3} M={:<5} N={:<6} w={:<3} dtype={}{}{}{}",
+            v.name,
+            format!("{:?}", v.kind),
+            v.batch,
+            v.qlen,
+            v.reflen.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+            v.segment_width.map(|w| w.to_string()).unwrap_or_else(|| "-".into()),
+            v.dtype,
+            if v.prune_threshold.is_some() { " pruned" } else { "" },
+            if v.quantized { " quantized" } else { "" },
+            if v.slow { " slow" } else { "" },
+        );
+    }
+    Ok(())
+}

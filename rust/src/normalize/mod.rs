@@ -1,0 +1,145 @@
+//! CPU z-normalization (paper §5.1) — oracle for the Pallas normalizer
+//! kernel and the server-side fallback when a request opts out of
+//! on-device normalization.
+//!
+//! Two implementations:
+//! * [`znorm_paper`] — the paper's (cuDTW++-inherited) one-pass moment
+//!   formula `sumSq/n - mean²`, matching the kernel bit-for-bit-ish; known
+//!   to cancel catastrophically when |mean| >> std (documented weakness,
+//!   see python/tests/test_normalize.py).
+//! * [`znorm_welford`] — numerically stable single-pass Welford variant,
+//!   used where stability matters (datagen statistics, codebook ranges).
+
+pub const DEFAULT_EPS: f32 = 1e-8;
+
+/// Mean and population standard deviation via the paper's formula.
+pub fn moments_paper(x: &[f32]) -> (f32, f32) {
+    assert!(!x.is_empty(), "empty series");
+    let n = x.len() as f32;
+    let mut sum = 0f32;
+    let mut sum_sq = 0f32;
+    for &v in x {
+        sum += v;
+        sum_sq += v * v;
+    }
+    let mean = sum / n;
+    let var = (sum_sq / n - mean * mean).max(DEFAULT_EPS);
+    (mean, var.sqrt())
+}
+
+/// Mean and population standard deviation via Welford's algorithm.
+pub fn moments_welford(x: &[f32]) -> (f32, f32) {
+    assert!(!x.is_empty(), "empty series");
+    let mut mean = 0f64;
+    let mut m2 = 0f64;
+    for (k, &v) in x.iter().enumerate() {
+        let v = v as f64;
+        let delta = v - mean;
+        mean += delta / (k + 1) as f64;
+        m2 += delta * (v - mean);
+    }
+    let var = (m2 / x.len() as f64).max(DEFAULT_EPS as f64);
+    (mean as f32, var.sqrt() as f32)
+}
+
+/// In-place z-normalization with the paper's formula.
+pub fn znorm_paper(x: &mut [f32]) {
+    let (mean, std) = moments_paper(x);
+    for v in x {
+        *v = (*v - mean) / std;
+    }
+}
+
+/// In-place z-normalization with stable moments.
+pub fn znorm_welford(x: &mut [f32]) {
+    let (mean, std) = moments_welford(x);
+    for v in x {
+        *v = (*v - mean) / std;
+    }
+}
+
+/// Normalize each `qlen`-row of a contiguous batch (paper layout).
+pub fn znorm_batch(batch: &mut [f32], qlen: usize) {
+    assert!(qlen > 0 && batch.len() % qlen == 0, "ragged batch");
+    for row in batch.chunks_mut(qlen) {
+        znorm_paper(row);
+    }
+}
+
+/// Out-of-place convenience.
+pub fn znormed(x: &[f32]) -> Vec<f32> {
+    let mut v = x.to_vec();
+    znorm_paper(&mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn paper_formula_population_variance() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let (mean, std) = moments_paper(&x);
+        assert!((mean - 2.5).abs() < 1e-6);
+        assert!((std - (1.25f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn welford_matches_paper_when_well_conditioned() {
+        let mut g = Xoshiro256::new(24);
+        let x = g.normal_vec_f32(500);
+        let (m1, s1) = moments_paper(&x);
+        let (m2, s2) = moments_welford(&x);
+        assert!((m1 - m2).abs() < 1e-4);
+        assert!((s1 - s2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn welford_stable_where_paper_cancels() {
+        // |mean| >> std: the paper formula loses precision, Welford holds
+        let mut g = Xoshiro256::new(25);
+        let x: Vec<f32> = (0..1000).map(|_| g.normal_ms(1e4, 0.01) as f32).collect();
+        let (_, s_w) = moments_welford(&x);
+        assert!((s_w - 0.01).abs() / 0.01 < 0.2, "welford std {s_w}");
+        // (the paper formula may return the eps floor here — that is the
+        // documented instability; we don't assert on its value)
+    }
+
+    #[test]
+    fn normalized_moments() {
+        let mut g = Xoshiro256::new(26);
+        let mut x: Vec<f32> = (0..400).map(|_| g.normal_ms(-3.0, 7.0) as f32).collect();
+        znorm_paper(&mut x);
+        let (mean, std) = moments_welford(&x);
+        assert!(mean.abs() < 1e-3);
+        assert!((std - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn constant_series_guarded() {
+        let mut x = [5.0f32; 32];
+        znorm_paper(&mut x);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        let mut g = Xoshiro256::new(27);
+        let row_a = g.normal_vec_f32(16);
+        let row_b: Vec<f32> = (0..16).map(|_| g.normal_ms(9.0, 2.0) as f32).collect();
+        let mut batch: Vec<f32> = row_a.iter().chain(&row_b).cloned().collect();
+        znorm_batch(&mut batch, 16);
+        let za = znormed(&row_a);
+        let zb = znormed(&row_b);
+        assert_eq!(&batch[..16], za.as_slice());
+        assert_eq!(&batch[16..], zb.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_batch_panics() {
+        znorm_batch(&mut [1.0, 2.0, 3.0], 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! uint8 codebook quantization (paper Discussion §8) — Rust twin of
+//! `kernels/quantize.py`, used by the coordinator's quantized route and
+//! by the `ablation_quant` bench to measure the accuracy/throughput trade
+//! the paper hypothesizes.
+//!
+//! The codebook "evenly divide[s] the bulk of the distribution across
+//! uint8 values clamping any outliers to the extreme values": a uniform
+//! affine codec over mean ± clip_sigma·std of the *reference* series.
+
+use crate::normalize::moments_welford;
+
+pub const DEFAULT_CLIP_SIGMA: f32 = 4.0;
+
+/// A uniform uint8 codebook: code k ↦ lo + k·(hi-lo)/255.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Codebook {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Codebook {
+    /// Build from the reference distribution (paper §8).
+    pub fn from_series(reference: &[f32], clip_sigma: f32) -> Codebook {
+        let (mean, std) = moments_welford(reference);
+        let lo = mean - clip_sigma * std;
+        let mut hi = mean + clip_sigma * std;
+        if hi <= lo {
+            hi = lo + 1.0; // constant series guard
+        }
+        Codebook { lo, hi }
+    }
+
+    #[inline]
+    pub fn step(&self) -> f32 {
+        (self.hi - self.lo) / 255.0
+    }
+
+    /// Encode one value (outliers clamp to 0/255).
+    #[inline]
+    pub fn encode(&self, x: f32) -> u8 {
+        let t = ((x - self.lo) / (self.hi - self.lo)).clamp(0.0, 1.0);
+        (t * 255.0).round() as u8
+    }
+
+    /// Decode one code to its reconstruction level.
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        self.lo + code as f32 * self.step()
+    }
+
+    pub fn encode_vec(&self, xs: &[f32]) -> Vec<u8> {
+        xs.iter().map(|&x| self.encode(x)).collect()
+    }
+
+    pub fn decode_vec(&self, codes: &[u8]) -> Vec<f32> {
+        codes.iter().map(|&c| self.decode(c)).collect()
+    }
+
+    /// Round-trip through the codec (what the quantized pipeline feeds
+    /// the alignment kernel).
+    pub fn roundtrip_vec(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.decode(self.encode(x))).collect()
+    }
+
+    /// Max absolute reconstruction error over in-range values — bounded
+    /// by half a step; reported by the ablation bench.
+    pub fn max_inrange_error(&self, xs: &[f32]) -> f32 {
+        xs.iter()
+            .filter(|&&x| x >= self.lo && x <= self.hi)
+            .map(|&x| (self.decode(self.encode(x)) - x).abs())
+            .fold(0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn covers_bulk_of_distribution() {
+        let mut g = Xoshiro256::new(30);
+        let r = g.normal_vec_f32(10_000);
+        let cb = Codebook::from_series(&r, DEFAULT_CLIP_SIGMA);
+        let inside = r.iter().filter(|&&x| x >= cb.lo && x <= cb.hi).count();
+        assert!(inside as f64 / r.len() as f64 > 0.999);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut g = Xoshiro256::new(31);
+        let r = g.normal_vec_f32(2_000);
+        let cb = Codebook::from_series(&r, DEFAULT_CLIP_SIGMA);
+        let err = cb.max_inrange_error(&r);
+        assert!(err <= cb.step() / 2.0 + 1e-6, "err {err} step {}", cb.step());
+    }
+
+    #[test]
+    fn outliers_clamp_to_extremes() {
+        let cb = Codebook { lo: -1.0, hi: 1.0 };
+        assert_eq!(cb.encode(-50.0), 0);
+        assert_eq!(cb.encode(50.0), 255);
+        assert_eq!(cb.encode(-1.0), 0);
+        assert_eq!(cb.encode(1.0), 255);
+    }
+
+    #[test]
+    fn encode_monotone() {
+        let cb = Codebook { lo: 0.0, hi: 10.0 };
+        let mut prev = 0u8;
+        for i in 0..=100 {
+            let c = cb.encode(i as f32 / 10.0);
+            assert!(c >= prev, "monotone");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn decode_encode_identity_on_levels() {
+        let cb = Codebook { lo: -2.0, hi: 3.0 };
+        for k in 0..=255u8 {
+            assert_eq!(cb.encode(cb.decode(k)), k);
+        }
+    }
+
+    #[test]
+    fn constant_series_guarded() {
+        let r = [7.0f32; 100];
+        let cb = Codebook::from_series(&r, DEFAULT_CLIP_SIGMA);
+        assert!(cb.hi > cb.lo);
+        let c = cb.encode(7.0);
+        assert!((cb.decode(c) - 7.0).abs() < cb.step());
+    }
+
+    #[test]
+    fn quantized_alignment_close_to_exact() {
+        // the §8 hypothesis, verified CPU-side: alignment on round-tripped
+        // data stays close to exact on z-normalized inputs
+        use crate::dtw::{sdtw, Dist};
+        let mut g = Xoshiro256::new(32);
+        let q = g.normal_vec_f32(12);
+        let r = g.normal_vec_f32(64);
+        let cb = Codebook::from_series(&r, DEFAULT_CLIP_SIGMA);
+        let exact = sdtw(&q, &r, Dist::Sq);
+        let approx = sdtw(&cb.roundtrip_vec(&q), &cb.roundtrip_vec(&r), Dist::Sq);
+        assert!(
+            (approx.cost - exact.cost).abs() <= 0.05 * exact.cost.max(1.0),
+            "{} vs {}",
+            approx.cost,
+            exact.cost
+        );
+    }
+}

@@ -1,0 +1,302 @@
+//! Artifact manifest: the Rust view of `artifacts/manifest.json` written
+//! by `python/compile/aot.py`.  The manifest is the single source of
+//! truth for which model variants exist, their static shapes, and their
+//! kernel parameters; the router picks variants from here.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Kind of computation a variant implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Batch z-normalizer (paper §5.1).
+    Normalizer,
+    /// sDTW on pre-normalized inputs (paper §5.2).
+    Sdtw,
+    /// znorm ∘ sDTW (the serve path).
+    Pipeline,
+    /// uint8-codebook quantized pipeline (Discussion §8).
+    QuantizedPipeline,
+}
+
+impl Kind {
+    pub fn from_name(s: &str) -> Option<Kind> {
+        match s {
+            "normalizer" => Some(Kind::Normalizer),
+            "sdtw" => Some(Kind::Sdtw),
+            "pipeline" => Some(Kind::Pipeline),
+            "quantized_pipeline" => Some(Kind::QuantizedPipeline),
+            _ => None,
+        }
+    }
+
+    /// Does this variant take (queries, reference) or just (queries)?
+    pub fn takes_reference(self) -> bool {
+        !matches!(self, Kind::Normalizer)
+    }
+}
+
+/// Metadata of one AOT-compiled variant.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub kind: Kind,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub batch: usize,
+    pub qlen: usize,
+    /// None for normalizers.
+    pub reflen: Option<usize>,
+    pub segment_width: Option<usize>,
+    pub dtype: String,
+    pub prune_threshold: Option<f64>,
+    pub quantized: bool,
+    /// Marked slow by the AOT driver (paper-μ shapes); benches gate these.
+    pub slow: bool,
+    /// Set for ablation-matrix variants (e.g. "scan"); excluded from the
+    /// default sweep families.
+    pub ablation: Option<String>,
+    /// Local-scan implementation of the kernel (sdtw kinds).
+    pub scan_impl: Option<String>,
+}
+
+impl VariantMeta {
+    fn from_json(v: &Json) -> Result<VariantMeta> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .context("variant missing name")?
+            .to_string();
+        let kind_s = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .with_context(|| format!("variant {name}: missing kind"))?;
+        let kind = Kind::from_name(kind_s)
+            .with_context(|| format!("variant {name}: unknown kind {kind_s}"))?;
+        let get_usize = |key: &str| -> Option<usize> {
+            v.get(key).and_then(Json::as_i64).map(|x| x as usize)
+        };
+        Ok(VariantMeta {
+            file: v
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("variant {name}: missing file"))?
+                .to_string(),
+            kind,
+            batch: get_usize("batch")
+                .with_context(|| format!("variant {name}: missing batch"))?,
+            qlen: get_usize("qlen")
+                .with_context(|| format!("variant {name}: missing qlen"))?,
+            reflen: get_usize("reflen"),
+            segment_width: get_usize("segment_width"),
+            dtype: v
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string(),
+            prune_threshold: v.get("prune_threshold").and_then(Json::as_f64),
+            quantized: v
+                .get("quantized")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            slow: v.get("slow").and_then(Json::as_bool).unwrap_or(false),
+            ablation: v
+                .get("ablation")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            scan_impl: v
+                .get("scan_impl")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            name,
+        })
+    }
+
+    /// Total DP cell updates per batch execution (0 for normalizers).
+    pub fn cells(&self) -> u64 {
+        match self.reflen {
+            Some(n) => (self.batch * self.qlen) as u64 * n as u64,
+            None => 0,
+        }
+    }
+
+    /// The paper's "floatsProcessed": floats in the query batch.
+    pub fn floats_processed(&self) -> u64 {
+        (self.batch * self.qlen) as u64
+    }
+}
+
+/// The parsed manifest plus its directory (for resolving files).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let version = root.get("version").and_then(Json::as_i64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let raw = root
+            .get("variants")
+            .and_then(Json::as_arr)
+            .context("manifest missing variants")?;
+        let variants = raw
+            .iter()
+            .map(VariantMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&VariantMeta> {
+        self.get(name).with_context(|| {
+            format!(
+                "variant {name:?} not in manifest (have: {})",
+                self.variants
+                    .iter()
+                    .map(|v| v.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, v: &VariantMeta) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+
+    /// All sdtw variants at the same shape differing only in
+    /// segment width — the Figure-3 sweep family.
+    pub fn fig3_family(&self) -> Vec<&VariantMeta> {
+        let mut out: Vec<&VariantMeta> = self
+            .variants
+            .iter()
+            .filter(|v| {
+                v.kind == Kind::Sdtw
+                    && v.dtype == "f32"
+                    && v.prune_threshold.is_none()
+                    && !v.slow
+                    && v.ablation.is_none()
+            })
+            .collect();
+        // keep only the modal (batch, qlen, reflen) shape
+        let key = |v: &VariantMeta| (v.batch, v.qlen, v.reflen);
+        let mut best_shape = None;
+        let mut best_count = 0;
+        for v in &out {
+            let c = out.iter().filter(|w| key(w) == key(v)).count();
+            if c > best_count {
+                best_count = c;
+                best_shape = Some(key(v));
+            }
+        }
+        out.retain(|v| Some(key(v)) == best_shape);
+        out.sort_by_key(|v| v.segment_width);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "variants": [
+            {"name": "znorm_b8_m128", "kind": "normalizer", "file": "znorm_b8_m128.hlo.txt",
+             "batch": 8, "qlen": 128, "reflen": null, "segment_width": null,
+             "dtype": "f32", "prune_threshold": null},
+            {"name": "sdtw_b8_m128_n2048_w2", "kind": "sdtw", "file": "sdtw_b8_m128_n2048_w2.hlo.txt",
+             "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 2,
+             "dtype": "f32", "prune_threshold": null},
+            {"name": "sdtw_b8_m128_n2048_w16", "kind": "sdtw", "file": "sdtw_b8_m128_n2048_w16.hlo.txt",
+             "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16,
+             "dtype": "f32", "prune_threshold": null},
+            {"name": "sdtw_b8_m128_n2048_w16_bf16", "kind": "sdtw", "file": "x.hlo.txt",
+             "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16,
+             "dtype": "bf16", "prune_threshold": null},
+            {"name": "pipeline_b8_m128_n2048_w16", "kind": "pipeline", "file": "p.hlo.txt",
+             "batch": 8, "qlen": 128, "reflen": 2048, "segment_width": 16,
+             "dtype": "f32", "prune_threshold": null},
+            {"name": "sdtw_b64_m500_n10000_w25", "kind": "sdtw", "file": "s.hlo.txt",
+             "batch": 64, "qlen": 500, "reflen": 10000, "segment_width": 25,
+             "dtype": "f32", "prune_threshold": null, "slow": true}
+          ]
+        }"#
+    }
+
+    fn write_sample(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let dir = std::env::temp_dir().join("sdtw_manifest_test1");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 6);
+        let v = m.require("sdtw_b8_m128_n2048_w16").unwrap();
+        assert_eq!(v.kind, Kind::Sdtw);
+        assert_eq!(v.reflen, Some(2048));
+        assert_eq!(v.segment_width, Some(16));
+        assert_eq!(v.cells(), 8 * 128 * 2048);
+        assert_eq!(v.floats_processed(), 8 * 128);
+        assert!(m.get("nope").is_none());
+        assert!(m.require("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fig3_family_excludes_offshapes_dtypes_slow() {
+        let dir = std::env::temp_dir().join("sdtw_manifest_test2");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let fam = m.fig3_family();
+        let names: Vec<_> = fam.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["sdtw_b8_m128_n2048_w2", "sdtw_b8_m128_n2048_w16"],
+            "f32, non-slow, modal shape only, sorted by width"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn normalizer_has_no_reference() {
+        let dir = std::env::temp_dir().join("sdtw_manifest_test3");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.require("znorm_b8_m128").unwrap();
+        assert_eq!(v.kind, Kind::Normalizer);
+        assert!(!v.kind.takes_reference());
+        assert_eq!(v.cells(), 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("sdtw_manifest_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 9, "variants": []}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,233 @@
+//! The PJRT executor engine: a dedicated thread that owns a
+//! `PjRtClient` and a lazily-compiled cache of loaded executables, and
+//! serves execute requests over a channel.
+//!
+//! Why a thread: `xla::Literal`/`PjRtLoadedExecutable` hold raw C
+//! pointers (not `Send`/`Sync`), so all PJRT objects live and die on the
+//! engine thread; callers exchange [`HostTensor`]s.  XLA's CPU backend
+//! parallelizes single executions internally, so one engine thread does
+//! not serialize the math — the coordinator still spawns several engines
+//! (one per worker) to overlap host-side conversion with device work.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::Manifest;
+use super::tensor::{HostTensor, TensorData};
+use crate::log_debug;
+
+/// Result of one execution.
+#[derive(Clone, Debug)]
+pub struct ExecResult {
+    pub outputs: Vec<HostTensor>,
+    /// Device-side wall time of `execute` + transfer, measured on the
+    /// engine thread (excludes queueing) — what kernel benches report.
+    pub exec_ms: f64,
+}
+
+enum Job {
+    Execute {
+        variant: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::SyncSender<Result<ExecResult>>,
+    },
+    /// Compile a variant now (warm the cache off the request path).
+    Preload {
+        variants: Vec<String>,
+        reply: mpsc::SyncSender<Result<Vec<String>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to an [`Engine`].
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+/// A running engine (joins its thread on drop).
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start an engine over the artifacts in `manifest`.
+    pub fn start(manifest: Manifest) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".to_string())
+            .spawn(move || engine_main(manifest, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(Engine { handle: EngineHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Execute `variant` with the given inputs, blocking for the result.
+    pub fn execute(&self, variant: &str, inputs: Vec<HostTensor>) -> Result<ExecResult> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job::Execute { variant: variant.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Compile the given variants now; returns the compiled names.
+    pub fn preload(&self, variants: &[&str]) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job::Preload {
+                variants: variants.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+}
+
+fn engine_main(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    let get_exe = |name: &str,
+                       cache: &mut HashMap<String, xla::PjRtLoadedExecutable>|
+     -> Result<()> {
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = manifest.require(name)?;
+        let path: PathBuf = manifest.hlo_path(meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        log_debug!("compiled {name} in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Preload { variants, reply } => {
+                let mut done = Vec::new();
+                let mut result = Ok(());
+                for v in &variants {
+                    if let Err(e) = get_exe(v, &mut cache) {
+                        result = Err(e);
+                        break;
+                    }
+                    done.push(v.clone());
+                }
+                let _ = reply.send(result.map(|_| done));
+            }
+            Job::Execute { variant, inputs, reply } => {
+                let out = (|| -> Result<ExecResult> {
+                    get_exe(&variant, &mut cache)?;
+                    let exe = cache.get(&variant).unwrap();
+                    let literals = inputs
+                        .iter()
+                        .map(to_literal)
+                        .collect::<Result<Vec<_>>>()?;
+                    let t0 = std::time::Instant::now();
+                    let bufs = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| anyhow!("execute {variant}: {e}"))?;
+                    let result = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("transfer {variant}: {e}"))?;
+                    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    // aot.py lowers with return_tuple=True: unwrap the tuple
+                    let parts = result
+                        .to_tuple()
+                        .map_err(|e| anyhow!("untuple {variant}: {e}"))?;
+                    let outputs = parts
+                        .into_iter()
+                        .map(from_literal)
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(ExecResult { outputs, exec_ms })
+                })();
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+/// HostTensor → Literal (engine thread only).
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+        TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+    };
+    // scalars/1-D pass through; reshape to the declared dims otherwise
+    if t.dims.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&t.dims)
+            .map_err(|e| anyhow!("reshape to {:?}: {e}", t.dims))
+    }
+}
+
+/// Literal → HostTensor (engine thread only).
+fn from_literal(lit: xla::Literal) -> Result<HostTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("output shape: {e}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => {
+            TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?)
+        }
+        xla::ElementType::S32 => {
+            TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?)
+        }
+        other => {
+            // half/bf16 etc: convert on device representation to f32
+            let conv = lit
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("convert {other:?} output to f32: {e}"))?;
+            TensorData::F32(conv.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?)
+        }
+    };
+    Ok(HostTensor { dims, data })
+}

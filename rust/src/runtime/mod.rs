@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the request path.  Python is **never** involved
+//! here — the artifacts are HLO text compiled by the `xla` crate's
+//! bundled XLA (see /opt/xla-example and DESIGN.md §5).
+//!
+//! Structure:
+//! * [`artifact`] — `manifest.json` model: variant metadata + lookup.
+//! * [`tensor`]   — host-side tensors that cross thread boundaries
+//!   (`xla::Literal` holds raw pointers and is neither Send nor Sync).
+//! * [`engine`]   — a dedicated executor thread owning one
+//!   `PjRtClient` and a lazily-compiled executable cache; callers talk to
+//!   it through channels and get back host tensors + device-side timing.
+//!
+//! The coordinator builds one [`engine::Engine`] per worker.
+
+pub mod artifact;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{Manifest, VariantMeta};
+pub use engine::{Engine, EngineHandle, ExecResult};
+pub use tensor::{HostTensor, TensorData};

@@ -1,0 +1,114 @@
+//! Host-side tensors: the data representation that crosses thread
+//! boundaries between the coordinator and the PJRT engine thread
+//! (`xla::Literal` wraps raw C pointers and is neither `Send` nor
+//! `Sync`, so literals are constructed/destructed only on the engine
+//! thread).
+
+use anyhow::{bail, Result};
+
+/// Typed element storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: dims + data, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<i64>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[i64], data: Vec<f32>) -> Result<HostTensor> {
+        let want: i64 = dims.iter().product();
+        if want as usize != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", dims, want, data.len());
+        }
+        Ok(HostTensor { dims: dims.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn i32(dims: &[i64], data: Vec<i32>) -> Result<HostTensor> {
+        let want: i64 = dims.iter().product();
+        if want as usize != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", dims, want, data.len());
+        }
+        Ok(HostTensor { dims: dims.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", kind_name(other)),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", kind_name(other)),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", kind_name(&other)),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", kind_name(&other)),
+        }
+    }
+}
+
+fn kind_name(d: &TensorData) -> &'static str {
+    match d {
+        TensorData::F32(_) => "f32",
+        TensorData::I32(_) => "i32",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn typed_access() {
+        let t = HostTensor::f32(&[2], vec![1.0, 2.0]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.into_f32().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::i32(&[1, 2], vec![7, 9]).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[7, 9]);
+        assert!(t.clone().into_f32().is_err());
+        assert_eq!(t.into_i32().unwrap(), vec![7, 9]);
+    }
+}

@@ -1,0 +1,76 @@
+//! Blocking TCP client for the line-JSON protocol — used by the
+//! `serve_e2e` example's load generator, the CLI, and integration tests.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::proto::{MetricsFields, Request, Response};
+use crate::coordinator::AlignOptions;
+
+/// One connection to an sDTW server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        self.writer.write_all(req.encode().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        Response::parse(&line)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => bail!("unexpected reply to ping: {other:?}"),
+        }
+    }
+
+    pub fn info(&mut self) -> Result<(usize, usize, usize)> {
+        match self.roundtrip(&Request::Info)? {
+            Response::Info { qlen, reflen, batch } => Ok((qlen, reflen, batch)),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to info: {other:?}"),
+        }
+    }
+
+    pub fn metrics(&mut self) -> Result<MetricsFields> {
+        match self.roundtrip(&Request::Metrics)? {
+            Response::Metrics(m) => Ok(*m),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to metrics: {other:?}"),
+        }
+    }
+
+    /// Align one query; returns (cost, end position, server latency ms).
+    pub fn align(
+        &mut self,
+        query: &[f32],
+        options: AlignOptions,
+    ) -> Result<(f32, usize, f64)> {
+        let req = Request::Align { query: query.to_vec(), options };
+        match self.roundtrip(&req)? {
+            Response::Align { cost, end, latency_ms, .. } => Ok((cost, end, latency_ms)),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to align: {other:?}"),
+        }
+    }
+}

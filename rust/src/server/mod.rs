@@ -1,0 +1,19 @@
+//! TCP serving front-end: newline-delimited JSON over TCP, one thread per
+//! connection, backed by the [`crate::coordinator::SdtwService`].
+//!
+//! This is the end-to-end substrate the `serve_e2e` example drives: a
+//! client submits raw queries over the wire, the coordinator batches them
+//! across connections (cross-client batching is where dynamic batching
+//! pays), and responses return per request.
+//!
+//! * [`proto`]  — message model + encode/decode (our own JSON).
+//! * [`server`] — listener/connection loops.
+//! * [`client`] — blocking client used by examples, benches and tests.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::Client;
+pub use proto::{Request, Response};
+pub use server::Server;

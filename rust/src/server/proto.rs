@@ -1,0 +1,272 @@
+//! Wire protocol: one JSON object per line, request/response pairs in
+//! order per connection.
+//!
+//! Requests:
+//!   {"op":"align","query":[...],"pruned":b,"quantized":b,"half":b}
+//!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
+//! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{AlignOptions, AlignResponse, MetricsSnapshot};
+use crate::util::json::Json;
+
+/// Parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Align { query: Vec<f32>, options: AlignOptions },
+    Info,
+    Metrics,
+    Ping,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = Json::parse(line.trim())?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing op"))?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "info" => Ok(Request::Info),
+            "metrics" => Ok(Request::Metrics),
+            "align" => {
+                let arr = v
+                    .get("query")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("align needs query array"))?;
+                let mut query = Vec::with_capacity(arr.len());
+                for x in arr {
+                    query.push(
+                        x.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("non-numeric query value"))?
+                            as f32,
+                    );
+                }
+                let flag = |k: &str| v.get(k).and_then(Json::as_bool).unwrap_or(false);
+                Ok(Request::Align {
+                    query,
+                    options: AlignOptions {
+                        pruned: flag("pruned"),
+                        quantized: flag("quantized"),
+                        half: flag("half"),
+                    },
+                })
+            }
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Ping => r#"{"op":"ping"}"#.to_string(),
+            Request::Info => r#"{"op":"info"}"#.to_string(),
+            Request::Metrics => r#"{"op":"metrics"}"#.to_string(),
+            Request::Align { query, options } => {
+                let mut pairs = vec![
+                    ("op", Json::str("align")),
+                    ("query", Json::f32s(query)),
+                ];
+                if options.pruned {
+                    pairs.push(("pruned", Json::Bool(true)));
+                }
+                if options.quantized {
+                    pairs.push(("quantized", Json::Bool(true)));
+                }
+                if options.half {
+                    pairs.push(("half", Json::Bool(true)));
+                }
+                Json::obj(pairs).to_string()
+            }
+        }
+    }
+}
+
+/// Server response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    Info { qlen: usize, reflen: usize, batch: usize },
+    Align { cost: f32, end: usize, latency_ms: f64, variant: String },
+    Metrics(Box<MetricsFields>),
+    Error(String),
+}
+
+/// The metrics fields that cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsFields {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub padding_fraction: f64,
+    pub device_gsps: f64,
+    pub offered_gsps: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+impl Response {
+    pub fn from_align(r: &AlignResponse) -> Response {
+        Response::Align {
+            cost: r.cost,
+            end: r.end,
+            latency_ms: r.latency_ms,
+            variant: r.variant.clone(),
+        }
+    }
+
+    pub fn from_metrics(m: &MetricsSnapshot) -> Response {
+        Response::Metrics(Box::new(MetricsFields {
+            requests: m.requests,
+            responses: m.responses,
+            batches: m.batches,
+            padding_fraction: m.padding_fraction(),
+            device_gsps: m.device_gsps,
+            offered_gsps: m.offered_gsps,
+            latency_p50_ms: m.latency_p50_ms,
+            latency_p99_ms: m.latency_p99_ms,
+        }))
+    }
+
+    pub fn encode(&self) -> String {
+        match self {
+            Response::Pong => r#"{"ok":true,"pong":true}"#.to_string(),
+            Response::Info { qlen, reflen, batch } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("qlen", Json::Int(*qlen as i64)),
+                ("reflen", Json::Int(*reflen as i64)),
+                ("batch", Json::Int(*batch as i64)),
+            ])
+            .to_string(),
+            Response::Align { cost, end, latency_ms, variant } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cost", Json::Num(*cost as f64)),
+                ("end", Json::Int(*end as i64)),
+                ("latency_ms", Json::Num(*latency_ms)),
+                ("variant", Json::str(variant)),
+            ])
+            .to_string(),
+            Response::Metrics(m) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("requests", Json::Int(m.requests as i64)),
+                ("responses", Json::Int(m.responses as i64)),
+                ("batches", Json::Int(m.batches as i64)),
+                ("padding_fraction", Json::Num(m.padding_fraction)),
+                ("device_gsps", Json::Num(m.device_gsps)),
+                ("offered_gsps", Json::Num(m.offered_gsps)),
+                ("latency_p50_ms", Json::Num(m.latency_p50_ms)),
+                ("latency_p99_ms", Json::Num(m.latency_p99_ms)),
+            ])
+            .to_string(),
+            Response::Error(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(e)),
+            ])
+            .to_string(),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        let v = Json::parse(line.trim())?;
+        let ok = v.get("ok").and_then(Json::as_bool).unwrap_or(false);
+        if !ok {
+            let e = v
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error");
+            return Ok(Response::Error(e.to_string()));
+        }
+        if v.get("pong").is_some() {
+            return Ok(Response::Pong);
+        }
+        if let Some(cost) = v.get("cost").and_then(Json::as_f64) {
+            return Ok(Response::Align {
+                cost: cost as f32,
+                end: v.get("end").and_then(Json::as_i64).unwrap_or(0) as usize,
+                latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                variant: v
+                    .get("variant")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        if let Some(qlen) = v.get("qlen").and_then(Json::as_i64) {
+            return Ok(Response::Info {
+                qlen: qlen as usize,
+                reflen: v.get("reflen").and_then(Json::as_i64).unwrap_or(0) as usize,
+                batch: v.get("batch").and_then(Json::as_i64).unwrap_or(0) as usize,
+            });
+        }
+        if v.get("requests").is_some() {
+            return Ok(Response::Metrics(Box::new(MetricsFields {
+                requests: v.get("requests").and_then(Json::as_i64).unwrap_or(0) as u64,
+                responses: v.get("responses").and_then(Json::as_i64).unwrap_or(0) as u64,
+                batches: v.get("batches").and_then(Json::as_i64).unwrap_or(0) as u64,
+                padding_fraction: v
+                    .get("padding_fraction")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                device_gsps: v.get("device_gsps").and_then(Json::as_f64).unwrap_or(0.0),
+                offered_gsps: v.get("offered_gsps").and_then(Json::as_f64).unwrap_or(0.0),
+                latency_p50_ms: v
+                    .get("latency_p50_ms")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                latency_p99_ms: v
+                    .get("latency_p99_ms")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+            })));
+        }
+        bail!("unrecognized response {line:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_roundtrip() {
+        let req = Request::Align {
+            query: vec![1.0, -2.5],
+            options: AlignOptions { pruned: true, ..Default::default() },
+        };
+        let enc = req.encode();
+        assert_eq!(Request::parse(&enc).unwrap(), req);
+    }
+
+    #[test]
+    fn simple_ops_roundtrip() {
+        for r in [Request::Ping, Request::Info, Request::Metrics] {
+            assert_eq!(Request::parse(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::Align {
+            cost: 1.5,
+            end: 42,
+            latency_ms: 3.25,
+            variant: "pipe".into(),
+        };
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        let r = Response::Info { qlen: 128, reflen: 2048, batch: 8 };
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        let r = Response::Error("nope".into());
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        assert_eq!(Response::parse(&Response::Pong.encode()).unwrap(), Response::Pong);
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse(r#"{"op":"fly"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"align"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"align","query":["x"]}"#).is_err());
+        assert!(Request::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! TCP listener + per-connection loops.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::proto::{Request, Response};
+use crate::coordinator::SdtwService;
+use crate::{log_debug, log_info, log_warn};
+
+/// The TCP front-end.  One accept loop, one thread per connection.
+pub struct Server {
+    service: Arc<SdtwService>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:7071"; port 0 picks a free port).
+    pub fn bind(service: Arc<SdtwService>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Server { service, listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A flag that makes `serve` return when set.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept-and-serve until the stop flag is set.  Connection threads
+    /// are detached; they exit when their peer disconnects.
+    pub fn serve(&self) -> Result<()> {
+        log_info!("listening on {}", self.local_addr()?);
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    log_debug!("connection from {peer}");
+                    let service = self.service.clone();
+                    std::thread::Builder::new()
+                        .name(format!("conn-{peer}"))
+                        .spawn(move || {
+                            if let Err(e) = connection_loop(stream, &service) {
+                                log_debug!("connection {peer} ended: {e:#}");
+                            }
+                        })
+                        .ok();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    log_warn!("accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        log_info!("server stopped");
+        Ok(())
+    }
+}
+
+/// Serve one connection: read request lines, write response lines.
+fn connection_loop(stream: TcpStream, service: &SdtwService) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&line, service);
+        writer.write_all(response.encode().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Decode, dispatch, encode.  Errors become protocol-level Error
+/// responses rather than connection teardown.
+pub fn handle_line(line: &str, service: &SdtwService) -> Response {
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => return Response::Error(format!("bad request: {e}")),
+    };
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Info => Response::Info {
+            qlen: service.qlen(),
+            reflen: service.reflen(),
+            batch: service.batch_size(),
+        },
+        Request::Metrics => Response::from_metrics(&service.metrics()),
+        Request::Align { query, options } => {
+            match service.align_blocking(query, options) {
+                Ok(resp) => Response::from_align(&resp),
+                Err(e) => Response::Error(format!("{e:#}")),
+            }
+        }
+    }
+}

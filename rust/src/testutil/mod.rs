@@ -1,0 +1,153 @@
+//! Property-testing mini-framework (no `proptest` offline).
+//!
+//! [`check`] runs a property over `cases` random inputs drawn from a
+//! generator function; on failure it re-runs the generator at the failing
+//! seed with progressively "smaller" size hints to report a reduced
+//! counterexample seed.  Shrinking here is seed/size-based rather than
+//! structural — enough to make failures reproducible and small, without
+//! rebuilding proptest.
+
+use crate::util::rng::Xoshiro256;
+
+/// Generator context handed to properties: draw inputs from `rng`, scale
+/// their size with `size` so seed-shrinking produces smaller
+/// counterexamples.
+pub struct GenCtx {
+    pub rng: Xoshiro256,
+    pub size: usize,
+}
+
+impl GenCtx {
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize) -> Vec<f32> {
+        let span = (max_len - min_len).min(self.size.max(1));
+        let len = min_len + self.rng.below(span as u64 + 1) as usize;
+        self.rng.normal_vec_f32(len.max(min_len))
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failures: Vec<FailureReport>,
+}
+
+#[derive(Debug)]
+pub struct FailureReport {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+impl PropResult {
+    pub fn unwrap(self) {
+        if !self.failures.is_empty() {
+            panic!(
+                "property failed in {}/{} cases; first: seed={} size={} — {}",
+                self.failures.len(),
+                self.cases,
+                self.failures[0].seed,
+                self.failures[0].size,
+                self.failures[0].message
+            );
+        }
+    }
+}
+
+/// Run `prop` over `cases` random inputs.  `prop` draws its inputs from
+/// the provided [`GenCtx`] and returns `Err(msg)` on violation.
+pub fn check<F>(root_seed: u64, cases: usize, mut prop: F) -> PropResult
+where
+    F: FnMut(&mut GenCtx) -> Result<(), String>,
+{
+    let mut failures = Vec::new();
+    for case in 0..cases {
+        let seed = root_seed.wrapping_add(case as u64);
+        let size = 4 + (case * 4) / cases.max(1) * 16; // grow sizes over the run
+        let mut ctx = GenCtx { rng: Xoshiro256::stream(seed, 77), size };
+        if let Err(message) = prop(&mut ctx) {
+            // size-shrink: retry the same seed at smaller sizes, keep the
+            // smallest size that still fails
+            let mut reported = FailureReport { seed, size, message };
+            for small in [1usize, 2, 4, 8] {
+                if small >= reported.size {
+                    break;
+                }
+                let mut ctx = GenCtx { rng: Xoshiro256::stream(seed, 77), size: small };
+                if let Err(msg) = prop(&mut ctx) {
+                    reported = FailureReport { seed, size: small, message: msg };
+                    break;
+                }
+            }
+            failures.push(reported);
+            if failures.len() >= 5 {
+                break; // enough evidence
+            }
+        }
+    }
+    PropResult { cases, failures }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 50, |g| {
+            let v = g.vec_f32(1, 32);
+            if v.len() >= 1 {
+                Ok(())
+            } else {
+                Err("empty".into())
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn failing_property_reports_seed_and_shrinks() {
+        let res = check(2, 50, |g| {
+            let v = g.vec_f32(1, 64);
+            if v.len() < 10 {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+        assert!(!res.failures.is_empty());
+        // shrinking attempted: reported size is the smallest still-failing
+        for f in &res.failures {
+            assert!(f.size <= 20, "shrunk size {}", f.size);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn unwrap_panics_on_failure() {
+        check(3, 10, |_| Err("always".into())).unwrap();
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let collect = |seed| {
+            let mut vals = Vec::new();
+            check(seed, 5, |g| {
+                vals.push(g.usize_in(0, 100));
+                Ok(())
+            })
+            .unwrap();
+            vals
+        };
+        assert_eq!(collect(9), collect(9));
+        assert_ne!(collect(9), collect(10));
+    }
+}

@@ -1,0 +1,181 @@
+//! Software f16 (IEEE binary16) and bf16 conversions.
+//!
+//! The paper's kernel operates on `__half2`-packed fp16; our TPU
+//! adaptation uses bf16 (see DESIGN.md §1).  The Rust side needs the same
+//! conversions to (a) quantify precision loss in tests/benches without
+//! round-tripping through the runtime and (b) decode any half-precision
+//! buffers surfaced by artifacts.  No `half` crate offline, so: bit-exact
+//! round-to-nearest-even conversions, pinned by reference vectors.
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even, with overflow → inf.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let nan = if frac != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan | ((frac >> 13) as u16 & 0x03ff).min(0x3ff);
+    }
+    // unbiased exponent
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign; // underflow → 0
+        }
+        // implicit leading 1
+        let mant = frac | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = mant >> shift;
+        // round to nearest even
+        let rem = mant & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = ((e as u32) << 10) | (frac >> 13);
+    let rem = frac & 0x1fff;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half + 1 // may carry into exponent: correct behaviour (rounds up)
+    } else {
+        half
+    };
+    sign | rounded as u16
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x0400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((f & 0x03ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bf16 bits, round-to-nearest-even.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet
+    }
+    // round-to-nearest-even: add 0x7fff plus the lsb of the kept part
+    ((bits.wrapping_add(0x7fff + ((bits >> 16) & 1))) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact: zero-extend the mantissa).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round-trip an f32 through f16 precision (what the paper's half2 does).
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round-trip an f32 through bf16 precision (the TPU adaptation).
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_reference_vectors() {
+        // well-known encodings
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow → inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(0.099975586), 0x2e66); // ~0.1
+    }
+
+    #[test]
+    fn f16_decode_vectors() {
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0xc000), -2.0);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24)); // smallest subnormal
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_for_representables() {
+        for h in 0u16..=0xffff {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "bits {h:#06x} -> {f} -> mismatch");
+        }
+    }
+
+    #[test]
+    fn bf16_reference_vectors() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-1.0), 0xbf80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert_eq!(f32_to_bf16_bits(0.0), 0x0000);
+        // round-to-nearest-even: 1.00390625 (0x3f808000) is exactly halfway
+        // between 0x3f80 and 0x3f81 → rounds to even (0x3f80)
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f80_8000)), 0x3f80);
+        // just above halfway rounds up
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f80_8001)), 0x3f81);
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representables() {
+        for h in 0u16..=0xffff {
+            let f = bf16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_bf16_bits(f), h);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounds() {
+        let mut g = crate::util::rng::Xoshiro256::new(3);
+        for _ in 0..10_000 {
+            let x = g.uniform(-100.0, 100.0) as f32;
+            let denom = x.abs().max(1e-3); // avoid dividing by ~0 near zero
+            let e16 = ((f16_round(x) - x) / denom).abs();
+            let eb16 = ((bf16_round(x) - x) / denom).abs();
+            assert!(e16 <= 1.0 / 1024.0 + 1e-6, "f16 err {e16} at {x}");
+            assert!(eb16 <= 1.0 / 128.0 + 1e-6, "bf16 err {eb16} at {x}");
+        }
+    }
+}

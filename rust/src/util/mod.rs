@@ -1,0 +1,11 @@
+//! Shared substrates: PRNG, logging, JSON, statistics, half-precision.
+//!
+//! These stand in for the crates (`rand`, `log`+emitter, `serde_json`,
+//! `criterion`'s stats, `half`) that are unavailable in the offline
+//! vendored registry — see DESIGN.md "Session caveats".
+
+pub mod half;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,164 @@
+//! Integration: the serving coordinator over real artifacts — batching
+//! under concurrency, request↔response mapping, option routing, error
+//! paths, graceful shutdown.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::dtw::{self, Dist};
+use sdtw_repro::normalize;
+use sdtw_repro::util::rng::Xoshiro256;
+
+const VARIANT: &str = "pipeline_b8_m128_n2048_w16";
+
+fn service(workers: usize, deadline_ms: u64) -> Option<(SdtwService, Vec<f32>)> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    let mut rng = Xoshiro256::new(77);
+    let reference = rng.normal_vec_f32(2048);
+    let svc = SdtwService::start(
+        ServiceOptions {
+            variant: VARIANT.into(),
+            workers,
+            batch_deadline: Duration::from_millis(deadline_ms),
+            ..Default::default()
+        },
+        reference.clone(),
+    )
+    .unwrap();
+    Some((svc, reference))
+}
+
+#[test]
+fn responses_match_oracle_and_request_mapping() {
+    let Some((svc, reference)) = service(1, 3) else { return };
+    let mut rng = Xoshiro256::new(8);
+    let queries: Vec<Vec<f32>> = (0..13) // crosses batch boundaries (B=8)
+        .map(|_| {
+            (0..128)
+                .map(|_| rng.normal_ms(2.0, 4.0) as f32)
+                .collect::<Vec<f32>>()
+        })
+        .collect();
+    let responses = svc.align_many(&queries, AlignOptions::default()).unwrap();
+    assert_eq!(responses.len(), 13);
+
+    let rn = normalize::znormed(&reference);
+    for (q, r) in queries.iter().zip(&responses) {
+        let want = dtw::sdtw(&normalize::znormed(q), &rn, Dist::Sq);
+        let rel = (r.cost - want.cost).abs() / want.cost.max(1.0);
+        assert!(rel < 1e-3, "{} vs {}", r.cost, want.cost);
+        assert_eq!(r.end, want.end);
+        assert!(r.latency_ms > 0.0);
+        assert_eq!(r.variant, VARIANT);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.responses, 13);
+    assert!(m.batches >= 2, "13 requests must span >= 2 batches of 8");
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn concurrent_clients_are_batched_together() {
+    let Some((svc, _)) = service(1, 8) else { return };
+    let svc = Arc::new(svc);
+    let mut handles = Vec::new();
+    for t in 0..16 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::stream(9, t);
+            let q = rng.normal_vec_f32(128);
+            svc.align_blocking(q, AlignOptions::default()).unwrap()
+        }));
+    }
+    let ids: Vec<u64> = handles
+        .into_iter()
+        .map(|h| h.join().unwrap().id)
+        .collect();
+    // all distinct ids answered
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), 16);
+    let m = svc.metrics();
+    assert_eq!(m.responses, 16);
+    // cross-client batching actually happened (16 requests, B=8, so at
+    // most 16 batches; with a deadline it should be well under that)
+    assert!(m.batches < 16, "batches {} show no dynamic batching", m.batches);
+    assert!(m.real_rows as f64 / m.batches as f64 > 1.0);
+}
+
+#[test]
+fn option_routing_reaches_special_variants() {
+    let Some((svc, _)) = service(1, 2) else { return };
+    let mut rng = Xoshiro256::new(10);
+    let q = rng.normal_vec_f32(128);
+
+    let half = svc
+        .align_blocking(q.clone(), AlignOptions { half: true, ..Default::default() })
+        .unwrap();
+    assert!(half.variant.contains("bf16"), "{}", half.variant);
+
+    let pruned = svc
+        .align_blocking(q.clone(), AlignOptions { pruned: true, ..Default::default() })
+        .unwrap();
+    assert!(pruned.variant.contains("pruned"), "{}", pruned.variant);
+
+    let quant = svc
+        .align_blocking(q.clone(), AlignOptions { quantized: true, ..Default::default() })
+        .unwrap();
+    assert!(quant.variant.contains("quant"), "{}", quant.variant);
+
+    // exact and half agree loosely; exact and quant agree loosely
+    let exact = svc.align_blocking(q, AlignOptions::default()).unwrap();
+    assert!((exact.cost - half.cost).abs() / exact.cost.max(1.0) < 0.1);
+    assert!((exact.cost - quant.cost).abs() / exact.cost.max(1.0) < 0.1);
+}
+
+#[test]
+fn wrong_query_length_rejected_synchronously() {
+    let Some((svc, _)) = service(1, 2) else { return };
+    let err = svc.submit(vec![0.0; 64], AlignOptions::default());
+    assert!(err.is_err(), "qlen 64 has no variant at reflen 2048");
+}
+
+#[test]
+fn shutdown_drains_inflight() {
+    let Some((mut svc, _)) = service(1, 50) else { return };
+    let mut rng = Xoshiro256::new(11);
+    // submit a partial batch, then shut down before the deadline expires:
+    // the dispatcher must flush it, not drop it
+    let rx1 = svc.submit(rng.normal_vec_f32(128), AlignOptions::default()).unwrap();
+    let rx2 = svc.submit(rng.normal_vec_f32(128), AlignOptions::default()).unwrap();
+    svc.shutdown();
+    assert!(rx1.recv().unwrap().is_ok());
+    assert!(rx2.recv().unwrap().is_ok());
+}
+
+#[test]
+fn service_rejects_bad_reference_length() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let r = SdtwService::start(
+        ServiceOptions { variant: VARIANT.into(), ..Default::default() },
+        vec![0.0; 999],
+    );
+    assert!(r.is_err());
+}
+
+#[test]
+fn service_rejects_unknown_variant() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let r = SdtwService::start(
+        ServiceOptions { variant: "nope".into(), ..Default::default() },
+        vec![0.0; 2048],
+    );
+    assert!(r.is_err());
+}

@@ -1,0 +1,139 @@
+//! Integration: the full pipeline vs its composed parts, CLI-level
+//! dataset round trips, and cross-implementation agreement (Rust oracle
+//! vs scan formulation vs compiled artifacts) on realistic workloads.
+
+use std::path::Path;
+
+use sdtw_repro::datagen::{generate, io, Family, GenConfig};
+use sdtw_repro::dtw::{self, sdtw_scan, Dist};
+use sdtw_repro::normalize;
+use sdtw_repro::runtime::artifact::Manifest;
+use sdtw_repro::runtime::{Engine, HostTensor};
+
+#[test]
+fn pipeline_artifact_equals_znorm_then_sdtw() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let manifest = Manifest::load(Path::new("artifacts")).unwrap();
+    let pipeline = manifest.require("pipeline_b8_m128_n2048_w16").unwrap().clone();
+    let kernel = manifest.require("sdtw_b8_m128_n2048_w16").unwrap().clone();
+
+    let ds = generate(&GenConfig {
+        batch: 8,
+        qlen: 128,
+        reflen: 2048,
+        seed: 21,
+        family: Family::Ecg,
+        ..Default::default()
+    });
+    let reference = normalize::znormed(&ds.reference);
+
+    let engine = Engine::start(manifest).unwrap();
+    let handle = engine.handle();
+
+    // full pipeline on raw queries
+    let out_pipe = handle
+        .execute(
+            &pipeline.name,
+            vec![
+                HostTensor::f32(&[8, 128], ds.queries.clone()).unwrap(),
+                HostTensor::f32(&[2048], reference.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+
+    // manual composition: host znorm + sdtw kernel
+    let mut qn = ds.queries.clone();
+    normalize::znorm_batch(&mut qn, 128);
+    let out_kern = handle
+        .execute(
+            &kernel.name,
+            vec![
+                HostTensor::f32(&[8, 128], qn.clone()).unwrap(),
+                HostTensor::f32(&[2048], reference.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+
+    let a = out_pipe.outputs[0].as_f32().unwrap();
+    let b = out_kern.outputs[0].as_f32().unwrap();
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-3 * y.abs().max(1.0),
+            "q{i}: pipeline {x} vs composed {y}"
+        );
+    }
+
+    // and both agree with the pure-Rust scan formulation
+    for i in 0..8 {
+        let q = &qn[i * 128..(i + 1) * 128];
+        let want = sdtw_scan(q, &reference, 16, Dist::Sq);
+        assert!(
+            (a[i] - want.cost).abs() <= 1e-3 * want.cost.max(1.0),
+            "q{i}: {x} vs rust-scan {w}",
+            x = a[i],
+            w = want.cost
+        );
+    }
+}
+
+#[test]
+fn dataset_file_roundtrip_preserves_alignment_results() {
+    let ds = generate(&GenConfig {
+        batch: 4,
+        qlen: 32,
+        reflen: 256,
+        seed: 31,
+        family: Family::Walk,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir().join("sdtw_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ds.sdtw");
+    io::write_dataset(&ds, &path).unwrap();
+    let back = io::read_dataset(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let rn = normalize::znormed(&ds.reference);
+    let rn2 = normalize::znormed(&back.reference);
+    for i in 0..ds.batch() {
+        let a = dtw::sdtw(&normalize::znormed(ds.query(i)), &rn, Dist::Sq);
+        let b = dtw::sdtw(&normalize::znormed(back.query(i)), &rn2, Dist::Sq);
+        assert_eq!(a, b, "q{i} changed across file round-trip");
+    }
+}
+
+#[test]
+fn cpu_batch_baseline_agrees_with_artifacts() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let manifest = Manifest::load(Path::new("artifacts")).unwrap();
+    let meta = manifest.require("sdtw_b8_m128_n2048_w16").unwrap().clone();
+    let mut rng = sdtw_repro::util::rng::Xoshiro256::new(5);
+    let mut queries = rng.normal_vec_f32(8 * 128);
+    normalize::znorm_batch(&mut queries, 128);
+    let reference = normalize::znormed(&rng.normal_vec_f32(2048));
+
+    let cpu = dtw::sdtw_batch_cpu(&queries, 128, &reference, Dist::Sq, 2);
+
+    let engine = Engine::start(manifest).unwrap();
+    let out = engine
+        .handle()
+        .execute(
+            &meta.name,
+            vec![
+                HostTensor::f32(&[8, 128], queries).unwrap(),
+                HostTensor::f32(&[2048], reference).unwrap(),
+            ],
+        )
+        .unwrap();
+    let costs = out.outputs[0].as_f32().unwrap();
+    let ends = out.outputs[1].as_i32().unwrap();
+    for (i, m) in cpu.iter().enumerate() {
+        assert!((costs[i] - m.cost).abs() <= 1e-4 * m.cost.max(1.0));
+        assert_eq!(ends[i] as usize, m.end);
+    }
+}

@@ -1,0 +1,207 @@
+//! Integration: the PJRT runtime executes real artifacts and matches the
+//! Rust CPU oracle — the paper's §6 correctness protocol, across kernel
+//! variants.  Requires `make artifacts` (skips cleanly if absent).
+
+use std::path::Path;
+
+use sdtw_repro::dtw::{self, Dist};
+use sdtw_repro::normalize;
+use sdtw_repro::runtime::artifact::Manifest;
+use sdtw_repro::runtime::{Engine, HostTensor};
+use sdtw_repro::util::rng::Xoshiro256;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new("artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn workload(b: usize, m: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut queries = rng.normal_vec_f32(b * m);
+    normalize::znorm_batch(&mut queries, m);
+    let reference = normalize::znormed(&rng.normal_vec_f32(n));
+    (queries, reference)
+}
+
+#[test]
+fn sdtw_variant_matches_cpu_oracle() {
+    let Some(manifest) = manifest() else { return };
+    let meta = manifest.require("sdtw_b8_m128_n2048_w16").unwrap().clone();
+    let (queries, reference) = workload(meta.batch, meta.qlen, 2048, 1);
+
+    let engine = Engine::start(manifest).unwrap();
+    let out = engine
+        .handle()
+        .execute(
+            &meta.name,
+            vec![
+                HostTensor::f32(&[8, 128], queries.clone()).unwrap(),
+                HostTensor::f32(&[2048], reference.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    let costs = out.outputs[0].as_f32().unwrap();
+    let positions = out.outputs[1].as_i32().unwrap();
+    assert!(out.exec_ms > 0.0);
+
+    for i in 0..meta.batch {
+        let q = &queries[i * meta.qlen..(i + 1) * meta.qlen];
+        let want = dtw::sdtw(q, &reference, Dist::Sq);
+        let rel = (costs[i] - want.cost).abs() / want.cost.max(1.0);
+        assert!(rel < 1e-4, "q{i}: {} vs {}", costs[i], want.cost);
+        assert_eq!(positions[i] as usize, want.end, "q{i} position");
+    }
+}
+
+#[test]
+fn every_fig3_width_agrees_with_oracle() {
+    let Some(manifest) = manifest() else { return };
+    let family: Vec<_> = manifest.fig3_family().into_iter().cloned().collect();
+    assert!(family.len() >= 5, "expected a full sweep family");
+    let (queries, reference) = workload(family[0].batch, family[0].qlen, 2048, 2);
+    let engine = Engine::start(manifest).unwrap();
+    let handle = engine.handle();
+
+    // oracle once
+    let m = family[0].qlen;
+    let oracle: Vec<_> = (0..family[0].batch)
+        .map(|i| dtw::sdtw(&queries[i * m..(i + 1) * m], &reference, Dist::Sq))
+        .collect();
+
+    for meta in &family {
+        let out = handle
+            .execute(
+                &meta.name,
+                vec![
+                    HostTensor::f32(&[meta.batch as i64, m as i64], queries.clone()).unwrap(),
+                    HostTensor::f32(&[2048], reference.clone()).unwrap(),
+                ],
+            )
+            .unwrap();
+        let costs = out.outputs[0].as_f32().unwrap();
+        let positions = out.outputs[1].as_i32().unwrap();
+        for (i, want) in oracle.iter().enumerate() {
+            let rel = (costs[i] - want.cost).abs() / want.cost.max(1.0);
+            assert!(rel < 1e-4, "{} q{i}: {} vs {}", meta.name, costs[i], want.cost);
+            assert_eq!(positions[i] as usize, want.end, "{} q{i}", meta.name);
+        }
+    }
+}
+
+#[test]
+fn scan_impls_agree_bitwise_ish() {
+    let Some(manifest) = manifest() else { return };
+    let family: Vec<_> = manifest
+        .variants
+        .iter()
+        .filter(|v| v.ablation.as_deref() == Some("scan") && v.segment_width == Some(16))
+        .cloned()
+        .collect();
+    assert_eq!(family.len(), 3, "three scan impls at w16");
+    let (queries, reference) = workload(8, 128, 2048, 3);
+    let engine = Engine::start(manifest).unwrap();
+    let handle = engine.handle();
+
+    let mut all_costs = Vec::new();
+    for meta in &family {
+        let out = handle
+            .execute(
+                &meta.name,
+                vec![
+                    HostTensor::f32(&[8, 128], queries.clone()).unwrap(),
+                    HostTensor::f32(&[2048], reference.clone()).unwrap(),
+                ],
+            )
+            .unwrap();
+        all_costs.push(out.outputs[0].as_f32().unwrap().to_vec());
+    }
+    for other in &all_costs[1..] {
+        for (a, b) in all_costs[0].iter().zip(other) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn normalizer_artifact_matches_formula() {
+    let Some(manifest) = manifest() else { return };
+    let meta = manifest.require("znorm_b8_m128").unwrap().clone();
+    let mut rng = Xoshiro256::new(4);
+    let raw: Vec<f32> = (0..meta.batch * meta.qlen)
+        .map(|_| rng.normal_ms(5.0, 3.0) as f32)
+        .collect();
+    let engine = Engine::start(manifest).unwrap();
+    let out = engine
+        .handle()
+        .execute(
+            &meta.name,
+            vec![HostTensor::f32(&[8, 128], raw.clone()).unwrap()],
+        )
+        .unwrap();
+    let got = out.outputs[0].as_f32().unwrap();
+    let mut want = raw;
+    normalize::znorm_batch(&mut want, meta.qlen);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn pruned_artifact_inf_semantics() {
+    let Some(manifest) = manifest() else { return };
+    let meta = manifest
+        .require("sdtw_b8_m128_n2048_w16_pruned")
+        .unwrap()
+        .clone();
+    let threshold = meta.prune_threshold.unwrap() as f32;
+    // far-apart data: all-zeros queries vs far reference → all pruned
+    let queries = vec![0f32; 8 * 128];
+    let reference = vec![100f32; 2048];
+    let engine = Engine::start(manifest).unwrap();
+    let out = engine
+        .handle()
+        .execute(
+            &meta.name,
+            vec![
+                HostTensor::f32(&[8, 128], queries).unwrap(),
+                HostTensor::f32(&[2048], reference).unwrap(),
+            ],
+        )
+        .unwrap();
+    let costs = out.outputs[0].as_f32().unwrap();
+    assert!(
+        costs.iter().all(|c| c.is_infinite() && *c > 0.0),
+        "all paths pruned at threshold {threshold}: {costs:?}"
+    );
+}
+
+#[test]
+fn engine_preload_and_unknown_variant() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::start(manifest).unwrap();
+    let handle = engine.handle();
+    let loaded = handle.preload(&["znorm_b8_m128"]).unwrap();
+    assert_eq!(loaded, vec!["znorm_b8_m128".to_string()]);
+    assert!(handle.preload(&["no_such_variant"]).is_err());
+    assert!(handle
+        .execute("no_such_variant", vec![])
+        .is_err());
+}
+
+#[test]
+fn engine_rejects_bad_input_shape() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::start(manifest).unwrap();
+    // wrong arity
+    let r = engine.handle().execute(
+        "sdtw_b8_m128_n2048_w16",
+        vec![HostTensor::f32(&[8, 128], vec![0.0; 8 * 128]).unwrap()],
+    );
+    assert!(r.is_err(), "missing reference input must error");
+}

@@ -1,0 +1,136 @@
+//! Integration: TCP server round-trips over real artifacts — protocol
+//! conformance, concurrent connections, malformed input resilience.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::server::{Client, Server};
+use sdtw_repro::util::rng::Xoshiro256;
+
+const VARIANT: &str = "pipeline_b8_m128_n2048_w16";
+
+struct TestServer {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    join: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TestServer {
+    fn start() -> Option<TestServer> {
+        if !Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        let mut rng = Xoshiro256::new(42);
+        let service = Arc::new(
+            SdtwService::start(
+                ServiceOptions {
+                    variant: VARIANT.into(),
+                    workers: 1,
+                    batch_deadline: Duration::from_millis(3),
+                    ..Default::default()
+                },
+                rng.normal_vec_f32(2048),
+            )
+            .unwrap(),
+        );
+        let server = Server::bind(service, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_flag();
+        let join = std::thread::spawn(move || server.serve());
+        Some(TestServer { addr, stop, join: Some(join) })
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[test]
+fn ping_info_align_metrics_roundtrip() {
+    let Some(ts) = TestServer::start() else { return };
+    let mut client = Client::connect(&ts.addr).unwrap();
+    client.ping().unwrap();
+
+    let (qlen, reflen, batch) = client.info().unwrap();
+    assert_eq!((qlen, reflen, batch), (128, 2048, 8));
+
+    let mut rng = Xoshiro256::new(1);
+    let q = rng.normal_vec_f32(128);
+    let (cost, end, latency_ms) = client.align(&q, AlignOptions::default()).unwrap();
+    assert!(cost.is_finite() && cost >= 0.0);
+    assert!(end < 2048);
+    assert!(latency_ms > 0.0);
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.responses, 1);
+    assert!(m.batches >= 1);
+}
+
+#[test]
+fn concurrent_connections() {
+    let Some(ts) = TestServer::start() else { return };
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let addr = ts.addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut rng = Xoshiro256::stream(2, t);
+            let mut costs = Vec::new();
+            for _ in 0..5 {
+                let q = rng.normal_vec_f32(128);
+                let (cost, _, _) = client.align(&q, AlignOptions::default()).unwrap();
+                costs.push(cost);
+            }
+            costs
+        }));
+    }
+    for h in handles {
+        let costs = h.join().unwrap();
+        assert_eq!(costs.len(), 5);
+        assert!(costs.iter().all(|c| c.is_finite()));
+    }
+}
+
+#[test]
+fn malformed_lines_get_error_responses_not_disconnects() {
+    let Some(ts) = TestServer::start() else { return };
+    let stream = TcpStream::connect(&ts.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    for bad in ["not json", "{}", r#"{"op":"fly"}"#, r#"{"op":"align","query":[1,"x"]}"#] {
+        writer.write_all(bad.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "line {line:?} for input {bad:?}");
+    }
+    // connection still alive afterwards
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"));
+}
+
+#[test]
+fn wrong_qlen_is_protocol_error() {
+    let Some(ts) = TestServer::start() else { return };
+    let mut client = Client::connect(&ts.addr).unwrap();
+    let err = client.align(&[0.0; 32], AlignOptions::default());
+    assert!(err.is_err());
+    // and the connection keeps working
+    client.ping().unwrap();
+}

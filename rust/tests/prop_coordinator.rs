@@ -1,0 +1,144 @@
+//! Property tests on coordinator invariants: queue delivery, batcher
+//! policy, quantizer monotonicity — all artifact-free (pure logic).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use sdtw_repro::coordinator::batcher::{BatchAssembler, BatchPolicy, Step};
+use sdtw_repro::coordinator::queue::BoundedQueue;
+use sdtw_repro::coordinator::request::{AlignOptions, AlignRequest};
+use sdtw_repro::quant::Codebook;
+use sdtw_repro::testutil::check;
+
+fn req(id: u64) -> AlignRequest {
+    let (tx, _) = mpsc::sync_channel(1);
+    AlignRequest {
+        id,
+        query: vec![0.0; 4],
+        options: AlignOptions::default(),
+        submitted: Instant::now(),
+        reply: tx,
+    }
+}
+
+#[test]
+fn prop_batcher_never_exceeds_batch_size_and_preserves_order() {
+    check(200, 100, |g| {
+        let b = g.usize_in(1, 16);
+        let deadline = Duration::from_millis(g.usize_in(1, 50) as u64);
+        let mut asm = BatchAssembler::new(BatchPolicy::new(b, deadline));
+        let n = g.usize_in(1, 64);
+        let t0 = Instant::now();
+        let mut expected_next = 0u64;
+        for id in 0..n as u64 {
+            let step = asm.offer(req(id), t0);
+            if asm.pending() > b {
+                return Err(format!("pending {} > batch {b}", asm.pending()));
+            }
+            if step == Step::Dispatch {
+                let batch = asm.take(t0);
+                if batch.real() > b {
+                    return Err("overfull batch".into());
+                }
+                if batch.real() + batch.padding != b {
+                    return Err("padding arithmetic wrong".into());
+                }
+                for r in &batch.requests {
+                    if r.id != expected_next {
+                        return Err(format!("order broken: {} != {expected_next}", r.id));
+                    }
+                    expected_next += 1;
+                }
+            }
+        }
+        // drain
+        if asm.pending() > 0 {
+            let batch = asm.take(t0);
+            for r in &batch.requests {
+                if r.id != expected_next {
+                    return Err("tail order broken".into());
+                }
+                expected_next += 1;
+            }
+        }
+        if expected_next != n as u64 {
+            return Err(format!("lost requests: {expected_next} of {n}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_batcher_deadline_never_exceeded_at_decision_time() {
+    check(201, 100, |g| {
+        let b = g.usize_in(2, 16);
+        let dl_ms = g.usize_in(1, 100) as u64;
+        let deadline = Duration::from_millis(dl_ms);
+        let mut asm = BatchAssembler::new(BatchPolicy::new(b, deadline));
+        let t0 = Instant::now();
+        asm.offer(req(0), t0);
+        // at any time >= deadline, the decision must be Dispatch
+        let late = t0 + deadline + Duration::from_millis(1);
+        match asm.next_step(late) {
+            Step::Dispatch => Ok(()),
+            other => Err(format!("deadline passed but {other:?}")),
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_queue_delivers_everything_once_fifo_per_producer() {
+    check(202, 20, |g| {
+        let cap = g.usize_in(1, 16);
+        let n = g.usize_in(1, 200);
+        let q = std::sync::Arc::new(BoundedQueue::new(cap));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                q2.push(i).unwrap();
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        if got.len() != n {
+            return Err(format!("{} of {n} delivered", got.len()));
+        }
+        if !got.windows(2).all(|w| w[0] < w[1]) {
+            return Err("single-producer FIFO violated".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_codebook_monotone_and_bounded() {
+    check(203, 100, |g| {
+        let r = g.vec_f32(8, 256);
+        let cb = Codebook::from_series(&r, 4.0);
+        if cb.hi <= cb.lo {
+            return Err("degenerate codebook".into());
+        }
+        // encode is monotone
+        let a = g.f32_in(-10.0, 10.0);
+        let b = g.f32_in(-10.0, 10.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if cb.encode(lo) > cb.encode(hi) {
+            return Err(format!("monotonicity broken at {lo}, {hi}"));
+        }
+        // in-range reconstruction error bounded by half a step
+        let x = g.f32_in(cb.lo, cb.hi);
+        let err = (cb.decode(cb.encode(x)) - x).abs();
+        if err > cb.step() / 2.0 + 1e-5 {
+            return Err(format!("reconstruction error {err} > step/2 {}", cb.step() / 2.0));
+        }
+        Ok(())
+    })
+    .unwrap();
+}

@@ -1,0 +1,191 @@
+//! Property tests on DTW invariants, via the in-repo property harness
+//! (`testutil`) — the proptest stand-in (DESIGN.md "Session caveats").
+
+use sdtw_repro::dtw::banded::sdtw_banded;
+use sdtw_repro::dtw::full::dtw;
+use sdtw_repro::dtw::pruned::sdtw_pruned;
+use sdtw_repro::dtw::scan::sdtw_scan;
+use sdtw_repro::dtw::traceback::sdtw_path;
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::normalize::znormed;
+use sdtw_repro::testutil::check;
+
+#[test]
+fn prop_scan_equals_naive_any_width() {
+    check(100, 200, |g| {
+        let q = g.vec_f32(1, 16);
+        let r = g.vec_f32(1, 64);
+        let w = g.usize_in(1, 70);
+        let a = sdtw(&q, &r, Dist::Sq);
+        let b = sdtw_scan(&q, &r, w, Dist::Sq);
+        if (a.cost - b.cost).abs() > 1e-3 * a.cost.max(1.0) {
+            return Err(format!("w={w}: {} vs {}", a.cost, b.cost));
+        }
+        if a.end != b.end {
+            return Err(format!("w={w}: end {} vs {}", a.end, b.end));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_cost_nonnegative_and_zero_iff_embedded() {
+    check(101, 100, |g| {
+        let q = g.vec_f32(2, 12);
+        let r = g.vec_f32(2, 40);
+        let m = sdtw(&q, &r, Dist::Sq);
+        if m.cost < 0.0 {
+            return Err(format!("negative cost {}", m.cost));
+        }
+        // embed q verbatim: cost becomes ~0
+        let mut r2 = r.clone();
+        if r2.len() >= q.len() {
+            let at = g.usize_in(0, r2.len() - q.len());
+            r2[at..at + q.len()].copy_from_slice(&q);
+            let m2 = sdtw(&q, &r2, Dist::Sq);
+            if m2.cost > 1e-4 {
+                return Err(format!("embedded but cost {}", m2.cost));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_subsequence_le_global_le_euclidean_window() {
+    check(102, 100, |g| {
+        let q = g.vec_f32(2, 10);
+        let r = g.vec_f32(10, 40);
+        let s = sdtw(&q, &r, Dist::Sq).cost;
+        let f = dtw(&q, &r, Dist::Sq);
+        if s > f + 1e-4 {
+            return Err(format!("sdtw {s} > dtw {f}"));
+        }
+        // sdtw <= best lockstep window (band-0 = lockstep window search)
+        let b0 = sdtw_banded(&q, &r, 0, Dist::Sq).cost;
+        if s > b0 + 1e-4 {
+            return Err(format!("sdtw {s} > lockstep-window {b0}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_banded_monotone_and_converges() {
+    check(103, 60, |g| {
+        let q = g.vec_f32(2, 8);
+        let r = g.vec_f32(4, 24);
+        let full = sdtw(&q, &r, Dist::Sq).cost;
+        let mut prev = f32::INFINITY;
+        for band in [0usize, 1, 2, 4, 8, 32] {
+            let c = sdtw_banded(&q, &r, band, Dist::Sq).cost;
+            if c > prev + 1e-4 {
+                return Err(format!("band {band} worsened: {c} > {prev}"));
+            }
+            if c < full - 1e-4 {
+                return Err(format!("band {band} beat unbanded: {c} < {full}"));
+            }
+            prev = c;
+        }
+        if (prev - full).abs() > 1e-4 {
+            return Err(format!("wide band {prev} != unbanded {full}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_pruned_upper_bound_and_loose_threshold_exact() {
+    check(104, 100, |g| {
+        let q = g.vec_f32(2, 10);
+        let r = g.vec_f32(2, 32);
+        let thr = g.f32_in(0.1, 3.0);
+        let exact = sdtw(&q, &r, Dist::Sq);
+        let p = sdtw_pruned(&q, &r, thr, Dist::Sq);
+        if p.cost < exact.cost - 1e-4 {
+            return Err(format!("pruned {} < exact {}", p.cost, exact.cost));
+        }
+        let loose = sdtw_pruned(&q, &r, 1e9, Dist::Sq);
+        if (loose.cost - exact.cost).abs() > 1e-5 || loose.pruned_cells != 0 {
+            return Err("loose threshold changed result".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_traceback_path_valid_and_consistent() {
+    check(105, 80, |g| {
+        let q = g.vec_f32(2, 8);
+        let r = g.vec_f32(2, 24);
+        let (cost, path) = sdtw_path(&q, &r, Dist::Sq);
+        let m = sdtw(&q, &r, Dist::Sq);
+        if (cost - m.cost).abs() > 1e-4 * m.cost.max(1.0) {
+            return Err(format!("path cost {cost} vs oracle {}", m.cost));
+        }
+        if path.first().map(|&(i, _)| i) != Some(0) {
+            return Err("path must start at query row 0".into());
+        }
+        if path.last() != Some(&(q.len() - 1, m.end)) {
+            return Err(format!("path end {:?} vs ({}, {})", path.last(), q.len() - 1, m.end));
+        }
+        for w in path.windows(2) {
+            let (di, dj) = (w[1].0 - w[0].0, w[1].1 as i64 - w[0].1 as i64);
+            if !matches!((di, dj), (0, 1) | (1, 0) | (1, 1)) {
+                return Err(format!("illegal step {:?} -> {:?}", w[0], w[1]));
+            }
+        }
+        let sum: f32 = path.iter().map(|&(i, j)| Dist::Sq.eval(q[i], r[j])).sum();
+        if (sum - cost).abs() > 1e-3 * cost.max(1.0) {
+            return Err(format!("path sum {sum} vs cost {cost}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_znorm_affine_invariance_of_sdtw() {
+    // sDTW on z-normalized data is invariant to affine transforms of the
+    // raw inputs — the reason the paper normalizes at all
+    check(106, 60, |g| {
+        let q = g.vec_f32(4, 12);
+        let r = g.vec_f32(8, 40);
+        let scale = g.f32_in(0.5, 20.0);
+        let shift = g.f32_in(-10.0, 10.0);
+        let q2: Vec<f32> = q.iter().map(|x| x * scale + shift).collect();
+        let a = sdtw(&znormed(&q), &znormed(&r), Dist::Sq);
+        let b = sdtw(&znormed(&q2), &znormed(&r), Dist::Sq);
+        if (a.cost - b.cost).abs() > 1e-2 * a.cost.max(1.0) {
+            return Err(format!("affine variance: {} vs {}", a.cost, b.cost));
+        }
+        if a.end != b.end {
+            return Err(format!("end moved: {} vs {}", a.end, b.end));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_query_reversal_symmetry() {
+    // reversing BOTH series mirrors the problem: cost is preserved
+    check(107, 60, |g| {
+        let q = g.vec_f32(2, 10);
+        let r = g.vec_f32(2, 30);
+        let a = sdtw(&q, &r, Dist::Sq).cost;
+        let qr: Vec<f32> = q.iter().rev().cloned().collect();
+        let rr: Vec<f32> = r.iter().rev().cloned().collect();
+        let b = sdtw(&qr, &rr, Dist::Sq).cost;
+        if (a - b).abs() > 1e-3 * a.max(1.0) {
+            return Err(format!("reversal asymmetry: {a} vs {b}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
