@@ -1,33 +1,40 @@
 //! Motif search: the gesture/ECG-style scenario from the paper's
 //! motivation (§2) — plant known, *structured* motifs into a long noisy
-//! stream, then recover them with the accelerated sDTW service and
-//! refine each hit's full warp path with the CPU traceback.
+//! stream, then recover each one's top match sites with the search
+//! engine's lower-bound cascade and refine the best hit's full warp path
+//! with the CPU traceback.
 //!
-//! Unlike stochastic windows (where DTW's warping freedom makes the best
-//! match position ambiguous), structured motifs (distinct gesture
-//! templates) are recovered reliably — this example asserts it.
+//! This example runs entirely on the CPU search subsystem (no compiled
+//! artifacts required) and demonstrates the three engine guarantees:
+//! recovery (each gesture's best site is its planted window), rejection
+//! (a never-planted decoy costs far more), and losslessness (cascade
+//! results are bit-identical to brute force while pruning most windows).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example motif_search
+//! cargo run --release --example motif_search
 //! ```
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
 use sdtw_repro::datagen::embed::embed_query;
 use sdtw_repro::dtw::traceback::{path_window, sdtw_path};
 use sdtw_repro::dtw::Dist;
 use sdtw_repro::normalize::znormed;
+use sdtw_repro::search::{CascadeOpts, SearchEngine};
 use sdtw_repro::util::rng::Xoshiro256;
 
 const QLEN: usize = 128;
-const REFLEN: usize = 2048;
+const REFLEN: usize = 8192;
+const WINDOW: usize = QLEN + QLEN / 2;
+const K: usize = 3;
+const EXCLUSION: usize = WINDOW / 2;
 
 /// Three distinct "gesture" templates (smooth, structured shapes),
-/// pre-standardized: the serving stack normalizes the query and the
-/// *whole* reference once (the paper's §5 flow), so motifs must be
-/// planted at the scale they will be compared at — a documented
-/// limitation of global (vs per-window) normalization.
+/// pre-standardized: the engine searches the globally z-normalized
+/// stream (the paper's §5 flow), so motifs are planted at the scale they
+/// will be compared at.
 fn gesture(kind: usize, n: usize) -> Vec<f32> {
     let raw: Vec<f32> = (0..n)
         .map(|t| {
@@ -44,66 +51,101 @@ fn gesture(kind: usize, n: usize) -> Vec<f32> {
 }
 
 fn main() -> Result<()> {
-    // 1. a unit-variance noisy stream with three planted gestures
+    // 1. a unit-variance noisy stream with two planted copies per gesture
     let mut rng = Xoshiro256::new(2024);
     let mut reference: Vec<f32> = (0..REFLEN).map(|_| rng.normal() as f32).collect();
-    let plants = [(0usize, 200usize, 1.1), (1, 900, 0.8), (2, 1600, 1.25)];
-    let mut truth = Vec::new();
+    let plants = [
+        (0usize, 500usize, 1.1),
+        (0, 5200, 0.9),
+        (1, 1700, 0.8),
+        (1, 6400, 1.2),
+        (2, 3000, 1.25),
+        (2, 7300, 1.0),
+    ];
+    let mut truth: Vec<Vec<sdtw_repro::datagen::Embedding>> = vec![Vec::new(); 3];
     for &(kind, at, stretch) in &plants {
         let g = gesture(kind, QLEN);
         let emb = embed_query(&mut reference, &g, at, stretch, 0.05, &mut rng);
-        truth.push((kind, emb));
+        truth[kind].push(emb);
         println!("planted gesture {kind} at {}..{} (stretch {stretch})", emb.start, emb.end);
     }
 
-    // 2. serve the stream
-    let service = SdtwService::start(
-        ServiceOptions {
-            variant: "pipeline_b8_m128_n2048_w16".into(),
-            ..Default::default()
-        },
-        reference.clone(),
-    )?;
+    // 2. one engine over the normalized stream, reused for every query
+    let rn = Arc::new(znormed(&reference));
+    let engine = SearchEngine::new(rn.clone(), WINDOW, 1, Dist::Sq)?;
+    println!(
+        "\nengine: window {WINDOW}, {} candidate sites, index {} KiB",
+        engine.index().candidates(),
+        engine.index().index_bytes() / 1024
+    );
 
-    // 3. query each gesture template (plus a decoy that was never planted)
-    let mut queries: Vec<Vec<f32>> = (0..3).map(|k| gesture(k, QLEN)).collect();
-    queries.push(rng.normal_vec_f32(QLEN)); // decoy
-    let responses = service.align_many(&queries, AlignOptions::default())?;
-
-    // 4. check recovery + refine with the CPU warp path
-    let rn = znormed(&reference);
-    println!("\n  gesture   cost      end    planted-end   warp-window");
+    // 3. search each gesture (plus a decoy that was never planted)
+    println!("\n  gesture  rank   start    end      cost   planted windows");
     let mut planted_max = 0f32;
-    for (k, r) in responses.iter().take(3).enumerate() {
-        let (_, emb) = truth[k];
-        let qn = znormed(&queries[k]);
-        // refine: traceback over the matched window to get the full path
-        let lo = r.end.saturating_sub(2 * QLEN);
-        let hi = (r.end + QLEN / 2).min(rn.len());
-        let (_, path) = sdtw_path(&qn, &rn[lo..hi], Dist::Sq);
-        let (ws, we) = path_window(&path);
+    for kind in 0..3 {
+        let qn = znormed(&gesture(kind, QLEN));
+        let out = engine.search(&qn, K, EXCLUSION)?;
+
+        // losslessness: identical to brute force over every window
+        let brute = engine.search_opts(&qn, K, EXCLUSION, CascadeOpts::BRUTE, 1)?;
+        assert_eq!(out.hits, brute.hits, "cascade must match brute force");
+
+        let spots: Vec<String> = truth[kind]
+            .iter()
+            .map(|e| format!("{}..{}", e.start, e.end))
+            .collect();
+        for (rank, h) in out.hits.iter().enumerate() {
+            println!(
+                "  {kind}        {}      {:5}  {:5}  {:8.3}   {}",
+                rank + 1,
+                h.start,
+                h.end,
+                h.cost,
+                if rank == 0 { spots.join(" ") } else { String::new() }
+            );
+        }
+        // recovery: the two best sites sit on the two planted windows
+        for (rank, h) in out.hits.iter().take(2).enumerate() {
+            let hit_on_plant = truth[kind].iter().any(|e| {
+                h.end + QLEN / 2 >= e.start && h.end <= e.end + QLEN / 2
+            });
+            assert!(
+                hit_on_plant,
+                "gesture {kind} rank {} (end {}) not on a planted window",
+                rank + 1,
+                h.end
+            );
+            planted_max = planted_max.max(h.cost);
+        }
         println!(
-            "  {k}         {:8.3}  {:5}   {:5}        {}..{}",
-            r.cost,
-            r.end,
-            emb.end,
-            lo + ws,
-            lo + we
+            "           cascade pruned {:.1}% of {} windows (kim={} keogh={} abandoned={})",
+            out.stats.prune_fraction() * 100.0,
+            out.stats.candidates,
+            out.stats.pruned_kim,
+            out.stats.pruned_keogh,
+            out.stats.dp_abandoned
         );
-        assert!(
-            (r.end as i64 - emb.end as i64).abs() <= QLEN as i64 / 2,
-            "gesture {k}: end {} vs planted {}",
-            r.end,
-            emb.end
-        );
-        planted_max = planted_max.max(r.cost);
     }
-    let decoy_cost = responses[3].cost;
-    println!("  decoy     {decoy_cost:8.3}  (never planted)");
+
+    // 4. rejection: a decoy query costs far more than any planted match
+    let decoy = znormed(&rng.normal_vec_f32(QLEN));
+    let out = engine.search(&decoy, 1, EXCLUSION)?;
+    let decoy_cost = out.hits[0].cost;
+    println!("\n  decoy best cost {decoy_cost:8.3} (planted max {planted_max:.3})");
     assert!(
         decoy_cost > 2.0 * planted_max,
         "decoy ({decoy_cost}) should cost far more than planted (max {planted_max})"
     );
-    println!("\nmotif_search OK — all gestures recovered, decoy rejected");
+
+    // 5. refine the last gesture's best hit with the full warp path
+    let qn = znormed(&gesture(2, QLEN));
+    let best = engine.search(&qn, 1, EXCLUSION)?.hits[0];
+    let lo = best.start;
+    let hi = (best.start + WINDOW).min(rn.len());
+    let (_, path) = sdtw_path(&qn, &rn[lo..hi], Dist::Sq);
+    let (ws, we) = path_window(&path);
+    println!("  warp path of gesture 2's best hit: {}..{}", lo + ws, lo + we);
+
+    println!("\nmotif_search OK — recovered, rejected, and bit-identical to brute force");
     Ok(())
 }

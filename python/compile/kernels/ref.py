@@ -248,6 +248,58 @@ def sdtw_scan_ref(q: np.ndarray, r: np.ndarray, segment_width: int,
 
 
 # --------------------------------------------------------------------------
+# search lower bounds (rust/src/search/lower_bounds.rs parity)
+# --------------------------------------------------------------------------
+
+def sliding_minmax_ref(x: np.ndarray, w: int):
+    """(lo, hi) per length-``w`` window of ``x`` — the envelope index.
+
+    Naive O(n*w) sweep (oracle only); mirrors
+    ``search::envelope::sliding_min_max``.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    n = x.shape[0]
+    if not 1 <= w <= n:
+        raise ValueError(f"window {w} out of range for series of length {n}")
+    lo = np.array([x[s:s + w].min() for s in range(n - w + 1)])
+    hi = np.array([x[s:s + w].max() for s in range(n - w + 1)])
+    return lo, hi
+
+
+def interval_gap_ref(q, lo, hi, dist: str = "sq"):
+    """Distance from ``q`` to the interval [lo, hi]: 0 inside, else the
+    distance to the nearest endpoint (the clamp of q)."""
+    return local_dist(q, np.clip(q, lo, hi), dist)
+
+
+def lb_kim_ref(q: np.ndarray, lo: float, hi: float, dist: str = "sq") -> float:
+    """LB_Kim: first + last query elements against the window range
+    (a single element counted once when M == 1).
+
+    Admissible for the repo's *windowed* sDTW (free start/end inside the
+    window): any warp path aligns q[0] and q[-1] to distinct cells.
+    """
+    q = np.asarray(q, dtype=np.float64)
+    first = float(interval_gap_ref(q[0], lo, hi, dist))
+    if q.shape[0] == 1:
+        return first
+    return first + float(interval_gap_ref(q[-1], lo, hi, dist))
+
+
+def lb_keogh_ref(q: np.ndarray, lo: float, hi: float, dist: str = "sq") -> float:
+    """LB_Keogh, free-endpoint form: sum of every query element's gap to
+    the window's value range.
+
+    The envelope is the whole window's [min, max] — tighter per-row bands
+    are NOT admissible under a free start, since any query row may align
+    to any window column.  LB_Kim is a 2-term prefix of this sum, so
+    ``lb_kim_ref <= lb_keogh_ref <= windowed sdtw_ref`` always holds.
+    """
+    q = np.asarray(q, dtype=np.float64)
+    return float(interval_gap_ref(q, lo, hi, dist).sum())
+
+
+# --------------------------------------------------------------------------
 # uint8 codebook quantization (paper Discussion §8)
 # --------------------------------------------------------------------------
 

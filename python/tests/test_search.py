@@ -1,0 +1,110 @@
+"""Parity tests for the search lower bounds (rust/src/search/ ↔ ref.py).
+
+Two layers:
+  * fixture parity — ``rust/tests/fixtures/search_lb.json`` stores
+    float32 inputs plus the float64 bounds/costs this reference produces;
+    ``rust/tests/fixture_search.rs`` checks the Rust side against the
+    same file, so both implementations are pinned to one artifact.
+  * properties — the admissibility chain
+    ``lb_kim_ref <= lb_keogh_ref <= windowed sdtw_ref`` on random data
+    (the invariant the Rust cascade's losslessness proof rests on).
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+FIXTURE = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures" / "search_lb.json"
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+class TestFixtureParity:
+    def test_fixture_reproduces_from_inputs(self, fixture):
+        """The stored bounds/costs are exactly what ref.py computes from
+        the stored inputs — guards against fixture drift on either side."""
+        r = np.asarray(fixture["reference"], dtype=np.float64)
+        q = np.asarray(fixture["query"], dtype=np.float64)
+        w = fixture["window"]
+        lo, hi = ref.sliding_minmax_ref(r, w)
+        n_cand = r.shape[0] - w + 1
+        assert len(fixture["lb_kim"]) == n_cand
+        for s in range(n_cand):
+            assert ref.lb_kim_ref(q, lo[s], hi[s]) == pytest.approx(
+                fixture["lb_kim"][s], abs=1e-9
+            )
+            assert ref.lb_keogh_ref(q, lo[s], hi[s]) == pytest.approx(
+                fixture["lb_keogh"][s], abs=1e-9
+            )
+        # spot-check the (expensive) DP costs on a deterministic subset
+        for s in range(0, n_cand, 9):
+            cost, end = ref.sdtw_ref(q, r[s:s + w])
+            assert cost == pytest.approx(fixture["costs"][s], abs=1e-9)
+            assert end == fixture["ends"][s]
+
+    def test_fixture_chain_holds(self, fixture):
+        kim = np.asarray(fixture["lb_kim"])
+        keogh = np.asarray(fixture["lb_keogh"])
+        costs = np.asarray(fixture["costs"])
+        assert (kim <= keogh + 1e-12).all()
+        assert (keogh <= costs + 1e-9).all()
+
+    def test_fixture_inputs_are_float32_exact(self, fixture):
+        """Both languages must decode identical numbers: every stored
+        input is exactly representable in float32."""
+        for key in ("reference", "query"):
+            x = np.asarray(fixture[key], dtype=np.float64)
+            assert (x == x.astype(np.float32).astype(np.float64)).all()
+
+
+class TestLowerBoundProperties:
+    def test_chain_on_random_windows(self):
+        # seeded sweep (no hypothesis dependency): random walks of many
+        # shapes, both distance measures
+        for seed in range(120):
+            rng = np.random.default_rng(seed)
+            m = int(rng.integers(1, 13))
+            n = int(rng.integers(1, 29))
+            q = np.cumsum(rng.normal(size=m))
+            w = np.cumsum(rng.normal(size=n))
+            lo, hi = float(w.min()), float(w.max())
+            for dist in ("sq", "abs"):
+                kim = ref.lb_kim_ref(q, lo, hi, dist)
+                keogh = ref.lb_keogh_ref(q, lo, hi, dist)
+                cost, _ = ref.sdtw_ref(q, w, dist)
+                assert kim <= keogh + 1e-12, (seed, dist)
+                assert keogh <= cost + 1e-9, (seed, dist)
+
+    def test_exact_copy_is_free(self):
+        q = np.array([0.5, -1.0, 2.0])
+        assert ref.lb_kim_ref(q, -1.0, 2.0) == 0.0
+        assert ref.lb_keogh_ref(q, -1.0, 2.0) == 0.0
+
+    def test_kim_single_element_counted_once(self):
+        q = np.array([5.0])
+        # gap = (5-1)^2 = 16, not doubled
+        assert ref.lb_kim_ref(q, 0.0, 1.0) == pytest.approx(16.0)
+        assert ref.lb_keogh_ref(q, 0.0, 1.0) == pytest.approx(16.0)
+
+    def test_sliding_minmax_matches_naive(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=40)
+        for w in (1, 2, 7, 40):
+            lo, hi = ref.sliding_minmax_ref(x, w)
+            for s in range(x.shape[0] - w + 1):
+                assert lo[s] == x[s:s + w].min()
+                assert hi[s] == x[s:s + w].max()
+
+    def test_sliding_minmax_rejects_bad_window(self):
+        with pytest.raises(ValueError):
+            ref.sliding_minmax_ref(np.zeros(4), 5)
+        with pytest.raises(ValueError):
+            ref.sliding_minmax_ref(np.zeros(4), 0)

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::search::CascadeStats;
 use crate::util::stats::{gsps, LatencyHistogram};
 
 /// Shared, thread-safe metrics sink.
@@ -27,6 +28,14 @@ pub struct Metrics {
     busy_us: AtomicU64,
     latency: Mutex<LatencyHistogram>,
     queue_time: Mutex<LatencyHistogram>,
+    // ------------------------- search (top-K cascade) counters
+    searches: AtomicU64,
+    search_windows: AtomicU64,
+    search_pruned_kim: AtomicU64,
+    search_pruned_keogh: AtomicU64,
+    search_dp_abandoned: AtomicU64,
+    search_dp_full: AtomicU64,
+    search_latency: Mutex<LatencyHistogram>,
 }
 
 impl Metrics {
@@ -45,7 +54,30 @@ impl Metrics {
             busy_us: AtomicU64::new(0),
             latency: Mutex::new(LatencyHistogram::new()),
             queue_time: Mutex::new(LatencyHistogram::new()),
+            searches: AtomicU64::new(0),
+            search_windows: AtomicU64::new(0),
+            search_pruned_kim: AtomicU64::new(0),
+            search_pruned_keogh: AtomicU64::new(0),
+            search_dp_abandoned: AtomicU64::new(0),
+            search_dp_full: AtomicU64::new(0),
+            search_latency: Mutex::new(LatencyHistogram::new()),
         }
+    }
+
+    /// Record one completed top-K search and its cascade counters.
+    pub fn on_search(&self, latency_ms: f64, stats: &CascadeStats) {
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        self.search_windows
+            .fetch_add(stats.candidates, Ordering::Relaxed);
+        self.search_pruned_kim
+            .fetch_add(stats.pruned_kim, Ordering::Relaxed);
+        self.search_pruned_keogh
+            .fetch_add(stats.pruned_keogh, Ordering::Relaxed);
+        self.search_dp_abandoned
+            .fetch_add(stats.dp_abandoned, Ordering::Relaxed);
+        self.search_dp_full
+            .fetch_add(stats.dp_full, Ordering::Relaxed);
+        self.search_latency.lock().unwrap().record_ms(latency_ms);
     }
 
     pub fn on_submit(&self) {
@@ -87,6 +119,7 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let latency = self.latency.lock().unwrap();
         let queue = self.queue_time.lock().unwrap();
+        let search_latency = self.search_latency.lock().unwrap();
         let floats = self.floats.load(Ordering::Relaxed);
         let busy_ms = self.busy_us.load(Ordering::Relaxed) as f64 / 1e3;
         let wall_ms = self.started.elapsed().as_secs_f64() * 1e3;
@@ -109,6 +142,15 @@ impl Metrics {
             latency_p95_ms: latency.percentile_ms(95.0),
             latency_p99_ms: latency.percentile_ms(99.0),
             queue_mean_ms: queue.mean_ms(),
+            searches: self.searches.load(Ordering::Relaxed),
+            search_windows: self.search_windows.load(Ordering::Relaxed),
+            search_pruned_kim: self.search_pruned_kim.load(Ordering::Relaxed),
+            search_pruned_keogh: self.search_pruned_keogh.load(Ordering::Relaxed),
+            search_dp_abandoned: self.search_dp_abandoned.load(Ordering::Relaxed),
+            search_dp_full: self.search_dp_full.load(Ordering::Relaxed),
+            search_latency_mean_ms: search_latency.mean_ms(),
+            search_latency_p50_ms: search_latency.percentile_ms(50.0),
+            search_latency_p99_ms: search_latency.percentile_ms(99.0),
         }
     }
 }
@@ -144,6 +186,21 @@ pub struct MetricsSnapshot {
     pub latency_p95_ms: f64,
     pub latency_p99_ms: f64,
     pub queue_mean_ms: f64,
+    /// Top-K searches served.
+    pub searches: u64,
+    /// Candidate windows considered across all searches.
+    pub search_windows: u64,
+    /// Windows pruned by the LB_Kim stage.
+    pub search_pruned_kim: u64,
+    /// Windows pruned by the LB_Keogh stage.
+    pub search_pruned_keogh: u64,
+    /// Windows whose DP was abandoned mid-recurrence.
+    pub search_dp_abandoned: u64,
+    /// Windows that ran a full exact DP.
+    pub search_dp_full: u64,
+    pub search_latency_mean_ms: f64,
+    pub search_latency_p50_ms: f64,
+    pub search_latency_p99_ms: f64,
 }
 
 impl MetricsSnapshot {
@@ -157,8 +214,22 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Windows pruned before a full DP, across all searches.
+    pub fn search_pruned_total(&self) -> u64 {
+        self.search_pruned_kim + self.search_pruned_keogh + self.search_dp_abandoned
+    }
+
+    /// Fraction of candidate windows the cascade pruned, in [0, 1].
+    pub fn search_prune_fraction(&self) -> f64 {
+        if self.search_windows == 0 {
+            0.0
+        } else {
+            self.search_pruned_total() as f64 / self.search_windows as f64
+        }
+    }
+
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} responses={} errors={} rejected={} batches={} \
              padding={:.1}% device_gsps={:.6} offered_gsps={:.6} \
              latency(mean/p50/p95/p99)={:.2}/{:.2}/{:.2}/{:.2} ms queue={:.2} ms",
@@ -175,7 +246,25 @@ impl MetricsSnapshot {
             self.latency_p95_ms,
             self.latency_p99_ms,
             self.queue_mean_ms,
-        )
+        );
+        if self.searches > 0 {
+            out.push_str(&format!(
+                " searches={} windows={} pruned={:.1}% \
+                 (kim={} keogh={} abandoned={} full_dp={}) \
+                 search_latency(mean/p50/p99)={:.2}/{:.2}/{:.2} ms",
+                self.searches,
+                self.search_windows,
+                self.search_prune_fraction() * 100.0,
+                self.search_pruned_kim,
+                self.search_pruned_keogh,
+                self.search_dp_abandoned,
+                self.search_dp_full,
+                self.search_latency_mean_ms,
+                self.search_latency_p50_ms,
+                self.search_latency_p99_ms,
+            ));
+        }
+        out
     }
 }
 
@@ -213,7 +302,45 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.device_gsps, 0.0);
         assert_eq!(s.padding_fraction(), 0.0);
+        assert_eq!(s.searches, 0);
+        assert_eq!(s.search_prune_fraction(), 0.0);
         // render must not panic
         let _ = s.render();
+    }
+
+    #[test]
+    fn search_counters_accumulate() {
+        let m = Metrics::new();
+        m.on_search(
+            2.0,
+            &CascadeStats {
+                candidates: 100,
+                pruned_kim: 60,
+                pruned_keogh: 20,
+                dp_abandoned: 10,
+                dp_full: 10,
+            },
+        );
+        m.on_search(
+            4.0,
+            &CascadeStats {
+                candidates: 100,
+                pruned_kim: 80,
+                pruned_keogh: 0,
+                dp_abandoned: 0,
+                dp_full: 20,
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.searches, 2);
+        assert_eq!(s.search_windows, 200);
+        assert_eq!(s.search_pruned_kim, 140);
+        assert_eq!(s.search_pruned_keogh, 20);
+        assert_eq!(s.search_dp_abandoned, 10);
+        assert_eq!(s.search_dp_full, 30);
+        assert_eq!(s.search_pruned_total(), 170);
+        assert!((s.search_prune_fraction() - 0.85).abs() < 1e-12);
+        assert!((s.search_latency_mean_ms - 3.0).abs() < 1e-9);
+        assert!(s.render().contains("searches=2"));
     }
 }

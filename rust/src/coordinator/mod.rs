@@ -37,6 +37,8 @@ pub mod worker;
 pub use batcher::{Batch, BatchPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::BoundedQueue;
-pub use request::{AlignOptions, AlignRequest, AlignResponse, RequestId};
+pub use request::{
+    AlignOptions, AlignRequest, AlignResponse, RequestId, SearchOptions, SearchResponse,
+};
 pub use router::Router;
 pub use service::{SdtwService, ServiceOptions};

@@ -3,6 +3,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::search::{CascadeStats, Hit};
+
 pub type RequestId = u64;
 
 /// Client-facing alignment options (used by the router).
@@ -43,9 +45,79 @@ pub struct AlignResponse {
     pub variant: String,
 }
 
+/// Client-facing top-K search options.  Zero means "auto": `window`
+/// defaults to 3·qlen/2 (clamped to the reference), `exclusion` to half
+/// the window — both resolved by the service per request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SearchOptions {
+    /// Number of match sites to return.
+    pub k: usize,
+    /// Candidate window length (0 = auto).
+    pub window: usize,
+    /// Candidate stride over the reference.
+    pub stride: usize,
+    /// Trivial-match exclusion: minimum start distance between two
+    /// reported sites (0 = auto).
+    pub exclusion: usize,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        Self { k: 5, window: 0, stride: 1, exclusion: 0 }
+    }
+}
+
+impl SearchOptions {
+    /// Resolve the auto (zero) fields against a concrete query/reference
+    /// shape: `(window, stride, exclusion)`.  The single definition of
+    /// the protocol's "0 = auto" semantics — used by the service and the
+    /// CLI so they cannot drift.
+    pub fn resolve(&self, qlen: usize, reflen: usize) -> (usize, usize, usize) {
+        let window = if self.window == 0 {
+            (qlen + qlen / 2).min(reflen)
+        } else {
+            self.window
+        };
+        let stride = self.stride.max(1);
+        let exclusion = if self.exclusion == 0 { (window / 2).max(1) } else { self.exclusion };
+        (window, stride, exclusion)
+    }
+}
+
+/// The search answer: top-K sites plus the cascade's pruning telemetry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchResponse {
+    pub id: RequestId,
+    /// Best-first, non-overlapping match sites.
+    pub hits: Vec<Hit>,
+    /// End-to-end latency in milliseconds.
+    pub latency_ms: f64,
+    /// Per-stage cascade counters for this search.
+    pub stats: CascadeStats,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn search_options_default_is_auto() {
+        let o = SearchOptions::default();
+        assert_eq!(o.k, 5);
+        assert_eq!(o.window, 0);
+        assert_eq!(o.stride, 1);
+        assert_eq!(o.exclusion, 0);
+    }
+
+    #[test]
+    fn search_options_resolve_auto_and_explicit() {
+        let auto = SearchOptions::default().resolve(128, 2048);
+        assert_eq!(auto, (192, 1, 96));
+        // auto window clamps to the reference
+        assert_eq!(SearchOptions::default().resolve(128, 150), (150, 1, 75));
+        let explicit = SearchOptions { k: 3, window: 64, stride: 0, exclusion: 7 };
+        assert_eq!(explicit.resolve(128, 2048), (64, 1, 7));
+    }
 
     #[test]
     fn options_default_is_exact_f32() {

@@ -24,14 +24,16 @@ use anyhow::{Context, Result};
 use super::batcher::{BatchAssembler, BatchPolicy, Step};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::{BoundedQueue, PushError};
-use super::request::{AlignOptions, AlignRequest, AlignResponse};
+use super::request::{AlignOptions, AlignRequest, AlignResponse, SearchOptions, SearchResponse};
 use super::router::Router;
 use super::worker::{worker_loop, RoutedBatch};
 use crate::config::ServeConfig;
+use crate::dtw::Dist;
 use crate::log_info;
 use crate::normalize;
 use crate::runtime::artifact::{Manifest, VariantMeta};
 use crate::runtime::Engine;
+use crate::search::SearchEngine;
 
 /// Service construction options.
 #[derive(Clone, Debug)]
@@ -83,6 +85,11 @@ pub struct SdtwService {
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     batch_q: Arc<BoundedQueue<RoutedBatch>>,
+    /// The normalized reference (shared with workers and search engines).
+    reference: Arc<Vec<f32>>,
+    /// Lazily-built search engines, keyed by (window, stride) — the
+    /// envelope index is reused across every query with that shape.
+    search_engines: std::sync::Mutex<HashMap<(usize, usize), Arc<SearchEngine>>>,
 }
 
 impl SdtwService {
@@ -165,6 +172,8 @@ impl SdtwService {
             dispatcher: Some(dispatcher),
             workers,
             batch_q,
+            reference,
+            search_engines: std::sync::Mutex::new(HashMap::new()),
         })
     }
 
@@ -248,6 +257,79 @@ impl SdtwService {
                     .map_err(|e| anyhow::anyhow!(e))
             })
             .collect()
+    }
+
+    /// Top-K subsequence search over the service's reference: resolves
+    /// the auto options, z-normalizes the query (same flow as align),
+    /// runs the lower-bound cascade, and records search metrics.
+    ///
+    /// Runs on the calling thread — the cascade is a CPU index scan whose
+    /// pruning leaves little batchable work, so it bypasses the kernel
+    /// batcher (GPU-side LB is a ROADMAP open item).
+    pub fn search_blocking(
+        &self,
+        query: Vec<f32>,
+        options: SearchOptions,
+    ) -> Result<SearchResponse> {
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        anyhow::ensure!(options.k >= 1, "k must be >= 1");
+        let reflen = self.reference.len();
+        let (window, stride, exclusion) = options.resolve(query.len(), reflen);
+        anyhow::ensure!(
+            window <= reflen,
+            "window {window} exceeds reference length {reflen}"
+        );
+
+        let submitted = Instant::now();
+        let engine = self.search_engine(window, stride)?;
+        let qn = normalize::znormed(&query);
+        let outcome = engine.search(&qn, options.k, exclusion)?;
+        let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+        self.metrics.on_search(latency_ms, &outcome.stats);
+        Ok(SearchResponse {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            hits: outcome.hits,
+            latency_ms,
+            stats: outcome.stats,
+        })
+    }
+
+    /// Bound on cached search-engine shapes: (window, stride) is
+    /// client-controlled, so the cache must not grow with the union of
+    /// every shape ever requested.  Real traffic uses a handful of
+    /// shapes; evicting an arbitrary entry beyond this just costs the
+    /// evicted shape an O(reflen) index rebuild on its next request.
+    const SEARCH_ENGINE_CACHE_CAP: usize = 8;
+
+    /// Get or build the search engine for a (window, stride) shape.
+    fn search_engine(&self, window: usize, stride: usize) -> Result<Arc<SearchEngine>> {
+        let mut cache = self.search_engines.lock().unwrap();
+        if let Some(e) = cache.get(&(window, stride)) {
+            return Ok(e.clone());
+        }
+        if cache.len() >= Self::SEARCH_ENGINE_CACHE_CAP {
+            if let Some(&evict) = cache.keys().next() {
+                cache.remove(&evict);
+                log_info!(
+                    "search index cache full: evicted shape (window={}, stride={})",
+                    evict.0,
+                    evict.1
+                );
+            }
+        }
+        let engine = Arc::new(SearchEngine::new(
+            self.reference.clone(),
+            window,
+            stride,
+            Dist::Sq,
+        )?);
+        log_info!(
+            "built search index: window={window} stride={stride} ({} candidates, {} KiB)",
+            engine.index().candidates(),
+            engine.index().index_bytes() / 1024
+        );
+        cache.insert((window, stride), engine.clone());
+        Ok(engine)
     }
 
     /// Graceful shutdown: drain queued work, then stop threads.

@@ -22,6 +22,7 @@ pub mod dtw;
 pub mod normalize;
 pub mod quant;
 pub mod runtime;
+pub mod search;
 pub mod server;
 pub mod testutil;
 pub mod util;

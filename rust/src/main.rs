@@ -4,6 +4,8 @@
 //!   gen      generate a synthetic dataset (paper §4's generator)
 //!   align    run a dataset through the serving stack, verify vs the CPU
 //!            oracle, print metrics
+//!   search   top-K subsequence search with the lower-bound cascade
+//!            (CPU engine; no artifacts needed)
 //!   serve    start the TCP server over a generated reference
 //!   sweep    regenerate the Figure-3 segment-width series
 //!   inspect  list the artifact manifest
@@ -18,7 +20,7 @@ use anyhow::{Context, Result};
 
 use sdtw_repro::cli::Command;
 use sdtw_repro::config::{ConfigDoc, ServeConfig};
-use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::coordinator::{AlignOptions, SdtwService, SearchOptions, ServiceOptions};
 use sdtw_repro::datagen::{self, GenConfig};
 use sdtw_repro::dtw::{self, Dist};
 use sdtw_repro::normalize;
@@ -56,6 +58,7 @@ fn run(args: Vec<String>) -> Result<()> {
     match cmd {
         "gen" => cmd_gen(rest),
         "align" => cmd_align(rest),
+        "search" => cmd_search(rest),
         "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "inspect" => cmd_inspect(rest),
@@ -73,6 +76,7 @@ fn print_usage() {
          Commands:\n\
          \x20 gen      generate a synthetic dataset\n\
          \x20 align    align a dataset through the serving stack\n\
+         \x20 search   top-K subsequence search (lower-bound cascade)\n\
          \x20 serve    start the TCP server\n\
          \x20 sweep    segment-width sweep (Figure 3)\n\
          \x20 inspect  list artifact variants\n\n\
@@ -217,6 +221,128 @@ fn cmd_align(raw: Vec<String>) -> Result<()> {
             );
         }
         println!("verify OK (worst relative error {worst:.2e})");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- search
+
+fn cmd_search(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("search", "top-K subsequence search (lower-bound cascade)")
+        .opt_default("family", "walk", "reference family: cbf|walk|ecg")
+        .opt_default("reflen", "16384", "reference length")
+        .opt_default("qlen", "128", "query length")
+        .opt_default("k", "5", "match sites to report")
+        .opt_default("plant", "3", "warped copies of the query planted in the reference")
+        .opt_default("noise", "0.05", "noise added to planted copies")
+        .opt_default("seed", "42", "rng seed")
+        .opt_default("window", "0", "candidate window length (0 = 3*qlen/2)")
+        .opt_default("stride", "1", "candidate stride")
+        .opt_default("exclusion", "0", "min distance between reported sites (0 = window/2)")
+        .opt_default("shards", "1", "independent index shards")
+        .flag("no-cascade", "disable all pruning stages (brute force)")
+        .flag("verify", "cross-check hits against brute-force dtw::subsequence top-K");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+
+    let family = datagen::Family::from_name(a.get("family").unwrap())
+        .context("family must be cbf|walk|ecg")?;
+    let reflen: usize = a.get_or("reflen", 16384)?;
+    let qlen: usize = a.get_or("qlen", 128)?;
+    let k: usize = a.get_or("k", 5)?;
+    let plant: usize = a.get_or("plant", 3)?;
+    let noise: f64 = a.get_or("noise", 0.05)?;
+    let seed: u64 = a.get_or("seed", 42)?;
+    anyhow::ensure!(qlen >= 4 && reflen >= 4 * qlen, "need reflen >= 4*qlen and qlen >= 4");
+
+    // workload: a family stream with `plant` warped copies of one query
+    let mut rng = sdtw_repro::util::rng::Xoshiro256::new(seed);
+    let mut reference = family.series(reflen, &mut rng);
+    let query = family.series(qlen, &mut rng);
+    let mut planted = Vec::new();
+    for p in 0..plant {
+        let at = (p * 2 + 1) * reflen / (2 * plant).max(1);
+        let stretch = rng.uniform(0.8, 1.25);
+        let emb = sdtw_repro::datagen::embed_query(
+            &mut reference, &query, at, stretch, noise, &mut rng,
+        );
+        planted.push(emb);
+    }
+
+    // one source of truth for "0 = auto" (shared with the service/protocol)
+    let (window, stride, exclusion) = SearchOptions {
+        k,
+        window: a.get_or("window", 0usize)?,
+        stride: a.get_or("stride", 1usize)?,
+        exclusion: a.get_or("exclusion", 0usize)?,
+    }
+    .resolve(qlen, reflen);
+    let shards: usize = a.get_or("shards", 1)?;
+    let opts = if a.has("no-cascade") {
+        sdtw_repro::search::CascadeOpts::BRUTE
+    } else {
+        sdtw_repro::search::CascadeOpts::default()
+    };
+
+    let rn = Arc::new(normalize::znormed(&reference));
+    let qn = normalize::znormed(&query);
+    let t0 = std::time::Instant::now();
+    let engine = sdtw_repro::search::SearchEngine::new(rn, window, stride, Dist::Sq)?;
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    let out = engine.search_opts(&qn, k, exclusion, opts, shards)?;
+    let search_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    println!(
+        "reference {} ({reflen}) | query {qlen} | window {window} stride {stride} \
+         exclusion {exclusion} | {} candidates",
+        a.get("family").unwrap(),
+        engine.index().candidates()
+    );
+    for emb in &planted {
+        println!("planted copy at {}..{}", emb.start, emb.end);
+    }
+    println!("\n  rank   start    end        cost");
+    for (i, h) in out.hits.iter().enumerate() {
+        let near = planted
+            .iter()
+            .any(|e| h.end >= e.start.saturating_sub(qlen) && h.end <= e.end + qlen);
+        println!(
+            "  {:4}  {:6}  {:6}  {:10.4}{}",
+            i + 1,
+            h.start,
+            h.end,
+            h.cost,
+            if near { "  <- planted site" } else { "" }
+        );
+    }
+    let s = out.stats;
+    println!(
+        "\nindex build {build_ms:.1} ms | search {search_ms:.2} ms | \
+         pruned {:.1}% (kim={} keogh={} abandoned={} full_dp={})",
+        s.prune_fraction() * 100.0,
+        s.pruned_kim,
+        s.pruned_keogh,
+        s.dp_abandoned,
+        s.dp_full
+    );
+
+    if a.has("verify") {
+        let t2 = std::time::Instant::now();
+        let brute = engine.search_opts(&qn, k, exclusion, sdtw_repro::search::CascadeOpts::BRUTE, 1)?;
+        let brute_ms = t2.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            out.hits == brute.hits,
+            "cascade hits diverge from brute force:\n  cascade: {:?}\n  brute:   {:?}",
+            out.hits,
+            brute.hits
+        );
+        println!(
+            "verify OK — identical to brute force ({brute_ms:.1} ms; speedup {:.1}x)",
+            brute_ms / search_ms.max(1e-9)
+        );
     }
     Ok(())
 }

@@ -1,0 +1,394 @@
+//! The pruning cascade: LB_Kim → LB_Keogh → early-abandoning DP.
+//!
+//! ```text
+//!   candidate windows (index)          per-stage counters
+//!        │ sort by LB_Kim ascending
+//!        ▼
+//!   [stage 1: LB_Kim]  ── bound > τ ──► pruned_kim (and, because the
+//!        │                              list is sorted, everything
+//!        ▼                              after it — single cutoff)
+//!   [stage 2: LB_Keogh, early-abandoned at τ] ──► pruned_keogh
+//!        │
+//!        ▼
+//!   [stage 3: windowed sDTW, rows abandoned at τ] ──► dp_abandoned
+//!        │ complete
+//!        ▼
+//!     exact cost → bounded heap (τ) + hit list → greedy top-K
+//! ```
+//!
+//! τ is the [`BoundedCostHeap`] threshold: the `cap`-th smallest exact
+//! cost computed so far, with `cap` sized so that τ never drops below the
+//! final K-th greedy pick's cost (see `topk` module docs for the proof).
+//! Both bounds are admissible and the DP abandon test is conservative
+//! (row minima are non-decreasing), so every window that could appear in
+//! the exact top-K completes its DP — the cascade's results are
+//! bit-identical to brute force over all windows.
+//!
+//! Processing in ascending-LB_Kim order is the throughput lever: likely
+//! matches are costed first, τ drops early, and the one sorted pass lets
+//! stage 1 prune its entire tail with a single comparison.
+
+use std::ops::Range;
+
+use crate::dtw::subsequence::best_of_row;
+use crate::dtw::{Dist, Match};
+
+use super::index::ReferenceIndex;
+use super::lower_bounds::{lb_keogh, lb_kim};
+use super::topk::{prune_heap_cap, BoundedCostHeap, Hit};
+
+/// Which cascade stages are active (all on by default; the bench ablates
+/// them individually — all off = brute force over every window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CascadeOpts {
+    pub kim: bool,
+    pub keogh: bool,
+    pub abandon: bool,
+}
+
+impl Default for CascadeOpts {
+    fn default() -> Self {
+        Self { kim: true, keogh: true, abandon: true }
+    }
+}
+
+impl CascadeOpts {
+    /// Every stage disabled: exact DP on every candidate window.
+    pub const BRUTE: CascadeOpts = CascadeOpts { kim: false, keogh: false, abandon: false };
+}
+
+/// Per-stage pruning counters for one search (or one shard; mergeable).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CascadeStats {
+    /// Candidate windows considered.
+    pub candidates: u64,
+    /// Windows cut by the LB_Kim stage (includes the sorted-tail cutoff).
+    pub pruned_kim: u64,
+    /// Windows cut by the LB_Keogh stage.
+    pub pruned_keogh: u64,
+    /// Windows whose DP was abandoned mid-recurrence.
+    pub dp_abandoned: u64,
+    /// Windows that completed a full exact DP.
+    pub dp_full: u64,
+}
+
+impl CascadeStats {
+    /// Windows that never completed a full DP.
+    pub fn pruned_total(&self) -> u64 {
+        self.pruned_kim + self.pruned_keogh + self.dp_abandoned
+    }
+
+    /// Fraction of candidate windows pruned before a full DP, in [0, 1].
+    pub fn prune_fraction(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.pruned_total() as f64 / self.candidates as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &CascadeStats) {
+        self.candidates += other.candidates;
+        self.pruned_kim += other.pruned_kim;
+        self.pruned_keogh += other.pruned_keogh;
+        self.dp_abandoned += other.dp_abandoned;
+        self.dp_full += other.dp_full;
+    }
+}
+
+/// Windowed sDTW with row-level early abandoning.
+///
+/// Identical recurrence, operation order, and `(min, argmin)` extraction
+/// to [`crate::dtw::sdtw`] — when the result is `Some`, both `cost` and
+/// `end` are bit-identical to `sdtw(query, window, dist)`.  Returns
+/// `None` as soon as a whole DP row exceeds `abandon_at` (row minima are
+/// non-decreasing, so the final cost would also exceed it), or when the
+/// final cost does.
+pub fn sdtw_window_abandoning(
+    query: &[f32],
+    window: &[f32],
+    abandon_at: f32,
+    dist: Dist,
+) -> Option<Match> {
+    let mut prev = vec![0f32; window.len()];
+    let mut cur = vec![0f32; window.len()];
+    sdtw_window_abandoning_into(query, window, abandon_at, dist, &mut prev, &mut cur)
+}
+
+/// Buffer-reusing form of [`sdtw_window_abandoning`] (the cascade calls
+/// this once per surviving candidate; `prev`/`cur` are scratch rows).
+pub fn sdtw_window_abandoning_into(
+    query: &[f32],
+    window: &[f32],
+    abandon_at: f32,
+    dist: Dist,
+    prev: &mut Vec<f32>,
+    cur: &mut Vec<f32>,
+) -> Option<Match> {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!window.is_empty(), "empty window");
+    let n = window.len();
+    prev.clear();
+    prev.resize(n, 0.0);
+    cur.clear();
+    cur.resize(n, 0.0);
+
+    // row 0: free start within the window
+    let q0 = query[0];
+    let mut row_min = f32::INFINITY;
+    for (j, p) in prev.iter_mut().enumerate() {
+        *p = dist.eval(q0, window[j]);
+        row_min = row_min.min(*p);
+    }
+    if row_min > abandon_at {
+        return None;
+    }
+    for &qi in &query[1..] {
+        cur[0] = prev[0] + dist.eval(qi, window[0]);
+        let mut row_min = cur[0];
+        for j in 1..n {
+            let best = prev[j].min(cur[j - 1]).min(prev[j - 1]);
+            cur[j] = best + dist.eval(qi, window[j]);
+            row_min = row_min.min(cur[j]);
+        }
+        if row_min > abandon_at {
+            return None;
+        }
+        std::mem::swap(prev, cur);
+    }
+    let m = best_of_row(prev);
+    if m.cost > abandon_at {
+        None
+    } else {
+        Some(m)
+    }
+}
+
+/// Run the cascade over candidates `range` of the index.  Returns every
+/// hit whose exact cost was computed (superset of any top-K that
+/// `select_topk(k, exclusion)` can produce over the full candidate set)
+/// plus the per-stage counters.
+pub fn search_range(
+    index: &ReferenceIndex,
+    query: &[f32],
+    dist: Dist,
+    k: usize,
+    exclusion: usize,
+    opts: CascadeOpts,
+    range: Range<usize>,
+) -> (Vec<Hit>, CascadeStats) {
+    let mut stats = CascadeStats { candidates: range.len() as u64, ..Default::default() };
+    let mut hits: Vec<Hit> = Vec::new();
+    if k == 0 || range.is_empty() {
+        return (hits, stats);
+    }
+    // clamp to the candidate count: a heap that could hold every
+    // candidate never fills, so pruning disengages rather than the cap
+    // formula driving a huge allocation for adversarial k/exclusion
+    let cap = prune_heap_cap(k, exclusion, index.stride()).min(range.len());
+    let mut heap = BoundedCostHeap::new(cap);
+
+    // stage 1 precompute: LB_Kim per candidate, processed cheapest-first
+    let mut order: Vec<(f32, usize)> = range
+        .map(|t| {
+            let lb = if opts.kim {
+                let (lo, hi) = index.envelope(t);
+                lb_kim(query, lo, hi, dist)
+            } else {
+                0.0
+            };
+            (lb, t)
+        })
+        .collect();
+    if opts.kim {
+        order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    }
+
+    let mut prev = Vec::new();
+    let mut cur = Vec::new();
+    for (i, &(kim, t)) in order.iter().enumerate() {
+        let tau = heap.threshold();
+        if opts.kim && kim > tau {
+            // sorted ascending: everything from here on is also above τ
+            stats.pruned_kim += (order.len() - i) as u64;
+            break;
+        }
+        if opts.keogh {
+            let (lo, hi) = index.envelope(t);
+            if lb_keogh(query, lo, hi, dist, tau) > tau {
+                stats.pruned_keogh += 1;
+                continue;
+            }
+        }
+        let abandon_at = if opts.abandon { tau } else { f32::INFINITY };
+        match sdtw_window_abandoning_into(
+            query,
+            index.window_slice(t),
+            abandon_at,
+            dist,
+            &mut prev,
+            &mut cur,
+        ) {
+            None => stats.dp_abandoned += 1,
+            Some(m) => {
+                stats.dp_full += 1;
+                heap.push(m.cost);
+                let start = index.start(t);
+                hits.push(Hit { start, end: start + m.end, cost: m.cost });
+            }
+        }
+    }
+    (hits, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::dtw::sdtw;
+    use crate::search::topk::select_topk;
+    use crate::util::rng::Xoshiro256;
+
+    fn brute_hits(query: &[f32], index: &ReferenceIndex, dist: Dist) -> Vec<Hit> {
+        (0..index.candidates())
+            .map(|t| {
+                let m = sdtw(query, index.window_slice(t), dist);
+                let start = index.start(t);
+                Hit { start, end: start + m.end, cost: m.cost }
+            })
+            .collect()
+    }
+
+    fn assert_hits_identical(a: &[Hit], b: &[Hit]) {
+        assert_eq!(a.len(), b.len(), "pick counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "cost not bit-identical");
+        }
+    }
+
+    #[test]
+    fn abandoning_dp_matches_sdtw_when_not_abandoned() {
+        let mut g = Xoshiro256::new(31);
+        for _ in 0..100 {
+            let q = g.normal_vec_f32(1 + g.below(10) as usize);
+            let w = g.normal_vec_f32(1 + g.below(20) as usize);
+            let want = sdtw(&q, &w, Dist::Sq);
+            let got = sdtw_window_abandoning(&q, &w, f32::INFINITY, Dist::Sq).unwrap();
+            assert_eq!(got.cost.to_bits(), want.cost.to_bits());
+            assert_eq!(got.end, want.end);
+        }
+    }
+
+    #[test]
+    fn abandoning_dp_none_only_when_above_threshold() {
+        let mut g = Xoshiro256::new(32);
+        for _ in 0..200 {
+            let q = g.normal_vec_f32(2 + g.below(8) as usize);
+            let w = g.normal_vec_f32(2 + g.below(16) as usize);
+            let tau = g.uniform(0.0, 20.0) as f32;
+            let want = sdtw(&q, &w, Dist::Sq);
+            match sdtw_window_abandoning(&q, &w, tau, Dist::Sq) {
+                Some(m) => {
+                    assert!(m.cost <= tau);
+                    assert_eq!(m.cost.to_bits(), want.cost.to_bits());
+                    assert_eq!(m.end, want.end);
+                }
+                None => assert!(want.cost > tau, "abandoned but cost {} <= {tau}", want.cost),
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_topk_equals_brute_topk() {
+        let mut g = Xoshiro256::new(33);
+        for trial in 0..30 {
+            let n = 80 + g.below(160) as usize;
+            let r = Arc::new(g.normal_vec_f32(n));
+            let m = 4 + g.below(10) as usize;
+            let window = (m + g.below(8) as usize).min(n);
+            let stride = 1 + g.below(3) as usize;
+            let index = ReferenceIndex::build(r, window, stride).unwrap();
+            let q = g.normal_vec_f32(m);
+            let k = 1 + g.below(4) as usize;
+            let exclusion = 1 + g.below(window as u64) as usize;
+
+            let brute = select_topk(&brute_hits(&q, &index, Dist::Sq), k, exclusion);
+            let (hits, stats) =
+                search_range(&index, &q, Dist::Sq, k, exclusion, CascadeOpts::default(), 0..index.candidates());
+            let cascade = select_topk(&hits, k, exclusion);
+            assert_hits_identical(&cascade, &brute);
+            assert_eq!(
+                stats.pruned_total() + stats.dp_full,
+                stats.candidates,
+                "trial {trial}: counters must partition candidates"
+            );
+        }
+    }
+
+    #[test]
+    fn brute_opts_compute_every_window() {
+        let mut g = Xoshiro256::new(34);
+        let r = Arc::new(g.normal_vec_f32(100));
+        let index = ReferenceIndex::build(r, 12, 1).unwrap();
+        let q = g.normal_vec_f32(8);
+        let (hits, stats) =
+            search_range(&index, &q, Dist::Sq, 3, 6, CascadeOpts::BRUTE, 0..index.candidates());
+        assert_eq!(hits.len(), index.candidates());
+        assert_eq!(stats.dp_full, index.candidates() as u64);
+        assert_eq!(stats.pruned_total(), 0);
+    }
+
+    #[test]
+    fn k_zero_is_empty() {
+        let mut g = Xoshiro256::new(35);
+        let r = Arc::new(g.normal_vec_f32(50));
+        let index = ReferenceIndex::build(r, 10, 1).unwrap();
+        let (hits, stats) = search_range(
+            &index,
+            &[1.0, 2.0],
+            Dist::Sq,
+            0,
+            5,
+            CascadeOpts::default(),
+            0..index.candidates(),
+        );
+        assert!(hits.is_empty());
+        assert_eq!(stats.dp_full, 0);
+    }
+
+    #[test]
+    fn planted_motif_prunes_most_windows() {
+        // a long drifting walk with one embedded copy of the query: after
+        // the heap fills, far-away windows should die in stage 1/2
+        let mut g = Xoshiro256::new(36);
+        let n = 4096;
+        let mut r = Vec::with_capacity(n);
+        let mut level = 0f64;
+        for _ in 0..n {
+            level += g.normal() * 0.3;
+            r.push(level as f32);
+        }
+        let q = g.normal_vec_f32(32);
+        r[1000..1032].copy_from_slice(&q);
+        let index = ReferenceIndex::build(Arc::new(r), 48, 1).unwrap();
+        let (hits, stats) = search_range(
+            &index,
+            &q,
+            Dist::Sq,
+            2,
+            24,
+            CascadeOpts::default(),
+            0..index.candidates(),
+        );
+        let picks = select_topk(&hits, 2, 24);
+        assert!(picks[0].start >= 984 - 24 && picks[0].start <= 1008, "found the plant");
+        assert!(
+            stats.prune_fraction() > 0.5,
+            "expected heavy pruning, got {:?}",
+            stats
+        );
+    }
+}

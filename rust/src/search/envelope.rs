@@ -1,0 +1,179 @@
+//! Streaming min/max envelopes (Lemire 2009) — the O(n) substrate for the
+//! lower-bound cascade.
+//!
+//! Two shapes are needed:
+//! * [`sliding_min_max`] — min/max over every length-`w` window of a
+//!   series (one output per window start).  The reference index uses this
+//!   to precompute per-candidate-window value ranges.
+//! * [`sakoe_chiba_envelope`] — the classic UCR-suite envelope: per
+//!   position `i`, min/max over `[i-band, i+band]` (clipped).  Kept for
+//!   banded LB variants (GPU-side LB is a ROADMAP open item).
+//!
+//! Both run one pass with monotonic deques: each index enters and leaves
+//! each deque at most once, so the cost is O(n) regardless of `w`/`band`.
+
+use std::collections::VecDeque;
+
+/// Min and max over every `w`-window of `x`.  Returns `(lo, hi)` with
+/// `lo[s] = min(x[s..s+w])`, `hi[s] = max(x[s..s+w])`, each of length
+/// `x.len() - w + 1`.
+///
+/// Panics if `w == 0` or `w > x.len()`.
+pub fn sliding_min_max(x: &[f32], w: usize) -> (Vec<f32>, Vec<f32>) {
+    assert!(w >= 1, "window must be >= 1");
+    assert!(w <= x.len(), "window {} > series {}", w, x.len());
+    let out_len = x.len() - w + 1;
+    let mut lo = Vec::with_capacity(out_len);
+    let mut hi = Vec::with_capacity(out_len);
+    // deques hold indices; values at those indices are monotone
+    // (increasing for min, decreasing for max) from front to back
+    let mut min_q: VecDeque<usize> = VecDeque::new();
+    let mut max_q: VecDeque<usize> = VecDeque::new();
+
+    for (j, &v) in x.iter().enumerate() {
+        while min_q.back().is_some_and(|&b| x[b] >= v) {
+            min_q.pop_back();
+        }
+        min_q.push_back(j);
+        while max_q.back().is_some_and(|&b| x[b] <= v) {
+            max_q.pop_back();
+        }
+        max_q.push_back(j);
+
+        if j + 1 >= w {
+            let s = j + 1 - w;
+            // retire indices that fell out of the window [s, s+w)
+            while min_q.front().is_some_and(|&f| f < s) {
+                min_q.pop_front();
+            }
+            while max_q.front().is_some_and(|&f| f < s) {
+                max_q.pop_front();
+            }
+            lo.push(x[*min_q.front().unwrap()]);
+            hi.push(x[*max_q.front().unwrap()]);
+        }
+    }
+    (lo, hi)
+}
+
+/// Sakoe-Chiba envelope: `lo[i] = min(x[i-band ..= i+band])` (clipped to
+/// the series), `hi[i]` the max — one output per input position.
+pub fn sakoe_chiba_envelope(x: &[f32], band: usize) -> (Vec<f32>, Vec<f32>) {
+    assert!(!x.is_empty(), "empty series");
+    let n = x.len();
+    let mut lo = Vec::with_capacity(n);
+    let mut hi = Vec::with_capacity(n);
+    let mut min_q: VecDeque<usize> = VecDeque::new();
+    let mut max_q: VecDeque<usize> = VecDeque::new();
+    let mut ingested = 0usize; // next index to enter the deques
+    for i in 0..n {
+        // grow the right edge to i+band (clipped), retire below i-band
+        let right = (i + band + 1).min(n);
+        while ingested < right {
+            let v = x[ingested];
+            while min_q.back().is_some_and(|&b| x[b] >= v) {
+                min_q.pop_back();
+            }
+            min_q.push_back(ingested);
+            while max_q.back().is_some_and(|&b| x[b] <= v) {
+                max_q.pop_back();
+            }
+            max_q.push_back(ingested);
+            ingested += 1;
+        }
+        let left = i.saturating_sub(band);
+        while min_q.front().is_some_and(|&f| f < left) {
+            min_q.pop_front();
+        }
+        while max_q.front().is_some_and(|&f| f < left) {
+            max_q.pop_front();
+        }
+        lo.push(x[*min_q.front().unwrap()]);
+        hi.push(x[*max_q.front().unwrap()]);
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn brute_sliding(x: &[f32], w: usize) -> (Vec<f32>, Vec<f32>) {
+        (0..=x.len() - w)
+            .map(|s| {
+                let win = &x[s..s + w];
+                let lo = win.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = win.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                (lo, hi)
+            })
+            .unzip()
+    }
+
+    #[test]
+    fn sliding_matches_brute_force() {
+        let mut g = Xoshiro256::new(61);
+        for n in [1usize, 2, 5, 17, 64] {
+            let x = g.normal_vec_f32(n);
+            for w in [1usize, 2, 3, n] {
+                if w > n {
+                    continue;
+                }
+                let (lo, hi) = sliding_min_max(&x, w);
+                let (blo, bhi) = brute_sliding(&x, w);
+                assert_eq!(lo, blo, "n={n} w={w}");
+                assert_eq!(hi, bhi, "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_one_is_identity() {
+        let x = [3.0f32, -1.0, 2.0];
+        let (lo, hi) = sliding_min_max(&x, 1);
+        assert_eq!(lo, x.to_vec());
+        assert_eq!(hi, x.to_vec());
+    }
+
+    #[test]
+    fn full_window_is_global_extrema() {
+        let x = [3.0f32, -1.0, 2.0, 7.0];
+        let (lo, hi) = sliding_min_max(&x, 4);
+        assert_eq!(lo, vec![-1.0]);
+        assert_eq!(hi, vec![7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "window")]
+    fn oversized_window_panics() {
+        sliding_min_max(&[1.0, 2.0], 3);
+    }
+
+    #[test]
+    fn sakoe_chiba_matches_brute() {
+        let mut g = Xoshiro256::new(62);
+        let x = g.normal_vec_f32(40);
+        for band in [0usize, 1, 3, 10, 100] {
+            let (lo, hi) = sakoe_chiba_envelope(&x, band);
+            for i in 0..x.len() {
+                let a = i.saturating_sub(band);
+                let b = (i + band + 1).min(x.len());
+                let win = &x[a..b];
+                let blo = win.iter().cloned().fold(f32::INFINITY, f32::min);
+                let bhi = win.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                assert_eq!(lo[i], blo, "band={band} i={i}");
+                assert_eq!(hi[i], bhi, "band={band} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn envelope_contains_series() {
+        let mut g = Xoshiro256::new(63);
+        let x = g.normal_vec_f32(50);
+        let (lo, hi) = sakoe_chiba_envelope(&x, 4);
+        for i in 0..x.len() {
+            assert!(lo[i] <= x[i] && x[i] <= hi[i]);
+        }
+    }
+}

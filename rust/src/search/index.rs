@@ -1,0 +1,177 @@
+//! Prebuilt reference index: the per-window envelopes the lower-bound
+//! cascade consumes, built once per (reference, window, stride) and
+//! reused across every query.
+//!
+//! The reference series is held pre-normalized (the service z-normalizes
+//! once at startup, the paper's §5 flow); candidate windows are slices of
+//! it — no per-window copies.  The index is *shardable by reference
+//! segment*: [`ReferenceIndex::shard_ranges`] splits the candidate space
+//! into contiguous ranges that can be cascaded independently (each shard
+//! runs its own sound prune threshold — see `topk` docs — so merged
+//! results are still exact).  Later PRs can place shards on different
+//! workers.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::envelope::sliding_min_max;
+
+/// Envelope index over one reference series.
+#[derive(Clone, Debug)]
+pub struct ReferenceIndex {
+    reference: Arc<Vec<f32>>,
+    window: usize,
+    stride: usize,
+    /// Per-candidate window minimum (candidate t covers start t*stride).
+    win_lo: Vec<f32>,
+    /// Per-candidate window maximum.
+    win_hi: Vec<f32>,
+}
+
+impl ReferenceIndex {
+    /// Build the index: one Lemire sweep over the reference, then a
+    /// stride-subsampled view of the per-start envelopes.
+    pub fn build(reference: Arc<Vec<f32>>, window: usize, stride: usize) -> Result<Self> {
+        anyhow::ensure!(window >= 1, "window must be >= 1");
+        anyhow::ensure!(stride >= 1, "stride must be >= 1");
+        anyhow::ensure!(
+            window <= reference.len(),
+            "window {} > reference length {}",
+            window,
+            reference.len()
+        );
+        let (all_lo, all_hi) = sliding_min_max(&reference, window);
+        let candidates = (reference.len() - window) / stride + 1;
+        let mut win_lo = Vec::with_capacity(candidates);
+        let mut win_hi = Vec::with_capacity(candidates);
+        for t in 0..candidates {
+            win_lo.push(all_lo[t * stride]);
+            win_hi.push(all_hi[t * stride]);
+        }
+        Ok(Self { reference, window, stride, win_lo, win_hi })
+    }
+
+    /// Number of candidate windows.
+    pub fn candidates(&self) -> usize {
+        self.win_lo.len()
+    }
+
+    /// Reference start position of candidate `t`.
+    #[inline]
+    pub fn start(&self, t: usize) -> usize {
+        t * self.stride
+    }
+
+    /// The candidate window itself (a slice of the normalized reference).
+    #[inline]
+    pub fn window_slice(&self, t: usize) -> &[f32] {
+        let s = self.start(t);
+        &self.reference[s..s + self.window]
+    }
+
+    /// `(min, max)` of candidate `t`'s window.
+    #[inline]
+    pub fn envelope(&self, t: usize) -> (f32, f32) {
+        (self.win_lo[t], self.win_hi[t])
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn reference(&self) -> &Arc<Vec<f32>> {
+        &self.reference
+    }
+
+    /// Split the candidate space into up to `n_shards` contiguous ranges
+    /// of near-equal size (empty ranges are dropped).
+    pub fn shard_ranges(&self, n_shards: usize) -> Vec<Range<usize>> {
+        let n = self.candidates();
+        let shards = n_shards.max(1).min(n.max(1));
+        let base = n / shards;
+        let extra = n % shards;
+        let mut out = Vec::with_capacity(shards);
+        let mut at = 0usize;
+        for i in 0..shards {
+            let len = base + usize::from(i < extra);
+            if len > 0 {
+                out.push(at..at + len);
+            }
+            at += len;
+        }
+        out
+    }
+
+    /// Index memory footprint (envelopes only; the reference is shared).
+    pub fn index_bytes(&self) -> usize {
+        (self.win_lo.len() + self.win_hi.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn index(n: usize, window: usize, stride: usize, seed: u64) -> ReferenceIndex {
+        let mut g = Xoshiro256::new(seed);
+        ReferenceIndex::build(Arc::new(g.normal_vec_f32(n)), window, stride).unwrap()
+    }
+
+    #[test]
+    fn candidate_count_and_starts() {
+        let ix = index(100, 16, 1, 1);
+        assert_eq!(ix.candidates(), 85);
+        assert_eq!(ix.start(0), 0);
+        assert_eq!(ix.start(84), 84);
+        let ix3 = index(100, 16, 3, 1);
+        assert_eq!(ix3.candidates(), 29); // starts 0,3,...,84
+        assert_eq!(ix3.start(28), 84);
+        assert_eq!(ix3.window_slice(28).len(), 16);
+    }
+
+    #[test]
+    fn envelopes_match_window_extrema() {
+        let ix = index(64, 9, 2, 2);
+        for t in 0..ix.candidates() {
+            let w = ix.window_slice(t);
+            let lo = w.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(ix.envelope(t), (lo, hi), "candidate {t}");
+        }
+    }
+
+    #[test]
+    fn shard_ranges_partition_candidates() {
+        let ix = index(200, 20, 1, 3);
+        for shards in [1usize, 2, 3, 7, 1000] {
+            let ranges = ix.shard_ranges(shards);
+            assert!(!ranges.is_empty());
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, ix.candidates());
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn window_equal_to_reference_is_one_candidate() {
+        let ix = index(32, 32, 1, 4);
+        assert_eq!(ix.candidates(), 1);
+        assert_eq!(ix.window_slice(0).len(), 32);
+    }
+
+    #[test]
+    fn oversized_window_rejected() {
+        let mut g = Xoshiro256::new(5);
+        let r = Arc::new(g.normal_vec_f32(8));
+        assert!(ReferenceIndex::build(r, 9, 1).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Admissible lower bounds on *windowed* sDTW cost.
+//!
+//! The cascade compares a query `q` (length M) against a candidate window
+//! `w = r[s..s+L]` under the repo's subsequence semantics (free start and
+//! free end **inside the window**, `dtw::subsequence` recurrence).  Any
+//! warp path then:
+//!
+//! 1. aligns every query element to *some* window element — so each query
+//!    row contributes at least its distance to the window's value range
+//!    `[lo, hi]` ([`lb_keogh`], the UCR LB_Keogh idea specialised to the
+//!    free-endpoint envelope, which is the whole window's range);
+//! 2. in particular aligns `q[0]` and `q[M-1]` to two distinct cells
+//!    (distinct whenever M >= 2) — the 2-point [`lb_kim`] prefix of the
+//!    same sum (Kim et al.'s first/last-point bound).
+//!
+//! Hence the cascade chain `LB_Kim <= LB_Keogh <= sDTW(q, w)` holds by
+//! construction: Kim is two terms of Keogh's sum, and Keogh's sum is
+//! dominated by the per-row minimum costs of any path.  Tighter per-row
+//! (banded) envelopes are **not** admissible here: the free start lets a
+//! path align any query row to any window column, so only the full-window
+//! range bounds every alignment.
+//!
+//! Both bounds support *early abandoning*: once a partial sum exceeds the
+//! caller's threshold the rest of the sum cannot bring it back down
+//! (terms are non-negative), so the partial sum is returned immediately —
+//! still an admissible lower bound.
+
+use crate::dtw::Dist;
+
+/// Distance from `q` to the interval `[lo, hi]` under `dist`: zero inside
+/// the interval, else the distance to the nearest endpoint (the closest
+/// point of the interval is `clamp(q)`).
+#[inline(always)]
+pub fn interval_gap(q: f32, lo: f32, hi: f32, dist: Dist) -> f32 {
+    debug_assert!(lo <= hi, "inverted envelope [{lo}, {hi}]");
+    dist.eval(q, q.clamp(lo, hi))
+}
+
+/// LB_Kim: first + last query elements against the window range.
+/// For M == 1 the single element is counted once.
+pub fn lb_kim(query: &[f32], lo: f32, hi: f32, dist: Dist) -> f32 {
+    assert!(!query.is_empty(), "empty query");
+    let first = interval_gap(query[0], lo, hi, dist);
+    if query.len() == 1 {
+        first
+    } else {
+        first + interval_gap(query[query.len() - 1], lo, hi, dist)
+    }
+}
+
+/// LB_Keogh (free-endpoint form): sum of every query element's gap to the
+/// window range, early-abandoned once the partial sum exceeds
+/// `abandon_at` (pass `f32::INFINITY` for the full bound).
+pub fn lb_keogh(query: &[f32], lo: f32, hi: f32, dist: Dist, abandon_at: f32) -> f32 {
+    assert!(!query.is_empty(), "empty query");
+    let mut sum = 0f32;
+    for &q in query {
+        sum += interval_gap(q, lo, hi, dist);
+        if sum > abandon_at {
+            return sum;
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::sdtw;
+    use crate::util::rng::Xoshiro256;
+
+    fn range_of(w: &[f32]) -> (f32, f32) {
+        let lo = w.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        (lo, hi)
+    }
+
+    #[test]
+    fn gap_zero_inside_interval() {
+        assert_eq!(interval_gap(0.5, 0.0, 1.0, Dist::Sq), 0.0);
+        assert_eq!(interval_gap(0.0, 0.0, 1.0, Dist::Sq), 0.0);
+        assert_eq!(interval_gap(2.0, 0.0, 1.0, Dist::Sq), 1.0);
+        assert_eq!(interval_gap(-3.0, 0.0, 1.0, Dist::Abs), 3.0);
+    }
+
+    #[test]
+    fn kim_is_prefix_of_keogh() {
+        let mut g = Xoshiro256::new(71);
+        for _ in 0..50 {
+            let q = g.normal_vec_f32(1 + g.below(12) as usize);
+            let w = g.normal_vec_f32(2 + g.below(20) as usize);
+            let (lo, hi) = range_of(&w);
+            for dist in [Dist::Sq, Dist::Abs] {
+                let kim = lb_kim(&q, lo, hi, dist);
+                let keogh = lb_keogh(&q, lo, hi, dist, f32::INFINITY);
+                assert!(
+                    kim <= keogh + 1e-6,
+                    "kim {kim} > keogh {keogh} (m={})",
+                    q.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_admissible_vs_windowed_sdtw() {
+        let mut g = Xoshiro256::new(72);
+        for _ in 0..200 {
+            let q = g.normal_vec_f32(1 + g.below(10) as usize);
+            let w = g.normal_vec_f32(1 + g.below(24) as usize);
+            let (lo, hi) = range_of(&w);
+            for dist in [Dist::Sq, Dist::Abs] {
+                let cost = sdtw(&q, &w, dist).cost;
+                let keogh = lb_keogh(&q, lo, hi, dist, f32::INFINITY);
+                assert!(
+                    keogh <= cost + 1e-3 * cost.max(1.0),
+                    "keogh {keogh} > cost {cost}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abandoned_sum_is_partial_and_still_a_bound() {
+        let q = [10.0f32, 10.0, 10.0, 10.0];
+        // gap per element = 81 (10 vs [0,1], sq)
+        let full = lb_keogh(&q, 0.0, 1.0, Dist::Sq, f32::INFINITY);
+        assert_eq!(full, 4.0 * 81.0);
+        let partial = lb_keogh(&q, 0.0, 1.0, Dist::Sq, 100.0);
+        assert!(partial > 100.0 && partial <= full);
+        assert_eq!(partial, 2.0 * 81.0); // abandoned after the 2nd term
+    }
+
+    #[test]
+    fn exact_copy_window_has_zero_bound() {
+        let q = [0.3f32, -0.2, 0.9];
+        let (lo, hi) = range_of(&q);
+        assert_eq!(lb_kim(&q, lo, hi, Dist::Sq), 0.0);
+        assert_eq!(lb_keogh(&q, lo, hi, Dist::Sq, f32::INFINITY), 0.0);
+    }
+}

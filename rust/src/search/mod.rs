@@ -1,0 +1,228 @@
+//! Top-K subsequence search engine with a lower-bound pruning cascade.
+//!
+//! The batch kernel answers "what is the best match cost of this query";
+//! the workloads that motivate it — motif discovery, read-until signal
+//! matching — need *search*: the K best, non-overlapping match sites per
+//! query across a long reference.  This subsystem builds that layer on
+//! top of the `dtw` substrate, in the UCR-suite lineage: cheap admissible
+//! lower bounds prune the vast majority of candidate windows before the
+//! expensive DP runs.
+//!
+//! * [`envelope`]     — streaming (Lemire) min/max envelopes
+//! * [`lower_bounds`] — LB_Kim / LB_Keogh with early abandoning
+//! * [`cascade`]      — the LB_Kim → LB_Keogh → early-abandon-DP pipeline
+//!                      with per-stage prune counters
+//! * [`topk`]         — bounded-heap thresholding + trivial-match-excluded
+//!                      greedy selection (with the losslessness proof)
+//! * [`index`]        — the prebuilt, shardable reference index
+//! * [`SearchEngine`] — the facade the coordinator/CLI/examples use
+//!
+//! Results are **bit-identical** to brute-forcing `dtw::sdtw` over every
+//! candidate window — pruning is an optimization, never an approximation.
+//! Inputs are assumed pre-normalized (the service z-normalizes the
+//! reference once at startup and each query on submission, exactly like
+//! the align path).
+
+pub mod cascade;
+pub mod envelope;
+pub mod index;
+pub mod lower_bounds;
+pub mod topk;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+pub use cascade::{sdtw_window_abandoning, CascadeOpts, CascadeStats};
+pub use index::ReferenceIndex;
+pub use topk::{select_topk, Hit};
+
+use crate::dtw::Dist;
+
+/// Outcome of one query's search.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchOutcome {
+    /// The top-K match sites, best first.
+    pub hits: Vec<Hit>,
+    /// Per-stage cascade counters.
+    pub stats: CascadeStats,
+}
+
+/// The search facade: a prebuilt [`ReferenceIndex`] plus the distance
+/// measure, reused across queries.
+#[derive(Clone, Debug)]
+pub struct SearchEngine {
+    index: ReferenceIndex,
+    dist: Dist,
+}
+
+impl SearchEngine {
+    /// Build an engine over a (pre-normalized) reference.
+    pub fn new(
+        reference: Arc<Vec<f32>>,
+        window: usize,
+        stride: usize,
+        dist: Dist,
+    ) -> Result<SearchEngine> {
+        Ok(SearchEngine { index: ReferenceIndex::build(reference, window, stride)?, dist })
+    }
+
+    pub fn index(&self) -> &ReferenceIndex {
+        &self.index
+    }
+
+    pub fn dist(&self) -> Dist {
+        self.dist
+    }
+
+    /// Search one (pre-normalized) query for its `k` best non-overlapping
+    /// match sites (`exclusion` = minimum start distance between hits).
+    pub fn search(&self, query: &[f32], k: usize, exclusion: usize) -> Result<SearchOutcome> {
+        self.search_opts(query, k, exclusion, CascadeOpts::default(), 1)
+    }
+
+    /// Full-control variant: cascade stage toggles (for ablations) and
+    /// shard count (each shard cascades independently with its own sound
+    /// threshold; merged results remain exact — the distribution seam for
+    /// multi-worker indexes).
+    pub fn search_opts(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        opts: CascadeOpts,
+        n_shards: usize,
+    ) -> Result<SearchOutcome> {
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        let mut hits = Vec::new();
+        let mut stats = CascadeStats::default();
+        for range in self.index.shard_ranges(n_shards) {
+            let (mut shard_hits, shard_stats) =
+                cascade::search_range(&self.index, query, self.dist, k, exclusion, opts, range);
+            hits.append(&mut shard_hits);
+            stats.merge(&shard_stats);
+        }
+        Ok(SearchOutcome { hits: select_topk(&hits, k, exclusion), stats })
+    }
+
+    /// Search a whole batch of queries, `threads` at a time — the CPU
+    /// analogue of the align path's `dtw::batch` work-stealing pool
+    /// (shared atomic cursor, one query per task).  Results keep query
+    /// order.
+    pub fn search_batch(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        exclusion: usize,
+        threads: usize,
+    ) -> Result<Vec<SearchOutcome>> {
+        type Slot = Mutex<Option<Result<SearchOutcome>>>;
+        let threads = threads.max(1).min(queries.len().max(1));
+        let out: Vec<Slot> = queries.iter().map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let cursor = &cursor;
+                let out = &out;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= queries.len() {
+                        break;
+                    }
+                    let r = self.search(&queries[i], k, exclusion);
+                    *out[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        out.into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker completed every claimed task"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::sdtw;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(n: usize, window: usize, seed: u64) -> (SearchEngine, Xoshiro256) {
+        let mut g = Xoshiro256::new(seed);
+        let r = Arc::new(g.normal_vec_f32(n));
+        (SearchEngine::new(r, window, 1, Dist::Sq).unwrap(), g)
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_bitwise() {
+        let (engine, mut g) = setup(300, 24, 41);
+        let q = g.normal_vec_f32(16);
+        let base = engine.search(&q, 3, 12).unwrap();
+        for shards in [2usize, 3, 5, 8] {
+            let sharded = engine
+                .search_opts(&q, 3, 12, CascadeOpts::default(), shards)
+                .unwrap();
+            assert_eq!(sharded.hits.len(), base.hits.len());
+            for (a, b) in sharded.hits.iter().zip(&base.hits) {
+                assert_eq!(a.start, b.start);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn hits_sorted_best_first_and_non_overlapping() {
+        let (engine, mut g) = setup(400, 20, 42);
+        let q = g.normal_vec_f32(12);
+        let out = engine.search(&q, 4, 10).unwrap();
+        assert!(out.hits.len() <= 4);
+        for pair in out.hits.windows(2) {
+            assert!(pair[0].cost <= pair[1].cost);
+        }
+        for (i, a) in out.hits.iter().enumerate() {
+            for b in &out.hits[i + 1..] {
+                assert!(a.start.abs_diff(b.start) >= 10);
+            }
+        }
+    }
+
+    #[test]
+    fn top1_equals_best_window() {
+        let (engine, mut g) = setup(200, 16, 43);
+        let q = g.normal_vec_f32(10);
+        let out = engine.search(&q, 1, 1).unwrap();
+        // brute: best window by (cost, start)
+        let mut best: Option<Hit> = None;
+        for t in 0..engine.index().candidates() {
+            let m = sdtw(&q, engine.index().window_slice(t), Dist::Sq);
+            let h = Hit { start: t, end: t + m.end, cost: m.cost };
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    m.cost < b.cost || (m.cost == b.cost && h.start < b.start)
+                }
+            };
+            if better {
+                best = Some(h);
+            }
+        }
+        assert_eq!(out.hits[0], best.unwrap());
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let (engine, mut g) = setup(256, 20, 44);
+        let queries: Vec<Vec<f32>> = (0..6).map(|_| g.normal_vec_f32(12)).collect();
+        let batch = engine.search_batch(&queries, 2, 10, 4).unwrap();
+        for (i, q) in queries.iter().enumerate() {
+            let solo = engine.search(q, 2, 10).unwrap();
+            assert_eq!(batch[i], solo, "query {i}");
+        }
+    }
+
+    #[test]
+    fn empty_query_rejected() {
+        let (engine, _) = setup(64, 8, 45);
+        assert!(engine.search(&[], 1, 1).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Top-K match-site selection with trivial-match exclusion, plus the
+//! bounded cost heap that makes cascade pruning *provably* lossless.
+//!
+//! # Selection semantics
+//!
+//! Matches are ranked by `(cost, start)` (total order, ties broken by the
+//! earlier window).  [`select_topk`] walks that order greedily, keeping a
+//! hit only if its window start is at least `exclusion` positions from
+//! every already-kept hit — the matrix-profile-style *trivial match*
+//! suppression that stops one motif occurrence from filling all K slots
+//! with 1-sample shifts of itself.
+//!
+//! # Why the heap bound makes pruning exact
+//!
+//! Let `tau*` be the cost of the K-th greedy pick over *all* candidate
+//! windows.  Every candidate ordered before that pick is either one of
+//! the first K-1 picks or lies within `exclusion` of one of them, so at
+//! most `(K-1) * p` candidates precede it, where `p` is the number of
+//! candidate starts within `±(exclusion-1)` of a position (a function of
+//! the stride).  Therefore the `cap`-th smallest *exact* cost — for
+//! `cap = K + (K-1) * p` — over any subset of candidates is `>= tau*`.
+//! [`BoundedCostHeap`] tracks exactly that order statistic over the costs
+//! computed so far; a candidate whose admissible lower bound exceeds the
+//! heap's threshold has true cost `> tau*` and can never enter the final
+//! top-K, so skipping its DP cannot change the result.
+
+/// One candidate match site.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    /// First reference index of the candidate window.
+    pub start: usize,
+    /// Match END position in the reference (start + within-window argmin).
+    pub end: usize,
+    /// Windowed sDTW cost (identical to `dtw::sdtw` on the window slice).
+    pub cost: f32,
+}
+
+/// Order hits by `(cost, start)` — the canonical selection order.
+fn hit_order(a: &Hit, b: &Hit) -> std::cmp::Ordering {
+    a.cost
+        .total_cmp(&b.cost)
+        .then_with(|| a.start.cmp(&b.start))
+}
+
+/// Greedy top-`k` selection under trivial-match exclusion: hits are
+/// considered in `(cost, start)` order; a hit is kept only if
+/// `|start - kept.start| >= exclusion` for every kept hit.
+/// `exclusion == 0` disables suppression.
+pub fn select_topk(hits: &[Hit], k: usize, exclusion: usize) -> Vec<Hit> {
+    let mut sorted: Vec<Hit> = hits.to_vec();
+    sorted.sort_unstable_by(hit_order);
+    let mut picks: Vec<Hit> = Vec::with_capacity(k.min(sorted.len()));
+    for h in sorted {
+        if picks.len() >= k {
+            break;
+        }
+        let clashes = picks
+            .iter()
+            .any(|p| p.start.abs_diff(h.start) < exclusion);
+        if !clashes {
+            picks.push(h);
+        }
+    }
+    picks
+}
+
+/// The sound pruning-threshold capacity for `select_topk(k, exclusion)`
+/// over candidates spaced `stride` apart (see module docs).
+///
+/// Saturating: wire-controlled `k`/`exclusion` must not wrap to an
+/// undersized (unsound) cap.  Callers clamp the result to their
+/// candidate count — a heap that can hold every candidate never fills,
+/// so pruning simply disengages (trivially sound) instead of allocating
+/// by the formula.
+pub fn prune_heap_cap(k: usize, exclusion: usize, stride: usize) -> usize {
+    let stride = stride.max(1);
+    // candidate starts within ±(exclusion-1) of a pick, pick included
+    let per_pick = (2 * exclusion.saturating_sub(1)) / stride + 1;
+    k.saturating_add(k.saturating_sub(1).saturating_mul(per_pick))
+}
+
+/// A bounded max-heap over the smallest `cap` costs seen so far.
+/// [`BoundedCostHeap::threshold`] is `+inf` until `cap` costs have been
+/// recorded, then the `cap`-th smallest — the cascade's prune threshold.
+#[derive(Clone, Debug)]
+pub struct BoundedCostHeap {
+    cap: usize,
+    // max-heap via total_cmp wrapper
+    heap: std::collections::BinaryHeap<TotalF32>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct TotalF32(f32);
+
+impl Eq for TotalF32 {}
+
+impl PartialOrd for TotalF32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl BoundedCostHeap {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "cap must be >= 1");
+        // lazy growth: cap is an upper bound, not a pre-allocation —
+        // callers may pass candidate counts
+        Self { cap, heap: std::collections::BinaryHeap::new() }
+    }
+
+    /// Record one exact cost.
+    pub fn push(&mut self, cost: f32) {
+        if self.heap.len() < self.cap {
+            self.heap.push(TotalF32(cost));
+        } else if self
+            .heap
+            .peek()
+            .is_some_and(|&TotalF32(max)| cost.total_cmp(&max).is_lt())
+        {
+            self.heap.push(TotalF32(cost));
+            self.heap.pop();
+        }
+    }
+
+    /// Current prune threshold (monotonically non-increasing over pushes).
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.cap {
+            f32::INFINITY
+        } else {
+            self.heap.peek().map(|t| t.0).unwrap_or(f32::INFINITY)
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(start: usize, cost: f32) -> Hit {
+        Hit { start, end: start, cost }
+    }
+
+    #[test]
+    fn topk_orders_by_cost_then_start() {
+        let hits = [h(30, 2.0), h(10, 1.0), h(20, 1.0)];
+        let picks = select_topk(&hits, 3, 0);
+        assert_eq!(
+            picks.iter().map(|p| p.start).collect::<Vec<_>>(),
+            vec![10, 20, 30]
+        );
+    }
+
+    #[test]
+    fn exclusion_suppresses_near_duplicates() {
+        // three shifts of one motif + one distant site
+        let hits = [h(100, 1.0), h(101, 1.1), h(99, 1.2), h(500, 3.0)];
+        let picks = select_topk(&hits, 2, 50);
+        assert_eq!(picks.len(), 2);
+        assert_eq!(picks[0].start, 100);
+        assert_eq!(picks[1].start, 500);
+    }
+
+    #[test]
+    fn exclusion_zero_keeps_everything() {
+        let hits = [h(0, 1.0), h(1, 2.0), h(2, 3.0)];
+        assert_eq!(select_topk(&hits, 3, 0).len(), 3);
+    }
+
+    #[test]
+    fn fewer_hits_than_k() {
+        let hits = [h(5, 1.0)];
+        let picks = select_topk(&hits, 10, 4);
+        assert_eq!(picks.len(), 1);
+    }
+
+    #[test]
+    fn heap_threshold_infinite_until_full() {
+        let mut heap = BoundedCostHeap::new(3);
+        heap.push(5.0);
+        heap.push(1.0);
+        assert_eq!(heap.threshold(), f32::INFINITY);
+        heap.push(3.0);
+        assert_eq!(heap.threshold(), 5.0);
+        heap.push(2.0); // evicts 5
+        assert_eq!(heap.threshold(), 3.0);
+        heap.push(10.0); // ignored
+        assert_eq!(heap.threshold(), 3.0);
+    }
+
+    #[test]
+    fn heap_threshold_is_capth_smallest() {
+        let mut heap = BoundedCostHeap::new(4);
+        for c in [9.0, 2.0, 7.0, 4.0, 1.0, 8.0, 3.0] {
+            heap.push(c);
+        }
+        // smallest four: 1 2 3 4
+        assert_eq!(heap.threshold(), 4.0);
+    }
+
+    #[test]
+    fn cap_formula_covers_worst_case() {
+        // stride 1: a pick suppresses 2*(E-1) neighbours + itself
+        assert_eq!(prune_heap_cap(1, 10, 1), 1);
+        assert_eq!(prune_heap_cap(2, 10, 1), 2 + 19);
+        assert_eq!(prune_heap_cap(3, 1, 1), 3 + 2);
+        // wide stride shrinks the per-pick cover
+        assert_eq!(prune_heap_cap(2, 10, 9), 2 + 3);
+    }
+
+    #[test]
+    fn threshold_bounds_kth_greedy_pick_on_random_sets() {
+        // the soundness invariant, checked directly: cap-th smallest over
+        // ALL costs >= cost of the k-th greedy pick under exclusion
+        use crate::util::rng::Xoshiro256;
+        let mut g = Xoshiro256::new(91);
+        for _ in 0..200 {
+            let n = 30 + g.below(120) as usize;
+            let k = 1 + g.below(4) as usize;
+            let exclusion = 1 + g.below(12) as usize;
+            let hits: Vec<Hit> = (0..n)
+                .map(|s| Hit { start: s, end: s, cost: g.next_f32() * 10.0 })
+                .collect();
+            let picks = select_topk(&hits, k, exclusion);
+            if picks.len() < k {
+                continue; // tau* undefined; pruning would never engage
+            }
+            let tau_star = picks[k - 1].cost;
+            let mut heap = BoundedCostHeap::new(prune_heap_cap(k, exclusion, 1));
+            for hh in &hits {
+                heap.push(hh.cost);
+            }
+            assert!(
+                heap.threshold() >= tau_star,
+                "threshold {} < tau* {} (n={n} k={k} E={exclusion})",
+                heap.threshold(),
+                tau_star
+            );
+        }
+    }
+}

@@ -6,8 +6,8 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
-use super::proto::{MetricsFields, Request, Response};
-use crate::coordinator::AlignOptions;
+use super::proto::{MetricsFields, Request, Response, SearchFields};
+use crate::coordinator::{AlignOptions, SearchOptions};
 
 /// One connection to an sDTW server.
 pub struct Client {
@@ -71,6 +71,21 @@ impl Client {
             Response::Align { cost, end, latency_ms, .. } => Ok((cost, end, latency_ms)),
             Response::Error(e) => bail!("server error: {e}"),
             other => bail!("unexpected reply to align: {other:?}"),
+        }
+    }
+
+    /// Top-K subsequence search; returns the hit list plus the server's
+    /// cascade telemetry.
+    pub fn search(
+        &mut self,
+        query: &[f32],
+        options: SearchOptions,
+    ) -> Result<SearchFields> {
+        let req = Request::Search { query: query.to_vec(), options };
+        match self.roundtrip(&req)? {
+            Response::Search(s) => Ok(*s),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to search: {other:?}"),
         }
     }
 }

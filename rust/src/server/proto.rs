@@ -3,21 +3,61 @@
 //!
 //! Requests:
 //!   {"op":"align","query":[...],"pruned":b,"quantized":b,"half":b}
+//!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,"exclusion":96}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
+//!
+//! Forward compatibility: an `ok:true` response whose shape this build
+//! does not recognize parses as [`Response::Unknown`] (raw line
+//! preserved, re-encodable verbatim) instead of failing — older clients
+//! round-trip newer verbs and surface them as structured errors at the
+//! call site rather than tearing down the connection.
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{AlignOptions, AlignResponse, MetricsSnapshot};
+use crate::coordinator::{
+    AlignOptions, AlignResponse, MetricsSnapshot, SearchOptions, SearchResponse,
+};
+use crate::search::Hit;
 use crate::util::json::Json;
 
 /// Parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Align { query: Vec<f32>, options: AlignOptions },
+    Search { query: Vec<f32>, options: SearchOptions },
     Info,
     Metrics,
     Ping,
+}
+
+fn parse_query(v: &Json, op: &str) -> Result<Vec<f32>> {
+    let arr = v
+        .get("query")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{op} needs query array"))?;
+    let mut query = Vec::with_capacity(arr.len());
+    for x in arr {
+        query.push(
+            x.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric query value"))?
+                as f32,
+        );
+    }
+    Ok(query)
+}
+
+fn parse_usize(v: &Json, key: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            let i = x
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be an integer"))?;
+            anyhow::ensure!(i >= 0, "{key} must be non-negative");
+            Ok(i as usize)
+        }
+    }
 }
 
 impl Request {
@@ -32,18 +72,7 @@ impl Request {
             "info" => Ok(Request::Info),
             "metrics" => Ok(Request::Metrics),
             "align" => {
-                let arr = v
-                    .get("query")
-                    .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow::anyhow!("align needs query array"))?;
-                let mut query = Vec::with_capacity(arr.len());
-                for x in arr {
-                    query.push(
-                        x.as_f64()
-                            .ok_or_else(|| anyhow::anyhow!("non-numeric query value"))?
-                            as f32,
-                    );
-                }
+                let query = parse_query(&v, "align")?;
                 let flag = |k: &str| v.get(k).and_then(Json::as_bool).unwrap_or(false);
                 Ok(Request::Align {
                     query,
@@ -51,6 +80,19 @@ impl Request {
                         pruned: flag("pruned"),
                         quantized: flag("quantized"),
                         half: flag("half"),
+                    },
+                })
+            }
+            "search" => {
+                let query = parse_query(&v, "search")?;
+                let d = SearchOptions::default();
+                Ok(Request::Search {
+                    query,
+                    options: SearchOptions {
+                        k: parse_usize(&v, "k", d.k)?,
+                        window: parse_usize(&v, "window", d.window)?,
+                        stride: parse_usize(&v, "stride", d.stride)?,
+                        exclusion: parse_usize(&v, "exclusion", d.exclusion)?,
                     },
                 })
             }
@@ -79,6 +121,26 @@ impl Request {
                 }
                 Json::obj(pairs).to_string()
             }
+            Request::Search { query, options } => {
+                let d = SearchOptions::default();
+                let mut pairs = vec![
+                    ("op", Json::str("search")),
+                    ("query", Json::f32s(query)),
+                ];
+                if options.k != d.k {
+                    pairs.push(("k", Json::Int(options.k as i64)));
+                }
+                if options.window != d.window {
+                    pairs.push(("window", Json::Int(options.window as i64)));
+                }
+                if options.stride != d.stride {
+                    pairs.push(("stride", Json::Int(options.stride as i64)));
+                }
+                if options.exclusion != d.exclusion {
+                    pairs.push(("exclusion", Json::Int(options.exclusion as i64)));
+                }
+                Json::obj(pairs).to_string()
+            }
         }
     }
 }
@@ -89,8 +151,25 @@ pub enum Response {
     Pong,
     Info { qlen: usize, reflen: usize, batch: usize },
     Align { cost: f32, end: usize, latency_ms: f64, variant: String },
+    Search(Box<SearchFields>),
     Metrics(Box<MetricsFields>),
     Error(String),
+    /// An `ok:true` response this build does not recognize (a newer
+    /// verb); the raw line is preserved and re-encoded verbatim.
+    Unknown(String),
+}
+
+/// The search fields that cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchFields {
+    pub hits: Vec<Hit>,
+    pub latency_ms: f64,
+    /// Candidate windows considered.
+    pub windows: u64,
+    pub pruned_kim: u64,
+    pub pruned_keogh: u64,
+    pub dp_abandoned: u64,
+    pub dp_full: u64,
 }
 
 /// The metrics fields that cross the wire.
@@ -104,6 +183,10 @@ pub struct MetricsFields {
     pub offered_gsps: f64,
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
+    pub searches: u64,
+    pub search_windows: u64,
+    pub search_pruned: u64,
+    pub search_p50_ms: f64,
 }
 
 impl Response {
@@ -116,6 +199,18 @@ impl Response {
         }
     }
 
+    pub fn from_search(r: &SearchResponse) -> Response {
+        Response::Search(Box::new(SearchFields {
+            hits: r.hits.clone(),
+            latency_ms: r.latency_ms,
+            windows: r.stats.candidates,
+            pruned_kim: r.stats.pruned_kim,
+            pruned_keogh: r.stats.pruned_keogh,
+            dp_abandoned: r.stats.dp_abandoned,
+            dp_full: r.stats.dp_full,
+        }))
+    }
+
     pub fn from_metrics(m: &MetricsSnapshot) -> Response {
         Response::Metrics(Box::new(MetricsFields {
             requests: m.requests,
@@ -126,6 +221,10 @@ impl Response {
             offered_gsps: m.offered_gsps,
             latency_p50_ms: m.latency_p50_ms,
             latency_p99_ms: m.latency_p99_ms,
+            searches: m.searches,
+            search_windows: m.search_windows,
+            search_pruned: m.search_pruned_total(),
+            search_p50_ms: m.search_latency_p50_ms,
         }))
     }
 
@@ -147,6 +246,26 @@ impl Response {
                 ("variant", Json::str(variant)),
             ])
             .to_string(),
+            Response::Search(s) => {
+                let hits = Json::arr(s.hits.iter().map(|h| {
+                    Json::obj(vec![
+                        ("start", Json::Int(h.start as i64)),
+                        ("end", Json::Int(h.end as i64)),
+                        ("cost", Json::Num(h.cost as f64)),
+                    ])
+                }));
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("hits", hits),
+                    ("latency_ms", Json::Num(s.latency_ms)),
+                    ("windows", Json::Int(s.windows as i64)),
+                    ("pruned_kim", Json::Int(s.pruned_kim as i64)),
+                    ("pruned_keogh", Json::Int(s.pruned_keogh as i64)),
+                    ("dp_abandoned", Json::Int(s.dp_abandoned as i64)),
+                    ("dp_full", Json::Int(s.dp_full as i64)),
+                ])
+                .to_string()
+            }
             Response::Metrics(m) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("requests", Json::Int(m.requests as i64)),
@@ -157,6 +276,10 @@ impl Response {
                 ("offered_gsps", Json::Num(m.offered_gsps)),
                 ("latency_p50_ms", Json::Num(m.latency_p50_ms)),
                 ("latency_p99_ms", Json::Num(m.latency_p99_ms)),
+                ("searches", Json::Int(m.searches as i64)),
+                ("search_windows", Json::Int(m.search_windows as i64)),
+                ("search_pruned", Json::Int(m.search_pruned as i64)),
+                ("search_p50_ms", Json::Num(m.search_p50_ms)),
             ])
             .to_string(),
             Response::Error(e) => Json::obj(vec![
@@ -164,6 +287,7 @@ impl Response {
                 ("error", Json::str(e)),
             ])
             .to_string(),
+            Response::Unknown(raw) => raw.clone(),
         }
     }
 
@@ -179,6 +303,26 @@ impl Response {
         }
         if v.get("pong").is_some() {
             return Ok(Response::Pong);
+        }
+        if let Some(hits) = v.get("hits").and_then(Json::as_arr) {
+            let mut parsed = Vec::with_capacity(hits.len());
+            for h in hits {
+                parsed.push(Hit {
+                    start: h.get("start").and_then(Json::as_i64).unwrap_or(0) as usize,
+                    end: h.get("end").and_then(Json::as_i64).unwrap_or(0) as usize,
+                    cost: h.get("cost").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                });
+            }
+            let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
+            return Ok(Response::Search(Box::new(SearchFields {
+                hits: parsed,
+                latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                windows: int("windows"),
+                pruned_kim: int("pruned_kim"),
+                pruned_keogh: int("pruned_keogh"),
+                dp_abandoned: int("dp_abandoned"),
+                dp_full: int("dp_full"),
+            })));
         }
         if let Some(cost) = v.get("cost").and_then(Json::as_f64) {
             return Ok(Response::Align {
@@ -200,27 +344,25 @@ impl Response {
             });
         }
         if v.get("requests").is_some() {
+            let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
+            let num = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
             return Ok(Response::Metrics(Box::new(MetricsFields {
-                requests: v.get("requests").and_then(Json::as_i64).unwrap_or(0) as u64,
-                responses: v.get("responses").and_then(Json::as_i64).unwrap_or(0) as u64,
-                batches: v.get("batches").and_then(Json::as_i64).unwrap_or(0) as u64,
-                padding_fraction: v
-                    .get("padding_fraction")
-                    .and_then(Json::as_f64)
-                    .unwrap_or(0.0),
-                device_gsps: v.get("device_gsps").and_then(Json::as_f64).unwrap_or(0.0),
-                offered_gsps: v.get("offered_gsps").and_then(Json::as_f64).unwrap_or(0.0),
-                latency_p50_ms: v
-                    .get("latency_p50_ms")
-                    .and_then(Json::as_f64)
-                    .unwrap_or(0.0),
-                latency_p99_ms: v
-                    .get("latency_p99_ms")
-                    .and_then(Json::as_f64)
-                    .unwrap_or(0.0),
+                requests: int("requests"),
+                responses: int("responses"),
+                batches: int("batches"),
+                padding_fraction: num("padding_fraction"),
+                device_gsps: num("device_gsps"),
+                offered_gsps: num("offered_gsps"),
+                latency_p50_ms: num("latency_p50_ms"),
+                latency_p99_ms: num("latency_p99_ms"),
+                searches: int("searches"),
+                search_windows: int("search_windows"),
+                search_pruned: int("search_pruned"),
+                search_p50_ms: num("search_p50_ms"),
             })));
         }
-        bail!("unrecognized response {line:?}")
+        // ok:true but unrecognized shape: a newer verb — preserve it
+        Ok(Response::Unknown(line.trim().to_string()))
     }
 }
 
@@ -236,6 +378,29 @@ mod tests {
         };
         let enc = req.encode();
         assert_eq!(Request::parse(&enc).unwrap(), req);
+    }
+
+    #[test]
+    fn search_request_roundtrip() {
+        let defaults = Request::Search {
+            query: vec![0.5, 1.5, -3.0],
+            options: SearchOptions::default(),
+        };
+        assert_eq!(Request::parse(&defaults.encode()).unwrap(), defaults);
+        let custom = Request::Search {
+            query: vec![2.0],
+            options: SearchOptions { k: 9, window: 64, stride: 2, exclusion: 32 },
+        };
+        let enc = custom.encode();
+        assert!(enc.contains("\"k\":9") && enc.contains("\"window\":64"));
+        assert_eq!(Request::parse(&enc).unwrap(), custom);
+    }
+
+    #[test]
+    fn search_request_rejects_bad_options() {
+        assert!(Request::parse(r#"{"op":"search"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"k":-2}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"window":"x"}"#).is_err());
     }
 
     #[test]
@@ -262,11 +427,114 @@ mod tests {
     }
 
     #[test]
+    fn search_response_roundtrip() {
+        let r = Response::Search(Box::new(SearchFields {
+            hits: vec![
+                Hit { start: 10, end: 40, cost: 0.125 },
+                Hit { start: 900, end: 930, cost: 2.5 },
+            ],
+            latency_ms: 1.75,
+            windows: 4096,
+            pruned_kim: 3000,
+            pruned_keogh: 500,
+            dp_abandoned: 400,
+            dp_full: 196,
+        }));
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        // empty hit list still recognized as a search response
+        let empty = Response::Search(Box::new(SearchFields {
+            hits: vec![],
+            latency_ms: 0.5,
+            windows: 10,
+            pruned_kim: 10,
+            pruned_keogh: 0,
+            dp_abandoned: 0,
+            dp_full: 0,
+        }));
+        assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn metrics_roundtrip_with_search_counters() {
+        let r = Response::Metrics(Box::new(MetricsFields {
+            requests: 10,
+            responses: 9,
+            batches: 2,
+            padding_fraction: 0.25,
+            device_gsps: 0.5,
+            offered_gsps: 0.25,
+            latency_p50_ms: 1.0,
+            latency_p99_ms: 2.0,
+            searches: 4,
+            search_windows: 8000,
+            search_pruned: 7500,
+            search_p50_ms: 3.5,
+        }));
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn unknown_ok_response_roundtrips_verbatim() {
+        // a verb from the future: parse must not fail, encode must
+        // preserve the line byte-for-byte
+        let line = r#"{"frobnications":3,"ok":true}"#;
+        let r = Response::parse(line).unwrap();
+        assert_eq!(r, Response::Unknown(line.to_string()));
+        assert_eq!(r.encode(), line);
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
     fn bad_requests_rejected() {
         assert!(Request::parse("{}").is_err());
         assert!(Request::parse(r#"{"op":"fly"}"#).is_err());
         assert!(Request::parse(r#"{"op":"align"}"#).is_err());
         assert!(Request::parse(r#"{"op":"align","query":["x"]}"#).is_err());
         assert!(Request::parse("not json").is_err());
+    }
+
+    #[test]
+    fn fuzzish_mutations_never_panic() {
+        // mutate valid encodings byte-by-byte; every line must either
+        // parse or return Err — never panic, and parsed responses must
+        // re-encode without panicking
+        use crate::util::rng::Xoshiro256;
+        let mut g = Xoshiro256::new(1337);
+        let seeds: Vec<String> = vec![
+            Request::Search {
+                query: vec![1.0, 2.0],
+                options: SearchOptions { k: 3, window: 8, stride: 1, exclusion: 4 },
+            }
+            .encode(),
+            Request::Align { query: vec![0.25], options: AlignOptions::default() }.encode(),
+            Response::Search(Box::new(SearchFields {
+                hits: vec![Hit { start: 1, end: 2, cost: 3.0 }],
+                latency_ms: 0.1,
+                windows: 5,
+                pruned_kim: 1,
+                pruned_keogh: 1,
+                dp_abandoned: 1,
+                dp_full: 2,
+            }))
+            .encode(),
+            Response::Pong.encode(),
+            r#"{"ok":true}"#.to_string(),
+        ];
+        for seed in &seeds {
+            for _ in 0..400 {
+                let mut bytes = seed.clone().into_bytes();
+                let n_mut = 1 + g.below(3) as usize;
+                for _ in 0..n_mut {
+                    let at = g.below(bytes.len() as u64) as usize;
+                    bytes[at] = (g.below(95) + 32) as u8; // printable ascii
+                }
+                if let Ok(s) = String::from_utf8(bytes) {
+                    let _ = Request::parse(&s);
+                    if let Ok(resp) = Response::parse(&s) {
+                        let _ = resp.encode();
+                    }
+                }
+            }
+        }
     }
 }

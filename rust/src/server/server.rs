@@ -107,5 +107,11 @@ pub fn handle_line(line: &str, service: &SdtwService) -> Response {
                 Err(e) => Response::Error(format!("{e:#}")),
             }
         }
+        Request::Search { query, options } => {
+            match service.search_blocking(query, options) {
+                Ok(resp) => Response::from_search(&resp),
+                Err(e) => Response::Error(format!("{e:#}")),
+            }
+        }
     }
 }

@@ -1,0 +1,103 @@
+//! Cross-language parity: the Rust lower bounds and windowed sDTW costs
+//! must match the Python reference (`python/compile/kernels/ref.py`) on
+//! the shared fixture `tests/fixtures/search_lb.json`, which
+//! `python/tests/test_search.py` validates from the other side.
+//!
+//! The fixture stores float32-representable inputs plus float64 expected
+//! values, so both sides decode the exact same numbers; comparisons use
+//! a small relative tolerance for the f32-vs-f64 accumulation gap.
+
+use std::sync::Arc;
+
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::search::envelope::sliding_min_max;
+use sdtw_repro::search::lower_bounds::{lb_keogh, lb_kim};
+use sdtw_repro::search::{select_topk, Hit, SearchEngine};
+use sdtw_repro::util::json::Json;
+
+fn fixture() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/search_lb.json");
+    let text = std::fs::read_to_string(path).expect("fixture present");
+    Json::parse(&text).expect("fixture is valid json")
+}
+
+fn f32s(v: &Json, key: &str) -> Vec<f32> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .expect(key)
+        .iter()
+        .map(|x| x.as_f64().expect("numeric") as f32)
+        .collect()
+}
+
+fn f64s(v: &Json, key: &str) -> Vec<f64> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .expect(key)
+        .iter()
+        .map(|x| x.as_f64().expect("numeric"))
+        .collect()
+}
+
+fn close(a: f32, b: f64, what: &str, s: usize) {
+    let tol = 2e-3 * b.abs().max(1.0);
+    assert!(
+        (a as f64 - b).abs() <= tol,
+        "{what}[{s}]: rust {a} vs python {b}"
+    );
+}
+
+#[test]
+fn bounds_and_costs_match_python_reference() {
+    let v = fixture();
+    let reference = f32s(&v, "reference");
+    let query = f32s(&v, "query");
+    let window = v.get("window").and_then(Json::as_i64).expect("window") as usize;
+    let want_kim = f64s(&v, "lb_kim");
+    let want_keogh = f64s(&v, "lb_keogh");
+    let want_costs = f64s(&v, "costs");
+
+    let (lo, hi) = sliding_min_max(&reference, window);
+    assert_eq!(lo.len(), want_kim.len(), "candidate count");
+
+    for s in 0..lo.len() {
+        let kim = lb_kim(&query, lo[s], hi[s], Dist::Sq);
+        let keogh = lb_keogh(&query, lo[s], hi[s], Dist::Sq, f32::INFINITY);
+        let cost = sdtw(&query, &reference[s..s + window], Dist::Sq).cost;
+        close(kim, want_kim[s], "lb_kim", s);
+        close(keogh, want_keogh[s], "lb_keogh", s);
+        close(cost, want_costs[s], "cost", s);
+        // the admissibility chain, on the Rust side of the fixture
+        assert!(kim <= keogh + 1e-4, "kim {kim} > keogh {keogh} at {s}");
+        assert!(
+            keogh <= cost + 1e-3 * cost.max(1.0),
+            "keogh {keogh} > cost {cost} at {s}"
+        );
+    }
+}
+
+#[test]
+fn cascade_on_fixture_matches_brute_force() {
+    let v = fixture();
+    let reference = Arc::new(f32s(&v, "reference"));
+    let query = f32s(&v, "query");
+    let window = v.get("window").and_then(Json::as_i64).expect("window") as usize;
+
+    let engine = SearchEngine::new(reference.clone(), window, 1, Dist::Sq).unwrap();
+    let (k, exclusion) = (3, window / 2);
+    let brute: Vec<Hit> = (0..engine.index().candidates())
+        .map(|t| {
+            let m = sdtw(&query, engine.index().window_slice(t), Dist::Sq);
+            Hit { start: t, end: t + m.end, cost: m.cost }
+        })
+        .collect();
+    let brute = select_topk(&brute, k, exclusion);
+    let cascade = engine.search(&query, k, exclusion).unwrap();
+    assert_eq!(cascade.hits, brute);
+    // the fixture plants a copy at 100: the best site must sit on it
+    assert!(
+        cascade.hits[0].start >= 100 - window + query.len() && cascade.hits[0].start <= 100,
+        "best hit start {} not on the planted copy",
+        cascade.hits[0].start
+    );
+}

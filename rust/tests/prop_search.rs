@@ -1,0 +1,210 @@
+//! Property tests for the search subsystem: lower-bound admissibility
+//! (the cascade's correctness precondition) and bit-identical agreement
+//! between the cascade and brute-force `dtw::subsequence` top-K (the
+//! losslessness guarantee).  Via the in-repo property harness.
+
+use std::sync::Arc;
+
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::search::lower_bounds::{lb_keogh, lb_kim};
+use sdtw_repro::search::{
+    select_topk, CascadeOpts, Hit, ReferenceIndex, SearchEngine,
+};
+use sdtw_repro::testutil::check;
+use sdtw_repro::util::rng::Xoshiro256;
+
+/// Random-walk style series: the workload family where envelope bounds
+/// do real work (levels drift).
+fn walk(g: &mut sdtw_repro::testutil::GenCtx, lo: usize, hi: usize) -> Vec<f32> {
+    let base = g.vec_f32(lo, hi);
+    let mut level = 0f32;
+    base.iter()
+        .map(|&step| {
+            level += step * 0.5;
+            level
+        })
+        .collect()
+}
+
+/// Brute force from `dtw::subsequence`: cost every candidate window with
+/// the oracle, then the shared greedy selection.
+fn brute_topk(
+    query: &[f32],
+    index: &ReferenceIndex,
+    k: usize,
+    exclusion: usize,
+) -> Vec<Hit> {
+    let hits: Vec<Hit> = (0..index.candidates())
+        .map(|t| {
+            let m = sdtw(query, index.window_slice(t), Dist::Sq);
+            let start = index.start(t);
+            Hit { start, end: start + m.end, cost: m.cost }
+        })
+        .collect();
+    select_topk(&hits, k, exclusion)
+}
+
+fn assert_bit_identical(label: &str, a: &[Hit], b: &[Hit]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{label}: {} vs {} hits", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.start != y.start || x.end != y.end || x.cost.to_bits() != y.cost.to_bits() {
+            return Err(format!("{label}: hit {i} differs: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_lb_chain_kim_le_keogh_le_cost() {
+    // the satellite invariant: LB_Kim <= LB_Keogh <= true windowed sDTW
+    check(300, 300, |g| {
+        let q = g.vec_f32(1, 16);
+        let w = walk(g, 1, 40);
+        let lo = w.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for dist in [Dist::Sq, Dist::Abs] {
+            let kim = lb_kim(&q, lo, hi, dist);
+            let keogh = lb_keogh(&q, lo, hi, dist, f32::INFINITY);
+            let cost = sdtw(&q, &w, dist).cost;
+            let tol = 1e-3 * cost.abs().max(1.0);
+            if kim > keogh + tol {
+                return Err(format!("kim {kim} > keogh {keogh}"));
+            }
+            if keogh > cost + tol {
+                return Err(format!("keogh {keogh} > cost {cost} ({dist:?})"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_cascade_topk_bit_identical_to_brute() {
+    // the acceptance invariant, over random shapes, strides, K, exclusion
+    check(301, 120, |g| {
+        let r = Arc::new(walk(g, 40, 220));
+        let m = g.usize_in(3, 14);
+        let window = g.usize_in(m, (m + 12).min(r.len()));
+        let stride = g.usize_in(1, 3);
+        let k = g.usize_in(1, 5);
+        let exclusion = g.usize_in(0, window);
+        let q = g.vec_f32(m, m);
+
+        let engine = SearchEngine::new(r.clone(), window, stride, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+        let brute = brute_topk(&q, engine.index(), k, exclusion);
+        let cascade = engine
+            .search(&q, k, exclusion)
+            .map_err(|e| e.to_string())?;
+        assert_bit_identical("cascade", &cascade.hits, &brute)?;
+
+        let stats = cascade.stats;
+        if stats.pruned_total() + stats.dp_full != stats.candidates {
+            return Err(format!("counters don't partition candidates: {stats:?}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_every_stage_combination_is_lossless() {
+    check(302, 60, |g| {
+        let r = Arc::new(walk(g, 60, 160));
+        let m = g.usize_in(4, 10);
+        let window = g.usize_in(m, (m + 8).min(r.len()));
+        let k = g.usize_in(1, 3);
+        let exclusion = g.usize_in(1, window);
+        let q = g.vec_f32(m, m);
+        let engine =
+            SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let brute = brute_topk(&q, engine.index(), k, exclusion);
+        for kim in [false, true] {
+            for keogh in [false, true] {
+                for abandon in [false, true] {
+                    let opts = CascadeOpts { kim, keogh, abandon };
+                    let got = engine
+                        .search_opts(&q, k, exclusion, opts, 1)
+                        .map_err(|e| e.to_string())?;
+                    assert_bit_identical(
+                        &format!("opts {opts:?}"),
+                        &got.hits,
+                        &brute,
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_sharded_search_is_lossless() {
+    check(303, 60, |g| {
+        let r = Arc::new(walk(g, 60, 200));
+        let m = g.usize_in(4, 10);
+        let window = g.usize_in(m, (m + 10).min(r.len()));
+        let k = g.usize_in(1, 4);
+        let exclusion = g.usize_in(1, window);
+        let shards = g.usize_in(2, 6);
+        let q = g.vec_f32(m, m);
+        let engine =
+            SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let brute = brute_topk(&q, engine.index(), k, exclusion);
+        let sharded = engine
+            .search_opts(&q, k, exclusion, CascadeOpts::default(), shards)
+            .map_err(|e| e.to_string())?;
+        assert_bit_identical("sharded", &sharded.hits, &brute)
+    })
+    .unwrap();
+}
+
+#[test]
+fn cascade_prunes_majority_on_planted_walk_workload() {
+    // the bench acceptance criterion as a regression test: >= 50% of
+    // candidate windows pruned on a planted random-walk workload
+    let mut rng = Xoshiro256::new(7);
+    let n = 8192;
+    let m = 64;
+    let window = 96;
+    let mut level = 0f64;
+    let mut reference: Vec<f32> = (0..n)
+        .map(|_| {
+            level += rng.normal() * 0.4;
+            level as f32
+        })
+        .collect();
+    let query: Vec<f32> = rng.normal_vec_f32(m);
+    for at in [1000usize, 3000, 5000, 7000] {
+        let stretch = rng.uniform(0.85, 1.2);
+        sdtw_repro::datagen::embed_query(&mut reference, &query, at, stretch, 0.05, &mut rng);
+    }
+    let rn = Arc::new(sdtw_repro::normalize::znormed(&reference));
+    let qn = sdtw_repro::normalize::znormed(&query);
+    let engine = SearchEngine::new(rn, window, 1, Dist::Sq).unwrap();
+
+    let out = engine.search(&qn, 4, window / 2).unwrap();
+    // all four planted sites recovered, in some order
+    assert_eq!(out.hits.len(), 4);
+    for h in &out.hits {
+        let near = [1000usize, 3000, 5000, 7000]
+            .iter()
+            .any(|&at| h.end + m >= at && h.end <= at + 2 * m);
+        assert!(near, "hit end {} not near a planted site", h.end);
+    }
+    // the acceptance threshold, with real margin
+    assert!(
+        out.stats.prune_fraction() >= 0.5,
+        "cascade pruned only {:.1}% of {} windows ({:?})",
+        out.stats.prune_fraction() * 100.0,
+        out.stats.candidates,
+        out.stats
+    );
+    // and it is still exact
+    let brute = brute_topk(&qn, engine.index(), 4, window / 2);
+    assert_bit_identical("planted", &out.hits, &brute).unwrap();
+}
