@@ -146,6 +146,22 @@ fn main() -> Result<()> {
     let (ws, we) = path_window(&path);
     println!("  warp path of gesture 2's best hit: {}..{}", lo + ws, lo + we);
 
+    // 6. the same search, sharded across a worker pool: 4 index shards
+    //    share one atomic prune threshold, and the merged top-K is
+    //    bit-identical to the serial engine above
+    let serial = engine.search(&qn, K, EXCLUSION)?;
+    let sharded = engine.search_sharded(&qn, K, EXCLUSION, CascadeOpts::default(), 4, 4)?;
+    assert_eq!(
+        sharded.hits, serial.hits,
+        "sharded executor must match the serial engine bit-for-bit"
+    );
+    println!(
+        "  sharded (4 shards × 4 threads): identical top-{K}, τ tightened {} times, \
+         imbalance {:.2}",
+        sharded.tau_tightenings,
+        sharded.imbalance()
+    );
+
     println!("\nmotif_search OK — recovered, rejected, and bit-identical to brute force");
     Ok(())
 }

@@ -1,0 +1,131 @@
+//! Scaling sweep: the sharded parallel search executor at 1/2/4/8 shards
+//! (worker threads = shards) against the serial cascade on a large
+//! planted reference.  Verifies on every configuration that the sharded
+//! top-K is bit-identical to the serial engine, then reports wall time,
+//! speedup, shard imbalance, and how often the shared prune threshold
+//! tightened (the cross-shard pruning win).
+//!
+//!   cargo bench --bench sharded_search
+//!   SDTW_BENCH_QUICK=1 cargo bench --bench sharded_search   # fast run
+//!
+//! Reading the table: ideal scaling halves ms/search per doubling of
+//! shards; the gap to ideal is explained by (a) imbalance — pruning makes
+//! shard cost data-dependent — and (b) the serial sort + merge tail.
+//! `tighten` counts shared-τ decreases: a low number at high shard
+//! counts means shards mostly pruned off their own early candidates,
+//! a high number means cross-shard tightening carried the cascade.
+
+use std::sync::Arc;
+
+use sdtw_repro::bench_harness::{banner, Table};
+use sdtw_repro::datagen::{embed_query, Family};
+use sdtw_repro::dtw::Dist;
+use sdtw_repro::normalize::znormed;
+use sdtw_repro::search::{CascadeOpts, SearchEngine, ShardedOutcome};
+use sdtw_repro::util::rng::Xoshiro256;
+
+const QLEN: usize = 128;
+const WINDOW: usize = QLEN + QLEN / 2;
+const K: usize = 8;
+const EXCLUSION: usize = WINDOW / 2;
+const PLANTS: usize = 12;
+
+fn reflen() -> usize {
+    // quick: still large enough that shard scheduling overhead is noise
+    if std::env::var("SDTW_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+        32_768
+    } else {
+        131_072
+    }
+}
+
+fn workload(n: usize, seed: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut reference = Family::Walk.series(n, &mut rng);
+    let query = Family::Walk.series(QLEN, &mut rng);
+    for p in 0..PLANTS {
+        let at = (p * 2 + 1) * n / (2 * PLANTS);
+        let stretch = rng.uniform(0.8, 1.25);
+        embed_query(&mut reference, &query, at, stretch, 0.05, &mut rng);
+    }
+    (Arc::new(znormed(&reference)), znormed(&query))
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = reflen();
+    let protocol = banner(
+        "sharded_search",
+        &format!("N={n} M={QLEN} window={WINDOW} K={K} exclusion={EXCLUSION}"),
+    );
+
+    let (reference, query) = workload(n, 42);
+    let engine = SearchEngine::new(reference, WINDOW, 1, Dist::Sq)?;
+    let candidates = engine.index().candidates();
+
+    // correctness gate: every shard/thread configuration must reproduce
+    // the serial engine's top-K bit-for-bit before we time anything
+    let serial = engine.search(&query, K, EXCLUSION)?;
+    for shards in [1usize, 2, 4, 8] {
+        let out = engine.search_sharded(
+            &query,
+            K,
+            EXCLUSION,
+            CascadeOpts::default(),
+            shards,
+            shards,
+        )?;
+        assert_eq!(
+            out.hits, serial.hits,
+            "{shards}-shard executor diverged from the serial engine"
+        );
+    }
+
+    let mut table = Table::new(
+        &format!("Sharded search scaling — Walk ({candidates} candidate windows)"),
+        &["ms/search", "speedup", "imbalance", "tighten", "pruned%"],
+    );
+
+    // serial baseline row
+    let summary = protocol.run(|| {
+        let out = engine.search(&query, K, EXCLUSION).expect("search");
+        assert_eq!(out.hits.len(), serial.hits.len());
+    });
+    let serial_ms = summary.mean_ms;
+    table.row(
+        "serial cascade",
+        vec![
+            format!("{:.2}", serial_ms),
+            "1.00x".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            format!("{:.1}", serial.stats.prune_fraction() * 100.0),
+        ],
+    );
+
+    for shards in [1usize, 2, 4, 8] {
+        let mut last: Option<ShardedOutcome> = None;
+        let summary = protocol.run(|| {
+            let out = engine
+                .search_sharded(&query, K, EXCLUSION, CascadeOpts::default(), shards, shards)
+                .expect("sharded search");
+            last = Some(out);
+        });
+        let out = last.expect("at least one timed run");
+        table.row(
+            &format!("{shards} shard(s) × {shards} thread(s)"),
+            vec![
+                format!("{:.2}", summary.mean_ms),
+                format!("{:.2}x", serial_ms / summary.mean_ms.max(1e-9)),
+                format!("{:.2}", out.imbalance()),
+                format!("{}", out.tau_tightenings),
+                format!("{:.1}", out.stats.prune_fraction() * 100.0),
+            ],
+        );
+    }
+    table.print();
+    println!(
+        "(speedup is vs the serial cascade; imbalance = slowest shard / mean shard \
+         wall time; tighten = shared-τ decreases per search)"
+    );
+    Ok(())
+}

@@ -1,6 +1,23 @@
 //! Service metrics: request/batch counters, padding waste, device busy
 //! time, end-to-end latency percentiles, and the paper's Gsps (eq. 3)
 //! computed over the serving window.
+//!
+//! One [`Metrics`] sink is shared by every thread in the service (the
+//! dispatcher, the batch workers, and search callers); counters are
+//! relaxed atomics, latency distributions live behind short-lock
+//! histograms.  [`Metrics::snapshot`] materializes a consistent-enough
+//! point-in-time [`MetricsSnapshot`] for the `metrics` protocol verb and
+//! the CLI's end-of-run summary; `docs/METRICS.md` documents every field
+//! and who increments it.
+//!
+//! Three counter families:
+//! * **align path** — submits/responses/rejects, batch fill and padding,
+//!   device busy time, and Gsps over both busy and wall time;
+//! * **search path** — per-stage cascade prune counters aggregated over
+//!   all searches, plus a separate search latency histogram;
+//! * **sharded executor** — shards run, shared-threshold tightenings,
+//!   and per-search wall-time imbalance (recorded only by
+//!   [`Metrics::on_search_sharded`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -36,6 +53,13 @@ pub struct Metrics {
     search_dp_abandoned: AtomicU64,
     search_dp_full: AtomicU64,
     search_latency: Mutex<LatencyHistogram>,
+    // ------------------------- sharded-executor counters
+    searches_sharded: AtomicU64,
+    search_shards: AtomicU64,
+    search_tau_tightenings: AtomicU64,
+    /// sum of per-search imbalance ratios in milli-units (ratio × 1000),
+    /// so the mean stays exact under concurrent atomic accumulation
+    search_imbalance_milli: AtomicU64,
 }
 
 impl Metrics {
@@ -61,6 +85,10 @@ impl Metrics {
             search_dp_abandoned: AtomicU64::new(0),
             search_dp_full: AtomicU64::new(0),
             search_latency: Mutex::new(LatencyHistogram::new()),
+            searches_sharded: AtomicU64::new(0),
+            search_shards: AtomicU64::new(0),
+            search_tau_tightenings: AtomicU64::new(0),
+            search_imbalance_milli: AtomicU64::new(0),
         }
     }
 
@@ -78,6 +106,27 @@ impl Metrics {
         self.search_dp_full
             .fetch_add(stats.dp_full, Ordering::Relaxed);
         self.search_latency.lock().unwrap().record_ms(latency_ms);
+    }
+
+    /// Record one completed *sharded* top-K search: the merged cascade
+    /// counters plus the executor's telemetry — shards run, how often the
+    /// shared τ tightened (the cross-shard pruning win), and the
+    /// max/mean wall-time imbalance across shards.
+    pub fn on_search_sharded(
+        &self,
+        latency_ms: f64,
+        stats: &CascadeStats,
+        shards: u64,
+        tau_tightenings: u64,
+        imbalance: f64,
+    ) {
+        self.on_search(latency_ms, stats);
+        self.searches_sharded.fetch_add(1, Ordering::Relaxed);
+        self.search_shards.fetch_add(shards, Ordering::Relaxed);
+        self.search_tau_tightenings
+            .fetch_add(tau_tightenings, Ordering::Relaxed);
+        self.search_imbalance_milli
+            .fetch_add((imbalance.max(0.0) * 1e3).round() as u64, Ordering::Relaxed);
     }
 
     pub fn on_submit(&self) {
@@ -151,6 +200,19 @@ impl Metrics {
             search_latency_mean_ms: search_latency.mean_ms(),
             search_latency_p50_ms: search_latency.percentile_ms(50.0),
             search_latency_p99_ms: search_latency.percentile_ms(99.0),
+            searches_sharded: self.searches_sharded.load(Ordering::Relaxed),
+            search_shards: self.search_shards.load(Ordering::Relaxed),
+            search_tau_tightenings: self.search_tau_tightenings.load(Ordering::Relaxed),
+            search_imbalance_mean: {
+                let n = self.searches_sharded.load(Ordering::Relaxed);
+                if n == 0 {
+                    0.0
+                } else {
+                    self.search_imbalance_milli.load(Ordering::Relaxed) as f64
+                        / 1e3
+                        / n as f64
+                }
+            },
         }
     }
 }
@@ -201,6 +263,16 @@ pub struct MetricsSnapshot {
     pub search_latency_mean_ms: f64,
     pub search_latency_p50_ms: f64,
     pub search_latency_p99_ms: f64,
+    /// Searches served by the sharded parallel executor (a subset of
+    /// `searches`).
+    pub searches_sharded: u64,
+    /// Total shards executed across all sharded searches.
+    pub search_shards: u64,
+    /// Shared-threshold tightenings across all sharded searches.
+    pub search_tau_tightenings: u64,
+    /// Mean per-search shard imbalance (slowest / mean shard wall time,
+    /// 1.0 = perfectly even; 0.0 until a sharded search runs).
+    pub search_imbalance_mean: f64,
 }
 
 impl MetricsSnapshot {
@@ -262,6 +334,15 @@ impl MetricsSnapshot {
                 self.search_latency_mean_ms,
                 self.search_latency_p50_ms,
                 self.search_latency_p99_ms,
+            ));
+        }
+        if self.searches_sharded > 0 {
+            out.push_str(&format!(
+                " sharded={} shards={} tightenings={} imbalance={:.2}",
+                self.searches_sharded,
+                self.search_shards,
+                self.search_tau_tightenings,
+                self.search_imbalance_mean,
             ));
         }
         out
@@ -342,5 +423,34 @@ mod tests {
         assert!((s.search_prune_fraction() - 0.85).abs() < 1e-12);
         assert!((s.search_latency_mean_ms - 3.0).abs() < 1e-9);
         assert!(s.render().contains("searches=2"));
+        // no sharded searches yet: the sharded block stays hidden
+        assert_eq!(s.searches_sharded, 0);
+        assert!(!s.render().contains("sharded="));
+    }
+
+    #[test]
+    fn sharded_search_counters_accumulate() {
+        let m = Metrics::new();
+        let stats = CascadeStats {
+            candidates: 100,
+            pruned_kim: 60,
+            pruned_keogh: 20,
+            dp_abandoned: 10,
+            dp_full: 10,
+        };
+        m.on_search_sharded(2.0, &stats, 4, 12, 1.5);
+        m.on_search_sharded(4.0, &stats, 8, 4, 2.5);
+        let s = m.snapshot();
+        // a sharded search is still a search
+        assert_eq!(s.searches, 2);
+        assert_eq!(s.search_windows, 200);
+        assert_eq!(s.searches_sharded, 2);
+        assert_eq!(s.search_shards, 12);
+        assert_eq!(s.search_tau_tightenings, 16);
+        assert!((s.search_imbalance_mean - 2.0).abs() < 1e-9);
+        let r = s.render();
+        assert!(r.contains("sharded=2"));
+        assert!(r.contains("shards=12"));
+        assert!(r.contains("tightenings=16"));
     }
 }

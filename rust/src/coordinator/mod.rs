@@ -25,6 +25,14 @@
 //! * [`worker`]   — tensor marshalling + execution + response fan-out.
 //! * [`metrics`]  — Gsps (paper eq. 3), latency percentiles, padding waste.
 //! * [`service`]  — [`service::SdtwService`], the public facade.
+//!
+//! The `search` verb takes a different path through the same facade:
+//! it bypasses the kernel batcher (the LB cascade prunes most of its
+//! work away, leaving little to batch) and runs on the calling thread —
+//! or, when [`SearchOptions::shards`] resolves above 1, fans out across
+//! the sharded executor's worker pool (`crate::search::sharded`), which
+//! reuses this module's [`queue::BoundedQueue`] as its work queue.  See
+//! `docs/ARCHITECTURE.md` for the full life-of-a-request walkthroughs.
 
 pub mod batcher;
 pub mod metrics;

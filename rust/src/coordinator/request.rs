@@ -47,7 +47,9 @@ pub struct AlignResponse {
 
 /// Client-facing top-K search options.  Zero means "auto": `window`
 /// defaults to 3·qlen/2 (clamped to the reference), `exclusion` to half
-/// the window — both resolved by the service per request.
+/// the window, `shards` to one per worker thread and `parallelism` to
+/// the host's available parallelism — all resolved by the service per
+/// request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SearchOptions {
     /// Number of match sites to return.
@@ -59,11 +61,18 @@ pub struct SearchOptions {
     /// Trivial-match exclusion: minimum start distance between two
     /// reported sites (0 = auto).
     pub exclusion: usize,
+    /// Index shards cascaded with a shared prune threshold (1 = the
+    /// serial engine, the default; 0 = auto: one shard per worker).
+    pub shards: usize,
+    /// Worker threads for the sharded executor (1 = default; 0 = auto:
+    /// the host's available parallelism).  Ignored when `shards`
+    /// resolves to 1.
+    pub parallelism: usize,
 }
 
 impl Default for SearchOptions {
     fn default() -> Self {
-        Self { k: 5, window: 0, stride: 1, exclusion: 0 }
+        Self { k: 5, window: 0, stride: 1, exclusion: 0, shards: 1, parallelism: 1 }
     }
 }
 
@@ -82,6 +91,22 @@ impl SearchOptions {
         let exclusion = if self.exclusion == 0 { (window / 2).max(1) } else { self.exclusion };
         (window, stride, exclusion)
     }
+
+    /// Resolve the sharding fields: `(shards, parallelism)`.
+    /// `parallelism = 0` means the host's available parallelism;
+    /// `shards = 0` means one shard per resolved worker thread.  A
+    /// result of `(1, _)` selects the serial engine.
+    pub fn resolve_sharding(&self) -> (usize, usize) {
+        let parallelism = if self.parallelism == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.parallelism
+        };
+        let shards = if self.shards == 0 { parallelism } else { self.shards };
+        (shards, parallelism)
+    }
 }
 
 /// The search answer: top-K sites plus the cascade's pruning telemetry.
@@ -92,8 +117,13 @@ pub struct SearchResponse {
     pub hits: Vec<Hit>,
     /// End-to-end latency in milliseconds.
     pub latency_ms: f64,
-    /// Per-stage cascade counters for this search.
+    /// Per-stage cascade counters for this search (merged over shards).
     pub stats: CascadeStats,
+    /// Shards executed (1 = the serial cascade path).
+    pub shards: usize,
+    /// Times the shared prune threshold tightened (0 on the serial path,
+    /// where τ lives in a single local heap).
+    pub tau_tightenings: u64,
 }
 
 #[cfg(test)]
@@ -107,6 +137,8 @@ mod tests {
         assert_eq!(o.window, 0);
         assert_eq!(o.stride, 1);
         assert_eq!(o.exclusion, 0);
+        assert_eq!(o.shards, 1, "default is the serial path");
+        assert_eq!(o.parallelism, 1);
     }
 
     #[test]
@@ -115,8 +147,26 @@ mod tests {
         assert_eq!(auto, (192, 1, 96));
         // auto window clamps to the reference
         assert_eq!(SearchOptions::default().resolve(128, 150), (150, 1, 75));
-        let explicit = SearchOptions { k: 3, window: 64, stride: 0, exclusion: 7 };
+        let explicit =
+            SearchOptions { k: 3, window: 64, stride: 0, exclusion: 7, ..Default::default() };
         assert_eq!(explicit.resolve(128, 2048), (64, 1, 7));
+    }
+
+    #[test]
+    fn search_options_resolve_sharding() {
+        // defaults: serial
+        assert_eq!(SearchOptions::default().resolve_sharding(), (1, 1));
+        // explicit shard/thread counts pass through
+        let o = SearchOptions { shards: 4, parallelism: 2, ..Default::default() };
+        assert_eq!(o.resolve_sharding(), (4, 2));
+        // shards auto: one per worker thread
+        let o = SearchOptions { shards: 0, parallelism: 3, ..Default::default() };
+        assert_eq!(o.resolve_sharding(), (3, 3));
+        // parallelism auto: host parallelism, at least 1
+        let o = SearchOptions { shards: 2, parallelism: 0, ..Default::default() };
+        let (shards, parallelism) = o.resolve_sharding();
+        assert_eq!(shards, 2);
+        assert!(parallelism >= 1);
     }
 
     #[test]

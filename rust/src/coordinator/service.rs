@@ -33,7 +33,7 @@ use crate::log_info;
 use crate::normalize;
 use crate::runtime::artifact::{Manifest, VariantMeta};
 use crate::runtime::Engine;
-use crate::search::SearchEngine;
+use crate::search::{CascadeOpts, SearchEngine};
 
 /// Service construction options.
 #[derive(Clone, Debug)]
@@ -146,12 +146,9 @@ impl SdtwService {
             let batch_q = batch_q.clone();
             let router = router.clone();
             let deadline = opts.batch_deadline;
-            let metrics = metrics.clone();
             std::thread::Builder::new()
                 .name("sdtw-dispatcher".to_string())
-                .spawn(move || {
-                    dispatcher_loop(submit_q, batch_q, router, deadline, metrics)
-                })?
+                .spawn(move || dispatcher_loop(submit_q, batch_q, router, deadline))?
         };
 
         log_info!(
@@ -261,12 +258,30 @@ impl SdtwService {
 
     /// Top-K subsequence search over the service's reference: resolves
     /// the auto options, z-normalizes the query (same flow as align),
-    /// runs the lower-bound cascade, and records search metrics.
+    /// runs the lower-bound cascade — serial, or sharded across a worker
+    /// pool when `options.shards` resolves above 1 — and records search
+    /// metrics.  Sharded and serial paths return bit-identical hits (the
+    /// `search::sharded` module documents why).
     ///
-    /// Runs on the calling thread — the cascade is a CPU index scan whose
-    /// pruning leaves little batchable work, so it bypasses the kernel
-    /// batcher (GPU-side LB is a ROADMAP open item).
+    /// Runs on the calling thread (plus the executor's workers) — the
+    /// cascade is a CPU index scan whose pruning leaves little batchable
+    /// work, so it bypasses the kernel batcher (GPU-side LB is a ROADMAP
+    /// open item).
     pub fn search_blocking(
+        &self,
+        query: Vec<f32>,
+        options: SearchOptions,
+    ) -> Result<SearchResponse> {
+        let r = self.search_blocking_inner(query, options);
+        if r.is_err() {
+            // failed searches count as service errors, same as failed
+            // align batches (the align path records these in the worker)
+            self.metrics.on_error();
+        }
+        r
+    }
+
+    fn search_blocking_inner(
         &self,
         query: Vec<f32>,
         options: SearchOptions,
@@ -279,19 +294,49 @@ impl SdtwService {
             window <= reflen,
             "window {window} exceeds reference length {reflen}"
         );
+        let (shards, parallelism) = options.resolve_sharding();
 
         let submitted = Instant::now();
         let engine = self.search_engine(window, stride)?;
         let qn = normalize::znormed(&query);
-        let outcome = engine.search(&qn, options.k, exclusion)?;
-        let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
-        self.metrics.on_search(latency_ms, &outcome.stats);
-        Ok(SearchResponse {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            hits: outcome.hits,
-            latency_ms,
-            stats: outcome.stats,
-        })
+        if shards <= 1 {
+            let outcome = engine.search(&qn, options.k, exclusion)?;
+            let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            self.metrics.on_search(latency_ms, &outcome.stats);
+            Ok(SearchResponse {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                hits: outcome.hits,
+                latency_ms,
+                stats: outcome.stats,
+                shards: 1,
+                tau_tightenings: 0,
+            })
+        } else {
+            let outcome = engine.search_sharded(
+                &qn,
+                options.k,
+                exclusion,
+                CascadeOpts::default(),
+                shards,
+                parallelism,
+            )?;
+            let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            self.metrics.on_search_sharded(
+                latency_ms,
+                &outcome.stats,
+                outcome.shards.len() as u64,
+                outcome.tau_tightenings,
+                outcome.imbalance(),
+            );
+            Ok(SearchResponse {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                shards: outcome.shards.len(),
+                tau_tightenings: outcome.tau_tightenings,
+                hits: outcome.hits,
+                latency_ms,
+                stats: outcome.stats,
+            })
+        }
     }
 
     /// Bound on cached search-engine shapes: (window, stride) is
@@ -357,7 +402,6 @@ fn dispatcher_loop(
     batch_q: Arc<BoundedQueue<RoutedBatch>>,
     router: Arc<Router>,
     deadline: Duration,
-    _metrics: Arc<Metrics>,
 ) {
     // variant name → (meta, assembler)
     let mut lanes: HashMap<String, (Arc<VariantMeta>, BatchAssembler)> = HashMap::new();

@@ -239,8 +239,10 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         .opt_default("window", "0", "candidate window length (0 = 3*qlen/2)")
         .opt_default("stride", "1", "candidate stride")
         .opt_default("exclusion", "0", "min distance between reported sites (0 = window/2)")
-        .opt_default("shards", "1", "independent index shards")
+        .opt_default("shards", "1", "index shards with a shared threshold (0 = one per thread)")
+        .opt_default("parallel", "0", "worker threads for sharded search (0 = all cores)")
         .flag("no-cascade", "disable all pruning stages (brute force)")
+        .flag("per-shard", "print one stats line per shard")
         .flag("verify", "cross-check hits against brute-force dtw::subsequence top-K");
     if maybe_help(&cmd, &raw) {
         return Ok(());
@@ -272,14 +274,16 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     }
 
     // one source of truth for "0 = auto" (shared with the service/protocol)
-    let (window, stride, exclusion) = SearchOptions {
+    let search_options = SearchOptions {
         k,
         window: a.get_or("window", 0usize)?,
         stride: a.get_or("stride", 1usize)?,
         exclusion: a.get_or("exclusion", 0usize)?,
-    }
-    .resolve(qlen, reflen);
-    let shards: usize = a.get_or("shards", 1)?;
+        shards: a.get_or("shards", 1usize)?,
+        parallelism: a.get_or("parallel", 0usize)?,
+    };
+    let (window, stride, exclusion) = search_options.resolve(qlen, reflen);
+    let (shards, parallelism) = search_options.resolve_sharding();
     let opts = if a.has("no-cascade") {
         sdtw_repro::search::CascadeOpts::BRUTE
     } else {
@@ -292,14 +296,24 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     let engine = sdtw_repro::search::SearchEngine::new(rn, window, stride, Dist::Sq)?;
     let build_ms = t0.elapsed().as_secs_f64() * 1e3;
     let t1 = std::time::Instant::now();
-    let out = engine.search_opts(&qn, k, exclusion, opts, shards)?;
+    let (out, sharded) = if shards > 1 {
+        let so = engine.search_sharded(&qn, k, exclusion, opts, shards, parallelism)?;
+        (so.outcome(), Some(so))
+    } else {
+        (engine.search_opts(&qn, k, exclusion, opts, 1)?, None)
+    };
     let search_ms = t1.elapsed().as_secs_f64() * 1e3;
 
     println!(
         "reference {} ({reflen}) | query {qlen} | window {window} stride {stride} \
-         exclusion {exclusion} | {} candidates",
+         exclusion {exclusion} | {} candidates{}",
         a.get("family").unwrap(),
-        engine.index().candidates()
+        engine.index().candidates(),
+        if shards > 1 {
+            format!(" | {shards} shards × {parallelism} threads")
+        } else {
+            String::new()
+        }
     );
     for emb in &planted {
         println!("planted copy at {}..{}", emb.start, emb.end);
@@ -328,6 +342,31 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         s.dp_abandoned,
         s.dp_full
     );
+    if let Some(so) = &sharded {
+        println!(
+            "sharded: {} shards, τ tightened {} times, imbalance {:.2} (slowest/mean)",
+            so.shards.len(),
+            so.tau_tightenings,
+            so.imbalance()
+        );
+        if a.has("per-shard") {
+            for sh in &so.shards {
+                println!(
+                    "  shard {:3} [{:6}..{:6})  {:8.2} ms  pruned {:5.1}% \
+                     (kim={} keogh={} abandoned={} full_dp={})",
+                    sh.shard,
+                    sh.range.start,
+                    sh.range.end,
+                    sh.elapsed_ms,
+                    sh.stats.prune_fraction() * 100.0,
+                    sh.stats.pruned_kim,
+                    sh.stats.pruned_keogh,
+                    sh.stats.dp_abandoned,
+                    sh.stats.dp_full
+                );
+            }
+        }
+    }
 
     if a.has("verify") {
         let t2 = std::time::Instant::now();

@@ -37,6 +37,32 @@ use super::index::ReferenceIndex;
 use super::lower_bounds::{lb_keogh, lb_kim};
 use super::topk::{prune_heap_cap, BoundedCostHeap, Hit};
 
+/// Source and sink of the cascade's prune threshold τ.
+///
+/// The serial path uses the local [`BoundedCostHeap`] directly; the
+/// sharded executor ([`super::sharded`]) substitutes a process-wide
+/// [`super::sharded::SharedThreshold`] so an exact cost found in one
+/// shard tightens pruning in every other shard.  Soundness only requires
+/// that `tau()` never drops below the final K-th greedy pick's cost —
+/// the heap-cap argument in the `topk` module docs holds over *any*
+/// subset of candidates, so both implementations qualify.
+pub trait TauSink {
+    /// Current prune threshold (admissible: never below the final τ*).
+    fn tau(&self) -> f32;
+    /// Record one exact DP cost.
+    fn record(&mut self, cost: f32);
+}
+
+impl TauSink for BoundedCostHeap {
+    fn tau(&self) -> f32 {
+        self.threshold()
+    }
+
+    fn record(&mut self, cost: f32) {
+        self.push(cost);
+    }
+}
+
 /// Which cascade stages are active (all on by default; the bench ablates
 /// them individually — all off = brute force over every window).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -177,16 +203,38 @@ pub fn search_range(
     opts: CascadeOpts,
     range: Range<usize>,
 ) -> (Vec<Hit>, CascadeStats) {
-    let mut stats = CascadeStats { candidates: range.len() as u64, ..Default::default() };
-    let mut hits: Vec<Hit> = Vec::new();
     if k == 0 || range.is_empty() {
-        return (hits, stats);
+        return (
+            Vec::new(),
+            CascadeStats { candidates: range.len() as u64, ..Default::default() },
+        );
     }
     // clamp to the candidate count: a heap that could hold every
     // candidate never fills, so pruning disengages rather than the cap
     // formula driving a huge allocation for adversarial k/exclusion
     let cap = prune_heap_cap(k, exclusion, index.stride()).min(range.len());
     let mut heap = BoundedCostHeap::new(cap);
+    search_range_with(index, query, dist, k, opts, range, &mut heap)
+}
+
+/// [`search_range`] with the prune threshold supplied by the caller —
+/// the seam the sharded executor uses to share one τ across shards.
+/// `tau_sink` may start below +inf (another shard already tightened it);
+/// it must satisfy the [`TauSink`] admissibility contract.
+pub fn search_range_with(
+    index: &ReferenceIndex,
+    query: &[f32],
+    dist: Dist,
+    k: usize,
+    opts: CascadeOpts,
+    range: Range<usize>,
+    tau_sink: &mut impl TauSink,
+) -> (Vec<Hit>, CascadeStats) {
+    let mut stats = CascadeStats { candidates: range.len() as u64, ..Default::default() };
+    let mut hits: Vec<Hit> = Vec::new();
+    if k == 0 || range.is_empty() {
+        return (hits, stats);
+    }
 
     // stage 1 precompute: LB_Kim per candidate, processed cheapest-first
     let mut order: Vec<(f32, usize)> = range
@@ -207,7 +255,7 @@ pub fn search_range(
     let mut prev = Vec::new();
     let mut cur = Vec::new();
     for (i, &(kim, t)) in order.iter().enumerate() {
-        let tau = heap.threshold();
+        let tau = tau_sink.tau();
         if opts.kim && kim > tau {
             // sorted ascending: everything from here on is also above τ
             stats.pruned_kim += (order.len() - i) as u64;
@@ -232,7 +280,7 @@ pub fn search_range(
             None => stats.dp_abandoned += 1,
             Some(m) => {
                 stats.dp_full += 1;
-                heap.push(m.cost);
+                tau_sink.record(m.cost);
                 let start = index.start(t);
                 hits.push(Hit { start, end: start + m.end, cost: m.cost });
             }

@@ -15,6 +15,8 @@
 //! * [`topk`]         — bounded-heap thresholding + trivial-match-excluded
 //!                      greedy selection (with the losslessness proof)
 //! * [`index`]        — the prebuilt, shardable reference index
+//! * [`sharded`]      — the parallel executor: shard ranges on a worker
+//!                      pool with one shared atomic prune threshold
 //! * [`SearchEngine`] — the facade the coordinator/CLI/examples use
 //!
 //! Results are **bit-identical** to brute-forcing `dtw::sdtw` over every
@@ -27,6 +29,7 @@ pub mod cascade;
 pub mod envelope;
 pub mod index;
 pub mod lower_bounds;
+pub mod sharded;
 pub mod topk;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -36,6 +39,7 @@ use anyhow::Result;
 
 pub use cascade::{sdtw_window_abandoning, CascadeOpts, CascadeStats};
 pub use index::ReferenceIndex;
+pub use sharded::{search_sharded, ShardReport, ShardedOutcome, SharedThreshold};
 pub use topk::{select_topk, Hit};
 
 use crate::dtw::Dist;

@@ -1,0 +1,428 @@
+//! Sharded parallel search: the LB cascade over N independent
+//! [`ReferenceIndex::shard_ranges`] segments on a pool of
+//! coordinator-style workers, merged into one exact top-K.
+//!
+//! ```text
+//!   shard_ranges(N) ──► BoundedQueue<(shard, range)> ──► worker × P
+//!        │                                                │ cascade
+//!        │                  SharedThreshold (atomic τ) ◄──┤ record()
+//!        │                         │  publish             │ tau()
+//!        │                         └──────────────────────┘
+//!        ▼
+//!   per-shard (hits, stats, elapsed) ──► deterministic merge
+//!        (select_topk over the union; sort key (cost, start) is a
+//!         total order, so the result is independent of thread timing)
+//! ```
+//!
+//! The executor reuses the coordinator's [`BoundedQueue`] as the work
+//! queue (same pop-until-closed worker-loop shape as the align path) and
+//! shares one prune threshold across all shards: every exact DP cost any
+//! worker computes is pushed into a process-wide [`SharedThreshold`],
+//! whose published τ every other shard reads before each candidate — a
+//! hit found in shard 3 immediately tightens pruning in shard 0.
+//!
+//! # Why the merge is exact (bit-identical to the serial engine)
+//!
+//! Two facts carry the proof from the `topk` module docs across shards:
+//!
+//! 1. **The shared τ is admissible.**  [`SharedThreshold`] is a
+//!    [`BoundedCostHeap`] with `cap = prune_heap_cap(k, exclusion,
+//!    stride)` over *all* exact costs computed so far, across shards.
+//!    The heap-cap argument holds over any subset of the candidate set,
+//!    so its threshold never drops below τ*, the final K-th greedy
+//!    pick's cost — at every instant, in every shard.
+//! 2. **Every true top-K window completes its DP.**  A window in the
+//!    exact top-K has cost ≤ τ* ≤ τ(t) for every time t, so it can
+//!    never be LB-pruned or DP-abandoned (all tests are strict `>`
+//!    comparisons against τ).  Its exact, bit-identical cost therefore
+//!    appears in its shard's hit list.
+//!
+//! The merged hit list is then a superset of the true top-K, and the
+//! greedy `(cost, start)` selection over any such superset returns
+//! exactly the brute-force picks (the `topk` superset lemma).  Which
+//! *non*-winning windows complete their DP — and hence the per-shard
+//! counters — does depend on thread timing; the returned hits do not.
+//!
+//! The per-shard [`ShardReport`]s feed the service metrics: prune
+//! counters per shard, wall-clock imbalance, and how often the shared
+//! threshold actually tightened (the cross-shard pruning win).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::queue::BoundedQueue;
+
+use super::cascade::{self, CascadeOpts, CascadeStats, TauSink};
+use super::index::ReferenceIndex;
+use super::topk::{prune_heap_cap, select_topk, BoundedCostHeap, Hit};
+use super::{SearchEngine, SearchOutcome};
+
+/// A process-wide prune threshold shared by every shard of one search.
+///
+/// Exact costs go through a mutex-protected [`BoundedCostHeap`] (pushes
+/// are rare — only DP survivors pay them); the resulting τ is published
+/// into an atomic so the hot per-candidate read is a single load.
+#[derive(Debug)]
+pub struct SharedThreshold {
+    heap: Mutex<BoundedCostHeap>,
+    /// `f32::to_bits` of the published τ.  Costs are non-negative, so
+    /// the f32 comparison below is a total order over observed values.
+    bits: AtomicU32,
+    /// Times the published τ strictly decreased.
+    tightenings: AtomicU64,
+}
+
+impl SharedThreshold {
+    /// `cap` is `prune_heap_cap(k, exclusion, stride)` clamped to the
+    /// total candidate count (see [`BoundedCostHeap`]).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            heap: Mutex::new(BoundedCostHeap::new(cap)),
+            bits: AtomicU32::new(f32::INFINITY.to_bits()),
+            tightenings: AtomicU64::new(0),
+        }
+    }
+
+    /// Current published τ (+inf until the heap fills).
+    pub fn tau(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    /// Record one exact DP cost and republish τ if it tightened.
+    pub fn record(&self, cost: f32) {
+        let mut heap = self.heap.lock().unwrap();
+        heap.push(cost);
+        let t = heap.threshold();
+        // publish under the lock: τ is monotonically non-increasing, so
+        // readers can only ever see a value that is still admissible
+        if t < f32::from_bits(self.bits.load(Ordering::Relaxed)) {
+            self.bits.store(t.to_bits(), Ordering::Release);
+            self.tightenings.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// How often τ strictly decreased over the whole search.
+    pub fn tightenings(&self) -> u64 {
+        self.tightenings.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-worker handle: adapts the shared threshold to the cascade's
+/// [`TauSink`] seam.
+struct SharedTau<'a>(&'a SharedThreshold);
+
+impl TauSink for SharedTau<'_> {
+    fn tau(&self) -> f32 {
+        self.0.tau()
+    }
+
+    fn record(&mut self, cost: f32) {
+        self.0.record(cost);
+    }
+}
+
+/// What one shard did: its candidate range, cascade counters, and its
+/// wall time (`stats.dp_full` is the exact-cost count it contributed to
+/// the merge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardReport {
+    /// Shard id (index into `shard_ranges`).
+    pub shard: usize,
+    /// Candidate range this shard cascaded.
+    pub range: Range<usize>,
+    /// Per-stage prune counters for this shard alone.
+    pub stats: CascadeStats,
+    /// Wall time this shard's cascade took on its worker.
+    pub elapsed_ms: f64,
+}
+
+/// A merged sharded search: the exact top-K plus per-shard telemetry.
+#[derive(Clone, Debug)]
+pub struct ShardedOutcome {
+    /// The top-K match sites, best first — bit-identical to the serial
+    /// engine (and to brute force) by the module-level argument.
+    pub hits: Vec<Hit>,
+    /// Cascade counters merged over all shards.
+    pub stats: CascadeStats,
+    /// One report per shard, in shard order.
+    pub shards: Vec<ShardReport>,
+    /// Times the shared τ strictly tightened across the whole search.
+    pub tau_tightenings: u64,
+}
+
+impl ShardedOutcome {
+    /// Work imbalance: slowest shard over mean shard wall time, ≥ 1.0
+    /// (1.0 = perfectly even).  The number to watch when shard count or
+    /// placement changes — pruning makes shard cost data-dependent, so
+    /// equal candidate counts do not imply equal work.
+    pub fn imbalance(&self) -> f64 {
+        let n = self.shards.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let sum: f64 = self.shards.iter().map(|s| s.elapsed_ms).sum();
+        let max = self
+            .shards
+            .iter()
+            .map(|s| s.elapsed_ms)
+            .fold(0.0f64, f64::max);
+        if sum <= 0.0 {
+            1.0
+        } else {
+            max * n as f64 / sum
+        }
+    }
+
+    /// View as the plain (hits, merged stats) outcome.
+    pub fn outcome(&self) -> SearchOutcome {
+        SearchOutcome { hits: self.hits.clone(), stats: self.stats }
+    }
+}
+
+/// Run one query's cascade over `n_shards` index segments on up to
+/// `parallelism` worker threads (clamped to the shard count; 1 runs the
+/// shards sequentially but still through the shared threshold).
+pub fn search_sharded(
+    engine: &SearchEngine,
+    query: &[f32],
+    k: usize,
+    exclusion: usize,
+    opts: CascadeOpts,
+    n_shards: usize,
+    parallelism: usize,
+) -> Result<ShardedOutcome> {
+    anyhow::ensure!(!query.is_empty(), "empty query");
+    let index: &ReferenceIndex = engine.index();
+    let dist = engine.dist();
+    let ranges = index.shard_ranges(n_shards.max(1));
+    if k == 0 {
+        let shards = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ShardReport {
+                shard: i,
+                range: r.clone(),
+                stats: CascadeStats { candidates: r.len() as u64, ..Default::default() },
+                elapsed_ms: 0.0,
+            })
+            .collect::<Vec<_>>();
+        let mut stats = CascadeStats::default();
+        for s in &shards {
+            stats.merge(&s.stats);
+        }
+        return Ok(ShardedOutcome { hits: Vec::new(), stats, shards, tau_tightenings: 0 });
+    }
+
+    // one τ for the whole search: cap over the TOTAL candidate count,
+    // sound over any subset (topk module docs), shared by every shard
+    let cap = prune_heap_cap(k, exclusion, index.stride()).min(index.candidates().max(1));
+    let shared = SharedThreshold::new(cap);
+
+    // the coordinator worker-loop shape: a closed bounded queue of shard
+    // jobs, P workers popping until drained
+    let jobs: BoundedQueue<(usize, Range<usize>)> = BoundedQueue::new(ranges.len().max(1));
+    for (i, r) in ranges.iter().enumerate() {
+        jobs.try_push((i, r.clone()))
+            .expect("queue sized to the shard count");
+    }
+    jobs.close();
+
+    type Slot = Mutex<Option<(Vec<Hit>, ShardReport)>>;
+    let slots: Vec<Slot> = ranges.iter().map(|_| Mutex::new(None)).collect();
+    let threads = parallelism.max(1).min(ranges.len());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let jobs = &jobs;
+            let slots = &slots;
+            let shared = &shared;
+            scope.spawn(move || {
+                let mut sink = SharedTau(shared);
+                while let Some((shard, range)) = jobs.pop() {
+                    let t0 = Instant::now();
+                    let (hits, stats) = cascade::search_range_with(
+                        index,
+                        query,
+                        dist,
+                        k,
+                        opts,
+                        range.clone(),
+                        &mut sink,
+                    );
+                    let report = ShardReport {
+                        shard,
+                        range,
+                        stats,
+                        elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    };
+                    *slots[shard].lock().unwrap() = Some((hits, report));
+                }
+            });
+        }
+    });
+
+    let mut all_hits: Vec<Hit> = Vec::new();
+    let mut stats = CascadeStats::default();
+    let mut reports = Vec::with_capacity(slots.len());
+    for slot in slots {
+        let (mut hits, report) = slot
+            .into_inner()
+            .unwrap()
+            .expect("every shard job was executed");
+        stats.merge(&report.stats);
+        all_hits.append(&mut hits);
+        reports.push(report);
+    }
+    Ok(ShardedOutcome {
+        hits: select_topk(&all_hits, k, exclusion),
+        stats,
+        shards: reports,
+        tau_tightenings: shared.tightenings(),
+    })
+}
+
+impl SearchEngine {
+    /// Sharded parallel variant of [`SearchEngine::search`] — see
+    /// [`search_sharded`].
+    pub fn search_sharded(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        opts: CascadeOpts,
+        n_shards: usize,
+        parallelism: usize,
+    ) -> Result<ShardedOutcome> {
+        search_sharded(self, query, k, exclusion, opts, n_shards, parallelism)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::dtw::Dist;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(n: usize, window: usize, stride: usize, seed: u64) -> (SearchEngine, Xoshiro256) {
+        let mut g = Xoshiro256::new(seed);
+        let r = Arc::new(g.normal_vec_f32(n));
+        (SearchEngine::new(r, window, stride, Dist::Sq).unwrap(), g)
+    }
+
+    fn assert_hits_identical(a: &[Hit], b: &[Hit]) {
+        assert_eq!(a.len(), b.len(), "pick counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "cost not bit-identical");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_across_shard_and_thread_counts() {
+        let (engine, mut g) = setup(600, 24, 1, 71);
+        let q = g.normal_vec_f32(16);
+        let serial = engine.search(&q, 4, 12).unwrap();
+        for shards in [1usize, 2, 3, 7, 16] {
+            for threads in [1usize, 2, 4] {
+                let out = engine
+                    .search_sharded(&q, 4, 12, CascadeOpts::default(), shards, threads)
+                    .unwrap();
+                assert_hits_identical(&out.hits, &serial.hits);
+                assert_eq!(out.shards.len(), shards.min(engine.index().candidates()));
+                assert_eq!(
+                    out.stats.candidates,
+                    engine.index().candidates() as u64,
+                    "shard ranges must partition the candidate space"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_candidates_is_exact() {
+        let (engine, mut g) = setup(40, 20, 3, 72);
+        let q = g.normal_vec_f32(10);
+        let candidates = engine.index().candidates();
+        let serial = engine.search(&q, 2, 4).unwrap();
+        let out = engine
+            .search_sharded(&q, 2, 4, CascadeOpts::default(), candidates + 50, 4)
+            .unwrap();
+        assert_hits_identical(&out.hits, &serial.hits);
+        assert_eq!(out.shards.len(), candidates, "empty shards are dropped");
+    }
+
+    #[test]
+    fn shard_reports_partition_counters() {
+        let (engine, mut g) = setup(500, 20, 1, 73);
+        let q = g.normal_vec_f32(12);
+        let out = engine
+            .search_sharded(&q, 3, 10, CascadeOpts::default(), 4, 2)
+            .unwrap();
+        let mut merged = CascadeStats::default();
+        for (i, s) in out.shards.iter().enumerate() {
+            assert_eq!(s.shard, i);
+            assert_eq!(s.stats.candidates, s.range.len() as u64);
+            assert_eq!(
+                s.stats.pruned_total() + s.stats.dp_full,
+                s.stats.candidates,
+                "shard {i} counters must partition its range"
+            );
+            merged.merge(&s.stats);
+        }
+        assert_eq!(merged, out.stats);
+        assert!(out.imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn shared_threshold_tightens_and_is_monotone() {
+        let tau = SharedThreshold::new(2);
+        assert_eq!(tau.tau(), f32::INFINITY);
+        tau.record(5.0);
+        assert_eq!(tau.tau(), f32::INFINITY, "not full yet");
+        tau.record(3.0);
+        assert_eq!(tau.tau(), 5.0);
+        tau.record(1.0); // evicts 5
+        assert_eq!(tau.tau(), 3.0);
+        tau.record(10.0); // ignored
+        assert_eq!(tau.tau(), 3.0);
+        assert_eq!(tau.tightenings(), 2);
+    }
+
+    #[test]
+    fn k_zero_is_empty_with_full_candidate_accounting() {
+        let (engine, mut g) = setup(100, 10, 1, 74);
+        let q = g.normal_vec_f32(8);
+        let out = engine
+            .search_sharded(&q, 0, 5, CascadeOpts::default(), 3, 2)
+            .unwrap();
+        assert!(out.hits.is_empty());
+        assert_eq!(out.stats.candidates, engine.index().candidates() as u64);
+        assert_eq!(out.stats.dp_full, 0);
+    }
+
+    #[test]
+    fn empty_query_rejected() {
+        let (engine, _) = setup(64, 8, 1, 75);
+        assert!(engine
+            .search_sharded(&[], 1, 1, CascadeOpts::default(), 2, 2)
+            .is_err());
+    }
+
+    #[test]
+    fn brute_opts_still_exact_when_sharded() {
+        let (engine, mut g) = setup(300, 16, 2, 76);
+        let q = g.normal_vec_f32(12);
+        let serial = engine.search(&q, 3, 8).unwrap();
+        let out = engine
+            .search_sharded(&q, 3, 8, CascadeOpts::BRUTE, 5, 3)
+            .unwrap();
+        assert_hits_identical(&out.hits, &serial.hits);
+        assert_eq!(out.stats.dp_full, engine.index().candidates() as u64);
+    }
+}

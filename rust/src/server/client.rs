@@ -1,5 +1,16 @@
 //! Blocking TCP client for the line-JSON protocol — used by the
 //! `serve_e2e` example's load generator, the CLI, and integration tests.
+//!
+//! One [`Client`] wraps one connection and issues one request at a time
+//! (write line, read line); open several clients for concurrency — the
+//! server batches across connections, so parallel clients is exactly the
+//! pattern that exercises dynamic batching.  Typed helpers mirror the
+//! protocol verbs ([`Client::align`], [`Client::search`],
+//! [`Client::metrics`], [`Client::info`], [`Client::ping`]); unknown
+//! `ok:true` replies from a newer server surface as
+//! [`super::proto::Response::Unknown`] rather than errors, so old
+//! clients keep working across protocol growth (forward compatibility is
+//! tested by the proto fuzz suite).
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;

@@ -3,7 +3,8 @@
 //!
 //! Requests:
 //!   {"op":"align","query":[...],"pruned":b,"quantized":b,"half":b}
-//!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,"exclusion":96}
+//!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,
+//!    "exclusion":96,"shards":4,"parallelism":4}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
 //!
@@ -93,6 +94,8 @@ impl Request {
                         window: parse_usize(&v, "window", d.window)?,
                         stride: parse_usize(&v, "stride", d.stride)?,
                         exclusion: parse_usize(&v, "exclusion", d.exclusion)?,
+                        shards: parse_usize(&v, "shards", d.shards)?,
+                        parallelism: parse_usize(&v, "parallelism", d.parallelism)?,
                     },
                 })
             }
@@ -139,6 +142,12 @@ impl Request {
                 if options.exclusion != d.exclusion {
                     pairs.push(("exclusion", Json::Int(options.exclusion as i64)));
                 }
+                if options.shards != d.shards {
+                    pairs.push(("shards", Json::Int(options.shards as i64)));
+                }
+                if options.parallelism != d.parallelism {
+                    pairs.push(("parallelism", Json::Int(options.parallelism as i64)));
+                }
                 Json::obj(pairs).to_string()
             }
         }
@@ -170,6 +179,11 @@ pub struct SearchFields {
     pub pruned_keogh: u64,
     pub dp_abandoned: u64,
     pub dp_full: u64,
+    /// Shards executed (1 = serial; 0 when talking to a pre-sharding
+    /// server that does not send the field).
+    pub shards: u64,
+    /// Shared-threshold tightenings (0 on the serial path).
+    pub tau_tightenings: u64,
 }
 
 /// The metrics fields that cross the wire.
@@ -187,6 +201,10 @@ pub struct MetricsFields {
     pub search_windows: u64,
     pub search_pruned: u64,
     pub search_p50_ms: f64,
+    /// Searches served by the sharded executor (subset of `searches`).
+    pub searches_sharded: u64,
+    /// Shared-threshold tightenings across all sharded searches.
+    pub search_tightenings: u64,
 }
 
 impl Response {
@@ -208,6 +226,8 @@ impl Response {
             pruned_keogh: r.stats.pruned_keogh,
             dp_abandoned: r.stats.dp_abandoned,
             dp_full: r.stats.dp_full,
+            shards: r.shards as u64,
+            tau_tightenings: r.tau_tightenings,
         }))
     }
 
@@ -225,6 +245,8 @@ impl Response {
             search_windows: m.search_windows,
             search_pruned: m.search_pruned_total(),
             search_p50_ms: m.search_latency_p50_ms,
+            searches_sharded: m.searches_sharded,
+            search_tightenings: m.search_tau_tightenings,
         }))
     }
 
@@ -263,6 +285,8 @@ impl Response {
                     ("pruned_keogh", Json::Int(s.pruned_keogh as i64)),
                     ("dp_abandoned", Json::Int(s.dp_abandoned as i64)),
                     ("dp_full", Json::Int(s.dp_full as i64)),
+                    ("shards", Json::Int(s.shards as i64)),
+                    ("tau_tightenings", Json::Int(s.tau_tightenings as i64)),
                 ])
                 .to_string()
             }
@@ -280,6 +304,8 @@ impl Response {
                 ("search_windows", Json::Int(m.search_windows as i64)),
                 ("search_pruned", Json::Int(m.search_pruned as i64)),
                 ("search_p50_ms", Json::Num(m.search_p50_ms)),
+                ("searches_sharded", Json::Int(m.searches_sharded as i64)),
+                ("search_tightenings", Json::Int(m.search_tightenings as i64)),
             ])
             .to_string(),
             Response::Error(e) => Json::obj(vec![
@@ -322,6 +348,8 @@ impl Response {
                 pruned_keogh: int("pruned_keogh"),
                 dp_abandoned: int("dp_abandoned"),
                 dp_full: int("dp_full"),
+                shards: int("shards"),
+                tau_tightenings: int("tau_tightenings"),
             })));
         }
         if let Some(cost) = v.get("cost").and_then(Json::as_f64) {
@@ -359,6 +387,8 @@ impl Response {
                 search_windows: int("search_windows"),
                 search_pruned: int("search_pruned"),
                 search_p50_ms: num("search_p50_ms"),
+                searches_sharded: int("searches_sharded"),
+                search_tightenings: int("search_tightenings"),
             })));
         }
         // ok:true but unrecognized shape: a newer verb — preserve it
@@ -389,11 +419,28 @@ mod tests {
         assert_eq!(Request::parse(&defaults.encode()).unwrap(), defaults);
         let custom = Request::Search {
             query: vec![2.0],
-            options: SearchOptions { k: 9, window: 64, stride: 2, exclusion: 32 },
+            options: SearchOptions {
+                k: 9,
+                window: 64,
+                stride: 2,
+                exclusion: 32,
+                shards: 4,
+                parallelism: 2,
+            },
         };
         let enc = custom.encode();
         assert!(enc.contains("\"k\":9") && enc.contains("\"window\":64"));
+        assert!(enc.contains("\"shards\":4") && enc.contains("\"parallelism\":2"));
         assert_eq!(Request::parse(&enc).unwrap(), custom);
+        // sharding fields omitted on the wire parse as the serial default
+        let legacy = Request::parse(r#"{"op":"search","query":[1],"k":2}"#).unwrap();
+        match legacy {
+            Request::Search { options, .. } => {
+                assert_eq!(options.shards, 1);
+                assert_eq!(options.parallelism, 1);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
     }
 
     #[test]
@@ -439,6 +486,8 @@ mod tests {
             pruned_keogh: 500,
             dp_abandoned: 400,
             dp_full: 196,
+            shards: 4,
+            tau_tightenings: 17,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
         // empty hit list still recognized as a search response
@@ -450,6 +499,8 @@ mod tests {
             pruned_keogh: 0,
             dp_abandoned: 0,
             dp_full: 0,
+            shards: 1,
+            tau_tightenings: 0,
         }));
         assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
     }
@@ -469,6 +520,8 @@ mod tests {
             search_windows: 8000,
             search_pruned: 7500,
             search_p50_ms: 3.5,
+            searches_sharded: 2,
+            search_tightenings: 31,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
     }
@@ -503,7 +556,14 @@ mod tests {
         let seeds: Vec<String> = vec![
             Request::Search {
                 query: vec![1.0, 2.0],
-                options: SearchOptions { k: 3, window: 8, stride: 1, exclusion: 4 },
+                options: SearchOptions {
+                    k: 3,
+                    window: 8,
+                    stride: 1,
+                    exclusion: 4,
+                    shards: 2,
+                    parallelism: 2,
+                },
             }
             .encode(),
             Request::Align { query: vec![0.25], options: AlignOptions::default() }.encode(),
@@ -515,6 +575,8 @@ mod tests {
                 pruned_keogh: 1,
                 dp_abandoned: 1,
                 dp_full: 2,
+                shards: 2,
+                tau_tightenings: 1,
             }))
             .encode(),
             Response::Pong.encode(),

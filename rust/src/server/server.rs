@@ -1,4 +1,19 @@
 //! TCP listener + per-connection loops.
+//!
+//! Threading model: one non-blocking accept loop polling a stop flag
+//! (so embedding tests can shut the server down deterministically), one
+//! detached thread per connection.  Each connection is a strict
+//! request/response pipeline — requests on a connection are answered in
+//! order, and slow verbs (an `align` waiting on a batch slot, a sharded
+//! `search` fanning out to its worker pool) only stall their own
+//! connection, never the listener.
+//!
+//! Error containment: a malformed line or a failed verb becomes an
+//! `{"ok":false,...}` protocol response on the same connection
+//! ([`handle_line`] never panics the connection thread); only I/O errors
+//! tear the connection down.  Cross-request state lives entirely in the
+//! shared [`SdtwService`] — connections themselves are stateless, which
+//! is what lets the coordinator batch queries *across* clients.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};

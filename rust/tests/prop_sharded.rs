@@ -1,0 +1,182 @@
+//! Property and stress tests for the sharded parallel search executor:
+//! bit-identical agreement with the serial engine (and brute force) over
+//! random shapes, shard counts — including more shards than candidates —
+//! and thread counts, plus a concurrency stress test showing that shared
+//! threshold tightening never drops a true hit.
+
+use std::sync::Arc;
+
+use sdtw_repro::dtw::{sdtw, Dist};
+use sdtw_repro::search::{select_topk, CascadeOpts, Hit, ReferenceIndex, SearchEngine};
+use sdtw_repro::testutil::check;
+use sdtw_repro::util::rng::Xoshiro256;
+
+/// Random-walk style series (level drift makes envelope bounds bite).
+fn walk(g: &mut sdtw_repro::testutil::GenCtx, lo: usize, hi: usize) -> Vec<f32> {
+    let base = g.vec_f32(lo, hi);
+    let mut level = 0f32;
+    base.iter()
+        .map(|&step| {
+            level += step * 0.5;
+            level
+        })
+        .collect()
+}
+
+fn brute_topk(query: &[f32], index: &ReferenceIndex, k: usize, exclusion: usize) -> Vec<Hit> {
+    let hits: Vec<Hit> = (0..index.candidates())
+        .map(|t| {
+            let m = sdtw(query, index.window_slice(t), Dist::Sq);
+            let start = index.start(t);
+            Hit { start, end: start + m.end, cost: m.cost }
+        })
+        .collect();
+    select_topk(&hits, k, exclusion)
+}
+
+fn assert_bit_identical(label: &str, a: &[Hit], b: &[Hit]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{label}: {} vs {} hits", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.start != y.start || x.end != y.end || x.cost.to_bits() != y.cost.to_bits() {
+            return Err(format!("{label}: hit {i} differs: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_sharded_executor_bit_identical_to_serial_and_brute() {
+    // the acceptance invariant: any shard count (including far more
+    // shards than candidates), any thread count, any stride/K/exclusion
+    check(401, 80, |g| {
+        let r = Arc::new(walk(g, 50, 220));
+        let m = g.usize_in(3, 12);
+        let window = g.usize_in(m, (m + 12).min(r.len()));
+        let stride = g.usize_in(1, 3);
+        let k = g.usize_in(1, 5);
+        let exclusion = g.usize_in(0, window);
+        let q = g.vec_f32(m, m);
+        let engine = SearchEngine::new(r, window, stride, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+        let candidates = engine.index().candidates();
+        let brute = brute_topk(&q, engine.index(), k, exclusion);
+        let serial = engine
+            .search(&q, k, exclusion)
+            .map_err(|e| e.to_string())?;
+        assert_bit_identical("serial vs brute", &serial.hits, &brute)?;
+
+        // shard counts spanning 1, a few, the candidate count, and beyond
+        for shards in [1, g.usize_in(2, 8), candidates.max(1), candidates + 9] {
+            let threads = g.usize_in(1, 4);
+            let out = engine
+                .search_sharded(&q, k, exclusion, CascadeOpts::default(), shards, threads)
+                .map_err(|e| e.to_string())?;
+            assert_bit_identical(
+                &format!("{shards} shards × {threads} threads"),
+                &out.hits,
+                &brute,
+            )?;
+            if out.stats.pruned_total() + out.stats.dp_full != out.stats.candidates {
+                return Err(format!(
+                    "merged counters don't partition candidates: {:?}",
+                    out.stats
+                ));
+            }
+            if out.stats.candidates != candidates as u64 {
+                return Err(format!(
+                    "shards saw {} candidates, index has {candidates}",
+                    out.stats.candidates
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_sharded_brute_opts_and_stage_toggles_stay_exact() {
+    // every cascade stage combination remains lossless under sharding
+    check(402, 30, |g| {
+        let r = Arc::new(walk(g, 60, 160));
+        let m = g.usize_in(4, 10);
+        let window = g.usize_in(m, (m + 8).min(r.len()));
+        let k = g.usize_in(1, 3);
+        let exclusion = g.usize_in(1, window);
+        let shards = g.usize_in(2, 6);
+        let q = g.vec_f32(m, m);
+        let engine =
+            SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let brute = brute_topk(&q, engine.index(), k, exclusion);
+        for kim in [false, true] {
+            for keogh in [false, true] {
+                for abandon in [false, true] {
+                    let opts = CascadeOpts { kim, keogh, abandon };
+                    let out = engine
+                        .search_sharded(&q, k, exclusion, opts, shards, 3)
+                        .map_err(|e| e.to_string())?;
+                    assert_bit_identical(&format!("opts {opts:?}"), &out.hits, &brute)?;
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn stress_concurrent_tightening_never_drops_a_true_hit() {
+    // one large planted workload, hammered repeatedly at high shard and
+    // thread counts: the shared τ races across workers on every run, and
+    // every run must still return exactly the brute-force top-K
+    let mut rng = Xoshiro256::new(99);
+    let n = 6000;
+    let m = 48;
+    let window = 72;
+    let mut level = 0f64;
+    let mut reference: Vec<f32> = (0..n)
+        .map(|_| {
+            level += rng.normal() * 0.4;
+            level as f32
+        })
+        .collect();
+    let query: Vec<f32> = rng.normal_vec_f32(m);
+    for at in [700usize, 2100, 3500, 4900] {
+        let stretch = rng.uniform(0.85, 1.2);
+        sdtw_repro::datagen::embed_query(&mut reference, &query, at, stretch, 0.05, &mut rng);
+    }
+    let rn = Arc::new(sdtw_repro::normalize::znormed(&reference));
+    let qn = sdtw_repro::normalize::znormed(&query);
+    let engine = SearchEngine::new(rn, window, 1, Dist::Sq).unwrap();
+
+    let k = 4;
+    let exclusion = window / 2;
+    let brute = brute_topk(&qn, engine.index(), k, exclusion);
+    assert_eq!(brute.len(), k, "workload must fill all K slots");
+
+    let mut tightened_at_least_once = false;
+    for run in 0..20 {
+        let shards = [2, 4, 8, 16][run % 4];
+        let out = engine
+            .search_sharded(&qn, k, exclusion, CascadeOpts::default(), shards, 8)
+            .unwrap();
+        assert_eq!(
+            out.hits, brute,
+            "run {run} ({shards} shards): sharded top-K diverged from brute force"
+        );
+        tightened_at_least_once |= out.tau_tightenings > 0;
+        // pruning must actually engage — the threshold the workers race
+        // over is doing real work, not vacuously +inf
+        assert!(
+            out.stats.prune_fraction() > 0.3,
+            "run {run}: prune fraction {:.2} too low for a planted workload",
+            out.stats.prune_fraction()
+        );
+    }
+    assert!(
+        tightened_at_least_once,
+        "shared threshold never tightened across 20 sharded runs"
+    );
+}
