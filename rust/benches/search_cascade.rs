@@ -49,8 +49,14 @@ fn main() -> anyhow::Result<()> {
 
     let stages: [(&str, CascadeOpts); 4] = [
         ("brute force (no cascade)", CascadeOpts::BRUTE),
-        ("LB_Kim only", CascadeOpts { kim: true, keogh: false, abandon: false }),
-        ("LB_Kim + LB_Keogh", CascadeOpts { kim: true, keogh: true, abandon: false }),
+        (
+            "LB_Kim only",
+            CascadeOpts { kim: true, keogh: false, abandon: false, ..CascadeOpts::BRUTE },
+        ),
+        (
+            "LB_Kim + LB_Keogh",
+            CascadeOpts { kim: true, keogh: true, abandon: false, ..CascadeOpts::BRUTE },
+        ),
         ("full cascade (+DP abandon)", CascadeOpts::default()),
     ];
 
@@ -104,6 +110,14 @@ fn main() -> anyhow::Result<()> {
             "{family:?}: full cascade pruned {pruned:.1}% of {candidates} windows \
              (acceptance target: >= 50%){}",
             if pruned >= 50.0 { " ✓" } else { "  ** BELOW TARGET **" }
+        );
+        println!(
+            "{family:?}: prune→survivor→batch ratio: {candidates} candidates → {} \
+             survivors → {} kernel batches (lane occupancy {:.2}; see \
+             benches/survivor_batch.rs for the lane-kernel ablation)",
+            full.stats.survivors(),
+            full.stats.survivor_batches,
+            full.stats.mean_lane_occupancy()
         );
     }
     println!(

@@ -52,6 +52,9 @@ pub struct Metrics {
     search_pruned_keogh: AtomicU64,
     search_dp_abandoned: AtomicU64,
     search_dp_full: AtomicU64,
+    /// survivor batches flushed through the DP kernel (lanes executed
+    /// per batch = dp_abandoned + dp_full contributions of that flush)
+    search_survivor_batches: AtomicU64,
     search_latency: Mutex<LatencyHistogram>,
     // ------------------------- sharded-executor counters
     searches_sharded: AtomicU64,
@@ -84,6 +87,7 @@ impl Metrics {
             search_pruned_keogh: AtomicU64::new(0),
             search_dp_abandoned: AtomicU64::new(0),
             search_dp_full: AtomicU64::new(0),
+            search_survivor_batches: AtomicU64::new(0),
             search_latency: Mutex::new(LatencyHistogram::new()),
             searches_sharded: AtomicU64::new(0),
             search_shards: AtomicU64::new(0),
@@ -105,6 +109,8 @@ impl Metrics {
             .fetch_add(stats.dp_abandoned, Ordering::Relaxed);
         self.search_dp_full
             .fetch_add(stats.dp_full, Ordering::Relaxed);
+        self.search_survivor_batches
+            .fetch_add(stats.survivor_batches, Ordering::Relaxed);
         self.search_latency.lock().unwrap().record_ms(latency_ms);
     }
 
@@ -172,6 +178,11 @@ impl Metrics {
         let floats = self.floats.load(Ordering::Relaxed);
         let busy_ms = self.busy_us.load(Ordering::Relaxed) as f64 / 1e3;
         let wall_ms = self.started.elapsed().as_secs_f64() * 1e3;
+        // load each survivor counter once so the derived occupancy is
+        // consistent with the sibling fields in the same snapshot
+        let dp_abandoned = self.search_dp_abandoned.load(Ordering::Relaxed);
+        let dp_full = self.search_dp_full.load(Ordering::Relaxed);
+        let survivor_batches = self.search_survivor_batches.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -195,8 +206,14 @@ impl Metrics {
             search_windows: self.search_windows.load(Ordering::Relaxed),
             search_pruned_kim: self.search_pruned_kim.load(Ordering::Relaxed),
             search_pruned_keogh: self.search_pruned_keogh.load(Ordering::Relaxed),
-            search_dp_abandoned: self.search_dp_abandoned.load(Ordering::Relaxed),
-            search_dp_full: self.search_dp_full.load(Ordering::Relaxed),
+            search_dp_abandoned: dp_abandoned,
+            search_dp_full: dp_full,
+            search_survivor_batches: survivor_batches,
+            search_lane_occupancy_mean: if survivor_batches == 0 {
+                0.0
+            } else {
+                (dp_abandoned + dp_full) as f64 / survivor_batches as f64
+            },
             search_latency_mean_ms: search_latency.mean_ms(),
             search_latency_p50_ms: search_latency.percentile_ms(50.0),
             search_latency_p99_ms: search_latency.percentile_ms(99.0),
@@ -260,6 +277,14 @@ pub struct MetricsSnapshot {
     pub search_dp_abandoned: u64,
     /// Windows that ran a full exact DP.
     pub search_dp_full: u64,
+    /// Survivor batches flushed through the DP kernel across all
+    /// searches (one per window on the scalar path; one per ≤L windows
+    /// on the lane-batched path).
+    pub search_survivor_batches: u64,
+    /// Mean windows per survivor batch (`(dp_abandoned + dp_full) /
+    /// survivor_batches`); 1.0 on the scalar path, approaches the lane
+    /// count as lane batches fill, 0.0 before any batch has run.
+    pub search_lane_occupancy_mean: f64,
     pub search_latency_mean_ms: f64,
     pub search_latency_p50_ms: f64,
     pub search_latency_p99_ms: f64,
@@ -323,6 +348,7 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 " searches={} windows={} pruned={:.1}% \
                  (kim={} keogh={} abandoned={} full_dp={}) \
+                 survivor_batches={} lane_occupancy={:.2} \
                  search_latency(mean/p50/p99)={:.2}/{:.2}/{:.2} ms",
                 self.searches,
                 self.search_windows,
@@ -331,6 +357,8 @@ impl MetricsSnapshot {
                 self.search_pruned_keogh,
                 self.search_dp_abandoned,
                 self.search_dp_full,
+                self.search_survivor_batches,
+                self.search_lane_occupancy_mean,
                 self.search_latency_mean_ms,
                 self.search_latency_p50_ms,
                 self.search_latency_p99_ms,
@@ -400,6 +428,7 @@ mod tests {
                 pruned_keogh: 20,
                 dp_abandoned: 10,
                 dp_full: 10,
+                survivor_batches: 5,
             },
         );
         m.on_search(
@@ -410,6 +439,7 @@ mod tests {
                 pruned_keogh: 0,
                 dp_abandoned: 0,
                 dp_full: 20,
+                survivor_batches: 5,
             },
         );
         let s = m.snapshot();
@@ -420,12 +450,23 @@ mod tests {
         assert_eq!(s.search_dp_abandoned, 10);
         assert_eq!(s.search_dp_full, 30);
         assert_eq!(s.search_pruned_total(), 170);
+        assert_eq!(s.search_survivor_batches, 10);
+        // 40 survivor lanes over 10 batches
+        assert!((s.search_lane_occupancy_mean - 4.0).abs() < 1e-12);
         assert!((s.search_prune_fraction() - 0.85).abs() < 1e-12);
         assert!((s.search_latency_mean_ms - 3.0).abs() < 1e-9);
         assert!(s.render().contains("searches=2"));
+        assert!(s.render().contains("survivor_batches=10"));
         // no sharded searches yet: the sharded block stays hidden
         assert_eq!(s.searches_sharded, 0);
         assert!(!s.render().contains("sharded="));
+    }
+
+    #[test]
+    fn lane_occupancy_zero_before_any_batch() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.search_survivor_batches, 0);
+        assert_eq!(s.search_lane_occupancy_mean, 0.0);
     }
 
     #[test]
@@ -437,6 +478,7 @@ mod tests {
             pruned_keogh: 20,
             dp_abandoned: 10,
             dp_full: 10,
+            survivor_batches: 4,
         };
         m.on_search_sharded(2.0, &stats, 4, 12, 1.5);
         m.on_search_sharded(4.0, &stats, 8, 4, 2.5);

@@ -3,6 +3,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::dtw::kernel::{KernelKind, KernelSpec};
 use crate::search::{CascadeStats, Hit};
 
 pub type RequestId = u64;
@@ -68,11 +69,27 @@ pub struct SearchOptions {
     /// the host's available parallelism).  Ignored when `shards`
     /// resolves to 1.
     pub parallelism: usize,
+    /// DP kernel for stage-3 survivors: scalar (default), blocked scan,
+    /// or the lane-batched lockstep executor.  Every choice returns
+    /// bit-identical hits (the kernel layer's invariant).
+    pub kernel: KernelKind,
+    /// Lane count for the lane kernel (0 = auto).  Ignored unless
+    /// `kernel` is [`KernelKind::Lanes`].
+    pub lanes: usize,
 }
 
 impl Default for SearchOptions {
     fn default() -> Self {
-        Self { k: 5, window: 0, stride: 1, exclusion: 0, shards: 1, parallelism: 1 }
+        Self {
+            k: 5,
+            window: 0,
+            stride: 1,
+            exclusion: 0,
+            shards: 1,
+            parallelism: 1,
+            kernel: KernelKind::Scalar,
+            lanes: 0,
+        }
     }
 }
 
@@ -107,6 +124,13 @@ impl SearchOptions {
         let shards = if self.shards == 0 { parallelism } else { self.shards };
         (shards, parallelism)
     }
+
+    /// Resolve the kernel fields into a [`KernelSpec`] (auto params stay
+    /// 0; `KernelSpec::instantiate` substitutes the defaults).  The
+    /// single definition shared by the service and the CLI.
+    pub fn resolve_kernel(&self) -> KernelSpec {
+        KernelSpec { kind: self.kernel, width: 0, lanes: self.lanes }
+    }
 }
 
 /// The search answer: top-K sites plus the cascade's pruning telemetry.
@@ -139,6 +163,17 @@ mod tests {
         assert_eq!(o.exclusion, 0);
         assert_eq!(o.shards, 1, "default is the serial path");
         assert_eq!(o.parallelism, 1);
+        assert_eq!(o.kernel, KernelKind::Scalar, "default is the oracle kernel");
+        assert_eq!(o.lanes, 0);
+    }
+
+    #[test]
+    fn search_options_resolve_kernel() {
+        assert_eq!(SearchOptions::default().resolve_kernel(), KernelSpec::SCALAR);
+        let o = SearchOptions { kernel: KernelKind::Lanes, lanes: 16, ..Default::default() };
+        let spec = o.resolve_kernel();
+        assert_eq!(spec.kind, KernelKind::Lanes);
+        assert_eq!(spec.lanes, 16);
     }
 
     #[test]

@@ -259,9 +259,11 @@ impl SdtwService {
     /// Top-K subsequence search over the service's reference: resolves
     /// the auto options, z-normalizes the query (same flow as align),
     /// runs the lower-bound cascade — serial, or sharded across a worker
-    /// pool when `options.shards` resolves above 1 — and records search
-    /// metrics.  Sharded and serial paths return bit-identical hits (the
-    /// `search::sharded` module documents why).
+    /// pool when `options.shards` resolves above 1, with DP survivors
+    /// executed by the kernel `options.kernel` selects — and records
+    /// search metrics.  Every path/kernel combination returns
+    /// bit-identical hits (the `search::sharded` and `dtw::kernel`
+    /// modules document why).
     ///
     /// Runs on the calling thread (plus the executor's workers) — the
     /// cascade is a CPU index scan whose pruning leaves little batchable
@@ -295,12 +297,15 @@ impl SdtwService {
             "window {window} exceeds reference length {reflen}"
         );
         let (shards, parallelism) = options.resolve_sharding();
+        // the stage-3 DP kernel rides inside the cascade options; any
+        // choice returns bit-identical hits (kernel-layer invariant)
+        let cascade_opts = CascadeOpts::default().with_kernel(options.resolve_kernel());
 
         let submitted = Instant::now();
         let engine = self.search_engine(window, stride)?;
         let qn = normalize::znormed(&query);
         if shards <= 1 {
-            let outcome = engine.search(&qn, options.k, exclusion)?;
+            let outcome = engine.search_opts(&qn, options.k, exclusion, cascade_opts, 1)?;
             let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
             self.metrics.on_search(latency_ms, &outcome.stats);
             Ok(SearchResponse {
@@ -316,7 +321,7 @@ impl SdtwService {
                 &qn,
                 options.k,
                 exclusion,
-                CascadeOpts::default(),
+                cascade_opts,
                 shards,
                 parallelism,
             )?;

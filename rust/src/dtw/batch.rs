@@ -1,12 +1,18 @@
 //! Multi-threaded CPU batch baseline — the comparator for the paper's
 //! GPU-vs-CPU framing ("producing these expected outputs on the CPU is a
-//! time-consuming process", §4).  One query per task, work-stealing via a
-//! shared atomic cursor over the batch; scales to all cores with zero
-//! allocation in the per-cell loop.
+//! time-consuming process", §4).  Since the kernel-dispatch refactor
+//! this is a thin driver over [`super::kernel`]: the batch is split into
+//! contiguous per-thread chunks with `chunks_mut` (no raw-pointer
+//! sharing — each scoped thread owns its output slice outright), and
+//! each thread pushes its queries through one [`DpKernel`] instance.
+//!
+//! The default kernel is [`KernelSpec::SCALAR`] (one DP per query, the
+//! historical behavior, bit-identical output); [`sdtw_batch_kernel`]
+//! exposes the kernel choice so benches and callers can run the same
+//! batch through the scan or lane-batched executors.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-use super::{subsequence::sdtw, Dist, Match};
+use super::kernel::{DpKernel, KernelSpec, Lane};
+use super::{Dist, Match};
 
 /// Align every query in `queries` (each of length `qlen`, stored
 /// contiguously — the paper's "no gaps, delimiters or extra metadata"
@@ -18,32 +24,53 @@ pub fn sdtw_batch_cpu(
     dist: Dist,
     threads: usize,
 ) -> Vec<Match> {
+    sdtw_batch_kernel(queries, qlen, reference, dist, threads, KernelSpec::SCALAR)
+}
+
+/// [`sdtw_batch_cpu`] with an explicit DP-kernel selection.  Results are
+/// bit-identical for every kernel (the kernel layer's invariant); only
+/// the execution shape changes.
+///
+/// Memory note: here every lane's window *is* the whole reference, and
+/// the lane kernel packs windows structure-of-arrays — its scratch is
+/// O(reflen × L) per thread (vs O(reflen) for scalar/scan).  That is
+/// the right trade for the cascade's short survivor windows; for very
+/// long references prefer the scalar or scan kernel, or keep `L` small.
+pub fn sdtw_batch_kernel(
+    queries: &[f32],
+    qlen: usize,
+    reference: &[f32],
+    dist: Dist,
+    threads: usize,
+    spec: KernelSpec,
+) -> Vec<Match> {
     assert!(qlen > 0, "qlen must be positive");
     assert_eq!(queries.len() % qlen, 0, "batch not a multiple of qlen");
     let b = queries.len() / qlen;
-    let threads = threads.max(1).min(b.max(1));
 
     let mut out = vec![Match { cost: f32::NAN, end: 0 }; b];
     if b == 0 {
         return out;
     }
-    let cursor = AtomicUsize::new(0);
-    let out_ptr = SendPtr(out.as_mut_ptr());
+    let threads = threads.max(1).min(b);
+    let chunk = b.div_ceil(threads);
 
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let cursor = &cursor;
-            let out_ptr = &out_ptr;
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= b {
-                    break;
+        for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || {
+                let mut kernel: Box<dyn DpKernel> = spec.instantiate();
+                let first = ci * chunk;
+                let lanes: Vec<Lane<'_>> = (0..out_chunk.len())
+                    .map(|i| Lane {
+                        query: &queries[(first + i) * qlen..(first + i + 1) * qlen],
+                        window: reference,
+                    })
+                    .collect();
+                let mut results = Vec::with_capacity(lanes.len());
+                kernel.run(&lanes, f32::INFINITY, dist, &mut results);
+                for (o, r) in out_chunk.iter_mut().zip(results) {
+                    *o = r.expect("τ=∞ never abandons");
                 }
-                let q = &queries[i * qlen..(i + 1) * qlen];
-                let m = sdtw(q, reference, dist);
-                // SAFETY: each index i is claimed by exactly one thread
-                // (fetch_add), and `out` outlives the scope.
-                unsafe { *out_ptr.0.add(i) = m };
             });
         }
     });
@@ -55,14 +82,9 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
-struct SendPtr<T>(*mut T);
-// SAFETY: raw pointer sharing is safe here because disjoint indices are
-// written by construction (see above).
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
-
 #[cfg(test)]
 mod tests {
+    use super::super::subsequence::sdtw;
     use super::*;
     use crate::util::rng::Xoshiro256;
 
@@ -118,6 +140,31 @@ mod tests {
         for (i, m) in par.iter().enumerate() {
             let want = sdtw(&qs[i * 6..(i + 1) * 6], &r, Dist::Abs);
             assert_eq!(*m, want);
+        }
+    }
+
+    #[test]
+    fn every_kernel_matches_the_oracle_batch() {
+        let (qs, r) = mk(7, 10, 48, 24);
+        let want = sdtw_batch_cpu(&qs, 10, &r, Dist::Sq, 1);
+        for spec in [
+            KernelSpec::SCALAR,
+            KernelSpec::scan(4),
+            KernelSpec::lanes(1),
+            KernelSpec::lanes(4), // 7 % 4 != 0: ragged tail chunk
+        ] {
+            for threads in [1usize, 3] {
+                let got = sdtw_batch_kernel(&qs, 10, &r, Dist::Sq, threads, spec);
+                assert_eq!(got.len(), want.len());
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.cost.to_bits(),
+                        b.cost.to_bits(),
+                        "{spec:?} t={threads} query {i}"
+                    );
+                    assert_eq!(a.end, b.end, "{spec:?} t={threads} query {i}");
+                }
+            }
         }
     }
 }

@@ -1,0 +1,788 @@
+//! The unified DP-kernel dispatch layer.
+//!
+//! Before this module the crate had five parallel sDTW entry points
+//! (`subsequence::sdtw`, `scan::sdtw_scan`, `batch::sdtw_batch_cpu`,
+//! `pruned`, and the cascade's `sdtw_window_abandoning*`), each
+//! re-implementing the recurrence with a different calling convention.
+//! [`DpKernel`] is the single surface they now share: a batch of
+//! **lanes** (query × window pairs) goes in, one [`Match`] per lane comes
+//! out, with per-lane τ early-abandonment.  Three implementations:
+//!
+//! * [`ScalarKernel`] — one lane at a time through the oracle recurrence
+//!   (wraps the cascade's buffer-reusing abandoning DP); the referee the
+//!   other two are proven against.
+//! * [`ScanKernel`]   — the paper's width-`W` thread-coarsened blocked
+//!   scan (§5), in its *exact* form: segment-local (min,+) scans with a
+//!   sequential carry fixup instead of the prefix-cost algebra, so the
+//!   result is bit-identical to the oracle (see the proof sketch below).
+//! * [`LaneKernel`]   — the survivor executor: up to `L` lanes laid out
+//!   structure-of-arrays and advanced one DP row at a time in lockstep,
+//!   the paper's segment-width coarsening turned into cache/SIMD-friendly
+//!   CPU lanes (DTWax-style).  The inner loop over lanes has no
+//!   loop-carried dependency, so the sequential min-chain along the
+//!   reference amortizes over `L` independent cells per step.
+//!
+//! # Bit-identity
+//!
+//! Every kernel produces, for every lane, **bit-identical** `cost`/`end`
+//! to `dtw::sdtw(query, window, dist)` whenever it returns `Some`, and
+//! abandons on exactly the same rows as
+//! [`crate::search::sdtw_window_abandoning`] for any τ.  Two facts carry
+//! the scan/lane proofs:
+//!
+//! 1. IEEE-754 addition and `f32::min` are weakly monotone, and all DP
+//!    values here are non-negative (no `-0.0`/NaN), so
+//!    `min(min(x,z)+c, y+c) == min(x,y,z)+c` *bitwise* — the horizontal
+//!    recurrence may be split off from the vertical/diagonal one.
+//! 2. A segment-local scan with carry-in `+inf` computes an
+//!    over-approximation `local[j] >= D[j]`; the sequential fixup
+//!    `D[j] = min(local[j], c[j] + D[j-1])` then restores the exact
+//!    (bit-identical) cell, by induction with fact 1.
+//!
+//! `tests/prop_kernel.rs` enforces both claims over random shapes,
+//! widths, lane counts, and thresholds.
+
+use super::subsequence::Match;
+use super::Dist;
+
+/// One unit of DP work: align `query` against `window` (free start and
+/// end inside the window — the sDTW convention every kernel shares).
+#[derive(Clone, Copy, Debug)]
+pub struct Lane<'a> {
+    pub query: &'a [f32],
+    pub window: &'a [f32],
+}
+
+/// A batched sDTW executor.
+///
+/// `run` aligns every lane and pushes one entry per lane into `out`
+/// (cleared first): `Some(Match)` bit-identical to `dtw::sdtw` on that
+/// lane, or `None` when the lane's DP was abandoned because a whole row
+/// minimum (or the final cost) exceeded `abandon_at` — the same
+/// conservative test as [`crate::search::sdtw_window_abandoning`].
+/// `abandon_at = f32::INFINITY` disables abandonment (every lane returns
+/// `Some`).
+///
+/// Kernels take `&mut self` so they can reuse internal scratch across
+/// calls; they hold no result state between calls.
+pub trait DpKernel {
+    /// Kernel name for logs/metrics (`"scalar"`, `"scan"`, `"lanes"`).
+    fn name(&self) -> &'static str;
+
+    /// Preferred survivor-batch size: callers accumulating DP work
+    /// should flush every `lanes()` items.  1 = execute immediately.
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Align every lane; `out` is cleared and refilled, one entry per
+    /// lane, in lane order.
+    fn run(
+        &mut self,
+        lanes: &[Lane<'_>],
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    );
+}
+
+/// Which kernel implementation to dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// One window at a time through the oracle recurrence.
+    #[default]
+    Scalar,
+    /// Width-blocked exact scan (the paper's thread-coarsening shape).
+    Scan,
+    /// Lane-batched lockstep survivor executor.
+    Lanes,
+}
+
+impl KernelKind {
+    pub fn from_name(s: &str) -> Option<KernelKind> {
+        match s {
+            "scalar" => Some(KernelKind::Scalar),
+            "scan" => Some(KernelKind::Scan),
+            "lanes" => Some(KernelKind::Lanes),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Scan => "scan",
+            KernelKind::Lanes => "lanes",
+        }
+    }
+}
+
+/// Default segment width for [`ScanKernel`] when unspecified (the
+/// paper's Fig. 3 sweet spot on the shapes we serve).
+pub const DEFAULT_SCAN_WIDTH: usize = 8;
+/// Default lane count for [`LaneKernel`] when unspecified.
+pub const DEFAULT_LANES: usize = 8;
+/// Upper bound [`KernelSpec::instantiate`] clamps lane counts to.
+/// `lanes`/`width` arrive from the wire protocol and the CLI; scratch
+/// buffers scale with them, so unbounded values would let one request
+/// allocate arbitrarily (or overflow `Vec::with_capacity`).  Results
+/// are bit-identical at any value, so clamping is behavior-preserving.
+pub const MAX_LANES: usize = 256;
+/// Upper bound [`KernelSpec::instantiate`] clamps scan widths to
+/// (`n_pad <= n + width - 1`, so scratch grows with the width).
+pub const MAX_SCAN_WIDTH: usize = 4096;
+
+/// A serializable kernel selection: kind plus its width/lane parameters
+/// (0 = auto).  The `kind` and `lanes` fields travel through
+/// `SearchOptions` and the wire protocol; `width` is a CLI/internal
+/// scan refinement (protocol scan requests use the default width).
+/// [`KernelSpec::instantiate`] turns the spec into a concrete executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelSpec {
+    pub kind: KernelKind,
+    /// Segment width for the scan kernel (0 = [`DEFAULT_SCAN_WIDTH`]).
+    pub width: usize,
+    /// Lane count for the lane kernel (0 = [`DEFAULT_LANES`]).
+    pub lanes: usize,
+}
+
+impl KernelSpec {
+    /// The oracle path: scalar, no batching — the crate-wide default.
+    pub const SCALAR: KernelSpec =
+        KernelSpec { kind: KernelKind::Scalar, width: 0, lanes: 0 };
+
+    pub fn scan(width: usize) -> KernelSpec {
+        KernelSpec { kind: KernelKind::Scan, width, lanes: 0 }
+    }
+
+    pub fn lanes(lanes: usize) -> KernelSpec {
+        KernelSpec { kind: KernelKind::Lanes, width: 0, lanes }
+    }
+
+    /// Build the concrete executor, resolving the auto (zero) params
+    /// and clamping wire-controlled sizes to [`MAX_SCAN_WIDTH`] /
+    /// [`MAX_LANES`] (results are identical at any value; only scratch
+    /// memory scales with them).
+    pub fn instantiate(&self) -> Box<dyn DpKernel> {
+        match self.kind {
+            KernelKind::Scalar => Box::new(ScalarKernel::new()),
+            KernelKind::Scan => {
+                let width = if self.width == 0 { DEFAULT_SCAN_WIDTH } else { self.width };
+                Box::new(ScanKernel::new(width.min(MAX_SCAN_WIDTH)))
+            }
+            KernelKind::Lanes => {
+                let lanes = if self.lanes == 0 { DEFAULT_LANES } else { self.lanes };
+                Box::new(LaneKernel::new(lanes.min(MAX_LANES)))
+            }
+        }
+    }
+}
+
+impl Default for KernelSpec {
+    fn default() -> Self {
+        KernelSpec::SCALAR
+    }
+}
+
+// ------------------------------------------------------------- scalar
+
+/// Windowed sDTW with row-level early abandoning, reusing the caller's
+/// scratch rows — the oracle recurrence, cell for cell.  Returns `None`
+/// as soon as a whole DP row exceeds `abandon_at` (row minima are
+/// non-decreasing, so the final cost would too), or when the final cost
+/// does.  When it returns `Some`, both fields are bit-identical to
+/// `sdtw(query, window, dist)`.
+///
+/// This is the substrate [`ScalarKernel`] runs and the single source of
+/// the abandonment semantics every other kernel must reproduce
+/// (`crate::search::sdtw_window_abandoning*` delegates here).
+pub fn sdtw_abandoning_into(
+    query: &[f32],
+    window: &[f32],
+    abandon_at: f32,
+    dist: Dist,
+    prev: &mut Vec<f32>,
+    cur: &mut Vec<f32>,
+) -> Option<Match> {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!window.is_empty(), "empty window");
+    let n = window.len();
+    prev.clear();
+    prev.resize(n, 0.0);
+    cur.clear();
+    cur.resize(n, 0.0);
+
+    // row 0: free start within the window
+    let q0 = query[0];
+    let mut row_min = f32::INFINITY;
+    for (j, p) in prev.iter_mut().enumerate() {
+        *p = dist.eval(q0, window[j]);
+        row_min = row_min.min(*p);
+    }
+    if row_min > abandon_at {
+        return None;
+    }
+    for &qi in &query[1..] {
+        cur[0] = prev[0] + dist.eval(qi, window[0]);
+        let mut row_min = cur[0];
+        for j in 1..n {
+            let best = prev[j].min(cur[j - 1]).min(prev[j - 1]);
+            cur[j] = best + dist.eval(qi, window[j]);
+            row_min = row_min.min(cur[j]);
+        }
+        if row_min > abandon_at {
+            return None;
+        }
+        std::mem::swap(prev, cur);
+    }
+    let m = super::subsequence::best_of_row(prev);
+    if m.cost > abandon_at {
+        None
+    } else {
+        Some(m)
+    }
+}
+
+/// One lane at a time through the oracle recurrence (the cascade's
+/// buffer-reusing abandoning DP).  Scratch rows persist across calls.
+#[derive(Debug, Default)]
+pub struct ScalarKernel {
+    prev: Vec<f32>,
+    cur: Vec<f32>,
+}
+
+impl ScalarKernel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl DpKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn run(
+        &mut self,
+        lanes: &[Lane<'_>],
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        out.clear();
+        for lane in lanes {
+            out.push(sdtw_abandoning_into(
+                lane.query,
+                lane.window,
+                abandon_at,
+                dist,
+                &mut self.prev,
+                &mut self.cur,
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------- scan
+
+/// Width-`W` blocked scan, exact form: pass 1 scans each segment locally
+/// with carry-in `+inf` (independent per segment — the parallel /
+/// vectorizable part, the paper's per-thread coarsened strip); pass 2
+/// walks the row once applying `D[j] = min(local[j], c[j] + D[j-1])`,
+/// which restores every cell bit-identically (module-level proof).
+///
+/// Unlike [`super::scan::sdtw_scan`] (the Rust mirror of the Pallas
+/// kernel's prefix-cost algebra, exact only to rounding), this variant
+/// trades the O(1)-depth carry propagation for bit-identity — the right
+/// trade on the serving path, where the oracle is the contract.
+#[derive(Debug)]
+pub struct ScanKernel {
+    width: usize,
+    c: Vec<f32>,
+    local: Vec<f32>,
+    row: Vec<f32>,
+    a: Vec<f32>,
+}
+
+impl ScanKernel {
+    pub fn new(width: usize) -> Self {
+        assert!(width >= 1, "segment width must be >= 1");
+        Self { width, c: Vec::new(), local: Vec::new(), row: Vec::new(), a: Vec::new() }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    fn run_one(&mut self, query: &[f32], window: &[f32], abandon_at: f32, dist: Dist)
+        -> Option<Match> {
+        assert!(!query.is_empty(), "empty query");
+        assert!(!window.is_empty(), "empty window");
+        let n = window.len();
+        let w = self.width;
+        let n_pad = n.div_ceil(w) * w;
+        let segs = n_pad / w;
+
+        self.row.clear();
+        self.row.resize(n_pad, f32::INFINITY);
+        self.a.clear();
+        self.a.resize(n_pad, f32::INFINITY);
+        self.local.clear();
+        self.local.resize(n_pad, f32::INFINITY);
+        self.c.clear();
+        self.c.resize(n_pad, f32::INFINITY);
+
+        // row 0: free start (the resize left the padded columns +inf)
+        let q0 = query[0];
+        let mut row_min = f32::INFINITY;
+        for (r, &wv) in self.row.iter_mut().zip(window) {
+            let v = dist.eval(q0, wv);
+            *r = v;
+            row_min = row_min.min(v);
+        }
+        if row_min > abandon_at {
+            return None;
+        }
+
+        for &qi in &query[1..] {
+            // local costs; c[n..n_pad] stays +inf, keeping padded
+            // columns inert
+            for (cj, &wv) in self.c.iter_mut().zip(window) {
+                *cj = dist.eval(qi, wv);
+            }
+            // vertical/diagonal candidates
+            self.a[0] = self.row[0] + self.c[0]; // diag at j=0 is +inf
+            for j in 1..n_pad {
+                self.a[j] = self.row[j].min(self.row[j - 1]) + self.c[j];
+            }
+            // pass 1: independent per-segment scans, carry-in = +inf
+            for s in 0..segs {
+                let base = s * w;
+                let mut d = f32::INFINITY;
+                for k in 0..w {
+                    let j = base + k;
+                    d = self.a[j].min(self.c[j] + d);
+                    self.local[j] = d;
+                }
+            }
+            // pass 2: exact sequential carry fixup (segment 0's carry is
+            // +inf, so its local values are already final)
+            let mut row_min = f32::INFINITY;
+            for j in 0..w.min(n_pad) {
+                self.row[j] = self.local[j];
+                row_min = row_min.min(self.row[j]);
+            }
+            for j in w..n_pad {
+                self.row[j] = self.local[j].min(self.c[j] + self.row[j - 1]);
+                row_min = row_min.min(self.row[j]);
+            }
+            if row_min > abandon_at {
+                return None;
+            }
+        }
+        let m = super::subsequence::best_of_row(&self.row[..n]);
+        if m.cost > abandon_at {
+            None
+        } else {
+            Some(m)
+        }
+    }
+}
+
+impl DpKernel for ScanKernel {
+    fn name(&self) -> &'static str {
+        "scan"
+    }
+
+    fn run(
+        &mut self,
+        lanes: &[Lane<'_>],
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        out.clear();
+        for lane in lanes {
+            let r = self.run_one(lane.query, lane.window, abandon_at, dist);
+            out.push(r);
+        }
+    }
+}
+
+// -------------------------------------------------------------- lanes
+
+/// The lane-batched survivor executor: up to `L` (query, window) lanes
+/// packed structure-of-arrays and advanced one DP row at a time in
+/// lockstep.  For a fixed cell position the `L` lanes are independent,
+/// so the inner loop is a contiguous, dependency-free sweep the compiler
+/// can vectorize — the paper's thread-coarsening win, with warp lanes
+/// replaced by SIMD/cache lanes.
+///
+/// Ragged batches are supported: windows shorter than the widest lane
+/// are padded with `+inf` local costs (inert, exactly like the scan
+/// kernel's padding), and a lane whose query is exhausted extracts its
+/// result on its final row and then rides along inertly — the lockstep
+/// trade the paper makes explicit.  Abandoned lanes likewise stop
+/// contributing results immediately but stop costing work only when the
+/// whole batch dies.
+#[derive(Debug)]
+pub struct LaneKernel {
+    capacity: usize,
+    qbuf: Vec<f32>,
+    wbuf: Vec<f32>,
+    prev: Vec<f32>,
+    cur: Vec<f32>,
+}
+
+impl LaneKernel {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "lane count must be >= 1");
+        Self {
+            capacity,
+            qbuf: Vec::new(),
+            wbuf: Vec::new(),
+            prev: Vec::new(),
+            cur: Vec::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Execute one chunk of at most `capacity` lanes in lockstep,
+    /// appending one result per lane to `out`.
+    fn run_chunk(
+        &mut self,
+        lanes: &[Lane<'_>],
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        let l = lanes.len();
+        debug_assert!(l >= 1 && l <= self.capacity);
+        let mut m_max = 0usize;
+        let mut n_max = 0usize;
+        for lane in lanes {
+            assert!(!lane.query.is_empty(), "empty query");
+            assert!(!lane.window.is_empty(), "empty window");
+            m_max = m_max.max(lane.query.len());
+            n_max = n_max.max(lane.window.len());
+        }
+
+        // SoA packing: qbuf[i*l + k] = lanes[k].query[i] (0.0 pad — the
+        // lane is finished by then, its rows are never read again);
+        // wbuf[j*l + k] = lanes[k].window[j] (+inf pad: padded columns
+        // compute +inf cells that can never win a min).
+        self.qbuf.clear();
+        self.qbuf.resize(m_max * l, 0.0);
+        self.wbuf.clear();
+        self.wbuf.resize(n_max * l, f32::INFINITY);
+        for (k, lane) in lanes.iter().enumerate() {
+            for (i, &q) in lane.query.iter().enumerate() {
+                self.qbuf[i * l + k] = q;
+            }
+            for (j, &x) in lane.window.iter().enumerate() {
+                self.wbuf[j * l + k] = x;
+            }
+        }
+        self.prev.clear();
+        self.prev.resize(n_max * l, f32::INFINITY);
+        self.cur.clear();
+        self.cur.resize(n_max * l, f32::INFINITY);
+
+        let base = out.len();
+        out.resize(base + l, None);
+        // a lane is live until it abandons or extracts its result
+        let mut live = vec![true; l];
+        let mut n_live = l;
+        let mut row_min = vec![f32::INFINITY; l];
+
+        // row 0: free start, all lanes
+        for j in 0..n_max {
+            let ws = &self.wbuf[j * l..(j + 1) * l];
+            let row = &mut self.prev[j * l..(j + 1) * l];
+            for k in 0..l {
+                let v = dist.eval(self.qbuf[k], ws[k]);
+                row[k] = v;
+                row_min[k] = row_min[k].min(v);
+            }
+        }
+        for k in 0..l {
+            if row_min[k] > abandon_at {
+                live[k] = false; // out[base+k] stays None
+                n_live -= 1;
+            } else if lanes[k].query.len() == 1 {
+                out[base + k] =
+                    extract_lane(&self.prev, l, k, lanes[k].window.len(), abandon_at);
+                live[k] = false;
+                n_live -= 1;
+            }
+        }
+
+        for i in 1..m_max {
+            if n_live == 0 {
+                break;
+            }
+            let qs = &self.qbuf[i * l..(i + 1) * l];
+            // j = 0 column: only vertical ancestry
+            for k in 0..l {
+                let v = self.prev[k] + dist.eval(qs[k], self.wbuf[k]);
+                self.cur[k] = v;
+                row_min[k] = v;
+            }
+            // the lockstep sweep: for each reference position, all lanes
+            // advance one cell — no dependency across k, contiguous loads
+            for j in 1..n_max {
+                let at = j * l;
+                for k in 0..l {
+                    let up = self.prev[at + k];
+                    let left = self.cur[at - l + k];
+                    let diag = self.prev[at - l + k];
+                    let v = up.min(left).min(diag) + dist.eval(qs[k], self.wbuf[at + k]);
+                    self.cur[at + k] = v;
+                    row_min[k] = row_min[k].min(v);
+                }
+            }
+            for k in 0..l {
+                if !live[k] {
+                    continue;
+                }
+                if row_min[k] > abandon_at {
+                    live[k] = false;
+                    n_live -= 1;
+                } else if i + 1 == lanes[k].query.len() {
+                    out[base + k] =
+                        extract_lane(&self.cur, l, k, lanes[k].window.len(), abandon_at);
+                    live[k] = false;
+                    n_live -= 1;
+                }
+            }
+            std::mem::swap(&mut self.prev, &mut self.cur);
+        }
+    }
+}
+
+/// `(min, argmin)` over lane `k`'s bottom row (first index wins ties,
+/// matching [`super::subsequence::best_of_row`]), then the final
+/// τ check, matching `sdtw_window_abandoning`.
+fn extract_lane(row: &[f32], l: usize, k: usize, n: usize, abandon_at: f32) -> Option<Match> {
+    let mut best = f32::INFINITY;
+    let mut pos = 0usize;
+    for j in 0..n {
+        let v = row[j * l + k];
+        if v < best {
+            best = v;
+            pos = j;
+        }
+    }
+    if best > abandon_at {
+        None
+    } else {
+        Some(Match { cost: best, end: pos })
+    }
+}
+
+impl DpKernel for LaneKernel {
+    fn name(&self) -> &'static str {
+        "lanes"
+    }
+
+    fn lanes(&self) -> usize {
+        self.capacity
+    }
+
+    fn run(
+        &mut self,
+        lanes: &[Lane<'_>],
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        out.clear();
+        for chunk in lanes.chunks(self.capacity) {
+            self.run_chunk(chunk, abandon_at, dist, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::sdtw;
+    use crate::search::sdtw_window_abandoning;
+    use crate::util::rng::Xoshiro256;
+
+    fn kernels() -> Vec<Box<dyn DpKernel>> {
+        vec![
+            Box::new(ScalarKernel::new()),
+            Box::new(ScanKernel::new(1)),
+            Box::new(ScanKernel::new(3)),
+            Box::new(ScanKernel::new(8)),
+            Box::new(ScanKernel::new(64)),
+            Box::new(LaneKernel::new(1)),
+            Box::new(LaneKernel::new(4)),
+            Box::new(LaneKernel::new(8)),
+        ]
+    }
+
+    #[test]
+    fn all_kernels_bit_identical_to_oracle() {
+        let mut g = Xoshiro256::new(51);
+        let lanes_data: Vec<(Vec<f32>, Vec<f32>)> = (0..13)
+            .map(|_| {
+                (
+                    g.normal_vec_f32(1 + g.below(12) as usize),
+                    g.normal_vec_f32(1 + g.below(30) as usize),
+                )
+            })
+            .collect();
+        let lanes: Vec<Lane> = lanes_data
+            .iter()
+            .map(|(q, w)| Lane { query: q, window: w })
+            .collect();
+        let want: Vec<crate::dtw::Match> = lanes_data
+            .iter()
+            .map(|(q, w)| sdtw(q, w, Dist::Sq))
+            .collect();
+        let mut out = Vec::new();
+        for mut k in kernels() {
+            k.run(&lanes, f32::INFINITY, Dist::Sq, &mut out);
+            assert_eq!(out.len(), lanes.len(), "{}", k.name());
+            for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                let got = got.expect("τ=∞ never abandons");
+                assert_eq!(
+                    got.cost.to_bits(),
+                    want.cost.to_bits(),
+                    "{} lane {i}: {} vs {}",
+                    k.name(),
+                    got.cost,
+                    want.cost
+                );
+                assert_eq!(got.end, want.end, "{} lane {i}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn abandonment_agrees_with_reference_dp() {
+        let mut g = Xoshiro256::new(52);
+        for trial in 0..40 {
+            let q = g.normal_vec_f32(2 + g.below(8) as usize);
+            let ws: Vec<Vec<f32>> = (0..9)
+                .map(|_| g.normal_vec_f32(2 + g.below(16) as usize))
+                .collect();
+            let lanes: Vec<Lane> = ws.iter().map(|w| Lane { query: &q, window: w }).collect();
+            let tau = g.uniform(0.0, 15.0) as f32;
+            let mut out = Vec::new();
+            for mut k in kernels() {
+                k.run(&lanes, tau, Dist::Sq, &mut out);
+                for (w, got) in ws.iter().zip(&out) {
+                    let want = sdtw_window_abandoning(&q, w, tau, Dist::Sq);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{}", k.name());
+                            assert_eq!(a.end, b.end, "{}", k.name());
+                        }
+                        other => panic!(
+                            "trial {trial} {}: abandon disagreement {other:?} (τ={tau})",
+                            k.name()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_kernel_handles_ragged_chunks() {
+        // 7 lanes through a 4-lane kernel: one full chunk + a tail of 3
+        let mut g = Xoshiro256::new(53);
+        let data: Vec<(Vec<f32>, Vec<f32>)> = (0..7)
+            .map(|i| (g.normal_vec_f32(3 + i), g.normal_vec_f32(5 + 2 * i)))
+            .collect();
+        let lanes: Vec<Lane> = data.iter().map(|(q, w)| Lane { query: q, window: w }).collect();
+        let mut k = LaneKernel::new(4);
+        let mut out = Vec::new();
+        k.run(&lanes, f32::INFINITY, Dist::Sq, &mut out);
+        assert_eq!(out.len(), 7);
+        for ((q, w), got) in data.iter().zip(&out) {
+            let want = sdtw(q, w, Dist::Sq);
+            let got = got.unwrap();
+            assert_eq!(got.cost.to_bits(), want.cost.to_bits());
+            assert_eq!(got.end, want.end);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let mut out = vec![Some(Match { cost: 1.0, end: 1 })];
+        ScalarKernel::new().run(&[], 1.0, Dist::Sq, &mut out);
+        assert!(out.is_empty());
+        LaneKernel::new(4).run(&[], 1.0, Dist::Sq, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn spec_parsing_and_instantiation() {
+        assert_eq!(KernelKind::from_name("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::from_name("scan"), Some(KernelKind::Scan));
+        assert_eq!(KernelKind::from_name("lanes"), Some(KernelKind::Lanes));
+        assert_eq!(KernelKind::from_name("warp"), None);
+        assert_eq!(KernelSpec::default(), KernelSpec::SCALAR);
+        assert_eq!(KernelSpec::SCALAR.instantiate().name(), "scalar");
+        assert_eq!(KernelSpec::scan(0).instantiate().name(), "scan");
+        let k = KernelSpec::lanes(0).instantiate();
+        assert_eq!(k.name(), "lanes");
+        assert_eq!(k.lanes(), DEFAULT_LANES);
+        assert_eq!(KernelSpec::lanes(16).instantiate().lanes(), 16);
+        assert_eq!(KernelSpec::SCALAR.instantiate().lanes(), 1);
+    }
+
+    #[test]
+    fn instantiate_clamps_wire_controlled_sizes() {
+        // lanes/width arrive from the protocol: absurd values must not
+        // drive scratch allocation (or Vec capacity overflow) — they
+        // clamp, and the clamped kernel still runs correctly
+        let k = KernelSpec::lanes(usize::MAX).instantiate();
+        assert_eq!(k.lanes(), MAX_LANES);
+        let mut scan = KernelSpec::scan(usize::MAX).instantiate();
+        let mut out = Vec::new();
+        scan.run(
+            &[Lane { query: &[1.0, 2.0], window: &[2.0, 1.0, 0.0] }],
+            f32::INFINITY,
+            Dist::Sq,
+            &mut out,
+        );
+        let want = sdtw(&[1.0, 2.0], &[2.0, 1.0, 0.0], Dist::Sq);
+        assert_eq!(out[0].unwrap().cost.to_bits(), want.cost.to_bits());
+    }
+
+    #[test]
+    fn abs_distance_supported() {
+        let mut g = Xoshiro256::new(54);
+        let q = g.normal_vec_f32(6);
+        let w = g.normal_vec_f32(19);
+        let want = sdtw(&q, &w, Dist::Abs);
+        let mut out = Vec::new();
+        for mut k in kernels() {
+            k.run(&[Lane { query: &q, window: &w }], f32::INFINITY, Dist::Abs, &mut out);
+            let got = out[0].unwrap();
+            assert_eq!(got.cost.to_bits(), want.cost.to_bits(), "{}", k.name());
+            assert_eq!(got.end, want.end, "{}", k.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lane count")]
+    fn zero_lanes_rejected() {
+        LaneKernel::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "segment width")]
+    fn zero_width_rejected() {
+        ScanKernel::new(0);
+    }
+}

@@ -15,6 +15,11 @@
 //!                      validated independent of JAX
 //! * [`batch`]        — multi-threaded CPU batch baseline (the comparator
 //!                      for the GPU-vs-CPU framing)
+//! * [`kernel`]       — the unified DP-kernel dispatch layer: one
+//!                      [`kernel::DpKernel`] surface (scalar / exact
+//!                      blocked scan / lane-batched lockstep) that the
+//!                      batch driver and the search cascade execute
+//!                      through
 //!
 //! All functions share [`Dist`] and the conventions of
 //! `python/compile/kernels/ref.py` (bit-for-bit the same recurrence).
@@ -22,12 +27,14 @@
 pub mod banded;
 pub mod batch;
 pub mod full;
+pub mod kernel;
 pub mod pruned;
 pub mod scan;
 pub mod subsequence;
 pub mod traceback;
 
 pub use batch::sdtw_batch_cpu;
+pub use kernel::{DpKernel, KernelKind, KernelSpec, Lane, LaneKernel, ScalarKernel, ScanKernel};
 pub use scan::sdtw_scan;
 pub use subsequence::{sdtw, sdtw_last_row, Match};
 pub use traceback::{sdtw_path, PathStep};

@@ -241,6 +241,9 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         .opt_default("exclusion", "0", "min distance between reported sites (0 = window/2)")
         .opt_default("shards", "1", "index shards with a shared threshold (0 = one per thread)")
         .opt_default("parallel", "0", "worker threads for sharded search (0 = all cores)")
+        .opt_default("kernel", "scalar", "survivor DP kernel: scalar|scan|lanes")
+        .opt_default("lanes", "0", "lane count for --kernel lanes (0 = auto)")
+        .opt_default("width", "0", "segment width for --kernel scan (0 = auto)")
         .flag("no-cascade", "disable all pruning stages (brute force)")
         .flag("per-shard", "print one stats line per shard")
         .flag("verify", "cross-check hits against brute-force dtw::subsequence top-K");
@@ -274,6 +277,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     }
 
     // one source of truth for "0 = auto" (shared with the service/protocol)
+    let kernel_kind = sdtw_repro::dtw::KernelKind::from_name(a.get("kernel").unwrap())
+        .context("kernel must be scalar|scan|lanes")?;
     let search_options = SearchOptions {
         k,
         window: a.get_or("window", 0usize)?,
@@ -281,14 +286,22 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         exclusion: a.get_or("exclusion", 0usize)?,
         shards: a.get_or("shards", 1usize)?,
         parallelism: a.get_or("parallel", 0usize)?,
+        kernel: kernel_kind,
+        lanes: a.get_or("lanes", 0usize)?,
     };
     let (window, stride, exclusion) = search_options.resolve(qlen, reflen);
     let (shards, parallelism) = search_options.resolve_sharding();
+    // --width is a CLI-only scan refinement on top of the shared spec
+    let kernel_spec = sdtw_repro::dtw::KernelSpec {
+        width: a.get_or("width", 0usize)?,
+        ..search_options.resolve_kernel()
+    };
     let opts = if a.has("no-cascade") {
         sdtw_repro::search::CascadeOpts::BRUTE
     } else {
         sdtw_repro::search::CascadeOpts::default()
-    };
+    }
+    .with_kernel(kernel_spec);
 
     let rn = Arc::new(normalize::znormed(&reference));
     let qn = normalize::znormed(&query);
@@ -306,11 +319,16 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
 
     println!(
         "reference {} ({reflen}) | query {qlen} | window {window} stride {stride} \
-         exclusion {exclusion} | {} candidates{}",
+         exclusion {exclusion} | {} candidates{}{}",
         a.get("family").unwrap(),
         engine.index().candidates(),
         if shards > 1 {
             format!(" | {shards} shards × {parallelism} threads")
+        } else {
+            String::new()
+        },
+        if kernel_kind != sdtw_repro::dtw::KernelKind::Scalar {
+            format!(" | kernel {}", kernel_kind.name())
         } else {
             String::new()
         }
@@ -335,12 +353,16 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     let s = out.stats;
     println!(
         "\nindex build {build_ms:.1} ms | search {search_ms:.2} ms | \
-         pruned {:.1}% (kim={} keogh={} abandoned={} full_dp={})",
+         pruned {:.1}% (kim={} keogh={} abandoned={} full_dp={}) | \
+         {} survivors in {} kernel batches (occupancy {:.2})",
         s.prune_fraction() * 100.0,
         s.pruned_kim,
         s.pruned_keogh,
         s.dp_abandoned,
-        s.dp_full
+        s.dp_full,
+        s.survivors(),
+        s.survivor_batches,
+        s.mean_lane_occupancy()
     );
     if let Some(so) = &sharded {
         println!(

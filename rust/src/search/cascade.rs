@@ -8,13 +8,26 @@
 //!        │                              list is sorted, everything
 //!        ▼                              after it — single cutoff)
 //!   [stage 2: LB_Keogh, early-abandoned at τ] ──► pruned_keogh
-//!        │
+//!        │ survivor
 //!        ▼
-//!   [stage 3: windowed sDTW, rows abandoned at τ] ──► dp_abandoned
-//!        │ complete
+//!   [pending batch]  ── full (kernel.lanes()) ──► flush
+//!        │                                          │
+//!        ▼                                          ▼
+//!   [stage 3: DpKernel, rows abandoned at τ] ──► dp_abandoned
+//!        │ complete                              (survivor_batches++)
 //!        ▼
 //!     exact cost → bounded heap (τ) + hit list → greedy top-K
 //! ```
+//!
+//! Stage 3 runs through the unified DP-kernel layer
+//! ([`crate::dtw::kernel`]): survivors accumulate into a pending batch
+//! of [`DpKernel::lanes`] windows and are executed together at flush —
+//! one window at a time for the scalar/scan kernels (`lanes() == 1`,
+//! the historical cadence), or `L` windows in lockstep for the
+//! lane-batched executor.  Deferring a survivor's DP to its flush can
+//! only *delay* τ tightening, never tighten it past τ* — the admissible
+//! threshold argument below is batching-oblivious — so the returned
+//! top-K stays bit-identical for every kernel and lane count.
 //!
 //! τ is the [`BoundedCostHeap`] threshold: the `cap`-th smallest exact
 //! cost computed so far, with `cap` sized so that τ never drops below the
@@ -30,7 +43,7 @@
 
 use std::ops::Range;
 
-use crate::dtw::subsequence::best_of_row;
+use crate::dtw::kernel::{self, DpKernel, KernelSpec, Lane};
 use crate::dtw::{Dist, Match};
 
 use super::index::ReferenceIndex;
@@ -64,23 +77,37 @@ impl TauSink for BoundedCostHeap {
 }
 
 /// Which cascade stages are active (all on by default; the bench ablates
-/// them individually — all off = brute force over every window).
+/// them individually — all off = brute force over every window), plus
+/// the DP kernel that executes stage 3's survivors.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CascadeOpts {
     pub kim: bool,
     pub keogh: bool,
     pub abandon: bool,
+    /// Stage-3 executor: scalar (default), exact blocked scan, or the
+    /// lane-batched lockstep kernel.  Any choice is bit-identical.
+    pub kernel: KernelSpec,
 }
 
 impl Default for CascadeOpts {
     fn default() -> Self {
-        Self { kim: true, keogh: true, abandon: true }
+        Self { kim: true, keogh: true, abandon: true, kernel: KernelSpec::SCALAR }
     }
 }
 
 impl CascadeOpts {
     /// Every stage disabled: exact DP on every candidate window.
-    pub const BRUTE: CascadeOpts = CascadeOpts { kim: false, keogh: false, abandon: false };
+    pub const BRUTE: CascadeOpts = CascadeOpts {
+        kim: false,
+        keogh: false,
+        abandon: false,
+        kernel: KernelSpec::SCALAR,
+    };
+
+    /// This configuration with a different stage-3 kernel.
+    pub fn with_kernel(self, kernel: KernelSpec) -> CascadeOpts {
+        CascadeOpts { kernel, ..self }
+    }
 }
 
 /// Per-stage pruning counters for one search (or one shard; mergeable).
@@ -96,6 +123,9 @@ pub struct CascadeStats {
     pub dp_abandoned: u64,
     /// Windows that completed a full exact DP.
     pub dp_full: u64,
+    /// Survivor batches flushed through the DP kernel (each flush
+    /// executes between 1 and `kernel.lanes()` windows together).
+    pub survivor_batches: u64,
 }
 
 impl CascadeStats {
@@ -113,12 +143,30 @@ impl CascadeStats {
         }
     }
 
+    /// Windows that reached stage 3 (every one is exactly one of
+    /// `dp_abandoned` / `dp_full`, counted at its batch's flush).
+    pub fn survivors(&self) -> u64 {
+        self.dp_abandoned + self.dp_full
+    }
+
+    /// Mean windows per survivor batch (the lane-occupancy number:
+    /// equals the lane count when every batch fills, 1.0 on the scalar
+    /// path, 0.0 before any flush).
+    pub fn mean_lane_occupancy(&self) -> f64 {
+        if self.survivor_batches == 0 {
+            0.0
+        } else {
+            self.survivors() as f64 / self.survivor_batches as f64
+        }
+    }
+
     pub fn merge(&mut self, other: &CascadeStats) {
         self.candidates += other.candidates;
         self.pruned_kim += other.pruned_kim;
         self.pruned_keogh += other.pruned_keogh;
         self.dp_abandoned += other.dp_abandoned;
         self.dp_full += other.dp_full;
+        self.survivor_batches += other.survivor_batches;
     }
 }
 
@@ -141,8 +189,10 @@ pub fn sdtw_window_abandoning(
     sdtw_window_abandoning_into(query, window, abandon_at, dist, &mut prev, &mut cur)
 }
 
-/// Buffer-reusing form of [`sdtw_window_abandoning`] (the cascade calls
-/// this once per surviving candidate; `prev`/`cur` are scratch rows).
+/// Buffer-reusing form of [`sdtw_window_abandoning`] (`prev`/`cur` are
+/// scratch rows).  The recurrence itself lives in the kernel layer
+/// ([`kernel::sdtw_abandoning_into`]) — this is the historical cascade
+/// entry point, kept as a thin delegation.
 pub fn sdtw_window_abandoning_into(
     query: &[f32],
     window: &[f32],
@@ -151,43 +201,7 @@ pub fn sdtw_window_abandoning_into(
     prev: &mut Vec<f32>,
     cur: &mut Vec<f32>,
 ) -> Option<Match> {
-    assert!(!query.is_empty(), "empty query");
-    assert!(!window.is_empty(), "empty window");
-    let n = window.len();
-    prev.clear();
-    prev.resize(n, 0.0);
-    cur.clear();
-    cur.resize(n, 0.0);
-
-    // row 0: free start within the window
-    let q0 = query[0];
-    let mut row_min = f32::INFINITY;
-    for (j, p) in prev.iter_mut().enumerate() {
-        *p = dist.eval(q0, window[j]);
-        row_min = row_min.min(*p);
-    }
-    if row_min > abandon_at {
-        return None;
-    }
-    for &qi in &query[1..] {
-        cur[0] = prev[0] + dist.eval(qi, window[0]);
-        let mut row_min = cur[0];
-        for j in 1..n {
-            let best = prev[j].min(cur[j - 1]).min(prev[j - 1]);
-            cur[j] = best + dist.eval(qi, window[j]);
-            row_min = row_min.min(cur[j]);
-        }
-        if row_min > abandon_at {
-            return None;
-        }
-        std::mem::swap(prev, cur);
-    }
-    let m = best_of_row(prev);
-    if m.cost > abandon_at {
-        None
-    } else {
-        Some(m)
-    }
+    kernel::sdtw_abandoning_into(query, window, abandon_at, dist, prev, cur)
 }
 
 /// Run the cascade over candidates `range` of the index.  Returns every
@@ -252,8 +266,19 @@ pub fn search_range_with(
         order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
     }
 
-    let mut prev = Vec::new();
-    let mut cur = Vec::new();
+    // stage 3 executor: survivors accumulate into `pending` and are
+    // flushed through the kernel every `lane_cap` windows (1 for the
+    // scalar/scan kernels — the historical per-window cadence).  All
+    // flush buffers are hoisted and reused: the hot loop allocates
+    // nothing per candidate.
+    let mut kernel = opts.kernel.instantiate();
+    let lane_cap = kernel.lanes().max(1);
+    let mut flush = FlushBufs {
+        pending: Vec::with_capacity(lane_cap),
+        lanes: Vec::with_capacity(lane_cap),
+        results: Vec::with_capacity(lane_cap),
+    };
+
     for (i, &(kim, t)) in order.iter().enumerate() {
         let tau = tau_sink.tau();
         if opts.kim && kim > tau {
@@ -268,15 +293,76 @@ pub fn search_range_with(
                 continue;
             }
         }
-        let abandon_at = if opts.abandon { tau } else { f32::INFINITY };
-        match sdtw_window_abandoning_into(
-            query,
-            index.window_slice(t),
-            abandon_at,
-            dist,
-            &mut prev,
-            &mut cur,
-        ) {
+        flush.pending.push(t);
+        if flush.pending.len() >= lane_cap {
+            flush_survivors(
+                kernel.as_mut(),
+                index,
+                query,
+                dist,
+                opts.abandon,
+                &mut flush,
+                tau_sink,
+                &mut stats,
+                &mut hits,
+            );
+        }
+    }
+    // the tail batch (and any survivors pending when the LB_Kim cutoff
+    // fired) still runs — counters must partition the candidate space
+    flush_survivors(
+        kernel.as_mut(),
+        index,
+        query,
+        dist,
+        opts.abandon,
+        &mut flush,
+        tau_sink,
+        &mut stats,
+        &mut hits,
+    );
+    (hits, stats)
+}
+
+/// Reusable survivor-flush buffers (hoisted out of the candidate loop).
+struct FlushBufs<'a> {
+    /// Candidate ids admitted to stage 3, awaiting execution.
+    pending: Vec<usize>,
+    /// Lane views over the pending candidates (rebuilt per flush,
+    /// allocation reused).
+    lanes: Vec<Lane<'a>>,
+    /// Per-lane kernel results (refilled per flush).
+    results: Vec<Option<Match>>,
+}
+
+/// Execute the pending survivor batch through the DP kernel: read τ
+/// once (it can only have tightened since admission — still admissible),
+/// run all lanes, record exact costs, and account every lane as exactly
+/// one of `dp_abandoned` / `dp_full`.
+#[allow(clippy::too_many_arguments)]
+fn flush_survivors<'a>(
+    kernel: &mut dyn DpKernel,
+    index: &'a ReferenceIndex,
+    query: &'a [f32],
+    dist: Dist,
+    abandon: bool,
+    flush: &mut FlushBufs<'a>,
+    tau_sink: &mut impl TauSink,
+    stats: &mut CascadeStats,
+    hits: &mut Vec<Hit>,
+) {
+    if flush.pending.is_empty() {
+        return;
+    }
+    let abandon_at = if abandon { tau_sink.tau() } else { f32::INFINITY };
+    flush.lanes.clear();
+    flush
+        .lanes
+        .extend(flush.pending.iter().map(|&t| Lane { query, window: index.window_slice(t) }));
+    kernel.run(&flush.lanes, abandon_at, dist, &mut flush.results);
+    stats.survivor_batches += 1;
+    for (&t, r) in flush.pending.iter().zip(flush.results.iter()) {
+        match r {
             None => stats.dp_abandoned += 1,
             Some(m) => {
                 stats.dp_full += 1;
@@ -286,7 +372,7 @@ pub fn search_range_with(
             }
         }
     }
-    (hits, stats)
+    flush.pending.clear();
 }
 
 #[cfg(test)]
@@ -405,6 +491,77 @@ mod tests {
         );
         assert!(hits.is_empty());
         assert_eq!(stats.dp_full, 0);
+    }
+
+    #[test]
+    fn lane_batched_cascade_matches_scalar_topk() {
+        let mut g = Xoshiro256::new(37);
+        for trial in 0..20 {
+            let n = 100 + g.below(150) as usize;
+            let r = Arc::new(g.normal_vec_f32(n));
+            let m = 4 + g.below(8) as usize;
+            let window = (m + g.below(8) as usize).min(n);
+            let index = ReferenceIndex::build(r, window, 1).unwrap();
+            let q = g.normal_vec_f32(m);
+            let k = 1 + g.below(3) as usize;
+            let exclusion = 1 + g.below(window as u64) as usize;
+            let base = search_range(
+                &index,
+                &q,
+                Dist::Sq,
+                k,
+                exclusion,
+                CascadeOpts::default(),
+                0..index.candidates(),
+            );
+            let base_picks = select_topk(&base.0, k, exclusion);
+            let all = 0..index.candidates();
+            for spec in [
+                crate::dtw::KernelSpec::scan(5),
+                crate::dtw::KernelSpec::lanes(1),
+                crate::dtw::KernelSpec::lanes(3),
+                crate::dtw::KernelSpec::lanes(8),
+            ] {
+                let opts = CascadeOpts::default().with_kernel(spec);
+                let (hits, stats) =
+                    search_range(&index, &q, Dist::Sq, k, exclusion, opts, all.clone());
+                let picks = select_topk(&hits, k, exclusion);
+                assert_hits_identical(&picks, &base_picks);
+                assert_eq!(
+                    stats.pruned_total() + stats.dp_full,
+                    stats.candidates,
+                    "trial {trial} {spec:?}: counters must partition candidates"
+                );
+                assert_eq!(stats.survivors(), stats.dp_abandoned + stats.dp_full);
+            }
+        }
+    }
+
+    #[test]
+    fn survivor_batches_counted_per_flush() {
+        let mut g = Xoshiro256::new(38);
+        let r = Arc::new(g.normal_vec_f32(120));
+        let index = ReferenceIndex::build(r, 16, 1).unwrap();
+        let q = g.normal_vec_f32(10);
+        // brute + scalar: one flush per window
+        let (_, s1) = search_range(
+            &index,
+            &q,
+            Dist::Sq,
+            3,
+            8,
+            CascadeOpts::BRUTE,
+            0..index.candidates(),
+        );
+        assert_eq!(s1.survivor_batches, index.candidates() as u64);
+        assert!((s1.mean_lane_occupancy() - 1.0).abs() < 1e-12);
+        // brute + 8 lanes: ceil(candidates / 8) flushes, full occupancy
+        // except the ragged tail
+        let opts = CascadeOpts::BRUTE.with_kernel(crate::dtw::KernelSpec::lanes(8));
+        let (_, s8) = search_range(&index, &q, Dist::Sq, 3, 8, opts, 0..index.candidates());
+        assert_eq!(s8.survivor_batches, index.candidates().div_ceil(8) as u64);
+        assert!(s8.mean_lane_occupancy() > 1.0);
+        assert_eq!(s8.survivors(), s1.survivors());
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! * [`envelope`]     — streaming (Lemire) min/max envelopes
 //! * [`lower_bounds`] — LB_Kim / LB_Keogh with early abandoning
 //! * [`cascade`]      — the LB_Kim → LB_Keogh → early-abandon-DP pipeline
-//!                      with per-stage prune counters
+//!                      with per-stage prune counters; DP survivors are
+//!                      batched through the unified kernel layer
+//!                      ([`crate::dtw::kernel`]) — scalar, blocked-scan,
+//!                      or lane-batched lockstep, all bit-identical
 //! * [`topk`]         — bounded-heap thresholding + trivial-match-excluded
 //!                      greedy selection (with the losslessness proof)
 //! * [`index`]        — the prebuilt, shardable reference index

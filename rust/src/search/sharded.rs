@@ -415,6 +415,30 @@ mod tests {
     }
 
     #[test]
+    fn lane_kernel_plumbs_through_shards() {
+        // the kernel choice rides inside CascadeOpts: every worker
+        // instantiates its own lane-batched executor, results stay
+        // bit-identical to the serial scalar engine
+        let (engine, mut g) = setup(500, 20, 1, 77);
+        let q = g.normal_vec_f32(14);
+        let serial = engine.search(&q, 3, 10).unwrap();
+        for spec in [
+            crate::dtw::KernelSpec::scan(6),
+            crate::dtw::KernelSpec::lanes(4),
+            crate::dtw::KernelSpec::lanes(16),
+        ] {
+            let opts = CascadeOpts::default().with_kernel(spec);
+            let out = engine.search_sharded(&q, 3, 10, opts, 4, 2).unwrap();
+            assert_hits_identical(&out.hits, &serial.hits);
+            assert!(out.stats.survivor_batches >= 1, "{spec:?}");
+            assert_eq!(
+                out.stats.survivors(),
+                out.stats.dp_abandoned + out.stats.dp_full
+            );
+        }
+    }
+
+    #[test]
     fn brute_opts_still_exact_when_sharded() {
         let (engine, mut g) = setup(300, 16, 2, 76);
         let q = g.normal_vec_f32(12);

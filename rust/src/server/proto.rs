@@ -4,7 +4,8 @@
 //! Requests:
 //!   {"op":"align","query":[...],"pruned":b,"quantized":b,"half":b}
 //!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,
-//!    "exclusion":96,"shards":4,"parallelism":4}
+//!    "exclusion":96,"shards":4,"parallelism":4,
+//!    "kernel":"scalar|scan|lanes","lanes":8}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
 //!
@@ -19,6 +20,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::{
     AlignOptions, AlignResponse, MetricsSnapshot, SearchOptions, SearchResponse,
 };
+use crate::dtw::KernelKind;
 use crate::search::Hit;
 use crate::util::json::Json;
 
@@ -87,6 +89,13 @@ impl Request {
             "search" => {
                 let query = parse_query(&v, "search")?;
                 let d = SearchOptions::default();
+                let kernel = match v.get("kernel").map(|x| x.as_str()) {
+                    None => d.kernel,
+                    Some(Some(name)) => KernelKind::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!("kernel must be scalar|scan|lanes, got {name:?}")
+                    })?,
+                    Some(None) => bail!("kernel must be a string"),
+                };
                 Ok(Request::Search {
                     query,
                     options: SearchOptions {
@@ -96,6 +105,8 @@ impl Request {
                         exclusion: parse_usize(&v, "exclusion", d.exclusion)?,
                         shards: parse_usize(&v, "shards", d.shards)?,
                         parallelism: parse_usize(&v, "parallelism", d.parallelism)?,
+                        kernel,
+                        lanes: parse_usize(&v, "lanes", d.lanes)?,
                     },
                 })
             }
@@ -148,6 +159,12 @@ impl Request {
                 if options.parallelism != d.parallelism {
                     pairs.push(("parallelism", Json::Int(options.parallelism as i64)));
                 }
+                if options.kernel != d.kernel {
+                    pairs.push(("kernel", Json::str(options.kernel.name())));
+                }
+                if options.lanes != d.lanes {
+                    pairs.push(("lanes", Json::Int(options.lanes as i64)));
+                }
                 Json::obj(pairs).to_string()
             }
         }
@@ -184,6 +201,9 @@ pub struct SearchFields {
     pub shards: u64,
     /// Shared-threshold tightenings (0 on the serial path).
     pub tau_tightenings: u64,
+    /// Survivor batches flushed through the DP kernel (0 when talking
+    /// to a pre-kernel server that does not send the field).
+    pub survivor_batches: u64,
 }
 
 /// The metrics fields that cross the wire.
@@ -205,6 +225,10 @@ pub struct MetricsFields {
     pub searches_sharded: u64,
     /// Shared-threshold tightenings across all sharded searches.
     pub search_tightenings: u64,
+    /// Survivor batches flushed through the DP kernel, all searches.
+    pub survivor_batches: u64,
+    /// Mean windows per survivor batch (0.0 until a batch has run).
+    pub lane_occupancy: f64,
 }
 
 impl Response {
@@ -228,6 +252,7 @@ impl Response {
             dp_full: r.stats.dp_full,
             shards: r.shards as u64,
             tau_tightenings: r.tau_tightenings,
+            survivor_batches: r.stats.survivor_batches,
         }))
     }
 
@@ -247,6 +272,8 @@ impl Response {
             search_p50_ms: m.search_latency_p50_ms,
             searches_sharded: m.searches_sharded,
             search_tightenings: m.search_tau_tightenings,
+            survivor_batches: m.search_survivor_batches,
+            lane_occupancy: m.search_lane_occupancy_mean,
         }))
     }
 
@@ -287,6 +314,7 @@ impl Response {
                     ("dp_full", Json::Int(s.dp_full as i64)),
                     ("shards", Json::Int(s.shards as i64)),
                     ("tau_tightenings", Json::Int(s.tau_tightenings as i64)),
+                    ("survivor_batches", Json::Int(s.survivor_batches as i64)),
                 ])
                 .to_string()
             }
@@ -306,6 +334,8 @@ impl Response {
                 ("search_p50_ms", Json::Num(m.search_p50_ms)),
                 ("searches_sharded", Json::Int(m.searches_sharded as i64)),
                 ("search_tightenings", Json::Int(m.search_tightenings as i64)),
+                ("survivor_batches", Json::Int(m.survivor_batches as i64)),
+                ("lane_occupancy", Json::Num(m.lane_occupancy)),
             ])
             .to_string(),
             Response::Error(e) => Json::obj(vec![
@@ -350,6 +380,7 @@ impl Response {
                 dp_full: int("dp_full"),
                 shards: int("shards"),
                 tau_tightenings: int("tau_tightenings"),
+                survivor_batches: int("survivor_batches"),
             })));
         }
         if let Some(cost) = v.get("cost").and_then(Json::as_f64) {
@@ -389,6 +420,8 @@ impl Response {
                 search_p50_ms: num("search_p50_ms"),
                 searches_sharded: int("searches_sharded"),
                 search_tightenings: int("search_tightenings"),
+                survivor_batches: int("survivor_batches"),
+                lane_occupancy: num("lane_occupancy"),
             })));
         }
         // ok:true but unrecognized shape: a newer verb — preserve it
@@ -426,21 +459,48 @@ mod tests {
                 exclusion: 32,
                 shards: 4,
                 parallelism: 2,
+                kernel: KernelKind::Lanes,
+                lanes: 16,
             },
         };
         let enc = custom.encode();
         assert!(enc.contains("\"k\":9") && enc.contains("\"window\":64"));
         assert!(enc.contains("\"shards\":4") && enc.contains("\"parallelism\":2"));
+        assert!(enc.contains("\"kernel\":\"lanes\"") && enc.contains("\"lanes\":16"));
         assert_eq!(Request::parse(&enc).unwrap(), custom);
-        // sharding fields omitted on the wire parse as the serial default
+        // sharding/kernel fields omitted on the wire parse as the
+        // serial-scalar default
         let legacy = Request::parse(r#"{"op":"search","query":[1],"k":2}"#).unwrap();
         match legacy {
             Request::Search { options, .. } => {
                 assert_eq!(options.shards, 1);
                 assert_eq!(options.parallelism, 1);
+                assert_eq!(options.kernel, KernelKind::Scalar);
+                assert_eq!(options.lanes, 0);
             }
             other => panic!("unexpected parse: {other:?}"),
         }
+    }
+
+    #[test]
+    fn search_request_kernel_roundtrip_all_kinds() {
+        for (kind, lanes) in [
+            (KernelKind::Scalar, 0usize),
+            (KernelKind::Scan, 0),
+            (KernelKind::Lanes, 8),
+        ] {
+            let req = Request::Search {
+                query: vec![1.0],
+                options: SearchOptions { kernel: kind, lanes, ..Default::default() },
+            };
+            assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{kind:?}");
+        }
+        // scalar is the default: it stays off the wire
+        let scalar = Request::Search {
+            query: vec![1.0],
+            options: SearchOptions::default(),
+        };
+        assert!(!scalar.encode().contains("kernel"));
     }
 
     #[test]
@@ -448,6 +508,9 @@ mod tests {
         assert!(Request::parse(r#"{"op":"search"}"#).is_err());
         assert!(Request::parse(r#"{"op":"search","query":[1],"k":-2}"#).is_err());
         assert!(Request::parse(r#"{"op":"search","query":[1],"window":"x"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"kernel":"warp"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"kernel":7}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"lanes":-1}"#).is_err());
     }
 
     #[test]
@@ -488,6 +551,7 @@ mod tests {
             dp_full: 196,
             shards: 4,
             tau_tightenings: 17,
+            survivor_batches: 80,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
         // empty hit list still recognized as a search response
@@ -501,6 +565,7 @@ mod tests {
             dp_full: 0,
             shards: 1,
             tau_tightenings: 0,
+            survivor_batches: 0,
         }));
         assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
     }
@@ -522,6 +587,8 @@ mod tests {
             search_p50_ms: 3.5,
             searches_sharded: 2,
             search_tightenings: 31,
+            survivor_batches: 64,
+            lane_occupancy: 6.5,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
     }
@@ -563,6 +630,8 @@ mod tests {
                     exclusion: 4,
                     shards: 2,
                     parallelism: 2,
+                    kernel: KernelKind::Lanes,
+                    lanes: 4,
                 },
             }
             .encode(),
@@ -577,6 +646,7 @@ mod tests {
                 dp_full: 2,
                 shards: 2,
                 tau_tightenings: 1,
+                survivor_batches: 1,
             }))
             .encode(),
             Response::Pong.encode(),

@@ -1,0 +1,252 @@
+//! Property tests for the unified DP-kernel layer (`dtw::kernel`): every
+//! kernel — scalar, exact blocked scan at any width, lane-batched
+//! lockstep at any lane count — must be **bit-identical** to the
+//! `dtw::sdtw` oracle on every lane, and must make exactly the same
+//! τ-abandonment decisions as `search::sdtw_window_abandoning`.  This is
+//! the referee the whole refactor stands on: if these pass, re-pointing
+//! the batch driver and the search cascade through the kernel layer
+//! cannot have changed any result anywhere.
+
+use sdtw_repro::dtw::kernel::{DpKernel, KernelSpec, Lane};
+use sdtw_repro::dtw::{sdtw, Dist, Match};
+use sdtw_repro::search::sdtw_window_abandoning;
+use sdtw_repro::testutil::{check, GenCtx};
+
+/// The kernel zoo a property run exercises: the scalar oracle wrapper,
+/// scan widths spanning 1..=32 (plus wider-than-any-window), and lane
+/// counts from degenerate 1 to wider than most batches.
+fn specs(g: &mut GenCtx) -> Vec<KernelSpec> {
+    vec![
+        KernelSpec::SCALAR,
+        KernelSpec::scan(1),
+        KernelSpec::scan(g.usize_in(2, 32)),
+        KernelSpec::scan(64),
+        KernelSpec::lanes(1),
+        KernelSpec::lanes(g.usize_in(2, 16)),
+    ]
+}
+
+fn run_spec(
+    spec: KernelSpec,
+    lanes: &[Lane<'_>],
+    abandon_at: f32,
+    dist: Dist,
+) -> Vec<Option<Match>> {
+    let mut kernel = spec.instantiate();
+    let mut out = Vec::new();
+    kernel.run(lanes, abandon_at, dist, &mut out);
+    out
+}
+
+#[test]
+fn prop_every_kernel_bit_identical_to_oracle() {
+    check(501, 120, |g| {
+        // a ragged batch: random lane count, each lane its own shape
+        let n_lanes = g.usize_in(1, 13);
+        let data: Vec<(Vec<f32>, Vec<f32>)> = (0..n_lanes)
+            .map(|_| (g.vec_f32(1, 12), g.vec_f32(1, 40)))
+            .collect();
+        let lanes: Vec<Lane<'_>> = data
+            .iter()
+            .map(|(q, w)| Lane { query: q, window: w })
+            .collect();
+        let dist = if g.usize_in(0, 1) == 0 { Dist::Sq } else { Dist::Abs };
+        for spec in specs(g) {
+            let out = run_spec(spec, &lanes, f32::INFINITY, dist);
+            if out.len() != lanes.len() {
+                return Err(format!("{spec:?}: {} results for {} lanes", out.len(), lanes.len()));
+            }
+            for (i, ((q, w), got)) in data.iter().zip(&out).enumerate() {
+                let want = sdtw(q, w, dist);
+                let got = got.ok_or_else(|| format!("{spec:?} lane {i}: abandoned at τ=∞"))?;
+                if got.cost.to_bits() != want.cost.to_bits() {
+                    return Err(format!(
+                        "{spec:?} lane {i}: cost {} vs oracle {} (not bit-identical)",
+                        got.cost, want.cost
+                    ));
+                }
+                if got.end != want.end {
+                    return Err(format!(
+                        "{spec:?} lane {i}: end {} vs oracle {}",
+                        got.end, want.end
+                    ));
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_tau_abandonment_agrees_with_reference_dp() {
+    check(502, 100, |g| {
+        // one query against many windows — the cascade's survivor shape
+        let q = g.vec_f32(2, 10);
+        let n_lanes = g.usize_in(1, 11);
+        let windows: Vec<Vec<f32>> = (0..n_lanes).map(|_| g.vec_f32(2, 24)).collect();
+        let lanes: Vec<Lane<'_>> = windows
+            .iter()
+            .map(|w| Lane { query: &q, window: w })
+            .collect();
+        // τ spanning "abandons everything" to "abandons nothing"
+        let tau = g.f32_in(0.0, 25.0);
+        for spec in specs(g) {
+            let out = run_spec(spec, &lanes, tau, Dist::Sq);
+            for (i, (w, got)) in windows.iter().zip(&out).enumerate() {
+                let want = sdtw_window_abandoning(&q, w, tau, Dist::Sq);
+                match (got, want) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        if a.cost.to_bits() != b.cost.to_bits() || a.end != b.end {
+                            return Err(format!(
+                                "{spec:?} lane {i} τ={tau}: ({}, {}) vs ({}, {})",
+                                a.cost, a.end, b.cost, b.end
+                            ));
+                        }
+                    }
+                    (got, want) => {
+                        return Err(format!(
+                            "{spec:?} lane {i} τ={tau}: abandonment disagrees \
+                             (kernel {got:?}, reference {want:?})"
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_ragged_tail_batches_survive_lane_chunking() {
+    // survivors % lanes != 0 by construction: lane counts that never
+    // divide the batch, so every run has a partial tail chunk
+    check(503, 80, |g| {
+        let lane_cap = g.usize_in(2, 8);
+        let n_lanes = lane_cap * g.usize_in(1, 3) + g.usize_in(1, lane_cap - 1);
+        debug_assert!(n_lanes % lane_cap != 0);
+        let data: Vec<(Vec<f32>, Vec<f32>)> = (0..n_lanes)
+            .map(|_| (g.vec_f32(1, 10), g.vec_f32(1, 30)))
+            .collect();
+        let lanes: Vec<Lane<'_>> = data
+            .iter()
+            .map(|(q, w)| Lane { query: q, window: w })
+            .collect();
+        let out = run_spec(KernelSpec::lanes(lane_cap), &lanes, f32::INFINITY, Dist::Sq);
+        for (i, ((q, w), got)) in data.iter().zip(&out).enumerate() {
+            let want = sdtw(q, w, Dist::Sq);
+            let got = got.ok_or_else(|| format!("lane {i}: abandoned at τ=∞"))?;
+            if got.cost.to_bits() != want.cost.to_bits() || got.end != want.end {
+                return Err(format!(
+                    "cap {lane_cap} lane {i}/{n_lanes}: ({}, {}) vs ({}, {})",
+                    got.cost, got.end, want.cost, want.end
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_scan_widths_1_to_32_all_exact() {
+    check(504, 40, |g| {
+        let q = g.vec_f32(1, 14);
+        let w = g.vec_f32(1, 48);
+        let want = sdtw(&q, &w, Dist::Sq);
+        let lanes = [Lane { query: &q, window: &w }];
+        for width in 1..=32usize {
+            let out = run_spec(KernelSpec::scan(width), &lanes, f32::INFINITY, Dist::Sq);
+            let got = out[0].ok_or_else(|| format!("width {width}: abandoned at τ=∞"))?;
+            if got.cost.to_bits() != want.cost.to_bits() || got.end != want.end {
+                return Err(format!(
+                    "width {width}: ({}, {}) vs oracle ({}, {})",
+                    got.cost, got.end, want.cost, want.end
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_batch_driver_identical_for_every_kernel() {
+    // the re-pointed sdtw_batch_cpu: every kernel, every thread count,
+    // bit-identical to the oracle on each query of a uniform batch
+    check(505, 40, |g| {
+        let b = g.usize_in(1, 9);
+        let m = g.usize_in(1, 10);
+        let qs: Vec<f32> = (0..b).flat_map(|_| g.vec_f32(m, m)).collect();
+        debug_assert_eq!(qs.len(), b * m);
+        let r = g.vec_f32(4, 64);
+        for spec in specs(g) {
+            for threads in [1usize, 3] {
+                let got = sdtw_repro::dtw::batch::sdtw_batch_kernel(
+                    &qs, m, &r, Dist::Sq, threads, spec,
+                );
+                for i in 0..b {
+                    let want = sdtw(&qs[i * m..(i + 1) * m], &r, Dist::Sq);
+                    if got[i].cost.to_bits() != want.cost.to_bits() || got[i].end != want.end {
+                        return Err(format!(
+                            "{spec:?} t={threads} q{i}: ({}, {}) vs ({}, {})",
+                            got[i].cost, got[i].end, want.cost, want.end
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_cascade_topk_invariant_under_kernel_choice() {
+    // the end-to-end claim: the search engine returns bit-identical
+    // top-K hits no matter which kernel executes its survivors
+    use std::sync::Arc;
+    use sdtw_repro::search::{CascadeOpts, SearchEngine};
+    check(506, 40, |g| {
+        let r = Arc::new(g.vec_f32(60, 160));
+        let m = g.usize_in(4, 10);
+        let window = g.usize_in(m, (m + 8).min(r.len()));
+        let k = g.usize_in(1, 3);
+        let exclusion = g.usize_in(1, window);
+        let q = g.vec_f32(m, m);
+        let engine = SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let base = engine
+            .search_opts(&q, k, exclusion, CascadeOpts::default(), 1)
+            .map_err(|e| e.to_string())?;
+        for spec in specs(g) {
+            let opts = CascadeOpts::default().with_kernel(spec);
+            let got = engine
+                .search_opts(&q, k, exclusion, opts, 1)
+                .map_err(|e| e.to_string())?;
+            if got.hits.len() != base.hits.len() {
+                return Err(format!(
+                    "{spec:?}: {} hits vs {}",
+                    got.hits.len(),
+                    base.hits.len()
+                ));
+            }
+            for (a, b) in got.hits.iter().zip(&base.hits) {
+                if a.start != b.start || a.end != b.end || a.cost.to_bits() != b.cost.to_bits()
+                {
+                    return Err(format!("{spec:?}: hit {a:?} vs {b:?}"));
+                }
+            }
+            let s = got.stats;
+            if s.pruned_total() + s.dp_full != s.candidates {
+                return Err(format!("{spec:?}: counters do not partition: {s:?}"));
+            }
+            if s.survivors() > 0 && s.survivor_batches == 0 {
+                return Err(format!("{spec:?}: survivors without a batch flush: {s:?}"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}

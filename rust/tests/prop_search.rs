@@ -125,7 +125,7 @@ fn prop_every_stage_combination_is_lossless() {
         for kim in [false, true] {
             for keogh in [false, true] {
                 for abandon in [false, true] {
-                    let opts = CascadeOpts { kim, keogh, abandon };
+                    let opts = CascadeOpts { kim, keogh, abandon, ..Default::default() };
                     let got = engine
                         .search_opts(&q, k, exclusion, opts, 1)
                         .map_err(|e| e.to_string())?;

@@ -113,7 +113,7 @@ fn prop_sharded_brute_opts_and_stage_toggles_stay_exact() {
         for kim in [false, true] {
             for keogh in [false, true] {
                 for abandon in [false, true] {
-                    let opts = CascadeOpts { kim, keogh, abandon };
+                    let opts = CascadeOpts { kim, keogh, abandon, ..Default::default() };
                     let out = engine
                         .search_sharded(&q, k, exclusion, opts, shards, 3)
                         .map_err(|e| e.to_string())?;
