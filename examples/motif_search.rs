@@ -157,9 +157,12 @@ fn main() -> Result<()> {
     );
     println!(
         "  sharded (4 shards × 4 threads): identical top-{K}, τ tightened {} times, \
-         imbalance {:.2}",
+         imbalance {}",
         sharded.tau_tightenings,
-        sharded.imbalance()
+        sharded
+            .imbalance()
+            .map(|r| format!("{r:.2}"))
+            .unwrap_or_else(|| "n/a".into())
     );
 
     println!("\nmotif_search OK — recovered, rejected, and bit-identical to brute force");

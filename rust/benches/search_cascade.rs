@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use sdtw_repro::bench_harness::{banner, Table};
-use sdtw_repro::datagen::{embed_query, Family};
+use sdtw_repro::datagen::{planted_workload, Family};
 use sdtw_repro::dtw::Dist;
 use sdtw_repro::normalize::znormed;
 use sdtw_repro::search::{CascadeOpts, CascadeStats, SearchEngine};
@@ -31,13 +31,8 @@ const PLANTS: usize = 6;
 
 fn workload(family: Family, seed: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
     let mut rng = Xoshiro256::new(seed);
-    let mut reference = family.series(REFLEN, &mut rng);
-    let query = family.series(QLEN, &mut rng);
-    for p in 0..PLANTS {
-        let at = (p * 2 + 1) * REFLEN / (2 * PLANTS);
-        let stretch = rng.uniform(0.8, 1.25);
-        embed_query(&mut reference, &query, at, stretch, 0.05, &mut rng);
-    }
+    let (reference, query, _) =
+        planted_workload(family, REFLEN, QLEN, PLANTS, 0.05, &mut rng);
     (Arc::new(znormed(&reference)), znormed(&query))
 }
 

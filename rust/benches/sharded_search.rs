@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use sdtw_repro::bench_harness::{banner, Table};
-use sdtw_repro::datagen::{embed_query, Family};
+use sdtw_repro::datagen::{planted_workload, Family};
 use sdtw_repro::dtw::Dist;
 use sdtw_repro::normalize::znormed;
 use sdtw_repro::search::{CascadeOpts, SearchEngine, ShardedOutcome};
@@ -41,13 +41,8 @@ fn reflen() -> usize {
 
 fn workload(n: usize, seed: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
     let mut rng = Xoshiro256::new(seed);
-    let mut reference = Family::Walk.series(n, &mut rng);
-    let query = Family::Walk.series(QLEN, &mut rng);
-    for p in 0..PLANTS {
-        let at = (p * 2 + 1) * n / (2 * PLANTS);
-        let stretch = rng.uniform(0.8, 1.25);
-        embed_query(&mut reference, &query, at, stretch, 0.05, &mut rng);
-    }
+    let (reference, query, _) =
+        planted_workload(Family::Walk, n, QLEN, PLANTS, 0.05, &mut rng);
     (Arc::new(znormed(&reference)), znormed(&query))
 }
 
@@ -116,7 +111,9 @@ fn main() -> anyhow::Result<()> {
             vec![
                 format!("{:.2}", summary.mean_ms),
                 format!("{:.2}x", serial_ms / summary.mean_ms.max(1e-9)),
-                format!("{:.2}", out.imbalance()),
+                out.imbalance()
+                    .map(|r| format!("{r:.2}"))
+                    .unwrap_or_else(|| "n/a".into()),
                 format!("{}", out.tau_tightenings),
                 format!("{:.1}", out.stats.prune_fraction() * 100.0),
             ],

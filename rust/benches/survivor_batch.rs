@@ -21,7 +21,7 @@
 use std::sync::Arc;
 
 use sdtw_repro::bench_harness::{banner, Table};
-use sdtw_repro::datagen::{embed_query, Family};
+use sdtw_repro::datagen::{planted_workload, Family};
 use sdtw_repro::dtw::kernel::{DpKernel, KernelSpec, Lane};
 use sdtw_repro::dtw::Dist;
 use sdtw_repro::normalize::znormed;
@@ -44,13 +44,8 @@ fn reflen() -> usize {
 
 fn workload(n: usize, seed: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
     let mut rng = Xoshiro256::new(seed);
-    let mut reference = Family::Walk.series(n, &mut rng);
-    let query = Family::Walk.series(QLEN, &mut rng);
-    for p in 0..PLANTS {
-        let at = (p * 2 + 1) * n / (2 * PLANTS);
-        let stretch = rng.uniform(0.8, 1.25);
-        embed_query(&mut reference, &query, at, stretch, 0.05, &mut rng);
-    }
+    let (reference, query, _) =
+        planted_workload(Family::Walk, n, QLEN, PLANTS, 0.05, &mut rng);
     (Arc::new(znormed(&reference)), znormed(&query))
 }
 

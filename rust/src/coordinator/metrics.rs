@@ -10,14 +10,18 @@
 //! the CLI's end-of-run summary; `docs/METRICS.md` documents every field
 //! and who increments it.
 //!
-//! Three counter families:
+//! Four counter families:
 //! * **align path** — submits/responses/rejects, batch fill and padding,
 //!   device busy time, and Gsps over both busy and wall time;
 //! * **search path** — per-stage cascade prune counters aggregated over
 //!   all searches, plus a separate search latency histogram;
 //! * **sharded executor** — shards run, shared-threshold tightenings,
 //!   and per-search wall-time imbalance (recorded only by
-//!   [`Metrics::on_search_sharded`]).
+//!   [`Metrics::on_search_sharded`], and only when the timings carry
+//!   signal);
+//! * **streaming session** — appends and samples ingested, delta
+//!   searches served, and the incremental-vs-rebuild candidate split
+//!   (how much cascading the watermark actually saved).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -52,6 +56,8 @@ pub struct Metrics {
     search_pruned_keogh: AtomicU64,
     search_dp_abandoned: AtomicU64,
     search_dp_full: AtomicU64,
+    /// windows accounted without any stage running (k = 0 requests)
+    search_skipped: AtomicU64,
     /// survivor batches flushed through the DP kernel (lanes executed
     /// per batch = dp_abandoned + dp_full contributions of that flush)
     search_survivor_batches: AtomicU64,
@@ -63,6 +69,19 @@ pub struct Metrics {
     /// sum of per-search imbalance ratios in milli-units (ratio × 1000),
     /// so the mean stays exact under concurrent atomic accumulation
     search_imbalance_milli: AtomicU64,
+    /// sharded searches whose timings carried signal (the imbalance
+    /// mean's denominator — zero-timing searches are excluded, not
+    /// counted as "perfectly even")
+    search_imbalance_samples: AtomicU64,
+    // ------------------------- streaming-session counters
+    stream_appends: AtomicU64,
+    stream_samples: AtomicU64,
+    delta_searches: AtomicU64,
+    /// candidates actually cascaded by delta searches
+    delta_candidates_scanned: AtomicU64,
+    /// candidates delta searches skipped thanks to the watermark (what a
+    /// full rebuild would have re-cascaded)
+    delta_candidates_skipped: AtomicU64,
 }
 
 impl Metrics {
@@ -87,12 +106,19 @@ impl Metrics {
             search_pruned_keogh: AtomicU64::new(0),
             search_dp_abandoned: AtomicU64::new(0),
             search_dp_full: AtomicU64::new(0),
+            search_skipped: AtomicU64::new(0),
             search_survivor_batches: AtomicU64::new(0),
             search_latency: Mutex::new(LatencyHistogram::new()),
             searches_sharded: AtomicU64::new(0),
             search_shards: AtomicU64::new(0),
             search_tau_tightenings: AtomicU64::new(0),
             search_imbalance_milli: AtomicU64::new(0),
+            search_imbalance_samples: AtomicU64::new(0),
+            stream_appends: AtomicU64::new(0),
+            stream_samples: AtomicU64::new(0),
+            delta_searches: AtomicU64::new(0),
+            delta_candidates_scanned: AtomicU64::new(0),
+            delta_candidates_skipped: AtomicU64::new(0),
         }
     }
 
@@ -109,6 +135,8 @@ impl Metrics {
             .fetch_add(stats.dp_abandoned, Ordering::Relaxed);
         self.search_dp_full
             .fetch_add(stats.dp_full, Ordering::Relaxed);
+        self.search_skipped
+            .fetch_add(stats.skipped, Ordering::Relaxed);
         self.search_survivor_batches
             .fetch_add(stats.survivor_batches, Ordering::Relaxed);
         self.search_latency.lock().unwrap().record_ms(latency_ms);
@@ -117,22 +145,44 @@ impl Metrics {
     /// Record one completed *sharded* top-K search: the merged cascade
     /// counters plus the executor's telemetry — shards run, how often the
     /// shared τ tightened (the cross-shard pruning win), and the
-    /// max/mean wall-time imbalance across shards.
+    /// max/mean wall-time imbalance across shards.  `imbalance` is
+    /// `None` when the shard timings carried no signal (all rounded to
+    /// zero); such searches are excluded from the imbalance mean rather
+    /// than read as "perfectly even".
     pub fn on_search_sharded(
         &self,
         latency_ms: f64,
         stats: &CascadeStats,
         shards: u64,
         tau_tightenings: u64,
-        imbalance: f64,
+        imbalance: Option<f64>,
     ) {
         self.on_search(latency_ms, stats);
         self.searches_sharded.fetch_add(1, Ordering::Relaxed);
         self.search_shards.fetch_add(shards, Ordering::Relaxed);
         self.search_tau_tightenings
             .fetch_add(tau_tightenings, Ordering::Relaxed);
-        self.search_imbalance_milli
-            .fetch_add((imbalance.max(0.0) * 1e3).round() as u64, Ordering::Relaxed);
+        if let Some(r) = imbalance {
+            self.search_imbalance_milli
+                .fetch_add((r.max(0.0) * 1e3).round() as u64, Ordering::Relaxed);
+            self.search_imbalance_samples.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one streaming append.
+    pub fn on_stream_append(&self, samples: u64) {
+        self.stream_appends.fetch_add(1, Ordering::Relaxed);
+        self.stream_samples.fetch_add(samples, Ordering::Relaxed);
+    }
+
+    /// Record one delta (streaming) search: how many candidates the
+    /// incremental pass cascaded vs skipped via the watermark.
+    pub fn on_delta_search(&self, scanned: u64, skipped: u64) {
+        self.delta_searches.fetch_add(1, Ordering::Relaxed);
+        self.delta_candidates_scanned
+            .fetch_add(scanned, Ordering::Relaxed);
+        self.delta_candidates_skipped
+            .fetch_add(skipped, Ordering::Relaxed);
     }
 
     pub fn on_submit(&self) {
@@ -208,6 +258,7 @@ impl Metrics {
             search_pruned_keogh: self.search_pruned_keogh.load(Ordering::Relaxed),
             search_dp_abandoned: dp_abandoned,
             search_dp_full: dp_full,
+            search_skipped: self.search_skipped.load(Ordering::Relaxed),
             search_survivor_batches: survivor_batches,
             search_lane_occupancy_mean: if survivor_batches == 0 {
                 0.0
@@ -220,8 +271,9 @@ impl Metrics {
             searches_sharded: self.searches_sharded.load(Ordering::Relaxed),
             search_shards: self.search_shards.load(Ordering::Relaxed),
             search_tau_tightenings: self.search_tau_tightenings.load(Ordering::Relaxed),
+            search_imbalance_samples: self.search_imbalance_samples.load(Ordering::Relaxed),
             search_imbalance_mean: {
-                let n = self.searches_sharded.load(Ordering::Relaxed);
+                let n = self.search_imbalance_samples.load(Ordering::Relaxed);
                 if n == 0 {
                     0.0
                 } else {
@@ -230,6 +282,11 @@ impl Metrics {
                         / n as f64
                 }
             },
+            stream_appends: self.stream_appends.load(Ordering::Relaxed),
+            stream_samples: self.stream_samples.load(Ordering::Relaxed),
+            delta_searches: self.delta_searches.load(Ordering::Relaxed),
+            delta_candidates_scanned: self.delta_candidates_scanned.load(Ordering::Relaxed),
+            delta_candidates_skipped: self.delta_candidates_skipped.load(Ordering::Relaxed),
         }
     }
 }
@@ -277,6 +334,9 @@ pub struct MetricsSnapshot {
     pub search_dp_abandoned: u64,
     /// Windows that ran a full exact DP.
     pub search_dp_full: u64,
+    /// Windows accounted without any stage running (k = 0 requests keep
+    /// the partition invariant through this counter).
+    pub search_skipped: u64,
     /// Survivor batches flushed through the DP kernel across all
     /// searches (one per window on the scalar path; one per ≤L windows
     /// on the lane-batched path).
@@ -295,9 +355,25 @@ pub struct MetricsSnapshot {
     pub search_shards: u64,
     /// Shared-threshold tightenings across all sharded searches.
     pub search_tau_tightenings: u64,
+    /// Sharded searches whose shard timings carried signal — the
+    /// denominator of `search_imbalance_mean`.  Searches whose timings
+    /// all rounded to zero are excluded, not counted as balanced.
+    pub search_imbalance_samples: u64,
     /// Mean per-search shard imbalance (slowest / mean shard wall time,
-    /// 1.0 = perfectly even; 0.0 until a sharded search runs).
+    /// ≥ 1.0, 1.0 = perfectly even) over the searches with measurable
+    /// timings; 0.0 until one such search runs.
     pub search_imbalance_mean: f64,
+    /// Streaming appends served.
+    pub stream_appends: u64,
+    /// Samples ingested into the streaming session across all appends.
+    pub stream_samples: u64,
+    /// Streaming (delta-path) searches served.
+    pub delta_searches: u64,
+    /// Candidates the delta searches actually cascaded.
+    pub delta_candidates_scanned: u64,
+    /// Candidates the delta searches skipped via the watermark — what a
+    /// full rebuild would have re-cascaded.
+    pub delta_candidates_skipped: u64,
 }
 
 impl MetricsSnapshot {
@@ -313,7 +389,10 @@ impl MetricsSnapshot {
 
     /// Windows pruned before a full DP, across all searches.
     pub fn search_pruned_total(&self) -> u64 {
-        self.search_pruned_kim + self.search_pruned_keogh + self.search_dp_abandoned
+        self.search_pruned_kim
+            + self.search_pruned_keogh
+            + self.search_dp_abandoned
+            + self.search_skipped
     }
 
     /// Fraction of candidate windows the cascade pruned, in [0, 1].
@@ -366,11 +445,24 @@ impl MetricsSnapshot {
         }
         if self.searches_sharded > 0 {
             out.push_str(&format!(
-                " sharded={} shards={} tightenings={} imbalance={:.2}",
-                self.searches_sharded,
-                self.search_shards,
-                self.search_tau_tightenings,
-                self.search_imbalance_mean,
+                " sharded={} shards={} tightenings={}",
+                self.searches_sharded, self.search_shards, self.search_tau_tightenings,
+            ));
+            if self.search_imbalance_samples > 0 {
+                out.push_str(&format!(" imbalance={:.2}", self.search_imbalance_mean));
+            } else {
+                out.push_str(" imbalance=n/a");
+            }
+        }
+        if self.stream_appends > 0 || self.delta_searches > 0 {
+            out.push_str(&format!(
+                " stream(appends={} samples={}) delta_searches={} \
+                 delta(scanned={} skipped={})",
+                self.stream_appends,
+                self.stream_samples,
+                self.delta_searches,
+                self.delta_candidates_scanned,
+                self.delta_candidates_skipped,
             ));
         }
         out
@@ -428,6 +520,7 @@ mod tests {
                 pruned_keogh: 20,
                 dp_abandoned: 10,
                 dp_full: 10,
+                skipped: 0,
                 survivor_batches: 5,
             },
         );
@@ -439,6 +532,7 @@ mod tests {
                 pruned_keogh: 0,
                 dp_abandoned: 0,
                 dp_full: 20,
+                skipped: 0,
                 survivor_batches: 5,
             },
         );
@@ -478,10 +572,11 @@ mod tests {
             pruned_keogh: 20,
             dp_abandoned: 10,
             dp_full: 10,
+            skipped: 0,
             survivor_batches: 4,
         };
-        m.on_search_sharded(2.0, &stats, 4, 12, 1.5);
-        m.on_search_sharded(4.0, &stats, 8, 4, 2.5);
+        m.on_search_sharded(2.0, &stats, 4, 12, Some(1.5));
+        m.on_search_sharded(4.0, &stats, 8, 4, Some(2.5));
         let s = m.snapshot();
         // a sharded search is still a search
         assert_eq!(s.searches, 2);
@@ -489,10 +584,68 @@ mod tests {
         assert_eq!(s.searches_sharded, 2);
         assert_eq!(s.search_shards, 12);
         assert_eq!(s.search_tau_tightenings, 16);
+        assert_eq!(s.search_imbalance_samples, 2);
         assert!((s.search_imbalance_mean - 2.0).abs() < 1e-9);
         let r = s.render();
         assert!(r.contains("sharded=2"));
         assert!(r.contains("shards=12"));
         assert!(r.contains("tightenings=16"));
+    }
+
+    #[test]
+    fn unmeasurable_imbalance_excluded_from_mean() {
+        let m = Metrics::new();
+        let stats = CascadeStats { candidates: 10, dp_full: 10, ..Default::default() };
+        // a fast search with zero-rounded shard timings: no imbalance signal
+        m.on_search_sharded(0.0, &stats, 2, 0, None);
+        let s = m.snapshot();
+        assert_eq!(s.searches_sharded, 1);
+        assert_eq!(s.search_imbalance_samples, 0);
+        assert_eq!(s.search_imbalance_mean, 0.0);
+        assert!(s.render().contains("imbalance=n/a"));
+        // a measured search restores the mean over measured samples only
+        m.on_search_sharded(3.0, &stats, 2, 1, Some(1.5));
+        let s = m.snapshot();
+        assert_eq!(s.search_imbalance_samples, 1);
+        assert!((s.search_imbalance_mean - 1.5).abs() < 1e-9);
+        assert!(s.render().contains("imbalance=1.50"));
+    }
+
+    #[test]
+    fn skipped_windows_keep_partition_invariant() {
+        let m = Metrics::new();
+        // a k=0 search: every candidate accounted as skipped
+        m.on_search(0.5, &CascadeStats { candidates: 40, skipped: 40, ..Default::default() });
+        let s = m.snapshot();
+        assert_eq!(s.search_windows, 40);
+        assert_eq!(s.search_skipped, 40);
+        assert_eq!(s.search_pruned_total(), 40);
+        assert_eq!(
+            s.search_pruned_total() + s.search_dp_full,
+            s.search_windows,
+            "stages must partition the candidate space even at k=0"
+        );
+    }
+
+    #[test]
+    fn streaming_counters_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.stream_appends, 0);
+        assert!(!s.render().contains("stream("), "hidden until streaming is used");
+        m.on_stream_append(1000);
+        m.on_stream_append(24);
+        m.on_delta_search(300, 0);
+        m.on_delta_search(40, 300);
+        let s = m.snapshot();
+        assert_eq!(s.stream_appends, 2);
+        assert_eq!(s.stream_samples, 1024);
+        assert_eq!(s.delta_searches, 2);
+        assert_eq!(s.delta_candidates_scanned, 340);
+        assert_eq!(s.delta_candidates_skipped, 300);
+        let r = s.render();
+        assert!(r.contains("stream(appends=2 samples=1024)"));
+        assert!(r.contains("delta_searches=2"));
+        assert!(r.contains("delta(scanned=340 skipped=300)"));
     }
 }

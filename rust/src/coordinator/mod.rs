@@ -31,7 +31,13 @@
 //! work away, leaving little to batch) and runs on the calling thread —
 //! or, when [`SearchOptions::shards`] resolves above 1, fans out across
 //! the sharded executor's worker pool (`crate::search::sharded`), which
-//! reuses this module's [`queue::BoundedQueue`] as its work queue.  See
+//! reuses this module's [`queue::BoundedQueue`] as its work queue.
+//!
+//! The `append` verb grows a streaming session
+//! (`crate::search::streaming`): raw samples are mapped into the
+//! frozen startup normalization frame and indexed incrementally; a
+//! `search` with `stream: true` then runs against the grown stream,
+//! cascading only the delta since the last identical search.  See
 //! `docs/ARCHITECTURE.md` for the full life-of-a-request walkthroughs.
 
 pub mod batcher;
@@ -46,7 +52,8 @@ pub use batcher::{Batch, BatchPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::BoundedQueue;
 pub use request::{
-    AlignOptions, AlignRequest, AlignResponse, RequestId, SearchOptions, SearchResponse,
+    AlignOptions, AlignRequest, AlignResponse, AppendOptions, AppendResponse, RequestId,
+    SearchOptions, SearchResponse,
 };
 pub use router::Router;
 pub use service::{SdtwService, ServiceOptions};

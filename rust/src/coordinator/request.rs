@@ -76,6 +76,11 @@ pub struct SearchOptions {
     /// Lane count for the lane kernel (0 = auto).  Ignored unless
     /// `kernel` is [`KernelKind::Lanes`].
     pub lanes: usize,
+    /// Search the streaming session (grown by `append`) instead of the
+    /// startup reference.  Serial streaming searches cascade only the
+    /// candidates appended since the last identical search (the delta);
+    /// results stay bit-identical to a full rebuild.
+    pub stream: bool,
 }
 
 impl Default for SearchOptions {
@@ -89,6 +94,7 @@ impl Default for SearchOptions {
             parallelism: 1,
             kernel: KernelKind::Scalar,
             lanes: 0,
+            stream: false,
         }
     }
 }
@@ -105,8 +111,19 @@ impl SearchOptions {
             self.window
         };
         let stride = self.stride.max(1);
-        let exclusion = if self.exclusion == 0 { (window / 2).max(1) } else { self.exclusion };
-        (window, stride, exclusion)
+        (window, stride, self.resolve_exclusion(window))
+    }
+
+    /// Resolve just the exclusion field against an already-known window
+    /// (the streaming path, where the session fixes the window).  The
+    /// single definition of "0 = half the window" — shared with
+    /// [`SearchOptions::resolve`] so the paths cannot drift.
+    pub fn resolve_exclusion(&self, window: usize) -> usize {
+        if self.exclusion == 0 {
+            (window / 2).max(1)
+        } else {
+            self.exclusion
+        }
     }
 
     /// Resolve the sharding fields: `(shards, parallelism)`.
@@ -131,6 +148,38 @@ impl SearchOptions {
     pub fn resolve_kernel(&self) -> KernelSpec {
         KernelSpec { kind: self.kernel, width: 0, lanes: self.lanes }
     }
+}
+
+/// Client-facing append options for the streaming search session.
+/// Zero means "auto", resolved exactly like [`SearchOptions::resolve`]
+/// against the service's primary query length; the first append fixes
+/// the session's shape and later appends must match (or stay auto).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AppendOptions {
+    /// Candidate window length (0 = auto: 3·qlen/2 of the primary
+    /// variant, clamped to the startup reference).
+    pub window: usize,
+    /// Candidate stride (0 = 1).
+    pub stride: usize,
+}
+
+/// The append answer: what the streaming session looks like after the
+/// samples were ingested.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppendResponse {
+    pub id: RequestId,
+    /// Samples ingested by this append.
+    pub appended: usize,
+    /// Total stream length (startup reference + all appends).
+    pub stream_len: usize,
+    /// Candidate windows currently indexed.
+    pub candidates: usize,
+    /// The session's candidate window length.
+    pub window: usize,
+    /// The session's candidate stride.
+    pub stride: usize,
+    /// End-to-end latency in milliseconds.
+    pub latency_ms: f64,
 }
 
 /// The search answer: top-K sites plus the cascade's pruning telemetry.
@@ -165,6 +214,14 @@ mod tests {
         assert_eq!(o.parallelism, 1);
         assert_eq!(o.kernel, KernelKind::Scalar, "default is the oracle kernel");
         assert_eq!(o.lanes, 0);
+        assert!(!o.stream, "default targets the startup reference");
+    }
+
+    #[test]
+    fn append_options_default_is_auto() {
+        let o = AppendOptions::default();
+        assert_eq!(o.window, 0);
+        assert_eq!(o.stride, 0);
     }
 
     #[test]

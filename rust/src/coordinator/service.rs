@@ -24,7 +24,10 @@ use anyhow::{Context, Result};
 use super::batcher::{BatchAssembler, BatchPolicy, Step};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::{BoundedQueue, PushError};
-use super::request::{AlignOptions, AlignRequest, AlignResponse, SearchOptions, SearchResponse};
+use super::request::{
+    AlignOptions, AlignRequest, AlignResponse, AppendOptions, AppendResponse, SearchOptions,
+    SearchResponse,
+};
 use super::router::Router;
 use super::worker::{worker_loop, RoutedBatch};
 use crate::config::ServeConfig;
@@ -33,7 +36,7 @@ use crate::log_info;
 use crate::normalize;
 use crate::runtime::artifact::{Manifest, VariantMeta};
 use crate::runtime::Engine;
-use crate::search::{CascadeOpts, SearchEngine};
+use crate::search::{CascadeOpts, SearchEngine, StreamingEngine};
 
 /// Service construction options.
 #[derive(Clone, Debug)]
@@ -87,6 +90,17 @@ pub struct SdtwService {
     batch_q: Arc<BoundedQueue<RoutedBatch>>,
     /// The normalized reference (shared with workers and search engines).
     reference: Arc<Vec<f32>>,
+    /// The startup reference's raw z-normalization stats `(mean, std)`,
+    /// frozen for the lifetime of the service.  Streaming appends are
+    /// mapped into this frame — re-deriving stats per append would
+    /// silently shift the normalization of every already-indexed
+    /// candidate (see `search::streaming` docs on the policy).
+    frozen_stats: (f32, f32),
+    /// The streaming session, opened lazily by the first `append`.  The
+    /// mutex serializes appends and streaming searches (the delta cache
+    /// needs `&mut`); batch searches against the startup reference are
+    /// unaffected.
+    streaming: std::sync::Mutex<Option<StreamingEngine>>,
     /// Lazily-built search engines, keyed by (window, stride) — the
     /// envelope index is reused across every query with that shape.
     search_engines: std::sync::Mutex<HashMap<(usize, usize), Arc<SearchEngine>>>,
@@ -107,8 +121,10 @@ impl SdtwService {
         );
 
         // normalize the reference once up front (paper §5: runSDTW
-        // orchestrates normalizer calls for both operands; same formula)
+        // orchestrates normalizer calls for both operands; same formula),
+        // freezing the stats so streaming appends can join the same frame
         let mut reference = reference_raw;
+        let frozen_stats = normalize::moments_paper(&reference);
         normalize::znorm_paper(&mut reference);
         let reference = Arc::new(reference);
 
@@ -170,6 +186,8 @@ impl SdtwService {
             workers,
             batch_q,
             reference,
+            frozen_stats,
+            streaming: std::sync::Mutex::new(None),
             search_engines: std::sync::Mutex::new(HashMap::new()),
         })
     }
@@ -290,6 +308,9 @@ impl SdtwService {
     ) -> Result<SearchResponse> {
         anyhow::ensure!(!query.is_empty(), "empty query");
         anyhow::ensure!(options.k >= 1, "k must be >= 1");
+        if options.stream {
+            return self.search_stream_inner(query, options);
+        }
         let reflen = self.reference.len();
         let (window, stride, exclusion) = options.resolve(query.len(), reflen);
         anyhow::ensure!(
@@ -342,6 +363,139 @@ impl SdtwService {
                 stats: outcome.stats,
             })
         }
+    }
+
+    /// Streaming search: runs against the session grown by
+    /// [`SdtwService::append_blocking`] instead of the startup
+    /// reference.  The serial path cascades only the candidates appended
+    /// since the last identical search (delta, with the prune threshold
+    /// seeded from cached exact costs); a sharded request fans the full
+    /// candidate set out across the worker pool.  Either way the hits
+    /// are bit-identical to a full rebuild + search.  Streaming searches
+    /// serialize on the session mutex.
+    fn search_stream_inner(
+        &self,
+        query: Vec<f32>,
+        options: SearchOptions,
+    ) -> Result<SearchResponse> {
+        let (shards, parallelism) = options.resolve_sharding();
+        let cascade_opts = CascadeOpts::default().with_kernel(options.resolve_kernel());
+        let submitted = Instant::now();
+        let qn = normalize::znormed(&query);
+
+        let mut guard = self.streaming.lock().unwrap();
+        let engine = guard
+            .as_mut()
+            .context("no streaming session: send an append first")?;
+        ensure_session_shape(engine, options.window, options.stride)?;
+        let exclusion = options.resolve_exclusion(engine.index().window());
+
+        if shards <= 1 {
+            let d = engine.search_delta(&qn, options.k, exclusion, cascade_opts)?;
+            let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            self.metrics.on_search(latency_ms, &d.outcome.stats);
+            self.metrics.on_delta_search(d.scanned, d.skipped);
+            Ok(SearchResponse {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                hits: d.outcome.hits,
+                latency_ms,
+                stats: d.outcome.stats,
+                shards: 1,
+                tau_tightenings: 0,
+            })
+        } else {
+            let outcome = engine.search_sharded(
+                &qn,
+                options.k,
+                exclusion,
+                cascade_opts,
+                shards,
+                parallelism,
+            )?;
+            let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            self.metrics.on_search_sharded(
+                latency_ms,
+                &outcome.stats,
+                outcome.shards.len() as u64,
+                outcome.tau_tightenings,
+                outcome.imbalance(),
+            );
+            Ok(SearchResponse {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                shards: outcome.shards.len(),
+                tau_tightenings: outcome.tau_tightenings,
+                hits: outcome.hits,
+                latency_ms,
+                stats: outcome.stats,
+            })
+        }
+    }
+
+    /// Append raw samples to the streaming session, opening it on first
+    /// use (seeded with the service's normalized startup reference).
+    /// Samples are mapped into the frozen startup normalization frame —
+    /// an append never perturbs already-indexed candidates.  O(1)
+    /// amortized per sample; no index rebuild.
+    pub fn append_blocking(
+        &self,
+        samples: Vec<f32>,
+        options: AppendOptions,
+    ) -> Result<AppendResponse> {
+        let r = self.append_blocking_inner(samples, options);
+        if r.is_err() {
+            // failed appends count as service errors, like failed searches
+            self.metrics.on_error();
+        }
+        r
+    }
+
+    fn append_blocking_inner(
+        &self,
+        samples: Vec<f32>,
+        options: AppendOptions,
+    ) -> Result<AppendResponse> {
+        anyhow::ensure!(!samples.is_empty(), "empty append");
+        let submitted = Instant::now();
+        // frozen-stats normalization: appends join the startup frame.
+        // Stateless, so it runs before the session lock — a large append
+        // must not stall concurrent streaming searches with work that
+        // does not need the mutex.
+        let (mean, std) = self.frozen_stats;
+        let normalized: Vec<f32> = samples.iter().map(|&v| (v - mean) / std).collect();
+        let mut guard = self.streaming.lock().unwrap();
+        if guard.is_none() {
+            // first append opens the session; its (window, stride) are
+            // fixed for the session's lifetime
+            let probe = SearchOptions {
+                window: options.window,
+                stride: options.stride,
+                ..Default::default()
+            };
+            let (window, stride, _) = probe.resolve(self.qlen(), self.reference.len());
+            let engine = StreamingEngine::new(&self.reference, window, stride, Dist::Sq)?;
+            log_info!(
+                "streaming session opened: window={window} stride={stride}, seeded with \
+                 the {}-sample startup reference (frozen z-norm mean={:.4} std={:.4})",
+                self.reference.len(),
+                self.frozen_stats.0,
+                self.frozen_stats.1
+            );
+            *guard = Some(engine);
+        }
+        let engine = guard.as_mut().expect("session opened above");
+        ensure_session_shape(engine, options.window, options.stride)?;
+        engine.append(&normalized);
+        self.metrics.on_stream_append(samples.len() as u64);
+        let ix = engine.index();
+        Ok(AppendResponse {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            appended: samples.len(),
+            stream_len: ix.len(),
+            candidates: ix.candidates(),
+            window: ix.window(),
+            stride: ix.stride(),
+            latency_ms: submitted.elapsed().as_secs_f64() * 1e3,
+        })
     }
 
     /// Bound on cached search-engine shapes: (window, stride) is
@@ -399,6 +553,23 @@ impl Drop for SdtwService {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// An explicitly-requested shape must match the live streaming session
+/// (0 = auto = reuse the session's shape).  One definition shared by
+/// `append` and streaming `search` so the two verbs cannot drift.
+fn ensure_session_shape(engine: &StreamingEngine, window: usize, stride: usize) -> Result<()> {
+    anyhow::ensure!(
+        window == 0 || window == engine.index().window(),
+        "window {window} does not match the streaming session's window {}",
+        engine.index().window()
+    );
+    anyhow::ensure!(
+        stride == 0 || stride == engine.index().stride(),
+        "stride {stride} does not match the streaming session's stride {}",
+        engine.index().stride()
+    );
+    Ok(())
 }
 
 /// The dispatcher: assemble per-variant batches under one deadline clock.

@@ -108,6 +108,32 @@ impl Family {
     }
 }
 
+/// The search/stream workload shared by `sdtw search`, `sdtw stream`,
+/// and the search benches: one `family` reference of `reflen` samples
+/// with `plant` warped copies of a single `qlen`-sample query embedded
+/// at evenly spread sites (stretch drawn from [0.8, 1.25], N(0, noise²)
+/// added).  Returns `(reference, query, planted ground truth)`.  One
+/// definition so the CLI commands and benches generate comparable
+/// workloads instead of hand-copying the plant recipe.
+pub fn planted_workload(
+    family: Family,
+    reflen: usize,
+    qlen: usize,
+    plant: usize,
+    noise: f64,
+    rng: &mut Xoshiro256,
+) -> (Vec<f32>, Vec<f32>, Vec<Embedding>) {
+    let mut reference = family.series(reflen, rng);
+    let query = family.series(qlen, rng);
+    let mut planted = Vec::with_capacity(plant);
+    for p in 0..plant {
+        let at = (p * 2 + 1) * reflen / (2 * plant).max(1);
+        let stretch = rng.uniform(0.8, 1.25);
+        planted.push(embed_query(&mut reference, &query, at, stretch, noise, rng));
+    }
+    (reference, query, planted)
+}
+
 /// Generate a full workload: a reference stream from the family, and a
 /// query batch where `planted_fraction` of the queries are noisy,
 /// time-warped windows of the reference (ground truth recorded) and the

@@ -6,6 +6,9 @@
 //!            oracle, print metrics
 //!   search   top-K subsequence search with the lower-bound cascade
 //!            (CPU engine; no artifacts needed)
+//!   stream   append-only streaming search: grow the reference in chunks
+//!            through the incremental index, delta-search after each
+//!            append (CPU engine; no artifacts needed)
 //!   serve    start the TCP server over a generated reference
 //!   sweep    regenerate the Figure-3 segment-width series
 //!   inspect  list the artifact manifest
@@ -59,6 +62,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "gen" => cmd_gen(rest),
         "align" => cmd_align(rest),
         "search" => cmd_search(rest),
+        "stream" => cmd_stream(rest),
         "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "inspect" => cmd_inspect(rest),
@@ -77,6 +81,7 @@ fn print_usage() {
          \x20 gen      generate a synthetic dataset\n\
          \x20 align    align a dataset through the serving stack\n\
          \x20 search   top-K subsequence search (lower-bound cascade)\n\
+         \x20 stream   append-only streaming search (incremental index)\n\
          \x20 serve    start the TCP server\n\
          \x20 sweep    segment-width sweep (Figure 3)\n\
          \x20 inspect  list artifact variants\n\n\
@@ -264,17 +269,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
 
     // workload: a family stream with `plant` warped copies of one query
     let mut rng = sdtw_repro::util::rng::Xoshiro256::new(seed);
-    let mut reference = family.series(reflen, &mut rng);
-    let query = family.series(qlen, &mut rng);
-    let mut planted = Vec::new();
-    for p in 0..plant {
-        let at = (p * 2 + 1) * reflen / (2 * plant).max(1);
-        let stretch = rng.uniform(0.8, 1.25);
-        let emb = sdtw_repro::datagen::embed_query(
-            &mut reference, &query, at, stretch, noise, &mut rng,
-        );
-        planted.push(emb);
-    }
+    let (reference, query, planted) =
+        datagen::planted_workload(family, reflen, qlen, plant, noise, &mut rng);
 
     // one source of truth for "0 = auto" (shared with the service/protocol)
     let kernel_kind = sdtw_repro::dtw::KernelKind::from_name(a.get("kernel").unwrap())
@@ -288,6 +284,7 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         parallelism: a.get_or("parallel", 0usize)?,
         kernel: kernel_kind,
         lanes: a.get_or("lanes", 0usize)?,
+        stream: false,
     };
     let (window, stride, exclusion) = search_options.resolve(qlen, reflen);
     let (shards, parallelism) = search_options.resolve_sharding();
@@ -366,10 +363,12 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     );
     if let Some(so) = &sharded {
         println!(
-            "sharded: {} shards, τ tightened {} times, imbalance {:.2} (slowest/mean)",
+            "sharded: {} shards, τ tightened {} times, imbalance {} (slowest/mean)",
             so.shards.len(),
             so.tau_tightenings,
             so.imbalance()
+                .map(|r| format!("{r:.2}"))
+                .unwrap_or_else(|| "n/a (timings below resolution)".into())
         );
         if a.has("per-shard") {
             for sh in &so.shards {
@@ -404,6 +403,218 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
             "verify OK — identical to brute force ({brute_ms:.1} ms; speedup {:.1}x)",
             brute_ms / search_ms.max(1e-9)
         );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- stream
+
+/// Read whitespace-separated floats from a file, or stdin for `-`.
+fn read_float_stream(path: &str) -> Result<Vec<f32>> {
+    let text = if path == "-" {
+        use std::io::Read;
+        let mut s = String::new();
+        std::io::stdin().read_to_string(&mut s)?;
+        s
+    } else {
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+    };
+    let mut out = Vec::new();
+    for (i, tok) in text.split_whitespace().enumerate() {
+        out.push(
+            tok.parse::<f32>()
+                .with_context(|| format!("value {i} ({tok:?}) is not a float"))?,
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "empty float stream from {path}");
+    Ok(out)
+}
+
+fn cmd_stream(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new(
+        "stream",
+        "append-only streaming search: incremental index + delta searches",
+    )
+    .opt_default("family", "walk", "reference family: cbf|walk|ecg (generated mode)")
+    .opt_default("reflen", "16384", "total stream length (generated mode)")
+    .opt_default("qlen", "128", "query length (generated mode)")
+    .opt_default("k", "5", "match sites to report")
+    .opt_default("plant", "3", "warped copies of the query planted in the stream")
+    .opt_default("noise", "0.05", "noise added to planted copies")
+    .opt_default("seed", "42", "rng seed")
+    .opt_default("window", "0", "candidate window length (0 = 3*qlen/2)")
+    .opt_default("stride", "1", "candidate stride")
+    .opt_default("exclusion", "0", "min distance between reported sites (0 = window/2)")
+    .opt_default("chunk", "2048", "samples appended per chunk")
+    .opt_default("warmup", "0", "samples indexed before streaming starts (0 = 4*window)")
+    .opt_default("kernel", "scalar", "survivor DP kernel: scalar|scan|lanes")
+    .opt_default("lanes", "0", "lane count for --kernel lanes (0 = auto)")
+    .opt("input", "read the stream from a whitespace-separated float file ('-' = stdin)")
+    .opt("query-input", "read the query from a float file (required with --input)")
+    .flag("search-each-chunk", "delta-search after every append (default: only at the end)")
+    .flag("verify", "assert the final top-K is bit-identical to a one-shot rebuild search");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+
+    let k: usize = a.get_or("k", 5)?;
+    let seed: u64 = a.get_or("seed", 42)?;
+    let noise: f64 = a.get_or("noise", 0.05)?;
+    let mut rng = sdtw_repro::util::rng::Xoshiro256::new(seed);
+
+    // workload: an explicit float stream, or a generated family stream
+    // with planted warped copies (same recipe as `sdtw search`)
+    let (reference, query, planted) = match a.get("input") {
+        Some(path) => {
+            let reference = read_float_stream(path)?;
+            let qpath = a
+                .get("query-input")
+                .context("--input requires --query-input")?;
+            let query = read_float_stream(qpath)?;
+            (reference, query, Vec::new())
+        }
+        None => {
+            let family = datagen::Family::from_name(a.get("family").unwrap())
+                .context("family must be cbf|walk|ecg")?;
+            let reflen: usize = a.get_or("reflen", 16384)?;
+            let qlen: usize = a.get_or("qlen", 128)?;
+            let plant: usize = a.get_or("plant", 3)?;
+            anyhow::ensure!(
+                qlen >= 4 && reflen >= 4 * qlen,
+                "need reflen >= 4*qlen and qlen >= 4"
+            );
+            datagen::planted_workload(family, reflen, qlen, plant, noise, &mut rng)
+        }
+    };
+    let reflen = reference.len();
+    let qlen = query.len();
+
+    let kernel_kind = sdtw_repro::dtw::KernelKind::from_name(a.get("kernel").unwrap())
+        .context("kernel must be scalar|scan|lanes")?;
+    let probe = SearchOptions {
+        k,
+        window: a.get_or("window", 0usize)?,
+        stride: a.get_or("stride", 1usize)?,
+        exclusion: a.get_or("exclusion", 0usize)?,
+        kernel: kernel_kind,
+        lanes: a.get_or("lanes", 0usize)?,
+        ..Default::default()
+    };
+    let (window, stride, exclusion) = probe.resolve(qlen, reflen);
+    anyhow::ensure!(window <= reflen, "window {window} exceeds stream length {reflen}");
+    let opts = sdtw_repro::search::CascadeOpts::default().with_kernel(probe.resolve_kernel());
+
+    // normalization policy: the offline CLI has the whole stream up
+    // front, so it normalizes once with full-stream stats — that is what
+    // makes --verify's one-shot rebuild comparison exact.  The *service*
+    // instead freezes startup stats for live appends (docs/ARCHITECTURE).
+    let rn = normalize::znormed(&reference);
+    let qn = normalize::znormed(&query);
+
+    let chunk: usize = a.get_or("chunk", 2048)?;
+    anyhow::ensure!(chunk >= 1, "chunk must be >= 1");
+    let warmup = {
+        let w: usize = a.get_or("warmup", 0)?;
+        let w = if w == 0 { 4 * window } else { w };
+        w.clamp(window, reflen)
+    };
+
+    println!(
+        "stream {} ({reflen} samples) | query {qlen} | window {window} stride {stride} \
+         exclusion {exclusion} | warmup {warmup}, then {}-sample appends{}",
+        a.get("input").unwrap_or_else(|| a.get("family").unwrap()),
+        chunk,
+        if kernel_kind != sdtw_repro::dtw::KernelKind::Scalar {
+            format!(" | kernel {}", kernel_kind.name())
+        } else {
+            String::new()
+        }
+    );
+    for emb in &planted {
+        println!("planted copy at {}..{}", emb.start, emb.end);
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut engine =
+        sdtw_repro::search::StreamingEngine::new(&rn[..warmup], window, stride, Dist::Sq)?;
+    let mut appends = 0usize;
+    let mut scanned_total = 0u64;
+    let mut skipped_total = 0u64;
+    let search_each = a.has("search-each-chunk");
+    let mut at = warmup;
+    while at < reflen {
+        let end = (at + chunk).min(reflen);
+        engine.append(&rn[at..end]);
+        appends += 1;
+        at = end;
+        if search_each {
+            let d = engine.search_delta(&qn, k, exclusion, opts)?;
+            scanned_total += d.scanned;
+            skipped_total += d.skipped;
+            let best = d
+                .outcome
+                .hits
+                .first()
+                .map(|h| format!("best {:.4} @{}", h.cost, h.start))
+                .unwrap_or_else(|| "no hits".into());
+            println!(
+                "append {appends:3}: {at:7} samples, {:7} candidates | \
+                 delta scanned {:6} skipped {:7} | {best}",
+                engine.index().candidates(),
+                d.scanned,
+                d.skipped
+            );
+        }
+    }
+    let d = engine.search_delta(&qn, k, exclusion, opts)?;
+    scanned_total += d.scanned;
+    skipped_total += d.skipped;
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let out = &d.outcome;
+
+    println!("\n  rank   start    end        cost");
+    for (i, h) in out.hits.iter().enumerate() {
+        let near = planted
+            .iter()
+            .any(|e| h.end >= e.start.saturating_sub(qlen) && h.end <= e.end + qlen);
+        println!(
+            "  {:4}  {:6}  {:6}  {:10.4}{}",
+            i + 1,
+            h.start,
+            h.end,
+            h.cost,
+            if near { "  <- planted site" } else { "" }
+        );
+    }
+    println!(
+        "\n{} appends + searches in {total_ms:.1} ms | {} candidates indexed | \
+         delta passes scanned {scanned_total} and skipped {skipped_total} candidates",
+        appends,
+        engine.index().candidates()
+    );
+
+    if a.has("verify") {
+        // one-shot rebuild over the final stream: the streaming result
+        // must be bit-identical (hits and candidate count)
+        let t1 = std::time::Instant::now();
+        let batch =
+            sdtw_repro::search::SearchEngine::new(Arc::new(rn.clone()), window, stride, Dist::Sq)?;
+        let brute = batch.search_opts(&qn, k, exclusion, opts, 1)?;
+        let rebuild_ms = t1.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            batch.index().candidates() == engine.index().candidates(),
+            "candidate count diverged: streaming {} vs rebuild {}",
+            engine.index().candidates(),
+            batch.index().candidates()
+        );
+        anyhow::ensure!(
+            out.hits == brute.hits,
+            "streaming top-K diverged from one-shot rebuild:\n  stream: {:?}\n  rebuild: {:?}",
+            out.hits,
+            brute.hits
+        );
+        println!("verify OK — bit-identical to a one-shot rebuild ({rebuild_ms:.1} ms)");
     }
     Ok(())
 }

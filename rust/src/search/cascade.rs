@@ -46,7 +46,7 @@ use std::ops::Range;
 use crate::dtw::kernel::{self, DpKernel, KernelSpec, Lane};
 use crate::dtw::{Dist, Match};
 
-use super::index::ReferenceIndex;
+use super::index::CandidateIndex;
 use super::lower_bounds::{lb_keogh, lb_kim};
 use super::topk::{prune_heap_cap, BoundedCostHeap, Hit};
 
@@ -123,6 +123,10 @@ pub struct CascadeStats {
     pub dp_abandoned: u64,
     /// Windows that completed a full exact DP.
     pub dp_full: u64,
+    /// Windows never examined by any stage because the request asked
+    /// for nothing (`k == 0`).  Keeps the partition invariant
+    /// `pruned_total() + dp_full == candidates` on every path.
+    pub skipped: u64,
     /// Survivor batches flushed through the DP kernel (each flush
     /// executes between 1 and `kernel.lanes()` windows together).
     pub survivor_batches: u64,
@@ -131,7 +135,7 @@ pub struct CascadeStats {
 impl CascadeStats {
     /// Windows that never completed a full DP.
     pub fn pruned_total(&self) -> u64 {
-        self.pruned_kim + self.pruned_keogh + self.dp_abandoned
+        self.pruned_kim + self.pruned_keogh + self.dp_abandoned + self.skipped
     }
 
     /// Fraction of candidate windows pruned before a full DP, in [0, 1].
@@ -166,6 +170,7 @@ impl CascadeStats {
         self.pruned_keogh += other.pruned_keogh;
         self.dp_abandoned += other.dp_abandoned;
         self.dp_full += other.dp_full;
+        self.skipped += other.skipped;
         self.survivor_batches += other.survivor_batches;
     }
 }
@@ -208,8 +213,12 @@ pub fn sdtw_window_abandoning_into(
 /// hit whose exact cost was computed (superset of any top-K that
 /// `select_topk(k, exclusion)` can produce over the full candidate set)
 /// plus the per-stage counters.
-pub fn search_range(
-    index: &ReferenceIndex,
+///
+/// Generic over [`CandidateIndex`] — the batch-built
+/// [`super::index::ReferenceIndex`] and the append-only
+/// [`super::streaming::StreamingIndex`] run the identical cascade.
+pub fn search_range<I: CandidateIndex + ?Sized>(
+    index: &I,
     query: &[f32],
     dist: Dist,
     k: usize,
@@ -218,9 +227,12 @@ pub fn search_range(
     range: Range<usize>,
 ) -> (Vec<Hit>, CascadeStats) {
     if k == 0 || range.is_empty() {
+        // k == 0 asks for nothing: no stage runs, but the range must
+        // still be accounted (`skipped`) so counters partition it
+        let n = range.len() as u64;
         return (
             Vec::new(),
-            CascadeStats { candidates: range.len() as u64, ..Default::default() },
+            CascadeStats { candidates: n, skipped: n, ..Default::default() },
         );
     }
     // clamp to the candidate count: a heap that could hold every
@@ -235,8 +247,8 @@ pub fn search_range(
 /// the seam the sharded executor uses to share one τ across shards.
 /// `tau_sink` may start below +inf (another shard already tightened it);
 /// it must satisfy the [`TauSink`] admissibility contract.
-pub fn search_range_with(
-    index: &ReferenceIndex,
+pub fn search_range_with<I: CandidateIndex + ?Sized>(
+    index: &I,
     query: &[f32],
     dist: Dist,
     k: usize,
@@ -247,6 +259,7 @@ pub fn search_range_with(
     let mut stats = CascadeStats { candidates: range.len() as u64, ..Default::default() };
     let mut hits: Vec<Hit> = Vec::new();
     if k == 0 || range.is_empty() {
+        stats.skipped = stats.candidates;
         return (hits, stats);
     }
 
@@ -340,9 +353,9 @@ struct FlushBufs<'a> {
 /// run all lanes, record exact costs, and account every lane as exactly
 /// one of `dp_abandoned` / `dp_full`.
 #[allow(clippy::too_many_arguments)]
-fn flush_survivors<'a>(
+fn flush_survivors<'a, I: CandidateIndex + ?Sized>(
     kernel: &mut dyn DpKernel,
-    index: &'a ReferenceIndex,
+    index: &'a I,
     query: &'a [f32],
     dist: Dist,
     abandon: bool,
@@ -381,6 +394,7 @@ mod tests {
 
     use super::*;
     use crate::dtw::sdtw;
+    use crate::search::index::ReferenceIndex;
     use crate::search::topk::select_topk;
     use crate::util::rng::Xoshiro256;
 
@@ -476,7 +490,7 @@ mod tests {
     }
 
     #[test]
-    fn k_zero_is_empty() {
+    fn k_zero_is_empty_and_counters_still_partition() {
         let mut g = Xoshiro256::new(35);
         let r = Arc::new(g.normal_vec_f32(50));
         let index = ReferenceIndex::build(r, 10, 1).unwrap();
@@ -491,6 +505,27 @@ mod tests {
         );
         assert!(hits.is_empty());
         assert_eq!(stats.dp_full, 0);
+        assert_eq!(stats.candidates, index.candidates() as u64);
+        assert_eq!(stats.skipped, index.candidates() as u64);
+        assert_eq!(
+            stats.pruned_total() + stats.dp_full,
+            stats.candidates,
+            "k=0 must still account every candidate"
+        );
+        // the caller-supplied-threshold entry point upholds it too
+        let mut heap = BoundedCostHeap::new(1);
+        let (hits, stats) = search_range_with(
+            &index,
+            &[1.0, 2.0],
+            Dist::Sq,
+            0,
+            CascadeOpts::default(),
+            0..index.candidates(),
+            &mut heap,
+        );
+        assert!(hits.is_empty());
+        assert_eq!(stats.skipped, index.candidates() as u64);
+        assert_eq!(stats.pruned_total() + stats.dp_full, stats.candidates);
     }
 
     #[test]

@@ -1,15 +1,22 @@
 //! Streaming min/max envelopes (Lemire 2009) — the O(n) substrate for the
 //! lower-bound cascade.
 //!
-//! Two shapes are needed:
+//! Three shapes are needed:
 //! * [`sliding_min_max`] — min/max over every length-`w` window of a
-//!   series (one output per window start).  The reference index uses this
-//!   to precompute per-candidate-window value ranges.
+//!   series (one output per window start).  The batch-built
+//!   [`super::index::ReferenceIndex`] uses this to precompute
+//!   per-candidate-window value ranges in one sweep.
+//! * [`StreamingExtrema`] — the same computation in incremental form:
+//!   push one sample, get the just-completed window's `(lo, hi)` back in
+//!   O(1) amortized.  The append-only
+//!   [`super::streaming::StreamingIndex`] is built on it; its outputs
+//!   are bit-identical to [`sliding_min_max`] over the same prefix.
 //! * [`sakoe_chiba_envelope`] — the classic UCR-suite envelope: per
-//!   position `i`, min/max over `[i-band, i+band]` (clipped).  Kept for
-//!   banded LB variants (GPU-side LB is a ROADMAP open item).
+//!   position `i`, min/max over `[i-band, i+band]` (clipped).  Consumed
+//!   by the banded-LB experiments and staged for the GPU-side LB kernel
+//!   (a ROADMAP open item) — not GPU-only, despite its history.
 //!
-//! Both run one pass with monotonic deques: each index enters and leaves
+//! All run one pass with monotonic deques: each index enters and leaves
 //! each deque at most once, so the cost is O(n) regardless of `w`/`band`.
 
 use std::collections::VecDeque;
@@ -54,6 +61,83 @@ pub fn sliding_min_max(x: &[f32], w: usize) -> (Vec<f32>, Vec<f32>) {
         }
     }
     (lo, hi)
+}
+
+/// Incremental form of [`sliding_min_max`]: one sample in, the newly
+/// completed window's extrema out.
+///
+/// The monotonic deques are already online — the batch function only
+/// ever looks at a suffix of what it has seen — so the streaming form
+/// keeps exactly the deque state plus a sample counter, no buffered
+/// history.  Memory is O(window) worst case (the deques), and each
+/// sample enters and leaves each deque at most once, so
+/// [`StreamingExtrema::push`] is O(1) amortized.
+///
+/// **Bit-identity contract:** feeding any series through `push` one
+/// sample at a time emits, in order, exactly the `(lo[s], hi[s])` pairs
+/// `sliding_min_max(&x[..len], w)` would produce for every prefix —
+/// same comparison predicates, same tie handling, same `±0.0`
+/// behavior.  `tests/prop_streaming.rs` enforces this over randomized
+/// append schedules.
+#[derive(Clone, Debug)]
+pub struct StreamingExtrema {
+    window: usize,
+    /// `(index, value)` pairs; values strictly increasing front to back.
+    min_q: VecDeque<(usize, f32)>,
+    /// `(index, value)` pairs; values strictly decreasing front to back.
+    max_q: VecDeque<(usize, f32)>,
+    /// Samples pushed so far.
+    len: usize,
+}
+
+impl StreamingExtrema {
+    /// Panics if `window == 0`.
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 1, "window must be >= 1");
+        Self { window, min_q: VecDeque::new(), max_q: VecDeque::new(), len: 0 }
+    }
+
+    /// Push one sample.  Once at least `window` samples have been seen,
+    /// returns `(lo, hi)` of the just-completed window starting at
+    /// `len() - window` — the next output `sliding_min_max` would emit.
+    pub fn push(&mut self, v: f32) -> Option<(f32, f32)> {
+        let j = self.len;
+        while self.min_q.back().is_some_and(|&(_, b)| b >= v) {
+            self.min_q.pop_back();
+        }
+        self.min_q.push_back((j, v));
+        while self.max_q.back().is_some_and(|&(_, b)| b <= v) {
+            self.max_q.pop_back();
+        }
+        self.max_q.push_back((j, v));
+        self.len += 1;
+        if self.len < self.window {
+            return None;
+        }
+        // retire indices that fell out of the window [s, s+w)
+        let s = self.len - self.window;
+        while self.min_q.front().is_some_and(|&(f, _)| f < s) {
+            self.min_q.pop_front();
+        }
+        while self.max_q.front().is_some_and(|&(f, _)| f < s) {
+            self.max_q.pop_front();
+        }
+        Some((self.min_q.front().unwrap().1, self.max_q.front().unwrap().1))
+    }
+
+    /// Samples pushed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The window length this tracker emits extrema for.
+    pub fn window(&self) -> usize {
+        self.window
+    }
 }
 
 /// Sakoe-Chiba envelope: `lo[i] = min(x[i-band ..= i+band])` (clipped to
@@ -147,6 +231,54 @@ mod tests {
     #[should_panic(expected = "window")]
     fn oversized_window_panics() {
         sliding_min_max(&[1.0, 2.0], 3);
+    }
+
+    #[test]
+    fn streaming_extrema_matches_batch_on_every_prefix() {
+        let mut g = Xoshiro256::new(64);
+        for n in [1usize, 2, 7, 33, 128] {
+            let x = g.normal_vec_f32(n);
+            for w in [1usize, 2, 5, n] {
+                if w > n {
+                    continue;
+                }
+                let mut ext = StreamingExtrema::new(w);
+                let mut lo = Vec::new();
+                let mut hi = Vec::new();
+                for (i, &v) in x.iter().enumerate() {
+                    if let Some((l, h)) = ext.push(v) {
+                        lo.push(l);
+                        hi.push(h);
+                    }
+                    assert_eq!(ext.len(), i + 1);
+                    // every prefix long enough to have windows agrees
+                    if i + 1 >= w {
+                        let (blo, bhi) = sliding_min_max(&x[..i + 1], w);
+                        assert_eq!(lo, blo, "n={n} w={w} prefix={}", i + 1);
+                        assert_eq!(hi, bhi, "n={n} w={w} prefix={}", i + 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_extrema_emits_nothing_before_first_window() {
+        let mut ext = StreamingExtrema::new(4);
+        assert!(ext.is_empty());
+        assert_eq!(ext.push(1.0), None);
+        assert_eq!(ext.push(2.0), None);
+        assert_eq!(ext.push(0.5), None);
+        assert_eq!(ext.push(3.0), Some((0.5, 3.0)));
+        assert_eq!(ext.push(-1.0), Some((-1.0, 3.0)));
+        assert_eq!(ext.len(), 5);
+        assert_eq!(ext.window(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "window")]
+    fn streaming_extrema_zero_window_panics() {
+        StreamingExtrema::new(0);
     }
 
     #[test]

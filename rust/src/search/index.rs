@@ -10,6 +10,14 @@
 //! runs its own sound prune threshold — see `topk` docs — so merged
 //! results are still exact).  Later PRs can place shards on different
 //! workers.
+//!
+//! [`CandidateIndex`] is the seam the cascade and the sharded executor
+//! actually consume: everything they need from an index is "how many
+//! candidates, and each one's start / slice / envelope".  Two
+//! implementations exist — this batch-built index and the append-only
+//! [`super::streaming::StreamingIndex`] — and because both feed the same
+//! generic cascade, streaming searches inherit the engine's bit-identity
+//! contract for free.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -17,6 +25,61 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::envelope::sliding_min_max;
+
+/// The candidate-window surface the cascade ([`super::cascade`]) and the
+/// sharded executor ([`super::sharded`]) consume.
+///
+/// Contract: candidates are numbered `0..candidates()`; candidate `t`
+/// covers `reference[start(t) .. start(t) + window()]`, `window_slice`
+/// returns exactly that slice, and `envelope(t)` is its `(min, max)` —
+/// bit-identical to folding `f32::min`/`f32::max` over the slice.
+/// Implementations must be cheap per call (the cascade calls these in
+/// its hot loop) and immutable for the duration of a search.
+pub trait CandidateIndex {
+    /// Number of candidate windows.
+    fn candidates(&self) -> usize;
+
+    /// Reference start position of candidate `t`.
+    fn start(&self, t: usize) -> usize;
+
+    /// The candidate window itself (a slice of the normalized reference).
+    fn window_slice(&self, t: usize) -> &[f32];
+
+    /// `(min, max)` of candidate `t`'s window.
+    fn envelope(&self, t: usize) -> (f32, f32);
+
+    /// Candidate window length.
+    fn window(&self) -> usize;
+
+    /// Start-to-start distance between consecutive candidates.
+    fn stride(&self) -> usize;
+
+    /// Split the candidate space into up to `n_shards` contiguous ranges
+    /// of near-equal size (empty ranges are dropped).
+    fn shard_ranges(&self, n_shards: usize) -> Vec<Range<usize>> {
+        shard_ranges(self.candidates(), n_shards)
+    }
+}
+
+/// Split `0..candidates` into up to `n_shards` contiguous ranges of
+/// near-equal size (empty ranges are dropped) — the partition every
+/// [`CandidateIndex`] shares.
+pub fn shard_ranges(candidates: usize, n_shards: usize) -> Vec<Range<usize>> {
+    let n = candidates;
+    let shards = n_shards.max(1).min(n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut at = 0usize;
+    for i in 0..shards {
+        let len = base + usize::from(i < extra);
+        if len > 0 {
+            out.push(at..at + len);
+        }
+        at += len;
+    }
+    out
+}
 
 /// Envelope index over one reference series.
 #[derive(Clone, Debug)]
@@ -92,25 +155,38 @@ impl ReferenceIndex {
     /// Split the candidate space into up to `n_shards` contiguous ranges
     /// of near-equal size (empty ranges are dropped).
     pub fn shard_ranges(&self, n_shards: usize) -> Vec<Range<usize>> {
-        let n = self.candidates();
-        let shards = n_shards.max(1).min(n.max(1));
-        let base = n / shards;
-        let extra = n % shards;
-        let mut out = Vec::with_capacity(shards);
-        let mut at = 0usize;
-        for i in 0..shards {
-            let len = base + usize::from(i < extra);
-            if len > 0 {
-                out.push(at..at + len);
-            }
-            at += len;
-        }
-        out
+        shard_ranges(self.candidates(), n_shards)
     }
 
     /// Index memory footprint (envelopes only; the reference is shared).
     pub fn index_bytes(&self) -> usize {
         (self.win_lo.len() + self.win_hi.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+impl CandidateIndex for ReferenceIndex {
+    fn candidates(&self) -> usize {
+        ReferenceIndex::candidates(self)
+    }
+
+    fn start(&self, t: usize) -> usize {
+        ReferenceIndex::start(self, t)
+    }
+
+    fn window_slice(&self, t: usize) -> &[f32] {
+        ReferenceIndex::window_slice(self, t)
+    }
+
+    fn envelope(&self, t: usize) -> (f32, f32) {
+        ReferenceIndex::envelope(self, t)
+    }
+
+    fn window(&self) -> usize {
+        ReferenceIndex::window(self)
+    }
+
+    fn stride(&self) -> usize {
+        ReferenceIndex::stride(self)
     }
 }
 

@@ -8,7 +8,9 @@
 //! lower bounds prune the vast majority of candidate windows before the
 //! expensive DP runs.
 //!
-//! * [`envelope`]     — streaming (Lemire) min/max envelopes
+//! * [`envelope`]     — streaming (Lemire) min/max envelopes, batch
+//!                      ([`envelope::sliding_min_max`]) and incremental
+//!                      ([`envelope::StreamingExtrema`]) forms
 //! * [`lower_bounds`] — LB_Kim / LB_Keogh with early abandoning
 //! * [`cascade`]      — the LB_Kim → LB_Keogh → early-abandon-DP pipeline
 //!                      with per-stage prune counters; DP survivors are
@@ -17,7 +19,12 @@
 //!                      or lane-batched lockstep, all bit-identical
 //! * [`topk`]         — bounded-heap thresholding + trivial-match-excluded
 //!                      greedy selection (with the losslessness proof)
-//! * [`index`]        — the prebuilt, shardable reference index
+//! * [`index`]        — the prebuilt, shardable reference index, and the
+//!                      [`index::CandidateIndex`] seam the cascade and
+//!                      executor consume (any index implementation runs
+//!                      the identical search)
+//! * [`streaming`]    — the append-only index + delta-search engine for
+//!                      growing (read-until style) references
 //! * [`sharded`]      — the parallel executor: shard ranges on a worker
 //!                      pool with one shared atomic prune threshold
 //! * [`SearchEngine`] — the facade the coordinator/CLI/examples use
@@ -26,13 +33,15 @@
 //! candidate window — pruning is an optimization, never an approximation.
 //! Inputs are assumed pre-normalized (the service z-normalizes the
 //! reference once at startup and each query on submission, exactly like
-//! the align path).
+//! the align path; appended stream samples are mapped into the frozen
+//! startup frame — see the [`streaming`] module docs).
 
 pub mod cascade;
 pub mod envelope;
 pub mod index;
 pub mod lower_bounds;
 pub mod sharded;
+pub mod streaming;
 pub mod topk;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -41,8 +50,11 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 pub use cascade::{sdtw_window_abandoning, CascadeOpts, CascadeStats};
-pub use index::ReferenceIndex;
-pub use sharded::{search_sharded, ShardReport, ShardedOutcome, SharedThreshold};
+pub use index::{CandidateIndex, ReferenceIndex};
+pub use sharded::{
+    search_sharded, search_sharded_index, ShardReport, ShardedOutcome, SharedThreshold,
+};
+pub use streaming::{DeltaOutcome, StreamingEngine, StreamingIndex};
 pub use topk::{select_topk, Hit};
 
 use crate::dtw::Dist;

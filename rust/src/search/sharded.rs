@@ -57,7 +57,7 @@ use anyhow::Result;
 use crate::coordinator::queue::BoundedQueue;
 
 use super::cascade::{self, CascadeOpts, CascadeStats, TauSink};
-use super::index::ReferenceIndex;
+use super::index::CandidateIndex;
 use super::topk::{prune_heap_cap, select_topk, BoundedCostHeap, Hit};
 use super::{SearchEngine, SearchOutcome};
 
@@ -159,10 +159,15 @@ impl ShardedOutcome {
     /// (1.0 = perfectly even).  The number to watch when shard count or
     /// placement changes — pruning makes shard cost data-dependent, so
     /// equal candidate counts do not imply equal work.
-    pub fn imbalance(&self) -> f64 {
+    ///
+    /// Returns `None` when there is no signal: no shards ran, or every
+    /// shard's wall time rounded to zero (a fast search says nothing
+    /// about balance — reporting 1.0 there would let a metric read
+    /// "perfectly even" on exactly the searches it cannot measure).
+    pub fn imbalance(&self) -> Option<f64> {
         let n = self.shards.len();
         if n == 0 {
-            return 1.0;
+            return None;
         }
         let sum: f64 = self.shards.iter().map(|s| s.elapsed_ms).sum();
         let max = self
@@ -171,9 +176,9 @@ impl ShardedOutcome {
             .map(|s| s.elapsed_ms)
             .fold(0.0f64, f64::max);
         if sum <= 0.0 {
-            1.0
+            None
         } else {
-            max * n as f64 / sum
+            Some(max * n as f64 / sum)
         }
     }
 
@@ -195,18 +200,49 @@ pub fn search_sharded(
     n_shards: usize,
     parallelism: usize,
 ) -> Result<ShardedOutcome> {
+    search_sharded_index(
+        engine.index(),
+        engine.dist(),
+        query,
+        k,
+        exclusion,
+        opts,
+        n_shards,
+        parallelism,
+    )
+}
+
+/// [`search_sharded`] over any [`CandidateIndex`] — the seam that lets
+/// the append-only [`super::streaming::StreamingIndex`] fan out across
+/// the same worker pool, with the same bit-identity argument (nothing in
+/// the proof depends on how the index was built).
+#[allow(clippy::too_many_arguments)]
+pub fn search_sharded_index<I: CandidateIndex + Sync + ?Sized>(
+    index: &I,
+    dist: crate::dtw::Dist,
+    query: &[f32],
+    k: usize,
+    exclusion: usize,
+    opts: CascadeOpts,
+    n_shards: usize,
+    parallelism: usize,
+) -> Result<ShardedOutcome> {
     anyhow::ensure!(!query.is_empty(), "empty query");
-    let index: &ReferenceIndex = engine.index();
-    let dist = engine.dist();
     let ranges = index.shard_ranges(n_shards.max(1));
     if k == 0 {
+        // no stage runs, but every shard's range is still accounted
+        // (`skipped`) so per-shard and merged counters partition it
         let shards = ranges
             .iter()
             .enumerate()
             .map(|(i, r)| ShardReport {
                 shard: i,
                 range: r.clone(),
-                stats: CascadeStats { candidates: r.len() as u64, ..Default::default() },
+                stats: CascadeStats {
+                    candidates: r.len() as u64,
+                    skipped: r.len() as u64,
+                    ..Default::default()
+                },
                 elapsed_ms: 0.0,
             })
             .collect::<Vec<_>>();
@@ -376,7 +412,44 @@ mod tests {
             merged.merge(&s.stats);
         }
         assert_eq!(merged, out.stats);
-        assert!(out.imbalance() >= 1.0);
+        if let Some(r) = out.imbalance() {
+            assert!(r >= 1.0);
+        }
+    }
+
+    #[test]
+    fn imbalance_is_none_without_timing_signal() {
+        let report = |shard: usize, elapsed_ms: f64| ShardReport {
+            shard,
+            range: shard * 10..(shard + 1) * 10,
+            stats: CascadeStats::default(),
+            elapsed_ms,
+        };
+        // all shard timings rounded to zero: no signal, not "perfectly even"
+        let degenerate = ShardedOutcome {
+            hits: Vec::new(),
+            stats: CascadeStats::default(),
+            shards: vec![report(0, 0.0), report(1, 0.0)],
+            tau_tightenings: 0,
+        };
+        assert_eq!(degenerate.imbalance(), None);
+        // no shards at all
+        let empty = ShardedOutcome {
+            hits: Vec::new(),
+            stats: CascadeStats::default(),
+            shards: Vec::new(),
+            tau_tightenings: 0,
+        };
+        assert_eq!(empty.imbalance(), None);
+        // measurable timings keep the documented >= 1.0 semantics
+        let measured = ShardedOutcome {
+            hits: Vec::new(),
+            stats: CascadeStats::default(),
+            shards: vec![report(0, 1.0), report(1, 3.0)],
+            tau_tightenings: 0,
+        };
+        let r = measured.imbalance().expect("timings are meaningful");
+        assert!((r - 1.5).abs() < 1e-12, "3ms max over 2ms mean");
     }
 
     #[test]
@@ -404,6 +477,22 @@ mod tests {
         assert!(out.hits.is_empty());
         assert_eq!(out.stats.candidates, engine.index().candidates() as u64);
         assert_eq!(out.stats.dp_full, 0);
+        // the partition invariant must hold per shard and merged, even
+        // though no stage ran (the skipped counter accounts the range)
+        assert_eq!(
+            out.stats.pruned_total() + out.stats.dp_full,
+            out.stats.candidates
+        );
+        assert_eq!(out.stats.skipped, out.stats.candidates);
+        for s in &out.shards {
+            assert_eq!(s.stats.candidates, s.range.len() as u64);
+            assert_eq!(
+                s.stats.pruned_total() + s.stats.dp_full,
+                s.stats.candidates,
+                "shard {} counters must partition its range at k=0",
+                s.shard
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,624 @@
+//! Append-only streaming search: the read-until workload shape.
+//!
+//! The paper fixes its benchmark to closed batches, but the scenario
+//! that motivates sDTW serving — nanopore read-until — is streaming:
+//! the reference/squiggle grows while queries keep arriving.  With the
+//! batch index, serving a growing stream costs a full
+//! `ReferenceIndex::build` sweep per append (O(n) each, O(n²) over the
+//! stream).  This module makes appends O(1) amortized and repeat
+//! searches proportional to the *delta* since the last search:
+//!
+//! ```text
+//!   append(samples) ──► StreamingExtrema (incremental Lemire deques)
+//!        │                    │ one (lo, hi) per completed window
+//!        ▼                    ▼
+//!   reference grows      win_lo/win_hi grow  (existing entries never
+//!                                             recomputed or moved)
+//!
+//!   search_delta(query) ──► cascade over [watermark .. candidates)
+//!        │                   with τ seeded from the cached exact costs
+//!        ▼
+//!   select_topk(cached hits ∪ delta hits) ── bit-identical to a full
+//!                                            rebuild + search
+//! ```
+//!
+//! [`StreamingIndex`] implements [`CandidateIndex`], so the serial
+//! cascade and the sharded executor run over it unchanged — streaming
+//! searches inherit the engine's bit-identity contract for free.
+//! `tests/prop_streaming.rs` proves the stronger statement: after *any*
+//! append schedule, the index is bit-identical (envelopes, slices,
+//! candidate count) to `ReferenceIndex::build` on the final prefix, and
+//! every search path over it (serial/sharded, any kernel, delta or
+//! full) returns the same hits and partition-consistent counters.
+//!
+//! # Why the delta search is exact
+//!
+//! [`StreamingEngine::search_delta`] caches, per `(query, k, exclusion,
+//! opts)`, the exact costs that can still matter (everything at or
+//! below the cap-th smallest cost seen — ~`prune_heap_cap` hits) and
+//! the candidate count it has cascaded up to (the *watermark*).  On a
+//! repeat search it cascades only `[watermark, candidates)`, seeding
+//! the prune threshold with the cached costs, then selects over the
+//! union.  Soundness is the `topk` heap-cap lemma applied to the grown
+//! candidate set:
+//!
+//! 1. The cap-th smallest exact cost over **any subset** of the current
+//!    candidates is ≥ τ\*, the K-th greedy pick's cost over *all* of
+//!    them.  The cached costs are such a subset (they were exact costs
+//!    of real candidates, and appends never change an existing
+//!    candidate), so the seeded threshold is admissible from the first
+//!    delta candidate on.
+//! 2. A true top-K winner in the old range had cost ≤ τ\*(old) at the
+//!    time it was searched, and τ\*(old) ≥ τ\*(now) (adding candidates
+//!    can only lower the K-th pick), so it completed its DP then and is
+//!    in the cache; a winner in the delta range completes now by the
+//!    usual argument.  The union is therefore a superset of the true
+//!    top-K and greedy selection over it is exact.
+//!
+//! # Normalization policy
+//!
+//! Like the rest of the `search` layer, this module consumes
+//! **pre-normalized** samples.  What the caller must decide is *which
+//! stats* normalize an append — and the one unsound choice is
+//! re-normalizing the whole stream, which silently shifts every
+//! already-indexed candidate.  The service freezes the z-normalization
+//! stats at startup and maps appends into that frame
+//! (`SdtwService::append_blocking`); the offline CLI (`sdtw stream`)
+//! has the whole stream up front and normalizes it once.  Both keep the
+//! invariant that an append never perturbs an existing candidate.
+
+use anyhow::Result;
+
+use crate::dtw::Dist;
+
+use super::cascade::{self, CascadeOpts};
+use super::envelope::StreamingExtrema;
+use super::index::CandidateIndex;
+use super::sharded::{search_sharded_index, ShardedOutcome};
+use super::topk::{prune_heap_cap, select_topk, BoundedCostHeap, Hit};
+use super::SearchOutcome;
+
+/// Envelope index over an append-only reference stream.
+///
+/// Bit-identical at every instant to `ReferenceIndex::build` over the
+/// same prefix, but built incrementally: `append` is O(1) amortized per
+/// sample and never touches existing candidates.
+#[derive(Clone, Debug)]
+pub struct StreamingIndex {
+    /// The growing (pre-normalized) reference stream.
+    reference: Vec<f32>,
+    window: usize,
+    stride: usize,
+    /// Per-candidate window minimum (candidate t covers start t*stride).
+    win_lo: Vec<f32>,
+    /// Per-candidate window maximum.
+    win_hi: Vec<f32>,
+    extrema: StreamingExtrema,
+}
+
+impl StreamingIndex {
+    /// Start a streaming index over an initial (pre-normalized) prefix.
+    /// Mirrors `ReferenceIndex::build`'s validation: the prefix must
+    /// already hold at least one full window.
+    pub fn new(initial: &[f32], window: usize, stride: usize) -> Result<Self> {
+        anyhow::ensure!(window >= 1, "window must be >= 1");
+        anyhow::ensure!(stride >= 1, "stride must be >= 1");
+        anyhow::ensure!(
+            window <= initial.len(),
+            "window {} > initial reference length {}",
+            window,
+            initial.len()
+        );
+        let mut ix = Self {
+            reference: Vec::with_capacity(initial.len()),
+            window,
+            stride,
+            win_lo: Vec::new(),
+            win_hi: Vec::new(),
+            extrema: StreamingExtrema::new(window),
+        };
+        ix.append(initial);
+        Ok(ix)
+    }
+
+    /// Append pre-normalized samples, extending the candidate set in
+    /// place.  Existing candidates (starts, slices, envelopes) are never
+    /// recomputed — only new ones are emitted.
+    pub fn append(&mut self, samples: &[f32]) {
+        self.reference.reserve(samples.len());
+        for &v in samples {
+            self.reference.push(v);
+            if let Some((lo, hi)) = self.extrema.push(v) {
+                // the just-completed window starts at len - window; it
+                // is a candidate when the start lands on the stride grid
+                let s = self.extrema.len() - self.window;
+                if s % self.stride == 0 {
+                    self.win_lo.push(lo);
+                    self.win_hi.push(hi);
+                }
+            }
+        }
+    }
+
+    /// Number of candidate windows.
+    pub fn candidates(&self) -> usize {
+        self.win_lo.len()
+    }
+
+    /// Reference start position of candidate `t`.
+    #[inline]
+    pub fn start(&self, t: usize) -> usize {
+        t * self.stride
+    }
+
+    /// The candidate window itself (a slice of the normalized stream).
+    #[inline]
+    pub fn window_slice(&self, t: usize) -> &[f32] {
+        let s = self.start(t);
+        &self.reference[s..s + self.window]
+    }
+
+    /// `(min, max)` of candidate `t`'s window.
+    #[inline]
+    pub fn envelope(&self, t: usize) -> (f32, f32) {
+        (self.win_lo[t], self.win_hi[t])
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Samples ingested so far.
+    pub fn len(&self) -> usize {
+        self.reference.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reference.is_empty()
+    }
+
+    /// The normalized stream ingested so far.
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+
+    /// Index memory footprint (envelopes only; the stream is extra).
+    pub fn index_bytes(&self) -> usize {
+        (self.win_lo.len() + self.win_hi.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+impl CandidateIndex for StreamingIndex {
+    fn candidates(&self) -> usize {
+        StreamingIndex::candidates(self)
+    }
+
+    fn start(&self, t: usize) -> usize {
+        StreamingIndex::start(self, t)
+    }
+
+    fn window_slice(&self, t: usize) -> &[f32] {
+        StreamingIndex::window_slice(self, t)
+    }
+
+    fn envelope(&self, t: usize) -> (f32, f32) {
+        StreamingIndex::envelope(self, t)
+    }
+
+    fn window(&self) -> usize {
+        StreamingIndex::window(self)
+    }
+
+    fn stride(&self) -> usize {
+        StreamingIndex::stride(self)
+    }
+}
+
+/// Per-(query, params) delta-search state: the exact costs that can
+/// still appear in (or seed pruning for) a future top-K — a superset of
+/// the top-K over the searched prefix, bounded to ~`prune_heap_cap`
+/// entries after each search — plus the candidate count already
+/// cascaded.
+#[derive(Clone, Debug)]
+struct DeltaCache {
+    query: Vec<f32>,
+    k: usize,
+    exclusion: usize,
+    opts: CascadeOpts,
+    hits: Vec<Hit>,
+    watermark: usize,
+}
+
+/// One delta search's outcome: the (exact) picks plus what the
+/// incremental path actually did.
+#[derive(Clone, Debug)]
+pub struct DeltaOutcome {
+    /// Top-K picks over *all* current candidates (bit-identical to a
+    /// full rebuild + search) and the cascade counters of the work this
+    /// pass performed.
+    pub outcome: SearchOutcome,
+    /// Candidates the cascade actually examined in this pass (the delta
+    /// on a warm cache, everything on a cache miss — and zero when
+    /// `k == 0` asks for nothing, where the whole range lands in the
+    /// stats' `skipped` counter instead).
+    pub scanned: u64,
+    /// Candidates skipped thanks to the cached prior pass.
+    pub skipped: u64,
+    /// Whether the cached prior pass was reused (false = cold/full).
+    pub delta: bool,
+}
+
+/// The streaming search facade: an append-only index, the distance
+/// measure, and the delta-search cache.
+#[derive(Clone, Debug)]
+pub struct StreamingEngine {
+    index: StreamingIndex,
+    dist: Dist,
+    cache: Option<DeltaCache>,
+}
+
+impl StreamingEngine {
+    /// Build an engine over an initial (pre-normalized) prefix.
+    pub fn new(initial: &[f32], window: usize, stride: usize, dist: Dist) -> Result<Self> {
+        Ok(Self { index: StreamingIndex::new(initial, window, stride)?, dist, cache: None })
+    }
+
+    pub fn index(&self) -> &StreamingIndex {
+        &self.index
+    }
+
+    pub fn dist(&self) -> Dist {
+        self.dist
+    }
+
+    /// Append pre-normalized samples.  The delta cache stays valid:
+    /// appends only add candidates past every watermark.
+    pub fn append(&mut self, samples: &[f32]) {
+        self.index.append(samples);
+    }
+
+    /// Hits currently held by the delta cache (telemetry; bounded to
+    /// roughly the prune-heap cap once enough exact costs exist).
+    pub fn cached_hits(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.hits.len())
+    }
+
+    /// Full (stateless) search over every current candidate — the
+    /// streaming twin of `SearchEngine::search_opts` with one shard.
+    pub fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        opts: CascadeOpts,
+    ) -> Result<SearchOutcome> {
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        let (hits, stats) = cascade::search_range(
+            &self.index,
+            query,
+            self.dist,
+            k,
+            exclusion,
+            opts,
+            0..self.index.candidates(),
+        );
+        Ok(SearchOutcome { hits: select_topk(&hits, k, exclusion), stats })
+    }
+
+    /// Sharded parallel search over every current candidate — the
+    /// streaming twin of `SearchEngine::search_sharded`.
+    pub fn search_sharded(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        opts: CascadeOpts,
+        n_shards: usize,
+        parallelism: usize,
+    ) -> Result<ShardedOutcome> {
+        search_sharded_index(
+            &self.index,
+            self.dist,
+            query,
+            k,
+            exclusion,
+            opts,
+            n_shards,
+            parallelism,
+        )
+    }
+
+    /// Incremental search: cascade only the candidates appended since
+    /// the last `search_delta` with the same `(query, k, exclusion,
+    /// opts)`, seed the prune threshold from the cached exact costs, and
+    /// select over the union.  Returns picks bit-identical to a full
+    /// rebuild + search (module docs carry the proof); a changed query
+    /// or parameter set simply falls back to a full pass and re-primes
+    /// the cache.
+    pub fn search_delta(
+        &mut self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        opts: CascadeOpts,
+    ) -> Result<DeltaOutcome> {
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        let total = self.index.candidates();
+        let reuse = self.cache.as_ref().is_some_and(|c| {
+            c.query == query && c.k == k && c.exclusion == exclusion && c.opts == opts
+        });
+        let (from, mut all_hits) = if reuse {
+            let c = self.cache.take().expect("reuse checked");
+            (c.watermark.min(total), c.hits)
+        } else {
+            self.cache = None;
+            (0, Vec::new())
+        };
+
+        // cap over the TOTAL candidate count (the union the selection
+        // runs over), seeded with the cached subset's exact costs —
+        // admissible by the heap-cap subset lemma.  The lower clamp only
+        // matters for k = 0 (cap formula yields 0, the heap type requires
+        // >= 1, and the cascade returns before reading τ anyway).
+        let cap = prune_heap_cap(k, exclusion, self.index.stride())
+            .min(total.max(1))
+            .max(1);
+        let mut heap = BoundedCostHeap::new(cap);
+        for h in &all_hits {
+            heap.push(h.cost);
+        }
+        let (new_hits, stats) = cascade::search_range_with(
+            &self.index,
+            query,
+            self.dist,
+            k,
+            opts,
+            from..total,
+            &mut heap,
+        );
+        all_hits.extend_from_slice(&new_hits);
+        let picks = select_topk(&all_hits, k, exclusion);
+        // bound the cache: once the heap is full its threshold is the
+        // cap-th smallest exact cost, which is ≥ τ* now and forever (τ*
+        // only decreases as candidates are added), so a hit above it can
+        // never be a greedy pick of any future union — dropping it
+        // cannot change a future selection.  This keeps the cache at
+        // ~cap hits (plus threshold ties — overlapping windows sharing
+        // one best subsequence tie bit-exactly) instead of every
+        // survivor ever computed.
+        let tau = heap.threshold();
+        if tau.is_finite() {
+            all_hits.retain(|h| h.cost <= tau);
+        }
+        self.cache = Some(DeltaCache {
+            query: query.to_vec(),
+            k,
+            exclusion,
+            opts,
+            hits: all_hits,
+            watermark: total,
+        });
+        Ok(DeltaOutcome {
+            // "examined" = the pass's range minus anything the k == 0
+            // early-out accounted as skipped-without-looking
+            scanned: stats.candidates - stats.skipped,
+            outcome: SearchOutcome { hits: picks, stats },
+            skipped: from as u64,
+            delta: reuse,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::search::index::ReferenceIndex;
+    use crate::search::SearchEngine;
+    use crate::util::rng::Xoshiro256;
+
+    fn assert_hits_identical(a: &[Hit], b: &[Hit]) {
+        assert_eq!(a.len(), b.len(), "pick counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "cost not bit-identical");
+        }
+    }
+
+    #[test]
+    fn index_matches_batch_build_after_appends() {
+        let mut g = Xoshiro256::new(81);
+        for (window, stride) in [(8usize, 1usize), (16, 3), (5, 2)] {
+            let x = g.normal_vec_f32(200);
+            let mut ix = StreamingIndex::new(&x[..window], window, stride).unwrap();
+            let mut at = window;
+            while at < x.len() {
+                let chunk = (1 + g.below(17) as usize).min(x.len() - at);
+                ix.append(&x[at..at + chunk]);
+                at += chunk;
+                let batch =
+                    ReferenceIndex::build(Arc::new(x[..at].to_vec()), window, stride).unwrap();
+                assert_eq!(ix.candidates(), batch.candidates(), "w={window} s={stride}");
+                for t in 0..ix.candidates() {
+                    assert_eq!(ix.start(t), batch.start(t));
+                    assert_eq!(ix.window_slice(t), batch.window_slice(t));
+                    let (a, b) = (ix.envelope(t), batch.envelope(t));
+                    assert_eq!(a.0.to_bits(), b.0.to_bits(), "lo t={t}");
+                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "hi t={t}");
+                }
+            }
+            assert_eq!(ix.len(), x.len());
+        }
+    }
+
+    #[test]
+    fn appends_never_perturb_existing_candidates() {
+        let mut g = Xoshiro256::new(82);
+        let x = g.normal_vec_f32(150);
+        let mut ix = StreamingIndex::new(&x[..60], 12, 1).unwrap();
+        let before: Vec<(f32, f32)> = (0..ix.candidates()).map(|t| ix.envelope(t)).collect();
+        let n_before = ix.candidates();
+        ix.append(&x[60..]);
+        assert!(ix.candidates() > n_before);
+        for (t, want) in before.iter().enumerate() {
+            let got = ix.envelope(t);
+            assert_eq!(got.0.to_bits(), want.0.to_bits());
+            assert_eq!(got.1.to_bits(), want.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn full_search_matches_batch_engine() {
+        let mut g = Xoshiro256::new(83);
+        let x = g.normal_vec_f32(300);
+        let q = g.normal_vec_f32(10);
+        let mut se = StreamingEngine::new(&x[..100], 16, 1, Dist::Sq).unwrap();
+        se.append(&x[100..]);
+        let batch = SearchEngine::new(Arc::new(x), 16, 1, Dist::Sq).unwrap();
+        let want = batch.search(&q, 3, 8).unwrap();
+        let got = se.search(&q, 3, 8, CascadeOpts::default()).unwrap();
+        assert_hits_identical(&got.hits, &want.hits);
+        assert_eq!(got.stats, want.stats, "identical cascade, identical counters");
+    }
+
+    #[test]
+    fn delta_search_matches_full_search_across_appends() {
+        let mut g = Xoshiro256::new(84);
+        let x = g.normal_vec_f32(400);
+        let q = g.normal_vec_f32(12);
+        let mut se = StreamingEngine::new(&x[..80], 20, 1, Dist::Sq).unwrap();
+        let mut at = 80;
+        let mut first = true;
+        while at < x.len() {
+            let chunk = (37 + g.below(50) as usize).min(x.len() - at);
+            se.append(&x[at..at + chunk]);
+            at += chunk;
+            let d = se.search_delta(&q, 3, 10, CascadeOpts::default()).unwrap();
+            assert_eq!(d.delta, !first, "first pass is cold, later passes reuse");
+            first = false;
+            let batch = SearchEngine::new(Arc::new(x[..at].to_vec()), 20, 1, Dist::Sq)
+                .unwrap()
+                .search(&q, 3, 10)
+                .unwrap();
+            assert_hits_identical(&d.outcome.hits, &batch.hits);
+            // the delta pass only accounts the candidates it cascaded
+            assert_eq!(d.outcome.stats.candidates, d.scanned);
+            assert_eq!(
+                d.outcome.stats.pruned_total() + d.outcome.stats.dp_full,
+                d.outcome.stats.candidates
+            );
+            assert_eq!(d.scanned + d.skipped, se.index().candidates() as u64);
+        }
+    }
+
+    #[test]
+    fn delta_cache_invalidated_by_changed_query_or_params() {
+        let mut g = Xoshiro256::new(85);
+        let x = g.normal_vec_f32(200);
+        let q1 = g.normal_vec_f32(10);
+        let q2 = g.normal_vec_f32(10);
+        let mut se = StreamingEngine::new(&x, 16, 1, Dist::Sq).unwrap();
+        let d1 = se.search_delta(&q1, 2, 8, CascadeOpts::default()).unwrap();
+        assert!(!d1.delta);
+        // changed query: full pass
+        let d2 = se.search_delta(&q2, 2, 8, CascadeOpts::default()).unwrap();
+        assert!(!d2.delta);
+        assert_eq!(d2.skipped, 0);
+        // same query + params: pure delta (nothing appended → nothing scanned)
+        let d3 = se.search_delta(&q2, 2, 8, CascadeOpts::default()).unwrap();
+        assert!(d3.delta);
+        assert_eq!(d3.scanned, 0);
+        assert_hits_identical(&d3.outcome.hits, &d2.outcome.hits);
+        // changed k: full pass again
+        let d4 = se.search_delta(&q2, 3, 8, CascadeOpts::default()).unwrap();
+        assert!(!d4.delta);
+    }
+
+    #[test]
+    fn delta_cache_stays_bounded_across_appends() {
+        use crate::search::topk::prune_heap_cap;
+        let mut g = Xoshiro256::new(88);
+        let x = g.normal_vec_f32(2000);
+        let q = g.normal_vec_f32(10);
+        let (k, exclusion) = (3usize, 8usize);
+        let mut se = StreamingEngine::new(&x[..100], 16, 1, Dist::Sq).unwrap();
+        let mut at = 100;
+        while at < x.len() {
+            let end = (at + 150).min(x.len());
+            se.append(&x[at..end]);
+            at = end;
+            se.search_delta(&q, k, exclusion, CascadeOpts::default()).unwrap();
+        }
+        // the cache holds the costs that can still matter, not every
+        // survivor ever computed.  Ties at the threshold are retained
+        // and are *structural* here: with free endpoints, overlapping
+        // windows containing the same best subsequence share a
+        // bit-identical cost, so a tie group can span up to a window's
+        // worth of candidates — hence the window-sized slack on top of
+        // the heap cap.  The point is independence from stream length.
+        let cap = prune_heap_cap(k, exclusion, 1);
+        assert!(
+            se.cached_hits() <= cap + 4 * 16,
+            "cache grew to {} hits (cap {}, window 16)",
+            se.cached_hits(),
+            cap
+        );
+        assert!(
+            se.cached_hits() < se.index().candidates() / 4,
+            "cache should be far below the {} candidates",
+            se.index().candidates()
+        );
+        // and the bounded cache still reproduces the full rebuild
+        let d = se.search_delta(&q, k, exclusion, CascadeOpts::default()).unwrap();
+        let want = SearchEngine::new(Arc::new(x.clone()), 16, 1, Dist::Sq)
+            .unwrap()
+            .search(&q, k, exclusion)
+            .unwrap();
+        assert_hits_identical(&d.outcome.hits, &want.hits);
+    }
+
+    #[test]
+    fn streaming_sharded_matches_serial() {
+        let mut g = Xoshiro256::new(86);
+        let x = g.normal_vec_f32(500);
+        let q = g.normal_vec_f32(14);
+        let mut se = StreamingEngine::new(&x[..200], 24, 1, Dist::Sq).unwrap();
+        se.append(&x[200..]);
+        let serial = se.search(&q, 4, 12, CascadeOpts::default()).unwrap();
+        for shards in [2usize, 5, 16] {
+            let out = se
+                .search_sharded(&q, 4, 12, CascadeOpts::default(), shards, 2)
+                .unwrap();
+            assert_hits_identical(&out.hits, &serial.hits);
+            assert_eq!(out.stats.candidates, se.index().candidates() as u64);
+        }
+    }
+
+    #[test]
+    fn k_zero_delta_keeps_partition_invariant() {
+        let mut g = Xoshiro256::new(87);
+        let x = g.normal_vec_f32(120);
+        let q = g.normal_vec_f32(8);
+        let mut se = StreamingEngine::new(&x, 12, 1, Dist::Sq).unwrap();
+        let d = se.search_delta(&q, 0, 4, CascadeOpts::default()).unwrap();
+        assert!(d.outcome.hits.is_empty());
+        assert_eq!(d.scanned, 0, "k=0 examines nothing");
+        assert_eq!(d.outcome.stats.skipped, d.outcome.stats.candidates);
+        assert_eq!(
+            d.outcome.stats.pruned_total() + d.outcome.stats.dp_full,
+            d.outcome.stats.candidates
+        );
+    }
+
+    #[test]
+    fn initial_prefix_shorter_than_window_rejected() {
+        assert!(StreamingIndex::new(&[1.0, 2.0], 3, 1).is_err());
+        assert!(StreamingIndex::new(&[1.0, 2.0, 3.0], 3, 1).is_ok());
+    }
+}

@@ -6,7 +6,8 @@
 //! server batches across connections, so parallel clients is exactly the
 //! pattern that exercises dynamic batching.  Typed helpers mirror the
 //! protocol verbs ([`Client::align`], [`Client::search`],
-//! [`Client::metrics`], [`Client::info`], [`Client::ping`]); unknown
+//! [`Client::append`], [`Client::metrics`], [`Client::info`],
+//! [`Client::ping`]); unknown
 //! `ok:true` replies from a newer server surface as
 //! [`super::proto::Response::Unknown`] rather than errors, so old
 //! clients keep working across protocol growth (forward compatibility is
@@ -17,8 +18,8 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
-use super::proto::{MetricsFields, Request, Response, SearchFields};
-use crate::coordinator::{AlignOptions, SearchOptions};
+use super::proto::{AppendFields, MetricsFields, Request, Response, SearchFields};
+use crate::coordinator::{AlignOptions, AppendOptions, SearchOptions};
 
 /// One connection to an sDTW server.
 pub struct Client {
@@ -86,7 +87,9 @@ impl Client {
     }
 
     /// Top-K subsequence search; returns the hit list plus the server's
-    /// cascade telemetry.
+    /// cascade telemetry.  Set `options.stream` to search the streaming
+    /// session grown by [`Client::append`] instead of the startup
+    /// reference.
     pub fn search(
         &mut self,
         query: &[f32],
@@ -97,6 +100,21 @@ impl Client {
             Response::Search(s) => Ok(*s),
             Response::Error(e) => bail!("server error: {e}"),
             other => bail!("unexpected reply to search: {other:?}"),
+        }
+    }
+
+    /// Append raw samples to the server's streaming session (opened on
+    /// first use); returns the session state after ingestion.
+    pub fn append(
+        &mut self,
+        samples: &[f32],
+        options: AppendOptions,
+    ) -> Result<AppendFields> {
+        let req = Request::Append { samples: samples.to_vec(), options };
+        match self.roundtrip(&req)? {
+            Response::Append(a) => Ok(a),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to append: {other:?}"),
         }
     }
 }

@@ -5,7 +5,8 @@
 //!   {"op":"align","query":[...],"pruned":b,"quantized":b,"half":b}
 //!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,
 //!    "exclusion":96,"shards":4,"parallelism":4,
-//!    "kernel":"scalar|scan|lanes","lanes":8}
+//!    "kernel":"scalar|scan|lanes","lanes":8,"stream":b}
+//!   {"op":"append","samples":[...],"window":192,"stride":1}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
 //!
@@ -14,40 +15,90 @@
 //! preserved, re-encodable verbatim) instead of failing — older clients
 //! round-trip newer verbs and surface them as structured errors at the
 //! call site rather than tearing down the connection.
+//!
+//! Float fidelity: the engine's headline guarantee is bit-identity, so
+//! result costs must survive the wire bit-for-bit.  Finite values do —
+//! f32→f64 widening is exact and the encoder emits the shortest decimal
+//! that round-trips the f64 — and the lossy corners are handled
+//! explicitly: `-0.0` keeps its sign through the JSON layer, and
+//! non-finite costs (a pruned align's +inf "no match", an overflowed
+//! DP sum) travel as the strings `"inf"`/`"-inf"`/`"nan"` because JSON
+//! has no number form for them (the `wire_f32` codec below).  The one
+//! deliberate exception: a NaN cost decodes as the canonical NaN — the
+//! payload/sign bits are not preserved.  No engine path emits NaN costs
+//! (distances are squares/absolute values), so NaN-ness surviving is
+//! enough; widening the sentinel to carry the bit pattern would cost
+//! wire compatibility for a value that cannot occur.
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::{
-    AlignOptions, AlignResponse, MetricsSnapshot, SearchOptions, SearchResponse,
+    AlignOptions, AlignResponse, AppendOptions, AppendResponse, MetricsSnapshot, SearchOptions,
+    SearchResponse,
 };
 use crate::dtw::KernelKind;
 use crate::search::Hit;
 use crate::util::json::Json;
+
+/// Encode an `f32` result value for the wire, preserving bit-exactness.
+/// Finite values ride `Json::Num` (exact; see module docs); non-finite
+/// values have no JSON number form — `Json::Num` would lossily encode
+/// `null` — so they travel as sentinel strings.
+fn wire_f32(x: f32) -> Json {
+    if x.is_finite() {
+        Json::Num(x as f64)
+    } else if x.is_nan() {
+        Json::str("nan")
+    } else if x.is_sign_positive() {
+        Json::str("inf")
+    } else {
+        Json::str("-inf")
+    }
+}
+
+/// Decode a [`wire_f32`] value (number, or one of the non-finite
+/// sentinel strings).
+fn parse_wire_f32(v: &Json) -> Option<f32> {
+    match v {
+        Json::Str(s) => match s.as_str() {
+            "inf" => Some(f32::INFINITY),
+            "-inf" => Some(f32::NEG_INFINITY),
+            "nan" => Some(f32::NAN),
+            _ => None,
+        },
+        other => other.as_f64().map(|f| f as f32),
+    }
+}
 
 /// Parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Align { query: Vec<f32>, options: AlignOptions },
     Search { query: Vec<f32>, options: SearchOptions },
+    Append { samples: Vec<f32>, options: AppendOptions },
     Info,
     Metrics,
     Ping,
 }
 
-fn parse_query(v: &Json, op: &str) -> Result<Vec<f32>> {
+fn parse_floats(v: &Json, key: &str, op: &str) -> Result<Vec<f32>> {
     let arr = v
-        .get("query")
+        .get(key)
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow::anyhow!("{op} needs query array"))?;
-    let mut query = Vec::with_capacity(arr.len());
+        .ok_or_else(|| anyhow::anyhow!("{op} needs {key} array"))?;
+    let mut out = Vec::with_capacity(arr.len());
     for x in arr {
-        query.push(
+        out.push(
             x.as_f64()
-                .ok_or_else(|| anyhow::anyhow!("non-numeric query value"))?
+                .ok_or_else(|| anyhow::anyhow!("non-numeric {key} value"))?
                 as f32,
         );
     }
-    Ok(query)
+    Ok(out)
+}
+
+fn parse_query(v: &Json, op: &str) -> Result<Vec<f32>> {
+    parse_floats(v, "query", op)
 }
 
 fn parse_usize(v: &Json, key: &str, default: usize) -> Result<usize> {
@@ -107,6 +158,17 @@ impl Request {
                         parallelism: parse_usize(&v, "parallelism", d.parallelism)?,
                         kernel,
                         lanes: parse_usize(&v, "lanes", d.lanes)?,
+                        stream: v.get("stream").and_then(Json::as_bool).unwrap_or(false),
+                    },
+                })
+            }
+            "append" => {
+                let samples = parse_floats(&v, "samples", "append")?;
+                Ok(Request::Append {
+                    samples,
+                    options: AppendOptions {
+                        window: parse_usize(&v, "window", 0)?,
+                        stride: parse_usize(&v, "stride", 0)?,
                     },
                 })
             }
@@ -165,6 +227,22 @@ impl Request {
                 if options.lanes != d.lanes {
                     pairs.push(("lanes", Json::Int(options.lanes as i64)));
                 }
+                if options.stream {
+                    pairs.push(("stream", Json::Bool(true)));
+                }
+                Json::obj(pairs).to_string()
+            }
+            Request::Append { samples, options } => {
+                let mut pairs = vec![
+                    ("op", Json::str("append")),
+                    ("samples", Json::f32s(samples)),
+                ];
+                if options.window != 0 {
+                    pairs.push(("window", Json::Int(options.window as i64)));
+                }
+                if options.stride != 0 {
+                    pairs.push(("stride", Json::Int(options.stride as i64)));
+                }
                 Json::obj(pairs).to_string()
             }
         }
@@ -178,6 +256,7 @@ pub enum Response {
     Info { qlen: usize, reflen: usize, batch: usize },
     Align { cost: f32, end: usize, latency_ms: f64, variant: String },
     Search(Box<SearchFields>),
+    Append(AppendFields),
     Metrics(Box<MetricsFields>),
     Error(String),
     /// An `ok:true` response this build does not recognize (a newer
@@ -196,6 +275,10 @@ pub struct SearchFields {
     pub pruned_keogh: u64,
     pub dp_abandoned: u64,
     pub dp_full: u64,
+    /// Windows accounted without any stage running (k = 0; keeps the
+    /// client-visible partition invariant.  0 from servers predating
+    /// the field).
+    pub skipped: u64,
     /// Shards executed (1 = serial; 0 when talking to a pre-sharding
     /// server that does not send the field).
     pub shards: u64,
@@ -204,6 +287,22 @@ pub struct SearchFields {
     /// Survivor batches flushed through the DP kernel (0 when talking
     /// to a pre-kernel server that does not send the field).
     pub survivor_batches: u64,
+}
+
+/// The append fields that cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppendFields {
+    /// Samples ingested by this append.
+    pub appended: u64,
+    /// Total stream length (startup reference + all appends).
+    pub stream_len: u64,
+    /// Candidate windows currently indexed.
+    pub candidates: u64,
+    /// The streaming session's window length.
+    pub window: u64,
+    /// The streaming session's candidate stride.
+    pub stride: u64,
+    pub latency_ms: f64,
 }
 
 /// The metrics fields that cross the wire.
@@ -229,6 +328,16 @@ pub struct MetricsFields {
     pub survivor_batches: u64,
     /// Mean windows per survivor batch (0.0 until a batch has run).
     pub lane_occupancy: f64,
+    /// Streaming appends served (0 from pre-streaming servers).
+    pub stream_appends: u64,
+    /// Samples ingested across all appends.
+    pub stream_samples: u64,
+    /// Streaming (delta-path) searches served.
+    pub delta_searches: u64,
+    /// Candidates the delta searches actually cascaded.
+    pub delta_scanned: u64,
+    /// Candidates the delta searches skipped via the watermark.
+    pub delta_skipped: u64,
 }
 
 impl Response {
@@ -250,10 +359,22 @@ impl Response {
             pruned_keogh: r.stats.pruned_keogh,
             dp_abandoned: r.stats.dp_abandoned,
             dp_full: r.stats.dp_full,
+            skipped: r.stats.skipped,
             shards: r.shards as u64,
             tau_tightenings: r.tau_tightenings,
             survivor_batches: r.stats.survivor_batches,
         }))
+    }
+
+    pub fn from_append(r: &AppendResponse) -> Response {
+        Response::Append(AppendFields {
+            appended: r.appended as u64,
+            stream_len: r.stream_len as u64,
+            candidates: r.candidates as u64,
+            window: r.window as u64,
+            stride: r.stride as u64,
+            latency_ms: r.latency_ms,
+        })
     }
 
     pub fn from_metrics(m: &MetricsSnapshot) -> Response {
@@ -274,6 +395,11 @@ impl Response {
             search_tightenings: m.search_tau_tightenings,
             survivor_batches: m.search_survivor_batches,
             lane_occupancy: m.search_lane_occupancy_mean,
+            stream_appends: m.stream_appends,
+            stream_samples: m.stream_samples,
+            delta_searches: m.delta_searches,
+            delta_scanned: m.delta_candidates_scanned,
+            delta_skipped: m.delta_candidates_skipped,
         }))
     }
 
@@ -289,7 +415,7 @@ impl Response {
             .to_string(),
             Response::Align { cost, end, latency_ms, variant } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("cost", Json::Num(*cost as f64)),
+                ("cost", wire_f32(*cost)),
                 ("end", Json::Int(*end as i64)),
                 ("latency_ms", Json::Num(*latency_ms)),
                 ("variant", Json::str(variant)),
@@ -300,7 +426,7 @@ impl Response {
                     Json::obj(vec![
                         ("start", Json::Int(h.start as i64)),
                         ("end", Json::Int(h.end as i64)),
-                        ("cost", Json::Num(h.cost as f64)),
+                        ("cost", wire_f32(h.cost)),
                     ])
                 }));
                 Json::obj(vec![
@@ -312,12 +438,23 @@ impl Response {
                     ("pruned_keogh", Json::Int(s.pruned_keogh as i64)),
                     ("dp_abandoned", Json::Int(s.dp_abandoned as i64)),
                     ("dp_full", Json::Int(s.dp_full as i64)),
+                    ("skipped", Json::Int(s.skipped as i64)),
                     ("shards", Json::Int(s.shards as i64)),
                     ("tau_tightenings", Json::Int(s.tau_tightenings as i64)),
                     ("survivor_batches", Json::Int(s.survivor_batches as i64)),
                 ])
                 .to_string()
             }
+            Response::Append(a) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("appended", Json::Int(a.appended as i64)),
+                ("stream_len", Json::Int(a.stream_len as i64)),
+                ("candidates", Json::Int(a.candidates as i64)),
+                ("window", Json::Int(a.window as i64)),
+                ("stride", Json::Int(a.stride as i64)),
+                ("latency_ms", Json::Num(a.latency_ms)),
+            ])
+            .to_string(),
             Response::Metrics(m) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("requests", Json::Int(m.requests as i64)),
@@ -336,6 +473,11 @@ impl Response {
                 ("search_tightenings", Json::Int(m.search_tightenings as i64)),
                 ("survivor_batches", Json::Int(m.survivor_batches as i64)),
                 ("lane_occupancy", Json::Num(m.lane_occupancy)),
+                ("stream_appends", Json::Int(m.stream_appends as i64)),
+                ("stream_samples", Json::Int(m.stream_samples as i64)),
+                ("delta_searches", Json::Int(m.delta_searches as i64)),
+                ("delta_scanned", Json::Int(m.delta_scanned as i64)),
+                ("delta_skipped", Json::Int(m.delta_skipped as i64)),
             ])
             .to_string(),
             Response::Error(e) => Json::obj(vec![
@@ -366,7 +508,7 @@ impl Response {
                 parsed.push(Hit {
                     start: h.get("start").and_then(Json::as_i64).unwrap_or(0) as usize,
                     end: h.get("end").and_then(Json::as_i64).unwrap_or(0) as usize,
-                    cost: h.get("cost").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                    cost: h.get("cost").and_then(parse_wire_f32).unwrap_or(0.0),
                 });
             }
             let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
@@ -378,14 +520,26 @@ impl Response {
                 pruned_keogh: int("pruned_keogh"),
                 dp_abandoned: int("dp_abandoned"),
                 dp_full: int("dp_full"),
+                skipped: int("skipped"),
                 shards: int("shards"),
                 tau_tightenings: int("tau_tightenings"),
                 survivor_batches: int("survivor_batches"),
             })));
         }
-        if let Some(cost) = v.get("cost").and_then(Json::as_f64) {
+        if v.get("appended").is_some() {
+            let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
+            return Ok(Response::Append(AppendFields {
+                appended: int("appended"),
+                stream_len: int("stream_len"),
+                candidates: int("candidates"),
+                window: int("window"),
+                stride: int("stride"),
+                latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            }));
+        }
+        if let Some(cost) = v.get("cost").and_then(parse_wire_f32) {
             return Ok(Response::Align {
-                cost: cost as f32,
+                cost,
                 end: v.get("end").and_then(Json::as_i64).unwrap_or(0) as usize,
                 latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
                 variant: v
@@ -422,6 +576,11 @@ impl Response {
                 search_tightenings: int("search_tightenings"),
                 survivor_batches: int("survivor_batches"),
                 lane_occupancy: num("lane_occupancy"),
+                stream_appends: int("stream_appends"),
+                stream_samples: int("stream_samples"),
+                delta_searches: int("delta_searches"),
+                delta_scanned: int("delta_scanned"),
+                delta_skipped: int("delta_skipped"),
             })));
         }
         // ok:true but unrecognized shape: a newer verb — preserve it
@@ -461,6 +620,7 @@ mod tests {
                 parallelism: 2,
                 kernel: KernelKind::Lanes,
                 lanes: 16,
+                stream: false,
             },
         };
         let enc = custom.encode();
@@ -477,9 +637,60 @@ mod tests {
                 assert_eq!(options.parallelism, 1);
                 assert_eq!(options.kernel, KernelKind::Scalar);
                 assert_eq!(options.lanes, 0);
+                assert!(!options.stream);
             }
             other => panic!("unexpected parse: {other:?}"),
         }
+    }
+
+    #[test]
+    fn search_request_stream_flag_roundtrip() {
+        let req = Request::Search {
+            query: vec![1.0, 2.0],
+            options: SearchOptions { stream: true, ..Default::default() },
+        };
+        let enc = req.encode();
+        assert!(enc.contains("\"stream\":true"));
+        assert_eq!(Request::parse(&enc).unwrap(), req);
+        // the default (false) stays off the wire
+        let off = Request::Search { query: vec![1.0], options: SearchOptions::default() };
+        assert!(!off.encode().contains("stream"));
+    }
+
+    #[test]
+    fn append_request_roundtrip() {
+        let auto = Request::Append {
+            samples: vec![0.5, -1.25, 3.0],
+            options: AppendOptions::default(),
+        };
+        let enc = auto.encode();
+        assert!(enc.contains("\"op\":\"append\""));
+        assert!(!enc.contains("window"), "auto shape stays off the wire");
+        assert_eq!(Request::parse(&enc).unwrap(), auto);
+        let shaped = Request::Append {
+            samples: vec![1.0],
+            options: AppendOptions { window: 96, stride: 2 },
+        };
+        let enc = shaped.encode();
+        assert!(enc.contains("\"window\":96") && enc.contains("\"stride\":2"));
+        assert_eq!(Request::parse(&enc).unwrap(), shaped);
+        // malformed appends rejected
+        assert!(Request::parse(r#"{"op":"append"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"append","samples":["x"]}"#).is_err());
+        assert!(Request::parse(r#"{"op":"append","samples":[1],"window":-3}"#).is_err());
+    }
+
+    #[test]
+    fn append_response_roundtrip() {
+        let r = Response::Append(AppendFields {
+            appended: 512,
+            stream_len: 8704,
+            candidates: 8513,
+            window: 192,
+            stride: 1,
+            latency_ms: 0.21,
+        });
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
     }
 
     #[test]
@@ -549,25 +760,98 @@ mod tests {
             pruned_keogh: 500,
             dp_abandoned: 400,
             dp_full: 196,
+            skipped: 0,
             shards: 4,
             tau_tightenings: 17,
             survivor_batches: 80,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
-        // empty hit list still recognized as a search response
+        // empty hit list still recognized as a search response; a k=0
+        // response accounts its windows via `skipped`
         let empty = Response::Search(Box::new(SearchFields {
             hits: vec![],
             latency_ms: 0.5,
             windows: 10,
-            pruned_kim: 10,
+            pruned_kim: 0,
             pruned_keogh: 0,
             dp_abandoned: 0,
             dp_full: 0,
+            skipped: 10,
             shards: 1,
             tau_tightenings: 0,
             survivor_batches: 0,
         }));
         assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn hit_and_align_costs_roundtrip_bit_exact() {
+        // the engine's guarantee is bit-identity; the wire must not be
+        // the place it silently breaks.  Exercise the corners: ±0.0,
+        // subnormals, full-mantissa values, extremes, non-finite.
+        let mut g = crate::util::rng::Xoshiro256::new(4242);
+        let mut values: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            f32::MIN_POSITIVE,                  // smallest normal
+            f32::from_bits(1),                  // smallest subnormal
+            f32::from_bits(0x007f_ffff),        // largest subnormal
+            f32::MAX,
+            f32::MIN,
+            1.0 / 3.0,                          // needs max precision
+            std::f32::consts::PI,
+            16_777_216.0,                       // 2^24, mantissa edge
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+        ];
+        for _ in 0..500 {
+            values.push(f32::from_bits(g.below(1u64 << 32) as u32));
+        }
+        for (i, &cost) in values.iter().enumerate() {
+            let resp = Response::Search(Box::new(SearchFields {
+                hits: vec![Hit { start: 1, end: 2, cost }],
+                latency_ms: 0.0,
+                windows: 1,
+                pruned_kim: 0,
+                pruned_keogh: 0,
+                dp_abandoned: 0,
+                dp_full: 1,
+                skipped: 0,
+                shards: 1,
+                tau_tightenings: 0,
+                survivor_batches: 1,
+            }));
+            let got = match Response::parse(&resp.encode()).unwrap() {
+                Response::Search(s) => s.hits[0].cost,
+                other => panic!("value {i}: parsed as {other:?}"),
+            };
+            if cost.is_nan() {
+                assert!(got.is_nan(), "value {i}: NaN lost");
+            } else {
+                assert_eq!(
+                    got.to_bits(),
+                    cost.to_bits(),
+                    "value {i}: {cost:?} became {got:?}"
+                );
+            }
+            // align costs take the same wire path (+inf is its documented
+            // "no match under pruning" sentinel — it must survive)
+            let align = Response::Align {
+                cost,
+                end: 7,
+                latency_ms: 0.5,
+                variant: "v".into(),
+            };
+            let got = match Response::parse(&align.encode()).unwrap() {
+                Response::Align { cost, .. } => cost,
+                other => panic!("value {i}: align parsed as {other:?}"),
+            };
+            if cost.is_nan() {
+                assert!(got.is_nan());
+            } else {
+                assert_eq!(got.to_bits(), cost.to_bits(), "align value {i}");
+            }
+        }
     }
 
     #[test]
@@ -589,6 +873,11 @@ mod tests {
             search_tightenings: 31,
             survivor_batches: 64,
             lane_occupancy: 6.5,
+            stream_appends: 3,
+            stream_samples: 6144,
+            delta_searches: 2,
+            delta_scanned: 512,
+            delta_skipped: 7489,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
     }
@@ -632,10 +921,16 @@ mod tests {
                     parallelism: 2,
                     kernel: KernelKind::Lanes,
                     lanes: 4,
+                    stream: true,
                 },
             }
             .encode(),
             Request::Align { query: vec![0.25], options: AlignOptions::default() }.encode(),
+            Request::Append {
+                samples: vec![1.5, -2.0],
+                options: AppendOptions { window: 8, stride: 1 },
+            }
+            .encode(),
             Response::Search(Box::new(SearchFields {
                 hits: vec![Hit { start: 1, end: 2, cost: 3.0 }],
                 latency_ms: 0.1,
@@ -644,10 +939,27 @@ mod tests {
                 pruned_keogh: 1,
                 dp_abandoned: 1,
                 dp_full: 2,
+                skipped: 0,
                 shards: 2,
                 tau_tightenings: 1,
                 survivor_batches: 1,
             }))
+            .encode(),
+            Response::Append(AppendFields {
+                appended: 2,
+                stream_len: 10,
+                candidates: 3,
+                window: 8,
+                stride: 1,
+                latency_ms: 0.05,
+            })
+            .encode(),
+            Response::Align {
+                cost: f32::INFINITY,
+                end: 3,
+                latency_ms: 0.1,
+                variant: "pruned".into(),
+            }
             .encode(),
             Response::Pong.encode(),
             r#"{"ok":true}"#.to_string(),

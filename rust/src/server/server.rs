@@ -128,5 +128,11 @@ pub fn handle_line(line: &str, service: &SdtwService) -> Response {
                 Err(e) => Response::Error(format!("{e:#}")),
             }
         }
+        Request::Append { samples, options } => {
+            match service.append_blocking(samples, options) {
+                Ok(resp) => Response::from_append(&resp),
+                Err(e) => Response::Error(format!("{e:#}")),
+            }
+        }
     }
 }

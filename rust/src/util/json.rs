@@ -364,6 +364,12 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("bad number"))?;
         if !is_float {
             if let Ok(i) = text.parse::<i64>() {
+                // "-0" is the Display form of f64 -0.0; folding it into
+                // Int(0) would drop the sign bit and break the encoder's
+                // bit-exact number round-trip
+                if i == 0 && text.starts_with('-') {
+                    return Ok(Json::Num(-0.0));
+                }
                 return Ok(Json::Int(i));
             }
         }
@@ -462,5 +468,20 @@ mod tests {
     #[test]
     fn nonfinite_encodes_null() {
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_with_sign() {
+        let enc = Json::Num(-0.0).to_string();
+        assert_eq!(enc, "-0");
+        match Json::parse(&enc).unwrap() {
+            Json::Num(x) => {
+                assert_eq!(x, 0.0);
+                assert!(x.is_sign_negative(), "-0 must keep its sign bit");
+            }
+            other => panic!("-0 parsed as {other:?}"),
+        }
+        // plain zero keeps integer identity
+        assert_eq!(Json::parse("0").unwrap(), Json::Int(0));
     }
 }

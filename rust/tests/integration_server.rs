@@ -8,7 +8,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sdtw_repro::coordinator::{AlignOptions, SdtwService, ServiceOptions};
+use sdtw_repro::coordinator::{
+    AlignOptions, AppendOptions, SdtwService, SearchOptions, ServiceOptions,
+};
 use sdtw_repro::server::{Client, Server};
 use sdtw_repro::util::rng::Xoshiro256;
 
@@ -133,4 +135,62 @@ fn wrong_qlen_is_protocol_error() {
     assert!(err.is_err());
     // and the connection keeps working
     client.ping().unwrap();
+}
+
+#[test]
+fn append_and_stream_search_roundtrip() {
+    let Some(ts) = TestServer::start() else { return };
+    let mut client = Client::connect(&ts.addr).unwrap();
+    let mut rng = Xoshiro256::new(7);
+    let stream_opts = SearchOptions { k: 3, stream: true, ..Default::default() };
+
+    // streaming search before any append: a protocol error, not a crash
+    let q = rng.normal_vec_f32(128);
+    assert!(client.search(&q, stream_opts).is_err());
+    client.ping().unwrap();
+
+    // first append opens the session (auto shape: window 192 = 3*128/2)
+    let a1 = client.append(&rng.normal_vec_f32(512), AppendOptions::default()).unwrap();
+    assert_eq!(a1.appended, 512);
+    assert_eq!(a1.stream_len, 2048 + 512);
+    assert_eq!(a1.window, 192);
+    assert_eq!(a1.stride, 1);
+    assert_eq!(a1.candidates, (a1.stream_len - a1.window) + 1);
+    // a mismatched shape is rejected; the session survives
+    assert!(client
+        .append(&[1.0, 2.0], AppendOptions { window: 64, stride: 1 })
+        .is_err());
+
+    // cold streaming search walks every candidate
+    let s1 = client.search(&q, stream_opts).unwrap();
+    assert_eq!(s1.windows, a1.candidates);
+    assert_eq!(
+        s1.pruned_kim + s1.pruned_keogh + s1.dp_abandoned + s1.skipped + s1.dp_full,
+        s1.windows,
+        "counters must partition the candidate space over the wire"
+    );
+
+    // same query, nothing appended: a pure delta — zero candidates, and
+    // bit-identical hits served from the cache
+    let s2 = client.search(&q, stream_opts).unwrap();
+    assert_eq!(s2.windows, 0, "empty delta after no appends");
+    assert_eq!(s1.hits.len(), s2.hits.len());
+    for (a, b) in s1.hits.iter().zip(&s2.hits) {
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "wire must be bit-exact");
+    }
+
+    // grow the stream; the next delta walks exactly the new candidates
+    let a2 = client.append(&rng.normal_vec_f32(256), AppendOptions::default()).unwrap();
+    assert_eq!(a2.stream_len, 2048 + 512 + 256);
+    let s3 = client.search(&q, stream_opts).unwrap();
+    assert_eq!(s3.windows, 256, "delta = one new candidate per appended sample");
+
+    // metrics surface the streaming session
+    let m = client.metrics().unwrap();
+    assert_eq!(m.stream_appends, 2);
+    assert_eq!(m.stream_samples, 512 + 256);
+    assert_eq!(m.delta_searches, 3);
+    assert_eq!(m.delta_scanned, a1.candidates + 256);
+    assert!(m.delta_skipped > 0);
 }

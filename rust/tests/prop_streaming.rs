@@ -1,0 +1,329 @@
+//! Property tests for the streaming search subsystem: after *any*
+//! append schedule, the incremental index is bit-identical to a batch
+//! `ReferenceIndex::build` on the final prefix (envelopes, slices,
+//! candidate counts), and every search path over it — serial or
+//! sharded, any DP kernel, delta or full — returns the same hits with
+//! partition-consistent counters.  The k = 0 invariant is pinned on
+//! every path.
+
+use std::sync::Arc;
+
+use sdtw_repro::dtw::{Dist, KernelSpec};
+use sdtw_repro::search::envelope::{sliding_min_max, StreamingExtrema};
+use sdtw_repro::search::{
+    CascadeOpts, Hit, ReferenceIndex, SearchEngine, StreamingEngine, StreamingIndex,
+};
+use sdtw_repro::testutil::check;
+
+/// Random-walk style series (level drift makes envelope bounds bite).
+fn walk(g: &mut sdtw_repro::testutil::GenCtx, lo: usize, hi: usize) -> Vec<f32> {
+    let base = g.vec_f32(lo, hi);
+    let mut level = 0f32;
+    base.iter()
+        .map(|&step| {
+            level += step * 0.5;
+            level
+        })
+        .collect()
+}
+
+fn assert_bit_identical(label: &str, a: &[Hit], b: &[Hit]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{label}: {} vs {} hits", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.start != y.start || x.end != y.end || x.cost.to_bits() != y.cost.to_bits() {
+            return Err(format!("{label}: hit {i} differs: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_streaming_extrema_matches_batch_for_all_prefixes_and_append_lengths() {
+    // the satellite contract: incremental == batch for every prefix,
+    // driven by appends of every length 1..=17
+    check(501, 60, |g| {
+        let x = walk(g, 1, 180);
+        let window = g.usize_in(1, x.len());
+        for append_len in 1..=17usize {
+            let mut ext = StreamingExtrema::new(window);
+            let mut lo = Vec::new();
+            let mut hi = Vec::new();
+            let mut at = 0usize;
+            while at < x.len() {
+                let end = (at + append_len).min(x.len());
+                for &v in &x[at..end] {
+                    if let Some((l, h)) = ext.push(v) {
+                        lo.push(l);
+                        hi.push(h);
+                    }
+                }
+                at = end;
+                // prefix check after every simulated append
+                if at >= window {
+                    let (blo, bhi) = sliding_min_max(&x[..at], window);
+                    if lo.len() != blo.len() {
+                        return Err(format!(
+                            "append_len={append_len} prefix={at}: {} vs {} outputs",
+                            lo.len(),
+                            blo.len()
+                        ));
+                    }
+                    for (s, ((&a, &b), (&c, &d))) in
+                        lo.iter().zip(&hi).zip(blo.iter().zip(&bhi)).enumerate()
+                    {
+                        if a.to_bits() != c.to_bits() || b.to_bits() != d.to_bits() {
+                            return Err(format!(
+                                "append_len={append_len} prefix={at} start={s}: \
+                                 ({a}, {b}) vs ({c}, {d})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_streaming_index_bit_identical_to_batch_rebuild() {
+    // any (window, stride), any random append schedule: the incremental
+    // index must equal ReferenceIndex::build on the final prefix
+    check(502, 60, |g| {
+        let x = walk(g, 20, 250);
+        let window = g.usize_in(1, x.len().min(40));
+        let stride = g.usize_in(1, 4);
+        let seed_len = g.usize_in(window, x.len());
+        let mut ix = StreamingIndex::new(&x[..seed_len], window, stride)
+            .map_err(|e| e.to_string())?;
+        let mut at = seed_len;
+        let mut prev_envelopes: Vec<(u32, u32)> = Vec::new();
+        while at < x.len() {
+            let end = (at + g.usize_in(1, 30)).min(x.len());
+            ix.append(&x[at..end]);
+            at = end;
+            // regression: appended samples never perturb pre-existing
+            // candidate envelopes
+            for (t, &(lo, hi)) in prev_envelopes.iter().enumerate() {
+                let (l, h) = ix.envelope(t);
+                if l.to_bits() != lo || h.to_bits() != hi {
+                    return Err(format!("append perturbed candidate {t}'s envelope"));
+                }
+            }
+            prev_envelopes = (0..ix.candidates())
+                .map(|t| {
+                    let (l, h) = ix.envelope(t);
+                    (l.to_bits(), h.to_bits())
+                })
+                .collect();
+        }
+        let batch = ReferenceIndex::build(Arc::new(x.clone()), window, stride)
+            .map_err(|e| e.to_string())?;
+        if ix.candidates() != batch.candidates() {
+            return Err(format!(
+                "candidates: streaming {} vs batch {} (w={window} s={stride})",
+                ix.candidates(),
+                batch.candidates()
+            ));
+        }
+        for t in 0..ix.candidates() {
+            if ix.start(t) != batch.start(t) || ix.window_slice(t) != batch.window_slice(t) {
+                return Err(format!("candidate {t}: start/slice mismatch"));
+            }
+            let (a, b) = ix.envelope(t);
+            let (c, d) = batch.envelope(t);
+            if a.to_bits() != c.to_bits() || b.to_bits() != d.to_bits() {
+                return Err(format!("candidate {t}: envelope ({a},{b}) vs ({c},{d})"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_streaming_search_bit_identical_across_kernels_and_sharding() {
+    // the acceptance invariant: streaming ≡ batch-rebuild for hits AND
+    // counters, over scalar/scan/lane kernels and serial + sharded
+    // execution, after a randomized append schedule
+    check(503, 40, |g| {
+        let x = walk(g, 60, 260);
+        let window = g.usize_in(4, x.len().min(24));
+        let stride = g.usize_in(1, 2);
+        let k = g.usize_in(1, 4);
+        let exclusion = g.usize_in(1, window);
+        let m = g.usize_in(3, 12);
+        let q = g.vec_f32(m, m);
+
+        let seed_len = g.usize_in(window, x.len());
+        let mut se = StreamingEngine::new(&x[..seed_len], window, stride, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+        let mut at = seed_len;
+        while at < x.len() {
+            let end = (at + g.usize_in(1, 60)).min(x.len());
+            se.append(&x[at..end]);
+            at = end;
+        }
+        let batch = SearchEngine::new(Arc::new(x.clone()), window, stride, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+
+        for spec in [
+            KernelSpec::SCALAR,
+            KernelSpec::scan(g.usize_in(1, 9)),
+            KernelSpec::lanes(g.usize_in(1, 8)),
+        ] {
+            let opts = CascadeOpts::default().with_kernel(spec);
+            let want = batch
+                .search_opts(&q, k, exclusion, opts, 1)
+                .map_err(|e| e.to_string())?;
+            // serial full search: identical hits AND identical counters
+            // (same cascade over the same candidates)
+            let got = se
+                .search(&q, k, exclusion, opts)
+                .map_err(|e| e.to_string())?;
+            assert_bit_identical(&format!("serial {spec:?}"), &got.hits, &want.hits)?;
+            if got.stats != want.stats {
+                return Err(format!(
+                    "{spec:?}: counters diverged: {:?} vs {:?}",
+                    got.stats, want.stats
+                ));
+            }
+            if got.stats.pruned_total() + got.stats.dp_full != got.stats.candidates {
+                return Err(format!("{spec:?}: counters don't partition: {:?}", got.stats));
+            }
+            // sharded over the streaming index: identical hits, merged
+            // counters partition the space
+            let shards = g.usize_in(2, 6);
+            let threads = g.usize_in(1, 4);
+            let sharded = se
+                .search_sharded(&q, k, exclusion, opts, shards, threads)
+                .map_err(|e| e.to_string())?;
+            assert_bit_identical(
+                &format!("sharded {spec:?} ({shards}x{threads})"),
+                &sharded.hits,
+                &want.hits,
+            )?;
+            if sharded.stats.pruned_total() + sharded.stats.dp_full != sharded.stats.candidates
+            {
+                return Err(format!(
+                    "sharded {spec:?}: counters don't partition: {:?}",
+                    sharded.stats
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_delta_search_bit_identical_to_full_rebuild_at_every_step() {
+    // interleaved appends and delta searches: each delta's picks must
+    // equal a from-scratch rebuild + search over the current prefix
+    check(504, 40, |g| {
+        let x = walk(g, 60, 300);
+        let window = g.usize_in(4, x.len().min(20));
+        let k = g.usize_in(1, 3);
+        let exclusion = g.usize_in(1, window);
+        let m = g.usize_in(3, 10);
+        let q = g.vec_f32(m, m);
+        let seed_len = g.usize_in(window, x.len());
+        let mut se = StreamingEngine::new(&x[..seed_len], window, 1, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+        let mut at = seed_len;
+        loop {
+            let d = se
+                .search_delta(&q, k, exclusion, CascadeOpts::default())
+                .map_err(|e| e.to_string())?;
+            let want = SearchEngine::new(Arc::new(x[..at].to_vec()), window, 1, Dist::Sq)
+                .map_err(|e| e.to_string())?
+                .search(&q, k, exclusion)
+                .map_err(|e| e.to_string())?;
+            assert_bit_identical(&format!("delta at {at}"), &d.outcome.hits, &want.hits)?;
+            if d.scanned + d.skipped != se.index().candidates() as u64 {
+                return Err(format!(
+                    "at {at}: scanned {} + skipped {} != candidates {}",
+                    d.scanned,
+                    d.skipped,
+                    se.index().candidates()
+                ));
+            }
+            if d.outcome.stats.pruned_total() + d.outcome.stats.dp_full
+                != d.outcome.stats.candidates
+            {
+                return Err(format!(
+                    "at {at}: delta counters don't partition: {:?}",
+                    d.outcome.stats
+                ));
+            }
+            if at >= x.len() {
+                break;
+            }
+            let end = (at + g.usize_in(1, 50)).min(x.len());
+            se.append(&x[at..end]);
+            at = end;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_k_zero_partition_invariant_on_every_path() {
+    // k = 0 returns nothing but must account every candidate (the
+    // `skipped` counter) on the serial, sharded, and streaming paths
+    check(505, 25, |g| {
+        let x = walk(g, 30, 150);
+        let window = g.usize_in(2, x.len().min(16));
+        let m = g.usize_in(2, 8);
+        let q = g.vec_f32(m, m);
+        let batch = SearchEngine::new(Arc::new(x.clone()), window, 1, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+        let candidates = batch.index().candidates() as u64;
+
+        let serial = batch
+            .search_opts(&q, 0, 3, CascadeOpts::default(), 1)
+            .map_err(|e| e.to_string())?;
+        let sharded = batch
+            .search_sharded(&q, 0, 3, CascadeOpts::default(), g.usize_in(2, 5), 2)
+            .map_err(|e| e.to_string())?;
+        let mut se = StreamingEngine::new(&x, window, 1, Dist::Sq)
+            .map_err(|e| e.to_string())?;
+        let delta = se
+            .search_delta(&q, 0, 3, CascadeOpts::default())
+            .map_err(|e| e.to_string())?;
+
+        for (label, hits_empty, stats) in [
+            ("serial", serial.hits.is_empty(), serial.stats),
+            ("sharded", sharded.hits.is_empty(), sharded.stats),
+            ("streaming", delta.outcome.hits.is_empty(), delta.outcome.stats),
+        ] {
+            if !hits_empty {
+                return Err(format!("{label}: k=0 returned hits"));
+            }
+            if stats.candidates != candidates {
+                return Err(format!(
+                    "{label}: candidates {} != {candidates}",
+                    stats.candidates
+                ));
+            }
+            if stats.skipped != candidates || stats.dp_full != 0 {
+                return Err(format!("{label}: k=0 stats not all-skipped: {stats:?}"));
+            }
+            if stats.pruned_total() + stats.dp_full != stats.candidates {
+                return Err(format!("{label}: counters don't partition: {stats:?}"));
+            }
+        }
+        // per-shard reports partition too
+        for s in &sharded.shards {
+            if s.stats.pruned_total() + s.stats.dp_full != s.stats.candidates {
+                return Err(format!("shard {}: k=0 counters don't partition", s.shard));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
