@@ -108,3 +108,89 @@ class TestLowerBoundProperties:
             ref.sliding_minmax_ref(np.zeros(4), 5)
         with pytest.raises(ValueError):
             ref.sliding_minmax_ref(np.zeros(4), 0)
+
+
+class TestBlockPrefilterModel:
+    """float32 model of ``rust/src/search/lb_kernel.rs``: the SoA block
+    kernel advances B candidate envelopes one query row at a time with
+    per-lane early-abandon masks.  Block evaluation must be bit-identical
+    (same float32 partial sums, same pruned/abandoned flags) to the
+    scalar term-by-term loop at any block size and τ — the same claim
+    ``rust/tests/prop_lb_kernel.rs`` enforces on the Rust side."""
+
+    @staticmethod
+    def _gap32(q, lo, hi, dist):
+        c = np.float32(min(max(float(q), float(lo)), float(hi)))
+        d = np.float32(q) - c
+        return np.float32(d * d) if dist == "sq" else np.float32(abs(d))
+
+    @classmethod
+    def _keogh_scalar(cls, q, lo, hi, dist, tau):
+        s = np.float32(0.0)
+        for i, x in enumerate(q):
+            s = np.float32(s + cls._gap32(x, lo, hi, dist))
+            if s > tau:
+                return s, True, i + 1 < len(q)
+        return s, bool(s > tau), False
+
+    @classmethod
+    def _keogh_block(cls, q, los, his, dist, tau):
+        b = len(los)
+        sums = [np.float32(0.0)] * b
+        live = [True] * b
+        abandoned = [False] * b
+        n_live = b
+        for i, x in enumerate(q):
+            if n_live == 0:
+                break
+            for k in range(b):
+                if not live[k]:
+                    continue
+                sums[k] = np.float32(sums[k] + cls._gap32(x, los[k], his[k], dist))
+                if sums[k] > tau:
+                    live[k] = False
+                    abandoned[k] = i + 1 < len(q)
+                    n_live -= 1
+        return [(sums[k], bool(sums[k] > tau), abandoned[k]) for k in range(b)]
+
+    def test_block_bit_identical_to_scalar_with_flags(self):
+        rng = np.random.default_rng(97)
+        for trial in range(120):
+            m = int(rng.integers(1, 12))
+            b = int(rng.integers(1, 65))
+            q = rng.normal(size=m).astype(np.float32)
+            los = rng.normal(size=b).astype(np.float32)
+            his = (los + np.abs(rng.normal(size=b))).astype(np.float32)
+            tau = np.float32(np.inf) if trial % 5 == 0 else np.float32(rng.uniform(0, 8))
+            dist = "sq" if trial % 2 == 0 else "abs"
+            blk = self._keogh_block(q, los, his, dist, tau)
+            for k in range(b):
+                want = self._keogh_scalar(q, los[k], his[k], dist, tau)
+                assert blk[k][0].tobytes() == want[0].tobytes(), (trial, k)
+                assert blk[k][1:] == want[1:], (trial, k)
+
+    def test_full_bound_matches_lb_keogh_ref(self):
+        rng = np.random.default_rng(98)
+        for _ in range(60):
+            m = int(rng.integers(1, 12))
+            q = rng.normal(size=m).astype(np.float32)
+            lo = float(rng.normal())
+            hi = lo + float(abs(rng.normal()))
+            for dist in ("sq", "abs"):
+                got, pruned, abandoned = self._keogh_scalar(q, lo, hi, dist, np.float32(np.inf))
+                assert not pruned and not abandoned
+                want = ref.lb_keogh_ref(q, lo, hi, dist)
+                assert float(got) == pytest.approx(want, rel=1e-4, abs=1e-5)
+
+    def test_abandoned_only_before_final_term(self):
+        q = np.ones(4, dtype=np.float32)
+        # gaps of 1 each vs [0, 0] under abs: τ=2.5 crosses at term 3/4
+        # (abandoned, partial sum frozen), τ=3.5 crosses at term 4/4
+        # (pruned but complete), τ=∞ never crosses
+        bound, pruned, abandoned = self._keogh_scalar(q, 0.0, 0.0, "abs", np.float32(2.5))
+        assert (float(bound), pruned, abandoned) == (3.0, True, True)
+        bound, pruned, abandoned = self._keogh_scalar(q, 0.0, 0.0, "abs", np.float32(3.5))
+        assert (float(bound), pruned, abandoned) == (4.0, True, False)
+        blk = self._keogh_block(q, [0.0, 0.0], [0.0, 0.0], "abs", np.float32(2.5))
+        assert blk[0] == blk[1]
+        assert (float(blk[0][0]), blk[0][1], blk[0][2]) == (3.0, True, True)

@@ -1,0 +1,150 @@
+//! Ablation: the batched lower-bound prefilter kernel — the scalar
+//! per-candidate cadence vs the SoA block kernel at widths 1..64.
+//! Reports per-config wall time, candidate throughput, LB block count /
+//! occupancy / Keogh-abandon counts, and verifies on every shape that
+//! each configuration's top-K is bit-identical to the scalar-prefilter
+//! engine (batching the bounds is lossless by construction — the
+//! cascade's τ-refresh argument).
+//!
+//!   cargo bench --bench lb_prefilter
+//!   SDTW_BENCH_QUICK=1 cargo bench --bench lb_prefilter       # fast run
+//!   SDTW_BENCH_JSON=out.jsonl ... cargo bench --bench lb_prefilter
+//!       # also append machine-readable summaries (the CI bench-smoke
+//!       # lane's BENCH_ci.json feed)
+//!
+//! Workloads are the same planted families as `search_cascade`: a
+//! drifting walk (envelope bounds bite, most candidates die in the LB
+//! stages — the block kernel's best case) and Cylinder-Bell-Funnel
+//! (flat-ish, Keogh abandons carry more of the work).
+
+use std::sync::Arc;
+
+use sdtw_repro::bench_harness::{banner, emit_json, Table};
+use sdtw_repro::datagen::{planted_workload, Family};
+use sdtw_repro::dtw::Dist;
+use sdtw_repro::normalize::znormed;
+use sdtw_repro::search::{CascadeOpts, CascadeStats, LbKernelSpec, SearchEngine};
+use sdtw_repro::util::json::Json;
+use sdtw_repro::util::rng::Xoshiro256;
+
+const REFLEN: usize = 8192;
+const QLEN: usize = 128;
+const WINDOW: usize = QLEN + QLEN / 2;
+const K: usize = 6;
+const EXCLUSION: usize = WINDOW / 2;
+const PLANTS: usize = 6;
+const SEED: u64 = 42;
+
+fn workload(family: Family, seed: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let (reference, query, _) =
+        planted_workload(family, REFLEN, QLEN, PLANTS, 0.05, &mut rng);
+    (Arc::new(znormed(&reference)), znormed(&query))
+}
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner(
+        "lb_prefilter",
+        &format!("N={REFLEN} M={QLEN} window={WINDOW} K={K} exclusion={EXCLUSION} seed={SEED}"),
+    );
+
+    let configs: [(&str, LbKernelSpec); 5] = [
+        ("scalar prefilter", LbKernelSpec::SCALAR),
+        ("block B=1", LbKernelSpec::block(1)),
+        ("block B=8", LbKernelSpec::block(8)),
+        ("block B=32", LbKernelSpec::block(32)),
+        ("block B=64", LbKernelSpec::block(64)),
+    ];
+
+    for family in [Family::Walk, Family::Cbf] {
+        let (reference, query) = workload(family, SEED);
+        let engine = SearchEngine::new(reference, WINDOW, 1, Dist::Sq)?;
+        let candidates = engine.index().candidates();
+
+        // correctness first: every prefilter configuration must
+        // reproduce the scalar engine's top-K bit-for-bit (which the
+        // search_cascade bench in turn gates against brute force)
+        let base = engine.search_opts(&query, K, EXCLUSION, CascadeOpts::default(), 1)?;
+        for (label, spec) in &configs {
+            let opts = CascadeOpts::default().with_lb(*spec);
+            let got = engine.search_opts(&query, K, EXCLUSION, opts, 1)?;
+            assert_eq!(got.hits.len(), base.hits.len(), "{label}: hit count diverged");
+            for (a, b) in got.hits.iter().zip(&base.hits) {
+                assert_eq!(a.start, b.start, "{label}: start diverged");
+                assert_eq!(a.end, b.end, "{label}: end diverged");
+                assert_eq!(
+                    a.cost.to_bits(),
+                    b.cost.to_bits(),
+                    "{label}: cost not bit-identical ({} vs {})",
+                    a.cost,
+                    b.cost
+                );
+            }
+            let s = got.stats;
+            assert_eq!(
+                s.pruned_total() + s.dp_full,
+                s.candidates,
+                "{label}: counters must partition the candidate space"
+            );
+        }
+
+        let mut table = Table::new(
+            &format!("LB prefilter ablation — {family:?} ({candidates} candidate windows)"),
+            &["ms/search", "Mcand/s", "speedup", "pruned%", "lb_blocks", "occup", "abandons"],
+        );
+        let mut scalar_ms = 0.0f64;
+        for (label, spec) in &configs {
+            let opts = CascadeOpts::default().with_lb(*spec);
+            let mut stats = CascadeStats::default();
+            let summary = protocol.run(|| {
+                stats = engine
+                    .search_opts(&query, K, EXCLUSION, opts, 1)
+                    .expect("search")
+                    .stats;
+            });
+            if scalar_ms == 0.0 {
+                scalar_ms = summary.mean_ms;
+            }
+            let mcand_s = candidates as f64 / (summary.mean_ms * 1e3).max(1e-12);
+            table.row(
+                label,
+                vec![
+                    format!("{:.3}", summary.mean_ms),
+                    format!("{:.2}", mcand_s),
+                    format!("{:.2}x", scalar_ms / summary.mean_ms.max(1e-9)),
+                    format!("{:.1}", stats.prune_fraction() * 100.0),
+                    format!("{}", stats.lb_blocks),
+                    format!("{:.1}", stats.mean_lb_block_occupancy()),
+                    format!("{}", stats.lb_abandons),
+                ],
+            );
+            emit_json(
+                "lb_prefilter",
+                vec![
+                    ("family", Json::str(&format!("{family:?}"))),
+                    ("config", Json::str(label)),
+                    ("candidates", Json::Int(candidates as i64)),
+                    ("ms_per_search", Json::Num(summary.mean_ms)),
+                    ("mcand_per_s", Json::Num(mcand_s)),
+                    ("prune_fraction", Json::Num(stats.prune_fraction())),
+                    ("pruned_kim", Json::Int(stats.pruned_kim as i64)),
+                    ("pruned_keogh", Json::Int(stats.pruned_keogh as i64)),
+                    ("dp_abandoned", Json::Int(stats.dp_abandoned as i64)),
+                    ("dp_full", Json::Int(stats.dp_full as i64)),
+                    ("survivors", Json::Int(stats.survivors() as i64)),
+                    ("lb_blocks", Json::Int(stats.lb_blocks as i64)),
+                    ("lb_occupancy", Json::Num(stats.mean_lb_block_occupancy())),
+                    ("lb_abandons", Json::Int(stats.lb_abandons as i64)),
+                    ("bit_identical", Json::Bool(true)),
+                ],
+            );
+        }
+        table.print();
+    }
+    println!(
+        "\nnote: every configuration above was asserted bit-identical to the \
+         scalar-prefilter top-K before timing; `sdtw search --lb-kernel block \
+         --lb-block N` serves the same configurations end-to-end."
+    );
+    Ok(())
+}

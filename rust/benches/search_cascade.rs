@@ -15,11 +15,12 @@
 
 use std::sync::Arc;
 
-use sdtw_repro::bench_harness::{banner, Table};
+use sdtw_repro::bench_harness::{banner, emit_json, Table};
 use sdtw_repro::datagen::{planted_workload, Family};
 use sdtw_repro::dtw::Dist;
 use sdtw_repro::normalize::znormed;
 use sdtw_repro::search::{CascadeOpts, CascadeStats, SearchEngine};
+use sdtw_repro::util::json::Json;
 use sdtw_repro::util::rng::Xoshiro256;
 
 const REFLEN: usize = 8192;
@@ -94,6 +95,24 @@ fn main() -> anyhow::Result<()> {
                     format!("{:.1}", pct(stats.pruned_keogh)),
                     format!("{:.1}", pct(stats.dp_abandoned)),
                     format!("{:.1}", stats.prune_fraction() * 100.0),
+                ],
+            );
+            emit_json(
+                "search_cascade",
+                vec![
+                    ("family", Json::str(&format!("{family:?}"))),
+                    ("config", Json::str(label)),
+                    ("candidates", Json::Int(candidates as i64)),
+                    ("ms_per_search", Json::Num(summary.mean_ms)),
+                    ("speedup_vs_brute", Json::Num(brute_ms / summary.mean_ms.max(1e-9))),
+                    ("prune_fraction", Json::Num(stats.prune_fraction())),
+                    ("pruned_kim", Json::Int(stats.pruned_kim as i64)),
+                    ("pruned_keogh", Json::Int(stats.pruned_keogh as i64)),
+                    ("dp_abandoned", Json::Int(stats.dp_abandoned as i64)),
+                    ("dp_full", Json::Int(stats.dp_full as i64)),
+                    ("survivors", Json::Int(stats.survivors() as i64)),
+                    ("survivor_batches", Json::Int(stats.survivor_batches as i64)),
+                    ("bit_identical", Json::Bool(true)),
                 ],
             );
         }

@@ -4,6 +4,7 @@
 //! `harness = false` binaries built on this module (no `criterion`
 //! offline — see DESIGN.md "Session caveats").
 
+use crate::util::json::Json;
 use crate::util::stats::{Protocol, Summary};
 
 /// One row of a results table.
@@ -105,6 +106,36 @@ pub fn measure<F: FnMut()>(name: &str, protocol: Protocol, floats: u64, cells: u
     }
 }
 
+/// Append one JSON summary object for `bench` to the file named by
+/// `SDTW_BENCH_JSON` (JSON-lines, one object per call; no-op when the
+/// variable is unset).  The CI `bench-smoke` lane points every bench at
+/// one file and assembles the lines into the `BENCH_ci.json` artifact —
+/// the machine-readable perf trajectory the human tables cannot give
+/// CI.  Emission failures print a warning instead of failing the bench:
+/// a perf summary must never mask a correctness result.
+pub fn emit_json(bench: &str, fields: Vec<(&str, Json)>) {
+    let Ok(path) = std::env::var("SDTW_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    let mut pairs = vec![("bench", Json::str(bench))];
+    pairs.extend(fields);
+    let line = Json::obj(pairs).to_string();
+    let write = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| {
+            use std::io::Write;
+            writeln!(f, "{line}")
+        });
+    if let Err(e) = write {
+        eprintln!("warning: could not append bench summary to {path}: {e}");
+    }
+}
+
 /// Whether slow (paper-μ-scale) benches were requested.
 pub fn slow_benches_enabled() -> bool {
     std::env::var("SDTW_BENCH_SLOW").map(|v| v == "1").unwrap_or(false)
@@ -150,6 +181,29 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("x", &["a"]);
         t.row("r", vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn emit_json_appends_parseable_lines() {
+        let path =
+            std::env::temp_dir().join(format!("sdtw_bench_json_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("SDTW_BENCH_JSON", &path);
+        emit_json("demo", vec![("ms", Json::Num(1.5)), ("ok", Json::Bool(true))]);
+        emit_json("demo2", vec![("rows", Json::Int(3))]);
+        std::env::remove_var("SDTW_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).expect("file written");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).expect("valid json");
+        assert_eq!(first.get("bench").and_then(Json::as_str), Some("demo"));
+        assert_eq!(first.get("ms").and_then(Json::as_f64), Some(1.5));
+        let second = Json::parse(lines[1]).expect("valid json");
+        assert_eq!(second.get("rows").and_then(Json::as_i64), Some(3));
+        // unset env: a no-op, file untouched
+        emit_json("demo3", vec![]);
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -61,6 +61,12 @@ pub struct Metrics {
     /// survivor batches flushed through the DP kernel (lanes executed
     /// per batch = dp_abandoned + dp_full contributions of that flush)
     search_survivor_batches: AtomicU64,
+    /// envelope blocks evaluated through the LB prefilter kernel
+    search_lb_blocks: AtomicU64,
+    /// candidates evaluated across those LB blocks (occupancy numerator)
+    search_lb_evals: AtomicU64,
+    /// Keogh evaluations early-abandoned mid-sum (subset of pruned_keogh)
+    search_lb_abandons: AtomicU64,
     search_latency: Mutex<LatencyHistogram>,
     // ------------------------- sharded-executor counters
     searches_sharded: AtomicU64,
@@ -108,6 +114,9 @@ impl Metrics {
             search_dp_full: AtomicU64::new(0),
             search_skipped: AtomicU64::new(0),
             search_survivor_batches: AtomicU64::new(0),
+            search_lb_blocks: AtomicU64::new(0),
+            search_lb_evals: AtomicU64::new(0),
+            search_lb_abandons: AtomicU64::new(0),
             search_latency: Mutex::new(LatencyHistogram::new()),
             searches_sharded: AtomicU64::new(0),
             search_shards: AtomicU64::new(0),
@@ -139,6 +148,12 @@ impl Metrics {
             .fetch_add(stats.skipped, Ordering::Relaxed);
         self.search_survivor_batches
             .fetch_add(stats.survivor_batches, Ordering::Relaxed);
+        self.search_lb_blocks
+            .fetch_add(stats.lb_blocks, Ordering::Relaxed);
+        self.search_lb_evals
+            .fetch_add(stats.lb_evals, Ordering::Relaxed);
+        self.search_lb_abandons
+            .fetch_add(stats.lb_abandons, Ordering::Relaxed);
         self.search_latency.lock().unwrap().record_ms(latency_ms);
     }
 
@@ -233,6 +248,9 @@ impl Metrics {
         let dp_abandoned = self.search_dp_abandoned.load(Ordering::Relaxed);
         let dp_full = self.search_dp_full.load(Ordering::Relaxed);
         let survivor_batches = self.search_survivor_batches.load(Ordering::Relaxed);
+        // same single-load discipline for the LB occupancy pair
+        let lb_blocks = self.search_lb_blocks.load(Ordering::Relaxed);
+        let lb_evals = self.search_lb_evals.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -264,6 +282,14 @@ impl Metrics {
                 0.0
             } else {
                 (dp_abandoned + dp_full) as f64 / survivor_batches as f64
+            },
+            search_lb_blocks: lb_blocks,
+            search_lb_evals: lb_evals,
+            search_lb_abandons: self.search_lb_abandons.load(Ordering::Relaxed),
+            search_lb_block_occupancy_mean: if lb_blocks == 0 {
+                0.0
+            } else {
+                lb_evals as f64 / lb_blocks as f64
             },
             search_latency_mean_ms: search_latency.mean_ms(),
             search_latency_p50_ms: search_latency.percentile_ms(50.0),
@@ -345,6 +371,20 @@ pub struct MetricsSnapshot {
     /// survivor_batches`); 1.0 on the scalar path, approaches the lane
     /// count as lane batches fill, 0.0 before any batch has run.
     pub search_lane_occupancy_mean: f64,
+    /// Envelope blocks evaluated through the LB prefilter kernel across
+    /// all searches (Kim precompute blocks + Keogh verdict blocks; one
+    /// per candidate on the scalar prefilter path).
+    pub search_lb_blocks: u64,
+    /// Candidates evaluated across those LB blocks — the occupancy
+    /// numerator.
+    pub search_lb_evals: u64,
+    /// Keogh evaluations whose sum was early-abandoned before the final
+    /// query term (partial bound; a subset of `search_pruned_keogh`).
+    pub search_lb_abandons: u64,
+    /// Mean candidates per LB block (`search_lb_evals /
+    /// search_lb_blocks`); 1.0 on the scalar prefilter path, approaches
+    /// the block size as blocks fill, 0.0 before any block has run.
+    pub search_lb_block_occupancy_mean: f64,
     pub search_latency_mean_ms: f64,
     pub search_latency_p50_ms: f64,
     pub search_latency_p99_ms: f64,
@@ -428,6 +468,7 @@ impl MetricsSnapshot {
                 " searches={} windows={} pruned={:.1}% \
                  (kim={} keogh={} abandoned={} full_dp={}) \
                  survivor_batches={} lane_occupancy={:.2} \
+                 lb_blocks={} lb_occupancy={:.2} lb_abandons={} \
                  search_latency(mean/p50/p99)={:.2}/{:.2}/{:.2} ms",
                 self.searches,
                 self.search_windows,
@@ -438,6 +479,9 @@ impl MetricsSnapshot {
                 self.search_dp_full,
                 self.search_survivor_batches,
                 self.search_lane_occupancy_mean,
+                self.search_lb_blocks,
+                self.search_lb_block_occupancy_mean,
+                self.search_lb_abandons,
                 self.search_latency_mean_ms,
                 self.search_latency_p50_ms,
                 self.search_latency_p99_ms,
@@ -522,6 +566,9 @@ mod tests {
                 dp_full: 10,
                 skipped: 0,
                 survivor_batches: 5,
+                lb_blocks: 10,
+                lb_evals: 40,
+                lb_abandons: 12,
             },
         );
         m.on_search(
@@ -534,6 +581,9 @@ mod tests {
                 dp_full: 20,
                 skipped: 0,
                 survivor_batches: 5,
+                lb_blocks: 10,
+                lb_evals: 20,
+                lb_abandons: 0,
             },
         );
         let s = m.snapshot();
@@ -547,10 +597,17 @@ mod tests {
         assert_eq!(s.search_survivor_batches, 10);
         // 40 survivor lanes over 10 batches
         assert!((s.search_lane_occupancy_mean - 4.0).abs() < 1e-12);
+        assert_eq!(s.search_lb_blocks, 20);
+        assert_eq!(s.search_lb_evals, 60);
+        assert_eq!(s.search_lb_abandons, 12);
+        // 60 LB evaluations over 20 blocks
+        assert!((s.search_lb_block_occupancy_mean - 3.0).abs() < 1e-12);
         assert!((s.search_prune_fraction() - 0.85).abs() < 1e-12);
         assert!((s.search_latency_mean_ms - 3.0).abs() < 1e-9);
         assert!(s.render().contains("searches=2"));
         assert!(s.render().contains("survivor_batches=10"));
+        assert!(s.render().contains("lb_blocks=20"));
+        assert!(s.render().contains("lb_abandons=12"));
         // no sharded searches yet: the sharded block stays hidden
         assert_eq!(s.searches_sharded, 0);
         assert!(!s.render().contains("sharded="));
@@ -561,6 +618,8 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.search_survivor_batches, 0);
         assert_eq!(s.search_lane_occupancy_mean, 0.0);
+        assert_eq!(s.search_lb_blocks, 0);
+        assert_eq!(s.search_lb_block_occupancy_mean, 0.0);
     }
 
     #[test]
@@ -574,6 +633,9 @@ mod tests {
             dp_full: 10,
             skipped: 0,
             survivor_batches: 4,
+            lb_blocks: 8,
+            lb_evals: 30,
+            lb_abandons: 5,
         };
         m.on_search_sharded(2.0, &stats, 4, 12, Some(1.5));
         m.on_search_sharded(4.0, &stats, 8, 4, Some(2.5));

@@ -4,7 +4,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::dtw::kernel::{KernelKind, KernelSpec};
-use crate::search::{CascadeStats, Hit};
+use crate::search::{CascadeStats, Hit, LbKernelKind, LbKernelSpec};
 
 pub type RequestId = u64;
 
@@ -76,6 +76,14 @@ pub struct SearchOptions {
     /// Lane count for the lane kernel (0 = auto).  Ignored unless
     /// `kernel` is [`KernelKind::Lanes`].
     pub lanes: usize,
+    /// Lower-bound prefilter kernel for the Kim/Keogh stages: scalar
+    /// (default, per-candidate) or the SoA block kernel that evaluates
+    /// whole envelope blocks in lockstep.  Every choice returns
+    /// bit-identical hits (the cascade's τ-refresh argument).
+    pub lb_kernel: LbKernelKind,
+    /// Candidates per envelope block for the block LB kernel (0 =
+    /// auto).  Ignored unless `lb_kernel` is [`LbKernelKind::Block`].
+    pub lb_block: usize,
     /// Search the streaming session (grown by `append`) instead of the
     /// startup reference.  Serial streaming searches cascade only the
     /// candidates appended since the last identical search (the delta);
@@ -94,6 +102,8 @@ impl Default for SearchOptions {
             parallelism: 1,
             kernel: KernelKind::Scalar,
             lanes: 0,
+            lb_kernel: LbKernelKind::Scalar,
+            lb_block: 0,
             stream: false,
         }
     }
@@ -147,6 +157,14 @@ impl SearchOptions {
     /// single definition shared by the service and the CLI.
     pub fn resolve_kernel(&self) -> KernelSpec {
         KernelSpec { kind: self.kernel, width: 0, lanes: self.lanes }
+    }
+
+    /// Resolve the lower-bound prefilter fields into an [`LbKernelSpec`]
+    /// (auto block stays 0; `LbKernelSpec::instantiate` substitutes the
+    /// default).  The single definition shared by the service and the
+    /// CLI, mirroring [`SearchOptions::resolve_kernel`].
+    pub fn resolve_lb_kernel(&self) -> LbKernelSpec {
+        LbKernelSpec { kind: self.lb_kernel, block: self.lb_block }
     }
 }
 
@@ -214,6 +232,8 @@ mod tests {
         assert_eq!(o.parallelism, 1);
         assert_eq!(o.kernel, KernelKind::Scalar, "default is the oracle kernel");
         assert_eq!(o.lanes, 0);
+        assert_eq!(o.lb_kernel, LbKernelKind::Scalar, "default is the scalar prefilter");
+        assert_eq!(o.lb_block, 0);
         assert!(!o.stream, "default targets the startup reference");
     }
 
@@ -231,6 +251,19 @@ mod tests {
         let spec = o.resolve_kernel();
         assert_eq!(spec.kind, KernelKind::Lanes);
         assert_eq!(spec.lanes, 16);
+    }
+
+    #[test]
+    fn search_options_resolve_lb_kernel() {
+        assert_eq!(SearchOptions::default().resolve_lb_kernel(), LbKernelSpec::SCALAR);
+        let o = SearchOptions {
+            lb_kernel: LbKernelKind::Block,
+            lb_block: 32,
+            ..Default::default()
+        };
+        let spec = o.resolve_lb_kernel();
+        assert_eq!(spec.kind, LbKernelKind::Block);
+        assert_eq!(spec.block, 32);
     }
 
     #[test]

@@ -318,9 +318,12 @@ impl SdtwService {
             "window {window} exceeds reference length {reflen}"
         );
         let (shards, parallelism) = options.resolve_sharding();
-        // the stage-3 DP kernel rides inside the cascade options; any
-        // choice returns bit-identical hits (kernel-layer invariant)
-        let cascade_opts = CascadeOpts::default().with_kernel(options.resolve_kernel());
+        // the stage-3 DP kernel and the stage-1/2 LB prefilter kernel
+        // ride inside the cascade options; any choice returns
+        // bit-identical hits (kernel-layer + τ-refresh invariants)
+        let cascade_opts = CascadeOpts::default()
+            .with_kernel(options.resolve_kernel())
+            .with_lb(options.resolve_lb_kernel());
 
         let submitted = Instant::now();
         let engine = self.search_engine(window, stride)?;
@@ -379,7 +382,9 @@ impl SdtwService {
         options: SearchOptions,
     ) -> Result<SearchResponse> {
         let (shards, parallelism) = options.resolve_sharding();
-        let cascade_opts = CascadeOpts::default().with_kernel(options.resolve_kernel());
+        let cascade_opts = CascadeOpts::default()
+            .with_kernel(options.resolve_kernel())
+            .with_lb(options.resolve_lb_kernel());
         let submitted = Instant::now();
         let qn = normalize::znormed(&query);
 

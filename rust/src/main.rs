@@ -249,6 +249,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         .opt_default("kernel", "scalar", "survivor DP kernel: scalar|scan|lanes")
         .opt_default("lanes", "0", "lane count for --kernel lanes (0 = auto)")
         .opt_default("width", "0", "segment width for --kernel scan (0 = auto)")
+        .opt_default("lb-kernel", "scalar", "lower-bound prefilter kernel: scalar|block")
+        .opt_default("lb-block", "0", "candidates per block for --lb-kernel block (0 = auto)")
         .flag("no-cascade", "disable all pruning stages (brute force)")
         .flag("per-shard", "print one stats line per shard")
         .flag("verify", "cross-check hits against brute-force dtw::subsequence top-K");
@@ -275,6 +277,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     // one source of truth for "0 = auto" (shared with the service/protocol)
     let kernel_kind = sdtw_repro::dtw::KernelKind::from_name(a.get("kernel").unwrap())
         .context("kernel must be scalar|scan|lanes")?;
+    let lb_kind = sdtw_repro::search::LbKernelKind::from_name(a.get("lb-kernel").unwrap())
+        .context("lb-kernel must be scalar|block")?;
     let search_options = SearchOptions {
         k,
         window: a.get_or("window", 0usize)?,
@@ -284,6 +288,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         parallelism: a.get_or("parallel", 0usize)?,
         kernel: kernel_kind,
         lanes: a.get_or("lanes", 0usize)?,
+        lb_kernel: lb_kind,
+        lb_block: a.get_or("lb-block", 0usize)?,
         stream: false,
     };
     let (window, stride, exclusion) = search_options.resolve(qlen, reflen);
@@ -298,7 +304,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     } else {
         sdtw_repro::search::CascadeOpts::default()
     }
-    .with_kernel(kernel_spec);
+    .with_kernel(kernel_spec)
+    .with_lb(search_options.resolve_lb_kernel());
 
     let rn = Arc::new(normalize::znormed(&reference));
     let qn = normalize::znormed(&query);
@@ -330,6 +337,16 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
             String::new()
         }
     );
+    if lb_kind != sdtw_repro::search::LbKernelKind::Scalar {
+        println!(
+            "lb prefilter: {} kernel, block {}",
+            lb_kind.name(),
+            match search_options.lb_block {
+                0 => "auto".to_string(),
+                b => b.to_string(),
+            }
+        );
+    }
     for emb in &planted {
         println!("planted copy at {}..{}", emb.start, emb.end);
     }
@@ -351,7 +368,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     println!(
         "\nindex build {build_ms:.1} ms | search {search_ms:.2} ms | \
          pruned {:.1}% (kim={} keogh={} abandoned={} full_dp={}) | \
-         {} survivors in {} kernel batches (occupancy {:.2})",
+         {} survivors in {} kernel batches (occupancy {:.2}) | \
+         {} lb blocks (occupancy {:.2}, {} keogh abandons)",
         s.prune_fraction() * 100.0,
         s.pruned_kim,
         s.pruned_keogh,
@@ -359,7 +377,10 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         s.dp_full,
         s.survivors(),
         s.survivor_batches,
-        s.mean_lane_occupancy()
+        s.mean_lane_occupancy(),
+        s.lb_blocks,
+        s.mean_lb_block_occupancy(),
+        s.lb_abandons
     );
     if let Some(so) = &sharded {
         println!(
@@ -449,6 +470,8 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
     .opt_default("warmup", "0", "samples indexed before streaming starts (0 = 4*window)")
     .opt_default("kernel", "scalar", "survivor DP kernel: scalar|scan|lanes")
     .opt_default("lanes", "0", "lane count for --kernel lanes (0 = auto)")
+    .opt_default("lb-kernel", "scalar", "lower-bound prefilter kernel: scalar|block")
+    .opt_default("lb-block", "0", "candidates per block for --lb-kernel block (0 = auto)")
     .opt("input", "read the stream from a whitespace-separated float file ('-' = stdin)")
     .opt("query-input", "read the query from a float file (required with --input)")
     .flag("search-each-chunk", "delta-search after every append (default: only at the end)")
@@ -492,6 +515,8 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
 
     let kernel_kind = sdtw_repro::dtw::KernelKind::from_name(a.get("kernel").unwrap())
         .context("kernel must be scalar|scan|lanes")?;
+    let lb_kind = sdtw_repro::search::LbKernelKind::from_name(a.get("lb-kernel").unwrap())
+        .context("lb-kernel must be scalar|block")?;
     let probe = SearchOptions {
         k,
         window: a.get_or("window", 0usize)?,
@@ -499,11 +524,15 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
         exclusion: a.get_or("exclusion", 0usize)?,
         kernel: kernel_kind,
         lanes: a.get_or("lanes", 0usize)?,
+        lb_kernel: lb_kind,
+        lb_block: a.get_or("lb-block", 0usize)?,
         ..Default::default()
     };
     let (window, stride, exclusion) = probe.resolve(qlen, reflen);
     anyhow::ensure!(window <= reflen, "window {window} exceeds stream length {reflen}");
-    let opts = sdtw_repro::search::CascadeOpts::default().with_kernel(probe.resolve_kernel());
+    let opts = sdtw_repro::search::CascadeOpts::default()
+        .with_kernel(probe.resolve_kernel())
+        .with_lb(probe.resolve_lb_kernel());
 
     // normalization policy: the offline CLI has the whole stream up
     // front, so it normalizes once with full-stream stats — that is what
@@ -520,16 +549,19 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
         w.clamp(window, reflen)
     };
 
+    let mut executors = String::new();
+    if kernel_kind != sdtw_repro::dtw::KernelKind::Scalar {
+        executors.push_str(&format!(" | kernel {}", kernel_kind.name()));
+    }
+    if lb_kind != sdtw_repro::search::LbKernelKind::Scalar {
+        executors.push_str(&format!(" | lb {}", lb_kind.name()));
+    }
     println!(
         "stream {} ({reflen} samples) | query {qlen} | window {window} stride {stride} \
          exclusion {exclusion} | warmup {warmup}, then {}-sample appends{}",
         a.get("input").unwrap_or_else(|| a.get("family").unwrap()),
         chunk,
-        if kernel_kind != sdtw_repro::dtw::KernelKind::Scalar {
-            format!(" | kernel {}", kernel_kind.name())
-        } else {
-            String::new()
-        }
+        executors
     );
     for emb in &planted {
         println!("planted copy at {}..{}", emb.start, emb.end);

@@ -22,14 +22,17 @@ use crate::log_debug;
 
 /// Offline stand-in for the `xla` PJRT FFI crate.
 ///
-/// The real bindings are only linked when the crate is built with
-/// `RUSTFLAGS="--cfg sdtw_pjrt"` (and the `xla` dependency patched into
-/// Cargo.toml); the default build uses this stub so the serving stack,
-/// CPU substrate, and search subsystem build and test without the FFI
-/// toolchain.  `PjRtClient::cpu()` fails fast, so every other method is
-/// unreachable — [`Engine::start`] surfaces the error before any caller
-/// can submit work.
-#[cfg(not(sdtw_pjrt))]
+/// This facade compiles in **every** configuration — including
+/// `RUSTFLAGS="--cfg sdtw_pjrt"`, which CI checks on every push so the
+/// PJRT-gated code paths (this engine's callers, the
+/// `search::lb_kernel::PjrtLbKernel` seam) can never silently rot.
+/// Vendoring the real bindings (ROADMAP "Real PJRT builds in CI")
+/// means adding the `xla` dependency and replacing this module's body
+/// with `pub use ::xla::*;` — the facade's surface mirrors the crate's,
+/// so no caller changes.  Until then `PjRtClient::cpu()` fails fast, so
+/// every other method is unreachable — [`Engine::start`] surfaces the
+/// error before any caller can submit work, and the serving stack, CPU
+/// substrate, and search subsystem stay fully functional.
 #[allow(dead_code)]
 mod xla {
     use std::fmt;

@@ -2,13 +2,16 @@
 //!
 //! ```text
 //!   candidate windows (index)          per-stage counters
-//!        │ sort by LB_Kim ascending
+//!        │ LB_Kim over SoA envelope blocks (LbKernel), sort ascending
 //!        ▼
 //!   [stage 1: LB_Kim]  ── bound > τ ──► pruned_kim (and, because the
 //!        │                              list is sorted, everything
 //!        ▼                              after it — single cutoff)
-//!   [stage 2: LB_Keogh, early-abandoned at τ] ──► pruned_keogh
-//!        │ survivor
+//!   [envelope block]  ── full (lb.block()) ──► LbKernel::keogh @ τ
+//!        │                                       (lb_blocks++)
+//!        ▼
+//!   [stage 2: LB_Keogh verdicts, per-lane abandon] ──► pruned_keogh
+//!        │ survivor                                    (+ lb_abandons)
 //!        ▼
 //!   [pending batch]  ── full (kernel.lanes()) ──► flush
 //!        │                                          │
@@ -19,15 +22,31 @@
 //!     exact cost → bounded heap (τ) + hit list → greedy top-K
 //! ```
 //!
-//! Stage 3 runs through the unified DP-kernel layer
-//! ([`crate::dtw::kernel`]): survivors accumulate into a pending batch
-//! of [`DpKernel::lanes`] windows and are executed together at flush —
-//! one window at a time for the scalar/scan kernels (`lanes() == 1`,
-//! the historical cadence), or `L` windows in lockstep for the
-//! lane-batched executor.  Deferring a survivor's DP to its flush can
-//! only *delay* τ tightening, never tighten it past τ* — the admissible
-//! threshold argument below is batching-oblivious — so the returned
-//! top-K stays bit-identical for every kernel and lane count.
+//! Stages 1–2 run through the lower-bound kernel layer
+//! ([`super::lb_kernel`]): the Kim pass evaluates the whole candidate
+//! range in SoA envelope blocks, and Keogh survivor-candidates are
+//! admitted in blocks of [`LbKernel::block`] — one candidate at a time
+//! for the scalar kernel (`block() == 1`, the historical cadence), or
+//! `B` lanes in lockstep for the block kernel.  Stage 3 runs through
+//! the unified DP-kernel layer ([`crate::dtw::kernel`]): survivors
+//! accumulate into a pending batch of [`DpKernel::lanes`] windows and
+//! are executed together at flush.
+//!
+//! # τ-refresh soundness
+//!
+//! τ is read **once per envelope block** (and re-read at every DP
+//! flush).  Admissibility carries the proof: τ is monotonically
+//! non-increasing and never drops below τ*, the final K-th greedy
+//! pick's cost, so *any* stale-but-recent τ read is still admissible —
+//! a block admitted under the τ of its first candidate prunes only
+//! windows whose bound exceeds a value ≥ τ*.  Batching LB evaluation
+//! can therefore only *delay* pruning decisions (a block may evaluate
+//! candidates a per-candidate τ re-read would already have cut), never
+//! prune a true top-K window; same for deferring a survivor's DP to
+//! its flush, which can only delay τ tightening.  The returned top-K
+//! stays bit-identical for every LB kernel, block size, DP kernel, and
+//! lane count — only the per-stage *counters* shift between
+//! configurations, and they always partition the candidate space.
 //!
 //! τ is the [`BoundedCostHeap`] threshold: the `cap`-th smallest exact
 //! cost computed so far, with `cap` sized so that τ never drops below the
@@ -47,7 +66,7 @@ use crate::dtw::kernel::{self, DpKernel, KernelSpec, Lane};
 use crate::dtw::{Dist, Match};
 
 use super::index::CandidateIndex;
-use super::lower_bounds::{lb_keogh, lb_kim};
+use super::lb_kernel::{LbKernel, LbKernelSpec, LbVerdict};
 use super::topk::{prune_heap_cap, BoundedCostHeap, Hit};
 
 /// Source and sink of the cascade's prune threshold τ.
@@ -87,11 +106,21 @@ pub struct CascadeOpts {
     /// Stage-3 executor: scalar (default), exact blocked scan, or the
     /// lane-batched lockstep kernel.  Any choice is bit-identical.
     pub kernel: KernelSpec,
+    /// Stage-1/2 prefilter executor: scalar (default, per-candidate τ
+    /// re-reads — the historical cadence) or the SoA block kernel.
+    /// Any choice is bit-identical (module-level τ-refresh argument).
+    pub lb: LbKernelSpec,
 }
 
 impl Default for CascadeOpts {
     fn default() -> Self {
-        Self { kim: true, keogh: true, abandon: true, kernel: KernelSpec::SCALAR }
+        Self {
+            kim: true,
+            keogh: true,
+            abandon: true,
+            kernel: KernelSpec::SCALAR,
+            lb: LbKernelSpec::SCALAR,
+        }
     }
 }
 
@@ -102,11 +131,17 @@ impl CascadeOpts {
         keogh: false,
         abandon: false,
         kernel: KernelSpec::SCALAR,
+        lb: LbKernelSpec::SCALAR,
     };
 
     /// This configuration with a different stage-3 kernel.
     pub fn with_kernel(self, kernel: KernelSpec) -> CascadeOpts {
         CascadeOpts { kernel, ..self }
+    }
+
+    /// This configuration with a different stage-1/2 prefilter kernel.
+    pub fn with_lb(self, lb: LbKernelSpec) -> CascadeOpts {
+        CascadeOpts { lb, ..self }
     }
 }
 
@@ -130,6 +165,19 @@ pub struct CascadeStats {
     /// Survivor batches flushed through the DP kernel (each flush
     /// executes between 1 and `kernel.lanes()` windows together).
     pub survivor_batches: u64,
+    /// Envelope blocks evaluated through the LB kernel (Kim precompute
+    /// blocks + Keogh verdict blocks; each holds between 1 and
+    /// `lb.block()` candidates).
+    pub lb_blocks: u64,
+    /// Candidates evaluated across those LB blocks (the occupancy
+    /// numerator: every Kim precompute evaluation plus every Keogh
+    /// verdict).
+    pub lb_evals: u64,
+    /// Keogh evaluations whose sum was early-abandoned (a partial bound
+    /// crossed τ before the final query term) — a subset of
+    /// `pruned_keogh`.  Separating them keeps stage accounting exact:
+    /// `pruned_keogh - lb_abandons` Keogh sums ran to completion.
+    pub lb_abandons: u64,
 }
 
 impl CascadeStats {
@@ -164,6 +212,17 @@ impl CascadeStats {
         }
     }
 
+    /// Mean candidates per LB kernel block (the prefilter-occupancy
+    /// number: approaches `lb.block()` as blocks fill, 1.0 on the
+    /// scalar path, 0.0 before any block has run).
+    pub fn mean_lb_block_occupancy(&self) -> f64 {
+        if self.lb_blocks == 0 {
+            0.0
+        } else {
+            self.lb_evals as f64 / self.lb_blocks as f64
+        }
+    }
+
     pub fn merge(&mut self, other: &CascadeStats) {
         self.candidates += other.candidates;
         self.pruned_kim += other.pruned_kim;
@@ -172,6 +231,9 @@ impl CascadeStats {
         self.dp_full += other.dp_full;
         self.skipped += other.skipped;
         self.survivor_batches += other.survivor_batches;
+        self.lb_blocks += other.lb_blocks;
+        self.lb_evals += other.lb_evals;
+        self.lb_abandons += other.lb_abandons;
     }
 }
 
@@ -263,20 +325,58 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         return (hits, stats);
     }
 
-    // stage 1 precompute: LB_Kim per candidate, processed cheapest-first
-    let mut order: Vec<(f32, usize)> = range
-        .map(|t| {
-            let lb = if opts.kim {
-                let (lo, hi) = index.envelope(t);
-                lb_kim(query, lo, hi, dist)
-            } else {
-                0.0
-            };
-            (lb, t)
-        })
-        .collect();
+    // stage-1/2 prefilter executor: envelopes are SoA-packed into
+    // blocks of `lb.block()` candidates and evaluated in lockstep (1
+    // for the scalar kernel — the historical per-candidate cadence).
+    let mut lb = opts.lb.instantiate();
+    let b_cap = lb.block().max(1);
+    let mut env = EnvBufs {
+        ids: Vec::with_capacity(b_cap),
+        lo: Vec::with_capacity(b_cap),
+        hi: Vec::with_capacity(b_cap),
+        verdicts: Vec::with_capacity(b_cap),
+    };
+
+    // stage 1 precompute: LB_Kim over the whole range through the LB
+    // kernel, block by block, then sorted cheapest-first
+    let mut order: Vec<(f32, usize)> = Vec::with_capacity(range.len());
     if opts.kim {
+        let mut kim_out: Vec<f32> = Vec::with_capacity(b_cap);
+        let mut block = Vec::with_capacity(b_cap);
+        for t in range {
+            let (lo, hi) = index.envelope(t);
+            block.push(t);
+            env.lo.push(lo);
+            env.hi.push(hi);
+            if block.len() == b_cap {
+                kim_block(
+                    lb.as_mut(),
+                    query,
+                    dist,
+                    &mut env,
+                    &block,
+                    &mut kim_out,
+                    &mut stats,
+                    &mut order,
+                );
+                block.clear();
+            }
+        }
+        if !block.is_empty() {
+            kim_block(
+                lb.as_mut(),
+                query,
+                dist,
+                &mut env,
+                &block,
+                &mut kim_out,
+                &mut stats,
+                &mut order,
+            );
+        }
         order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    } else {
+        order.extend(range.map(|t| (0.0f32, t)));
     }
 
     // stage 3 executor: survivors accumulate into `pending` and are
@@ -292,33 +392,83 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         results: Vec::with_capacity(lane_cap),
     };
 
-    for (i, &(kim, t)) in order.iter().enumerate() {
+    let mut i = 0usize;
+    while i < order.len() {
+        // one τ read per envelope block: admissible (τ only tightens —
+        // module-level τ-refresh argument), and with the scalar LB
+        // kernel (block = 1) exactly the historical per-candidate read
         let tau = tau_sink.tau();
-        if opts.kim && kim > tau {
+        if opts.kim && order[i].0 > tau {
             // sorted ascending: everything from here on is also above τ
             stats.pruned_kim += (order.len() - i) as u64;
             break;
         }
-        if opts.keogh {
-            let (lo, hi) = index.envelope(t);
-            if lb_keogh(query, lo, hi, dist, tau) > tau {
-                stats.pruned_keogh += 1;
-                continue;
+        // admit up to `b_cap` candidates under this τ's Kim cutoff
+        env.ids.clear();
+        env.lo.clear();
+        env.hi.clear();
+        let mut cutoff = false;
+        while i < order.len() && env.ids.len() < b_cap {
+            let (kim, t) = order[i];
+            if opts.kim && kim > tau {
+                stats.pruned_kim += (order.len() - i) as u64;
+                cutoff = true;
+                break;
+            }
+            env.ids.push(t);
+            if opts.keogh {
+                let (lo, hi) = index.envelope(t);
+                env.lo.push(lo);
+                env.hi.push(hi);
+            }
+            i += 1;
+        }
+        if opts.keogh && !env.ids.is_empty() {
+            // stage 2: one lockstep Keogh pass over the admitted block
+            stats.lb_blocks += 1;
+            stats.lb_evals += env.ids.len() as u64;
+            lb.keogh(query, &env.lo, &env.hi, dist, tau, &mut env.verdicts);
+            for (&t, v) in env.ids.iter().zip(env.verdicts.iter()) {
+                if v.pruned {
+                    stats.pruned_keogh += 1;
+                    if v.abandoned {
+                        stats.lb_abandons += 1;
+                    }
+                    continue;
+                }
+                admit_survivor(
+                    t,
+                    lane_cap,
+                    kernel.as_mut(),
+                    index,
+                    query,
+                    dist,
+                    opts.abandon,
+                    &mut flush,
+                    tau_sink,
+                    &mut stats,
+                    &mut hits,
+                );
+            }
+        } else {
+            for &t in &env.ids {
+                admit_survivor(
+                    t,
+                    lane_cap,
+                    kernel.as_mut(),
+                    index,
+                    query,
+                    dist,
+                    opts.abandon,
+                    &mut flush,
+                    tau_sink,
+                    &mut stats,
+                    &mut hits,
+                );
             }
         }
-        flush.pending.push(t);
-        if flush.pending.len() >= lane_cap {
-            flush_survivors(
-                kernel.as_mut(),
-                index,
-                query,
-                dist,
-                opts.abandon,
-                &mut flush,
-                tau_sink,
-                &mut stats,
-                &mut hits,
-            );
+        if cutoff {
+            break;
         }
     }
     // the tail batch (and any survivors pending when the LB_Kim cutoff
@@ -335,6 +485,67 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         &mut hits,
     );
     (hits, stats)
+}
+
+/// Reusable SoA envelope-block buffers (hoisted out of the candidate
+/// loop, like [`FlushBufs`]).
+struct EnvBufs {
+    /// Candidate ids in the current block.
+    ids: Vec<usize>,
+    /// Per-candidate window minima, parallel to `ids`.
+    lo: Vec<f32>,
+    /// Per-candidate window maxima, parallel to `ids`.
+    hi: Vec<f32>,
+    /// Per-candidate Keogh verdicts (refilled per block).
+    verdicts: Vec<LbVerdict>,
+}
+
+/// Run one Kim precompute block through the LB kernel and append the
+/// `(bound, id)` pairs to `order`.  `env.lo`/`env.hi` hold the block's
+/// envelopes on entry and are drained.
+#[allow(clippy::too_many_arguments)]
+fn kim_block(
+    lb: &mut dyn LbKernel,
+    query: &[f32],
+    dist: Dist,
+    env: &mut EnvBufs,
+    block: &[usize],
+    kim_out: &mut Vec<f32>,
+    stats: &mut CascadeStats,
+    order: &mut Vec<(f32, usize)>,
+) {
+    stats.lb_blocks += 1;
+    stats.lb_evals += block.len() as u64;
+    lb.kim(query, &env.lo, &env.hi, dist, kim_out);
+    for (&t, &bound) in block.iter().zip(kim_out.iter()) {
+        order.push((bound, t));
+    }
+    env.lo.clear();
+    env.hi.clear();
+}
+
+/// Admit one LB-surviving candidate to stage 3: push it onto the
+/// pending batch and flush through the DP kernel once the batch holds
+/// `lane_cap` windows.  The single flush-trigger site shared by the
+/// Keogh-enabled and Keogh-disabled admit paths.
+#[allow(clippy::too_many_arguments)]
+fn admit_survivor<'a, I: CandidateIndex + ?Sized>(
+    t: usize,
+    lane_cap: usize,
+    kernel: &mut dyn DpKernel,
+    index: &'a I,
+    query: &'a [f32],
+    dist: Dist,
+    abandon: bool,
+    flush: &mut FlushBufs<'a>,
+    tau_sink: &mut impl TauSink,
+    stats: &mut CascadeStats,
+    hits: &mut Vec<Hit>,
+) {
+    flush.pending.push(t);
+    if flush.pending.len() >= lane_cap {
+        flush_survivors(kernel, index, query, dist, abandon, flush, tau_sink, stats, hits);
+    }
 }
 
 /// Reusable survivor-flush buffers (hoisted out of the candidate loop).
@@ -597,6 +808,93 @@ mod tests {
         assert_eq!(s8.survivor_batches, index.candidates().div_ceil(8) as u64);
         assert!(s8.mean_lane_occupancy() > 1.0);
         assert_eq!(s8.survivors(), s1.survivors());
+    }
+
+    #[test]
+    fn block_lb_cascade_matches_scalar_lb_topk() {
+        let mut g = Xoshiro256::new(39);
+        for trial in 0..20 {
+            let n = 100 + g.below(150) as usize;
+            let r = Arc::new(g.normal_vec_f32(n));
+            let m = 4 + g.below(8) as usize;
+            let window = (m + g.below(8) as usize).min(n);
+            let index = ReferenceIndex::build(r, window, 1).unwrap();
+            let q = g.normal_vec_f32(m);
+            let k = 1 + g.below(3) as usize;
+            let exclusion = 1 + g.below(window as u64) as usize;
+            let all = 0..index.candidates();
+            let base = search_range(
+                &index,
+                &q,
+                Dist::Sq,
+                k,
+                exclusion,
+                CascadeOpts::default(),
+                all.clone(),
+            );
+            let base_picks = select_topk(&base.0, k, exclusion);
+            for spec in [
+                crate::search::LbKernelSpec::block(1),
+                crate::search::LbKernelSpec::block(3),
+                crate::search::LbKernelSpec::block(8),
+                crate::search::LbKernelSpec::block(0), // auto (64)
+            ] {
+                let opts = CascadeOpts::default().with_lb(spec);
+                let (hits, stats) =
+                    search_range(&index, &q, Dist::Sq, k, exclusion, opts, all.clone());
+                let picks = select_topk(&hits, k, exclusion);
+                assert_hits_identical(&picks, &base_picks);
+                assert_eq!(
+                    stats.pruned_total() + stats.dp_full,
+                    stats.candidates,
+                    "trial {trial} {spec:?}: counters must partition candidates"
+                );
+                assert!(stats.lb_abandons <= stats.pruned_keogh, "abandons are a subset");
+                assert!(stats.lb_blocks >= 1, "kim precompute ran in blocks");
+                assert_eq!(stats.survivors(), stats.dp_abandoned + stats.dp_full);
+            }
+            // block LB composes with the lane-batched DP kernel
+            let opts = CascadeOpts::default()
+                .with_lb(crate::search::LbKernelSpec::block(8))
+                .with_kernel(crate::dtw::KernelSpec::lanes(4));
+            let (hits, stats) = search_range(&index, &q, Dist::Sq, k, exclusion, opts, all);
+            assert_hits_identical(&select_topk(&hits, k, exclusion), &base_picks);
+            assert_eq!(stats.pruned_total() + stats.dp_full, stats.candidates);
+        }
+    }
+
+    #[test]
+    fn lb_blocks_counted_with_occupancy() {
+        let mut g = Xoshiro256::new(40);
+        let r = Arc::new(g.normal_vec_f32(120));
+        let index = ReferenceIndex::build(r, 16, 1).unwrap();
+        let q = g.normal_vec_f32(10);
+        let all = 0..index.candidates();
+        // scalar LB: one block per evaluation, occupancy exactly 1
+        let (_, s1) = search_range(
+            &index,
+            &q,
+            Dist::Sq,
+            3,
+            8,
+            CascadeOpts::default(),
+            all.clone(),
+        );
+        assert!(s1.lb_blocks >= index.candidates() as u64, "kim pass alone is one per candidate");
+        assert_eq!(s1.lb_evals, s1.lb_blocks, "scalar blocks hold one candidate");
+        assert!((s1.mean_lb_block_occupancy() - 1.0).abs() < 1e-12);
+        // block LB: the kim precompute uses ceil(candidates / B) blocks,
+        // and occupancy rises above 1
+        let opts = CascadeOpts::default().with_lb(crate::search::LbKernelSpec::block(8));
+        let (_, s8) = search_range(&index, &q, Dist::Sq, 3, 8, opts, all.clone());
+        assert!(s8.lb_blocks < s1.lb_blocks);
+        assert!(s8.mean_lb_block_occupancy() > 1.0);
+        // brute force never touches the LB kernel
+        let (_, sb) = search_range(&index, &q, Dist::Sq, 3, 8, CascadeOpts::BRUTE, all);
+        assert_eq!(sb.lb_blocks, 0);
+        assert_eq!(sb.lb_evals, 0);
+        assert_eq!(sb.lb_abandons, 0);
+        assert_eq!(sb.mean_lb_block_occupancy(), 0.0);
     }
 
     #[test]

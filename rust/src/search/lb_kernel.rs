@@ -1,0 +1,624 @@
+//! The batched lower-bound prefilter kernel layer.
+//!
+//! PR 3 gave stage 3 of the cascade a unified dispatch surface
+//! ([`crate::dtw::kernel::DpKernel`]); this module does the same for the
+//! *cheap* end of the pipeline, which until now was the least batched
+//! one: LB_Kim / LB_Keogh ran as scalar calls into
+//! [`super::lower_bounds`], one candidate window at a time.  Envelope
+//! lower bounds are embarrassingly parallel — every candidate is an
+//! independent `(lo, hi)` interval against the same query — so the
+//! prefilter is exactly the shape the paper batches: many independent
+//! work items advanced in lockstep with a tuned per-thread width.
+//!
+//! [`LbKernel`] is the dispatch surface: the query plus an SoA-packed
+//! block of candidate envelopes (`lo[k]`, `hi[k]` parallel slices) goes
+//! in; per-candidate admissible bounds come out — raw LB_Kim values for
+//! the sort stage, and [`LbVerdict`]s (bound + pass/prune + abandoned)
+//! against the caller's current τ for the Keogh stage.  Two host
+//! implementations:
+//!
+//! * [`ScalarLbKernel`] — one candidate at a time through the
+//!   [`super::lower_bounds`] oracles; block size 1, the historical
+//!   cascade cadence and the referee the block kernel is proven against.
+//! * [`BlockLbKernel`]  — up to `B` candidates advanced one query row at
+//!   a time in lockstep: for a fixed query element the inner loop over
+//!   lanes is a contiguous, dependency-free sweep (auto-vectorizable —
+//!   the same thread-coarsening-as-SIMD-lanes trick as
+//!   [`crate::dtw::kernel::LaneKernel`]), with per-lane early-abandon
+//!   masks so a lane whose partial sum exceeds τ freezes while its
+//!   siblings keep accumulating.
+//!
+//! # Bit-identity
+//!
+//! Both kernels produce, for every candidate, **bit-identical** bounds
+//! and identical pruned/abandoned flags to the scalar
+//! [`super::lower_bounds::lb_kim`] / [`lb_keogh_verdict`] loops at the
+//! same τ: each lane's sum accumulates the same terms in the same query
+//! order with plain sequential f32 adds, and a masked lane stops after
+//! exactly the same term the scalar loop returns at.
+//! `tests/prop_lb_kernel.rs` enforces this over ragged block sizes,
+//! both [`Dist`] variants, and random thresholds.
+//!
+//! # The PJRT seam
+//!
+//! [`PjrtLbKernel`] (built with `RUSTFLAGS="--cfg sdtw_pjrt"`) is the
+//! documented device seam: it stages blocks in exactly the SoA layout a
+//! compiled batch-LB artifact consumes and routes them through
+//! [`PjrtLbKernel::dispatch_block`], which is where the
+//! `runtime::EngineHandle::execute` call slots in once the `xla` FFI
+//! bindings are vendored (ROADMAP "Real PJRT builds in CI").  Until
+//! then it executes the host block kernel, so the seam stays
+//! bit-identical and CI's `--cfg sdtw_pjrt` check lane keeps it
+//! compiling.
+
+use crate::dtw::Dist;
+
+use super::lower_bounds::{interval_gap, lb_keogh_verdict, lb_kim};
+
+/// One candidate's Keogh-stage outcome against the τ the caller passed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LbVerdict {
+    /// The admissible lower bound computed.  A *partial* sum when
+    /// `abandoned` is set — still admissible (terms are non-negative).
+    pub bound: f32,
+    /// `bound > τ`: the candidate cannot beat the threshold and is cut.
+    pub pruned: bool,
+    /// The sum crossed τ before the final query term was consumed, so
+    /// `bound` is partial — the evaluation was early-abandoned, not a
+    /// full LB_Keogh.  Always implies `pruned`.  The cascade counts
+    /// these separately (`lb_abandons`) so METRICS.md stage accounting
+    /// distinguishes full Keogh evaluations from abandoned ones.
+    pub abandoned: bool,
+}
+
+/// A batched lower-bound executor.
+///
+/// Blocks arrive SoA-packed: `lo[k]`/`hi[k]` are candidate `k`'s window
+/// envelope (parallel slices of equal length).  Implementations take
+/// `&mut self` so they can reuse internal scratch across calls; they
+/// hold no result state between calls.
+pub trait LbKernel {
+    /// Kernel name for logs/metrics (`"scalar"`, `"block"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Preferred block size: the cascade packs and flushes envelope
+    /// blocks of this many candidates.  1 = evaluate immediately (the
+    /// historical per-candidate cadence).
+    fn block(&self) -> usize {
+        1
+    }
+
+    /// LB_Kim for every candidate in the block (full bound, no
+    /// abandoning — the sort stage needs every value).  `out` is
+    /// cleared and refilled, one entry per candidate, in block order;
+    /// each entry is bit-identical to
+    /// [`super::lower_bounds::lb_kim`] on that candidate.
+    fn kim(&mut self, query: &[f32], lo: &[f32], hi: &[f32], dist: Dist, out: &mut Vec<f32>);
+
+    /// LB_Keogh verdicts against `tau` for every candidate in the
+    /// block.  `out` is cleared and refilled, one [`LbVerdict`] per
+    /// candidate, in block order; each is bit-identical to
+    /// [`lb_keogh_verdict`] on that candidate at the same `tau`.
+    fn keogh(
+        &mut self,
+        query: &[f32],
+        lo: &[f32],
+        hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    );
+}
+
+/// Which lower-bound kernel implementation to dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LbKernelKind {
+    /// One candidate at a time through the scalar oracles.
+    #[default]
+    Scalar,
+    /// SoA lane-batched lockstep evaluation, `B` candidates per block.
+    Block,
+    /// The compiled-artifact seam (host fallback until the FFI lands).
+    /// Only constructible in `--cfg sdtw_pjrt` builds.
+    #[cfg(sdtw_pjrt)]
+    Pjrt,
+}
+
+impl LbKernelKind {
+    pub fn from_name(s: &str) -> Option<LbKernelKind> {
+        match s {
+            "scalar" => Some(LbKernelKind::Scalar),
+            "block" => Some(LbKernelKind::Block),
+            #[cfg(sdtw_pjrt)]
+            "pjrt" => Some(LbKernelKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LbKernelKind::Scalar => "scalar",
+            LbKernelKind::Block => "block",
+            #[cfg(sdtw_pjrt)]
+            LbKernelKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Default block size for [`BlockLbKernel`] when unspecified.  Envelope
+/// verdicts are ~two flops per query row per lane, so the sweet spot is
+/// wider than the DP kernel's lane count — 64 keeps the whole SoA block
+/// (lo/hi/sums/masks) inside L1 for every query length we serve.
+pub const DEFAULT_LB_BLOCK: usize = 64;
+/// Upper bound [`LbKernelSpec::instantiate`] clamps block sizes to.
+/// `lb_block` arrives from the wire protocol and the CLI; scratch
+/// buffers scale with it, so unbounded values would let one request
+/// allocate arbitrarily.  Results are bit-identical at any value, so
+/// clamping is behavior-preserving.
+pub const MAX_LB_BLOCK: usize = 4096;
+
+/// A serializable lower-bound kernel selection: kind plus block size
+/// (0 = auto).  Travels through `SearchOptions` and the wire protocol;
+/// [`LbKernelSpec::instantiate`] turns it into a concrete executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LbKernelSpec {
+    pub kind: LbKernelKind,
+    /// Candidates per block for the block kernel (0 = [`DEFAULT_LB_BLOCK`]).
+    pub block: usize,
+}
+
+impl LbKernelSpec {
+    /// The oracle path: scalar, per-candidate — the crate-wide default.
+    pub const SCALAR: LbKernelSpec = LbKernelSpec { kind: LbKernelKind::Scalar, block: 0 };
+
+    pub fn block(block: usize) -> LbKernelSpec {
+        LbKernelSpec { kind: LbKernelKind::Block, block }
+    }
+
+    /// Build the concrete executor, resolving the auto (zero) block and
+    /// clamping the wire-controlled size to [`MAX_LB_BLOCK`].
+    pub fn instantiate(&self) -> Box<dyn LbKernel> {
+        let block = if self.block == 0 { DEFAULT_LB_BLOCK } else { self.block };
+        match self.kind {
+            LbKernelKind::Scalar => Box::new(ScalarLbKernel::new()),
+            LbKernelKind::Block => Box::new(BlockLbKernel::new(block.min(MAX_LB_BLOCK))),
+            #[cfg(sdtw_pjrt)]
+            LbKernelKind::Pjrt => Box::new(PjrtLbKernel::new(block.min(MAX_LB_BLOCK))),
+        }
+    }
+}
+
+impl Default for LbKernelSpec {
+    fn default() -> Self {
+        LbKernelSpec::SCALAR
+    }
+}
+
+// ------------------------------------------------------------- scalar
+
+/// One candidate at a time through the [`super::lower_bounds`] oracles
+/// — the referee implementation, and the historical cascade cadence
+/// (`block() == 1` means τ is re-read per candidate, exactly the
+/// pre-kernel loop).
+#[derive(Debug, Default)]
+pub struct ScalarLbKernel;
+
+impl ScalarLbKernel {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl LbKernel for ScalarLbKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn kim(&mut self, query: &[f32], lo: &[f32], hi: &[f32], dist: Dist, out: &mut Vec<f32>) {
+        assert_eq!(lo.len(), hi.len(), "ragged envelope block");
+        out.clear();
+        for (&l, &h) in lo.iter().zip(hi) {
+            out.push(lb_kim(query, l, h, dist));
+        }
+    }
+
+    fn keogh(
+        &mut self,
+        query: &[f32],
+        lo: &[f32],
+        hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        assert_eq!(lo.len(), hi.len(), "ragged envelope block");
+        out.clear();
+        for (&l, &h) in lo.iter().zip(hi) {
+            out.push(lb_keogh_verdict(query, l, h, dist, tau));
+        }
+    }
+}
+
+// -------------------------------------------------------------- block
+
+/// The SoA lane-batched lower-bound executor: up to `B` candidate
+/// envelopes advanced one query row at a time in lockstep.
+///
+/// Per query element the inner loop over lanes has no loop-carried
+/// dependency — `sums[k] += gap(q[i], lo[k], hi[k])` for contiguous
+/// `k` — so the compiler can vectorize it; the per-lane mask freezes a
+/// lane the moment its partial sum crosses τ (after exactly the same
+/// term the scalar loop returns at, keeping the partial bound
+/// bit-identical), and the whole block stops once every lane is frozen.
+#[derive(Debug)]
+pub struct BlockLbKernel {
+    capacity: usize,
+    sums: Vec<f32>,
+    /// Per-lane live mask (false = frozen: pruned, sum is final).
+    live: Vec<bool>,
+    /// Per-lane "froze before the final query term" flag.
+    abandoned: Vec<bool>,
+}
+
+impl BlockLbKernel {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "block size must be >= 1");
+        Self { capacity, sums: Vec::new(), live: Vec::new(), abandoned: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// One chunk of at most `capacity` lanes, appending verdicts to
+    /// `out`.
+    fn keogh_chunk(
+        &mut self,
+        query: &[f32],
+        lo: &[f32],
+        hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        let b = lo.len();
+        debug_assert!(b >= 1 && b <= self.capacity);
+        let m = query.len();
+        self.sums.clear();
+        self.sums.resize(b, 0.0);
+        self.live.clear();
+        self.live.resize(b, true);
+        self.abandoned.clear();
+        self.abandoned.resize(b, false);
+        let mut n_live = b;
+        for (i, &q) in query.iter().enumerate() {
+            if n_live == 0 {
+                break;
+            }
+            if n_live == b {
+                // fast path: no lane frozen yet — a contiguous,
+                // dependency-free sweep the compiler can vectorize
+                for k in 0..b {
+                    self.sums[k] += interval_gap(q, lo[k], hi[k], dist);
+                }
+                for k in 0..b {
+                    if self.sums[k] > tau {
+                        self.live[k] = false;
+                        self.abandoned[k] = i + 1 < m;
+                        n_live -= 1;
+                    }
+                }
+            } else {
+                // masked path: frozen lanes keep their partial sum — the
+                // moment a lane's sum crosses τ it stops accumulating,
+                // exactly where the scalar loop returns
+                for k in 0..b {
+                    if !self.live[k] {
+                        continue;
+                    }
+                    self.sums[k] += interval_gap(q, lo[k], hi[k], dist);
+                    if self.sums[k] > tau {
+                        self.live[k] = false;
+                        self.abandoned[k] = i + 1 < m;
+                        n_live -= 1;
+                    }
+                }
+            }
+        }
+        for k in 0..b {
+            let bound = self.sums[k];
+            out.push(LbVerdict { bound, pruned: bound > tau, abandoned: self.abandoned[k] });
+        }
+    }
+}
+
+impl LbKernel for BlockLbKernel {
+    fn name(&self) -> &'static str {
+        "block"
+    }
+
+    fn block(&self) -> usize {
+        self.capacity
+    }
+
+    fn kim(&mut self, query: &[f32], lo: &[f32], hi: &[f32], dist: Dist, out: &mut Vec<f32>) {
+        assert_eq!(lo.len(), hi.len(), "ragged envelope block");
+        assert!(!query.is_empty(), "empty query");
+        out.clear();
+        out.reserve(lo.len());
+        let q0 = query[0];
+        if query.len() == 1 {
+            for k in 0..lo.len() {
+                out.push(interval_gap(q0, lo[k], hi[k], dist));
+            }
+        } else {
+            let qz = query[query.len() - 1];
+            // same expression shape as `lb_kim`: first + last, one add —
+            // bit-identical per lane, contiguous over lanes
+            for k in 0..lo.len() {
+                out.push(
+                    interval_gap(q0, lo[k], hi[k], dist) + interval_gap(qz, lo[k], hi[k], dist),
+                );
+            }
+        }
+    }
+
+    fn keogh(
+        &mut self,
+        query: &[f32],
+        lo: &[f32],
+        hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        assert_eq!(lo.len(), hi.len(), "ragged envelope block");
+        assert!(!query.is_empty(), "empty query");
+        out.clear();
+        for (lo_c, hi_c) in lo.chunks(self.capacity).zip(hi.chunks(self.capacity)) {
+            self.keogh_chunk(query, lo_c, hi_c, dist, tau, out);
+        }
+    }
+}
+
+// --------------------------------------------------------------- pjrt
+
+/// The compiled-artifact (PJRT) lower-bound seam, built only with
+/// `RUSTFLAGS="--cfg sdtw_pjrt"`.
+///
+/// The device story for the prefilter is the ROADMAP's "GPU-side lower
+/// bounds" item: envelope bounds over *all* candidate windows are one
+/// embarrassingly-parallel elementwise kernel, so a compiled batch-LB
+/// artifact can evaluate an entire block per dispatch and return only
+/// the survivors to the host cascade.  This type is the seam that keeps
+/// that landing site honest:
+///
+/// * blocks arrive already SoA-packed (`lo[k]`/`hi[k]` parallel slices)
+///   — byte-for-byte the layout a `(query, lo, hi, tau) -> (bounds,
+///   mask)` artifact consumes, so wiring the FFI changes no caller;
+/// * [`PjrtLbKernel::dispatch_block`] is the single point where a
+///   `runtime::EngineHandle::execute` call replaces the host fallback
+///   once the `xla` bindings are vendored (ROADMAP "Real PJRT builds in
+///   CI");
+/// * until then the host [`BlockLbKernel`] executes every dispatched
+///   block, so results stay bit-identical and the CI `--cfg sdtw_pjrt`
+///   check lane proves this seam still compiles on every push.
+#[cfg(sdtw_pjrt)]
+#[derive(Debug)]
+pub struct PjrtLbKernel {
+    host: BlockLbKernel,
+    /// Per-dispatch verdict staging (what the device round-trip would
+    /// decode into before the host-side merge).
+    staged: Vec<LbVerdict>,
+    /// Blocks routed through the dispatch point (telemetry for the
+    /// artifact-backed integration tests).
+    dispatched: u64,
+}
+
+#[cfg(sdtw_pjrt)]
+impl PjrtLbKernel {
+    pub fn new(capacity: usize) -> Self {
+        Self { host: BlockLbKernel::new(capacity), staged: Vec::new(), dispatched: 0 }
+    }
+
+    /// Blocks that crossed the dispatch seam so far.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// The device dispatch point.  A vendored build replaces this body
+    /// with: stage `lo`/`hi` as one `HostTensor` pair, execute the
+    /// batch-LB artifact, decode `(bounds, mask)` into verdicts.  The
+    /// host fallback keeps the seam bit-identical meanwhile.
+    fn dispatch_block(
+        &mut self,
+        query: &[f32],
+        lo: &[f32],
+        hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        self.dispatched += 1;
+        self.host.keogh(query, lo, hi, dist, tau, &mut self.staged);
+        debug_assert_eq!(self.staged.len(), lo.len());
+        out.extend_from_slice(&self.staged);
+    }
+}
+
+#[cfg(sdtw_pjrt)]
+impl LbKernel for PjrtLbKernel {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn block(&self) -> usize {
+        self.host.capacity()
+    }
+
+    fn kim(&mut self, query: &[f32], lo: &[f32], hi: &[f32], dist: Dist, out: &mut Vec<f32>) {
+        // the sort stage's full-range Kim pass stays on the host even
+        // with a device artifact (it is one cheap fused sweep); only
+        // the Keogh verdict blocks cross the dispatch seam
+        self.host.kim(query, lo, hi, dist, out);
+    }
+
+    fn keogh(
+        &mut self,
+        query: &[f32],
+        lo: &[f32],
+        hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        assert_eq!(lo.len(), hi.len(), "ragged envelope block");
+        out.clear();
+        let cap = self.host.capacity();
+        for (lo_c, hi_c) in lo.chunks(cap).zip(hi.chunks(cap)) {
+            self.dispatch_block(query, lo_c, hi_c, dist, tau, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::lower_bounds::lb_keogh;
+    use crate::util::rng::Xoshiro256;
+
+    fn envelopes(g: &mut Xoshiro256, b: usize) -> (Vec<f32>, Vec<f32>) {
+        let lo: Vec<f32> = g.normal_vec_f32(b);
+        let hi: Vec<f32> = lo.iter().map(|&l| l + g.uniform(0.0, 2.0) as f32).collect();
+        (lo, hi)
+    }
+
+    #[test]
+    fn block_kim_matches_scalar_bitwise() {
+        let mut g = Xoshiro256::new(91);
+        for _ in 0..100 {
+            let q = g.normal_vec_f32(1 + g.below(12) as usize);
+            let (lo, hi) = envelopes(&mut g, 1 + g.below(70) as usize);
+            for dist in [Dist::Sq, Dist::Abs] {
+                let mut want = Vec::new();
+                let mut got = Vec::new();
+                ScalarLbKernel::new().kim(&q, &lo, &hi, dist, &mut want);
+                BlockLbKernel::new(8).kim(&q, &lo, &hi, dist, &mut got);
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_keogh_matches_scalar_bitwise_with_flags() {
+        let mut g = Xoshiro256::new(92);
+        for trial in 0..200 {
+            let q = g.normal_vec_f32(1 + g.below(10) as usize);
+            let b = 1 + g.below(70) as usize;
+            let (lo, hi) = envelopes(&mut g, b);
+            let tau = if g.below(5) == 0 { f32::INFINITY } else { g.uniform(0.0, 8.0) as f32 };
+            for dist in [Dist::Sq, Dist::Abs] {
+                let mut want = Vec::new();
+                let mut got = Vec::new();
+                ScalarLbKernel::new().keogh(&q, &lo, &hi, dist, tau, &mut want);
+                for cap in [1usize, 3, 8, 64] {
+                    got.clear();
+                    BlockLbKernel::new(cap).keogh(&q, &lo, &hi, dist, tau, &mut got);
+                    assert_eq!(want.len(), got.len());
+                    for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                        assert_eq!(
+                            a.bound.to_bits(),
+                            b.bound.to_bits(),
+                            "trial {trial} cap {cap} lane {k}"
+                        );
+                        assert_eq!(a.pruned, b.pruned, "trial {trial} cap {cap} lane {k}");
+                        assert_eq!(a.abandoned, b.abandoned, "trial {trial} cap {cap} lane {k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verdict_matches_legacy_lb_keogh_value() {
+        let mut g = Xoshiro256::new(93);
+        for _ in 0..100 {
+            let q = g.normal_vec_f32(1 + g.below(8) as usize);
+            let (lo, hi) = envelopes(&mut g, 1);
+            let tau = g.uniform(0.0, 6.0) as f32;
+            let legacy = lb_keogh(&q, lo[0], hi[0], Dist::Sq, tau);
+            let v = lb_keogh_verdict(&q, lo[0], hi[0], Dist::Sq, tau);
+            assert_eq!(legacy.to_bits(), v.bound.to_bits());
+            assert_eq!(v.pruned, v.bound > tau);
+            if v.abandoned {
+                assert!(v.pruned, "abandoned implies pruned");
+            }
+        }
+    }
+
+    #[test]
+    fn abandoned_only_when_sum_crosses_before_last_term() {
+        // q of 4 equal elements, gap 1 each vs [0,0] with Abs:
+        // tau = 2.5 -> crosses at term 3 of 4 -> abandoned
+        // tau = 3.5 -> crosses at term 4 of 4 -> pruned, full bound
+        let q = [1.0f32; 4];
+        let mut out = Vec::new();
+        let mut k = BlockLbKernel::new(2);
+        k.keogh(&q, &[0.0, 0.0], &[0.0, 0.0], Dist::Abs, 2.5, &mut out);
+        assert!(out[0].pruned && out[0].abandoned);
+        assert_eq!(out[0].bound, 3.0, "partial sum frozen at the crossing term");
+        out.clear();
+        k.keogh(&q, &[0.0], &[0.0], Dist::Abs, 3.5, &mut out);
+        assert!(out[0].pruned && !out[0].abandoned, "last-term crossing is a full bound");
+        assert_eq!(out[0].bound, 4.0);
+        out.clear();
+        k.keogh(&q, &[0.0], &[0.0], Dist::Abs, f32::INFINITY, &mut out);
+        assert!(!out[0].pruned && !out[0].abandoned);
+        assert_eq!(out[0].bound, 4.0);
+    }
+
+    #[test]
+    fn spec_parsing_and_instantiation() {
+        assert_eq!(LbKernelKind::from_name("scalar"), Some(LbKernelKind::Scalar));
+        assert_eq!(LbKernelKind::from_name("block"), Some(LbKernelKind::Block));
+        assert_eq!(LbKernelKind::from_name("warp"), None);
+        assert_eq!(LbKernelSpec::default(), LbKernelSpec::SCALAR);
+        assert_eq!(LbKernelSpec::SCALAR.instantiate().name(), "scalar");
+        assert_eq!(LbKernelSpec::SCALAR.instantiate().block(), 1);
+        let k = LbKernelSpec::block(0).instantiate();
+        assert_eq!(k.name(), "block");
+        assert_eq!(k.block(), DEFAULT_LB_BLOCK);
+        assert_eq!(LbKernelSpec::block(16).instantiate().block(), 16);
+        // wire-controlled sizes clamp instead of driving allocation
+        assert_eq!(LbKernelSpec::block(usize::MAX).instantiate().block(), MAX_LB_BLOCK);
+    }
+
+    #[test]
+    #[should_panic(expected = "block size")]
+    fn zero_block_rejected() {
+        BlockLbKernel::new(0);
+    }
+
+    #[cfg(sdtw_pjrt)]
+    #[test]
+    fn pjrt_seam_matches_block_kernel_and_counts_dispatches() {
+        let mut g = Xoshiro256::new(94);
+        let q = g.normal_vec_f32(8);
+        let (lo, hi) = envelopes(&mut g, 10);
+        let mut want = Vec::new();
+        BlockLbKernel::new(4).keogh(&q, &lo, &hi, Dist::Sq, 3.0, &mut want);
+        let mut k = PjrtLbKernel::new(4);
+        assert_eq!(LbKernelKind::from_name("pjrt"), Some(LbKernelKind::Pjrt));
+        let mut got = Vec::new();
+        k.keogh(&q, &lo, &hi, Dist::Sq, 3.0, &mut got);
+        assert_eq!(k.dispatched(), 3, "10 lanes through a 4-lane seam");
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.bound.to_bits(), b.bound.to_bits());
+            assert_eq!((a.pruned, a.abandoned), (b.pruned, b.abandoned));
+        }
+    }
+}

@@ -52,15 +52,40 @@ pub fn lb_kim(query: &[f32], lo: f32, hi: f32, dist: Dist) -> f32 {
 /// window range, early-abandoned once the partial sum exceeds
 /// `abandon_at` (pass `f32::INFINITY` for the full bound).
 pub fn lb_keogh(query: &[f32], lo: f32, hi: f32, dist: Dist, abandon_at: f32) -> f32 {
+    lb_keogh_verdict(query, lo, hi, dist, abandon_at).bound
+}
+
+/// [`lb_keogh`] with full accounting: the bound, whether it prunes
+/// against `tau`, and whether the sum was *abandoned* — i.e. crossed
+/// `tau` strictly before the final query term, leaving a partial sum.
+/// A sum that only crosses on its last term is a complete LB_Keogh
+/// evaluation (pruned, not abandoned); the cascade counts the two
+/// outcomes separately so stage accounting stays exact.
+///
+/// This loop is the single source of the prefilter's abandon semantics:
+/// the scalar LB kernel runs it directly and the block kernel
+/// ([`super::lb_kernel::BlockLbKernel`]) is property-tested bit-identical
+/// to it per lane.
+pub fn lb_keogh_verdict(
+    query: &[f32],
+    lo: f32,
+    hi: f32,
+    dist: Dist,
+    tau: f32,
+) -> super::lb_kernel::LbVerdict {
     assert!(!query.is_empty(), "empty query");
     let mut sum = 0f32;
-    for &q in query {
+    for (i, &q) in query.iter().enumerate() {
         sum += interval_gap(q, lo, hi, dist);
-        if sum > abandon_at {
-            return sum;
+        if sum > tau {
+            return super::lb_kernel::LbVerdict {
+                bound: sum,
+                pruned: true,
+                abandoned: i + 1 < query.len(),
+            };
         }
     }
-    sum
+    super::lb_kernel::LbVerdict { bound: sum, pruned: sum > tau, abandoned: false }
 }
 
 #[cfg(test)]

@@ -12,8 +12,14 @@
 //!                      ([`envelope::sliding_min_max`]) and incremental
 //!                      ([`envelope::StreamingExtrema`]) forms
 //! * [`lower_bounds`] — LB_Kim / LB_Keogh with early abandoning
+//! * [`lb_kernel`]    — the batched lower-bound prefilter layer: one
+//!                      [`lb_kernel::LbKernel`] surface (scalar /
+//!                      SoA lane-batched block, plus the `--cfg
+//!                      sdtw_pjrt` device seam) that the cascade's
+//!                      Kim/Keogh stages dispatch through
 //! * [`cascade`]      — the LB_Kim → LB_Keogh → early-abandon-DP pipeline
-//!                      with per-stage prune counters; DP survivors are
+//!                      with per-stage prune counters; envelope blocks
+//!                      run through the LB kernel and DP survivors are
 //!                      batched through the unified kernel layer
 //!                      ([`crate::dtw::kernel`]) — scalar, blocked-scan,
 //!                      or lane-batched lockstep, all bit-identical
@@ -39,6 +45,7 @@
 pub mod cascade;
 pub mod envelope;
 pub mod index;
+pub mod lb_kernel;
 pub mod lower_bounds;
 pub mod sharded;
 pub mod streaming;
@@ -51,6 +58,9 @@ use anyhow::Result;
 
 pub use cascade::{sdtw_window_abandoning, CascadeOpts, CascadeStats};
 pub use index::{CandidateIndex, ReferenceIndex};
+pub use lb_kernel::{
+    BlockLbKernel, LbKernel, LbKernelKind, LbKernelSpec, LbVerdict, ScalarLbKernel,
+};
 pub use sharded::{
     search_sharded, search_sharded_index, ShardReport, ShardedOutcome, SharedThreshold,
 };

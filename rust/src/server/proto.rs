@@ -5,7 +5,8 @@
 //!   {"op":"align","query":[...],"pruned":b,"quantized":b,"half":b}
 //!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,
 //!    "exclusion":96,"shards":4,"parallelism":4,
-//!    "kernel":"scalar|scan|lanes","lanes":8,"stream":b}
+//!    "kernel":"scalar|scan|lanes","lanes":8,
+//!    "lb_kernel":"scalar|block","lb_block":64,"stream":b}
 //!   {"op":"append","samples":[...],"window":192,"stride":1}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
@@ -37,7 +38,7 @@ use crate::coordinator::{
     SearchResponse,
 };
 use crate::dtw::KernelKind;
-use crate::search::Hit;
+use crate::search::{Hit, LbKernelKind};
 use crate::util::json::Json;
 
 /// Encode an `f32` result value for the wire, preserving bit-exactness.
@@ -147,6 +148,13 @@ impl Request {
                     })?,
                     Some(None) => bail!("kernel must be a string"),
                 };
+                let lb_kernel = match v.get("lb_kernel").map(|x| x.as_str()) {
+                    None => d.lb_kernel,
+                    Some(Some(name)) => LbKernelKind::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!("lb_kernel must be scalar|block, got {name:?}")
+                    })?,
+                    Some(None) => bail!("lb_kernel must be a string"),
+                };
                 Ok(Request::Search {
                     query,
                     options: SearchOptions {
@@ -158,6 +166,8 @@ impl Request {
                         parallelism: parse_usize(&v, "parallelism", d.parallelism)?,
                         kernel,
                         lanes: parse_usize(&v, "lanes", d.lanes)?,
+                        lb_kernel,
+                        lb_block: parse_usize(&v, "lb_block", d.lb_block)?,
                         stream: v.get("stream").and_then(Json::as_bool).unwrap_or(false),
                     },
                 })
@@ -227,6 +237,12 @@ impl Request {
                 if options.lanes != d.lanes {
                     pairs.push(("lanes", Json::Int(options.lanes as i64)));
                 }
+                if options.lb_kernel != d.lb_kernel {
+                    pairs.push(("lb_kernel", Json::str(options.lb_kernel.name())));
+                }
+                if options.lb_block != d.lb_block {
+                    pairs.push(("lb_block", Json::Int(options.lb_block as i64)));
+                }
                 if options.stream {
                     pairs.push(("stream", Json::Bool(true)));
                 }
@@ -287,6 +303,12 @@ pub struct SearchFields {
     /// Survivor batches flushed through the DP kernel (0 when talking
     /// to a pre-kernel server that does not send the field).
     pub survivor_batches: u64,
+    /// Envelope blocks evaluated through the LB prefilter kernel (0
+    /// when talking to a pre-LB-kernel server).
+    pub lb_blocks: u64,
+    /// Keogh evaluations early-abandoned mid-sum (subset of
+    /// `pruned_keogh`; 0 from servers predating the field).
+    pub lb_abandons: u64,
 }
 
 /// The append fields that cross the wire.
@@ -328,6 +350,12 @@ pub struct MetricsFields {
     pub survivor_batches: u64,
     /// Mean windows per survivor batch (0.0 until a batch has run).
     pub lane_occupancy: f64,
+    /// Envelope blocks evaluated through the LB prefilter kernel.
+    pub lb_blocks: u64,
+    /// Keogh evaluations early-abandoned mid-sum, all searches.
+    pub lb_abandons: u64,
+    /// Mean candidates per LB block (0.0 until a block has run).
+    pub lb_block_occupancy: f64,
     /// Streaming appends served (0 from pre-streaming servers).
     pub stream_appends: u64,
     /// Samples ingested across all appends.
@@ -363,6 +391,8 @@ impl Response {
             shards: r.shards as u64,
             tau_tightenings: r.tau_tightenings,
             survivor_batches: r.stats.survivor_batches,
+            lb_blocks: r.stats.lb_blocks,
+            lb_abandons: r.stats.lb_abandons,
         }))
     }
 
@@ -395,6 +425,9 @@ impl Response {
             search_tightenings: m.search_tau_tightenings,
             survivor_batches: m.search_survivor_batches,
             lane_occupancy: m.search_lane_occupancy_mean,
+            lb_blocks: m.search_lb_blocks,
+            lb_abandons: m.search_lb_abandons,
+            lb_block_occupancy: m.search_lb_block_occupancy_mean,
             stream_appends: m.stream_appends,
             stream_samples: m.stream_samples,
             delta_searches: m.delta_searches,
@@ -442,6 +475,8 @@ impl Response {
                     ("shards", Json::Int(s.shards as i64)),
                     ("tau_tightenings", Json::Int(s.tau_tightenings as i64)),
                     ("survivor_batches", Json::Int(s.survivor_batches as i64)),
+                    ("lb_blocks", Json::Int(s.lb_blocks as i64)),
+                    ("lb_abandons", Json::Int(s.lb_abandons as i64)),
                 ])
                 .to_string()
             }
@@ -473,6 +508,9 @@ impl Response {
                 ("search_tightenings", Json::Int(m.search_tightenings as i64)),
                 ("survivor_batches", Json::Int(m.survivor_batches as i64)),
                 ("lane_occupancy", Json::Num(m.lane_occupancy)),
+                ("lb_blocks", Json::Int(m.lb_blocks as i64)),
+                ("lb_abandons", Json::Int(m.lb_abandons as i64)),
+                ("lb_block_occupancy", Json::Num(m.lb_block_occupancy)),
                 ("stream_appends", Json::Int(m.stream_appends as i64)),
                 ("stream_samples", Json::Int(m.stream_samples as i64)),
                 ("delta_searches", Json::Int(m.delta_searches as i64)),
@@ -524,6 +562,8 @@ impl Response {
                 shards: int("shards"),
                 tau_tightenings: int("tau_tightenings"),
                 survivor_batches: int("survivor_batches"),
+                lb_blocks: int("lb_blocks"),
+                lb_abandons: int("lb_abandons"),
             })));
         }
         if v.get("appended").is_some() {
@@ -576,6 +616,9 @@ impl Response {
                 search_tightenings: int("search_tightenings"),
                 survivor_batches: int("survivor_batches"),
                 lane_occupancy: num("lane_occupancy"),
+                lb_blocks: int("lb_blocks"),
+                lb_abandons: int("lb_abandons"),
+                lb_block_occupancy: num("lb_block_occupancy"),
                 stream_appends: int("stream_appends"),
                 stream_samples: int("stream_samples"),
                 delta_searches: int("delta_searches"),
@@ -620,6 +663,8 @@ mod tests {
                 parallelism: 2,
                 kernel: KernelKind::Lanes,
                 lanes: 16,
+                lb_kernel: LbKernelKind::Block,
+                lb_block: 32,
                 stream: false,
             },
         };
@@ -627,6 +672,7 @@ mod tests {
         assert!(enc.contains("\"k\":9") && enc.contains("\"window\":64"));
         assert!(enc.contains("\"shards\":4") && enc.contains("\"parallelism\":2"));
         assert!(enc.contains("\"kernel\":\"lanes\"") && enc.contains("\"lanes\":16"));
+        assert!(enc.contains("\"lb_kernel\":\"block\"") && enc.contains("\"lb_block\":32"));
         assert_eq!(Request::parse(&enc).unwrap(), custom);
         // sharding/kernel fields omitted on the wire parse as the
         // serial-scalar default
@@ -637,10 +683,31 @@ mod tests {
                 assert_eq!(options.parallelism, 1);
                 assert_eq!(options.kernel, KernelKind::Scalar);
                 assert_eq!(options.lanes, 0);
+                assert_eq!(options.lb_kernel, LbKernelKind::Scalar);
+                assert_eq!(options.lb_block, 0);
                 assert!(!options.stream);
             }
             other => panic!("unexpected parse: {other:?}"),
         }
+    }
+
+    #[test]
+    fn search_request_lb_kernel_roundtrip() {
+        for (kind, block) in [(LbKernelKind::Scalar, 0usize), (LbKernelKind::Block, 64)] {
+            let req = Request::Search {
+                query: vec![1.0],
+                options: SearchOptions {
+                    lb_kernel: kind,
+                    lb_block: block,
+                    ..Default::default()
+                },
+            };
+            assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{kind:?}");
+        }
+        // scalar is the default: it stays off the wire
+        let scalar = Request::Search { query: vec![1.0], options: SearchOptions::default() };
+        assert!(!scalar.encode().contains("lb_kernel"));
+        assert!(!scalar.encode().contains("lb_block"));
     }
 
     #[test]
@@ -722,6 +789,9 @@ mod tests {
         assert!(Request::parse(r#"{"op":"search","query":[1],"kernel":"warp"}"#).is_err());
         assert!(Request::parse(r#"{"op":"search","query":[1],"kernel":7}"#).is_err());
         assert!(Request::parse(r#"{"op":"search","query":[1],"lanes":-1}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"lb_kernel":"simd"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"lb_kernel":3}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"lb_block":-2}"#).is_err());
     }
 
     #[test]
@@ -764,6 +834,8 @@ mod tests {
             shards: 4,
             tau_tightenings: 17,
             survivor_batches: 80,
+            lb_blocks: 0,
+            lb_abandons: 0,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
         // empty hit list still recognized as a search response; a k=0
@@ -780,6 +852,8 @@ mod tests {
             shards: 1,
             tau_tightenings: 0,
             survivor_batches: 0,
+            lb_blocks: 0,
+            lb_abandons: 0,
         }));
         assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
     }
@@ -820,6 +894,8 @@ mod tests {
                 shards: 1,
                 tau_tightenings: 0,
                 survivor_batches: 1,
+                lb_blocks: 0,
+                lb_abandons: 0,
             }));
             let got = match Response::parse(&resp.encode()).unwrap() {
                 Response::Search(s) => s.hits[0].cost,
@@ -873,6 +949,9 @@ mod tests {
             search_tightenings: 31,
             survivor_batches: 64,
             lane_occupancy: 6.5,
+            lb_blocks: 128,
+            lb_abandons: 9,
+            lb_block_occupancy: 41.5,
             stream_appends: 3,
             stream_samples: 6144,
             delta_searches: 2,
@@ -921,6 +1000,8 @@ mod tests {
                     parallelism: 2,
                     kernel: KernelKind::Lanes,
                     lanes: 4,
+                    lb_kernel: LbKernelKind::Block,
+                    lb_block: 8,
                     stream: true,
                 },
             }
@@ -943,6 +1024,8 @@ mod tests {
                 shards: 2,
                 tau_tightenings: 1,
                 survivor_batches: 1,
+                lb_blocks: 1,
+                lb_abandons: 1,
             }))
             .encode(),
             Response::Append(AppendFields {
