@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Compare a CI bench run (BENCH_ci.json) against the committed baseline
+(BENCH_baseline.json) and fail on perf regressions.
+
+What is enforced, always:
+  * every (bench, family, config) key in the baseline is present in the
+    current run — a silently dropped config would hide a regression;
+  * every current run that carries a ``bit_identical`` field has it true
+    (the benches assert this in-process; the field is the audit trail).
+
+What is enforced only for non-provisional baseline entries:
+  * current ms_per_search must not exceed baseline * (1 + threshold%).
+    Provisional entries (placeholder timings recorded off-CI) skip the
+    timing gate but still pin the key set.
+
+A markdown trajectory table goes to $GITHUB_STEP_SUMMARY when set (and
+always to stdout), so the perf trend is visible per push.
+
+``--selftest`` injects a synthetic 2x slowdown (current vs a de-
+provisionalized baseline derived from the current run itself) and exits
+0 only if the gate fires — proof the regression check can actually fail.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def key(run):
+    return (run.get("bench", "?"), run.get("family", "?"), run.get("config", "?"))
+
+
+def load_runs(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        raise SystemExit(f"{path}: unsupported schema {doc.get('schema')!r}")
+    runs = doc.get("runs", [])
+    by_key = {}
+    for run in runs:
+        by_key[key(run)] = run  # last write wins within one file
+    return doc, by_key
+
+
+def compare(baseline, current, threshold_pct):
+    """Return (rows, failures). rows: (key, base_ms, cur_ms, delta_pct, status)."""
+    rows, failures = [], []
+    for k, base in sorted(baseline.items()):
+        cur = current.get(k)
+        if cur is None:
+            failures.append(f"missing bench config in current run: {k}")
+            rows.append((k, base.get("ms_per_search"), None, None, "MISSING"))
+            continue
+        base_ms = base.get("ms_per_search")
+        cur_ms = cur.get("ms_per_search")
+        if cur.get("bit_identical") is False:
+            failures.append(f"bit_identical=false for {k}")
+            rows.append((k, base_ms, cur_ms, None, "NOT BIT-IDENTICAL"))
+            continue
+        if base.get("provisional"):
+            rows.append((k, base_ms, cur_ms, None, "provisional"))
+            continue
+        if not isinstance(base_ms, (int, float)) or base_ms <= 0:
+            rows.append((k, base_ms, cur_ms, None, "no baseline ms"))
+            continue
+        delta_pct = 100.0 * (cur_ms - base_ms) / base_ms
+        if cur_ms > base_ms * (1.0 + threshold_pct / 100.0):
+            failures.append(
+                f"regression: {k} {base_ms:.3f} ms -> {cur_ms:.3f} ms "
+                f"(+{delta_pct:.1f}% > {threshold_pct:.0f}% threshold)"
+            )
+            rows.append((k, base_ms, cur_ms, delta_pct, "REGRESSION"))
+        else:
+            rows.append((k, base_ms, cur_ms, delta_pct, "ok"))
+    for k in sorted(set(current) - set(baseline)):
+        rows.append((k, None, current[k].get("ms_per_search"), None, "new (no baseline)"))
+    return rows, failures
+
+
+def fmt_ms(v):
+    return f"{v:.3f}" if isinstance(v, (int, float)) else "-"
+
+
+def render_table(rows, threshold_pct):
+    lines = [
+        f"### Bench trajectory (gate: +{threshold_pct:.0f}% on non-provisional entries)",
+        "",
+        "| bench | family | config | baseline ms | current ms | delta | status |",
+        "|---|---|---|---:|---:|---:|---|",
+    ]
+    for (bench, family, config), base_ms, cur_ms, delta, status in rows:
+        delta_s = f"{delta:+.1f}%" if isinstance(delta, (int, float)) else "-"
+        lines.append(
+            f"| {bench} | {family} | {config} | {fmt_ms(base_ms)} | "
+            f"{fmt_ms(cur_ms)} | {delta_s} | {status} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def selftest(current, threshold_pct):
+    """Derive a non-provisional baseline from the current run at half the
+    measured time (a synthetic 2x slowdown) and require the gate to fire
+    for every run with a usable timing."""
+    synthetic = {}
+    timed = 0
+    for k, run in current.items():
+        ms = run.get("ms_per_search")
+        if isinstance(ms, (int, float)) and ms > 0:
+            synthetic[k] = {"ms_per_search": ms / 2.0}
+            timed += 1
+    if timed == 0:
+        print("selftest: no timed runs in current file", file=sys.stderr)
+        return 1
+    _, failures = compare(synthetic, current, threshold_pct)
+    regressions = [f for f in failures if f.startswith("regression")]
+    if len(regressions) != timed:
+        print(
+            f"selftest FAILED: injected 2x slowdown on {timed} runs but the "
+            f"gate fired only {len(regressions)} times",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"selftest OK: injected 2x slowdown tripped the gate on all {timed} runs")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_ci.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=None,
+        help="regression threshold in percent (default: baseline's threshold_pct, else 50)",
+    )
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args()
+
+    base_doc, baseline = load_runs(args.baseline)
+    _, current = load_runs(args.current)
+    threshold = args.threshold
+    if threshold is None:
+        threshold = float(base_doc.get("threshold_pct", 50))
+
+    if args.selftest:
+        return selftest(current, threshold)
+
+    rows, failures = compare(baseline, current, threshold)
+    table = render_table(rows, threshold)
+    print(table)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a", encoding="utf-8") as f:
+            f.write(table)
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"bench check OK: {len(rows)} configs within +{threshold:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+"""Line-format validation of the server's Prometheus text exposition.
+
+The CI rust lane captures ``sdtw metrics --prometheus`` from a live
+``sdtw serve --search-only`` server into a ``metrics.prom`` artifact;
+this lane re-checks it against the exposition-format grammar with an
+independent implementation (no Rust code involved), so a formatting bug
+cannot be self-consistent across both sides.
+
+The file is located via ``SDTW_PROM_FILE`` (path relative to this
+package's directory, or absolute).  When the file is absent — e.g. a
+local run without the Rust toolchain — the tests skip rather than fail.
+
+Grammar checked (prometheus.io/docs/instrumenting/exposition_formats):
+  * comment lines: ``# HELP <name> <docstring>`` / ``# TYPE <name> <type>``
+  * sample lines:  ``<name>[{<label>="<value>",...}] <float>``
+  * metric names ``[a-zA-Z_:][a-zA-Z0-9_:]*``, every value finite,
+  * every sample's name introduced by a preceding ``# TYPE`` line.
+"""
+
+import math
+import os
+import re
+from pathlib import Path
+
+import pytest
+
+NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+LABELS = r"\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"\\]*\"(?:,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"\\]*\")*\}"
+SAMPLE_RE = re.compile(
+    rf"^({NAME})({LABELS})? (-?[0-9]+(?:\.[0-9]+)?(?:[eE][+-]?[0-9]+)?)$"
+)
+HELP_RE = re.compile(rf"^# HELP ({NAME}) \S.*$")
+TYPE_RE = re.compile(rf"^# TYPE ({NAME}) (counter|gauge|histogram|summary|untyped)$")
+
+
+@pytest.fixture(scope="module")
+def exposition():
+    rel = os.environ.get("SDTW_PROM_FILE", "metrics.prom")
+    path = Path(rel)
+    if not path.is_absolute():
+        path = Path(__file__).resolve().parents[1] / rel
+    if not path.exists():
+        pytest.skip(f"no exposition capture at {path} (set SDTW_PROM_FILE)")
+    text = path.read_text()
+    assert text, "exposition file is empty"
+    return text
+
+
+def test_every_line_matches_the_grammar(exposition):
+    for line in exposition.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP"):
+            assert HELP_RE.match(line), f"malformed HELP line: {line!r}"
+        elif line.startswith("# TYPE"):
+            assert TYPE_RE.match(line), f"malformed TYPE line: {line!r}"
+        elif line.startswith("#"):
+            pytest.fail(f"unknown comment form: {line!r}")
+        else:
+            assert SAMPLE_RE.match(line), f"malformed sample line: {line!r}"
+
+
+def test_samples_are_finite_and_typed(exposition):
+    typed = set()
+    sampled = []
+    for line in exposition.splitlines():
+        m = TYPE_RE.match(line)
+        if m:
+            typed.add(m.group(1))
+            continue
+        m = SAMPLE_RE.match(line)
+        if m:
+            sampled.append((m.group(1), float(m.group(3))))
+    assert sampled, "exposition contains no samples"
+    for name, value in sampled:
+        assert math.isfinite(value), f"non-finite value for {name}"
+        assert name in typed, f"sample {name} has no # TYPE declaration"
+
+
+def test_core_serving_metrics_are_present(exposition):
+    names = {
+        m.group(1)
+        for m in (SAMPLE_RE.match(l) for l in exposition.splitlines())
+        if m
+    }
+    for required in ("sdtw_requests_total", "sdtw_searches_total", "sdtw_latency_ms"):
+        assert required in names, f"missing {required} (have {sorted(names)})"
+
+
+def test_counters_are_non_negative(exposition):
+    counters = set()
+    for line in exposition.splitlines():
+        m = TYPE_RE.match(line)
+        if m and m.group(2) == "counter":
+            counters.add(m.group(1))
+    for line in exposition.splitlines():
+        m = SAMPLE_RE.match(line)
+        if m and m.group(1) in counters:
+            assert float(m.group(3)) >= 0, f"negative counter: {line!r}"

@@ -1,0 +1,18 @@
+//! Capture the compiler identity at build time so bench artifacts can
+//! record it (`bench_harness::emit_json` host-context fields) without a
+//! runtime dependency on a toolchain being installed.
+
+use std::process::Command;
+
+fn main() {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let version = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into());
+    println!("cargo:rustc-env=SDTW_RUSTC_VERSION={version}");
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -4,8 +4,20 @@
 //! `harness = false` binaries built on this module (no `criterion`
 //! offline — see DESIGN.md "Session caveats").
 
+use std::sync::OnceLock;
+use std::time::Instant;
+
 use crate::util::json::Json;
 use crate::util::stats::{Protocol, Summary};
+
+/// The harness's wall clock.  The first call pins the epoch —
+/// [`banner`] calls it as the bench starts — and later calls measure
+/// against it, so `emit_json`'s `wall_s` is the bench's elapsed wall
+/// time at emission.
+fn harness_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
 
 /// One row of a results table.
 #[derive(Clone, Debug)]
@@ -122,6 +134,23 @@ pub fn emit_json(bench: &str, fields: Vec<(&str, Json)>) {
     }
     let mut pairs = vec![("bench", Json::str(bench))];
     pairs.extend(fields);
+    // host context: what machine/toolchain/protocol produced the
+    // numbers, and the bench's wall-clock total at emission — the
+    // regression checker needs these to judge comparability
+    pairs.push((
+        "cpus",
+        Json::Int(
+            std::thread::available_parallelism()
+                .map(|n| n.get() as i64)
+                .unwrap_or(0),
+        ),
+    ));
+    pairs.push(("rustc", Json::str(env!("SDTW_RUSTC_VERSION"))));
+    pairs.push((
+        "quick",
+        Json::Bool(std::env::var("SDTW_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)),
+    ));
+    pairs.push(("wall_s", Json::Num(harness_epoch().elapsed().as_secs_f64())));
     let line = Json::obj(pairs).to_string();
     let write = std::fs::OpenOptions::new()
         .create(true)
@@ -152,6 +181,7 @@ pub fn protocol_from_env() -> Protocol {
 
 /// Standard bench banner: prints shape + protocol, returns the protocol.
 pub fn banner(bench: &str, shape: &str) -> Protocol {
+    harness_epoch(); // pin the wall clock at bench start
     let p = protocol_from_env();
     println!(
         "[{bench}] shape {shape}; protocol: {} warmup + {} timed runs (paper §6)",
@@ -198,6 +228,11 @@ mod tests {
         let first = Json::parse(lines[0]).expect("valid json");
         assert_eq!(first.get("bench").and_then(Json::as_str), Some("demo"));
         assert_eq!(first.get("ms").and_then(Json::as_f64), Some(1.5));
+        // host context rides every line
+        assert!(first.get("cpus").and_then(Json::as_i64).is_some());
+        assert!(!first.get("rustc").and_then(Json::as_str).unwrap_or("").is_empty());
+        assert!(first.get("quick").and_then(Json::as_bool).is_some());
+        assert!(first.get("wall_s").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0);
         let second = Json::parse(lines[1]).expect("valid json");
         assert_eq!(second.get("rows").and_then(Json::as_i64), Some(3));
         // unset env: a no-op, file untouched

@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs;
 use crate::search::CascadeStats;
 use crate::util::stats::{gsps, LatencyHistogram};
 
@@ -313,6 +314,7 @@ impl Metrics {
             delta_searches: self.delta_searches.load(Ordering::Relaxed),
             delta_candidates_scanned: self.delta_candidates_scanned.load(Ordering::Relaxed),
             delta_candidates_skipped: self.delta_candidates_skipped.load(Ordering::Relaxed),
+            stages: obs::stage_summaries(),
         }
     }
 }
@@ -414,6 +416,11 @@ pub struct MetricsSnapshot {
     /// Candidates the delta searches skipped via the watermark — what a
     /// full rebuild would have re-cascaded.
     pub delta_candidates_skipped: u64,
+    /// Per-stage trace aggregates (span counts, total time, Gsps, and
+    /// p50/p90/p99 stage latency) from the `obs` span recorder.  Empty
+    /// when tracing is disabled (`SDTW_TRACE` unset) or no sampled
+    /// request has run yet; purely observational either way.
+    pub stages: Vec<obs::StageSummary>,
 }
 
 impl MetricsSnapshot {
@@ -508,6 +515,174 @@ impl MetricsSnapshot {
                 self.delta_candidates_scanned,
                 self.delta_candidates_skipped,
             ));
+        }
+        if !self.stages.is_empty() {
+            for st in &self.stages {
+                out.push_str(&format!(
+                    " stage[{}](spans={} total={:.2}ms gsps={:.6} \
+                     p50/p90/p99={:.2}/{:.2}/{:.2}ms)",
+                    st.stage,
+                    st.spans,
+                    st.total_ms,
+                    st.gsps,
+                    st.p50_ms,
+                    st.p90_ms,
+                    st.p99_ms,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Look up one stage's trace aggregate by name (`"envelope"`,
+    /// `"keogh"`, `"dp"`, `"shard"`, `"delta"`, `"search"`); `None`
+    /// when tracing is off or the stage has not run.
+    pub fn stage(&self, name: &str) -> Option<&obs::StageSummary> {
+        self.stages.iter().find(|s| s.stage == name)
+    }
+
+    /// Render the snapshot in Prometheus text exposition format
+    /// (version 0.0.4): `# HELP`/`# TYPE` headers followed by one
+    /// `sdtw_*` sample per line.  Percentiles are exported as gauges
+    /// with a `quantile` label (pre-aggregated, not a native summary)
+    /// so scrapers need no histogram support.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter("sdtw_requests_total", "Align submissions accepted.", self.requests);
+        counter("sdtw_responses_total", "Align responses delivered.", self.responses);
+        counter("sdtw_errors_total", "Requests that failed.", self.errors);
+        counter("sdtw_rejected_total", "Align submissions rejected at admission.", self.rejected);
+        counter("sdtw_batches_total", "Device batches executed.", self.batches);
+        counter("sdtw_searches_total", "Top-K searches served.", self.searches);
+        counter(
+            "sdtw_search_windows_total",
+            "Candidate windows considered across all searches.",
+            self.search_windows,
+        );
+        counter(
+            "sdtw_search_pruned_kim_total",
+            "Windows pruned by the LB_Kim stage.",
+            self.search_pruned_kim,
+        );
+        counter(
+            "sdtw_search_pruned_keogh_total",
+            "Windows pruned by the LB_Keogh stage.",
+            self.search_pruned_keogh,
+        );
+        counter(
+            "sdtw_search_dp_abandoned_total",
+            "Windows whose DP was abandoned mid-recurrence.",
+            self.search_dp_abandoned,
+        );
+        counter(
+            "sdtw_search_dp_full_total",
+            "Windows that ran a full exact DP.",
+            self.search_dp_full,
+        );
+        counter(
+            "sdtw_stream_appends_total",
+            "Streaming appends served.",
+            self.stream_appends,
+        );
+        counter(
+            "sdtw_delta_searches_total",
+            "Streaming delta searches served.",
+            self.delta_searches,
+        );
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            let v = if v.is_finite() { v } else { 0.0 };
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        };
+        gauge(
+            "sdtw_device_gsps",
+            "Paper eq. 3 throughput over device busy time.",
+            self.device_gsps,
+        );
+        gauge(
+            "sdtw_offered_gsps",
+            "Paper eq. 3 throughput over wall time.",
+            self.offered_gsps,
+        );
+        gauge(
+            "sdtw_search_prune_fraction",
+            "Fraction of candidate windows pruned before a full DP.",
+            self.search_prune_fraction(),
+        );
+        // latency quantiles: pre-aggregated gauges with a quantile label
+        let mut quantiles = |name: &str, help: &str, samples: &[(&str, f64)]| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+            for (q, v) in samples {
+                let v = if v.is_finite() { *v } else { 0.0 };
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+        };
+        quantiles(
+            "sdtw_latency_ms",
+            "End-to-end align latency quantiles in milliseconds.",
+            &[
+                ("0.5", self.latency_p50_ms),
+                ("0.95", self.latency_p95_ms),
+                ("0.99", self.latency_p99_ms),
+            ],
+        );
+        quantiles(
+            "sdtw_search_latency_ms",
+            "Top-K search latency quantiles in milliseconds.",
+            &[
+                ("0.5", self.search_latency_p50_ms),
+                ("0.99", self.search_latency_p99_ms),
+            ],
+        );
+        if !self.stages.is_empty() {
+            out.push_str(
+                "# HELP sdtw_stage_spans_total Trace spans recorded per cascade stage.\n\
+                 # TYPE sdtw_stage_spans_total counter\n",
+            );
+            for st in &self.stages {
+                out.push_str(&format!(
+                    "sdtw_stage_spans_total{{stage=\"{}\"}} {}\n",
+                    st.stage, st.spans
+                ));
+            }
+            out.push_str(
+                "# HELP sdtw_stage_total_ms Total traced time per cascade stage in milliseconds.\n\
+                 # TYPE sdtw_stage_total_ms counter\n",
+            );
+            for st in &self.stages {
+                let v = if st.total_ms.is_finite() { st.total_ms } else { 0.0 };
+                out.push_str(&format!(
+                    "sdtw_stage_total_ms{{stage=\"{}\"}} {v}\n",
+                    st.stage
+                ));
+            }
+            out.push_str(
+                "# HELP sdtw_stage_gsps Paper eq. 3 throughput per cascade stage.\n\
+                 # TYPE sdtw_stage_gsps gauge\n",
+            );
+            for st in &self.stages {
+                let v = if st.gsps.is_finite() { st.gsps } else { 0.0 };
+                out.push_str(&format!("sdtw_stage_gsps{{stage=\"{}\"}} {v}\n", st.stage));
+            }
+            out.push_str(
+                "# HELP sdtw_stage_latency_ms Per-stage span duration quantiles in milliseconds.\n\
+                 # TYPE sdtw_stage_latency_ms gauge\n",
+            );
+            for st in &self.stages {
+                for (q, v) in [("0.5", st.p50_ms), ("0.9", st.p90_ms), ("0.99", st.p99_ms)] {
+                    let v = if v.is_finite() { v } else { 0.0 };
+                    out.push_str(&format!(
+                        "sdtw_stage_latency_ms{{stage=\"{}\",quantile=\"{q}\"}} {v}\n",
+                        st.stage
+                    ));
+                }
+            }
         }
         out
     }
@@ -687,6 +862,31 @@ mod tests {
             s.search_windows,
             "stages must partition the candidate space even at k=0"
         );
+    }
+
+    #[test]
+    fn prometheus_rendering_is_line_formatted() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_search(2.0, &CascadeStats { candidates: 10, dp_full: 10, ..Default::default() });
+        let text = m.snapshot().render_prometheus();
+        assert!(text.contains("# TYPE sdtw_requests_total counter"));
+        assert!(text.contains("sdtw_requests_total 1"));
+        assert!(text.contains("sdtw_searches_total 1"));
+        assert!(text.contains("sdtw_latency_ms{quantile=\"0.5\"}"));
+        assert!(text.contains("# TYPE sdtw_offered_gsps gauge"));
+        // every non-comment line is `name{labels} value` with a finite value
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(!name.is_empty(), "empty metric name in {line:?}");
+            let v: f64 = value
+                .parse()
+                .unwrap_or_else(|_| panic!("unparseable sample value in {line:?}"));
+            assert!(v.is_finite(), "non-finite sample in {line:?}");
+        }
     }
 
     #[test]

@@ -89,6 +89,11 @@ pub struct SearchOptions {
     /// candidates appended since the last identical search (the delta);
     /// results stay bit-identical to a full rebuild.
     pub stream: bool,
+    /// Explain sample mode: record which cascade stage pruned each
+    /// sampled candidate (and at what bound vs τ) into the obs explain
+    /// buffer.  Purely observational — hits and counters stay
+    /// bit-identical with it on or off (see `docs/OBSERVABILITY.md`).
+    pub explain: bool,
 }
 
 impl Default for SearchOptions {
@@ -105,6 +110,7 @@ impl Default for SearchOptions {
             lb_kernel: LbKernelKind::Scalar,
             lb_block: 0,
             stream: false,
+            explain: false,
         }
     }
 }
@@ -235,6 +241,7 @@ mod tests {
         assert_eq!(o.lb_kernel, LbKernelKind::Scalar, "default is the scalar prefilter");
         assert_eq!(o.lb_block, 0);
         assert!(!o.stream, "default targets the startup reference");
+        assert!(!o.explain, "explain sampling is opt-in");
     }
 
     #[test]

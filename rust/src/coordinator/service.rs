@@ -34,7 +34,8 @@ use crate::config::ServeConfig;
 use crate::dtw::Dist;
 use crate::log_info;
 use crate::normalize;
-use crate::runtime::artifact::{Manifest, VariantMeta};
+use crate::obs;
+use crate::runtime::artifact::{Kind, Manifest, VariantMeta};
 use crate::runtime::Engine;
 use crate::search::{CascadeOpts, SearchEngine, StreamingEngine};
 
@@ -49,6 +50,12 @@ pub struct ServiceOptions {
     pub workers: usize,
     /// Compile the primary variant before accepting traffic.
     pub preload: bool,
+    /// Search/stream-only service: skip the artifact manifest, the PJRT
+    /// engines, and the align dispatcher entirely.  Search, append,
+    /// metrics, and trace all work; align requests fail fast.  This is
+    /// how CI serves a real socket on runners with no compiled
+    /// artifacts (`sdtw serve --search-only`).
+    pub search_only: bool,
 }
 
 impl Default for ServiceOptions {
@@ -61,6 +68,7 @@ impl Default for ServiceOptions {
             queue_depth: c.queue_depth,
             workers: c.workers,
             preload: true,
+            search_only: false,
         }
     }
 }
@@ -74,6 +82,7 @@ impl ServiceOptions {
             queue_depth: c.queue_depth,
             workers: c.workers,
             preload: true,
+            search_only: false,
         }
     }
 }
@@ -104,11 +113,16 @@ pub struct SdtwService {
     /// Lazily-built search engines, keyed by (window, stride) — the
     /// envelope index is reused across every query with that shape.
     search_engines: std::sync::Mutex<HashMap<(usize, usize), Arc<SearchEngine>>>,
+    /// True when started without engines/dispatcher (align fails fast).
+    search_only: bool,
 }
 
 impl SdtwService {
     /// Start the service over a raw (un-normalized) reference series.
     pub fn start(opts: ServiceOptions, reference_raw: Vec<f32>) -> Result<SdtwService> {
+        if opts.search_only {
+            return Self::start_search_only(opts, reference_raw);
+        }
         let manifest = Manifest::load(&opts.artifacts_dir)?;
         let primary = Arc::new(manifest.require(&opts.variant)?.clone());
         let reflen = primary
@@ -189,6 +203,63 @@ impl SdtwService {
             frozen_stats,
             streaming: std::sync::Mutex::new(None),
             search_engines: std::sync::Mutex::new(HashMap::new()),
+            search_only: false,
+        })
+    }
+
+    /// Default query length advertised by a search-only service.  Search
+    /// itself accepts any query length; this only seeds `info` and the
+    /// streaming session's auto window (matching the repo's canonical
+    /// M=128 shape).
+    pub const SEARCH_ONLY_QLEN: usize = 128;
+
+    /// Start without artifacts/PJRT: search, streaming append, metrics,
+    /// and tracing are fully live; align requests fail fast.  The
+    /// primary variant is synthesized from the reference shape so the
+    /// `info` verb and the auto-window resolution behave as usual.
+    fn start_search_only(opts: ServiceOptions, reference_raw: Vec<f32>) -> Result<SdtwService> {
+        anyhow::ensure!(!reference_raw.is_empty(), "empty reference");
+        let reflen = reference_raw.len();
+        let primary = Arc::new(VariantMeta {
+            name: format!("search_only_m{}_n{reflen}", Self::SEARCH_ONLY_QLEN),
+            kind: Kind::Pipeline,
+            file: String::new(),
+            batch: 1,
+            qlen: Self::SEARCH_ONLY_QLEN,
+            reflen: Some(reflen),
+            segment_width: None,
+            dtype: "f32".to_string(),
+            prune_threshold: None,
+            quantized: false,
+            slow: false,
+            ablation: None,
+            scan_impl: None,
+        });
+        let manifest =
+            Manifest { dir: opts.artifacts_dir.clone(), variants: vec![(*primary).clone()] };
+
+        let mut reference = reference_raw;
+        let frozen_stats = normalize::moments_paper(&reference);
+        normalize::znorm_paper(&mut reference);
+        let reference = Arc::new(reference);
+
+        log_info!(
+            "service up (search-only): N={reflen}, no artifact engines — align disabled"
+        );
+        Ok(SdtwService {
+            submit_q: Arc::new(BoundedQueue::new(1)),
+            metrics: Arc::new(Metrics::new()),
+            router: Arc::new(Router::new(manifest, reflen)),
+            primary,
+            next_id: AtomicU64::new(1),
+            dispatcher: None,
+            workers: Vec::new(),
+            batch_q: Arc::new(BoundedQueue::new(1)),
+            reference,
+            frozen_stats,
+            streaming: std::sync::Mutex::new(None),
+            search_engines: std::sync::Mutex::new(HashMap::new()),
+            search_only: true,
         })
     }
 
@@ -222,6 +293,10 @@ impl SdtwService {
         query: Vec<f32>,
         options: AlignOptions,
     ) -> Result<mpsc::Receiver<Result<AlignResponse, String>>> {
+        anyhow::ensure!(
+            !self.search_only,
+            "service is search-only: align requires compiled artifacts"
+        );
         // validate routability up front so errors are synchronous
         self.router.route(query.len(), options)?;
         let (tx, rx) = mpsc::sync_channel(1);
@@ -292,11 +367,35 @@ impl SdtwService {
         query: Vec<f32>,
         options: SearchOptions,
     ) -> Result<SearchResponse> {
+        // request-scoped trace context: adopt the edge's context when the
+        // server already opened one on this thread, otherwise open one
+        // here (the CLI / library path).  The context is only ever read
+        // by recorders — enabling it cannot change results.
+        let mut ctx = obs::current();
+        if ctx.id == 0 {
+            ctx = obs::begin_request();
+        }
+        ctx.explain = ctx.explain || options.explain;
+        let _obs_guard = obs::enter(ctx);
+        let qlen = query.len() as u64;
+        let t0 = Instant::now();
         let r = self.search_blocking_inner(query, options);
-        if r.is_err() {
-            // failed searches count as service errors, same as failed
-            // align batches (the align path records these in the worker)
-            self.metrics.on_error();
+        match &r {
+            Ok(resp) => {
+                if ctx.sampled {
+                    obs::record_span(
+                        obs::Stage::Search,
+                        t0.elapsed(),
+                        resp.stats.candidates * qlen,
+                        Some(format!("hits={} shards={}", resp.hits.len(), resp.shards)),
+                    );
+                }
+            }
+            Err(_) => {
+                // failed searches count as service errors, same as failed
+                // align batches (the align path records these in the worker)
+                self.metrics.on_error();
+            }
         }
         r
     }
@@ -396,7 +495,16 @@ impl SdtwService {
         let exclusion = options.resolve_exclusion(engine.index().window());
 
         if shards <= 1 {
+            let t_delta = Instant::now();
             let d = engine.search_delta(&qn, options.k, exclusion, cascade_opts)?;
+            if obs::current().sampled {
+                obs::record_span(
+                    obs::Stage::Delta,
+                    t_delta.elapsed(),
+                    d.scanned * qn.len() as u64,
+                    Some(format!("scanned={} skipped={} delta={}", d.scanned, d.skipped, d.delta)),
+                );
+            }
             let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
             self.metrics.on_search(latency_ms, &d.outcome.stats);
             self.metrics.on_delta_search(d.scanned, d.skipped);

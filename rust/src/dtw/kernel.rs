@@ -53,6 +53,13 @@ pub struct Lane<'a> {
     pub window: &'a [f32],
 }
 
+/// DP cell count for a batch of lanes (`Σ qlen × window_len`) — the
+/// throughput numerator observability records at every kernel flush
+/// point (per-stage Gsps/GCUPS accounting, paper eq. 3).
+pub fn lanes_floats(lanes: &[Lane<'_>]) -> u64 {
+    lanes.iter().map(|l| (l.query.len() * l.window.len()) as u64).sum()
+}
+
 /// A batched sDTW executor.
 ///
 /// `run` aligns every lane and pushes one entry per lane into `out`

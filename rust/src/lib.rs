@@ -20,6 +20,7 @@ pub mod coordinator;
 pub mod datagen;
 pub mod dtw;
 pub mod normalize;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod search;

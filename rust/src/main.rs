@@ -12,6 +12,8 @@
 //!   serve    start the TCP server over a generated reference
 //!   sweep    regenerate the Figure-3 segment-width series
 //!   inspect  list the artifact manifest
+//!   trace    fetch recent trace spans from a running server
+//!   metrics  fetch metrics from a running server (JSON or Prometheus)
 //!
 //! `sdtw <cmd> --help` prints per-command options.
 
@@ -27,9 +29,10 @@ use sdtw_repro::coordinator::{AlignOptions, SdtwService, SearchOptions, ServiceO
 use sdtw_repro::datagen::{self, GenConfig};
 use sdtw_repro::dtw::{self, Dist};
 use sdtw_repro::normalize;
+use sdtw_repro::obs;
 use sdtw_repro::runtime::artifact::Manifest;
-use sdtw_repro::server::Server;
-use sdtw_repro::util::logger::{self, Level};
+use sdtw_repro::server::{Client, Response, Server};
+use sdtw_repro::util::logger;
 use sdtw_repro::log_info;
 use sdtw_repro::util::stats::Protocol;
 
@@ -46,11 +49,14 @@ fn main() {
 }
 
 fn run(args: Vec<String>) -> Result<()> {
-    if let Ok(level) = std::env::var("SDTW_LOG") {
-        if let Some(l) = Level::from_str_loose(&level) {
-            logger::set_level(l);
+    // SDTW_LOG accepts a bare level ("debug") or a filter spec with
+    // per-target overrides ("info,sdtw::search=trace").
+    if let Ok(spec) = std::env::var("SDTW_LOG") {
+        if let Err(e) = logger::set_spec(&spec) {
+            eprintln!("warning: ignoring SDTW_LOG: {e}");
         }
     }
+    obs::init_from_env();
     let (cmd, rest) = match args.split_first() {
         Some((c, rest)) => (c.as_str(), rest.to_vec()),
         None => {
@@ -66,6 +72,8 @@ fn run(args: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "inspect" => cmd_inspect(rest),
+        "trace" => cmd_trace(rest),
+        "metrics" => cmd_metrics(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -84,7 +92,9 @@ fn print_usage() {
          \x20 stream   append-only streaming search (incremental index)\n\
          \x20 serve    start the TCP server\n\
          \x20 sweep    segment-width sweep (Figure 3)\n\
-         \x20 inspect  list artifact variants\n\n\
+         \x20 inspect  list artifact variants\n\
+         \x20 trace    fetch recent trace spans from a running server\n\
+         \x20 metrics  fetch metrics from a running server (JSON or Prometheus)\n\n\
          Run `sdtw <command> --help` for options."
     );
 }
@@ -253,6 +263,7 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         .opt_default("lb-block", "0", "candidates per block for --lb-kernel block (0 = auto)")
         .flag("no-cascade", "disable all pruning stages (brute force)")
         .flag("per-shard", "print one stats line per shard")
+        .flag("explain", "record and print which stage pruned each sampled candidate")
         .flag("verify", "cross-check hits against brute-force dtw::subsequence top-K");
     if maybe_help(&cmd, &raw) {
         return Ok(());
@@ -291,6 +302,7 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         lb_kernel: lb_kind,
         lb_block: a.get_or("lb-block", 0usize)?,
         stream: false,
+        explain: a.has("explain"),
     };
     let (window, stride, exclusion) = search_options.resolve(qlen, reflen);
     let (shards, parallelism) = search_options.resolve_sharding();
@@ -306,6 +318,14 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     }
     .with_kernel(kernel_spec)
     .with_lb(search_options.resolve_lb_kernel());
+
+    // trace context for this one-shot search: span sampling follows
+    // SDTW_TRACE; --explain turns on per-candidate explain events
+    let trace_ctx = {
+        let ctx = obs::begin_request();
+        obs::TraceCtx { explain: ctx.explain || search_options.explain, ..ctx }
+    };
+    let _obs_guard = obs::enter(trace_ctx);
 
     let rn = Arc::new(normalize::znormed(&reference));
     let qn = normalize::znormed(&query);
@@ -407,6 +427,21 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
                     sh.stats.dp_full
                 );
             }
+        }
+    }
+
+    if search_options.explain {
+        let events = obs::explain_for(trace_ctx.id);
+        println!(
+            "\nexplain sample: {} candidates (deterministic 1-in-N by candidate id)",
+            events.len()
+        );
+        println!("   start       stage       bound         tau");
+        for e in &events {
+            println!(
+                "  {:6}  {:>10}  {:10.4}  {:10.4}",
+                e.start, e.stage, e.bound, e.tau
+            );
         }
     }
 
@@ -660,7 +695,12 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt("variant", "pipeline variant (overrides config)")
         .opt("workers", "engine workers (overrides config)")
         .opt_default("seed", "42", "reference generator seed")
-        .opt_default("family", "ecg", "reference family: cbf|walk|ecg");
+        .opt_default("family", "ecg", "reference family: cbf|walk|ecg")
+        .opt_default("reflen", "2048", "reference length (--search-only mode)")
+        .flag(
+            "search-only",
+            "serve search/append/trace/metrics without compiled artifacts (align disabled)",
+        );
     if maybe_help(&cmd, &raw) {
         return Ok(());
     }
@@ -679,20 +719,31 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
     if let Some(w) = a.get_parsed::<usize>("workers")? {
         cfg.workers = w;
     }
-    if let Some(l) = Level::from_str_loose(&cfg.log_level) {
-        logger::set_level(l);
+    if let Err(e) = logger::set_spec(&cfg.log_level) {
+        eprintln!("warning: ignoring log_level: {e}");
     }
 
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let meta = manifest.require(&cfg.variant)?;
-    let reflen = meta.reflen.context("variant must be an alignment kind")?;
+    let search_only = a.has("search-only");
+    let reflen = if search_only {
+        a.get_or("reflen", 2048usize)?
+    } else {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let meta = manifest.require(&cfg.variant)?;
+        meta.reflen.context("variant must be an alignment kind")?
+    };
     let family = datagen::Family::from_name(a.get("family").unwrap())
         .context("family must be cbf|walk|ecg")?;
     let mut rng = sdtw_repro::util::rng::Xoshiro256::new(a.get_or("seed", 42u64)?);
     let reference = family.series(reflen, &mut rng);
-    log_info!("serving a generated {} reference of length {reflen}", a.get("family").unwrap());
+    log_info!(
+        "serving a generated {} reference of length {reflen}{}",
+        a.get("family").unwrap(),
+        if search_only { " (search-only: no artifacts)" } else { "" }
+    );
 
-    let service = Arc::new(SdtwService::start(ServiceOptions::from_config(&cfg), reference)?);
+    let mut opts = ServiceOptions::from_config(&cfg);
+    opts.search_only = search_only;
+    let service = Arc::new(SdtwService::start(opts, reference)?);
     let server = Server::bind(service, &cfg.addr)?;
     println!("listening on {} — Ctrl-C to stop", server.local_addr()?);
     server.serve()
@@ -744,6 +795,53 @@ fn cmd_inspect(raw: Vec<String>) -> Result<()> {
             if v.quantized { " quantized" } else { "" },
             if v.slow { " slow" } else { "" },
         );
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- trace
+
+fn cmd_trace(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("trace", "fetch recent trace spans from a running server")
+        .opt_default("addr", "127.0.0.1:7071", "server address")
+        .opt_default("limit", "0", "max spans to fetch, oldest dropped (0 = everything buffered)");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+    let mut client = Client::connect(a.get("addr").unwrap())?;
+    let spans = client.trace(a.get_or("limit", 0usize)?)?;
+    if spans.is_empty() {
+        println!("no spans buffered — start the server with SDTW_TRACE=1 (or =n to sample 1/n)");
+        return Ok(());
+    }
+    println!("   trace       stage      start_ms      dur_ms        floats  detail");
+    for s in &spans {
+        println!(
+            "  {:6}  {:>10}  {:12.3}  {:10.4}  {:12}  {}",
+            s.trace, s.stage, s.start_ms, s.dur_ms, s.floats, s.detail
+        );
+    }
+    println!("{} spans", spans.len());
+    Ok(())
+}
+
+// ------------------------------------------------------------ metrics
+
+fn cmd_metrics(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("metrics", "fetch metrics from a running server")
+        .opt_default("addr", "127.0.0.1:7071", "server address")
+        .flag("prometheus", "print Prometheus text exposition instead of the JSON fields");
+    if maybe_help(&cmd, &raw) {
+        return Ok(());
+    }
+    let a = cmd.parse(&raw)?;
+    let mut client = Client::connect(a.get("addr").unwrap())?;
+    if a.has("prometheus") {
+        print!("{}", client.metrics_prometheus()?);
+    } else {
+        let m = client.metrics()?;
+        println!("{}", Response::Metrics(Box::new(m)).encode());
     }
     Ok(())
 }

@@ -1,0 +1,521 @@
+//! Request-scoped tracing and per-stage profiling.
+//!
+//! The paper's headline numbers came from *measuring*: per-stage timing
+//! of the cascade (envelope build vs LB_Kim vs LB_Keogh vs the DP lane
+//! flush) is what located the wins.  This module threads a per-request
+//! trace context from the socket edge down to the kernels and records
+//! spans against a global, bounded buffer — with the same
+//! relaxed-atomic gating discipline as [`crate::util::logger`] so the
+//! whole layer costs one thread-local read per search when disabled.
+//!
+//! Design rules (and the properties `tests/prop_obs.rs` pins):
+//!
+//! - **Inert by construction.**  Recording only ever *observes* — no
+//!   code path may branch on timing data, so hits and cascade counters
+//!   are bit-identical with tracing off, on, or sampled.
+//! - **Bounded.**  Spans and explain events land in fixed-capacity
+//!   rings (oldest dropped); aggregates are fixed-size per-stage cells.
+//! - **Request-scoped.**  A [`TraceCtx`] is allocated at the edge
+//!   (server `handle_line`, or the CLI) and propagated by value into
+//!   worker threads; `enter` installs it in a thread-local and restores
+//!   the previous context on drop.
+//!
+//! Modes (env `SDTW_TRACE`, or [`set_mode`]): `0`/unset = off,
+//! `1` = trace every request, `n >= 2` = sample one request in `n`
+//! (by trace id, deterministically).  `SDTW_TRACE_FILE=path` appends
+//! one JSON object per recorded span (JSONL) regardless of the wire
+//! surfaces.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::{gsps, LatencyHistogram};
+
+/// Cap on the recent-span ring served by `{"op":"trace"}` / `sdtw trace`.
+pub const SPAN_RING_CAP: usize = 1024;
+/// Cap on the explain-event ring (`SearchOptions::explain`).
+pub const EXPLAIN_RING_CAP: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// mode gating
+// ---------------------------------------------------------------------------
+
+/// 0 = off, 1 = full, n >= 2 = sample one request in n.
+static MODE: AtomicU32 = AtomicU32::new(0);
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Set the tracing mode (see module docs). Process-wide, relaxed.
+pub fn set_mode(mode: u32) {
+    MODE.store(mode, Ordering::Relaxed);
+}
+
+pub fn mode() -> u32 {
+    MODE.load(Ordering::Relaxed)
+}
+
+/// Cheap global check: is any tracing mode enabled?
+#[inline]
+pub fn tracing_enabled() -> bool {
+    MODE.load(Ordering::Relaxed) != 0
+}
+
+/// Initialize the mode from `SDTW_TRACE` (`off`/`0`, `on`/`full`/`1`,
+/// or an integer sample divisor). Unset or unparseable leaves it off.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SDTW_TRACE") {
+        let v = v.trim().to_ascii_lowercase();
+        let mode = match v.as_str() {
+            "" | "0" | "off" | "false" => 0,
+            "1" | "on" | "full" | "true" => 1,
+            other => other.parse::<u32>().unwrap_or(0),
+        };
+        set_mode(mode);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace context
+// ---------------------------------------------------------------------------
+
+/// Per-request trace context, propagated by value (it is `Copy`) from
+/// the socket edge into worker threads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Monotonic per-process request id; 0 means "no active request".
+    pub id: u64,
+    /// Record spans for this request (full mode, or sampled in).
+    pub sampled: bool,
+    /// Record per-candidate explain events (`SearchOptions::explain`).
+    pub explain: bool,
+}
+
+impl TraceCtx {
+    pub const NONE: TraceCtx = TraceCtx { id: 0, sampled: false, explain: false };
+
+    /// Anything to do at all? Checked once per search entry.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.sampled || self.explain
+    }
+}
+
+thread_local! {
+    static CURRENT: Cell<TraceCtx> = const { Cell::new(TraceCtx::NONE) };
+}
+
+/// The calling thread's current trace context (NONE outside a request).
+#[inline]
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Install `ctx` on this thread until the guard drops (restores the
+/// previous context — nesting and worker-thread propagation both work).
+pub fn enter(ctx: TraceCtx) -> CtxGuard {
+    let prev = CURRENT.with(|c| {
+        let p = c.get();
+        c.set(ctx);
+        p
+    });
+    CtxGuard { prev }
+}
+
+pub struct CtxGuard {
+    prev: TraceCtx,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Allocate a fresh request context: always gets an id (the server's
+/// structured request log wants one even when tracing is off); sampling
+/// is decided here, deterministically, from the mode and the id.
+pub fn begin_request() -> TraceCtx {
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed) + 1;
+    let sampled = match MODE.load(Ordering::Relaxed) {
+        0 => false,
+        1 => true,
+        n => id % n as u64 == 0,
+    };
+    TraceCtx { id, sampled, explain: false }
+}
+
+// ---------------------------------------------------------------------------
+// stages and spans
+// ---------------------------------------------------------------------------
+
+/// The stage taxonomy. `Envelope`/`Keogh`/`Dp` are the cascade's three
+/// phases (Kim precompute + sort, Keogh verdict blocks, survivor lane
+/// flushes through the DP kernel); `Shard` is one executor shard's
+/// wall-clock; `Delta` is the streaming delta pass; `Search` is the
+/// whole request at the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Envelope,
+    Keogh,
+    Dp,
+    Shard,
+    Delta,
+    Search,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] =
+        [Stage::Envelope, Stage::Keogh, Stage::Dp, Stage::Shard, Stage::Delta, Stage::Search];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Envelope => "envelope",
+            Stage::Keogh => "keogh",
+            Stage::Dp => "dp",
+            Stage::Shard => "shard",
+            Stage::Delta => "delta",
+            Stage::Search => "search",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Stage::Envelope => 0,
+            Stage::Keogh => 1,
+            Stage::Dp => 2,
+            Stage::Shard => 3,
+            Stage::Delta => 4,
+            Stage::Search => 5,
+        }
+    }
+}
+
+/// One recorded span. `start_ms` is process-relative (monotonic).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub trace_id: u64,
+    pub stage: Stage,
+    pub start_ms: f64,
+    pub dur_ms: f64,
+    /// Floats processed by the stage (the paper's Gsps numerator); 0 if n/a.
+    pub floats: u64,
+    pub detail: Option<String>,
+}
+
+fn uptime_ms() -> f64 {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
+}
+
+static SPANS: Mutex<VecDeque<Span>> = Mutex::new(VecDeque::new());
+static EXPLAIN: Mutex<VecDeque<ExplainEvent>> = Mutex::new(VecDeque::new());
+
+struct StageAgg {
+    spans: u64,
+    total_ms: f64,
+    floats: u64,
+    hist: LatencyHistogram,
+}
+
+fn aggs() -> &'static Mutex<Vec<StageAgg>> {
+    static AGGS: OnceLock<Mutex<Vec<StageAgg>>> = OnceLock::new();
+    AGGS.get_or_init(|| {
+        Mutex::new(
+            Stage::ALL
+                .iter()
+                .map(|_| StageAgg {
+                    spans: 0,
+                    total_ms: 0.0,
+                    floats: 0,
+                    hist: LatencyHistogram::new(),
+                })
+                .collect(),
+        )
+    })
+}
+
+fn trace_sink() -> Option<&'static Mutex<std::fs::File>> {
+    static SINK: OnceLock<Option<Mutex<std::fs::File>>> = OnceLock::new();
+    SINK.get_or_init(|| {
+        let path = std::env::var("SDTW_TRACE_FILE").ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(f) => Some(Mutex::new(f)),
+            Err(e) => {
+                eprintln!("[obs] cannot open SDTW_TRACE_FILE={path:?}: {e}");
+                None
+            }
+        }
+    })
+    .as_ref()
+}
+
+fn span_json(s: &Span) -> Json {
+    let mut pairs = vec![
+        ("trace", Json::Int(s.trace_id as i64)),
+        ("stage", Json::str(s.stage.name())),
+        ("start_ms", Json::Num(s.start_ms)),
+        ("dur_ms", Json::Num(s.dur_ms)),
+        ("floats", Json::Int(s.floats as i64)),
+    ];
+    if let Some(d) = &s.detail {
+        pairs.push(("detail", Json::str(d)));
+    }
+    Json::obj(pairs)
+}
+
+/// Record one span against the calling thread's context. No-op unless
+/// the current request is sampled. Feeds the span ring, the per-stage
+/// aggregates, and (if configured) the `SDTW_TRACE_FILE` JSONL sink.
+pub fn record_span(stage: Stage, dur: Duration, floats: u64, detail: Option<String>) {
+    let ctx = current();
+    if !ctx.sampled {
+        return;
+    }
+    let dur_ms = dur.as_secs_f64() * 1e3;
+    let span = Span {
+        trace_id: ctx.id,
+        stage,
+        start_ms: (uptime_ms() - dur_ms).max(0.0),
+        dur_ms,
+        floats,
+        detail,
+    };
+    if let Some(sink) = trace_sink() {
+        if let Ok(mut f) = sink.lock() {
+            let _ = writeln!(f, "{}", span_json(&span));
+        }
+    }
+    if let Ok(mut aggs) = aggs().lock() {
+        let a = &mut aggs[stage.idx()];
+        a.spans += 1;
+        a.total_ms += dur_ms;
+        a.floats += floats;
+        a.hist.record_ms(dur_ms);
+    }
+    if let Ok(mut ring) = SPANS.lock() {
+        if ring.len() >= SPAN_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+}
+
+/// The most recent `limit` spans, oldest first.
+pub fn recent_spans(limit: usize) -> Vec<Span> {
+    let ring = SPANS.lock().map(|r| r.iter().cloned().collect::<Vec<_>>()).unwrap_or_default();
+    let skip = ring.len().saturating_sub(limit);
+    ring.into_iter().skip(skip).collect()
+}
+
+// ---------------------------------------------------------------------------
+// explain events
+// ---------------------------------------------------------------------------
+
+/// One per-candidate cascade decision, recorded only in explain mode.
+/// `stage` is the deciding stage; `bound` is the value that decided it
+/// (LB_Kim / LB_Keogh lower bound, or the DP cost / partial cost) and
+/// `tau` the threshold it was compared against.
+#[derive(Clone, Debug)]
+pub struct ExplainEvent {
+    pub trace_id: u64,
+    /// Candidate window start index.
+    pub start: usize,
+    pub stage: &'static str,
+    pub bound: f32,
+    pub tau: f32,
+}
+
+/// Batch-append explain events (drains `events`). Cascade code buffers
+/// locally and flushes once per search so the hot loop never locks.
+pub fn record_explain_batch(events: &mut Vec<ExplainEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    if let Ok(mut ring) = EXPLAIN.lock() {
+        for ev in events.drain(..) {
+            if ring.len() >= EXPLAIN_RING_CAP {
+                ring.pop_front();
+            }
+            ring.push_back(ev);
+        }
+    } else {
+        events.clear();
+    }
+}
+
+/// All retained explain events for one trace id, oldest first.
+pub fn explain_for(trace_id: u64) -> Vec<ExplainEvent> {
+    EXPLAIN
+        .lock()
+        .map(|r| r.iter().filter(|e| e.trace_id == trace_id).cloned().collect())
+        .unwrap_or_default()
+}
+
+// ---------------------------------------------------------------------------
+// per-stage summaries (for Metrics / Prometheus)
+// ---------------------------------------------------------------------------
+
+/// Aggregate view of one stage, folded into `MetricsSnapshot::stages`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSummary {
+    pub stage: String,
+    pub spans: u64,
+    pub total_ms: f64,
+    /// Paper eq. 3 over the stage's accumulated floats and wall time.
+    pub gsps: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Summaries for every stage that has recorded at least one span.
+pub fn stage_summaries() -> Vec<StageSummary> {
+    let aggs = match aggs().lock() {
+        Ok(a) => a,
+        Err(_) => return Vec::new(),
+    };
+    Stage::ALL
+        .iter()
+        .zip(aggs.iter())
+        .filter(|(_, a)| a.spans > 0)
+        .map(|(stage, a)| StageSummary {
+            stage: stage.name().to_string(),
+            spans: a.spans,
+            total_ms: a.total_ms,
+            gsps: finite(gsps(a.floats, a.total_ms.max(1e-12))),
+            p50_ms: finite(a.hist.percentile_ms(50.0)),
+            p90_ms: finite(a.hist.percentile_ms(90.0)),
+            p99_ms: finite(a.hist.percentile_ms(99.0)),
+        })
+        .collect()
+}
+
+/// Clear rings and aggregates (tests; mode and ids are left alone).
+pub fn reset() {
+    if let Ok(mut r) = SPANS.lock() {
+        r.clear();
+    }
+    if let Ok(mut r) = EXPLAIN.lock() {
+        r.clear();
+    }
+    if let Ok(mut aggs) = aggs().lock() {
+        for a in aggs.iter_mut() {
+            *a = StageAgg { spans: 0, total_ms: 0.0, floats: 0, hist: LatencyHistogram::new() };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The span/explain rings are process-global; tests that record into
+    // them serialize on this lock so one test's spans never interleave
+    // with another's assertions.  Context tests are thread-local and
+    // need no lock.
+    static RING_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn ctx_enter_restores_previous() {
+        assert_eq!(current(), TraceCtx::NONE);
+        let outer = TraceCtx { id: 7, sampled: true, explain: false };
+        let g = enter(outer);
+        assert_eq!(current().id, 7);
+        {
+            let inner = TraceCtx { id: 9, sampled: false, explain: true };
+            let _g2 = enter(inner);
+            assert_eq!(current().id, 9);
+            assert!(current().explain);
+        }
+        assert_eq!(current().id, 7);
+        drop(g);
+        assert_eq!(current(), TraceCtx::NONE);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_in_id() {
+        // ids are global; only the sampled decision depends on mode
+        let prev = mode();
+        set_mode(3);
+        let picks: Vec<bool> = (0..30)
+            .map(|_| begin_request())
+            .map(|c| (c.id, c.sampled))
+            .map(|(id, s)| {
+                assert_eq!(s, id % 3 == 0);
+                s
+            })
+            .collect();
+        assert!(picks.iter().any(|&s| s));
+        assert!(picks.iter().any(|&s| !s));
+        set_mode(prev);
+    }
+
+    #[test]
+    fn spans_only_recorded_when_sampled() {
+        let _l = RING_LOCK.lock().unwrap();
+        let before = recent_spans(usize::MAX).len();
+        {
+            let _g = enter(TraceCtx { id: 1, sampled: false, explain: false });
+            record_span(Stage::Dp, Duration::from_micros(10), 100, None);
+        }
+        assert_eq!(recent_spans(usize::MAX).len(), before);
+        {
+            let _g = enter(TraceCtx { id: 2, sampled: true, explain: false });
+            record_span(Stage::Dp, Duration::from_micros(10), 100, Some("unit".into()));
+        }
+        let after = recent_spans(usize::MAX);
+        assert!(after.len() > before);
+        let last = after.last().unwrap();
+        assert_eq!(last.stage, Stage::Dp);
+        assert_eq!(last.floats, 100);
+    }
+
+    #[test]
+    fn explain_ring_is_bounded_and_filterable() {
+        let _l = RING_LOCK.lock().unwrap();
+        let mut evs: Vec<ExplainEvent> = (0..EXPLAIN_RING_CAP + 10)
+            .map(|i| ExplainEvent {
+                trace_id: 424_242,
+                start: i,
+                stage: "kim",
+                bound: 1.0,
+                tau: 2.0,
+            })
+            .collect();
+        record_explain_batch(&mut evs);
+        assert!(evs.is_empty());
+        let got = explain_for(424_242);
+        assert!(got.len() <= EXPLAIN_RING_CAP);
+        assert!(!got.is_empty());
+        assert!(got.iter().all(|e| e.stage == "kim"));
+    }
+
+    #[test]
+    fn stage_summary_accumulates() {
+        let _l = RING_LOCK.lock().unwrap();
+        let _g = enter(TraceCtx { id: 3, sampled: true, explain: false });
+        record_span(Stage::Delta, Duration::from_millis(2), 2_000_000, None);
+        record_span(Stage::Delta, Duration::from_millis(4), 2_000_000, None);
+        let s = stage_summaries();
+        let delta = s.iter().find(|s| s.stage == "delta").expect("delta stage present");
+        assert!(delta.spans >= 2);
+        assert!(delta.total_ms > 0.0);
+        assert!(delta.gsps > 0.0);
+        assert!(delta.p50_ms <= delta.p90_ms && delta.p90_ms <= delta.p99_ms);
+    }
+}

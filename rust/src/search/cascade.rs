@@ -61,9 +61,11 @@
 //! stage 1 prune its entire tail with a single comparison.
 
 use std::ops::Range;
+use std::time::{Duration, Instant};
 
 use crate::dtw::kernel::{self, DpKernel, KernelSpec, Lane};
 use crate::dtw::{Dist, Match};
+use crate::obs;
 
 use super::index::CandidateIndex;
 use super::lb_kernel::{LbKernel, LbKernelSpec, LbVerdict};
@@ -325,6 +327,14 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         return (hits, stats);
     }
 
+    // observability: one thread-local read decides everything.  When no
+    // trace context is active this stays `None` and the cascade runs
+    // exactly as before — timing and explain recording only *observe*
+    // (nothing downstream branches on them), so hits and counters are
+    // bit-identical either way (pinned by tests/prop_obs.rs).
+    let ctx = obs::current();
+    let mut cobs = ctx.active().then(|| CascadeObs::new(ctx, range.len()));
+
     // stage-1/2 prefilter executor: envelopes are SoA-packed into
     // blocks of `lb.block()` candidates and evaluated in lockstep (1
     // for the scalar kernel — the historical per-candidate cadence).
@@ -341,6 +351,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
     // kernel, block by block, then sorted cheapest-first
     let mut order: Vec<(f32, usize)> = Vec::with_capacity(range.len());
     if opts.kim {
+        let env_t0 = cobs.as_ref().map(|_| Instant::now());
         let mut kim_out: Vec<f32> = Vec::with_capacity(b_cap);
         let mut block = Vec::with_capacity(b_cap);
         for t in range {
@@ -375,6 +386,12 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
             );
         }
         order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        if let (Some(c), Some(t0)) = (cobs.as_mut(), env_t0) {
+            // Kim precompute + sort: 2 envelope floats per candidate
+            c.env += t0.elapsed();
+            c.env_floats += 2 * stats.lb_evals;
+            c.env_runs += 1;
+        }
     } else {
         order.extend(range.map(|t| (0.0f32, t)));
     }
@@ -401,6 +418,9 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         if opts.kim && order[i].0 > tau {
             // sorted ascending: everything from here on is also above τ
             stats.pruned_kim += (order.len() - i) as u64;
+            if let Some(c) = cobs.as_mut() {
+                c.explain_kim_tail(index, &order[i..], tau);
+            }
             break;
         }
         // admit up to `b_cap` candidates under this τ's Kim cutoff
@@ -412,6 +432,9 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
             let (kim, t) = order[i];
             if opts.kim && kim > tau {
                 stats.pruned_kim += (order.len() - i) as u64;
+                if let Some(c) = cobs.as_mut() {
+                    c.explain_kim_tail(index, &order[i..], tau);
+                }
                 cutoff = true;
                 break;
             }
@@ -427,12 +450,24 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
             // stage 2: one lockstep Keogh pass over the admitted block
             stats.lb_blocks += 1;
             stats.lb_evals += env.ids.len() as u64;
+            let keogh_t0 = cobs.as_ref().map(|_| Instant::now());
             lb.keogh(query, &env.lo, &env.hi, dist, tau, &mut env.verdicts);
+            if let (Some(c), Some(t0)) = (cobs.as_mut(), keogh_t0) {
+                // one Keogh sum walks the whole query per candidate
+                c.keogh += t0.elapsed();
+                c.keogh_floats += (env.ids.len() * query.len()) as u64;
+                c.keogh_runs += 1;
+            }
             for (&t, v) in env.ids.iter().zip(env.verdicts.iter()) {
                 if v.pruned {
                     stats.pruned_keogh += 1;
                     if v.abandoned {
                         stats.lb_abandons += 1;
+                    }
+                    if let Some(c) = cobs.as_mut() {
+                        if c.wants(t) {
+                            c.push_explain(index.start(t), "keogh", v.bound, tau);
+                        }
                     }
                     continue;
                 }
@@ -448,6 +483,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
                     tau_sink,
                     &mut stats,
                     &mut hits,
+                    &mut cobs,
                 );
             }
         } else {
@@ -464,6 +500,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
                     tau_sink,
                     &mut stats,
                     &mut hits,
+                    &mut cobs,
                 );
             }
         }
@@ -483,7 +520,11 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         tau_sink,
         &mut stats,
         &mut hits,
+        &mut cobs,
     );
+    if let Some(c) = cobs {
+        c.finish(kernel.name(), lb.name());
+    }
     (hits, stats)
 }
 
@@ -541,10 +582,11 @@ fn admit_survivor<'a, I: CandidateIndex + ?Sized>(
     tau_sink: &mut impl TauSink,
     stats: &mut CascadeStats,
     hits: &mut Vec<Hit>,
+    cobs: &mut Option<CascadeObs>,
 ) {
     flush.pending.push(t);
     if flush.pending.len() >= lane_cap {
-        flush_survivors(kernel, index, query, dist, abandon, flush, tau_sink, stats, hits);
+        flush_survivors(kernel, index, query, dist, abandon, flush, tau_sink, stats, hits, cobs);
     }
 }
 
@@ -574,6 +616,7 @@ fn flush_survivors<'a, I: CandidateIndex + ?Sized>(
     tau_sink: &mut impl TauSink,
     stats: &mut CascadeStats,
     hits: &mut Vec<Hit>,
+    cobs: &mut Option<CascadeObs>,
 ) {
     if flush.pending.is_empty() {
         return;
@@ -583,20 +626,144 @@ fn flush_survivors<'a, I: CandidateIndex + ?Sized>(
     flush
         .lanes
         .extend(flush.pending.iter().map(|&t| Lane { query, window: index.window_slice(t) }));
+    let dp_t0 = cobs.as_ref().map(|_| Instant::now());
     kernel.run(&flush.lanes, abandon_at, dist, &mut flush.results);
+    if let (Some(c), Some(t0)) = (cobs.as_mut(), dp_t0) {
+        c.dp += t0.elapsed();
+        c.dp_floats += kernel::lanes_floats(&flush.lanes);
+        c.dp_runs += 1;
+    }
     stats.survivor_batches += 1;
     for (&t, r) in flush.pending.iter().zip(flush.results.iter()) {
         match r {
-            None => stats.dp_abandoned += 1,
+            None => {
+                stats.dp_abandoned += 1;
+                if let Some(c) = cobs.as_mut() {
+                    if c.wants(t) {
+                        c.push_explain(index.start(t), "dp_abandon", abandon_at, abandon_at);
+                    }
+                }
+            }
             Some(m) => {
                 stats.dp_full += 1;
                 tau_sink.record(m.cost);
                 let start = index.start(t);
                 hits.push(Hit { start, end: start + m.end, cost: m.cost });
+                if let Some(c) = cobs.as_mut() {
+                    if c.wants(t) {
+                        c.push_explain(start, "dp_full", m.cost, abandon_at);
+                    }
+                }
             }
         }
     }
     flush.pending.clear();
+}
+
+/// Per-search observability accumulator: phase durations and float
+/// counts build up locally (no locks in the hot loop) and flush to the
+/// global [`obs`] buffers once, at cascade exit.  Created only when a
+/// trace context is active; purely an observer — it never feeds back
+/// into pruning decisions, so the cascade's output cannot depend on it.
+struct CascadeObs {
+    trace_id: u64,
+    /// Explain-mode candidate sampling stride (deterministic in the
+    /// candidate id, so enabling explain cannot perturb results).
+    sample: usize,
+    env: Duration,
+    keogh: Duration,
+    dp: Duration,
+    env_floats: u64,
+    keogh_floats: u64,
+    dp_floats: u64,
+    env_runs: u64,
+    keogh_runs: u64,
+    dp_runs: u64,
+    explain: Option<Vec<obs::ExplainEvent>>,
+}
+
+impl CascadeObs {
+    fn new(ctx: obs::TraceCtx, candidates: usize) -> CascadeObs {
+        CascadeObs {
+            trace_id: ctx.id,
+            sample: (candidates / 1024).max(1),
+            env: Duration::ZERO,
+            keogh: Duration::ZERO,
+            dp: Duration::ZERO,
+            env_floats: 0,
+            keogh_floats: 0,
+            dp_floats: 0,
+            env_runs: 0,
+            keogh_runs: 0,
+            dp_runs: 0,
+            explain: ctx.explain.then(Vec::new),
+        }
+    }
+
+    /// Should candidate `t` get an explain event? (Explain samples one
+    /// candidate in `sample`; spans are unaffected.)
+    #[inline]
+    fn wants(&self, t: usize) -> bool {
+        self.explain.is_some() && t % self.sample == 0
+    }
+
+    fn push_explain(&mut self, start: usize, stage: &'static str, bound: f32, tau: f32) {
+        if let Some(evs) = self.explain.as_mut() {
+            if evs.len() < obs::EXPLAIN_RING_CAP {
+                evs.push(obs::ExplainEvent {
+                    trace_id: self.trace_id,
+                    start,
+                    stage,
+                    bound,
+                    tau,
+                });
+            }
+        }
+    }
+
+    /// Record the sorted LB_Kim tail cut by one τ comparison.
+    fn explain_kim_tail<I: CandidateIndex + ?Sized>(
+        &mut self,
+        index: &I,
+        tail: &[(f32, usize)],
+        tau: f32,
+    ) {
+        if self.explain.is_none() {
+            return;
+        }
+        for &(bound, t) in tail {
+            if self.wants(t) {
+                self.push_explain(index.start(t), "kim", bound, tau);
+            }
+        }
+    }
+
+    /// Emit aggregate spans (one per phase that ran) and flush the
+    /// explain buffer to the global ring.
+    fn finish(mut self, kernel_name: &str, lb_name: &str) {
+        if self.env_runs > 0 {
+            obs::record_span(obs::Stage::Envelope, self.env, self.env_floats, None);
+        }
+        if self.keogh_runs > 0 {
+            obs::record_span(
+                obs::Stage::Keogh,
+                self.keogh,
+                self.keogh_floats,
+                Some(format!("lb={lb_name}")),
+            );
+        }
+        if self.dp_runs > 0 {
+            obs::record_span(
+                obs::Stage::Dp,
+                self.dp,
+                self.dp_floats,
+                Some(format!("kernel={kernel_name}")),
+            );
+        }
+        if let Some(mut evs) = self.explain.take() {
+            obs::record_explain_batch(&mut evs);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -55,6 +55,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::queue::BoundedQueue;
+use crate::obs;
 
 use super::cascade::{self, CascadeOpts, CascadeStats, TauSink};
 use super::index::CandidateIndex;
@@ -270,12 +271,18 @@ pub fn search_sharded_index<I: CandidateIndex + Sync + ?Sized>(
     type Slot = Mutex<Option<(Vec<Hit>, ShardReport)>>;
     let slots: Vec<Slot> = ranges.iter().map(|_| Mutex::new(None)).collect();
     let threads = parallelism.max(1).min(ranges.len());
+    // propagate the request's trace context into the scoped workers:
+    // the context is Copy, captured by value, and installed per thread
+    // (purely observational — the per-shard spans are what
+    // `search_imbalance_mean` diagnostics want)
+    let ctx = obs::current();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let jobs = &jobs;
             let slots = &slots;
             let shared = &shared;
             scope.spawn(move || {
+                let _obs_guard = obs::enter(ctx);
                 let mut sink = SharedTau(shared);
                 while let Some((shard, range)) = jobs.pop() {
                     let t0 = Instant::now();
@@ -288,11 +295,20 @@ pub fn search_sharded_index<I: CandidateIndex + Sync + ?Sized>(
                         range.clone(),
                         &mut sink,
                     );
+                    let elapsed = t0.elapsed();
+                    if ctx.sampled {
+                        obs::record_span(
+                            obs::Stage::Shard,
+                            elapsed,
+                            stats.candidates * query.len() as u64,
+                            Some(format!("shard={shard}")),
+                        );
+                    }
                     let report = ShardReport {
                         shard,
                         range,
                         stats,
-                        elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        elapsed_ms: elapsed.as_secs_f64() * 1e3,
                     };
                     *slots[shard].lock().unwrap() = Some((hits, report));
                 }

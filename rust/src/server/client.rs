@@ -18,7 +18,7 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
-use super::proto::{AppendFields, MetricsFields, Request, Response, SearchFields};
+use super::proto::{AppendFields, MetricsFields, Request, Response, SearchFields, TraceSpanFields};
 use crate::coordinator::{AlignOptions, AppendOptions, SearchOptions};
 
 /// One connection to an sDTW server.
@@ -65,10 +65,30 @@ impl Client {
     }
 
     pub fn metrics(&mut self) -> Result<MetricsFields> {
-        match self.roundtrip(&Request::Metrics)? {
+        match self.roundtrip(&Request::Metrics { prometheus: false })? {
             Response::Metrics(m) => Ok(*m),
             Response::Error(e) => bail!("server error: {e}"),
             other => bail!("unexpected reply to metrics: {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics in Prometheus text exposition format.
+    pub fn metrics_prometheus(&mut self) -> Result<String> {
+        match self.roundtrip(&Request::Metrics { prometheus: true })? {
+            Response::Prometheus(text) => Ok(text),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to metrics: {other:?}"),
+        }
+    }
+
+    /// Fetch the server's recent trace spans (oldest first); `limit: 0`
+    /// means everything currently buffered.  Empty unless the server
+    /// runs with `SDTW_TRACE` enabled.
+    pub fn trace(&mut self, limit: usize) -> Result<Vec<TraceSpanFields>> {
+        match self.roundtrip(&Request::Trace { limit })? {
+            Response::Trace(spans) => Ok(spans),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected reply to trace: {other:?}"),
         }
     }
 

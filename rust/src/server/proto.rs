@@ -9,6 +9,8 @@
 //!    "lb_kernel":"scalar|block","lb_block":64,"stream":b}
 //!   {"op":"append","samples":[...],"window":192,"stride":1}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
+//!   {"op":"metrics","format":"prometheus"}   (text exposition payload)
+//!   {"op":"trace","limit":100}               (recent spans, oldest first)
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
 //!
 //! Forward compatibility: an `ok:true` response whose shape this build
@@ -78,7 +80,12 @@ pub enum Request {
     Search { query: Vec<f32>, options: SearchOptions },
     Append { samples: Vec<f32>, options: AppendOptions },
     Info,
-    Metrics,
+    /// `prometheus: true` asks for the text exposition format instead
+    /// of the structured JSON counters.
+    Metrics { prometheus: bool },
+    /// Recent trace spans from the server's span ring, oldest first.
+    /// `limit: 0` means "everything currently buffered".
+    Trace { limit: usize },
     Ping,
 }
 
@@ -125,7 +132,16 @@ impl Request {
         match op {
             "ping" => Ok(Request::Ping),
             "info" => Ok(Request::Info),
-            "metrics" => Ok(Request::Metrics),
+            "metrics" => {
+                let prometheus = match v.get("format").map(|x| x.as_str()) {
+                    None => false,
+                    Some(Some("prometheus")) => true,
+                    Some(Some(other)) => bail!("unknown metrics format {other:?}"),
+                    Some(None) => bail!("format must be a string"),
+                };
+                Ok(Request::Metrics { prometheus })
+            }
+            "trace" => Ok(Request::Trace { limit: parse_usize(&v, "limit", 0)? }),
             "align" => {
                 let query = parse_query(&v, "align")?;
                 let flag = |k: &str| v.get(k).and_then(Json::as_bool).unwrap_or(false);
@@ -169,6 +185,7 @@ impl Request {
                         lb_kernel,
                         lb_block: parse_usize(&v, "lb_block", d.lb_block)?,
                         stream: v.get("stream").and_then(Json::as_bool).unwrap_or(false),
+                        explain: v.get("explain").and_then(Json::as_bool).unwrap_or(false),
                     },
                 })
             }
@@ -190,7 +207,21 @@ impl Request {
         match self {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Info => r#"{"op":"info"}"#.to_string(),
-            Request::Metrics => r#"{"op":"metrics"}"#.to_string(),
+            Request::Metrics { prometheus: false } => r#"{"op":"metrics"}"#.to_string(),
+            Request::Metrics { prometheus: true } => {
+                r#"{"op":"metrics","format":"prometheus"}"#.to_string()
+            }
+            Request::Trace { limit } => {
+                if *limit == 0 {
+                    r#"{"op":"trace"}"#.to_string()
+                } else {
+                    Json::obj(vec![
+                        ("op", Json::str("trace")),
+                        ("limit", Json::Int(*limit as i64)),
+                    ])
+                    .to_string()
+                }
+            }
             Request::Align { query, options } => {
                 let mut pairs = vec![
                     ("op", Json::str("align")),
@@ -246,6 +277,9 @@ impl Request {
                 if options.stream {
                     pairs.push(("stream", Json::Bool(true)));
                 }
+                if options.explain {
+                    pairs.push(("explain", Json::Bool(true)));
+                }
                 Json::obj(pairs).to_string()
             }
             Request::Append { samples, options } => {
@@ -274,6 +308,11 @@ pub enum Response {
     Search(Box<SearchFields>),
     Append(AppendFields),
     Metrics(Box<MetricsFields>),
+    /// Recent trace spans, oldest first (`{"op":"trace"}`).
+    Trace(Vec<TraceSpanFields>),
+    /// Prometheus text exposition payload
+    /// (`{"op":"metrics","format":"prometheus"}`).
+    Prometheus(String),
     Error(String),
     /// An `ok:true` response this build does not recognize (a newer
     /// verb); the raw line is preserved and re-encoded verbatim.
@@ -309,6 +348,24 @@ pub struct SearchFields {
     /// Keogh evaluations early-abandoned mid-sum (subset of
     /// `pruned_keogh`; 0 from servers predating the field).
     pub lb_abandons: u64,
+}
+
+/// One trace span as it crosses the wire (see [`crate::obs::Span`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpanFields {
+    /// Request trace id the span belongs to.
+    pub trace: u64,
+    /// Stage name (`"envelope"`, `"keogh"`, `"dp"`, `"shard"`,
+    /// `"delta"`, `"search"`).
+    pub stage: String,
+    /// Milliseconds since the recorder's epoch when the span closed.
+    pub start_ms: f64,
+    pub dur_ms: f64,
+    /// Floats the stage processed (paper eq. 3 numerator).
+    pub floats: u64,
+    /// Free-form stage detail (`"shard=3"`, `"kernel=lanes"`); empty
+    /// when the stage recorded none.
+    pub detail: String,
 }
 
 /// The append fields that cross the wire.
@@ -366,6 +423,9 @@ pub struct MetricsFields {
     pub delta_scanned: u64,
     /// Candidates the delta searches skipped via the watermark.
     pub delta_skipped: u64,
+    /// Per-stage trace aggregates (empty when tracing is off, or when
+    /// talking to a pre-observability server that does not send them).
+    pub stages: Vec<crate::obs::StageSummary>,
 }
 
 impl Response {
@@ -433,7 +493,25 @@ impl Response {
             delta_searches: m.delta_searches,
             delta_scanned: m.delta_candidates_scanned,
             delta_skipped: m.delta_candidates_skipped,
+            stages: m.stages.clone(),
         }))
+    }
+
+    /// Build a trace response from the recorder's span ring.
+    pub fn from_spans(spans: &[crate::obs::Span]) -> Response {
+        Response::Trace(
+            spans
+                .iter()
+                .map(|s| TraceSpanFields {
+                    trace: s.trace_id,
+                    stage: s.stage.name().to_string(),
+                    start_ms: s.start_ms,
+                    dur_ms: s.dur_ms,
+                    floats: s.floats,
+                    detail: s.detail.clone().unwrap_or_default(),
+                })
+                .collect(),
+        )
     }
 
     pub fn encode(&self) -> String {
@@ -490,34 +568,73 @@ impl Response {
                 ("latency_ms", Json::Num(a.latency_ms)),
             ])
             .to_string(),
-            Response::Metrics(m) => Json::obj(vec![
+            Response::Trace(spans) => {
+                let arr = Json::arr(spans.iter().map(|s| {
+                    let mut pairs = vec![
+                        ("trace", Json::Int(s.trace as i64)),
+                        ("stage", Json::str(&s.stage)),
+                        ("start_ms", Json::Num(s.start_ms)),
+                        ("dur_ms", Json::Num(s.dur_ms)),
+                        ("floats", Json::Int(s.floats as i64)),
+                    ];
+                    if !s.detail.is_empty() {
+                        pairs.push(("detail", Json::str(&s.detail)));
+                    }
+                    Json::obj(pairs)
+                }));
+                Json::obj(vec![("ok", Json::Bool(true)), ("spans", arr)]).to_string()
+            }
+            Response::Prometheus(text) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("requests", Json::Int(m.requests as i64)),
-                ("responses", Json::Int(m.responses as i64)),
-                ("batches", Json::Int(m.batches as i64)),
-                ("padding_fraction", Json::Num(m.padding_fraction)),
-                ("device_gsps", Json::Num(m.device_gsps)),
-                ("offered_gsps", Json::Num(m.offered_gsps)),
-                ("latency_p50_ms", Json::Num(m.latency_p50_ms)),
-                ("latency_p99_ms", Json::Num(m.latency_p99_ms)),
-                ("searches", Json::Int(m.searches as i64)),
-                ("search_windows", Json::Int(m.search_windows as i64)),
-                ("search_pruned", Json::Int(m.search_pruned as i64)),
-                ("search_p50_ms", Json::Num(m.search_p50_ms)),
-                ("searches_sharded", Json::Int(m.searches_sharded as i64)),
-                ("search_tightenings", Json::Int(m.search_tightenings as i64)),
-                ("survivor_batches", Json::Int(m.survivor_batches as i64)),
-                ("lane_occupancy", Json::Num(m.lane_occupancy)),
-                ("lb_blocks", Json::Int(m.lb_blocks as i64)),
-                ("lb_abandons", Json::Int(m.lb_abandons as i64)),
-                ("lb_block_occupancy", Json::Num(m.lb_block_occupancy)),
-                ("stream_appends", Json::Int(m.stream_appends as i64)),
-                ("stream_samples", Json::Int(m.stream_samples as i64)),
-                ("delta_searches", Json::Int(m.delta_searches as i64)),
-                ("delta_scanned", Json::Int(m.delta_scanned as i64)),
-                ("delta_skipped", Json::Int(m.delta_skipped as i64)),
+                ("prometheus", Json::str(text)),
             ])
             .to_string(),
+            Response::Metrics(m) => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("requests", Json::Int(m.requests as i64)),
+                    ("responses", Json::Int(m.responses as i64)),
+                    ("batches", Json::Int(m.batches as i64)),
+                    ("padding_fraction", Json::Num(m.padding_fraction)),
+                    ("device_gsps", Json::Num(m.device_gsps)),
+                    ("offered_gsps", Json::Num(m.offered_gsps)),
+                    ("latency_p50_ms", Json::Num(m.latency_p50_ms)),
+                    ("latency_p99_ms", Json::Num(m.latency_p99_ms)),
+                    ("searches", Json::Int(m.searches as i64)),
+                    ("search_windows", Json::Int(m.search_windows as i64)),
+                    ("search_pruned", Json::Int(m.search_pruned as i64)),
+                    ("search_p50_ms", Json::Num(m.search_p50_ms)),
+                    ("searches_sharded", Json::Int(m.searches_sharded as i64)),
+                    ("search_tightenings", Json::Int(m.search_tightenings as i64)),
+                    ("survivor_batches", Json::Int(m.survivor_batches as i64)),
+                    ("lane_occupancy", Json::Num(m.lane_occupancy)),
+                    ("lb_blocks", Json::Int(m.lb_blocks as i64)),
+                    ("lb_abandons", Json::Int(m.lb_abandons as i64)),
+                    ("lb_block_occupancy", Json::Num(m.lb_block_occupancy)),
+                    ("stream_appends", Json::Int(m.stream_appends as i64)),
+                    ("stream_samples", Json::Int(m.stream_samples as i64)),
+                    ("delta_searches", Json::Int(m.delta_searches as i64)),
+                    ("delta_scanned", Json::Int(m.delta_scanned as i64)),
+                    ("delta_skipped", Json::Int(m.delta_skipped as i64)),
+                ];
+                if !m.stages.is_empty() {
+                    pairs.push((
+                        "stages",
+                        Json::arr(m.stages.iter().map(|st| {
+                            Json::obj(vec![
+                                ("stage", Json::str(&st.stage)),
+                                ("spans", Json::Int(st.spans as i64)),
+                                ("total_ms", Json::Num(st.total_ms)),
+                                ("gsps", Json::Num(st.gsps)),
+                                ("p50_ms", Json::Num(st.p50_ms)),
+                                ("p90_ms", Json::Num(st.p90_ms)),
+                                ("p99_ms", Json::Num(st.p99_ms)),
+                            ])
+                        })),
+                    ));
+                }
+                Json::obj(pairs).to_string()
+            }
             Response::Error(e) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::str(e)),
@@ -596,6 +713,31 @@ impl Response {
                 batch: v.get("batch").and_then(Json::as_i64).unwrap_or(0) as usize,
             });
         }
+        if let Some(spans) = v.get("spans").and_then(Json::as_arr) {
+            let parsed = spans
+                .iter()
+                .map(|s| TraceSpanFields {
+                    trace: s.get("trace").and_then(Json::as_i64).unwrap_or(0) as u64,
+                    stage: s
+                        .get("stage")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    start_ms: s.get("start_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    dur_ms: s.get("dur_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    floats: s.get("floats").and_then(Json::as_i64).unwrap_or(0) as u64,
+                    detail: s
+                        .get("detail")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                })
+                .collect();
+            return Ok(Response::Trace(parsed));
+        }
+        if let Some(text) = v.get("prometheus").and_then(Json::as_str) {
+            return Ok(Response::Prometheus(text.to_string()));
+        }
         if v.get("requests").is_some() {
             let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
             let num = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
@@ -624,6 +766,31 @@ impl Response {
                 delta_searches: int("delta_searches"),
                 delta_scanned: int("delta_scanned"),
                 delta_skipped: int("delta_skipped"),
+                stages: v
+                    .get("stages")
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|st| crate::obs::StageSummary {
+                                stage: st
+                                    .get("stage")
+                                    .and_then(Json::as_str)
+                                    .unwrap_or("")
+                                    .to_string(),
+                                spans: st.get("spans").and_then(Json::as_i64).unwrap_or(0)
+                                    as u64,
+                                total_ms: st
+                                    .get("total_ms")
+                                    .and_then(Json::as_f64)
+                                    .unwrap_or(0.0),
+                                gsps: st.get("gsps").and_then(Json::as_f64).unwrap_or(0.0),
+                                p50_ms: st.get("p50_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                                p90_ms: st.get("p90_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                                p99_ms: st.get("p99_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
             })));
         }
         // ok:true but unrecognized shape: a newer verb — preserve it
@@ -666,6 +833,7 @@ mod tests {
                 lb_kernel: LbKernelKind::Block,
                 lb_block: 32,
                 stream: false,
+                explain: false,
             },
         };
         let enc = custom.encode();
@@ -686,6 +854,7 @@ mod tests {
                 assert_eq!(options.lb_kernel, LbKernelKind::Scalar);
                 assert_eq!(options.lb_block, 0);
                 assert!(!options.stream);
+                assert!(!options.explain);
             }
             other => panic!("unexpected parse: {other:?}"),
         }
@@ -796,9 +965,28 @@ mod tests {
 
     #[test]
     fn simple_ops_roundtrip() {
-        for r in [Request::Ping, Request::Info, Request::Metrics] {
+        for r in [
+            Request::Ping,
+            Request::Info,
+            Request::Metrics { prometheus: false },
+            Request::Metrics { prometheus: true },
+            Request::Trace { limit: 0 },
+            Request::Trace { limit: 100 },
+        ] {
             assert_eq!(Request::parse(&r.encode()).unwrap(), r);
         }
+        // legacy form and the format selector parse explicitly
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics"}"#).unwrap(),
+            Request::Metrics { prometheus: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics","format":"prometheus"}"#).unwrap(),
+            Request::Metrics { prometheus: true }
+        );
+        assert!(Request::parse(r#"{"op":"metrics","format":"xml"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"metrics","format":7}"#).is_err());
+        assert!(Request::parse(r#"{"op":"trace","limit":-1}"#).is_err());
     }
 
     #[test]
@@ -957,8 +1145,97 @@ mod tests {
             delta_searches: 2,
             delta_scanned: 512,
             delta_skipped: 7489,
+            stages: vec![],
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        // stages absent on the wire: legacy servers parse as empty
+        assert!(!r.encode().contains("stages"));
+        // stages present: they survive the roundtrip
+        let with_stages = match r {
+            Response::Metrics(m) => {
+                let mut m = *m;
+                m.stages = vec![
+                    crate::obs::StageSummary {
+                        stage: "dp".into(),
+                        spans: 12,
+                        total_ms: 4.5,
+                        gsps: 0.125,
+                        p50_ms: 0.25,
+                        p90_ms: 0.5,
+                        p99_ms: 0.75,
+                    },
+                    crate::obs::StageSummary {
+                        stage: "keogh".into(),
+                        spans: 3,
+                        total_ms: 1.0,
+                        gsps: 0.5,
+                        p50_ms: 0.25,
+                        p90_ms: 0.3,
+                        p99_ms: 0.4,
+                    },
+                ];
+                Response::Metrics(Box::new(m))
+            }
+            other => panic!("unexpected: {other:?}"),
+        };
+        let enc = with_stages.encode();
+        assert!(enc.contains("\"stages\""));
+        assert!(enc.contains("\"stage\":\"dp\""));
+        assert_eq!(Response::parse(&enc).unwrap(), with_stages);
+    }
+
+    #[test]
+    fn trace_response_roundtrip() {
+        let r = Response::Trace(vec![
+            TraceSpanFields {
+                trace: 7,
+                stage: "dp".into(),
+                start_ms: 12.5,
+                dur_ms: 0.75,
+                floats: 4096,
+                detail: "kernel=lanes".into(),
+            },
+            TraceSpanFields {
+                trace: 8,
+                stage: "search".into(),
+                start_ms: 13.0,
+                dur_ms: 1.25,
+                floats: 9000,
+                detail: String::new(),
+            },
+        ]);
+        let enc = r.encode();
+        assert!(enc.contains("\"spans\""));
+        assert!(enc.contains("\"detail\":\"kernel=lanes\""));
+        assert_eq!(Response::parse(&enc).unwrap(), r);
+        // an empty ring still parses as a trace response
+        let empty = Response::Trace(vec![]);
+        assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn prometheus_response_roundtrip() {
+        let text = "# HELP sdtw_requests_total Align submissions accepted.\n\
+                    # TYPE sdtw_requests_total counter\n\
+                    sdtw_requests_total 3\n";
+        let r = Response::Prometheus(text.to_string());
+        let enc = r.encode();
+        assert!(enc.contains("\"prometheus\""));
+        assert_eq!(Response::parse(&enc).unwrap(), r, "newlines must survive escaping");
+    }
+
+    #[test]
+    fn search_request_explain_flag_roundtrip() {
+        let req = Request::Search {
+            query: vec![1.0, 2.0],
+            options: SearchOptions { explain: true, ..Default::default() },
+        };
+        let enc = req.encode();
+        assert!(enc.contains("\"explain\":true"));
+        assert_eq!(Request::parse(&enc).unwrap(), req);
+        // the default (false) stays off the wire
+        let off = Request::Search { query: vec![1.0], options: SearchOptions::default() };
+        assert!(!off.encode().contains("explain"));
     }
 
     #[test]
@@ -1003,6 +1280,7 @@ mod tests {
                     lb_kernel: LbKernelKind::Block,
                     lb_block: 8,
                     stream: true,
+                    explain: true,
                 },
             }
             .encode(),

@@ -19,12 +19,13 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::proto::{Request, Response};
 use crate::coordinator::SdtwService;
+use crate::obs;
 use crate::{log_debug, log_info, log_warn};
 
 /// The TCP front-end.  One accept loop, one thread per connection.
@@ -103,36 +104,77 @@ fn connection_loop(stream: TcpStream, service: &SdtwService) -> Result<()> {
 
 /// Decode, dispatch, encode.  Errors become protocol-level Error
 /// responses rather than connection teardown.
+///
+/// This is the observability edge: every request gets a trace context
+/// here (sampled per `SDTW_TRACE`), the context rides the thread into
+/// the service and its workers, and one structured Info line records
+/// the request outcome — trace id, verb, latency, ok/error.
 pub fn handle_line(line: &str, service: &SdtwService) -> Response {
+    let ctx = obs::begin_request();
+    let _obs_guard = obs::enter(ctx);
+    let t0 = Instant::now();
+    let (verb, response) = dispatch_line(line, service);
+    let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let outcome = match &response {
+        Response::Error(_) => "error",
+        _ => "ok",
+    };
+    log_info!(
+        "request trace={} verb={} latency_ms={:.3} outcome={}",
+        ctx.id,
+        verb,
+        latency_ms,
+        outcome
+    );
+    response
+}
+
+fn dispatch_line(line: &str, service: &SdtwService) -> (&'static str, Response) {
     let req = match Request::parse(line) {
         Ok(r) => r,
-        Err(e) => return Response::Error(format!("bad request: {e}")),
+        Err(e) => return ("parse", Response::Error(format!("bad request: {e}"))),
     };
     match req {
-        Request::Ping => Response::Pong,
-        Request::Info => Response::Info {
-            qlen: service.qlen(),
-            reflen: service.reflen(),
-            batch: service.batch_size(),
-        },
-        Request::Metrics => Response::from_metrics(&service.metrics()),
-        Request::Align { query, options } => {
+        Request::Ping => ("ping", Response::Pong),
+        Request::Info => (
+            "info",
+            Response::Info {
+                qlen: service.qlen(),
+                reflen: service.reflen(),
+                batch: service.batch_size(),
+            },
+        ),
+        Request::Metrics { prometheus: false } => {
+            ("metrics", Response::from_metrics(&service.metrics()))
+        }
+        Request::Metrics { prometheus: true } => (
+            "metrics",
+            Response::Prometheus(service.metrics().render_prometheus()),
+        ),
+        Request::Trace { limit } => {
+            let limit = if limit == 0 { usize::MAX } else { limit };
+            ("trace", Response::from_spans(&obs::recent_spans(limit)))
+        }
+        Request::Align { query, options } => (
+            "align",
             match service.align_blocking(query, options) {
                 Ok(resp) => Response::from_align(&resp),
                 Err(e) => Response::Error(format!("{e:#}")),
-            }
-        }
-        Request::Search { query, options } => {
+            },
+        ),
+        Request::Search { query, options } => (
+            "search",
             match service.search_blocking(query, options) {
                 Ok(resp) => Response::from_search(&resp),
                 Err(e) => Response::Error(format!("{e:#}")),
-            }
-        }
-        Request::Append { samples, options } => {
+            },
+        ),
+        Request::Append { samples, options } => (
+            "append",
             match service.append_blocking(samples, options) {
                 Ok(resp) => Response::from_append(&resp),
                 Err(e) => Response::Error(format!("{e:#}")),
-            }
-        }
+            },
+        ),
     }
 }

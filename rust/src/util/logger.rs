@@ -6,7 +6,8 @@
 //! so timing loops stay clean.
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -62,6 +63,84 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+// Per-target overrides (`SDTW_LOG=info,sdtw::search=trace`): a short,
+// longest-prefix-first list consulted only when non-empty (the
+// `HAS_OVERRIDES` relaxed load keeps the common path lock-free).
+static HAS_OVERRIDES: AtomicBool = AtomicBool::new(false);
+static OVERRIDES: Mutex<Vec<(String, Level)>> = Mutex::new(Vec::new());
+
+/// Parse an env-filter style spec: a comma-separated list of either a
+/// bare level (sets the global level) or `target=level` pairs, where
+/// `target` is a module-path prefix.  `sdtw::` is accepted as an alias
+/// for the crate prefix (`sdtw_repro::`), matching the CLI name.
+///
+/// `set_spec("info,sdtw::search=trace")` → global Info, everything
+/// under `sdtw_repro::search` at Trace.
+pub fn set_spec(spec: &str) -> Result<(), String> {
+    let mut base = None;
+    let mut overrides: Vec<(String, Level)> = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match part.split_once('=') {
+            None => {
+                base = Some(
+                    Level::from_str_loose(part)
+                        .ok_or_else(|| format!("unknown log level {part:?}"))?,
+                );
+            }
+            Some((target, lvl)) => {
+                let lvl = Level::from_str_loose(lvl.trim())
+                    .ok_or_else(|| format!("unknown log level {:?} for target {target:?}", lvl))?;
+                let target = target.trim();
+                if target.is_empty() {
+                    return Err(format!("empty target in log spec part {part:?}"));
+                }
+                let target = if target == "sdtw" {
+                    "sdtw_repro".to_string()
+                } else if let Some(rest) = target.strip_prefix("sdtw::") {
+                    format!("sdtw_repro::{rest}")
+                } else {
+                    target.to_string()
+                };
+                overrides.push((target, lvl));
+            }
+        }
+    }
+    // longest prefix first so the most specific override wins
+    overrides.sort_by(|a, b| b.0.len().cmp(&a.0.len()).then_with(|| a.0.cmp(&b.0)));
+    if let Some(b) = base {
+        set_level(b);
+    }
+    let has = !overrides.is_empty();
+    if let Ok(mut ovs) = OVERRIDES.lock() {
+        *ovs = overrides;
+    }
+    HAS_OVERRIDES.store(has, Ordering::Relaxed);
+    Ok(())
+}
+
+fn prefix_matches(target: &str, prefix: &str) -> bool {
+    match target.strip_prefix(prefix) {
+        Some("") => true,
+        Some(rest) => rest.starts_with("::"),
+        None => false,
+    }
+}
+
+/// Level check honoring per-target overrides; falls back to the global
+/// level when no override's module-path prefix matches `target`.
+pub fn enabled_for(level: Level, target: &str) -> bool {
+    if HAS_OVERRIDES.load(Ordering::Relaxed) {
+        if let Ok(ovs) = OVERRIDES.lock() {
+            for (prefix, lvl) in ovs.iter() {
+                if prefix_matches(target, prefix) {
+                    return level <= *lvl;
+                }
+            }
+        }
+    }
+    enabled(level)
+}
+
 /// Timestamp in seconds since process start (monotonic, cheap).
 fn uptime() -> f64 {
     use std::sync::OnceLock;
@@ -72,7 +151,7 @@ fn uptime() -> f64 {
 
 #[doc(hidden)]
 pub fn emit(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
-    if !enabled(level) {
+    if !enabled_for(level, target) {
         return;
     }
     let stderr = std::io::stderr();
@@ -95,6 +174,10 @@ macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logger::emit($crate::u
 mod tests {
     use super::*;
 
+    // The level and overrides are process-global; tests that mutate
+    // them serialize on this lock and restore state before releasing.
+    static STATE: Mutex<()> = Mutex::new(());
+
     #[test]
     fn level_parsing() {
         assert_eq!(Level::from_str_loose("INFO"), Some(Level::Info));
@@ -104,6 +187,7 @@ mod tests {
 
     #[test]
     fn level_gating() {
+        let _g = STATE.lock().unwrap();
         let prev = level();
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
@@ -115,5 +199,49 @@ mod tests {
     #[test]
     fn ordering_is_sane() {
         assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn spec_sets_base_and_overrides() {
+        let _g = STATE.lock().unwrap();
+        let prev = level();
+        set_spec("warn,sdtw::search=trace,sdtw_repro::server::proto=error").unwrap();
+        assert_eq!(level(), Level::Warn);
+        // override: more verbose than the global level
+        assert!(enabled_for(Level::Trace, "sdtw_repro::search::cascade"));
+        assert!(enabled_for(Level::Trace, "sdtw_repro::search"));
+        // override: quieter than the global level
+        assert!(!enabled_for(Level::Warn, "sdtw_repro::server::proto"));
+        // no matching prefix: global level applies
+        assert!(!enabled_for(Level::Info, "sdtw_repro::coordinator"));
+        assert!(enabled_for(Level::Warn, "sdtw_repro::coordinator"));
+        // prefix match is per path segment, not per character
+        assert!(!enabled_for(Level::Trace, "sdtw_repro::searcher"));
+        set_spec("").unwrap();
+        set_level(prev);
+    }
+
+    #[test]
+    fn spec_most_specific_prefix_wins() {
+        let _g = STATE.lock().unwrap();
+        let prev = level();
+        set_spec("info,sdtw::search=error,sdtw::search::cascade=trace").unwrap();
+        assert!(enabled_for(Level::Trace, "sdtw_repro::search::cascade"));
+        assert!(!enabled_for(Level::Info, "sdtw_repro::search::sharded"));
+        set_spec("").unwrap();
+        set_level(prev);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(set_spec("nope").is_err());
+        assert!(set_spec("info,foo=nope").is_err());
+        assert!(set_spec("info,=debug").is_err());
+        // a plain level keeps working as before
+        let _g = STATE.lock().unwrap();
+        let prev = level();
+        set_spec("debug").unwrap();
+        assert_eq!(level(), Level::Debug);
+        set_level(prev);
     }
 }

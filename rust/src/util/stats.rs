@@ -191,6 +191,39 @@ impl LatencyHistogram {
             percentile(&self.recent, p)
         }
     }
+
+    /// Per-bucket counts; `bucket_counts().len() == bounds_ms().len() + 1`
+    /// (the last cell is the overflow bucket).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Bucket upper bounds in ms (log-spaced, ×2 per bucket).
+    pub fn bounds_ms(&self) -> &[f64] {
+        &self.bounds_ms
+    }
+
+    /// Fold `other` into `self`.  Counts, totals, and sums add
+    /// element-wise (associative and commutative — the shard-merge
+    /// invariant the obs tests pin); the exact-sample ring absorbs the
+    /// other ring's samples subject to this ring's capacity, so
+    /// percentiles after a merge are approximate, as ever.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        debug_assert_eq!(self.bounds_ms.len(), other.bounds_ms.len());
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum_ms += other.sum_ms;
+        for &ms in &other.recent {
+            if self.recent.len() < self.cap {
+                self.recent.push(ms);
+            } else {
+                self.recent[self.pos] = ms;
+                self.pos = (self.pos + 1) % self.cap;
+            }
+        }
+    }
 }
 
 impl Default for LatencyHistogram {
@@ -261,5 +294,72 @@ mod tests {
         assert!((49.0..=52.0).contains(&p50), "{p50}");
         let p99 = h.percentile_ms(99.0);
         assert!(p99 >= 98.0, "{p99}");
+    }
+
+    #[test]
+    fn histogram_counts_partition_the_samples() {
+        let mut h = LatencyHistogram::new();
+        // spread across buckets, including underflow-ish and overflow
+        for ms in [0.001, 0.02, 0.5, 3.0, 47.0, 900.0, 1e6] {
+            h.record_ms(ms);
+        }
+        assert_eq!(h.bucket_counts().len(), h.bounds_ms().len() + 1);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        // the 1e6 ms sample exceeds every bound: lands in overflow
+        assert_eq!(*h.bucket_counts().last().unwrap(), 1);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative() {
+        let fill = |lo: usize, hi: usize| {
+            let mut h = LatencyHistogram::new();
+            for i in lo..hi {
+                h.record_ms(0.01 * (i as f64 + 0.5) * 1.7);
+            }
+            h
+        };
+        let (a, b, c) = (fill(0, 40), fill(40, 90), fill(90, 200));
+
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.bucket_counts(), right.bucket_counts());
+        assert!((left.mean_ms() - right.mean_ms()).abs() < 1e-9);
+        // and merging partitions: totals add exactly
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone() {
+        let mut h = LatencyHistogram::new();
+        let mut x = 1.0f64;
+        for _ in 0..500 {
+            h.record_ms(x);
+            x = (x * 1.03) % 750.0 + 0.01;
+        }
+        let (p50, p90, p99) = (h.percentile_ms(50.0), h.percentile_ms(90.0), h.percentile_ms(99.0));
+        assert!(p50 <= p90, "{p50} {p90}");
+        assert!(p90 <= p99, "{p90} {p99}");
+    }
+
+    #[test]
+    fn histogram_merge_respects_ring_cap() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..5000 {
+            a.record_ms(i as f64 % 17.0 + 0.1);
+            b.record_ms(i as f64 % 13.0 + 0.1);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 10_000);
+        // percentiles still answer from a bounded window
+        assert!(a.percentile_ms(50.0).is_finite());
     }
 }

@@ -1,0 +1,188 @@
+//! Integration: the observability surfaces over a real socket, served
+//! by a **search-only** service (no compiled artifacts needed — unlike
+//! `integration_server.rs`, these tests never skip).  Covers the
+//! `explain` flag end-to-end, the `trace` protocol verb, Prometheus
+//! text exposition, and align's fail-fast error in search-only mode.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use sdtw_repro::coordinator::{
+    AlignOptions, AppendOptions, SdtwService, SearchOptions, ServiceOptions,
+};
+use sdtw_repro::obs;
+use sdtw_repro::server::{Client, Server};
+use sdtw_repro::util::rng::Xoshiro256;
+
+// The trace mode and span rings are process-global and every test here
+// runs its own in-process server thread; tests that enable tracing (or
+// assert on buffered spans) serialize on this lock and restore the
+// prior mode so the others keep running traced-off.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+struct TestServer {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    join: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TestServer {
+    fn start(reflen: usize) -> TestServer {
+        let mut rng = Xoshiro256::new(42);
+        let service = Arc::new(
+            SdtwService::start(
+                ServiceOptions { search_only: true, ..Default::default() },
+                rng.normal_vec_f32(reflen),
+            )
+            .unwrap(),
+        );
+        let server = Server::bind(service, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_flag();
+        let join = std::thread::spawn(move || server.serve());
+        TestServer { addr, stop, join: Some(join) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[test]
+fn search_only_service_serves_info_and_search() {
+    let ts = TestServer::start(2048);
+    let mut client = Client::connect(&ts.addr).unwrap();
+    client.ping().unwrap();
+    let (qlen, reflen, batch) = client.info().unwrap();
+    assert_eq!((qlen, reflen, batch), (SdtwService::SEARCH_ONLY_QLEN, 2048, 1));
+
+    let mut rng = Xoshiro256::new(5);
+    let q = rng.normal_vec_f32(64);
+    let s = client.search(&q, SearchOptions { k: 3, ..Default::default() }).unwrap();
+    assert!(s.windows > 0);
+    assert!(!s.hits.is_empty());
+    assert_eq!(
+        s.pruned_kim + s.pruned_keogh + s.dp_abandoned + s.skipped + s.dp_full,
+        s.windows,
+        "counters must partition the candidate space over the wire"
+    );
+}
+
+#[test]
+fn explain_flag_is_inert_over_the_wire() {
+    let ts = TestServer::start(2048);
+    let mut client = Client::connect(&ts.addr).unwrap();
+    let mut rng = Xoshiro256::new(6);
+    let q = rng.normal_vec_f32(64);
+
+    let plain = client.search(&q, SearchOptions { k: 3, ..Default::default() }).unwrap();
+    let explained = client
+        .search(&q, SearchOptions { k: 3, explain: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(plain.hits.len(), explained.hits.len());
+    for (a, b) in plain.hits.iter().zip(&explained.hits) {
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "explain must be bit-inert");
+    }
+    assert_eq!(plain.windows, explained.windows);
+    assert_eq!(plain.pruned_kim, explained.pruned_kim);
+    assert_eq!(plain.pruned_keogh, explained.pruned_keogh);
+    assert_eq!(plain.dp_abandoned, explained.dp_abandoned);
+    assert_eq!(plain.dp_full, explained.dp_full);
+}
+
+#[test]
+fn trace_verb_surfaces_spans_for_traced_requests() {
+    let _l = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let prev = obs::mode();
+    let ts = TestServer::start(1024);
+    let mut client = Client::connect(&ts.addr).unwrap();
+
+    // the verb itself works with tracing off — record the watermark
+    let before = client.trace(0).unwrap().len();
+
+    obs::set_mode(1);
+    let mut rng = Xoshiro256::new(7);
+    let q = rng.normal_vec_f32(48);
+    let s = client.search(&q, SearchOptions { k: 2, ..Default::default() }).unwrap();
+    assert!(s.windows > 0);
+    // grow the stream and delta-search it so the streaming stage traces too
+    client.append(&rng.normal_vec_f32(512), AppendOptions::default()).unwrap();
+    client
+        .search(&q, SearchOptions { k: 2, stream: true, ..Default::default() })
+        .unwrap();
+    obs::set_mode(prev);
+
+    let spans = client.trace(0).unwrap();
+    assert!(spans.len() > before, "traced requests must buffer spans");
+    assert!(
+        spans.iter().any(|sp| sp.stage == "search"),
+        "whole-request search span expected: {spans:?}"
+    );
+    assert!(
+        spans.iter().any(|sp| sp.stage == "delta"),
+        "streaming delta span expected: {spans:?}"
+    );
+    assert!(
+        spans
+            .iter()
+            .any(|sp| sp.stage == "envelope" || sp.stage == "keogh" || sp.stage == "dp"),
+        "cascade stage spans expected: {spans:?}"
+    );
+    let newest_search = spans.iter().rev().find(|sp| sp.stage == "search").unwrap();
+    assert!(newest_search.trace > 0, "spans must carry the request's trace id");
+    assert!(newest_search.dur_ms >= 0.0 && newest_search.start_ms >= 0.0);
+    assert!(newest_search.floats > 0, "search spans account floats for Gsps");
+
+    // limit trims to the newest N
+    let one = client.trace(1).unwrap();
+    assert_eq!(one.len(), 1);
+}
+
+#[test]
+fn prometheus_exposition_over_the_wire_is_line_formatted() {
+    let _l = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ts = TestServer::start(512);
+    let mut client = Client::connect(&ts.addr).unwrap();
+    let mut rng = Xoshiro256::new(8);
+    let q = rng.normal_vec_f32(32);
+    client.search(&q, SearchOptions { k: 1, ..Default::default() }).unwrap();
+
+    let text = client.metrics_prometheus().unwrap();
+    assert!(text.contains("# TYPE sdtw_requests_total counter"));
+    assert!(text.lines().any(|l| l.starts_with("sdtw_requests_total ")));
+    assert!(text.lines().any(|l| l.starts_with("sdtw_searches_total ")));
+    assert!(text.lines().any(|l| l.starts_with("sdtw_latency_ms{quantile=\"0.5\"} ")));
+    // every sample line is `name{labels} value` with a parseable,
+    // finite value — the python lane re-checks the full grammar
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(!name.is_empty(), "empty metric name in {line:?}");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        assert!(v.is_finite(), "non-finite value in {line:?}");
+    }
+
+    // the JSON metrics verb still works on the same connection
+    let m = client.metrics().unwrap();
+    assert!(m.searches >= 1);
+}
+
+#[test]
+fn align_fails_fast_in_search_only_mode() {
+    let ts = TestServer::start(256);
+    let mut client = Client::connect(&ts.addr).unwrap();
+    let err = client
+        .align(&[0.0; 128], AlignOptions::default())
+        .expect_err("align must be rejected without artifacts");
+    assert!(
+        err.to_string().contains("search-only"),
+        "error should name the mode: {err}"
+    );
+    // the connection (and the rest of the protocol) survives
+    client.ping().unwrap();
+}

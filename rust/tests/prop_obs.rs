@@ -1,0 +1,297 @@
+//! The observability layer's acceptance invariant: tracing is **inert**.
+//! Hits (bit-for-bit, `f32::to_bits`) and cascade counters must be
+//! identical whether tracing is off, full, sampled, or in explain mode —
+//! on the serial engine, the sharded executor, and the streaming delta
+//! path.  The counter partition invariant
+//! (`pruned_total() + dp_full == candidates`) is pinned in every mode.
+//!
+//! The trace mode and the span/explain rings are process-global, so
+//! every test here serializes on one lock and restores the prior mode
+//! before returning (other integration tests in this binary run with
+//! tracing off and must stay that way).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use sdtw_repro::dtw::Dist;
+use sdtw_repro::obs;
+use sdtw_repro::search::{CascadeOpts, CascadeStats, Hit, SearchEngine, StreamingEngine};
+use sdtw_repro::testutil::check;
+
+/// Bit-exact signature of one delta-search step (hits, counters, and
+/// the delta accounting — all of which must be mode-invariant).
+type DeltaSig = (Vec<(usize, usize, u32)>, CascadeStats, u64, u64);
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the global obs lock and return a guard that restores the prior
+/// trace mode (even on panic — the next test must not inherit it).
+struct ModeGuard<'a> {
+    _lock: MutexGuard<'a, ()>,
+    prev: u32,
+}
+
+impl Drop for ModeGuard<'_> {
+    fn drop(&mut self) {
+        obs::set_mode(self.prev);
+    }
+}
+
+fn lock_obs() -> ModeGuard<'static> {
+    let lock = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    ModeGuard { _lock: lock, prev: obs::mode() }
+}
+
+/// Random-walk style series (level drift makes envelope bounds bite).
+fn walk(g: &mut sdtw_repro::testutil::GenCtx, lo: usize, hi: usize) -> Vec<f32> {
+    let base = g.vec_f32(lo, hi);
+    let mut level = 0f32;
+    base.iter()
+        .map(|&step| {
+            level += step * 0.5;
+            level
+        })
+        .collect()
+}
+
+/// Bit-exact signature of a hit list.
+fn sig(hits: &[Hit]) -> Vec<(usize, usize, u32)> {
+    hits.iter().map(|h| (h.start, h.end, h.cost.to_bits())).collect()
+}
+
+fn check_partition(label: &str, stats: &CascadeStats) -> Result<(), String> {
+    if stats.pruned_total() + stats.dp_full != stats.candidates {
+        return Err(format!("{label}: counters don't partition candidates: {stats:?}"));
+    }
+    Ok(())
+}
+
+/// The trace/explain configurations every path is checked under.
+/// (mode, explain): mode 0 = off, 1 = full, 5 = sample 1-in-5.
+const CONFIGS: [(u32, bool); 5] =
+    [(0, false), (1, false), (5, false), (0, true), (1, true)];
+
+/// Run `f` under one trace configuration inside a fresh request context
+/// (the CLI/server edge in miniature) and return its output.
+fn under<T>(mode: u32, explain: bool, f: impl FnOnce() -> T) -> T {
+    obs::set_mode(mode);
+    let ctx = obs::begin_request();
+    let ctx = obs::TraceCtx { explain, ..ctx };
+    let _g = obs::enter(ctx);
+    f()
+}
+
+#[test]
+fn prop_serial_search_inert_under_all_trace_modes() {
+    let _m = lock_obs();
+    check(601, 40, |g| {
+        let r = Arc::new(walk(g, 50, 200));
+        let m = g.usize_in(3, 12);
+        let window = g.usize_in(m, (m + 10).min(r.len()));
+        let k = g.usize_in(1, 4);
+        let exclusion = g.usize_in(0, window);
+        let q = g.vec_f32(m, m);
+        let engine = SearchEngine::new(r, window, g.usize_in(1, 3), Dist::Sq)
+            .map_err(|e| e.to_string())?;
+
+        let baseline = under(0, false, || engine.search(&q, k, exclusion))
+            .map_err(|e| e.to_string())?;
+        check_partition("baseline", &baseline.stats)?;
+        for (mode, explain) in CONFIGS {
+            let out = under(mode, explain, || engine.search(&q, k, exclusion))
+                .map_err(|e| e.to_string())?;
+            if sig(&out.hits) != sig(&baseline.hits) {
+                return Err(format!("mode={mode} explain={explain}: hits diverged"));
+            }
+            if out.stats != baseline.stats {
+                return Err(format!(
+                    "mode={mode} explain={explain}: counters diverged: {:?} vs {:?}",
+                    out.stats, baseline.stats
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_sharded_search_inert_under_all_trace_modes() {
+    let _m = lock_obs();
+    check(602, 30, |g| {
+        let r = Arc::new(walk(g, 60, 220));
+        let m = g.usize_in(3, 10);
+        let window = g.usize_in(m, (m + 10).min(r.len()));
+        let k = g.usize_in(1, 4);
+        let exclusion = g.usize_in(0, window);
+        let shards = g.usize_in(2, 8);
+        let threads = g.usize_in(1, 4);
+        let q = g.vec_f32(m, m);
+        let engine = SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+
+        let baseline = under(0, false, || {
+            engine.search_sharded(&q, k, exclusion, CascadeOpts::default(), shards, threads)
+        })
+        .map_err(|e| e.to_string())?;
+        check_partition("baseline", &baseline.stats)?;
+        for (mode, explain) in CONFIGS {
+            let out = under(mode, explain, || {
+                engine.search_sharded(&q, k, exclusion, CascadeOpts::default(), shards, threads)
+            })
+            .map_err(|e| e.to_string())?;
+            if sig(&out.hits) != sig(&baseline.hits) {
+                return Err(format!("mode={mode} explain={explain}: sharded hits diverged"));
+            }
+            if out.stats != baseline.stats {
+                return Err(format!(
+                    "mode={mode} explain={explain}: sharded counters diverged: {:?} vs {:?}",
+                    out.stats, baseline.stats
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_streaming_delta_inert_under_all_trace_modes() {
+    // the delta path is stateful (watermark cache), so each mode gets a
+    // fresh StreamingEngine replaying the same append/search schedule
+    let _m = lock_obs();
+    check(603, 25, |g| {
+        let x = walk(g, 60, 240);
+        let window = g.usize_in(4, x.len().min(20));
+        let k = g.usize_in(1, 3);
+        let exclusion = g.usize_in(1, window);
+        let m = g.usize_in(3, 10);
+        let q = g.vec_f32(m, m);
+        let seed_len = g.usize_in(window, x.len());
+        // pre-draw the append schedule so every replay is identical
+        let mut cuts = vec![seed_len];
+        while *cuts.last().unwrap() < x.len() {
+            let at = *cuts.last().unwrap();
+            cuts.push((at + g.usize_in(1, 50)).min(x.len()));
+        }
+
+        let replay = |mode: u32, explain: bool| -> Result<Vec<DeltaSig>, String> {
+            let mut se = StreamingEngine::new(&x[..seed_len], window, 1, Dist::Sq)
+                .map_err(|e| e.to_string())?;
+            let mut results = Vec::new();
+            for w in cuts.windows(2) {
+                se.append(&x[w[0]..w[1]]);
+                let d = under(mode, explain, || {
+                    se.search_delta(&q, k, exclusion, CascadeOpts::default())
+                })
+                .map_err(|e| e.to_string())?;
+                check_partition(&format!("delta at {}", w[1]), &d.outcome.stats)?;
+                results.push((sig(&d.outcome.hits), d.outcome.stats, d.scanned, d.skipped));
+            }
+            Ok(results)
+        };
+
+        let baseline = replay(0, false)?;
+        for (mode, explain) in CONFIGS {
+            let got = replay(mode, explain)?;
+            if got != baseline {
+                return Err(format!(
+                    "mode={mode} explain={explain}: streaming delta trajectory diverged"
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn explain_mode_records_events_without_perturbing_results() {
+    // one deterministic workload: explain on must (a) leave hits and
+    // counters untouched and (b) actually record per-candidate events
+    // attributable to this request's trace id
+    let _m = lock_obs();
+    let mut rng = sdtw_repro::util::rng::Xoshiro256::new(77);
+    let reference: Vec<f32> = {
+        let mut level = 0f64;
+        (0..3000)
+            .map(|_| {
+                level += rng.normal() * 0.3;
+                level as f32
+            })
+            .collect()
+    };
+    let query: Vec<f32> = rng.normal_vec_f32(32);
+    let engine = SearchEngine::new(Arc::new(reference), 48, 1, Dist::Sq).unwrap();
+
+    let plain = under(0, false, || engine.search(&query, 3, 24)).unwrap();
+
+    obs::set_mode(0);
+    let ctx = obs::begin_request();
+    let ctx = obs::TraceCtx { explain: true, ..ctx };
+    let explained = {
+        let _g = obs::enter(ctx);
+        engine.search(&query, 3, 24).unwrap()
+    };
+    assert_eq!(sig(&plain.hits), sig(&explained.hits), "explain changed the hits");
+    assert_eq!(plain.stats, explained.stats, "explain changed the counters");
+
+    let events = obs::explain_for(ctx.id);
+    assert!(!events.is_empty(), "explain mode recorded no events");
+    let stages: std::collections::BTreeSet<&str> =
+        events.iter().map(|e| e.stage).collect();
+    for s in &stages {
+        assert!(
+            ["kim", "keogh", "dp_abandon", "dp_full"].contains(s),
+            "unknown explain stage {s:?}"
+        );
+    }
+    // sampled candidate starts must be real candidate positions
+    for e in &events {
+        assert!(e.start < engine.index().candidates(), "event start out of range");
+    }
+}
+
+#[test]
+fn trace_spans_accumulate_per_stage_without_perturbing_results() {
+    // full-trace mode on the sharded path: results identical, and the
+    // span ring gains shard + dp spans attributable to this request
+    let _m = lock_obs();
+    let mut rng = sdtw_repro::util::rng::Xoshiro256::new(78);
+    let reference: Vec<f32> = {
+        let mut level = 0f64;
+        (0..2400)
+            .map(|_| {
+                level += rng.normal() * 0.3;
+                level as f32
+            })
+            .collect()
+    };
+    let query: Vec<f32> = rng.normal_vec_f32(24);
+    let engine = SearchEngine::new(Arc::new(reference), 36, 1, Dist::Sq).unwrap();
+
+    let plain = under(0, false, || {
+        engine.search_sharded(&query, 3, 18, CascadeOpts::default(), 4, 2)
+    })
+    .unwrap();
+
+    obs::set_mode(1);
+    let ctx = obs::begin_request();
+    assert!(ctx.sampled, "mode 1 must sample every request");
+    let traced = {
+        let _g = obs::enter(ctx);
+        engine.search_sharded(&query, 3, 18, CascadeOpts::default(), 4, 2).unwrap()
+    };
+    assert_eq!(sig(&plain.hits), sig(&traced.hits), "tracing changed the hits");
+    assert_eq!(plain.stats, traced.stats, "tracing changed the counters");
+
+    let spans = obs::recent_spans(usize::MAX);
+    let mine: Vec<_> = spans.iter().filter(|s| s.trace_id == ctx.id).collect();
+    assert!(!mine.is_empty(), "full-trace mode recorded no spans");
+    assert!(
+        mine.iter().any(|s| s.stage == obs::Stage::Shard),
+        "sharded search must emit shard spans"
+    );
+    assert!(
+        mine.iter().all(|s| s.dur_ms >= 0.0 && s.start_ms >= 0.0),
+        "span clocks must be non-negative"
+    );
+}
