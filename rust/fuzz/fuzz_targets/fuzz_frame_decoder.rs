@@ -1,0 +1,74 @@
+//! Fuzz the push-based frame decoder with arbitrary chunk splits.
+//!
+//! The input's first four bytes choose the per-frame cap (small, so the
+//! oversized path is hit constantly) and seed an LCG that generates the
+//! chunk-length sequence; the rest is the byte stream.  Invariants:
+//!
+//! * never panics, on any bytes (including invalid UTF-8),
+//! * partial-frame memory stays ≤ the cap after every feed,
+//! * the decoded event sequence — frame bytes, parsed JSON value, and
+//!   oversize offsets — is identical whether the stream arrives as one
+//!   chunk or as the LCG's arbitrary splits.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use sdtw_repro::server::frame::{FrameDecoder, FrameEvent};
+
+/// A decoded event, normalized for comparison across chunkings.  The
+/// parsed JSON rides along as its canonical encoding (`ParseError`
+/// positions are chunking-independent too, but the value is the contract).
+#[derive(Debug, PartialEq)]
+enum Ev {
+    Line { bytes: Vec<u8>, json: Option<String>, blank: bool },
+    Oversized(u64),
+}
+
+fn run(stream: &[u8], cap: usize, mut next_len: impl FnMut() -> usize) -> Vec<Ev> {
+    let mut d = FrameDecoder::new(cap);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < stream.len() {
+        let n = next_len().clamp(1, stream.len() - i);
+        d.feed(&stream[i..i + n]);
+        i += n;
+        assert!(d.buffered() <= cap, "partial-frame memory exceeded the cap");
+        assert_eq!(d.bytes_fed(), i as u64, "fed-byte accounting drifted");
+        // drain as we go, like both front ends do
+        while let Some(e) = d.next_event() {
+            out.push(match e {
+                FrameEvent::Frame(f) => {
+                    let blank = f.is_blank();
+                    if let Some(line) = f.line() {
+                        assert_eq!(line.as_bytes(), &f.bytes[..]);
+                    }
+                    Ev::Line {
+                        json: f.json.ok().map(|v| v.to_string()),
+                        bytes: f.bytes,
+                        blank,
+                    }
+                }
+                FrameEvent::Oversized { at } => Ev::Oversized(at),
+            });
+        }
+    }
+    out
+}
+
+fuzz_target!(|data: &[u8]| {
+    if data.len() < 5 {
+        return;
+    }
+    let cap = 1 + (u16::from_le_bytes([data[0], data[1]]) as usize & 0x3ff);
+    let mut state = u64::from(u16::from_le_bytes([data[2], data[3]])) | 1;
+    let stream = &data[4..];
+
+    let whole = run(stream, cap, || stream.len());
+    let chunked = run(stream, cap, move || {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        1 + ((state >> 33) as usize % 19)
+    });
+    assert_eq!(whole, chunked, "decoding must be chunking-invariant");
+});

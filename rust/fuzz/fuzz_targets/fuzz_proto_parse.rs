@@ -1,0 +1,95 @@
+//! Fuzz the whole wire vocabulary: parse → re-encode → re-parse must
+//! never panic, and must reach a fixed point.
+//!
+//! Three layers share this harness because they share inputs in
+//! production — every request line crosses all of them:
+//!
+//! * `Json`: the incremental parser must agree with the recursive one on
+//!   every input (same value or both reject), and one encode normalizes
+//!   (non-finite numbers fold to `null` by documented design) after which
+//!   parse→encode is a fixed point.
+//! * `Request`: anything that parses must re-encode to a line that parses
+//!   back to the same request with the same pipelining id.  Queries whose
+//!   floats overflowed to non-finite are excluded — `Json::f32s` encodes
+//!   those as `null`, a documented lossy corner (results travel through
+//!   the `wire_f32` sentinel codec instead; requests never carry
+//!   non-finite samples from well-behaved clients).
+//! * `Response`: one encode normalizes (an overflow float like `1e400`
+//!   parses to infinity, encodes as `null`, and re-reads as zero), after
+//!   which the encoding is a byte-level fixed point (NaN costs defeat
+//!   `PartialEq`, so values are compared through their encoding) — which
+//!   also pins `Response::Unknown`'s re-encode-verbatim guarantee.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use sdtw_repro::server::proto::{Request, RequestId, Response};
+use sdtw_repro::util::json::{IncrementalParser, Json};
+
+fn finite_floats(req: &Request) -> bool {
+    match req {
+        Request::Align { query, .. } | Request::Search { query, .. } => {
+            query.iter().all(|x| x.is_finite())
+        }
+        Request::Append { samples, .. } => samples.iter().all(|x| x.is_finite()),
+        _ => true,
+    }
+}
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else { return };
+
+    // JSON layer: incremental == recursive, then a normalize-once fixed point.
+    let recursive = Json::parse(text);
+    let mut inc = IncrementalParser::new();
+    inc.feed(data);
+    match (&recursive, &inc.finish()) {
+        (Ok(a), Ok(b)) => {
+            assert_eq!(a.to_string(), b.to_string(), "incremental/recursive value drift");
+            let s1 = a.to_string();
+            let s2 = Json::parse(&s1).expect("encoder output must parse").to_string();
+            assert_eq!(s1, s2, "Json parse→encode must be a fixed point");
+        }
+        (Err(_), Err(_)) => {}
+        (a, b) => panic!("incremental/recursive accept divergence: {a:?} vs {b:?}"),
+    }
+
+    // Request layer: id + body survive a round trip bit-exactly.
+    if let Ok((id, req)) = Request::parse_with_id(text) {
+        let wire = req.encode_with_id(id.as_ref());
+        if finite_floats(&req) {
+            let (id2, back) =
+                Request::parse_with_id(&wire).expect("encoded request must parse");
+            assert_eq!(id, id2, "pipelining id must survive the round trip");
+            assert_eq!(req, back, "request must survive the round trip");
+            assert_eq!(
+                wire,
+                back.encode_with_id(id2.as_ref()),
+                "request encoding must be a fixed point"
+            );
+        }
+    }
+
+    // Response layer: normalize once (inf → null → 0 takes one pass to
+    // settle), then byte-level fixed point (covers Unknown verbatim).
+    if let Ok((id, resp)) = Response::parse_with_id(text) {
+        let wire = resp.encode_with_id(id.as_ref());
+        let (id2, back) =
+            Response::parse_with_id(&wire).expect("encoded response must parse");
+        assert_eq!(id, id2, "echoed id must survive the round trip");
+        let norm = back.encode_with_id(id2.as_ref());
+        let (id3, settled) =
+            Response::parse_with_id(&norm).expect("normalized response must parse");
+        assert_eq!(
+            norm,
+            settled.encode_with_id(id3.as_ref()),
+            "response encoding must be a fixed point after one normalization"
+        );
+    }
+
+    // Id extraction never panics on any JSON value (splicing itself is
+    // exercised by the encode_with_id round trips above).
+    if let Ok(v) = Json::parse(text) {
+        let _ = RequestId::extract(&v);
+    }
+});

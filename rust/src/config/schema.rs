@@ -3,6 +3,7 @@
 use std::path::PathBuf;
 
 use super::{ConfigDoc, ConfigError};
+use crate::server::frame::DEFAULT_MAX_FRAME;
 
 /// Configuration of the serving stack (coordinator + server).
 #[derive(Clone, Debug, PartialEq)]
@@ -21,6 +22,14 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Log level name.
     pub log_level: String,
+    /// Reactor executor threads (the multiplexed front end's verb pool).
+    pub threads: usize,
+    /// Per-frame byte cap at the socket edge; longer request lines are
+    /// rejected with a protocol error instead of buffered.
+    pub max_frame: usize,
+    /// Outstanding pipelined requests per connection before the reactor
+    /// stops reading that socket.
+    pub max_inflight: usize,
 }
 
 impl Default for ServeConfig {
@@ -33,6 +42,9 @@ impl Default for ServeConfig {
             queue_depth: 1024,
             workers: 2,
             log_level: "info".to_string(),
+            threads: 4,
+            max_frame: DEFAULT_MAX_FRAME,
+            max_inflight: 32,
         }
     }
 }
@@ -46,6 +58,9 @@ impl ServeConfig {
         "serve.queue_depth",
         "serve.workers",
         "serve.log_level",
+        "serve.threads",
+        "serve.max_frame",
+        "serve.max_inflight",
     ];
 
     /// Build from a parsed doc, with defaults for missing keys and an
@@ -88,6 +103,18 @@ impl ServeConfig {
                 .get_str("serve.log_level")
                 .map(str::to_string)
                 .unwrap_or(d.log_level),
+            threads: doc
+                .get_i64("serve.threads")
+                .map(|v| v as usize)
+                .unwrap_or(d.threads),
+            max_frame: doc
+                .get_i64("serve.max_frame")
+                .map(|v| v as usize)
+                .unwrap_or(d.max_frame),
+            max_inflight: doc
+                .get_i64("serve.max_inflight")
+                .map(|v| v as usize)
+                .unwrap_or(d.max_inflight),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -103,6 +130,15 @@ impl ServeConfig {
         }
         if self.workers == 0 {
             return err("workers must be >= 1".into());
+        }
+        if self.threads == 0 {
+            return err("threads must be >= 1".into());
+        }
+        if self.max_frame == 0 {
+            return err("max_frame must be >= 1".into());
+        }
+        if self.max_inflight == 0 {
+            return err("max_inflight must be >= 1".into());
         }
         Ok(())
     }
@@ -163,6 +199,18 @@ mod tests {
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.batch_deadline_ms, 1.5);
         assert_eq!(cfg.queue_depth, ServeConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn reactor_keys_parse_and_validate() {
+        let doc =
+            ConfigDoc::parse("[serve]\nthreads = 8\nmax_frame = 65536\nmax_inflight = 4").unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!((cfg.threads, cfg.max_frame, cfg.max_inflight), (8, 65536, 4));
+        for bad in ["threads = 0", "max_frame = 0", "max_inflight = 0"] {
+            let doc = ConfigDoc::parse(&format!("[serve]\n{bad}")).unwrap();
+            assert!(ServeConfig::from_doc(&doc).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

@@ -80,6 +80,14 @@ pub struct Metrics {
     /// mean's denominator — zero-timing searches are excluded, not
     /// counted as "perfectly even")
     search_imbalance_samples: AtomicU64,
+    // ------------------------- serving-edge counters
+    /// connections currently open at the serving front end (gauge)
+    conns_open: AtomicU64,
+    /// frames dropped for exceeding the max-frame cap
+    frames_oversized: AtomicU64,
+    /// requests that arrived while the same connection already had one
+    /// in flight (pipelining depth signal)
+    requests_pipelined: AtomicU64,
     // ------------------------- streaming-session counters
     stream_appends: AtomicU64,
     stream_samples: AtomicU64,
@@ -124,6 +132,9 @@ impl Metrics {
             search_tau_tightenings: AtomicU64::new(0),
             search_imbalance_milli: AtomicU64::new(0),
             search_imbalance_samples: AtomicU64::new(0),
+            conns_open: AtomicU64::new(0),
+            frames_oversized: AtomicU64::new(0),
+            requests_pipelined: AtomicU64::new(0),
             stream_appends: AtomicU64::new(0),
             stream_samples: AtomicU64::new(0),
             delta_searches: AtomicU64::new(0),
@@ -183,6 +194,32 @@ impl Metrics {
                 .fetch_add((r.max(0.0) * 1e3).round() as u64, Ordering::Relaxed);
             self.search_imbalance_samples.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// A connection opened at the serving front end (either the blocking
+    /// or the reactor edge).
+    pub fn on_conn_open(&self) {
+        self.conns_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The matching close.  Saturating: a spurious close (e.g. a failed
+    /// accept handshake counted once) clamps at zero instead of wrapping
+    /// the gauge to u64::MAX.
+    pub fn on_conn_close(&self) {
+        let _ = self
+            .conns_open
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    /// A frame exceeded the max-frame cap and was dropped.
+    pub fn on_frame_oversized(&self) {
+        self.frames_oversized.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request arrived while its connection already had at least one
+    /// request in flight — the client is pipelining.
+    pub fn on_pipelined_request(&self) {
+        self.requests_pipelined.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one streaming append.
@@ -309,6 +346,9 @@ impl Metrics {
                         / n as f64
                 }
             },
+            conns_open: self.conns_open.load(Ordering::Relaxed),
+            frames_oversized: self.frames_oversized.load(Ordering::Relaxed),
+            requests_pipelined: self.requests_pipelined.load(Ordering::Relaxed),
             stream_appends: self.stream_appends.load(Ordering::Relaxed),
             stream_samples: self.stream_samples.load(Ordering::Relaxed),
             delta_searches: self.delta_searches.load(Ordering::Relaxed),
@@ -405,6 +445,14 @@ pub struct MetricsSnapshot {
     /// ≥ 1.0, 1.0 = perfectly even) over the searches with measurable
     /// timings; 0.0 until one such search runs.
     pub search_imbalance_mean: f64,
+    /// Connections currently open at the serving front end (gauge; both
+    /// the blocking and reactor edges maintain it).
+    pub conns_open: u64,
+    /// Frames dropped for exceeding the serving edge's max-frame cap.
+    pub frames_oversized: u64,
+    /// Requests that arrived on a connection that already had at least
+    /// one request in flight — how much clients actually pipeline.
+    pub requests_pipelined: u64,
     /// Streaming appends served.
     pub stream_appends: u64,
     /// Samples ingested into the streaming session across all appends.
@@ -505,6 +553,12 @@ impl MetricsSnapshot {
                 out.push_str(" imbalance=n/a");
             }
         }
+        if self.conns_open > 0 || self.frames_oversized > 0 || self.requests_pipelined > 0 {
+            out.push_str(&format!(
+                " edge(conns_open={} oversized={} pipelined={})",
+                self.conns_open, self.frames_oversized, self.requests_pipelined,
+            ));
+        }
         if self.stream_appends > 0 || self.delta_searches > 0 {
             out.push_str(&format!(
                 " stream(appends={} samples={}) delta_searches={} \
@@ -585,6 +639,16 @@ impl MetricsSnapshot {
             self.search_dp_full,
         );
         counter(
+            "sdtw_frames_oversized_total",
+            "Frames dropped for exceeding the max-frame cap.",
+            self.frames_oversized,
+        );
+        counter(
+            "sdtw_requests_pipelined_total",
+            "Requests that arrived with one already in flight on the same connection.",
+            self.requests_pipelined,
+        );
+        counter(
             "sdtw_stream_appends_total",
             "Streaming appends served.",
             self.stream_appends,
@@ -609,6 +673,11 @@ impl MetricsSnapshot {
             "sdtw_offered_gsps",
             "Paper eq. 3 throughput over wall time.",
             self.offered_gsps,
+        );
+        gauge(
+            "sdtw_conns_open",
+            "Connections currently open at the serving front end.",
+            self.conns_open as f64,
         );
         gauge(
             "sdtw_search_prune_fraction",

@@ -282,6 +282,13 @@ impl SdtwService {
         self.metrics.snapshot()
     }
 
+    /// Live metrics sink for the serving front ends, which record
+    /// socket-edge counters (connections, oversized frames, pipelining)
+    /// the coordinator never sees.
+    pub(crate) fn metrics_sink(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
     }

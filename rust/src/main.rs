@@ -31,7 +31,7 @@ use sdtw_repro::dtw::{self, Dist};
 use sdtw_repro::normalize;
 use sdtw_repro::obs;
 use sdtw_repro::runtime::artifact::Manifest;
-use sdtw_repro::server::{Client, Response, Server};
+use sdtw_repro::server::{Client, Reactor, ReactorOptions, Response, Server};
 use sdtw_repro::util::logger;
 use sdtw_repro::log_info;
 use sdtw_repro::util::stats::Protocol;
@@ -694,13 +694,17 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt("addr", "bind address (overrides config)")
         .opt("variant", "pipeline variant (overrides config)")
         .opt("workers", "engine workers (overrides config)")
+        .opt("threads", "reactor executor threads (overrides config)")
+        .opt("max-frame", "per-frame byte cap at the socket edge (overrides config)")
+        .opt("max-inflight", "pipelined requests per connection (overrides config)")
         .opt_default("seed", "42", "reference generator seed")
         .opt_default("family", "ecg", "reference family: cbf|walk|ecg")
         .opt_default("reflen", "2048", "reference length (--search-only mode)")
         .flag(
             "search-only",
             "serve search/append/trace/metrics without compiled artifacts (align disabled)",
-        );
+        )
+        .flag("blocking", "use the thread-per-connection front end instead of the reactor");
     if maybe_help(&cmd, &raw) {
         return Ok(());
     }
@@ -719,6 +723,16 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
     if let Some(w) = a.get_parsed::<usize>("workers")? {
         cfg.workers = w;
     }
+    if let Some(t) = a.get_parsed::<usize>("threads")? {
+        cfg.threads = t;
+    }
+    if let Some(f) = a.get_parsed::<usize>("max-frame")? {
+        cfg.max_frame = f;
+    }
+    if let Some(m) = a.get_parsed::<usize>("max-inflight")? {
+        cfg.max_inflight = m;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!("{}", e.msg))?;
     if let Err(e) = logger::set_spec(&cfg.log_level) {
         eprintln!("warning: ignoring log_level: {e}");
     }
@@ -744,9 +758,27 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
     let mut opts = ServiceOptions::from_config(&cfg);
     opts.search_only = search_only;
     let service = Arc::new(SdtwService::start(opts, reference)?);
-    let server = Server::bind(service, &cfg.addr)?;
-    println!("listening on {} — Ctrl-C to stop", server.local_addr()?);
-    server.serve()
+    if a.has("blocking") {
+        let mut server = Server::bind(service, &cfg.addr)?;
+        server.set_max_frame(cfg.max_frame);
+        println!("listening on {} — Ctrl-C to stop", server.local_addr()?);
+        return server.serve();
+    }
+    let reactor = Reactor::bind(
+        service,
+        &cfg.addr,
+        ReactorOptions {
+            threads: cfg.threads,
+            max_frame: cfg.max_frame,
+            max_inflight: cfg.max_inflight,
+        },
+    )?;
+    println!(
+        "listening on {} ({} executor threads) — Ctrl-C to stop",
+        reactor.local_addr()?,
+        cfg.threads
+    );
+    reactor.serve()
 }
 
 // -------------------------------------------------------------- sweep

@@ -18,7 +18,9 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
-use super::proto::{AppendFields, MetricsFields, Request, Response, SearchFields, TraceSpanFields};
+use super::proto::{
+    AppendFields, MetricsFields, Request, RequestId, Response, SearchFields, TraceSpanFields,
+};
 use crate::coordinator::{AlignOptions, AppendOptions, SearchOptions};
 
 /// One connection to an sDTW server.
@@ -38,15 +40,30 @@ impl Client {
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
-        self.writer.write_all(req.encode().as_bytes())?;
+        self.send(req, None)?;
+        let (_, resp) = self.recv()?;
+        Ok(resp)
+    }
+
+    /// Write one request without waiting for its response — the pipelined
+    /// half of the protocol.  Pass an id to correlate the eventual
+    /// response ([`Client::recv`] hands it back); responses on a
+    /// connection always arrive in request order regardless.
+    pub fn send(&mut self, req: &Request, id: Option<&RequestId>) -> Result<()> {
+        self.writer.write_all(req.encode_with_id(id).as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next response line, with whatever id the server echoed.
+    pub fn recv(&mut self) -> Result<(Option<RequestId>, Response)> {
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         if n == 0 {
             bail!("server closed connection");
         }
-        Response::parse(&line)
+        Response::parse_with_id(&line)
     }
 
     pub fn ping(&mut self) -> Result<()> {

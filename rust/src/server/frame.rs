@@ -1,0 +1,319 @@
+//! Push-based wire framing with bounded memory.
+//!
+//! The protocol is newline-delimited JSON.  The blocking front end used to
+//! lean on [`std::io::BufRead::lines`], which allocates without limit when
+//! a peer streams bytes that never contain `\n`.  [`FrameDecoder`] replaces
+//! that: callers feed raw byte chunks exactly as they arrive off the
+//! socket, and the decoder
+//!
+//! * does work proportional to the bytes fed (each byte is scanned once,
+//!   and handed once to the [`IncrementalParser`] riding alongside),
+//! * never buffers more than `max_frame` bytes per in-flight frame —
+//!   an oversized frame becomes an [`FrameEvent::Oversized`] protocol
+//!   event instead of an OOM, the offending bytes are discarded through
+//!   the next newline, and the connection keeps working,
+//! * reports the oversize at a deterministic absolute stream offset (the
+//!   first byte past the cap), independent of how the bytes were chunked —
+//!   a property the `prop_frame` suite asserts for arbitrary chunkings.
+//!
+//! Frames come out with the newline (and a single trailing `\r`, matching
+//! `BufRead::lines`) stripped, plus the already-parsed JSON value: by the
+//! time the newline lands the [`IncrementalParser`] has digested the whole
+//! payload, so the dispatch path pays no second scan on well-formed input.
+
+use std::collections::VecDeque;
+
+use crate::util::json::{IncrementalParser, Json, ParseError};
+
+/// Default per-frame byte cap.  The largest legitimate frame is a `search`
+/// or `align` query of `reflen` f32s (~20 bytes each encoded); 4 MiB gives
+/// a 100k-sample query an order of magnitude of headroom.
+pub const DEFAULT_MAX_FRAME: usize = 4 * 1024 * 1024;
+
+/// One complete wire frame: the raw line and its incrementally-parsed JSON.
+#[derive(Debug)]
+pub struct Frame {
+    /// Payload bytes with the `\n` (and one trailing `\r`) stripped.
+    pub bytes: Vec<u8>,
+    /// Result of parsing the payload as one JSON value.  Equivalent to
+    /// `Json::parse` on the line; on `Err`, dispatch re-parses the line to
+    /// produce the classic error message (malformed input only).
+    pub json: Result<Json, ParseError>,
+}
+
+impl Frame {
+    /// The payload as UTF-8, if valid.  Invalid UTF-8 tears the connection
+    /// down, matching the legacy `BufRead::lines` behavior.
+    pub fn line(&self) -> Option<&str> {
+        std::str::from_utf8(&self.bytes).ok()
+    }
+
+    /// Blank frames (empty or whitespace-only lines) are skipped by both
+    /// front ends without a response.
+    pub fn is_blank(&self) -> bool {
+        self.bytes.iter().all(|b| b.is_ascii_whitespace())
+    }
+}
+
+/// Decoder output, in wire order.
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete frame arrived.
+    Frame(Frame),
+    /// A frame exceeded the cap.  `at` is the absolute stream offset of
+    /// the first byte past the cap — identical for every chunking of the
+    /// same byte stream.  The frame's bytes are discarded through the next
+    /// newline; the decoder then resumes cleanly.
+    Oversized { at: u64 },
+}
+
+/// Incremental newline-frame decoder with a hard per-frame byte cap.
+///
+/// Peak memory is `max_frame` for the partial frame plus whatever complete
+/// events the caller has not yet drained; callers that stop feeding while
+/// events are pending (as both front ends do) keep the total bounded.
+pub struct FrameDecoder {
+    max_frame: usize,
+    buf: Vec<u8>,
+    parser: IncrementalParser,
+    /// Inside an oversized frame: drop bytes until the next newline.
+    discarding: bool,
+    /// Absolute count of bytes fed so far (oversize offsets).
+    fed: u64,
+    events: VecDeque<FrameEvent>,
+}
+
+impl FrameDecoder {
+    /// `max_frame` is the payload cap in bytes (newline excluded); a frame
+    /// of exactly `max_frame` bytes is accepted.
+    pub fn new(max_frame: usize) -> FrameDecoder {
+        assert!(max_frame > 0, "max_frame must be positive");
+        FrameDecoder {
+            max_frame,
+            buf: Vec::new(),
+            parser: IncrementalParser::new(),
+            discarding: false,
+            fed: 0,
+            events: VecDeque::new(),
+        }
+    }
+
+    /// Feed the next chunk exactly as it came off the socket.
+    pub fn feed(&mut self, chunk: &[u8]) {
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            match rest.iter().position(|&b| b == b'\n') {
+                Some(nl) => {
+                    self.take_segment(&rest[..nl]);
+                    self.end_frame();
+                    self.fed += 1; // the newline itself
+                    rest = &rest[nl + 1..];
+                }
+                None => {
+                    self.take_segment(rest);
+                    rest = &[];
+                }
+            }
+        }
+    }
+
+    /// Pop the next decoded event, in wire order.
+    pub fn next_event(&mut self) -> Option<FrameEvent> {
+        self.events.pop_front()
+    }
+
+    /// Whether decoded events are waiting to be drained.  Front ends stop
+    /// reading the socket while this is true so per-connection memory
+    /// stays bounded by the admission limit, not by peer send rate.
+    pub fn has_pending(&self) -> bool {
+        !self.events.is_empty()
+    }
+
+    /// Bytes buffered for the current partial frame (≤ `max_frame`).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Total bytes fed so far.
+    pub fn bytes_fed(&self) -> u64 {
+        self.fed
+    }
+
+    /// Newline-free run of bytes belonging to the current frame.
+    fn take_segment(&mut self, seg: &[u8]) {
+        if seg.is_empty() {
+            return;
+        }
+        if !self.discarding {
+            let room = self.max_frame - self.buf.len();
+            if seg.len() > room {
+                // The cap trips at the first byte that would exceed it —
+                // a frame-relative position, so the absolute offset is the
+                // same no matter how the stream was chunked.
+                let at = self.fed + room as u64;
+                self.events.push_back(FrameEvent::Oversized { at });
+                self.discarding = true;
+                self.buf.clear();
+                self.parser = IncrementalParser::new();
+            } else {
+                self.buf.extend_from_slice(seg);
+                self.parser.feed(seg);
+            }
+        }
+        self.fed += seg.len() as u64;
+    }
+
+    /// A newline landed: close out the current frame.
+    fn end_frame(&mut self) {
+        if self.discarding {
+            // the oversized frame's terminator: resume clean
+            self.discarding = false;
+            return;
+        }
+        let mut bytes = std::mem::take(&mut self.buf);
+        if bytes.last() == Some(&b'\r') {
+            // match BufRead::lines; the parser saw the \r as trailing
+            // whitespace, which JSON ignores
+            bytes.pop();
+        }
+        let parser = std::mem::replace(&mut self.parser, IncrementalParser::new());
+        self.events.push_back(FrameEvent::Frame(Frame { bytes, json: parser.finish() }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(d: &mut FrameDecoder) -> Vec<FrameEvent> {
+        std::iter::from_fn(|| d.next_event()).collect()
+    }
+
+    fn lines(events: &[FrameEvent]) -> Vec<String> {
+        events
+            .iter()
+            .map(|e| match e {
+                FrameEvent::Frame(f) => f.line().expect("utf-8").to_string(),
+                FrameEvent::Oversized { at } => format!("<oversized@{at}>"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn splits_frames_on_newlines() {
+        let mut d = FrameDecoder::new(1024);
+        d.feed(b"{\"op\":\"ping\"}\n{\"op\":\"info\"}\n");
+        let ev = drain(&mut d);
+        assert_eq!(lines(&ev), vec!["{\"op\":\"ping\"}", "{\"op\":\"info\"}"]);
+    }
+
+    #[test]
+    fn one_byte_chunks_and_crlf_match_line_reader() {
+        let stream = b"{\"op\":\"ping\"}\r\n\r\n {\"k\":1}\n";
+        let mut d = FrameDecoder::new(1024);
+        for b in stream {
+            d.feed(std::slice::from_ref(b));
+        }
+        let ev = drain(&mut d);
+        // frame 2 is blank (the bare \r\n), frame 3 keeps interior spaces
+        assert_eq!(lines(&ev), vec!["{\"op\":\"ping\"}", "", " {\"k\":1}"]);
+        assert!(matches!(&ev[1], FrameEvent::Frame(f) if f.is_blank()));
+    }
+
+    #[test]
+    fn json_rides_along_with_the_frame() {
+        let mut d = FrameDecoder::new(1024);
+        d.feed(b"{\"op\":\"ping\",\"id\":7}\nnot json\n");
+        let ev = drain(&mut d);
+        match &ev[0] {
+            FrameEvent::Frame(f) => {
+                let v = f.json.as_ref().expect("valid json");
+                assert_eq!(v.get("id").and_then(Json::as_i64), Some(7));
+                assert_eq!(
+                    v.to_string(),
+                    Json::parse(f.line().unwrap()).unwrap().to_string()
+                );
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        match &ev[1] {
+            FrameEvent::Frame(f) => assert!(f.json.is_err()),
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exact_cap_accepted_one_past_rejected() {
+        let cap = 16;
+        let ok = "x".repeat(cap);
+        let mut d = FrameDecoder::new(cap);
+        d.feed(ok.as_bytes());
+        d.feed(b"\n");
+        let ev = drain(&mut d);
+        assert_eq!(lines(&ev), vec![ok.clone()]);
+
+        let mut d = FrameDecoder::new(cap);
+        d.feed("x".repeat(cap + 1).as_bytes());
+        d.feed(b"\n");
+        let ev = drain(&mut d);
+        assert_eq!(lines(&ev), vec![format!("<oversized@{cap}>")]);
+    }
+
+    #[test]
+    fn oversized_offset_is_chunking_invariant_and_decoder_recovers() {
+        // stream: a good frame, a 40-byte flood (cap 32), another good frame
+        let mut stream = Vec::new();
+        stream.extend_from_slice(b"{\"a\":1}\n");
+        stream.extend_from_slice(&[b'z'; 40]);
+        stream.extend_from_slice(b"\n{\"b\":2}\n");
+        let expect_at = (8 + 32) as u64; // first byte past the cap
+
+        for chunk in [1usize, 2, 3, 7, 19, stream.len()] {
+            let mut d = FrameDecoder::new(32);
+            for piece in stream.chunks(chunk) {
+                d.feed(piece);
+            }
+            let ev = drain(&mut d);
+            assert_eq!(
+                lines(&ev),
+                vec![
+                    "{\"a\":1}".to_string(),
+                    format!("<oversized@{expect_at}>"),
+                    "{\"b\":2}".to_string(),
+                ],
+                "chunk size {chunk}"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_frame_memory_is_capped() {
+        let mut d = FrameDecoder::new(64);
+        // 10 KiB of newline-free bytes: one oversize event, no growth
+        for _ in 0..160 {
+            d.feed(&[b'y'; 64]);
+            assert!(d.buffered() <= 64, "buffered {} > cap", d.buffered());
+        }
+        let ev = drain(&mut d);
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0], FrameEvent::Oversized { at: 64 }));
+        // the terminator ends the discard; the stream is usable again
+        d.feed(b"\n{\"ok\":true}\n");
+        let ev = drain(&mut d);
+        assert_eq!(lines(&ev), vec!["{\"ok\":true}"]);
+    }
+
+    #[test]
+    fn invalid_utf8_is_surfaced_not_hidden() {
+        let mut d = FrameDecoder::new(64);
+        d.feed(b"\"\xff\xfe\"\n");
+        let ev = drain(&mut d);
+        match &ev[0] {
+            FrameEvent::Frame(f) => {
+                assert!(f.line().is_none(), "invalid utf-8 must not decode");
+                assert!(f.json.is_err());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+}

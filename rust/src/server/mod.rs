@@ -1,19 +1,35 @@
-//! TCP serving front-end: newline-delimited JSON over TCP, one thread per
-//! connection, backed by the [`crate::coordinator::SdtwService`].
+//! TCP serving front-end: newline-delimited JSON over TCP, backed by the
+//! [`crate::coordinator::SdtwService`].
+//!
+//! Two interchangeable front ends speak the same wire protocol and share
+//! one dispatch path, so they answer byte-identically:
+//!
+//! * [`server`] — the blocking edge: one thread per connection.  Simple,
+//!   and still what the CLI uses by default.
+//! * [`reactor`] — the multiplexed edge: one poller thread drives every
+//!   connection through per-connection state machines while a fixed
+//!   executor pool runs the verbs.  Pipelining (`"id"`-tagged requests),
+//!   bounded per-connection memory, end-to-end backpressure.
 //!
 //! This is the end-to-end substrate the `serve_e2e` example drives: a
 //! client submits raw queries over the wire, the coordinator batches them
 //! across connections (cross-client batching is where dynamic batching
 //! pays), and responses return per request.
 //!
-//! * [`proto`]  — message model + encode/decode (our own JSON).
-//! * [`server`] — listener/connection loops.
-//! * [`client`] — blocking client used by examples, benches and tests.
+//! * [`proto`]   — message model + encode/decode (our own JSON).
+//! * [`frame`]   — push-based newline framing with a max-frame cap.
+//! * [`server`]  — blocking listener/connection loops + shared dispatch.
+//! * [`reactor`] — event-driven multiplexed listener.
+//! * [`client`]  — blocking client used by examples, benches and tests.
 
 pub mod client;
+pub mod frame;
 pub mod proto;
+pub mod reactor;
 pub mod server;
 
 pub use client::Client;
-pub use proto::{Request, Response};
+pub use frame::{FrameDecoder, FrameEvent, DEFAULT_MAX_FRAME};
+pub use proto::{Request, RequestId, Response};
+pub use reactor::{Reactor, ReactorOptions};
 pub use server::Server;

@@ -73,6 +73,56 @@ fn parse_wire_f32(v: &Json) -> Option<f32> {
     }
 }
 
+/// Client-chosen correlation id: the optional `"id"` member of a request
+/// object, echoed verbatim as the first key of the matching response so
+/// pipelined clients can have many requests in flight per connection.
+///
+/// Integers and strings only; an `"id"` of any other shape is ignored (the
+/// response simply carries no echo) rather than rejected, keeping the key
+/// forward-compatible.  Requests without an id get responses without one —
+/// byte-identical to the pre-pipelining wire format.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestId {
+    Int(i64),
+    Str(String),
+}
+
+impl RequestId {
+    /// Pull the echoable id out of a parsed request/response object.
+    pub fn extract(v: &Json) -> Option<RequestId> {
+        match v.get("id") {
+            Some(Json::Int(i)) => Some(RequestId::Int(*i)),
+            Some(Json::Str(s)) => Some(RequestId::Str(s.clone())),
+            _ => None,
+        }
+    }
+
+    /// The `"id":<value>` member, JSON-encoded.
+    fn fragment(&self) -> String {
+        match self {
+            RequestId::Int(i) => format!("\"id\":{i}"),
+            RequestId::Str(s) => format!("\"id\":{}", Json::str(s)),
+        }
+    }
+}
+
+/// Prepend `"id":...` to an encoded JSON object.  With no id this is the
+/// input unchanged — the no-id wire format stays byte-identical.
+fn splice_id(encoded: String, id: Option<&RequestId>) -> String {
+    match id {
+        None => encoded,
+        Some(id) => {
+            debug_assert!(encoded.starts_with('{'), "splice target must be an object");
+            let body = &encoded[1..];
+            if body == "}" {
+                format!("{{{}}}", id.fragment())
+            } else {
+                format!("{{{},{}", id.fragment(), body)
+            }
+        }
+    }
+}
+
 /// Parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -125,6 +175,24 @@ fn parse_usize(v: &Json, key: &str, default: usize) -> Result<usize> {
 impl Request {
     pub fn parse(line: &str) -> Result<Request> {
         let v = Json::parse(line.trim())?;
+        Request::from_json(&v)
+    }
+
+    /// Like [`Request::parse`] plus the optional pipelining id.  The id is
+    /// extracted before request validation, so a well-formed JSON object
+    /// with a bad op still yields its id — the error response can be
+    /// matched to the request that caused it.
+    pub fn parse_with_id(line: &str) -> Result<(Option<RequestId>, Request)> {
+        let v = Json::parse(line.trim())?;
+        let id = RequestId::extract(&v);
+        Ok((id, Request::from_json(&v)?))
+    }
+
+    /// Decode an already-parsed JSON object.  This is the hot path for the
+    /// reactor front end, whose [`FrameDecoder`](super::frame::FrameDecoder)
+    /// parses the JSON incrementally as bytes arrive: by dispatch time the
+    /// value exists and the line is never rescanned.
+    pub fn from_json(v: &Json) -> Result<Request> {
         let op = v
             .get("op")
             .and_then(Json::as_str)
@@ -141,9 +209,9 @@ impl Request {
                 };
                 Ok(Request::Metrics { prometheus })
             }
-            "trace" => Ok(Request::Trace { limit: parse_usize(&v, "limit", 0)? }),
+            "trace" => Ok(Request::Trace { limit: parse_usize(v, "limit", 0)? }),
             "align" => {
-                let query = parse_query(&v, "align")?;
+                let query = parse_query(v, "align")?;
                 let flag = |k: &str| v.get(k).and_then(Json::as_bool).unwrap_or(false);
                 Ok(Request::Align {
                     query,
@@ -155,7 +223,7 @@ impl Request {
                 })
             }
             "search" => {
-                let query = parse_query(&v, "search")?;
+                let query = parse_query(v, "search")?;
                 let d = SearchOptions::default();
                 let kernel = match v.get("kernel").map(|x| x.as_str()) {
                     None => d.kernel,
@@ -174,33 +242,39 @@ impl Request {
                 Ok(Request::Search {
                     query,
                     options: SearchOptions {
-                        k: parse_usize(&v, "k", d.k)?,
-                        window: parse_usize(&v, "window", d.window)?,
-                        stride: parse_usize(&v, "stride", d.stride)?,
-                        exclusion: parse_usize(&v, "exclusion", d.exclusion)?,
-                        shards: parse_usize(&v, "shards", d.shards)?,
-                        parallelism: parse_usize(&v, "parallelism", d.parallelism)?,
+                        k: parse_usize(v, "k", d.k)?,
+                        window: parse_usize(v, "window", d.window)?,
+                        stride: parse_usize(v, "stride", d.stride)?,
+                        exclusion: parse_usize(v, "exclusion", d.exclusion)?,
+                        shards: parse_usize(v, "shards", d.shards)?,
+                        parallelism: parse_usize(v, "parallelism", d.parallelism)?,
                         kernel,
-                        lanes: parse_usize(&v, "lanes", d.lanes)?,
+                        lanes: parse_usize(v, "lanes", d.lanes)?,
                         lb_kernel,
-                        lb_block: parse_usize(&v, "lb_block", d.lb_block)?,
+                        lb_block: parse_usize(v, "lb_block", d.lb_block)?,
                         stream: v.get("stream").and_then(Json::as_bool).unwrap_or(false),
                         explain: v.get("explain").and_then(Json::as_bool).unwrap_or(false),
                     },
                 })
             }
             "append" => {
-                let samples = parse_floats(&v, "samples", "append")?;
+                let samples = parse_floats(v, "samples", "append")?;
                 Ok(Request::Append {
                     samples,
                     options: AppendOptions {
-                        window: parse_usize(&v, "window", 0)?,
-                        stride: parse_usize(&v, "stride", 0)?,
+                        window: parse_usize(v, "window", 0)?,
+                        stride: parse_usize(v, "stride", 0)?,
                     },
                 })
             }
             other => bail!("unknown op {other:?}"),
         }
+    }
+
+    /// [`Request::encode`] with a pipelining id as the leading member.
+    /// `None` is byte-identical to `encode()`.
+    pub fn encode_with_id(&self, id: Option<&RequestId>) -> String {
+        splice_id(self.encode(), id)
     }
 
     pub fn encode(&self) -> String {
@@ -413,6 +487,12 @@ pub struct MetricsFields {
     pub lb_abandons: u64,
     /// Mean candidates per LB block (0.0 until a block has run).
     pub lb_block_occupancy: f64,
+    /// Connections currently open at the serving front end (gauge).
+    pub conns_open: u64,
+    /// Frames dropped for exceeding the serving edge's max-frame cap.
+    pub frames_oversized: u64,
+    /// Requests that arrived with one already in flight (pipelining).
+    pub requests_pipelined: u64,
     /// Streaming appends served (0 from pre-streaming servers).
     pub stream_appends: u64,
     /// Samples ingested across all appends.
@@ -488,6 +568,9 @@ impl Response {
             lb_blocks: m.search_lb_blocks,
             lb_abandons: m.search_lb_abandons,
             lb_block_occupancy: m.search_lb_block_occupancy_mean,
+            conns_open: m.conns_open,
+            frames_oversized: m.frames_oversized,
+            requests_pipelined: m.requests_pipelined,
             stream_appends: m.stream_appends,
             stream_samples: m.stream_samples,
             delta_searches: m.delta_searches,
@@ -512,6 +595,18 @@ impl Response {
                 })
                 .collect(),
         )
+    }
+
+    /// [`Response::encode`] with the request's id echoed as the leading
+    /// member.  `None` is byte-identical to `encode()` — responses to
+    /// id-less requests are unchanged from the pre-pipelining wire.
+    /// [`Response::Unknown`] re-encodes verbatim regardless (its raw line
+    /// already carries whatever id the origin server echoed).
+    pub fn encode_with_id(&self, id: Option<&RequestId>) -> String {
+        match self {
+            Response::Unknown(_) => self.encode(),
+            _ => splice_id(self.encode(), id),
+        }
     }
 
     pub fn encode(&self) -> String {
@@ -611,6 +706,9 @@ impl Response {
                     ("lb_blocks", Json::Int(m.lb_blocks as i64)),
                     ("lb_abandons", Json::Int(m.lb_abandons as i64)),
                     ("lb_block_occupancy", Json::Num(m.lb_block_occupancy)),
+                    ("conns_open", Json::Int(m.conns_open as i64)),
+                    ("frames_oversized", Json::Int(m.frames_oversized as i64)),
+                    ("requests_pipelined", Json::Int(m.requests_pipelined as i64)),
                     ("stream_appends", Json::Int(m.stream_appends as i64)),
                     ("stream_samples", Json::Int(m.stream_samples as i64)),
                     ("delta_searches", Json::Int(m.delta_searches as i64)),
@@ -642,6 +740,14 @@ impl Response {
             .to_string(),
             Response::Unknown(raw) => raw.clone(),
         }
+    }
+
+    /// Like [`Response::parse`] plus the echoed pipelining id, for clients
+    /// matching interleaved responses back to their requests.
+    pub fn parse_with_id(line: &str) -> Result<(Option<RequestId>, Response)> {
+        let v = Json::parse(line.trim())?;
+        let id = RequestId::extract(&v);
+        Ok((id, Response::parse(line)?))
     }
 
     pub fn parse(line: &str) -> Result<Response> {
@@ -761,6 +867,9 @@ impl Response {
                 lb_blocks: int("lb_blocks"),
                 lb_abandons: int("lb_abandons"),
                 lb_block_occupancy: num("lb_block_occupancy"),
+                conns_open: int("conns_open"),
+                frames_oversized: int("frames_oversized"),
+                requests_pipelined: int("requests_pipelined"),
                 stream_appends: int("stream_appends"),
                 stream_samples: int("stream_samples"),
                 delta_searches: int("delta_searches"),
@@ -1140,6 +1249,9 @@ mod tests {
             lb_blocks: 128,
             lb_abandons: 9,
             lb_block_occupancy: 41.5,
+            conns_open: 5,
+            frames_oversized: 1,
+            requests_pipelined: 17,
             stream_appends: 3,
             stream_samples: 6144,
             delta_searches: 2,
@@ -1247,6 +1359,89 @@ mod tests {
         assert_eq!(r, Response::Unknown(line.to_string()));
         assert_eq!(r.encode(), line);
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn request_ids_roundtrip_and_echo_first() {
+        // int and string ids splice as the leading member on both sides
+        let id = RequestId::Int(42);
+        let enc = Request::Ping.encode_with_id(Some(&id));
+        assert_eq!(enc, r#"{"id":42,"op":"ping"}"#);
+        let (got, req) = Request::parse_with_id(&enc).unwrap();
+        assert_eq!((got, req), (Some(id), Request::Ping));
+
+        let id = RequestId::Str("a\"b".into());
+        let enc = Response::Pong.encode_with_id(Some(&id));
+        assert_eq!(enc, r#"{"id":"a\"b","ok":true,"pong":true}"#);
+        let (got, resp) = Response::parse_with_id(&enc).unwrap();
+        assert_eq!((got, resp), (Some(id), Response::Pong));
+
+        // error responses carry the id too, so a pipelined client can
+        // match a failure to the request that caused it
+        let id = RequestId::Int(-3);
+        let enc = Response::Error("nope".into()).encode_with_id(Some(&id));
+        assert_eq!(enc, r#"{"id":-3,"ok":false,"error":"nope"}"#);
+        let (got, resp) = Response::parse_with_id(&enc).unwrap();
+        assert_eq!((got, resp), (Some(id), Response::Error("nope".into())));
+    }
+
+    #[test]
+    fn no_id_is_byte_identical_to_legacy_encoding() {
+        let reqs = [
+            Request::Ping,
+            Request::Info,
+            Request::Metrics { prometheus: true },
+            Request::Trace { limit: 5 },
+            Request::Search { query: vec![1.0, -2.5], options: SearchOptions::default() },
+        ];
+        for r in reqs {
+            assert_eq!(r.encode_with_id(None), r.encode());
+        }
+        let resps = [
+            Response::Pong,
+            Response::Info { qlen: 1, reflen: 2, batch: 3 },
+            Response::Error("e".into()),
+            Response::Prometheus("x 1\n".into()),
+        ];
+        for r in resps {
+            assert_eq!(r.encode_with_id(None), r.encode());
+        }
+    }
+
+    #[test]
+    fn non_echoable_ids_are_ignored_not_rejected() {
+        for line in [
+            r#"{"op":"ping","id":[1,2]}"#,
+            r#"{"op":"ping","id":{"x":1}}"#,
+            r#"{"op":"ping","id":true}"#,
+            r#"{"op":"ping","id":null}"#,
+            r#"{"op":"ping","id":1.5}"#,
+        ] {
+            let (id, req) = Request::parse_with_id(line).unwrap();
+            assert_eq!(id, None, "{line}");
+            assert_eq!(req, Request::Ping);
+        }
+    }
+
+    #[test]
+    fn id_survives_a_request_level_error() {
+        // valid JSON, invalid request: the id must still come out so the
+        // error response can echo it
+        let line = r#"{"id":9,"op":"frobnicate"}"#;
+        let v = Json::parse(line).unwrap();
+        assert_eq!(RequestId::extract(&v), Some(RequestId::Int(9)));
+        assert!(Request::from_json(&v).is_err());
+        assert!(Request::parse_with_id(line).is_err());
+    }
+
+    #[test]
+    fn unknown_response_keeps_its_wire_id_verbatim() {
+        let line = r#"{"frobnications":3,"id":7,"ok":true}"#;
+        let (id, resp) = Response::parse_with_id(line).unwrap();
+        assert_eq!(id, Some(RequestId::Int(7)));
+        assert_eq!(resp, Response::Unknown(line.to_string()));
+        // encode_with_id must not double-splice the preserved line
+        assert_eq!(resp.encode_with_id(Some(&RequestId::Int(7))), line);
     }
 
     #[test]

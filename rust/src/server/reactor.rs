@@ -1,0 +1,381 @@
+//! Event-driven multiplexed front end: many connections per thread.
+//!
+//! The blocking front end ([`super::server`]) spends one OS thread per
+//! connection, which caps concurrent clients at the thread budget and
+//! leaves most of those threads parked in `read()`.  The reactor serves
+//! the same wire protocol with a fixed thread count:
+//!
+//! * **One poller thread** (the caller of [`Reactor::serve`]) owns every
+//!   connection.  It accepts, reads, decodes, and writes — all sockets
+//!   non-blocking, all progress made in a readiness loop that sleeps
+//!   only when a full pass makes no progress.  The poller never runs a
+//!   verb, so a slow `align` or sharded `search` cannot stall accepts,
+//!   reads, or writes on other connections.
+//! * **A fixed executor pool** (`threads` workers) pops decoded requests
+//!   from a shared [`BoundedQueue`] and runs the same dispatch path as
+//!   the blocking server ([`super::server::respond_to_frame`]), so the
+//!   two front ends answer byte-identically.
+//!
+//! Each connection is a small state machine: bytes read feed a
+//! [`FrameDecoder`] (*reading*), complete frames become queued jobs with
+//! a FIFO in-flight slot per request (*dispatching*), and finished slots
+//! are harvested front-first into the write buffer (*writing*) — FIFO
+//! harvesting is what keeps pipelined responses in request order even
+//! though executors finish out of order.
+//!
+//! Backpressure runs end to end: the executor queue is bounded (a full
+//! queue parks the frame in a per-connection stall slot and pauses that
+//! connection's reads), and each connection admits at most
+//! `max_inflight` outstanding requests before the poller stops reading
+//! its socket — so per-connection memory is bounded by
+//! `max_frame + max_inflight × response` regardless of how fast the
+//! peer sends.  Requests carrying an `"id"` get it echoed on their
+//! response, which is how pipelining clients match replies.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::frame::{FrameDecoder, FrameEvent, DEFAULT_MAX_FRAME};
+use super::server::{oversized_response, respond_to_frame};
+use crate::coordinator::queue::PushError;
+use crate::coordinator::{BoundedQueue, Metrics, SdtwService};
+use crate::util::json::Json;
+use crate::{log_debug, log_info, log_warn};
+
+/// Tuning knobs for the multiplexed front end.
+#[derive(Clone, Debug)]
+pub struct ReactorOptions {
+    /// Executor threads running verbs (the poller is extra).
+    pub threads: usize,
+    /// Per-frame byte cap; larger lines earn a protocol error.
+    pub max_frame: usize,
+    /// Outstanding requests a connection may have before the poller
+    /// stops reading its socket.
+    pub max_inflight: usize,
+}
+
+impl Default for ReactorOptions {
+    fn default() -> ReactorOptions {
+        ReactorOptions { threads: 4, max_frame: DEFAULT_MAX_FRAME, max_inflight: 32 }
+    }
+}
+
+/// The multiplexed TCP front end.  Construction mirrors
+/// [`super::Server`]; `serve` runs the poller on the calling thread.
+pub struct Reactor {
+    service: Arc<SdtwService>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    opts: ReactorOptions,
+}
+
+/// One request's landing slot.  The executor completes it; the poller
+/// harvests it when it reaches the front of the connection's FIFO.
+#[derive(Default)]
+struct Pending {
+    done: AtomicBool,
+    out: Mutex<Option<String>>,
+}
+
+impl Pending {
+    /// A slot born completed — used for protocol errors the poller
+    /// answers itself (oversized frames) while preserving FIFO order
+    /// with executor-bound requests around it.
+    fn ready(text: String) -> Arc<Pending> {
+        Arc::new(Pending { done: AtomicBool::new(true), out: Mutex::new(Some(text)) })
+    }
+
+    fn complete(&self, text: Option<String>) {
+        *self.out.lock().unwrap() = text;
+        self.done.store(true, Ordering::Release);
+    }
+
+    /// `Some(response)` once completed (inner `None` = no response due,
+    /// which cannot happen for queued frames but keeps the type honest).
+    fn take_if_done(&self) -> Option<Option<String>> {
+        if !self.done.load(Ordering::Acquire) {
+            return None;
+        }
+        Some(self.out.lock().unwrap().take())
+    }
+}
+
+/// One decoded frame on its way to an executor.
+struct Job {
+    line: String,
+    json: Option<Json>,
+    slot: Arc<Pending>,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    peer: SocketAddr,
+    decoder: FrameDecoder,
+    /// FIFO of outstanding requests, request order == response order.
+    inflight: VecDeque<Arc<Pending>>,
+    /// A frame that found the executor queue full; retried every tick
+    /// before any new reads (per-connection backpressure).
+    stalled: Option<Job>,
+    outbuf: Vec<u8>,
+    written: usize,
+    /// Peer half-closed: drain in-flight work, flush, then close.
+    eof: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: SocketAddr, max_frame: usize) -> Conn {
+        Conn {
+            stream,
+            peer,
+            decoder: FrameDecoder::new(max_frame),
+            inflight: VecDeque::new(),
+            stalled: None,
+            outbuf: Vec::new(),
+            written: 0,
+            eof: false,
+        }
+    }
+}
+
+impl Reactor {
+    /// Bind to `addr` (port 0 picks a free port).
+    pub fn bind(service: Arc<SdtwService>, addr: &str, opts: ReactorOptions) -> Result<Reactor> {
+        anyhow::ensure!(opts.threads >= 1, "reactor needs at least one executor thread");
+        anyhow::ensure!(opts.max_frame >= 1, "max_frame must be positive");
+        anyhow::ensure!(opts.max_inflight >= 1, "max_inflight must be positive");
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Reactor { service, listener, stop: Arc::new(AtomicBool::new(false)), opts })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A flag that makes `serve` return when set.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Run the poller on this thread and the executor pool beside it
+    /// until the stop flag is set.
+    pub fn serve(&self) -> Result<()> {
+        let queue = Arc::new(BoundedQueue::new((self.opts.threads * 4).max(16)));
+        std::thread::scope(|scope| {
+            for i in 0..self.opts.threads {
+                let queue = queue.clone();
+                let service = self.service.clone();
+                std::thread::Builder::new()
+                    .name(format!("sdtw-exec-{i}"))
+                    .spawn_scoped(scope, move || executor_loop(&queue, &service))
+                    .expect("spawn executor thread");
+            }
+            let result = self.poll_loop(&queue);
+            // wake executors out of pop(); the scope joins them
+            queue.close();
+            result
+        })
+    }
+
+    fn poll_loop(&self, queue: &BoundedQueue<Job>) -> Result<()> {
+        log_info!(
+            "reactor listening on {} ({} executor threads, max_frame={}, max_inflight={})",
+            self.local_addr()?,
+            self.opts.threads,
+            self.opts.max_frame,
+            self.opts.max_inflight
+        );
+        let metrics = self.service.metrics_sink().clone();
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut buf = vec![0u8; 16 * 1024];
+        while !self.stop.load(Ordering::Relaxed) {
+            let mut progress = false;
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, peer)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        stream.set_nodelay(true).ok();
+                        log_debug!("connection from {peer}");
+                        metrics.on_conn_open();
+                        conns.push(Conn::new(stream, peer, self.opts.max_frame));
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        log_warn!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+            let mut i = 0;
+            while i < conns.len() {
+                let (alive, moved) =
+                    tick_conn(&mut conns[i], queue, &metrics, &self.opts, &mut buf);
+                progress |= moved;
+                if alive {
+                    i += 1;
+                } else {
+                    let gone = conns.swap_remove(i);
+                    log_debug!("connection {} closed", gone.peer);
+                    metrics.on_conn_close();
+                    progress = true;
+                }
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        for _ in conns.drain(..) {
+            metrics.on_conn_close();
+        }
+        log_info!("reactor stopped");
+        Ok(())
+    }
+}
+
+fn executor_loop(queue: &BoundedQueue<Job>, service: &SdtwService) {
+    while let Some(job) = queue.pop() {
+        let text = respond_to_frame(&job.line, job.json.as_ref(), service);
+        job.slot.complete(text);
+    }
+}
+
+/// One scheduling pass over a connection.  Returns (alive, progress).
+fn tick_conn(
+    conn: &mut Conn,
+    queue: &BoundedQueue<Job>,
+    metrics: &Metrics,
+    opts: &ReactorOptions,
+    buf: &mut [u8],
+) -> (bool, bool) {
+    let mut progress = false;
+
+    // 1. retry the frame stalled on a full executor queue
+    if let Some(job) = conn.stalled.take() {
+        match queue.try_push(job) {
+            Ok(()) => progress = true,
+            Err(PushError::Full(job)) => conn.stalled = Some(job),
+            Err(PushError::Closed(_)) => return (false, true),
+        }
+    }
+    if !drain_events(conn, queue, metrics, opts) {
+        return (false, true);
+    }
+
+    // 2. read, but only while admitted: no stall, no undispatched
+    //    frames, and in-flight below the cap — this is where queue
+    //    backpressure reaches the socket edge
+    if !conn.eof
+        && conn.stalled.is_none()
+        && !conn.decoder.has_pending()
+        && conn.inflight.len() < opts.max_inflight
+    {
+        match conn.stream.read(buf) {
+            Ok(0) => {
+                conn.eof = true;
+                progress = true;
+            }
+            Ok(n) => {
+                conn.decoder.feed(&buf[..n]);
+                progress = true;
+                if !drain_events(conn, queue, metrics, opts) {
+                    return (false, true);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return (false, true),
+        }
+    }
+
+    // 3. harvest completed responses, front-first so pipelined replies
+    //    leave in request order
+    loop {
+        let Some(front) = conn.inflight.front() else { break };
+        let Some(text) = front.take_if_done() else { break };
+        conn.inflight.pop_front();
+        if let Some(text) = text {
+            conn.outbuf.extend_from_slice(text.as_bytes());
+            conn.outbuf.push(b'\n');
+        }
+        progress = true;
+    }
+
+    // 4. flush as much as the socket will take right now
+    while conn.written < conn.outbuf.len() {
+        match conn.stream.write(&conn.outbuf[conn.written..]) {
+            Ok(0) => return (false, true),
+            Ok(n) => {
+                conn.written += n;
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return (false, true),
+        }
+    }
+    if conn.written > 0 && conn.written == conn.outbuf.len() {
+        conn.outbuf.clear();
+        conn.written = 0;
+    }
+
+    // 5. half-close: peer stopped sending — close once every accepted
+    //    request has been answered and flushed
+    let alive = !(conn.eof
+        && conn.inflight.is_empty()
+        && conn.stalled.is_none()
+        && !conn.decoder.has_pending()
+        && conn.outbuf.is_empty());
+    (alive, progress)
+}
+
+/// Turn decoded frames into executor jobs (or immediate protocol
+/// errors).  Returns false when the connection must be torn down
+/// (invalid UTF-8 on the wire, or shutdown).
+fn drain_events(
+    conn: &mut Conn,
+    queue: &BoundedQueue<Job>,
+    metrics: &Metrics,
+    opts: &ReactorOptions,
+) -> bool {
+    while conn.stalled.is_none() {
+        let Some(event) = conn.decoder.next_event() else { break };
+        match event {
+            FrameEvent::Oversized { at } => {
+                metrics.on_frame_oversized();
+                let text = oversized_response(opts.max_frame, at).encode();
+                conn.inflight.push_back(Pending::ready(text));
+            }
+            FrameEvent::Frame(frame) => {
+                let line = match frame.line() {
+                    Some(l) => l.to_string(),
+                    None => return false, // invalid utf-8: teardown, like the blocking edge
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if !conn.inflight.is_empty() {
+                    metrics.on_pipelined_request();
+                }
+                let slot = Arc::new(Pending::default());
+                conn.inflight.push_back(slot.clone());
+                let job = Job { line, json: frame.json.ok(), slot };
+                match queue.try_push(job) {
+                    Ok(()) => {}
+                    Err(PushError::Full(job)) => conn.stalled = Some(job),
+                    Err(PushError::Closed(_)) => return false,
+                }
+            }
+        }
+    }
+    true
+}

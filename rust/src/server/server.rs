@@ -1,4 +1,4 @@
-//! TCP listener + per-connection loops.
+//! TCP listener + per-connection loops (the blocking front end).
 //!
 //! Threading model: one non-blocking accept loop polling a stop flag
 //! (so embedding tests can shut the server down deterministically), one
@@ -6,16 +6,23 @@
 //! request/response pipeline — requests on a connection are answered in
 //! order, and slow verbs (an `align` waiting on a batch slot, a sharded
 //! `search` fanning out to its worker pool) only stall their own
-//! connection, never the listener.
+//! connection, never the listener.  For many connections per thread see
+//! [`super::reactor`], which shares this module's dispatch path
+//! ([`respond_to_frame`]) so the two front ends answer byte-identically.
 //!
-//! Error containment: a malformed line or a failed verb becomes an
-//! `{"ok":false,...}` protocol response on the same connection
-//! ([`handle_line`] never panics the connection thread); only I/O errors
-//! tear the connection down.  Cross-request state lives entirely in the
-//! shared [`SdtwService`] — connections themselves are stateless, which
-//! is what lets the coordinator batch queries *across* clients.
+//! Wire safety: lines are framed by [`super::frame::FrameDecoder`], so a
+//! peer that streams bytes without ever sending a newline holds at most
+//! `max_frame` bytes of buffer — the frame is rejected with a protocol
+//! error at the cap instead of growing the heap, and the connection
+//! keeps serving.  Error containment: a malformed line or a failed verb
+//! becomes an `{"ok":false,...}` protocol response on the same
+//! connection ([`handle_line`] never panics the connection thread); only
+//! I/O errors and invalid UTF-8 tear the connection down.  Cross-request
+//! state lives entirely in the shared [`SdtwService`] — connections
+//! themselves are stateless, which is what lets the coordinator batch
+//! queries *across* clients.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -23,16 +30,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::proto::{Request, Response};
-use crate::coordinator::SdtwService;
+use super::frame::{FrameDecoder, FrameEvent, DEFAULT_MAX_FRAME};
+use super::proto::{Request, RequestId, Response};
+use crate::coordinator::{Metrics, SdtwService};
 use crate::obs;
+use crate::util::json::Json;
 use crate::{log_debug, log_info, log_warn};
 
-/// The TCP front-end.  One accept loop, one thread per connection.
+/// The blocking TCP front end.  One accept loop, one thread per
+/// connection.
 pub struct Server {
     service: Arc<SdtwService>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
+    max_frame: usize,
 }
 
 impl Server {
@@ -40,7 +51,19 @@ impl Server {
     pub fn bind(service: Arc<SdtwService>, addr: &str) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
-        Ok(Server { service, listener, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(Server {
+            service,
+            listener,
+            stop: Arc::new(AtomicBool::new(false)),
+            max_frame: DEFAULT_MAX_FRAME,
+        })
+    }
+
+    /// Cap, in bytes, on a single request line; larger frames are
+    /// rejected with a protocol error instead of buffered.
+    pub fn set_max_frame(&mut self, bytes: usize) {
+        assert!(bytes > 0, "max_frame must be positive");
+        self.max_frame = bytes;
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -61,10 +84,11 @@ impl Server {
                 Ok((stream, peer)) => {
                     log_debug!("connection from {peer}");
                     let service = self.service.clone();
+                    let max_frame = self.max_frame;
                     std::thread::Builder::new()
                         .name(format!("conn-{peer}"))
                         .spawn(move || {
-                            if let Err(e) = connection_loop(stream, &service) {
+                            if let Err(e) = connection_loop(stream, &service, max_frame) {
                                 log_debug!("connection {peer} ended: {e:#}");
                             }
                         })
@@ -84,36 +108,119 @@ impl Server {
     }
 }
 
-/// Serve one connection: read request lines, write response lines.
-fn connection_loop(stream: TcpStream, service: &SdtwService) -> Result<()> {
+/// Serve one connection: decode frames, dispatch, write response lines.
+fn connection_loop(stream: TcpStream, service: &SdtwService, max_frame: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let metrics = service.metrics_sink().clone();
+    metrics.on_conn_open();
+    let result = frame_loop(stream, service, max_frame, &metrics);
+    metrics.on_conn_close();
+    result
+}
+
+fn frame_loop(
+    mut stream: TcpStream,
+    service: &SdtwService,
+    max_frame: usize,
+    metrics: &Metrics,
+) -> Result<()> {
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let mut decoder = FrameDecoder::new(max_frame);
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(()); // peer closed
         }
-        let response = handle_line(&line, service);
-        writer.write_all(response.encode().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        decoder.feed(&chunk[..n]);
+        let mut wrote = false;
+        while let Some(event) = decoder.next_event() {
+            let reply = match event {
+                FrameEvent::Frame(frame) => {
+                    let line = frame
+                        .line()
+                        .ok_or_else(|| anyhow::anyhow!("invalid utf-8 on the wire"))?;
+                    if decoder.has_pending() {
+                        metrics.on_pipelined_request();
+                    }
+                    respond_to_frame(line, frame.json.as_ref().ok(), service)
+                }
+                FrameEvent::Oversized { at } => {
+                    metrics.on_frame_oversized();
+                    Some(oversized_response(max_frame, at).encode())
+                }
+            };
+            if let Some(text) = reply {
+                writer.write_all(text.as_bytes())?;
+                writer.write_all(b"\n")?;
+                wrote = true;
+            }
+        }
+        if wrote {
+            writer.flush()?;
+        }
     }
-    Ok(())
+}
+
+/// The protocol error a too-long line earns.  The offset is the absolute
+/// position of the first byte past the cap — deterministic for a given
+/// byte stream however it was chunked, which the integration suite
+/// relies on.
+pub(crate) fn oversized_response(max_frame: usize, at: u64) -> Response {
+    Response::Error(format!(
+        "frame exceeds max-frame cap ({max_frame} bytes) at byte {at}"
+    ))
+}
+
+/// Shared dispatch path for both front ends: one wire frame in, one
+/// encoded response line out (`None` for blank lines, which get no
+/// response).  `parsed` is the frame's incrementally-parsed JSON when
+/// the decoder produced one; malformed frames pass `None` and the line
+/// is re-parsed here so error text matches [`Request::parse`] exactly —
+/// the second scan is paid on malformed input only.  A request id on
+/// the frame is echoed onto the response.
+pub fn respond_to_frame(
+    line: &str,
+    parsed: Option<&Json>,
+    service: &SdtwService,
+) -> Option<String> {
+    if line.trim().is_empty() {
+        return None;
+    }
+    let owned;
+    let value = match parsed {
+        Some(v) => Some(v),
+        None => match Json::parse(line.trim()) {
+            Ok(v) => {
+                owned = v;
+                Some(&owned)
+            }
+            Err(_) => None,
+        },
+    };
+    let id = value.and_then(RequestId::extract);
+    let response = traced_dispatch(line, value, service);
+    Some(response.encode_with_id(id.as_ref()))
 }
 
 /// Decode, dispatch, encode.  Errors become protocol-level Error
 /// responses rather than connection teardown.
-///
-/// This is the observability edge: every request gets a trace context
-/// here (sampled per `SDTW_TRACE`), the context rides the thread into
-/// the service and its workers, and one structured Info line records
-/// the request outcome — trace id, verb, latency, ok/error.
 pub fn handle_line(line: &str, service: &SdtwService) -> Response {
+    traced_dispatch(line, None, service)
+}
+
+/// The observability edge: every request gets a trace context here
+/// (sampled per `SDTW_TRACE`), the context rides the thread into the
+/// service and its workers, and one structured Info line records the
+/// request outcome — trace id, verb, latency, ok/error.
+fn traced_dispatch(line: &str, value: Option<&Json>, service: &SdtwService) -> Response {
     let ctx = obs::begin_request();
     let _obs_guard = obs::enter(ctx);
     let t0 = Instant::now();
-    let (verb, response) = dispatch_line(line, service);
+    let (verb, response) = match value {
+        Some(v) => dispatch_value(v, service),
+        None => dispatch_line(line, service),
+    };
     let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
     let outcome = match &response {
         Response::Error(_) => "error",
@@ -130,7 +237,14 @@ pub fn handle_line(line: &str, service: &SdtwService) -> Response {
 }
 
 fn dispatch_line(line: &str, service: &SdtwService) -> (&'static str, Response) {
-    let req = match Request::parse(line) {
+    match Json::parse(line.trim()) {
+        Ok(v) => dispatch_value(&v, service),
+        Err(e) => ("parse", Response::Error(format!("bad request: {e}"))),
+    }
+}
+
+fn dispatch_value(v: &Json, service: &SdtwService) -> (&'static str, Response) {
+    let req = match Request::from_json(v) {
         Ok(r) => r,
         Err(e) => return ("parse", Response::Error(format!("bad request: {e}"))),
     };

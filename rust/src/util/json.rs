@@ -104,7 +104,7 @@ impl Json {
 
     // -------------------------------------------------------------- parsing
     pub fn parse(input: &str) -> Result<Json, ParseError> {
-        let mut p = Parser { b: input.as_bytes(), pos: 0 };
+        let mut p = Parser { b: input.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -114,6 +114,13 @@ impl Json {
         Ok(v)
     }
 }
+
+/// Hard cap on container nesting, shared by [`Json::parse`] and
+/// [`IncrementalParser`].  The recursive-descent parser recurses once per
+/// nesting level, so without a cap a line of `[[[[...` deep enough to
+/// exhaust the thread stack would abort the process instead of returning a
+/// protocol error.  Wire requests nest at most 3 levels.
+pub const MAX_DEPTH: usize = 128;
 
 impl fmt::Display for Json {
     /// Compact canonical encoding.
@@ -175,6 +182,7 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -233,11 +241,16 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -246,7 +259,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => {
                     self.pos = self.pos.saturating_sub(1);
                     return Err(self.err("expected ',' or ']'"));
@@ -256,11 +272,16 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -274,7 +295,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => {
                     self.pos = self.pos.saturating_sub(1);
                     return Err(self.err("expected ',' or '}'"));
@@ -389,6 +413,438 @@ fn utf8_width(first: u8) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Incremental (push) parser
+// ---------------------------------------------------------------------------
+
+/// Where the incremental tokenizer is inside the document.
+///
+/// `Copy` is deliberate: the step function matches on the current mode by
+/// value while mutating the rest of the parser.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Mode {
+    /// Expecting the start of a value (leading whitespace skipped here).
+    Value,
+    /// Just after `[`: a value or an immediate `]`.
+    ArrFirst,
+    /// Just after `{`: a key string or an immediate `}`.
+    ObjFirst,
+    /// After `,` inside an object: a key string.
+    ObjKey,
+    /// After a key string: the `:` separator.
+    ObjColon,
+    /// Inside a string literal (`key` = it is an object key).
+    Str { key: bool },
+    /// Immediately after a backslash inside a string.
+    StrEscape { key: bool },
+    /// Collecting the 4 hex digits of a `\u` escape.
+    StrUnicode { key: bool },
+    /// Inside a number token.
+    Number,
+    /// Inside `null` / `true` / `false`.
+    Literal,
+    /// A value just closed; expecting `,`, a container close, or the end.
+    AfterValue,
+    /// The top-level value is complete; only trailing whitespace is legal.
+    Done,
+}
+
+/// An open container on the incremental parser's explicit stack.
+enum Ctr {
+    Arr(Vec<Json>),
+    /// Map under construction plus the key awaiting its value.
+    Obj(BTreeMap<String, Json>, Option<String>),
+}
+
+/// Push-based JSON parser: feed byte chunks as they arrive off a socket,
+/// then [`finish`](IncrementalParser::finish) when the frame ends.
+///
+/// Semantically equivalent to [`Json::parse`] over the concatenated bytes —
+/// same value on success (property-tested bit-identical, including the
+/// `-0.0` and integer-identity cases), and an error exactly when
+/// `Json::parse` errors (messages and positions may differ; callers that
+/// need the classic error re-parse the full frame, which only costs on
+/// malformed input).  Unlike the recursive parser it runs on an explicit
+/// heap stack, so work per [`feed`](IncrementalParser::feed) is
+/// proportional to the chunk length and no input can exhaust the thread
+/// stack.  Errors latch: once failed, further bytes are ignored in O(1).
+pub struct IncrementalParser {
+    stack: Vec<Ctr>,
+    mode: Mode,
+    /// Decoded string bytes (escapes already resolved) for the string
+    /// currently being lexed.
+    sbuf: Vec<u8>,
+    /// Hex digits of an in-flight `\u` escape.
+    ubuf: Vec<u8>,
+    /// Raw bytes of an in-flight number token.
+    nbuf: Vec<u8>,
+    /// Literal being matched (`"null"` / `"true"` / `"false"`) and how many
+    /// of its bytes have matched so far.
+    lit: &'static str,
+    lit_got: usize,
+    top: Option<Json>,
+    err: Option<ParseError>,
+    /// Absolute byte offset of the next byte to consume (error positions).
+    pos: usize,
+}
+
+impl Default for IncrementalParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IncrementalParser {
+    pub fn new() -> Self {
+        IncrementalParser {
+            stack: Vec::new(),
+            mode: Mode::Value,
+            sbuf: Vec::new(),
+            ubuf: Vec::new(),
+            nbuf: Vec::new(),
+            lit: "",
+            lit_got: 0,
+            top: None,
+            err: None,
+            pos: 0,
+        }
+    }
+
+    /// True once an error has latched; callers may stop feeding early.
+    pub fn failed(&self) -> bool {
+        self.err.is_some()
+    }
+
+    /// True once the top-level value is complete (only trailing whitespace
+    /// would still be accepted).
+    pub fn is_complete(&self) -> bool {
+        self.mode == Mode::Done && self.err.is_none()
+    }
+
+    /// Consume the next chunk of input.  O(chunk length); never panics.
+    pub fn feed(&mut self, chunk: &[u8]) {
+        if self.err.is_some() {
+            return;
+        }
+        let mut i = 0;
+        while i < chunk.len() {
+            let consumed = self.step(chunk[i]);
+            if self.err.is_some() {
+                return;
+            }
+            if consumed {
+                i += 1;
+                self.pos += 1;
+            }
+        }
+    }
+
+    /// End of input: finalize and return the parsed value.
+    pub fn finish(mut self) -> Result<Json, ParseError> {
+        if self.err.is_none() && self.mode == Mode::Number {
+            self.finish_number();
+        }
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        match self.mode {
+            Mode::Done => Ok(self.top.expect("complete parse holds a value")),
+            Mode::Str { .. } => Err(self.fail("unterminated string")),
+            Mode::StrEscape { .. } => Err(self.fail("bad escape")),
+            Mode::StrUnicode { .. } => Err(self.fail("bad \\u escape")),
+            Mode::Literal => Err(self.fail(&format!("expected '{}'", self.lit))),
+            Mode::Value | Mode::ArrFirst => Err(self.fail("unexpected end of input")),
+            Mode::ObjFirst | Mode::ObjKey => Err(self.fail("expected '\"'")),
+            Mode::ObjColon => Err(self.fail("expected ':'")),
+            Mode::AfterValue => match self.stack.last() {
+                Some(Ctr::Arr(_)) => Err(self.fail("expected ',' or ']'")),
+                _ => Err(self.fail("expected ',' or '}'")),
+            },
+            // finish_number above moved us out of Number (or latched an error)
+            Mode::Number => unreachable!("number finalized before dispatch"),
+        }
+    }
+
+    fn fail(&self, msg: &str) -> ParseError {
+        ParseError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn set_err(&mut self, msg: &str) {
+        if self.err.is_none() {
+            self.err = Some(self.fail(msg));
+        }
+    }
+
+    /// Process one byte in the current mode.  Returns whether the byte was
+    /// consumed; `false` re-dispatches the same byte in the new mode (used
+    /// when a token ends only because a foreign byte appears after it).
+    fn step(&mut self, c: u8) -> bool {
+        match self.mode {
+            Mode::Value | Mode::ArrFirst => {
+                if is_ws(c) {
+                    return true;
+                }
+                if self.mode == Mode::ArrFirst && c == b']' {
+                    match self.stack.pop() {
+                        Some(Ctr::Arr(items)) => self.complete_value(Json::Arr(items)),
+                        _ => unreachable!("ArrFirst implies an array on the stack"),
+                    }
+                    return true;
+                }
+                match c {
+                    b'"' => {
+                        self.sbuf.clear();
+                        self.mode = Mode::Str { key: false };
+                    }
+                    b'{' => {
+                        if self.push_ctr(Ctr::Obj(BTreeMap::new(), None)) {
+                            self.mode = Mode::ObjFirst;
+                        }
+                    }
+                    b'[' => {
+                        if self.push_ctr(Ctr::Arr(Vec::new())) {
+                            self.mode = Mode::ArrFirst;
+                        }
+                    }
+                    b'n' | b't' | b'f' => {
+                        self.lit = match c {
+                            b'n' => "null",
+                            b't' => "true",
+                            _ => "false",
+                        };
+                        self.lit_got = 1;
+                        self.mode = Mode::Literal;
+                    }
+                    b'-' | b'0'..=b'9' => {
+                        self.nbuf.clear();
+                        self.nbuf.push(c);
+                        self.mode = Mode::Number;
+                    }
+                    _ => self.set_err("unexpected character"),
+                }
+                true
+            }
+            Mode::ObjFirst | Mode::ObjKey => {
+                if is_ws(c) {
+                    return true;
+                }
+                if self.mode == Mode::ObjFirst && c == b'}' {
+                    match self.stack.pop() {
+                        Some(Ctr::Obj(map, _)) => self.complete_value(Json::Obj(map)),
+                        _ => unreachable!("ObjFirst implies an object on the stack"),
+                    }
+                    return true;
+                }
+                if c == b'"' {
+                    self.sbuf.clear();
+                    self.mode = Mode::Str { key: true };
+                } else {
+                    self.set_err("expected '\"'");
+                }
+                true
+            }
+            Mode::ObjColon => {
+                if is_ws(c) {
+                    return true;
+                }
+                if c == b':' {
+                    self.mode = Mode::Value;
+                } else {
+                    self.set_err("expected ':'");
+                }
+                true
+            }
+            Mode::Str { key } => {
+                match c {
+                    b'"' => {
+                        let bytes = std::mem::take(&mut self.sbuf);
+                        match String::from_utf8(bytes) {
+                            Ok(s) => {
+                                if key {
+                                    match self.stack.last_mut() {
+                                        Some(Ctr::Obj(_, pending)) => {
+                                            *pending = Some(s);
+                                            self.mode = Mode::ObjColon;
+                                        }
+                                        _ => unreachable!("key string implies an object"),
+                                    }
+                                } else {
+                                    self.complete_value(Json::Str(s));
+                                }
+                            }
+                            Err(_) => self.set_err("invalid utf-8"),
+                        }
+                    }
+                    b'\\' => self.mode = Mode::StrEscape { key },
+                    c if c < 0x20 => self.set_err("control char in string"),
+                    c => self.sbuf.push(c),
+                }
+                true
+            }
+            Mode::StrEscape { key } => {
+                match c {
+                    b'"' => self.sbuf.push(b'"'),
+                    b'\\' => self.sbuf.push(b'\\'),
+                    b'/' => self.sbuf.push(b'/'),
+                    b'b' => self.sbuf.push(0x08),
+                    b'f' => self.sbuf.push(0x0c),
+                    b'n' => self.sbuf.push(b'\n'),
+                    b'r' => self.sbuf.push(b'\r'),
+                    b't' => self.sbuf.push(b'\t'),
+                    b'u' => {
+                        self.ubuf.clear();
+                        self.mode = Mode::StrUnicode { key };
+                        return true;
+                    }
+                    _ => {
+                        self.set_err("bad escape");
+                        return true;
+                    }
+                }
+                self.mode = Mode::Str { key };
+                true
+            }
+            Mode::StrUnicode { key } => {
+                self.ubuf.push(c);
+                if self.ubuf.len() == 4 {
+                    // Mirror the recursive parser: take the 4 raw bytes,
+                    // radix-parse, lone surrogates fold to U+FFFD.
+                    let code = std::str::from_utf8(&self.ubuf)
+                        .ok()
+                        .and_then(|hex| u32::from_str_radix(hex, 16).ok());
+                    match code {
+                        Some(code) => {
+                            let ch = char::from_u32(code).unwrap_or('\u{fffd}');
+                            let mut buf = [0u8; 4];
+                            self.sbuf.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                            self.mode = Mode::Str { key };
+                        }
+                        None => self.set_err("bad \\u escape"),
+                    }
+                }
+                true
+            }
+            Mode::Number => {
+                if matches!(c, b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+                    self.nbuf.push(c);
+                    true
+                } else {
+                    // Token ended on a foreign byte: finalize, then let the
+                    // new mode (AfterValue / Done) see this byte.
+                    self.finish_number();
+                    false
+                }
+            }
+            Mode::Literal => {
+                if self.lit.as_bytes().get(self.lit_got) == Some(&c) {
+                    self.lit_got += 1;
+                    if self.lit_got == self.lit.len() {
+                        let v = match self.lit {
+                            "null" => Json::Null,
+                            "true" => Json::Bool(true),
+                            _ => Json::Bool(false),
+                        };
+                        self.complete_value(v);
+                    }
+                } else {
+                    self.set_err(&format!("expected '{}'", self.lit));
+                }
+                true
+            }
+            Mode::AfterValue => {
+                if is_ws(c) {
+                    return true;
+                }
+                match c {
+                    b',' => match self.stack.last() {
+                        Some(Ctr::Arr(_)) => self.mode = Mode::Value,
+                        Some(Ctr::Obj(..)) => self.mode = Mode::ObjKey,
+                        None => unreachable!("AfterValue implies an open container"),
+                    },
+                    b']' => match self.stack.pop() {
+                        Some(Ctr::Arr(items)) => self.complete_value(Json::Arr(items)),
+                        _ => self.set_err("expected ',' or '}'"),
+                    },
+                    b'}' => match self.stack.pop() {
+                        Some(Ctr::Obj(map, _)) => self.complete_value(Json::Obj(map)),
+                        _ => self.set_err("expected ',' or ']'"),
+                    },
+                    _ => match self.stack.last() {
+                        Some(Ctr::Arr(_)) => self.set_err("expected ',' or ']'"),
+                        _ => self.set_err("expected ',' or '}'"),
+                    },
+                }
+                true
+            }
+            Mode::Done => {
+                if is_ws(c) {
+                    true
+                } else {
+                    self.set_err("trailing data");
+                    true
+                }
+            }
+        }
+    }
+
+    fn push_ctr(&mut self, ctr: Ctr) -> bool {
+        if self.stack.len() >= MAX_DEPTH {
+            self.set_err("nesting too deep");
+            false
+        } else {
+            self.stack.push(ctr);
+            true
+        }
+    }
+
+    /// A value finished: attach it to the enclosing container, or crown it
+    /// as the top-level result.
+    fn complete_value(&mut self, v: Json) {
+        match self.stack.last_mut() {
+            Some(Ctr::Arr(items)) => {
+                items.push(v);
+                self.mode = Mode::AfterValue;
+            }
+            Some(Ctr::Obj(map, pending)) => {
+                let key = pending.take().expect("value inside object follows a key");
+                map.insert(key, v);
+                self.mode = Mode::AfterValue;
+            }
+            None => {
+                self.top = Some(v);
+                self.mode = Mode::Done;
+            }
+        }
+    }
+
+    /// Finalize the buffered number token with the exact same text→value
+    /// rules as the recursive parser (integer identity, `-0` sign bit).
+    fn finish_number(&mut self) {
+        let bytes = std::mem::take(&mut self.nbuf);
+        // The token charset is pure ASCII, so this cannot fail.
+        let text = std::str::from_utf8(&bytes).expect("number token is ascii");
+        let is_float = text.contains(['.', 'e', 'E']);
+        if !is_float {
+            if let Ok(i) = text.parse::<i64>() {
+                if i == 0 && text.starts_with('-') {
+                    self.complete_value(Json::Num(-0.0));
+                } else {
+                    self.complete_value(Json::Int(i));
+                }
+                return;
+            }
+        }
+        match text.parse::<f64>() {
+            Ok(x) => self.complete_value(Json::Num(x)),
+            Err(_) => self.set_err("bad number"),
+        }
+    }
+}
+
+fn is_ws(c: u8) -> bool {
+    matches!(c, b' ' | b'\t' | b'\n' | b'\r')
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,6 +924,140 @@ mod tests {
     #[test]
     fn nonfinite_encodes_null() {
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn nesting_depth_capped_not_stack_overflow() {
+        // MAX_DEPTH levels parse; MAX_DEPTH + 1 is a protocol error, and a
+        // pathological 1 MB of '[' returns an error instead of aborting.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        let bomb = "[".repeat(if cfg!(miri) { 4096 } else { 1 << 20 });
+        assert!(Json::parse(&bomb).is_err());
+        // wide-but-shallow documents must not trip the cap (depth is
+        // per-branch, not cumulative)
+        let wide = format!("[{}[]]", "[],".repeat(300));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    /// Every (document, chunking) pair must agree with `Json::parse`:
+    /// bit-identical value on success, error exactly when it errors.
+    fn assert_incremental_equiv(doc: &str, chunk: usize) {
+        let mut p = IncrementalParser::new();
+        for piece in doc.as_bytes().chunks(chunk.max(1)) {
+            p.feed(piece);
+        }
+        match (p.finish(), Json::parse(doc)) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a, b, "value mismatch for {doc:?} chunk={chunk}");
+                // bit-identity, not just PartialEq: the canonical encoding
+                // captures -0.0 vs 0.0 and Int vs Num identity
+                assert_eq!(a.to_string(), b.to_string(), "encoding mismatch for {doc:?}");
+            }
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!("divergence for {doc:?} chunk={chunk}: incremental={a:?} full={b:?}"),
+        }
+    }
+
+    #[test]
+    fn incremental_matches_recursive_parser() {
+        let docs = [
+            "null",
+            "true",
+            " false ",
+            "42",
+            "-7",
+            "-0",
+            "0",
+            "2.5",
+            "1e3",
+            "1E-3",
+            "-0.0",
+            "9007199254740993",
+            "1.",
+            "\"hi\"",
+            r#""a\n\t\"\\ A ü""#,
+            r#""éA""#,
+            r#""\ud800""#,
+            "[]",
+            "[ ]",
+            "[1, 2.5, \"x\"]",
+            "{}",
+            r#"{"a": [1, 2.5, "x"], "b": {"c": null}}"#,
+            r#"{"batch":32,"dtype":"f32","gsps":0.178,"ok":true,"tags":[1,2,3],"x":null}"#,
+            r#"{"op":"search","query":[0.1,-0.25,"inf"],"k":3,"id":7}"#,
+            // error cases: both parsers must reject
+            "",
+            "   ",
+            "{",
+            "[1,]",
+            "[1 2]",
+            "nulll",
+            "nul",
+            "truefalse",
+            "\"unterminated",
+            "{\"a\" 1}",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "1-2",
+            "1e2e3",
+            "1..2",
+            "1e+2.5",
+            "123abc",
+            "[1e,2]",
+            "--1",
+            "-",
+            "+1",
+            "01",
+            "1 2",
+            "[null}",
+            "{\"k\":1]",
+            "\"bad \\q escape\"",
+            "\"bad \\u12zz escape\"",
+            "\"trunc \\u12",
+            "[[[[1]]]]",
+        ];
+        for doc in docs {
+            for chunk in [1, 2, 3, 7, doc.len().max(1)] {
+                assert_incremental_equiv(doc, chunk);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_depth_cap_matches() {
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        for doc in [&ok, &deep] {
+            assert_incremental_equiv(doc, 1);
+            assert_incremental_equiv(doc, 13);
+        }
+    }
+
+    #[test]
+    fn incremental_error_latches_and_reports() {
+        let mut p = IncrementalParser::new();
+        p.feed(b"{\"a\": nope}");
+        assert!(p.failed());
+        // further bytes are ignored, not reinterpreted
+        p.feed(b"123");
+        let err = p.finish().unwrap_err();
+        assert!(err.msg.contains("expected 'null'"), "{err}");
+    }
+
+    #[test]
+    fn incremental_is_complete_tracks_top_level_value() {
+        let mut p = IncrementalParser::new();
+        p.feed(b"{\"a\":");
+        assert!(!p.is_complete());
+        p.feed(b"1}");
+        assert!(p.is_complete());
+        p.feed(b"  ");
+        assert!(p.is_complete());
+        assert_eq!(p.finish().unwrap().to_string(), "{\"a\":1}");
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Integration: the event-driven multiplexed front end over real
+//! sockets, served **search-only** (no compiled artifacts — these tests
+//! never skip).  Covers pipelining with id echo, 64 concurrent
+//! connections on a 2-thread executor pool, slow-loris isolation,
+//! oversized-frame containment on both front ends, and byte-identical
+//! responses between the reactor and the blocking server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sdtw_repro::coordinator::{SdtwService, SearchOptions, ServiceOptions};
+use sdtw_repro::server::{
+    Client, Reactor, ReactorOptions, Request, RequestId, Response, Server, DEFAULT_MAX_FRAME,
+};
+use sdtw_repro::util::rng::Xoshiro256;
+
+fn service(reflen: usize) -> Arc<SdtwService> {
+    let mut rng = Xoshiro256::new(42);
+    Arc::new(
+        SdtwService::start(
+            ServiceOptions { search_only: true, ..Default::default() },
+            rng.normal_vec_f32(reflen),
+        )
+        .unwrap(),
+    )
+}
+
+struct TestServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TestServer {
+    fn reactor(reflen: usize, opts: ReactorOptions) -> TestServer {
+        let r = Reactor::bind(service(reflen), "127.0.0.1:0", opts).unwrap();
+        let addr = r.local_addr().unwrap().to_string();
+        let stop = r.stop_flag();
+        TestServer { addr, stop, join: Some(std::thread::spawn(move || r.serve())) }
+    }
+
+    fn blocking(reflen: usize, max_frame: usize) -> TestServer {
+        let mut s = Server::bind(service(reflen), "127.0.0.1:0").unwrap();
+        s.set_max_frame(max_frame);
+        let addr = s.local_addr().unwrap().to_string();
+        let stop = s.stop_flag();
+        TestServer { addr, stop, join: Some(std::thread::spawn(move || s.serve())) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn raw_connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection unexpectedly");
+    line.trim_end_matches('\n').to_string()
+}
+
+#[test]
+fn pipelined_ids_echo_and_search_stays_bit_identical_to_serial() {
+    let ts =
+        TestServer::reactor(512, ReactorOptions { threads: 2, ..Default::default() });
+    let mut rng = Xoshiro256::new(7);
+    let q = rng.normal_vec_f32(32);
+    let opts = SearchOptions { k: 2, ..Default::default() };
+
+    // serial reference: one request at a time on its own connection
+    let mut serial = Client::connect(&ts.addr).unwrap();
+    let reference = serial.search(&q, opts).unwrap();
+
+    // pipelined: fire everything before reading anything
+    let mut piped = Client::connect(&ts.addr).unwrap();
+    let search = Request::Search { query: q.clone(), options: opts };
+    for i in 0..8i64 {
+        let req = if i % 2 == 0 { Request::Ping } else { search.clone() };
+        piped.send(&req, Some(&RequestId::Int(i))).unwrap();
+    }
+    for i in 0..8i64 {
+        let (id, resp) = piped.recv().unwrap();
+        assert_eq!(id, Some(RequestId::Int(i)), "responses in request order, ids echoed");
+        match resp {
+            Response::Pong => assert_eq!(i % 2, 0, "slot {i}"),
+            Response::Search(s) => {
+                assert_eq!(i % 2, 1, "slot {i}");
+                assert_eq!(s.hits.len(), reference.hits.len());
+                for (a, b) in s.hits.iter().zip(&reference.hits) {
+                    assert_eq!(a.start, b.start);
+                    assert_eq!(a.end, b.end);
+                    assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "bit-identical hits");
+                }
+                assert_eq!(s.windows, reference.windows);
+                assert_eq!(s.pruned_kim, reference.pruned_kim);
+                assert_eq!(s.pruned_keogh, reference.pruned_keogh);
+                assert_eq!(s.dp_full, reference.dp_full);
+            }
+            other => panic!("slot {i}: unexpected response {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn sixty_four_pipelined_connections_share_a_fixed_executor_pool() {
+    let ts = TestServer::reactor(
+        256,
+        ReactorOptions { threads: 2, max_inflight: 8, ..Default::default() },
+    );
+    let mut rng = Xoshiro256::new(11);
+    let q = rng.normal_vec_f32(24);
+    let opts = SearchOptions { k: 1, ..Default::default() };
+
+    let mut serial = Client::connect(&ts.addr).unwrap();
+    let reference = serial.search(&q, opts).unwrap();
+
+    let n = 64usize;
+    let mut conns: Vec<Client> =
+        (0..n).map(|_| Client::connect(&ts.addr).unwrap()).collect();
+    let search = Request::Search { query: q.clone(), options: opts };
+    for (c, client) in conns.iter_mut().enumerate() {
+        for i in 0..3i64 {
+            let req = match i {
+                0 => Request::Ping,
+                1 => search.clone(),
+                _ => Request::Info,
+            };
+            client.send(&req, Some(&RequestId::Int(c as i64 * 10 + i))).unwrap();
+        }
+    }
+    for (c, client) in conns.iter_mut().enumerate() {
+        for i in 0..3i64 {
+            let (id, resp) = client.recv().unwrap();
+            assert_eq!(id, Some(RequestId::Int(c as i64 * 10 + i)), "conn {c} slot {i}");
+            match (i, resp) {
+                (0, Response::Pong) => {}
+                (1, Response::Search(s)) => {
+                    assert_eq!(s.hits.len(), reference.hits.len(), "conn {c}");
+                    for (a, b) in s.hits.iter().zip(&reference.hits) {
+                        assert_eq!(
+                            (a.start, a.end, a.cost.to_bits()),
+                            (b.start, b.end, b.cost.to_bits()),
+                            "conn {c}: hits must be bit-identical to serial"
+                        );
+                    }
+                    assert_eq!(s.windows, reference.windows, "conn {c}");
+                }
+                (2, Response::Info { .. }) => {}
+                (slot, other) => panic!("conn {c} slot {slot}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    // the burst really multiplexed: pipelining observed, every
+    // connection still open and counted at the edge
+    let m = serial.metrics().unwrap();
+    assert!(m.requests_pipelined > 0, "pipelined bursts must be counted");
+    assert_eq!(m.conns_open, n as u64 + 1, "64 burst clients + the serial one");
+}
+
+#[test]
+fn a_slow_loris_sender_does_not_stall_other_connections() {
+    // one executor + one poller: if a half-open frame blocked anything,
+    // the fast client below could never complete
+    let ts =
+        TestServer::reactor(256, ReactorOptions { threads: 1, ..Default::default() });
+    let (mut slow, mut slow_reader) = raw_connect(&ts.addr);
+    slow.write_all(b"{\"id\":9,\"op\":\"pi").unwrap();
+    slow.flush().unwrap();
+
+    // with the slow frame still open, another connection is served
+    let mut fast = Client::connect(&ts.addr).unwrap();
+    for _ in 0..20 {
+        fast.ping().unwrap();
+    }
+
+    // the drip-fed frame still completes correctly afterwards
+    slow.write_all(b"ng\"}\n").unwrap();
+    slow.flush().unwrap();
+    assert_eq!(read_line(&mut slow_reader), "{\"id\":9,\"ok\":true,\"pong\":true}");
+}
+
+#[test]
+fn oversized_frames_error_and_the_connection_survives_on_both_edges() {
+    let reactor = TestServer::reactor(
+        256,
+        ReactorOptions { max_frame: 64, ..Default::default() },
+    );
+    let blocking = TestServer::blocking(256, 64);
+    for (edge, ts) in [("reactor", &reactor), ("blocking", &blocking)] {
+        let (mut stream, mut reader) = raw_connect(&ts.addr);
+        let flood = "x".repeat(200);
+        stream.write_all(flood.as_bytes()).unwrap();
+        stream.write_all(b"\n{\"id\":1,\"op\":\"ping\"}\n").unwrap();
+        stream.flush().unwrap();
+
+        let err = read_line(&mut reader);
+        assert!(err.contains("\"ok\":false"), "{edge}: oversized must error: {err}");
+        assert!(err.contains("max-frame"), "{edge}: error names the cap: {err}");
+        // the same connection keeps serving
+        assert_eq!(read_line(&mut reader), "{\"id\":1,\"ok\":true,\"pong\":true}", "{edge}");
+
+        let mut client = Client::connect(&ts.addr).unwrap();
+        let m = client.metrics().unwrap();
+        assert_eq!(m.frames_oversized, 1, "{edge}: counter surfaces on the wire");
+    }
+}
+
+#[test]
+fn both_front_ends_answer_byte_identically() {
+    let reactor = TestServer::reactor(512, ReactorOptions::default());
+    let blocking = TestServer::blocking(512, DEFAULT_MAX_FRAME);
+    // deterministic lines only (no latency fields): happy verbs with and
+    // without ids, wire garbage, a request-level error, a non-object
+    let lines = [
+        "{\"op\":\"ping\"}",
+        "{\"id\":7,\"op\":\"ping\"}",
+        "{\"id\":\"q-1\",\"op\":\"info\"}",
+        "not json at all",
+        "{\"op\":\"nope\"}",
+        "{\"id\":3}",
+        "[1,2,3]",
+    ];
+    let collect = |addr: &str| -> Vec<String> {
+        let (mut s, mut r) = raw_connect(addr);
+        lines
+            .iter()
+            .map(|l| {
+                s.write_all(l.as_bytes()).unwrap();
+                s.write_all(b"\n").unwrap();
+                s.flush().unwrap();
+                read_line(&mut r)
+            })
+            .collect()
+    };
+    let a = collect(&reactor.addr);
+    let b = collect(&blocking.addr);
+    assert_eq!(a, b, "the two front ends must answer byte-identically");
+    assert!(a[0].contains("pong"));
+    assert!(a[1].starts_with("{\"id\":7,"), "id leads the response: {}", a[1]);
+    assert!(a[3].contains("bad request"), "wire garbage: {}", a[3]);
+    assert!(
+        a[5].starts_with("{\"id\":3,\"ok\":false"),
+        "id echoes even on request-level errors: {}",
+        a[5]
+    );
+}

@@ -1,0 +1,308 @@
+//! Property tests for the wire layer: the [`FrameDecoder`] and the
+//! incremental JSON parser must be invariant to how the byte stream is
+//! chunked, and must agree exactly with the batch implementations
+//! (`BufRead::lines`-style splitting, [`Json::parse`],
+//! [`Request::parse`]) they replace.  Everything here is deterministic —
+//! seeded [`Xoshiro256`], no wall clock — and the iteration counts
+//! shrink under Miri so the suite stays in the CI lane's budget.
+
+use sdtw_repro::server::frame::{FrameDecoder, FrameEvent};
+use sdtw_repro::server::proto::{Request, RequestId};
+use sdtw_repro::util::json::{IncrementalParser, Json};
+use sdtw_repro::util::rng::Xoshiro256;
+
+/// A cap no generated line reaches, for tests about framing alone.
+const BIG: usize = 1 << 20;
+
+fn iters(full: usize, miri: usize) -> usize {
+    if cfg!(miri) {
+        miri
+    } else {
+        full
+    }
+}
+
+// ------------------------------------------------------------ generators
+
+fn random_request_line(rng: &mut Xoshiro256) -> String {
+    let qlen = 1 + rng.below(4) as usize;
+    let query: Vec<f32> = (0..qlen).map(|_| rng.next_f32()).collect();
+    let req = match rng.below(6) {
+        0 => Request::Ping,
+        1 => Request::Info,
+        2 => Request::Metrics { prometheus: rng.below(2) == 0 },
+        3 => Request::Trace { limit: rng.below(5) as usize },
+        4 => Request::Align { query, options: Default::default() },
+        _ => Request::Search { query, options: Default::default() },
+    };
+    let id = match rng.below(3) {
+        0 => None,
+        1 => Some(RequestId::Int(rng.below(1000) as i64)),
+        _ => Some(RequestId::Str(format!("client-{}", rng.below(100)))),
+    };
+    req.encode_with_id(id.as_ref())
+}
+
+/// One wire line: mostly real requests, plus garbage, blanks, and JSON
+/// that is valid but not a request.
+fn random_line(rng: &mut Xoshiro256) -> Vec<u8> {
+    match rng.below(8) {
+        0 => Vec::new(),
+        1 => b"   ".to_vec(),
+        2 => b"not json at all".to_vec(),
+        3 => b"{\"op\":\"ping\"  trailing".to_vec(),
+        4 => format!("[1,2,{}]", rng.below(100)).into_bytes(),
+        _ => random_request_line(rng).into_bytes(),
+    }
+}
+
+fn random_stream(rng: &mut Xoshiro256, lines: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    for _ in 0..lines {
+        out.extend_from_slice(&random_line(rng));
+        if rng.below(4) == 0 {
+            out.push(b'\r');
+        }
+        out.push(b'\n');
+    }
+    if rng.below(3) == 0 {
+        // a trailing partial frame that never completes
+        out.extend_from_slice(b"{\"op\":\"pi");
+    }
+    out
+}
+
+// ---------------------------------------------------------------- models
+
+/// What `BufRead::lines` would produce: split on `\n`, strip one
+/// trailing `\r`, drop the unterminated tail.
+fn model_lines(stream: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    for &b in stream {
+        if b == b'\n' {
+            if cur.last() == Some(&b'\r') {
+                cur.pop();
+            }
+            out.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(b);
+        }
+    }
+    out
+}
+
+#[derive(Debug, PartialEq)]
+enum Ev {
+    Line(Vec<u8>),
+    Oversized(u64),
+}
+
+/// Decode `stream` feeding chunks whose sizes come from `next_len`.
+fn decode(stream: &[u8], cap: usize, mut next_len: impl FnMut() -> usize) -> Vec<Ev> {
+    let mut d = FrameDecoder::new(cap);
+    let mut i = 0;
+    while i < stream.len() {
+        let n = next_len().clamp(1, stream.len() - i);
+        d.feed(&stream[i..i + n]);
+        i += n;
+    }
+    let mut out = Vec::new();
+    while let Some(e) = d.next_event() {
+        out.push(match e {
+            FrameEvent::Frame(f) => Ev::Line(f.bytes),
+            FrameEvent::Oversized { at } => Ev::Oversized(at),
+        });
+    }
+    out
+}
+
+fn chunkings(stream: &[u8], cap: usize, rng: &mut Xoshiro256) -> Vec<Vec<Ev>> {
+    let mut all = Vec::new();
+    for fixed in [1usize, 2, 3, 7, 11, stream.len().max(1)] {
+        all.push(decode(stream, cap, || fixed));
+    }
+    for _ in 0..3 {
+        let mut r = Xoshiro256::new(rng.next_u64());
+        all.push(decode(stream, cap, move || 1 + r.below(9) as usize));
+    }
+    all
+}
+
+// ----------------------------------------------------------------- tests
+
+#[test]
+fn any_chunking_yields_the_same_frames_as_whole_line_splitting() {
+    let mut rng = Xoshiro256::new(0xF7A3E);
+    for round in 0..iters(50, 5) {
+        let stream = random_stream(&mut rng, 1 + rng.below(12) as usize);
+        let expect: Vec<Ev> = model_lines(&stream).into_iter().map(Ev::Line).collect();
+        for (i, got) in chunkings(&stream, BIG, &mut rng).into_iter().enumerate() {
+            assert_eq!(got, expect, "round {round}, chunking {i}");
+        }
+    }
+}
+
+#[test]
+fn decoded_requests_are_bit_identical_to_request_parse() {
+    let mut rng = Xoshiro256::new(0xBEEF5);
+    for _ in 0..iters(40, 4) {
+        let stream = random_stream(&mut rng, 1 + rng.below(10) as usize);
+        let mut d = FrameDecoder::new(BIG);
+        let mut r = Xoshiro256::new(rng.next_u64());
+        let mut i = 0;
+        while i < stream.len() {
+            let n = (1 + r.below(9) as usize).min(stream.len() - i);
+            d.feed(&stream[i..i + n]);
+            i += n;
+        }
+        while let Some(e) = d.next_event() {
+            let FrameEvent::Frame(frame) = e else {
+                panic!("no oversized frames under BIG cap")
+            };
+            let line = frame.line().expect("generated streams are utf-8");
+            if line.trim().is_empty() {
+                continue;
+            }
+            let classic = Request::parse(line);
+            match frame.json {
+                Ok(v) => match (Request::from_json(&v), classic) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "line {line:?}"),
+                    (Err(a), Err(b)) => {
+                        assert_eq!(format!("{a:#}"), format!("{b:#}"), "line {line:?}")
+                    }
+                    (a, b) => panic!("divergence on {line:?}: {a:?} vs {b:?}"),
+                },
+                Err(_) => assert!(
+                    classic.is_err(),
+                    "incremental rejected what Request::parse accepts: {line:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_rejection_is_deterministic_across_chunkings() {
+    let cap = 48;
+    let mut rng = Xoshiro256::new(0x5EED0);
+    for round in 0..iters(40, 4) {
+        // interleave short lines with floods past the cap
+        let mut stream = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            if rng.below(2) == 0 {
+                stream.extend_from_slice(random_request_line(&mut rng).as_bytes());
+            } else {
+                let flood = cap + 1 + rng.below(2 * cap as u64) as usize;
+                stream.extend_from_slice(&vec![b'z'; flood]);
+            }
+            stream.push(b'\n');
+        }
+        let reference = decode(&stream, cap, || stream.len());
+        assert!(
+            reference.iter().any(|e| matches!(e, Ev::Oversized(_)))
+                || !stream.contains(&b'z'),
+            "round {round}: flood rounds must trip the cap"
+        );
+        for (i, got) in chunkings(&stream, cap, &mut rng).into_iter().enumerate() {
+            assert_eq!(got, reference, "round {round}, chunking {i}");
+        }
+    }
+}
+
+// ------------------------------------------- incremental JSON equivalence
+
+fn gen_json_string(rng: &mut Xoshiro256) -> String {
+    let mut s = String::from("\"");
+    for _ in 0..rng.below(8) {
+        match rng.below(8) {
+            0 => s.push_str("\\\""),
+            1 => s.push_str("\\\\"),
+            2 => s.push_str("\\n"),
+            3 => s.push_str("\\u0041"),
+            4 => s.push('é'),
+            _ => s.push((b'a' + rng.below(26) as u8) as char),
+        }
+    }
+    s.push('"');
+    s
+}
+
+fn gen_json(rng: &mut Xoshiro256, depth: usize) -> String {
+    let top = if depth == 0 { 5 } else { 7 };
+    match rng.below(top) {
+        0 => "null".to_string(),
+        1 => if rng.below(2) == 0 { "true" } else { "false" }.to_string(),
+        2 => (rng.next_u64() as i64 % 100_000).to_string(),
+        3 => format!("{:?}", rng.uniform(-1e6, 1e6)),
+        4 => gen_json_string(rng),
+        5 => {
+            let items: Vec<String> =
+                (0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect();
+            format!("[{}]", items.join(","))
+        }
+        _ => {
+            let items: Vec<String> = (0..rng.below(4))
+                .map(|i| format!("\"k{i}\":{}", gen_json(rng, depth - 1)))
+                .collect();
+            format!("{{{}}}", items.join(","))
+        }
+    }
+}
+
+/// Random corruption so the error side of the contract is exercised too.
+fn corrupt(doc: &str, rng: &mut Xoshiro256) -> String {
+    let mut bytes = doc.as_bytes().to_vec();
+    if bytes.is_empty() {
+        return "x".to_string();
+    }
+    match rng.below(3) {
+        0 => {
+            bytes.truncate(rng.below(bytes.len() as u64) as usize);
+        }
+        1 => {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes.remove(i);
+        }
+        _ => {
+            let junk = b"{}[],:\"truefalse019.eE+- x";
+            let i = rng.below(bytes.len() as u64 + 1) as usize;
+            bytes.insert(i, junk[rng.below(junk.len() as u64) as usize]);
+        }
+    }
+    // corruption may split a multi-byte char; those streams are exercised
+    // at the frame layer, while Json::parse takes &str — keep utf-8 here
+    String::from_utf8(bytes).unwrap_or_else(|_| "\"\\u12\"".to_string())
+}
+
+fn assert_incremental_equiv(doc: &str, rng: &mut Xoshiro256) {
+    let reference = Json::parse(doc);
+    for _ in 0..3 {
+        let mut p = IncrementalParser::new();
+        let bytes = doc.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            let n = (1 + rng.below(7) as usize).min(bytes.len() - i);
+            p.feed(&bytes[i..i + n]);
+            i += n;
+        }
+        match (&reference, p.finish()) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.to_string(), b.to_string(), "value drift on {doc:?}")
+            }
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!("divergence on {doc:?}: recursive {a:?} vs incremental {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn incremental_parser_matches_recursive_on_random_documents() {
+    let mut rng = Xoshiro256::new(0xACE01);
+    for _ in 0..iters(120, 8) {
+        let doc = gen_json(&mut rng, 4);
+        assert_incremental_equiv(&doc, &mut rng);
+        let bad = corrupt(&doc, &mut rng);
+        assert_incremental_equiv(&bad, &mut rng);
+    }
+}
