@@ -8,17 +8,31 @@ What is enforced, always:
   * every current run that carries a ``bit_identical`` field has it true
     (the benches assert this in-process; the field is the audit trail).
 
-What is enforced only for non-provisional baseline entries:
-  * current ms_per_search must not exceed baseline * (1 + threshold%).
+Timing gates come in two forms, chosen per baseline entry:
+
+  * **ratio gate** (``anchor_config`` + ``max_ratio``): the entry's
+    ms_per_search divided by its anchor config's ms_per_search (same
+    bench + family, same run) must not exceed ``max_ratio``.  Ratios are
+    machine-independent — they hold on any runner without ever recording
+    absolute timings off-CI — so they are armed from day one.  This is
+    how the ablation benches encode "the optimized config must actually
+    be faster": e.g. the banded search at M/8 must run at <= 0.9x of the
+    unconstrained anchor.
+  * **absolute gate** (``ms_per_search`` with no ``provisional`` flag):
+    current ms_per_search must not exceed baseline * (1 + threshold%).
     Provisional entries (placeholder timings recorded off-CI) skip the
-    timing gate but still pin the key set.
+    timing comparison but still pin the key set.
 
-A markdown trajectory table goes to $GITHUB_STEP_SUMMARY when set (and
-always to stdout), so the perf trend is visible per push.
+Entries with neither gate (anchors themselves) just pin the key set.
 
-``--selftest`` injects a synthetic 2x slowdown (current vs a de-
-provisionalized baseline derived from the current run itself) and exits
-0 only if the gate fires — proof the regression check can actually fail.
+A markdown dashboard — one table per bench, rows grouped by family —
+goes to $GITHUB_STEP_SUMMARY when set (and always to stdout), so the
+perf trend is visible per push.
+
+``--selftest`` injects synthetic regressions (a 2x slowdown against a
+derived absolute baseline, and impossible ratio gates against derived
+anchors) and exits 0 only if every gate fires — proof the regression
+check can actually fail.
 """
 
 import argparse
@@ -43,38 +57,109 @@ def load_runs(path):
     return doc, by_key
 
 
+def _ms(run):
+    v = run.get("ms_per_search") if run else None
+    return v if isinstance(v, (int, float)) and v > 0 else None
+
+
 def compare(baseline, current, threshold_pct):
-    """Return (rows, failures). rows: (key, base_ms, cur_ms, delta_pct, status)."""
+    """Return (rows, failures).
+
+    Each row is a dict: key, gate (human-readable), base_ms, cur_ms,
+    metric (ratio or delta, rendered), status.
+    """
     rows, failures = [], []
     for k, base in sorted(baseline.items()):
+        row = {
+            "key": k,
+            "gate": "-",
+            "base_ms": base.get("ms_per_search"),
+            "cur_ms": None,
+            "metric": "-",
+            "status": "",
+        }
         cur = current.get(k)
         if cur is None:
             failures.append(f"missing bench config in current run: {k}")
-            rows.append((k, base.get("ms_per_search"), None, None, "MISSING"))
+            row["status"] = "MISSING"
+            rows.append(row)
             continue
-        base_ms = base.get("ms_per_search")
         cur_ms = cur.get("ms_per_search")
+        row["cur_ms"] = cur_ms
         if cur.get("bit_identical") is False:
             failures.append(f"bit_identical=false for {k}")
-            rows.append((k, base_ms, cur_ms, None, "NOT BIT-IDENTICAL"))
+            row["status"] = "NOT BIT-IDENTICAL"
+            rows.append(row)
             continue
+
+        max_ratio = base.get("max_ratio")
+        anchor_cfg = base.get("anchor_config")
+        if isinstance(max_ratio, (int, float)) and anchor_cfg:
+            # machine-independent ratio gate against the anchor config
+            # measured in the *same* run
+            row["gate"] = f"<= {max_ratio:.2f}x {anchor_cfg}"
+            anchor_ms = _ms(current.get((k[0], k[1], anchor_cfg)))
+            if anchor_ms is None or _ms(cur) is None:
+                failures.append(
+                    f"ratio gate for {k}: anchor {anchor_cfg!r} or entry "
+                    f"has no usable timing in the current run"
+                )
+                row["status"] = "NO ANCHOR"
+                rows.append(row)
+                continue
+            ratio = cur_ms / anchor_ms
+            row["metric"] = f"{ratio:.2f}x"
+            if ratio > max_ratio:
+                failures.append(
+                    f"regression: {k} ran at {ratio:.2f}x of {anchor_cfg!r} "
+                    f"(gate <= {max_ratio:.2f}x)"
+                )
+                row["status"] = "REGRESSION"
+            else:
+                row["status"] = "ok"
+            rows.append(row)
+            continue
+
         if base.get("provisional"):
-            rows.append((k, base_ms, cur_ms, None, "provisional"))
+            row["status"] = "provisional"
+            rows.append(row)
             continue
+
+        base_ms = base.get("ms_per_search")
         if not isinstance(base_ms, (int, float)) or base_ms <= 0:
-            rows.append((k, base_ms, cur_ms, None, "no baseline ms"))
+            # no timing gate: the entry pins the key set (anchors land here)
+            row["status"] = "anchor"
+            rows.append(row)
+            continue
+        row["gate"] = f"<= +{threshold_pct:.0f}%"
+        if not isinstance(cur_ms, (int, float)):
+            failures.append(f"no current timing for {k}")
+            row["status"] = "NO TIMING"
+            rows.append(row)
             continue
         delta_pct = 100.0 * (cur_ms - base_ms) / base_ms
+        row["metric"] = f"{delta_pct:+.1f}%"
         if cur_ms > base_ms * (1.0 + threshold_pct / 100.0):
             failures.append(
                 f"regression: {k} {base_ms:.3f} ms -> {cur_ms:.3f} ms "
                 f"(+{delta_pct:.1f}% > {threshold_pct:.0f}% threshold)"
             )
-            rows.append((k, base_ms, cur_ms, delta_pct, "REGRESSION"))
+            row["status"] = "REGRESSION"
         else:
-            rows.append((k, base_ms, cur_ms, delta_pct, "ok"))
+            row["status"] = "ok"
+        rows.append(row)
+
     for k in sorted(set(current) - set(baseline)):
-        rows.append((k, None, current[k].get("ms_per_search"), None, "new (no baseline)"))
+        rows.append(
+            {
+                "key": k,
+                "gate": "-",
+                "base_ms": None,
+                "cur_ms": current[k].get("ms_per_search"),
+                "metric": "-",
+                "status": "new (no baseline)",
+            }
+        )
     return rows, failures
 
 
@@ -83,30 +168,47 @@ def fmt_ms(v):
 
 
 def render_table(rows, threshold_pct):
+    """Markdown dashboard: one table per bench, rows grouped by family."""
     lines = [
-        f"### Bench trajectory (gate: +{threshold_pct:.0f}% on non-provisional entries)",
+        f"### Bench dashboard (absolute gate: +{threshold_pct:.0f}%; "
+        "ratio gates as annotated per row)",
         "",
-        "| bench | family | config | baseline ms | current ms | delta | status |",
-        "|---|---|---|---:|---:|---:|---|",
     ]
-    for (bench, family, config), base_ms, cur_ms, delta, status in rows:
-        delta_s = f"{delta:+.1f}%" if isinstance(delta, (int, float)) else "-"
-        lines.append(
-            f"| {bench} | {family} | {config} | {fmt_ms(base_ms)} | "
-            f"{fmt_ms(cur_ms)} | {delta_s} | {status} |"
-        )
+    benches = []
+    for row in rows:
+        if row["key"][0] not in benches:
+            benches.append(row["key"][0])
+    for bench in benches:
+        lines += [
+            f"#### `{bench}`",
+            "",
+            "| family | config | gate | current ms | vs gate | status |",
+            "|---|---|---|---:|---:|---|",
+        ]
+        for row in rows:
+            if row["key"][0] != bench:
+                continue
+            _, family, config = row["key"]
+            lines.append(
+                f"| {family} | {config} | {row['gate']} | "
+                f"{fmt_ms(row['cur_ms'])} | {row['metric']} | {row['status']} |"
+            )
+        lines.append("")
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    gated = sum(1 for r in rows if r["gate"] != "-")
+    lines.append(f"{len(rows)} configs, {gated} timing-gated, {ok} passing gates.")
     return "\n".join(lines) + "\n"
 
 
 def selftest(current, threshold_pct):
-    """Derive a non-provisional baseline from the current run at half the
-    measured time (a synthetic 2x slowdown) and require the gate to fire
-    for every run with a usable timing."""
+    """Inject regressions both gates must catch: an absolute baseline at
+    half the measured time (a synthetic 2x slowdown), and ratio gates at
+    half each config's measured ratio against a same-family anchor."""
     synthetic = {}
     timed = 0
     for k, run in current.items():
-        ms = run.get("ms_per_search")
-        if isinstance(ms, (int, float)) and ms > 0:
+        ms = _ms(run)
+        if ms is not None:
             synthetic[k] = {"ms_per_search": ms / 2.0}
             timed += 1
     if timed == 0:
@@ -117,11 +219,43 @@ def selftest(current, threshold_pct):
     if len(regressions) != timed:
         print(
             f"selftest FAILED: injected 2x slowdown on {timed} runs but the "
-            f"gate fired only {len(regressions)} times",
+            f"absolute gate fired only {len(regressions)} times",
             file=sys.stderr,
         )
         return 1
-    print(f"selftest OK: injected 2x slowdown tripped the gate on all {timed} runs")
+
+    # ratio gates: anchor each family group's configs at its first config
+    # with an impossible max_ratio (half the observed ratio)
+    groups = {}
+    for k, run in sorted(current.items()):
+        ms = _ms(run)
+        if ms is not None:
+            groups.setdefault((k[0], k[1]), []).append((k, ms))
+    ratio_baseline, expect = {}, 0
+    for items in groups.values():
+        if len(items) < 2:
+            continue
+        (anchor_k, anchor_ms) = items[0]
+        for (k, ms) in items[1:]:
+            ratio_baseline[k] = {
+                "anchor_config": anchor_k[2],
+                "max_ratio": (ms / anchor_ms) / 2.0,
+            }
+            expect += 1
+    if expect:
+        _, failures = compare(ratio_baseline, current, threshold_pct)
+        fired = [f for f in failures if f.startswith("regression")]
+        if len(fired) != expect:
+            print(
+                f"selftest FAILED: injected impossible ratios on {expect} runs "
+                f"but the ratio gate fired only {len(fired)} times",
+                file=sys.stderr,
+            )
+            return 1
+    print(
+        f"selftest OK: 2x slowdown tripped the absolute gate on all {timed} "
+        f"runs and impossible ratios tripped the ratio gate on all {expect}"
+    )
     return 0
 
 
@@ -159,7 +293,7 @@ def main():
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)
         return 1
-    print(f"bench check OK: {len(rows)} configs within +{threshold:.0f}%")
+    print(f"bench check OK: {len(rows)} configs clean")
     return 0
 
 

@@ -1,0 +1,432 @@
+"""float32 models of the band-constrained search (rust/src/dtw/banded.rs,
+rust/src/search/lower_bounds.rs), cross-checked in pure Python.
+
+Two layers, mirroring what the Rust property suites enforce:
+  * kernel parity — bit-exact float32 models of the anchored banded
+    recurrence (``sdtw_banded_anchored_into``), the two-pass span-scan
+    variant (``ScanKernel::run_banded``), and the lockstep multi-lane
+    variant (``LaneKernel``) must agree result-for-result, including
+    band-infeasible lanes (``None``) and the early-abandon threshold —
+    the claim ``rust/tests/prop_banded.rs`` makes on the Rust side.
+  * admissibility — the banded bounds chain
+    ``lb_kim_banded <= lb_keogh_banded <= anchored banded cost`` on
+    random data, with the Sakoe-Chiba reference envelope; this is the
+    invariant the banded prefilter's losslessness rests on.
+
+Everything here accumulates in float32 (one rounding per add, like the
+Rust kernels) so "equal" can mean equal to the last bit, not approx.
+"""
+
+import numpy as np
+import pytest
+
+f32 = np.float32
+INF = f32(np.inf)
+
+
+def dist_sq(a, b):
+    d = f32(a) - f32(b)
+    return f32(d * d)
+
+
+def dist_abs(a, b):
+    return f32(abs(f32(a) - f32(b)))
+
+
+DISTS = {"sq": dist_sq, "abs": dist_abs}
+
+
+def anchored(q, w, band, tau, dist):
+    """Model of ``dtw::sdtw_banded_anchored_into``: path anchored at
+    window column 0 (monotone cumulative run over the first band+1
+    columns), every cell within ``|i-j| <= band``, free end.  Returns
+    ``(cost, end)`` or ``None`` (infeasible / abandoned / over tau)."""
+    m, n = len(q), len(w)
+    if n + band < m:
+        return None  # band-infeasible: no monotone path fits
+    width = min(n, m + band)
+    prev = np.full(width, INF, f32)
+    cur = np.full(width, INF, f32)
+    acc = f32(0.0)
+    for j in range(min(width, band + 1)):
+        acc = f32(acc + dist(q[0], w[j]))
+        prev[j] = acc
+    if prev[0] > tau:
+        return None
+    for i in range(1, m):
+        lo, hi = max(0, i - band), min(i + band + 1, width)
+        cur[:] = INF
+        row_min = INF
+        for j in range(lo, hi):
+            b = prev[j]
+            if j > 0:
+                b = min(b, cur[j - 1], prev[j - 1])
+            cur[j] = f32(b + dist(q[i], w[j]))
+            row_min = min(row_min, cur[j])
+        if row_min > tau:
+            return None
+        prev, cur = cur, prev
+    best, pos = INF, 0
+    for j in range(width):
+        if prev[j] < best:
+            best, pos = prev[j], j
+    if best > tau:
+        return None
+    return (best, pos)
+
+
+def scan_banded(q, w, band, tau, dist, seg):
+    """Model of ``ScanKernel``'s banded path: per row, (1) compute each
+    cell's best-of-{above, diag} + cost, then (2) resolve the horizontal
+    dependency with a segmented prefix pass of width ``seg`` followed by
+    a cross-segment fixup — same float32 operation order as the Rust
+    two-pass scan, so results are bit-identical to ``anchored``."""
+    m, n = len(q), len(w)
+    if n + band < m:
+        return None
+    width = min(n, m + band)
+    row = np.full(width, INF, f32)
+    c = np.full(width, INF, f32)
+    a = np.full(width, INF, f32)
+    local = np.full(width, INF, f32)
+    acc = f32(0.0)
+    for j in range(min(width, band + 1)):
+        acc = f32(acc + dist(q[0], w[j]))
+        row[j] = acc
+    if row[0] > tau:
+        return None
+    for i in range(1, m):
+        lo, hi = max(0, i - band), min(i + band + 1, width)
+        for j in range(lo, hi):
+            c[j] = dist(q[i], w[j])
+            b = row[j]
+            if j > 0:
+                b = min(b, row[j - 1])
+            a[j] = f32(b + c[j])
+        base = lo
+        while base < hi:
+            seg_hi = min(base + seg, hi)
+            d = INF
+            for j in range(base, seg_hi):
+                d = min(a[j], f32(c[j] + d))
+                local[j] = d
+            base = seg_hi
+        row_min = INF
+        first_hi = min(lo + seg, hi)
+        for j in range(lo, first_hi):
+            row[j] = local[j]
+            row_min = min(row_min, row[j])
+        for j in range(first_hi, hi):
+            row[j] = min(local[j], f32(c[j] + row[j - 1]))
+            row_min = min(row_min, row[j])
+        if row_min > tau:
+            return None
+    best, pos = INF, 0
+    for j in range(max(0, m - 1 - band), width):
+        if row[j] < best:
+            best, pos = row[j], j
+    if best > tau:
+        return None
+    return (best, pos)
+
+
+def lane_banded(lanes, band, tau, dist):
+    """Model of ``LaneKernel``'s banded path: ragged lanes advanced in
+    lockstep over shared column-major buffers (pads at +inf), each lane
+    extracting its final row when its own query ends, with the moving
+    band's trailing edge re-cleared per row."""
+    l = len(lanes)
+    m_max = max(len(q) for q, _ in lanes)
+    n_max = max(len(w) for _, w in lanes)
+    qbuf = np.zeros((m_max, l), f32)
+    wbuf = np.full((n_max, l), INF, f32)
+    for k, (q, w) in enumerate(lanes):
+        qbuf[: len(q), k] = q
+        wbuf[: len(w), k] = w
+    prev = np.full((n_max, l), INF, f32)
+    cur = np.full((n_max, l), INF, f32)
+    out = [None] * l
+    live = [len(w) + band >= len(q) for q, w in lanes]
+    if not any(live):
+        return out
+    widths = [min(len(w), len(q) + band) for q, w in lanes]
+    acc = np.zeros(l, f32)
+    for j in range(min(band + 1, n_max)):
+        for k in range(l):
+            acc[k] = f32(acc[k] + dist(qbuf[0, k], wbuf[j, k]))
+            prev[j, k] = acc[k]
+    for k, (q, _) in enumerate(lanes):
+        if not live[k]:
+            continue
+        if prev[0, k] > tau:
+            live[k] = False
+        elif len(q) == 1:
+            out[k] = _extract(prev, k, 0, widths[k], tau)
+            live[k] = False
+    for i in range(1, m_max):
+        if not any(live):
+            break
+        lo, hi = max(0, i - band), min(i + band + 1, n_max)
+        if lo >= hi:
+            break
+        if lo >= 1:
+            cur[lo - 1, :] = INF  # the band's trailing edge moved past
+        row_min = np.full(l, INF, f32)
+        for j in range(lo, hi):
+            for k in range(l):
+                b = prev[j, k]
+                if j > 0:
+                    b = min(b, cur[j - 1, k], prev[j - 1, k])
+                v = f32(b + dist(qbuf[i, k], wbuf[j, k]))
+                cur[j, k] = v
+                row_min[k] = min(row_min[k], v)
+        for k, (q, _) in enumerate(lanes):
+            if not live[k]:
+                continue
+            if row_min[k] > tau:
+                live[k] = False
+            elif i + 1 == len(q):
+                out[k] = _extract(cur, k, lo, widths[k], tau)
+                live[k] = False
+        prev, cur = cur, prev
+    return out
+
+
+def _extract(row, k, lo, hi, tau):
+    best, pos = INF, 0
+    for j in range(lo, hi):
+        if row[j, k] < best:
+            best, pos = row[j, k], j
+    if best > tau:
+        return None
+    return (best, pos)
+
+
+def _eq(a, b):
+    if a is None or b is None:
+        return a is None and b is None
+    return a[0].tobytes() == b[0].tobytes() and a[1] == b[1]
+
+
+class TestBandedKernelParity:
+    """Scan and lane variants == the anchored oracle, to the bit."""
+
+    def test_scan_and_lane_match_anchored_oracle(self):
+        rng = np.random.default_rng(7)
+        for trial in range(250):
+            m = int(rng.integers(1, 12))
+            n = int(rng.integers(1, 20))
+            band = int(rng.integers(0, 14))
+            seg = int(rng.integers(1, 7))
+            dist = dist_sq if trial % 3 else dist_abs
+            q = rng.normal(size=m).astype(f32)
+            w = rng.normal(size=n).astype(f32)
+            tau = INF if trial % 4 == 0 else f32(abs(rng.normal()) * m)
+            want = anchored(q, w, band, tau, dist)
+            assert _eq(scan_banded(q, w, band, tau, dist, seg), want), (
+                trial, m, n, band, seg,
+            )
+            assert _eq(lane_banded([(q, w)], band, tau, dist)[0], want), (
+                trial, m, n, band,
+            )
+
+    def test_ragged_multilane_batches(self):
+        rng = np.random.default_rng(11)
+        for trial in range(60):
+            band = int(rng.integers(0, 10))
+            lanes = [
+                (
+                    rng.normal(size=int(rng.integers(1, 9))).astype(f32),
+                    rng.normal(size=int(rng.integers(1, 16))).astype(f32),
+                )
+                for _ in range(int(rng.integers(2, 6)))
+            ]
+            tau = INF if trial % 3 == 0 else f32(abs(rng.normal()) * 6)
+            got = lane_banded(lanes, band, tau, dist_sq)
+            for k, (q, w) in enumerate(lanes):
+                assert _eq(got[k], anchored(q, w, band, tau, dist_sq)), (
+                    trial, k, band,
+                )
+
+    def test_infeasible_band_is_none(self):
+        q = np.ones(6, dtype=f32)
+        w = np.zeros(3, dtype=f32)
+        assert anchored(q, w, 2, INF, dist_sq) is None  # 3 + 2 < 6
+        assert scan_banded(q, w, 2, INF, dist_sq, 4) is None
+        assert lane_banded([(q, w)], 2, INF, dist_sq) == [None]
+        assert anchored(q, w, 3, INF, dist_sq) is not None  # 3 + 3 >= 6
+
+    def test_global_banded_is_min_over_anchored_starts(self):
+        # the stride-1 decomposition the search engine relies on: global
+        # banded sDTW == best anchored alignment over every start's tail
+        # (strict < in start order keeps the earliest start on ties)
+        rng = np.random.default_rng(13)
+        for _ in range(30):
+            m = int(rng.integers(2, 8))
+            n = int(rng.integers(m, 30))
+            band = int(rng.integers(0, 8))
+            q = rng.normal(size=m).astype(f32)
+            r = rng.normal(size=n).astype(f32)
+            per_start = [anchored(q, r[s:], band, INF, dist_sq) for s in range(n)]
+            best = None
+            for s, a in enumerate(per_start):
+                if a is not None and (best is None or a[0] < best[0]):
+                    best = (a[0], s + a[1])
+            # every feasible start is >= the min, and the min is attained
+            assert best is not None
+            for a in per_start:
+                if a is not None:
+                    assert a[0] >= best[0]
+
+
+class TestBandCoversMatrix:
+    """A band wide enough to cover the whole m x n matrix (band >=
+    max(m, n)) degenerates to the *anchored* unconstrained recurrence:
+    same cells, same order, bit-identical.  (The engine-level identity —
+    ``--band >= window`` serving the unconstrained free-start search —
+    is an options-layer resolution, tested in rust/tests/prop_banded.rs;
+    the kernel itself is always anchored.)"""
+
+    @staticmethod
+    def _anchored_unconstrained(q, w, dist):
+        m, n = len(q), len(w)
+        prev = np.zeros(n, f32)
+        acc = f32(0.0)
+        for j in range(n):  # row 0: the anchored monotone run
+            acc = f32(acc + dist(q[0], w[j]))
+            prev[j] = acc
+        cur = np.zeros(n, f32)
+        for i in range(1, m):
+            for j in range(n):
+                b = prev[j]
+                if j > 0:
+                    b = min(b, cur[j - 1], prev[j - 1])
+                cur[j] = f32(b + dist(q[i], w[j]))
+            prev, cur = cur, prev
+        best, pos = INF, 0
+        for j in range(n):
+            if prev[j] < best:
+                best, pos = prev[j], j
+        return (best, pos)
+
+    def test_covering_band_bit_identical_to_anchored_unconstrained(self):
+        rng = np.random.default_rng(17)
+        for _ in range(80):
+            m = int(rng.integers(1, 10))
+            n = int(rng.integers(1, 16))
+            q = rng.normal(size=m).astype(f32)
+            w = rng.normal(size=n).astype(f32)
+            want = self._anchored_unconstrained(q, w, dist_sq)
+            for band in (max(m, n), max(m, n) + 1, max(m, n) + 97):
+                got = anchored(q, w, band, INF, dist_sq)
+                assert got is not None
+                assert _eq(got, want), (m, n, band)
+
+
+class TestBandedLowerBounds:
+    """Models of ``lb_kim_banded`` / ``lb_keogh_banded_verdict``: row 0
+    is the *exact* anchored cost ``d(q[0], r[s])`` (the anchored path
+    must start there), later rows pay the envelope gap at the clipped
+    reference position ``min(s+i, n-1)``.  Kim's terms are a subset of
+    Keogh's, and both chain below the anchored banded cost."""
+
+    @staticmethod
+    def _envelope(x, band):
+        n = len(x)
+        lo = np.empty(n, f32)
+        hi = np.empty(n, f32)
+        for i in range(n):
+            a, b = max(0, i - band), min(n, i + band + 1)
+            lo[i] = x[a:b].min()
+            hi[i] = x[a:b].max()
+        return lo, hi
+
+    @staticmethod
+    def _gap(q, lo, hi, dist):
+        c = min(max(q, lo), hi)
+        return dist(q, c)
+
+    @classmethod
+    def _keogh(cls, q, rlo, rhi, r, s, dist):
+        n = len(r)
+        total = dist(q[0], r[s])
+        for i in range(1, len(q)):
+            t = min(s + i, n - 1)
+            total = f32(total + cls._gap(q[i], rlo[t], rhi[t], dist))
+        return total
+
+    @classmethod
+    def _kim(cls, q, rlo, rhi, r, s, dist):
+        first = dist(q[0], r[s])
+        if len(q) == 1:
+            return first
+        t = min(s + len(q) - 1, len(r) - 1)
+        return f32(first + cls._gap(q[-1], rlo[t], rhi[t], dist))
+
+    def test_chain_kim_keogh_anchored_cost(self):
+        rng = np.random.default_rng(19)
+        checked = 0
+        for trial in range(150):
+            m = int(rng.integers(1, 9))
+            n = int(rng.integers(4, 32))
+            band = int(rng.integers(0, 7))
+            dist = dist_sq if trial % 2 else dist_abs
+            q = rng.normal(size=m).astype(f32)
+            r = rng.normal(size=n).astype(f32)
+            rlo, rhi = self._envelope(r, band)
+            for s in range(n):
+                a = anchored(q, r[s:], band, INF, dist)
+                if a is None:
+                    continue  # band-infeasible start: no cost to bound
+                kim = self._kim(q, rlo, rhi, r, s, dist)
+                keogh = self._keogh(q, rlo, rhi, r, s, dist)
+                assert kim <= keogh, (trial, s, band)
+                assert keogh <= a[0], (trial, s, band, float(keogh), float(a[0]))
+                checked += 1
+        assert checked > 1000  # the sweep actually exercised the chain
+
+    def test_kim_exact_for_single_element_query(self):
+        # M == 1: the anchored cost IS d(q[0], r[s]); kim must equal it
+        rng = np.random.default_rng(23)
+        q = rng.normal(size=1).astype(f32)
+        r = rng.normal(size=12).astype(f32)
+        rlo, rhi = self._envelope(r, 3)
+        for s in range(len(r)):
+            a = anchored(q, r[s:], 3, INF, dist_sq)
+            kim = self._kim(q, rlo, rhi, r, s, dist_sq)
+            assert kim.tobytes() == a[0].tobytes()
+
+    def test_row0_is_exact_not_an_envelope_gap(self):
+        # the anchored path MUST start at (0, s): using the envelope gap
+        # there (which can be 0 when r[s] is inside the envelope) would
+        # weaken the bound — the exact term is strictly stronger AND
+        # still admissible because the row-0 run pays d(q[0], r[s])
+        # before anything else
+        q = np.array([5.0], dtype=f32)
+        r = np.array([0.0, 5.0, 0.0], dtype=f32)
+        rlo, rhi = self._envelope(r, 1)
+        # at s=0 the envelope [0,5] contains q[0], so a gap-based row 0
+        # would claim 0; the exact model pays d(5,0)=25 — and so does the
+        # anchored DP (its cumulative row-0 run cannot shed r[0])
+        assert float(self._kim(q, rlo, rhi, r, 0, dist_sq)) == 25.0
+        a0 = anchored(q, r[0:], 1, INF, dist_sq)
+        assert float(a0[0]) == 25.0  # bound is tight here
+        # anchoring one column later IS free: d(5,5) = 0
+        a1 = anchored(q, r[1:], 1, INF, dist_sq)
+        assert float(a1[0]) == 0.0
+
+    def test_envelope_narrows_with_band(self):
+        # tighter band -> tighter envelope -> never-weaker Keogh bound
+        rng = np.random.default_rng(29)
+        q = rng.normal(size=6).astype(f32)
+        r = rng.normal(size=24).astype(f32)
+        wide = self._envelope(r, 8)
+        tight = self._envelope(r, 2)
+        for s in range(len(r)):
+            kb_wide = self._keogh(q, wide[0], wide[1], r, s, dist_sq)
+            kb_tight = self._keogh(q, tight[0], tight[1], r, s, dist_sq)
+            assert kb_tight >= kb_wide - f32(1e-6), s
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,177 @@
+//! Ablation: band-constrained search — the Sakoe-Chiba radius swept from
+//! unconstrained (band = 0, i.e. ∞) down through M/2, M/4, M/8.  Narrower
+//! bands shrink both what the DP touches (|i-j| <= band cells per
+//! survivor) and what the prefilter must bound (the banded envelope is
+//! tighter), so ms/search should fall monotonically as the band narrows
+//! while hits stay bit-identical to the *banded* brute force at the same
+//! radius (the banded cascade is lossless w.r.t. its own semantics —
+//! pruning never approximates).
+//!
+//!   cargo bench --bench banded_search
+//!   SDTW_BENCH_QUICK=1 cargo bench --bench banded_search        # fast run
+//!   SDTW_BENCH_JSON=out.jsonl ... cargo bench --bench banded_search
+//!       # machine-readable rows for the CI bench lane (BENCH_ci.json)
+//!
+//! Workloads are the planted families from `search_cascade`: a drifting
+//! walk and Cylinder-Bell-Funnel, both with warped copies of the query
+//! planted — warps are modest, so even M/8 keeps the planted sites.
+
+use std::sync::Arc;
+
+use sdtw_repro::bench_harness::{banner, emit_json, Table};
+use sdtw_repro::datagen::{planted_workload, Family};
+use sdtw_repro::dtw::{sdtw_banded_anchored_into, Dist};
+use sdtw_repro::normalize::znormed;
+use sdtw_repro::search::{
+    select_topk, CascadeOpts, CascadeStats, Hit, SearchEngine,
+};
+use sdtw_repro::util::json::Json;
+use sdtw_repro::util::rng::Xoshiro256;
+
+const REFLEN: usize = 8192;
+const QLEN: usize = 128;
+const WINDOW: usize = QLEN + QLEN / 2;
+const K: usize = 6;
+const EXCLUSION: usize = WINDOW / 2;
+const PLANTS: usize = 6;
+const SEED: u64 = 42;
+
+fn workload(family: Family, seed: u64) -> (Arc<Vec<f32>>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let (reference, query, _) =
+        planted_workload(family, REFLEN, QLEN, PLANTS, 0.05, &mut rng);
+    (Arc::new(znormed(&reference)), znormed(&query))
+}
+
+/// The oracle at this radius: anchored banded DP on every candidate
+/// window (band = 0 falls back to the unconstrained brute force, which
+/// `CascadeOpts::BRUTE` already is).
+fn banded_brute(engine: &SearchEngine, query: &[f32], band: usize) -> Vec<Hit> {
+    if band == 0 {
+        return engine
+            .search_opts(query, K, EXCLUSION, CascadeOpts::BRUTE, 1)
+            .expect("brute")
+            .hits;
+    }
+    let index = engine.index();
+    let (mut prev, mut cur) = (Vec::new(), Vec::new());
+    let mut hits = Vec::new();
+    for t in 0..index.candidates() {
+        if let Some(m) = sdtw_banded_anchored_into(
+            query,
+            index.window_slice(t),
+            band,
+            f32::INFINITY,
+            Dist::Sq,
+            &mut prev,
+            &mut cur,
+        ) {
+            let start = index.start(t);
+            hits.push(Hit { start, end: start + m.end, cost: m.cost });
+        }
+    }
+    select_topk(&hits, K, EXCLUSION)
+}
+
+fn main() -> anyhow::Result<()> {
+    let protocol = banner(
+        "banded_search",
+        &format!("N={REFLEN} M={QLEN} window={WINDOW} K={K} exclusion={EXCLUSION} seed={SEED}"),
+    );
+
+    let configs: [(&str, usize); 4] = [
+        ("band ∞ (off)", 0),
+        ("band M/2", QLEN / 2),
+        ("band M/4", QLEN / 4),
+        ("band M/8", QLEN / 8),
+    ];
+
+    for family in [Family::Walk, Family::Cbf] {
+        let (reference, query) = workload(family, SEED);
+        let engine = SearchEngine::new(reference, WINDOW, 1, Dist::Sq)?;
+        let candidates = engine.index().candidates();
+
+        // correctness first: at every radius the cascade must reproduce
+        // the banded brute force at the *same* radius, bit for bit
+        for (label, band) in &configs {
+            let opts = CascadeOpts::default().with_band(*band);
+            let got = engine.search_opts(&query, K, EXCLUSION, opts, 1)?;
+            let brute = banded_brute(&engine, &query, *band);
+            assert_eq!(got.hits.len(), brute.len(), "{label}: hit count diverged");
+            for (a, b) in got.hits.iter().zip(&brute) {
+                assert_eq!(a.start, b.start, "{label}: start diverged");
+                assert_eq!(a.end, b.end, "{label}: end diverged");
+                assert_eq!(
+                    a.cost.to_bits(),
+                    b.cost.to_bits(),
+                    "{label}: cost not bit-identical ({} vs {})",
+                    a.cost,
+                    b.cost
+                );
+            }
+            let s = got.stats;
+            assert_eq!(
+                s.pruned_total() + s.dp_full,
+                s.candidates,
+                "{label}: counters must partition the candidate space"
+            );
+        }
+
+        let mut table = Table::new(
+            &format!("Sakoe-Chiba band ablation — {family:?} ({candidates} candidate windows)"),
+            &["ms/search", "Mcand/s", "speedup", "pruned%", "cells_skipped"],
+        );
+        let mut unbanded_ms = 0.0f64;
+        for (label, band) in &configs {
+            let opts = CascadeOpts::default().with_band(*band);
+            let mut stats = CascadeStats::default();
+            let summary = protocol.run(|| {
+                stats = engine
+                    .search_opts(&query, K, EXCLUSION, opts, 1)
+                    .expect("search")
+                    .stats;
+            });
+            if unbanded_ms == 0.0 {
+                unbanded_ms = summary.mean_ms;
+            }
+            let mcand_s = candidates as f64 / (summary.mean_ms * 1e3).max(1e-12);
+            table.row(
+                label,
+                vec![
+                    format!("{:.3}", summary.mean_ms),
+                    format!("{:.2}", mcand_s),
+                    format!("{:.2}x", unbanded_ms / summary.mean_ms.max(1e-9)),
+                    format!("{:.1}", stats.prune_fraction() * 100.0),
+                    format!("{}", stats.band_cells_skipped),
+                ],
+            );
+            emit_json(
+                "banded_search",
+                vec![
+                    ("family", Json::str(&format!("{family:?}"))),
+                    ("config", Json::str(label)),
+                    ("band", Json::Int(*band as i64)),
+                    ("candidates", Json::Int(candidates as i64)),
+                    ("ms_per_search", Json::Num(summary.mean_ms)),
+                    ("mcand_per_s", Json::Num(mcand_s)),
+                    ("speedup_vs_unbanded", Json::Num(unbanded_ms / summary.mean_ms.max(1e-9))),
+                    ("prune_fraction", Json::Num(stats.prune_fraction())),
+                    ("pruned_kim", Json::Int(stats.pruned_kim as i64)),
+                    ("pruned_keogh", Json::Int(stats.pruned_keogh as i64)),
+                    ("pruned_band", Json::Int(stats.pruned_band as i64)),
+                    ("dp_abandoned", Json::Int(stats.dp_abandoned as i64)),
+                    ("dp_full", Json::Int(stats.dp_full as i64)),
+                    ("band_cells_skipped", Json::Int(stats.band_cells_skipped as i64)),
+                    ("bit_identical", Json::Bool(true)),
+                ],
+            );
+        }
+        table.print();
+    }
+    println!(
+        "\nnote: every radius above was asserted bit-identical to the banded \
+         brute force at the same radius before timing; `sdtw search --band N` \
+         serves the same configurations end-to-end."
+    );
+    Ok(())
+}

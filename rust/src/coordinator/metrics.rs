@@ -68,6 +68,10 @@ pub struct Metrics {
     search_lb_evals: AtomicU64,
     /// Keogh evaluations early-abandoned mid-sum (subset of pruned_keogh)
     search_lb_abandons: AtomicU64,
+    /// windows cut because the band admitted no warping path
+    search_pruned_band: AtomicU64,
+    /// DP cells the band mask excluded across stage-3 flushes
+    search_band_cells_skipped: AtomicU64,
     search_latency: Mutex<LatencyHistogram>,
     // ------------------------- sharded-executor counters
     searches_sharded: AtomicU64,
@@ -126,6 +130,8 @@ impl Metrics {
             search_lb_blocks: AtomicU64::new(0),
             search_lb_evals: AtomicU64::new(0),
             search_lb_abandons: AtomicU64::new(0),
+            search_pruned_band: AtomicU64::new(0),
+            search_band_cells_skipped: AtomicU64::new(0),
             search_latency: Mutex::new(LatencyHistogram::new()),
             searches_sharded: AtomicU64::new(0),
             search_shards: AtomicU64::new(0),
@@ -166,6 +172,10 @@ impl Metrics {
             .fetch_add(stats.lb_evals, Ordering::Relaxed);
         self.search_lb_abandons
             .fetch_add(stats.lb_abandons, Ordering::Relaxed);
+        self.search_pruned_band
+            .fetch_add(stats.pruned_band, Ordering::Relaxed);
+        self.search_band_cells_skipped
+            .fetch_add(stats.band_cells_skipped, Ordering::Relaxed);
         self.search_latency.lock().unwrap().record_ms(latency_ms);
     }
 
@@ -324,6 +334,8 @@ impl Metrics {
             search_lb_blocks: lb_blocks,
             search_lb_evals: lb_evals,
             search_lb_abandons: self.search_lb_abandons.load(Ordering::Relaxed),
+            search_pruned_band: self.search_pruned_band.load(Ordering::Relaxed),
+            search_band_cells_skipped: self.search_band_cells_skipped.load(Ordering::Relaxed),
             search_lb_block_occupancy_mean: if lb_blocks == 0 {
                 0.0
             } else {
@@ -423,6 +435,13 @@ pub struct MetricsSnapshot {
     /// Keogh evaluations whose sum was early-abandoned before the final
     /// query term (partial bound; a subset of `search_pruned_keogh`).
     pub search_lb_abandons: u64,
+    /// Windows cut because a banded search's band admitted no warping
+    /// path (`window + band < query`); zero when no banded search ran.
+    pub search_pruned_band: u64,
+    /// DP cells the Sakoe-Chiba band mask excluded across stage-3
+    /// flushes, relative to the unconstrained sweep — the DP work the
+    /// band saved; zero when no banded search ran.
+    pub search_band_cells_skipped: u64,
     /// Mean candidates per LB block (`search_lb_evals /
     /// search_lb_blocks`); 1.0 on the scalar prefilter path, approaches
     /// the block size as blocks fill, 0.0 before any block has run.
@@ -486,6 +505,7 @@ impl MetricsSnapshot {
     pub fn search_pruned_total(&self) -> u64 {
         self.search_pruned_kim
             + self.search_pruned_keogh
+            + self.search_pruned_band
             + self.search_dp_abandoned
             + self.search_skipped
     }
@@ -541,6 +561,12 @@ impl MetricsSnapshot {
                 self.search_latency_p50_ms,
                 self.search_latency_p99_ms,
             ));
+            if self.search_pruned_band > 0 || self.search_band_cells_skipped > 0 {
+                out.push_str(&format!(
+                    " band(pruned={} cells_skipped={})",
+                    self.search_pruned_band, self.search_band_cells_skipped,
+                ));
+            }
         }
         if self.searches_sharded > 0 {
             out.push_str(&format!(
@@ -637,6 +663,16 @@ impl MetricsSnapshot {
             "sdtw_search_dp_full_total",
             "Windows that ran a full exact DP.",
             self.search_dp_full,
+        );
+        counter(
+            "sdtw_search_pruned_band_total",
+            "Windows cut because the Sakoe-Chiba band admitted no warping path.",
+            self.search_pruned_band,
+        );
+        counter(
+            "sdtw_search_band_cells_skipped_total",
+            "DP cells the Sakoe-Chiba band mask excluded in stage 3.",
+            self.search_band_cells_skipped,
         );
         counter(
             "sdtw_frames_oversized_total",
@@ -813,6 +849,8 @@ mod tests {
                 lb_blocks: 10,
                 lb_evals: 40,
                 lb_abandons: 12,
+                pruned_band: 0,
+                band_cells_skipped: 0,
             },
         );
         m.on_search(
@@ -828,6 +866,8 @@ mod tests {
                 lb_blocks: 10,
                 lb_evals: 20,
                 lb_abandons: 0,
+                pruned_band: 0,
+                band_cells_skipped: 0,
             },
         );
         let s = m.snapshot();
@@ -858,6 +898,42 @@ mod tests {
     }
 
     #[test]
+    fn band_counters_accumulate_and_render_only_when_banded() {
+        let m = Metrics::new();
+        // an unbanded search leaves the band counters at zero and the
+        // band block hidden
+        m.on_search(1.0, &CascadeStats { candidates: 10, dp_full: 10, ..Default::default() });
+        let s = m.snapshot();
+        assert_eq!(s.search_pruned_band, 0);
+        assert_eq!(s.search_band_cells_skipped, 0);
+        assert!(!s.render().contains("band("));
+        // a banded search feeds both counters and the partition total
+        m.on_search(
+            2.0,
+            &CascadeStats {
+                candidates: 50,
+                pruned_kim: 10,
+                dp_full: 20,
+                pruned_band: 20,
+                band_cells_skipped: 1234,
+                ..Default::default()
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.search_pruned_band, 20);
+        assert_eq!(s.search_band_cells_skipped, 1234);
+        assert_eq!(
+            s.search_pruned_total() + s.search_dp_full,
+            s.search_windows,
+            "band prunes must stay inside the partition invariant"
+        );
+        assert!(s.render().contains("band(pruned=20 cells_skipped=1234)"));
+        let text = s.render_prometheus();
+        assert!(text.contains("sdtw_search_pruned_band_total 20"));
+        assert!(text.contains("sdtw_search_band_cells_skipped_total 1234"));
+    }
+
+    #[test]
     fn lane_occupancy_zero_before_any_batch() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.search_survivor_batches, 0);
@@ -880,6 +956,8 @@ mod tests {
             lb_blocks: 8,
             lb_evals: 30,
             lb_abandons: 5,
+            pruned_band: 0,
+            band_cells_skipped: 0,
         };
         m.on_search_sharded(2.0, &stats, 4, 12, Some(1.5));
         m.on_search_sharded(4.0, &stats, 8, 4, Some(2.5));

@@ -94,6 +94,12 @@ pub struct SearchOptions {
     /// buffer.  Purely observational — hits and counters stay
     /// bit-identical with it on or off (see `docs/OBSERVABILITY.md`).
     pub explain: bool,
+    /// Sakoe-Chiba band radius for the anchored banded search semantics
+    /// (`crate::search::cascade` module docs).  `0` (the default)
+    /// disables the band; a radius of at least the resolved window is
+    /// equivalent to `0` (resolved at the cascade's options layer, so
+    /// the mapping is identical on every path).
+    pub band: usize,
 }
 
 impl Default for SearchOptions {
@@ -111,6 +117,7 @@ impl Default for SearchOptions {
             lb_block: 0,
             stream: false,
             explain: false,
+            band: 0,
         }
     }
 }
@@ -242,6 +249,7 @@ mod tests {
         assert_eq!(o.lb_block, 0);
         assert!(!o.stream, "default targets the startup reference");
         assert!(!o.explain, "explain sampling is opt-in");
+        assert_eq!(o.band, 0, "default is the unconstrained search");
     }
 
     #[test]

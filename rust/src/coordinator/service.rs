@@ -429,7 +429,8 @@ impl SdtwService {
         // bit-identical hits (kernel-layer + τ-refresh invariants)
         let cascade_opts = CascadeOpts::default()
             .with_kernel(options.resolve_kernel())
-            .with_lb(options.resolve_lb_kernel());
+            .with_lb(options.resolve_lb_kernel())
+            .with_band(options.band);
 
         let submitted = Instant::now();
         let engine = self.search_engine(window, stride)?;
@@ -490,7 +491,8 @@ impl SdtwService {
         let (shards, parallelism) = options.resolve_sharding();
         let cascade_opts = CascadeOpts::default()
             .with_kernel(options.resolve_kernel())
-            .with_lb(options.resolve_lb_kernel());
+            .with_lb(options.resolve_lb_kernel())
+            .with_band(options.band);
         let submitted = Instant::now();
         let qn = normalize::znormed(&query);
 

@@ -11,6 +11,97 @@
 
 use super::{Dist, Match};
 
+/// Whether a window of length `n` can host a full-query banded
+/// alignment anchored at its first column: row `i` needs a reachable
+/// column `i.saturating_sub(band) < min(n, m + band)`, which fails
+/// exactly when `n + band < m`.  The cascade uses this to prune
+/// band-infeasible candidates before any DP or lower-bound work.
+#[inline]
+pub fn band_feasible(qlen: usize, window_len: usize, band: usize) -> bool {
+    window_len + band >= qlen
+}
+
+/// One anchored banded DP: align the full query against `window`,
+/// path **anchored at column 0** (global start: `query[0]` matches a
+/// monotone run `window[0..=j0]`, `j0 <= band`), free end, every cell
+/// `(i, j)` constrained to `|i - j| <= band`.  This is exactly one
+/// outer-loop iteration of [`sdtw_banded`] — the per-candidate unit
+/// the banded [`crate::dtw::DpKernel`] path executes — factored out so
+/// kernels can be property-tested against it lane by lane.
+///
+/// Returns `None` when the band leaves some query row no reachable
+/// column (`window.len() + band < query.len()` — see
+/// [`band_feasible`]) or when a whole row minimum (or the final cost)
+/// exceeds `abandon_at` (row minima are non-decreasing, so the final
+/// cost would too — the same conservative test as the unconstrained
+/// kernels).  When it returns `Some`, `end` is the column *within the
+/// window* and `cost` is bit-identical to the oracle's value for this
+/// anchor.  Scratch rows are the caller's, reused across calls.
+pub fn sdtw_banded_anchored_into(
+    query: &[f32],
+    window: &[f32],
+    band: usize,
+    abandon_at: f32,
+    dist: Dist,
+    prev: &mut Vec<f32>,
+    cur: &mut Vec<f32>,
+) -> Option<Match> {
+    assert!(!query.is_empty(), "empty query");
+    assert!(!window.is_empty(), "empty window");
+    let m = query.len();
+    let width = window.len().min(m + band);
+    if !band_feasible(m, window.len(), band) {
+        return None;
+    }
+    prev.clear();
+    prev.resize(width, f32::INFINITY);
+    cur.clear();
+    cur.resize(width, f32::INFINITY);
+
+    // row 0: monotone run along the band from the anchor column
+    let hi0 = width.min(band + 1);
+    let mut acc = 0f32;
+    for j in 0..hi0 {
+        acc += dist.eval(query[0], window[j]);
+        prev[j] = acc;
+    }
+    // the run accumulates non-negative costs, so its minimum is prev[0]
+    if prev[0] > abandon_at {
+        return None;
+    }
+    for i in 1..m {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(width);
+        debug_assert!(lo < hi, "feasibility was checked above");
+        cur.iter_mut().for_each(|x| *x = f32::INFINITY);
+        let mut row_min = f32::INFINITY;
+        for j in lo..hi {
+            let c = dist.eval(query[i], window[j]);
+            let mut b = prev[j]; // vertical
+            if j > 0 {
+                b = b.min(cur[j - 1]).min(prev[j - 1]);
+            }
+            cur[j] = b + c;
+            row_min = row_min.min(cur[j]);
+        }
+        if row_min > abandon_at {
+            return None;
+        }
+        std::mem::swap(prev, cur);
+    }
+    let mut best = Match { cost: f32::INFINITY, end: 0 };
+    for (j, &v) in prev.iter().enumerate() {
+        if v < best.cost {
+            best = Match { cost: v, end: j };
+        }
+    }
+    if best.cost > abandon_at {
+        None
+    } else {
+        Some(best)
+    }
+}
+
 /// Banded sDTW: Sakoe-Chiba half-width `band` anchored at each start.
 pub fn sdtw_banded(query: &[f32], reference: &[f32], band: usize, dist: Dist) -> Match {
     assert!(!query.is_empty(), "empty query");
@@ -23,49 +114,21 @@ pub fn sdtw_banded(query: &[f32], reference: &[f32], band: usize, dist: Dist) ->
     let mut cur = vec![f32::INFINITY; m + band + 1];
 
     for s in 0..n {
-        let width = (n - s).min(m + band);
-        if width == 0 {
+        let Some(anchored) = sdtw_banded_anchored_into(
+            query,
+            &reference[s..],
+            band,
+            f32::INFINITY,
+            dist,
+            &mut prev,
+            &mut cur,
+        ) else {
+            // the band leaves some row of this start no reachable
+            // column: no full-query alignment starts at s
             continue;
-        }
-        prev.iter_mut().for_each(|x| *x = f32::INFINITY);
-        cur.iter_mut().for_each(|x| *x = f32::INFINITY);
-
-        // row 0 within this window: monotone run along the band
-        let hi0 = width.min(band + 1);
-        let mut acc = 0f32;
-        for j in 0..hi0 {
-            acc += dist.eval(query[0], reference[s + j]);
-            prev[j] = acc;
-        }
-        let mut full_query_fits = true;
-        for i in 1..m {
-            let lo = i.saturating_sub(band);
-            let hi = (i + band + 1).min(width);
-            if lo >= hi {
-                // the band leaves row i no reachable column in this
-                // window: no full-query alignment starts at s
-                full_query_fits = false;
-                break;
-            }
-            cur.iter_mut().for_each(|x| *x = f32::INFINITY);
-            for j in lo..hi {
-                let c = dist.eval(query[i], reference[s + j]);
-                let mut b = prev[j]; // vertical
-                if j > 0 {
-                    b = b.min(cur[j - 1]).min(prev[j - 1]);
-                }
-                cur[j] = b + c;
-            }
-            std::mem::swap(&mut prev, &mut cur);
-        }
-        if !full_query_fits {
-            continue;
-        }
-        for j in 0..width {
-            let v = prev[j];
-            if v < best.cost {
-                best = Match { cost: v, end: s + j };
-            }
+        };
+        if anchored.cost < best.cost {
+            best = Match { cost: anchored.cost, end: s + anchored.end };
         }
     }
     best

@@ -42,6 +42,7 @@
 //! `tests/prop_kernel.rs` enforces both claims over random shapes,
 //! widths, lane counts, and thresholds.
 
+use super::banded::{band_feasible, sdtw_banded_anchored_into};
 use super::subsequence::Match;
 use super::Dist;
 
@@ -58,6 +59,29 @@ pub struct Lane<'a> {
 /// point (per-stage Gsps/GCUPS accounting, paper eq. 3).
 pub fn lanes_floats(lanes: &[Lane<'_>]) -> u64 {
     lanes.iter().map(|l| (l.query.len() * l.window.len()) as u64).sum()
+}
+
+/// DP cell count for a *banded* batch: only the in-band cells
+/// (`Σ_i |[i-band, i+band+1) ∩ [0, width)|` per lane, `width =
+/// min(n, m+band)`) are ever touched, so this is the banded
+/// counterpart of [`lanes_floats`] for throughput accounting.
+/// Band-infeasible lanes contribute 0.
+pub fn banded_lanes_floats(lanes: &[Lane<'_>], band: usize) -> u64 {
+    let mut total = 0u64;
+    for lane in lanes {
+        let m = lane.query.len();
+        let n = lane.window.len();
+        if !band_feasible(m, n, band) {
+            continue;
+        }
+        let width = n.min(m + band);
+        for i in 0..m {
+            let lo = i.saturating_sub(band);
+            let hi = (i + band + 1).min(width);
+            total += (hi - lo) as u64;
+        }
+    }
+    total
 }
 
 /// A batched sDTW executor.
@@ -87,6 +111,31 @@ pub trait DpKernel {
     fn run(
         &mut self,
         lanes: &[Lane<'_>],
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    );
+
+    /// Banded counterpart of [`DpKernel::run`]: every lane is aligned
+    /// with the **anchored** Sakoe-Chiba recurrence — the path starts
+    /// at the window's first column (a monotone `query[0]` run of at
+    /// most `band + 1` columns), every cell obeys `|i - j| <= band`,
+    /// and the end is free — i.e. exactly one outer-loop iteration of
+    /// [`crate::dtw::sdtw_banded`], which is what makes a stride-1
+    /// banded search over all candidate starts reproduce that oracle.
+    ///
+    /// The contract mirrors `run` with two banded additions: results
+    /// must be bit-identical to
+    /// [`crate::dtw::sdtw_banded_anchored_into`] lane for lane, and a
+    /// band-infeasible lane (`window.len() + band < query.len()` — no
+    /// row survives the band) yields `None` even at
+    /// `abandon_at = f32::INFINITY`.  Callers that need the partition
+    /// counters exact pre-prune those lanes (see
+    /// [`crate::dtw::band_feasible`]).
+    fn run_banded(
+        &mut self,
+        lanes: &[Lane<'_>],
+        band: usize,
         abandon_at: f32,
         dist: Dist,
         out: &mut Vec<Option<Match>>,
@@ -288,6 +337,28 @@ impl DpKernel for ScalarKernel {
             ));
         }
     }
+
+    fn run_banded(
+        &mut self,
+        lanes: &[Lane<'_>],
+        band: usize,
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        out.clear();
+        for lane in lanes {
+            out.push(sdtw_banded_anchored_into(
+                lane.query,
+                lane.window,
+                band,
+                abandon_at,
+                dist,
+                &mut self.prev,
+                &mut self.cur,
+            ));
+        }
+    }
 }
 
 // --------------------------------------------------------------- scan
@@ -394,6 +465,114 @@ impl ScanKernel {
             Some(m)
         }
     }
+
+    /// Anchored banded DP with the same two-pass decomposition, applied
+    /// per row to the band's span `[lo, hi)` instead of the whole row.
+    /// Segments tile the span from `lo`; the proof is unchanged — the
+    /// carry-in at the span edge is `+inf` exactly like the oracle's
+    /// cleared out-of-band cell, and the fixup restores every in-span
+    /// cell bit-identically.  Cells left of a row's span go stale in
+    /// `row` but are never read again (the span's left edge only moves
+    /// right, and the `j == 0` case is the only one reading `row[j-1]`
+    /// at the edge), so the final reduction scans the last row's span
+    /// only.
+    fn run_one_banded(
+        &mut self,
+        query: &[f32],
+        window: &[f32],
+        band: usize,
+        abandon_at: f32,
+        dist: Dist,
+    ) -> Option<Match> {
+        assert!(!query.is_empty(), "empty query");
+        assert!(!window.is_empty(), "empty window");
+        let m = query.len();
+        let n = window.len();
+        if !band_feasible(m, n, band) {
+            return None;
+        }
+        let width = n.min(m + band);
+        let w = self.width;
+
+        self.row.clear();
+        self.row.resize(width, f32::INFINITY);
+        self.c.clear();
+        self.c.resize(width, f32::INFINITY);
+        self.a.clear();
+        self.a.resize(width, f32::INFINITY);
+        self.local.clear();
+        self.local.resize(width, f32::INFINITY);
+
+        // row 0: the anchored monotone run along the band
+        let q0 = query[0];
+        let hi0 = width.min(band + 1);
+        let mut acc = 0f32;
+        for j in 0..hi0 {
+            acc += dist.eval(q0, window[j]);
+            self.row[j] = acc;
+        }
+        // the run accumulates non-negative costs: its minimum is row[0]
+        if self.row[0] > abandon_at {
+            return None;
+        }
+
+        for (i, &qi) in query.iter().enumerate().skip(1) {
+            let lo = i.saturating_sub(band);
+            let hi = (i + band + 1).min(width);
+            debug_assert!(lo < hi, "feasibility was checked above");
+            // local costs + vertical/diagonal candidates over the span
+            // (row[] still holds the previous row; out-of-span reads hit
+            // +inf or a cell the previous row's span did write)
+            for j in lo..hi {
+                self.c[j] = dist.eval(qi, window[j]);
+                let mut b = self.row[j];
+                if j > 0 {
+                    b = b.min(self.row[j - 1]);
+                }
+                self.a[j] = b + self.c[j];
+            }
+            // pass 1: independent segment scans tiling the span from lo
+            let mut base = lo;
+            while base < hi {
+                let seg_hi = (base + w).min(hi);
+                let mut d = f32::INFINITY;
+                for j in base..seg_hi {
+                    d = self.a[j].min(self.c[j] + d);
+                    self.local[j] = d;
+                }
+                base = seg_hi;
+            }
+            // pass 2: exact sequential carry fixup (the first segment's
+            // carry-in is the out-of-band +inf, so it is already final)
+            let mut row_min = f32::INFINITY;
+            let first_hi = (lo + w).min(hi);
+            for j in lo..first_hi {
+                self.row[j] = self.local[j];
+                row_min = row_min.min(self.row[j]);
+            }
+            for j in first_hi..hi {
+                self.row[j] = self.local[j].min(self.c[j] + self.row[j - 1]);
+                row_min = row_min.min(self.row[j]);
+            }
+            if row_min > abandon_at {
+                return None;
+            }
+        }
+        // reduce over the final row's span (cells left of it are stale)
+        let lo_f = (m - 1).saturating_sub(band);
+        let mut best = Match { cost: f32::INFINITY, end: 0 };
+        for j in lo_f..width {
+            let v = self.row[j];
+            if v < best.cost {
+                best = Match { cost: v, end: j };
+            }
+        }
+        if best.cost > abandon_at {
+            None
+        } else {
+            Some(best)
+        }
+    }
 }
 
 impl DpKernel for ScanKernel {
@@ -411,6 +590,21 @@ impl DpKernel for ScanKernel {
         out.clear();
         for lane in lanes {
             let r = self.run_one(lane.query, lane.window, abandon_at, dist);
+            out.push(r);
+        }
+    }
+
+    fn run_banded(
+        &mut self,
+        lanes: &[Lane<'_>],
+        band: usize,
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        out.clear();
+        for lane in lanes {
+            let r = self.run_one_banded(lane.query, lane.window, band, abandon_at, dist);
             out.push(r);
         }
     }
@@ -568,6 +762,184 @@ impl LaneKernel {
             std::mem::swap(&mut self.prev, &mut self.cur);
         }
     }
+
+    /// Banded lockstep: one chunk of lanes through the anchored
+    /// Sakoe-Chiba recurrence, all lanes advancing the *same* band span
+    /// `[i-band, i+band+1)` per row (the span depends only on the row
+    /// and the shared band, so the lockstep sweep stays contiguous;
+    /// per-lane width differences ride on the usual `+inf` window
+    /// padding).  One extra move versus the unconstrained sweep: the
+    /// cell that just fell off the span's left edge still holds a
+    /// two-rows-ago value in `cur`, so it is re-cleared to `+inf`
+    /// before it is read as the left neighbour — restoring exactly the
+    /// oracle's "out-of-band cells are +inf" invariant.
+    fn run_chunk_banded(
+        &mut self,
+        lanes: &[Lane<'_>],
+        band: usize,
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        let l = lanes.len();
+        debug_assert!(l >= 1 && l <= self.capacity);
+        let mut m_max = 0usize;
+        let mut n_max = 0usize;
+        for lane in lanes {
+            assert!(!lane.query.is_empty(), "empty query");
+            assert!(!lane.window.is_empty(), "empty window");
+            m_max = m_max.max(lane.query.len());
+            n_max = n_max.max(lane.window.len());
+        }
+
+        self.qbuf.clear();
+        self.qbuf.resize(m_max * l, 0.0);
+        self.wbuf.clear();
+        self.wbuf.resize(n_max * l, f32::INFINITY);
+        for (k, lane) in lanes.iter().enumerate() {
+            for (i, &q) in lane.query.iter().enumerate() {
+                self.qbuf[i * l + k] = q;
+            }
+            for (j, &x) in lane.window.iter().enumerate() {
+                self.wbuf[j * l + k] = x;
+            }
+        }
+        self.prev.clear();
+        self.prev.resize(n_max * l, f32::INFINITY);
+        self.cur.clear();
+        self.cur.resize(n_max * l, f32::INFINITY);
+
+        let base = out.len();
+        out.resize(base + l, None);
+        let mut live = vec![true; l];
+        let mut n_live = l;
+        // a lane the band cannot fit dies before any DP work
+        for (k, lane) in lanes.iter().enumerate() {
+            if !band_feasible(lane.query.len(), lane.window.len(), band) {
+                live[k] = false;
+                n_live -= 1;
+            }
+        }
+        if n_live == 0 {
+            return;
+        }
+        // per-lane anchored width: the final reduction's right edge
+        let widths: Vec<usize> =
+            lanes.iter().map(|ln| ln.window.len().min(ln.query.len() + band)).collect();
+        let mut row_min = vec![f32::INFINITY; l];
+
+        // row 0: the anchored monotone run, all lanes in lockstep
+        // (padded columns turn the accumulator +inf, exactly the
+        // oracle's out-of-window +inf cells)
+        let mut acc = vec![0f32; l];
+        for j in 0..(band + 1).min(n_max) {
+            let ws = &self.wbuf[j * l..(j + 1) * l];
+            let row = &mut self.prev[j * l..(j + 1) * l];
+            for k in 0..l {
+                acc[k] += dist.eval(self.qbuf[k], ws[k]);
+                row[k] = acc[k];
+            }
+        }
+        for (k, lane) in lanes.iter().enumerate() {
+            if !live[k] {
+                continue;
+            }
+            // the run accumulates non-negative costs: its min is cell 0
+            if self.prev[k] > abandon_at {
+                live[k] = false; // out[base+k] stays None
+                n_live -= 1;
+            } else if lane.query.len() == 1 {
+                out[base + k] = extract_lane_span(&self.prev, l, k, 0, widths[k], abandon_at);
+                live[k] = false;
+                n_live -= 1;
+            }
+        }
+
+        for i in 1..m_max {
+            if n_live == 0 {
+                break;
+            }
+            let lo = i.saturating_sub(band);
+            let hi = (i + band + 1).min(n_max);
+            if lo >= hi {
+                break; // every live lane's query was already extracted
+            }
+            let qs = &self.qbuf[i * l..(i + 1) * l];
+            // re-clear the cell that just left the span: `cur` holds
+            // row i-2 there, and column lo reads it as its left
+            // neighbour below
+            if lo >= 1 {
+                for k in 0..l {
+                    self.cur[(lo - 1) * l + k] = f32::INFINITY;
+                }
+            }
+            for rm in row_min.iter_mut() {
+                *rm = f32::INFINITY;
+            }
+            for j in lo..hi {
+                let at = j * l;
+                if j == 0 {
+                    // anchor column: only vertical ancestry
+                    for k in 0..l {
+                        let v = self.prev[k] + dist.eval(qs[k], self.wbuf[k]);
+                        self.cur[k] = v;
+                        row_min[k] = row_min[k].min(v);
+                    }
+                } else {
+                    for k in 0..l {
+                        let up = self.prev[at + k];
+                        let left = self.cur[at - l + k];
+                        let diag = self.prev[at - l + k];
+                        let v = up.min(left).min(diag) + dist.eval(qs[k], self.wbuf[at + k]);
+                        self.cur[at + k] = v;
+                        row_min[k] = row_min[k].min(v);
+                    }
+                }
+            }
+            for (k, lane) in lanes.iter().enumerate() {
+                if !live[k] {
+                    continue;
+                }
+                if row_min[k] > abandon_at {
+                    live[k] = false;
+                    n_live -= 1;
+                } else if i + 1 == lane.query.len() {
+                    out[base + k] = extract_lane_span(&self.cur, l, k, lo, widths[k], abandon_at);
+                    live[k] = false;
+                    n_live -= 1;
+                }
+            }
+            std::mem::swap(&mut self.prev, &mut self.cur);
+        }
+    }
+}
+
+/// `(min, argmin)` over lane `k`'s bottom row restricted to `[lo, hi)`
+/// — the banded extraction ([`extract_lane`] with a span), first index
+/// wins ties exactly like the oracle's full-row reduction (every cell
+/// outside the final span is `+inf` there).
+fn extract_lane_span(
+    row: &[f32],
+    l: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    abandon_at: f32,
+) -> Option<Match> {
+    let mut best = f32::INFINITY;
+    let mut pos = 0usize;
+    for j in lo..hi {
+        let v = row[j * l + k];
+        if v < best {
+            best = v;
+            pos = j;
+        }
+    }
+    if best > abandon_at {
+        None
+    } else {
+        Some(Match { cost: best, end: pos })
+    }
 }
 
 /// `(min, argmin)` over lane `k`'s bottom row (first index wins ties,
@@ -609,6 +981,20 @@ impl DpKernel for LaneKernel {
         out.clear();
         for chunk in lanes.chunks(self.capacity) {
             self.run_chunk(chunk, abandon_at, dist, out);
+        }
+    }
+
+    fn run_banded(
+        &mut self,
+        lanes: &[Lane<'_>],
+        band: usize,
+        abandon_at: f32,
+        dist: Dist,
+        out: &mut Vec<Option<Match>>,
+    ) {
+        out.clear();
+        for chunk in lanes.chunks(self.capacity) {
+            self.run_chunk_banded(chunk, band, abandon_at, dist, out);
         }
     }
 }

@@ -33,8 +33,12 @@ pub mod scan;
 pub mod subsequence;
 pub mod traceback;
 
+pub use banded::{band_feasible, sdtw_banded, sdtw_banded_anchored_into};
 pub use batch::sdtw_batch_cpu;
-pub use kernel::{DpKernel, KernelKind, KernelSpec, Lane, LaneKernel, ScalarKernel, ScanKernel};
+pub use kernel::{
+    banded_lanes_floats, DpKernel, KernelKind, KernelSpec, Lane, LaneKernel, ScalarKernel,
+    ScanKernel,
+};
 pub use scan::sdtw_scan;
 pub use subsequence::{sdtw, sdtw_last_row, Match};
 pub use traceback::{sdtw_path, PathStep};

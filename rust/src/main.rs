@@ -261,6 +261,7 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         .opt_default("width", "0", "segment width for --kernel scan (0 = auto)")
         .opt_default("lb-kernel", "scalar", "lower-bound prefilter kernel: scalar|block")
         .opt_default("lb-block", "0", "candidates per block for --lb-kernel block (0 = auto)")
+        .opt_default("band", "0", "Sakoe-Chiba band radius in samples (0 = unconstrained)")
         .flag("no-cascade", "disable all pruning stages (brute force)")
         .flag("per-shard", "print one stats line per shard")
         .flag("explain", "record and print which stage pruned each sampled candidate")
@@ -301,6 +302,7 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         lanes: a.get_or("lanes", 0usize)?,
         lb_kernel: lb_kind,
         lb_block: a.get_or("lb-block", 0usize)?,
+        band: a.get_or("band", 0usize)?,
         stream: false,
         explain: a.has("explain"),
     };
@@ -317,7 +319,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         sdtw_repro::search::CascadeOpts::default()
     }
     .with_kernel(kernel_spec)
-    .with_lb(search_options.resolve_lb_kernel());
+    .with_lb(search_options.resolve_lb_kernel())
+    .with_band(search_options.band);
 
     // trace context for this one-shot search: span sampling follows
     // SDTW_TRACE; --explain turns on per-candidate explain events
@@ -367,6 +370,12 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
             }
         );
     }
+    if search_options.band != 0 {
+        println!(
+            "band: Sakoe-Chiba radius {} (anchored; hits are banded match costs)",
+            search_options.band
+        );
+    }
     for emb in &planted {
         println!("planted copy at {}..{}", emb.start, emb.end);
     }
@@ -402,6 +411,12 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         s.mean_lb_block_occupancy(),
         s.lb_abandons
     );
+    if s.pruned_band > 0 || s.band_cells_skipped > 0 {
+        println!(
+            "band: pruned {} infeasible candidates, skipped {} DP cells",
+            s.pruned_band, s.band_cells_skipped
+        );
+    }
     if let Some(so) = &sharded {
         println!(
             "sharded: {} shards, τ tightened {} times, imbalance {} (slowest/mean)",
@@ -446,8 +461,11 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
     }
 
     if a.has("verify") {
+        // brute force inherits the band: banded search verifies against
+        // the per-window anchored banded oracle, unbanded against sdtw
         let t2 = std::time::Instant::now();
-        let brute = engine.search_opts(&qn, k, exclusion, sdtw_repro::search::CascadeOpts::BRUTE, 1)?;
+        let brute_opts = sdtw_repro::search::CascadeOpts::BRUTE.with_band(search_options.band);
+        let brute = engine.search_opts(&qn, k, exclusion, brute_opts, 1)?;
         let brute_ms = t2.elapsed().as_secs_f64() * 1e3;
         anyhow::ensure!(
             out.hits == brute.hits,
@@ -507,6 +525,7 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
     .opt_default("lanes", "0", "lane count for --kernel lanes (0 = auto)")
     .opt_default("lb-kernel", "scalar", "lower-bound prefilter kernel: scalar|block")
     .opt_default("lb-block", "0", "candidates per block for --lb-kernel block (0 = auto)")
+    .opt_default("band", "0", "Sakoe-Chiba band radius in samples (0 = unconstrained)")
     .opt("input", "read the stream from a whitespace-separated float file ('-' = stdin)")
     .opt("query-input", "read the query from a float file (required with --input)")
     .flag("search-each-chunk", "delta-search after every append (default: only at the end)")
@@ -561,13 +580,15 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
         lanes: a.get_or("lanes", 0usize)?,
         lb_kernel: lb_kind,
         lb_block: a.get_or("lb-block", 0usize)?,
+        band: a.get_or("band", 0usize)?,
         ..Default::default()
     };
     let (window, stride, exclusion) = probe.resolve(qlen, reflen);
     anyhow::ensure!(window <= reflen, "window {window} exceeds stream length {reflen}");
     let opts = sdtw_repro::search::CascadeOpts::default()
         .with_kernel(probe.resolve_kernel())
-        .with_lb(probe.resolve_lb_kernel());
+        .with_lb(probe.resolve_lb_kernel())
+        .with_band(probe.band);
 
     // normalization policy: the offline CLI has the whole stream up
     // front, so it normalizes once with full-stream stats — that is what
@@ -590,6 +611,9 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
     }
     if lb_kind != sdtw_repro::search::LbKernelKind::Scalar {
         executors.push_str(&format!(" | lb {}", lb_kind.name()));
+    }
+    if probe.band != 0 {
+        executors.push_str(&format!(" | band {}", probe.band));
     }
     println!(
         "stream {} ({reflen} samples) | query {qlen} | window {window} stride {stride} \

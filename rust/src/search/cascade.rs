@@ -59,16 +59,42 @@
 //! Processing in ascending-LB_Kim order is the throughput lever: likely
 //! matches are costed first, τ drops early, and the one sorted pass lets
 //! stage 1 prune its entire tail with a single comparison.
+//!
+//! # Band-constrained search
+//!
+//! [`CascadeOpts::band`] switches every stage to the Sakoe-Chiba-banded
+//! semantics of [`crate::dtw::banded`]: each candidate window is scored
+//! by the *anchored* banded recurrence (path starts at the window's
+//! first column, every cell satisfies `|i - j| <= band`, free end).
+//! The same three stages run — LB_Kim and LB_Keogh switch to the banded
+//! bounds of [`super::lower_bounds`] (admissible against the anchored
+//! cost; see that module's proof) over the reference's Sakoe-Chiba
+//! envelope, computed once per search, and stage 3 flushes through
+//! [`DpKernel::run_banded`].  τ-refresh soundness is inherited
+//! unchanged: the banded bounds are admissible against the banded cost,
+//! so the argument above never mentions which recurrence is being
+//! bounded.  Results are bit-identical to running the anchored oracle
+//! ([`crate::dtw::sdtw_banded_anchored_into`]) on every window, for
+//! every kernel/LB/block/lane configuration.
+//!
+//! Two extra counters keep the partition invariant exact: when
+//! `window + band < query` no warping path exists for *any* candidate
+//! (all windows share one width), and the whole range is accounted as
+//! [`CascadeStats::pruned_band`]; `band_cells_skipped` totals the DP
+//! cells the band mask excluded relative to the unconstrained
+//! recurrence — the work the band saved stage 3.
 
 use std::ops::Range;
 use std::time::{Duration, Instant};
 
 use crate::dtw::kernel::{self, DpKernel, KernelSpec, Lane};
-use crate::dtw::{Dist, Match};
+use crate::dtw::{band_feasible, Dist, Match};
 use crate::obs;
 
+use super::envelope::sakoe_chiba_envelope;
 use super::index::CandidateIndex;
 use super::lb_kernel::{LbKernel, LbKernelSpec, LbVerdict};
+use super::lower_bounds::BandEnvelope;
 use super::topk::{prune_heap_cap, BoundedCostHeap, Hit};
 
 /// Source and sink of the cascade's prune threshold τ.
@@ -112,6 +138,12 @@ pub struct CascadeOpts {
     /// re-reads — the historical cadence) or the SoA block kernel.
     /// Any choice is bit-identical (module-level τ-refresh argument).
     pub lb: LbKernelSpec,
+    /// Sakoe-Chiba band radius for the anchored banded semantics
+    /// (module docs).  `0` (the default) disables the band; values of
+    /// at least the candidate window width are resolved to the
+    /// unconstrained path by [`effective_band`] — see its docs for why
+    /// that mapping lives at the options layer.
+    pub band: usize,
 }
 
 impl Default for CascadeOpts {
@@ -122,6 +154,7 @@ impl Default for CascadeOpts {
             abandon: true,
             kernel: KernelSpec::SCALAR,
             lb: LbKernelSpec::SCALAR,
+            band: 0,
         }
     }
 }
@@ -134,6 +167,7 @@ impl CascadeOpts {
         abandon: false,
         kernel: KernelSpec::SCALAR,
         lb: LbKernelSpec::SCALAR,
+        band: 0,
     };
 
     /// This configuration with a different stage-3 kernel.
@@ -144,6 +178,35 @@ impl CascadeOpts {
     /// This configuration with a different stage-1/2 prefilter kernel.
     pub fn with_lb(self, lb: LbKernelSpec) -> CascadeOpts {
         CascadeOpts { lb, ..self }
+    }
+
+    /// This configuration with a Sakoe-Chiba band radius (`0` = off).
+    pub fn with_band(self, band: usize) -> CascadeOpts {
+        CascadeOpts { band, ..self }
+    }
+}
+
+/// Resolve the user-facing band knob to the cascade's effective
+/// constraint.  `0` means "no band" (the wire/CLI default), and a
+/// radius of at least the candidate window width maps to the
+/// unconstrained path: the knob is defined relative to the window, and
+/// a band that wide no longer excludes any window column from any query
+/// row when the query fits the window.
+///
+/// The mapping deliberately lives here, at the options layer, and not
+/// in the kernels: the banded recurrence is *anchored* (row 0 is a
+/// cumulative run from the window's first column —
+/// [`crate::dtw::banded`]), which differs from the free-start
+/// unconstrained recurrence even when the band mask excludes nothing.
+/// Resolving `band >= window` to `None` before any kernel runs is what
+/// makes it bit-identical to `band == 0`, which is the contract the
+/// engine advertises (pinned by `band_off_and_band_covering_window_
+/// identical_to_unbanded` below and `tests/prop_banded.rs`).
+pub fn effective_band(band: usize, window: usize) -> Option<usize> {
+    if band == 0 || band >= window {
+        None
+    } else {
+        Some(band)
     }
 }
 
@@ -180,12 +243,20 @@ pub struct CascadeStats {
     /// `pruned_keogh`.  Separating them keeps stage accounting exact:
     /// `pruned_keogh - lb_abandons` Keogh sums ran to completion.
     pub lb_abandons: u64,
+    /// Windows cut because the band admits no warping path at all
+    /// (`window + band < query`, uniform across a search since every
+    /// candidate shares the window width).  Zero on unbanded searches.
+    pub pruned_band: u64,
+    /// DP cells the band mask excluded across stage-3 flushes, relative
+    /// to the unconstrained `query × window` sweep — the stage-3 work
+    /// the band saved.  Zero on unbanded searches.
+    pub band_cells_skipped: u64,
 }
 
 impl CascadeStats {
     /// Windows that never completed a full DP.
     pub fn pruned_total(&self) -> u64 {
-        self.pruned_kim + self.pruned_keogh + self.dp_abandoned + self.skipped
+        self.pruned_kim + self.pruned_keogh + self.pruned_band + self.dp_abandoned + self.skipped
     }
 
     /// Fraction of candidate windows pruned before a full DP, in [0, 1].
@@ -236,6 +307,8 @@ impl CascadeStats {
         self.lb_blocks += other.lb_blocks;
         self.lb_evals += other.lb_evals;
         self.lb_abandons += other.lb_abandons;
+        self.pruned_band += other.pruned_band;
+        self.band_cells_skipped += other.band_cells_skipped;
     }
 }
 
@@ -335,15 +408,62 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
     let ctx = obs::current();
     let mut cobs = ctx.active().then(|| CascadeObs::new(ctx, range.len()));
 
+    // band resolution happens once, up front (see `effective_band`):
+    // everything below branches on `band`, never on `opts.band`
+    let band = effective_band(opts.band, index.window());
+
+    // a band narrower than the query/window length mismatch admits no
+    // warping path in *any* candidate (all windows share one width):
+    // account the whole range as band-pruned and stop before any
+    // kernel is instantiated — the partition invariant still holds
+    if let Some(b) = band {
+        if !band_feasible(query.len(), index.window(), b) {
+            stats.pruned_band = stats.candidates;
+            if let Some(mut c) = cobs {
+                for t in range {
+                    if c.wants(t) {
+                        c.push_explain(index.start(t), "band", f32::INFINITY, f32::INFINITY);
+                    }
+                }
+                // no spans ran, so the kernel/LB labels are never read
+                c.finish("-", "-");
+            }
+            return (hits, stats);
+        }
+    }
+
+    // banded prefilter context: the reference series' Sakoe-Chiba
+    // envelope, one O(series) Lemire sweep per search, shared by the
+    // Kim and Keogh stages (admissibility: `super::lower_bounds`,
+    // "Banded bounds")
+    let benv_t0 = cobs.as_ref().map(|_| Instant::now());
+    let benv_store = match band {
+        Some(b) if opts.kim || opts.keogh => Some(sakoe_chiba_envelope(index.series(), b)),
+        _ => None,
+    };
+    let benv = benv_store
+        .as_ref()
+        .map(|(rlo, rhi)| BandEnvelope { rlo, rhi, series: index.series() });
+    if let (Some(c), Some(t0)) = (cobs.as_mut(), benv_t0) {
+        if benv.is_some() {
+            c.env += t0.elapsed();
+            c.env_floats += 2 * index.series().len() as u64;
+            c.env_runs += 1;
+        }
+    }
+
     // stage-1/2 prefilter executor: envelopes are SoA-packed into
     // blocks of `lb.block()` candidates and evaluated in lockstep (1
     // for the scalar kernel — the historical per-candidate cadence).
+    // Banded searches pack window *start positions* instead (the banded
+    // bounds index the shared envelope by anchor position).
     let mut lb = opts.lb.instantiate();
     let b_cap = lb.block().max(1);
     let mut env = EnvBufs {
         ids: Vec::with_capacity(b_cap),
         lo: Vec::with_capacity(b_cap),
         hi: Vec::with_capacity(b_cap),
+        starts: Vec::with_capacity(b_cap),
         verdicts: Vec::with_capacity(b_cap),
     };
 
@@ -355,15 +475,20 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         let mut kim_out: Vec<f32> = Vec::with_capacity(b_cap);
         let mut block = Vec::with_capacity(b_cap);
         for t in range {
-            let (lo, hi) = index.envelope(t);
             block.push(t);
-            env.lo.push(lo);
-            env.hi.push(hi);
+            if benv.is_some() {
+                env.starts.push(index.start(t));
+            } else {
+                let (lo, hi) = index.envelope(t);
+                env.lo.push(lo);
+                env.hi.push(hi);
+            }
             if block.len() == b_cap {
                 kim_block(
                     lb.as_mut(),
                     query,
                     dist,
+                    benv.as_ref(),
                     &mut env,
                     &block,
                     &mut kim_out,
@@ -378,6 +503,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
                 lb.as_mut(),
                 query,
                 dist,
+                benv.as_ref(),
                 &mut env,
                 &block,
                 &mut kim_out,
@@ -427,6 +553,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         env.ids.clear();
         env.lo.clear();
         env.hi.clear();
+        env.starts.clear();
         let mut cutoff = false;
         while i < order.len() && env.ids.len() < b_cap {
             let (kim, t) = order[i];
@@ -440,9 +567,13 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
             }
             env.ids.push(t);
             if opts.keogh {
-                let (lo, hi) = index.envelope(t);
-                env.lo.push(lo);
-                env.hi.push(hi);
+                if benv.is_some() {
+                    env.starts.push(index.start(t));
+                } else {
+                    let (lo, hi) = index.envelope(t);
+                    env.lo.push(lo);
+                    env.hi.push(hi);
+                }
             }
             i += 1;
         }
@@ -451,7 +582,12 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
             stats.lb_blocks += 1;
             stats.lb_evals += env.ids.len() as u64;
             let keogh_t0 = cobs.as_ref().map(|_| Instant::now());
-            lb.keogh(query, &env.lo, &env.hi, dist, tau, &mut env.verdicts);
+            match benv.as_ref() {
+                Some(be) => {
+                    lb.keogh_banded(query, be, &env.starts, dist, tau, &mut env.verdicts)
+                }
+                None => lb.keogh(query, &env.lo, &env.hi, dist, tau, &mut env.verdicts),
+            }
             if let (Some(c), Some(t0)) = (cobs.as_mut(), keogh_t0) {
                 // one Keogh sum walks the whole query per candidate
                 c.keogh += t0.elapsed();
@@ -479,6 +615,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
                     query,
                     dist,
                     opts.abandon,
+                    band,
                     &mut flush,
                     tau_sink,
                     &mut stats,
@@ -496,6 +633,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
                     query,
                     dist,
                     opts.abandon,
+                    band,
                     &mut flush,
                     tau_sink,
                     &mut stats,
@@ -516,6 +654,7 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
         query,
         dist,
         opts.abandon,
+        band,
         &mut flush,
         tau_sink,
         &mut stats,
@@ -533,22 +672,28 @@ pub fn search_range_with<I: CandidateIndex + ?Sized>(
 struct EnvBufs {
     /// Candidate ids in the current block.
     ids: Vec<usize>,
-    /// Per-candidate window minima, parallel to `ids`.
+    /// Per-candidate window minima, parallel to `ids` (unbanded path).
     lo: Vec<f32>,
-    /// Per-candidate window maxima, parallel to `ids`.
+    /// Per-candidate window maxima, parallel to `ids` (unbanded path).
     hi: Vec<f32>,
+    /// Per-candidate window start positions, parallel to `ids` (banded
+    /// path: the banded bounds index the shared reference envelope by
+    /// anchor position instead of carrying per-window extrema).
+    starts: Vec<usize>,
     /// Per-candidate Keogh verdicts (refilled per block).
     verdicts: Vec<LbVerdict>,
 }
 
 /// Run one Kim precompute block through the LB kernel and append the
-/// `(bound, id)` pairs to `order`.  `env.lo`/`env.hi` hold the block's
-/// envelopes on entry and are drained.
+/// `(bound, id)` pairs to `order`.  `env.lo`/`env.hi` (unbanded) or
+/// `env.starts` (banded) hold the block's inputs on entry and are
+/// drained.
 #[allow(clippy::too_many_arguments)]
 fn kim_block(
     lb: &mut dyn LbKernel,
     query: &[f32],
     dist: Dist,
+    benv: Option<&BandEnvelope<'_>>,
     env: &mut EnvBufs,
     block: &[usize],
     kim_out: &mut Vec<f32>,
@@ -557,12 +702,16 @@ fn kim_block(
 ) {
     stats.lb_blocks += 1;
     stats.lb_evals += block.len() as u64;
-    lb.kim(query, &env.lo, &env.hi, dist, kim_out);
+    match benv {
+        Some(be) => lb.kim_banded(query, be, &env.starts, dist, kim_out),
+        None => lb.kim(query, &env.lo, &env.hi, dist, kim_out),
+    }
     for (&t, &bound) in block.iter().zip(kim_out.iter()) {
         order.push((bound, t));
     }
     env.lo.clear();
     env.hi.clear();
+    env.starts.clear();
 }
 
 /// Admit one LB-surviving candidate to stage 3: push it onto the
@@ -578,6 +727,7 @@ fn admit_survivor<'a, I: CandidateIndex + ?Sized>(
     query: &'a [f32],
     dist: Dist,
     abandon: bool,
+    band: Option<usize>,
     flush: &mut FlushBufs<'a>,
     tau_sink: &mut impl TauSink,
     stats: &mut CascadeStats,
@@ -586,7 +736,9 @@ fn admit_survivor<'a, I: CandidateIndex + ?Sized>(
 ) {
     flush.pending.push(t);
     if flush.pending.len() >= lane_cap {
-        flush_survivors(kernel, index, query, dist, abandon, flush, tau_sink, stats, hits, cobs);
+        flush_survivors(
+            kernel, index, query, dist, abandon, band, flush, tau_sink, stats, hits, cobs,
+        );
     }
 }
 
@@ -612,6 +764,7 @@ fn flush_survivors<'a, I: CandidateIndex + ?Sized>(
     query: &'a [f32],
     dist: Dist,
     abandon: bool,
+    band: Option<usize>,
     flush: &mut FlushBufs<'a>,
     tau_sink: &mut impl TauSink,
     stats: &mut CascadeStats,
@@ -627,10 +780,22 @@ fn flush_survivors<'a, I: CandidateIndex + ?Sized>(
         .lanes
         .extend(flush.pending.iter().map(|&t| Lane { query, window: index.window_slice(t) }));
     let dp_t0 = cobs.as_ref().map(|_| Instant::now());
-    kernel.run(&flush.lanes, abandon_at, dist, &mut flush.results);
+    let dp_floats = match band {
+        Some(b) => {
+            kernel.run_banded(&flush.lanes, b, abandon_at, dist, &mut flush.results);
+            let banded = kernel::banded_lanes_floats(&flush.lanes, b);
+            stats.band_cells_skipped +=
+                kernel::lanes_floats(&flush.lanes).saturating_sub(banded);
+            banded
+        }
+        None => {
+            kernel.run(&flush.lanes, abandon_at, dist, &mut flush.results);
+            kernel::lanes_floats(&flush.lanes)
+        }
+    };
     if let (Some(c), Some(t0)) = (cobs.as_mut(), dp_t0) {
         c.dp += t0.elapsed();
-        c.dp_floats += kernel::lanes_floats(&flush.lanes);
+        c.dp_floats += dp_floats;
         c.dp_runs += 1;
     }
     stats.survivor_batches += 1;
@@ -1095,5 +1260,134 @@ mod tests {
             "expected heavy pruning, got {:?}",
             stats
         );
+    }
+
+    /// Anchored banded oracle over every candidate window — the ground
+    /// truth every banded cascade configuration must reproduce bitwise.
+    fn banded_brute_hits(
+        query: &[f32],
+        index: &ReferenceIndex,
+        band: usize,
+        dist: Dist,
+    ) -> Vec<Hit> {
+        let mut prev = Vec::new();
+        let mut cur = Vec::new();
+        (0..index.candidates())
+            .filter_map(|t| {
+                crate::dtw::sdtw_banded_anchored_into(
+                    query,
+                    index.window_slice(t),
+                    band,
+                    f32::INFINITY,
+                    dist,
+                    &mut prev,
+                    &mut cur,
+                )
+                .map(|m| {
+                    let start = index.start(t);
+                    Hit { start, end: start + m.end, cost: m.cost }
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn banded_cascade_topk_equals_banded_brute_topk() {
+        let mut g = Xoshiro256::new(61);
+        for trial in 0..25 {
+            let n = 80 + g.below(160) as usize;
+            let r = Arc::new(g.normal_vec_f32(n));
+            let m = 3 + g.below(10) as usize;
+            let window = (m + 2 + g.below(8) as usize).min(n);
+            let index = ReferenceIndex::build(r, window, 1).unwrap();
+            let q = g.normal_vec_f32(m);
+            let k = 1 + g.below(3) as usize;
+            let exclusion = 1 + g.below(window as u64) as usize;
+            let band = 1 + g.below((window - 1) as u64) as usize;
+            let brute =
+                select_topk(&banded_brute_hits(&q, &index, band, Dist::Sq), k, exclusion);
+            let all = 0..index.candidates();
+            for opts in [
+                CascadeOpts::default().with_band(band),
+                CascadeOpts::default()
+                    .with_band(band)
+                    .with_kernel(crate::dtw::KernelSpec::scan(4)),
+                CascadeOpts::default()
+                    .with_band(band)
+                    .with_kernel(crate::dtw::KernelSpec::lanes(4)),
+                CascadeOpts::default()
+                    .with_band(band)
+                    .with_lb(crate::search::LbKernelSpec::block(8)),
+                CascadeOpts::default()
+                    .with_band(band)
+                    .with_lb(crate::search::LbKernelSpec::block(4))
+                    .with_kernel(crate::dtw::KernelSpec::lanes(3)),
+            ] {
+                let (hits, stats) =
+                    search_range(&index, &q, Dist::Sq, k, exclusion, opts, all.clone());
+                assert_hits_identical(&select_topk(&hits, k, exclusion), &brute);
+                assert_eq!(
+                    stats.pruned_total() + stats.dp_full,
+                    stats.candidates,
+                    "trial {trial} band {band}: counters must partition candidates"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn band_off_and_band_covering_window_identical_to_unbanded() {
+        let mut g = Xoshiro256::new(62);
+        let r = Arc::new(g.normal_vec_f32(200));
+        let index = ReferenceIndex::build(r, 16, 1).unwrap();
+        let q = g.normal_vec_f32(10);
+        let all = 0..index.candidates();
+        let (base_hits, base_stats) =
+            search_range(&index, &q, Dist::Sq, 3, 8, CascadeOpts::default(), all.clone());
+        assert_eq!(base_stats.pruned_band, 0);
+        assert_eq!(base_stats.band_cells_skipped, 0);
+        for band in [16usize, 17, 1000] {
+            let opts = CascadeOpts::default().with_band(band);
+            let (hits, stats) = search_range(&index, &q, Dist::Sq, 3, 8, opts, all.clone());
+            assert_hits_identical(&hits, &base_hits);
+            assert_eq!(stats, base_stats, "band {band} must resolve to the unbanded path");
+        }
+        assert_eq!(effective_band(0, 16), None);
+        assert_eq!(effective_band(16, 16), None);
+        assert_eq!(effective_band(15, 16), Some(15));
+    }
+
+    #[test]
+    fn infeasible_band_accounts_whole_range_as_pruned_band() {
+        let mut g = Xoshiro256::new(63);
+        let r = Arc::new(g.normal_vec_f32(60));
+        let index = ReferenceIndex::build(r, 8, 1).unwrap();
+        // query longer than window + band: no warping path exists in
+        // any candidate, so the whole range dies in the band stage
+        let q = g.normal_vec_f32(12);
+        let opts = CascadeOpts::default().with_band(2);
+        let (hits, stats) =
+            search_range(&index, &q, Dist::Sq, 2, 4, opts, 0..index.candidates());
+        assert!(hits.is_empty());
+        assert_eq!(stats.pruned_band, index.candidates() as u64);
+        assert_eq!(stats.pruned_total() + stats.dp_full, stats.candidates);
+        assert_eq!(stats.lb_blocks, 0, "no LB stage ran");
+        assert_eq!(stats.survivor_batches, 0, "no DP ran");
+    }
+
+    #[test]
+    fn banded_brute_computes_anchored_cost_on_every_window() {
+        let mut g = Xoshiro256::new(64);
+        let r = Arc::new(g.normal_vec_f32(90));
+        let index = ReferenceIndex::build(r, 12, 1).unwrap();
+        let q = g.normal_vec_f32(9);
+        let band = 3;
+        let opts = CascadeOpts::BRUTE.with_band(band);
+        let (hits, stats) =
+            search_range(&index, &q, Dist::Sq, 3, 6, opts, 0..index.candidates());
+        assert_eq!(stats.dp_full, index.candidates() as u64);
+        assert_eq!(stats.pruned_total(), 0);
+        assert!(stats.band_cells_skipped > 0, "the band mask saved DP cells");
+        assert_hits_identical(&hits, &banded_brute_hits(&q, &index, band, Dist::Sq));
     }
 }

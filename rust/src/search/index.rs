@@ -54,6 +54,14 @@ pub trait CandidateIndex {
     /// Start-to-start distance between consecutive candidates.
     fn stride(&self) -> usize;
 
+    /// The normalized reference series the candidates are slices of:
+    /// candidate `t`'s window is `series()[start(t) .. start(t) +
+    /// window()]`.  Banded searches compute the series' Sakoe-Chiba
+    /// envelope from this once per search ([`super::lower_bounds`]'s
+    /// banded bounds); for a streaming index it is the samples seen so
+    /// far.
+    fn series(&self) -> &[f32];
+
     /// Split the candidate space into up to `n_shards` contiguous ranges
     /// of near-equal size (empty ranges are dropped).
     fn shard_ranges(&self, n_shards: usize) -> Vec<Range<usize>> {
@@ -187,6 +195,10 @@ impl CandidateIndex for ReferenceIndex {
 
     fn stride(&self) -> usize {
         ReferenceIndex::stride(self)
+    }
+
+    fn series(&self) -> &[f32] {
+        &self.reference
     }
 }
 

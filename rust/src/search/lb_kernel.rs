@@ -14,7 +14,12 @@
 //! block of candidate envelopes (`lo[k]`, `hi[k]` parallel slices) goes
 //! in; per-candidate admissible bounds come out — raw LB_Kim values for
 //! the sort stage, and [`LbVerdict`]s (bound + pass/prune + abandoned)
-//! against the caller's current τ for the Keogh stage.  Two host
+//! against the caller's current τ for the Keogh stage.  Banded searches
+//! use the `*_banded` methods instead: candidates arrive as anchor
+//! positions into one shared [`BandEnvelope`] (the reference's
+//! Sakoe-Chiba envelope, computed once per search) and the bounds chain
+//! below the *anchored banded* cost — see
+//! [`super::lower_bounds`]'s banded admissibility argument.  Two host
 //! implementations:
 //!
 //! * [`ScalarLbKernel`] — one candidate at a time through the
@@ -53,7 +58,9 @@
 
 use crate::dtw::Dist;
 
-use super::lower_bounds::{interval_gap, lb_keogh_verdict, lb_kim};
+use super::lower_bounds::{
+    interval_gap, lb_keogh_banded_verdict, lb_keogh_verdict, lb_kim, lb_kim_banded, BandEnvelope,
+};
 
 /// One candidate's Keogh-stage outcome against the τ the caller passed.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -104,6 +111,34 @@ pub trait LbKernel {
         query: &[f32],
         lo: &[f32],
         hi: &[f32],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    );
+
+    /// Banded LB_Kim for every candidate in the block — the candidates
+    /// arrive as anchor positions `starts[k]` into the shared
+    /// [`BandEnvelope`] instead of per-candidate `(lo, hi)` ranges.
+    /// One entry per candidate, bit-identical to
+    /// [`lb_kim_banded`] at the same start.
+    fn kim_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        out: &mut Vec<f32>,
+    );
+
+    /// Banded LB_Keogh verdicts against `tau`, one per candidate,
+    /// bit-identical to [`lb_keogh_banded_verdict`] at the same start
+    /// and `tau` — the exact anchored first term, then per-row envelope
+    /// gaps, abandoning after exactly the same term.
+    fn keogh_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
         dist: Dist,
         tau: f32,
         out: &mut Vec<LbVerdict>,
@@ -237,6 +272,35 @@ impl LbKernel for ScalarLbKernel {
             out.push(lb_keogh_verdict(query, l, h, dist, tau));
         }
     }
+
+    fn kim_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        for &s in starts {
+            out.push(lb_kim_banded(query, env, s, dist));
+        }
+    }
+
+    fn keogh_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        out.clear();
+        for &s in starts {
+            out.push(lb_keogh_banded_verdict(query, env, s, dist, tau));
+        }
+    }
 }
 
 // -------------------------------------------------------------- block
@@ -330,6 +394,82 @@ impl BlockLbKernel {
             out.push(LbVerdict { bound, pruned: bound > tau, abandoned: self.abandoned[k] });
         }
     }
+
+    /// One banded chunk of at most `capacity` lanes, appending verdicts
+    /// to `out`.  Same lockstep/mask structure as [`Self::keogh_chunk`]
+    /// with two differences dictated by the banded oracle: lane `k`'s
+    /// first term is the exact anchored distance
+    /// `d(q[0], series[starts[k]])`, and row `i >= 1` gathers its
+    /// envelope interval at `min(starts[k] + i, n - 1)` — an indexed
+    /// load instead of a broadcast, still dependency-free across lanes.
+    fn keogh_banded_chunk(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        let b = starts.len();
+        debug_assert!(b >= 1 && b <= self.capacity);
+        let m = query.len();
+        let n = env.series.len();
+        self.sums.clear();
+        self.sums.resize(b, 0.0);
+        self.live.clear();
+        self.live.resize(b, true);
+        self.abandoned.clear();
+        self.abandoned.resize(b, false);
+        let mut n_live = b;
+        // row 0: the exact anchored first cell, every lane
+        let q0 = query[0];
+        for k in 0..b {
+            self.sums[k] = dist.eval(q0, env.series[starts[k]]);
+        }
+        for k in 0..b {
+            if self.sums[k] > tau {
+                self.live[k] = false;
+                self.abandoned[k] = m > 1;
+                n_live -= 1;
+            }
+        }
+        for (i, &q) in query.iter().enumerate().skip(1) {
+            if n_live == 0 {
+                break;
+            }
+            if n_live == b {
+                for k in 0..b {
+                    let t = (starts[k] + i).min(n - 1);
+                    self.sums[k] += interval_gap(q, env.rlo[t], env.rhi[t], dist);
+                }
+                for k in 0..b {
+                    if self.sums[k] > tau {
+                        self.live[k] = false;
+                        self.abandoned[k] = i + 1 < m;
+                        n_live -= 1;
+                    }
+                }
+            } else {
+                for k in 0..b {
+                    if !self.live[k] {
+                        continue;
+                    }
+                    let t = (starts[k] + i).min(n - 1);
+                    self.sums[k] += interval_gap(q, env.rlo[t], env.rhi[t], dist);
+                    if self.sums[k] > tau {
+                        self.live[k] = false;
+                        self.abandoned[k] = i + 1 < m;
+                        n_live -= 1;
+                    }
+                }
+            }
+        }
+        for k in 0..b {
+            let bound = self.sums[k];
+            out.push(LbVerdict { bound, pruned: bound > tau, abandoned: self.abandoned[k] });
+        }
+    }
 }
 
 impl LbKernel for BlockLbKernel {
@@ -377,6 +517,51 @@ impl LbKernel for BlockLbKernel {
         out.clear();
         for (lo_c, hi_c) in lo.chunks(self.capacity).zip(hi.chunks(self.capacity)) {
             self.keogh_chunk(query, lo_c, hi_c, dist, tau, out);
+        }
+    }
+
+    fn kim_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        out: &mut Vec<f32>,
+    ) {
+        assert!(!query.is_empty(), "empty query");
+        out.clear();
+        out.reserve(starts.len());
+        let q0 = query[0];
+        if query.len() == 1 {
+            for &s in starts {
+                out.push(dist.eval(q0, env.series[s]));
+            }
+        } else {
+            let qz = query[query.len() - 1];
+            // same expression shape as `lb_kim_banded`: exact first cell
+            // + last-row envelope gap, one add — bit-identical per lane
+            for &s in starts {
+                let t = env.row_index(s, query.len() - 1);
+                out.push(
+                    dist.eval(q0, env.series[s]) + interval_gap(qz, env.rlo[t], env.rhi[t], dist),
+                );
+            }
+        }
+    }
+
+    fn keogh_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        assert!(!query.is_empty(), "empty query");
+        out.clear();
+        for starts_c in starts.chunks(self.capacity) {
+            self.keogh_banded_chunk(query, env, starts_c, dist, tau, out);
         }
     }
 }
@@ -444,6 +629,26 @@ impl PjrtLbKernel {
         debug_assert_eq!(self.staged.len(), lo.len());
         out.extend_from_slice(&self.staged);
     }
+
+    /// The banded dispatch point.  A device artifact takes the shared
+    /// `(rlo, rhi, series)` tensors once per search plus the block's
+    /// `starts` vector — the gather-indexed analogue of
+    /// [`Self::dispatch_block`]; the host fallback keeps it
+    /// bit-identical meanwhile.
+    fn dispatch_block_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        self.dispatched += 1;
+        self.host.keogh_banded(query, env, starts, dist, tau, &mut self.staged);
+        debug_assert_eq!(self.staged.len(), starts.len());
+        out.extend_from_slice(&self.staged);
+    }
 }
 
 #[cfg(sdtw_pjrt)]
@@ -477,6 +682,34 @@ impl LbKernel for PjrtLbKernel {
         let cap = self.host.capacity();
         for (lo_c, hi_c) in lo.chunks(cap).zip(hi.chunks(cap)) {
             self.dispatch_block(query, lo_c, hi_c, dist, tau, out);
+        }
+    }
+
+    fn kim_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        out: &mut Vec<f32>,
+    ) {
+        // like `kim`, the sort stage's full pass stays on the host
+        self.host.kim_banded(query, env, starts, dist, out);
+    }
+
+    fn keogh_banded(
+        &mut self,
+        query: &[f32],
+        env: &BandEnvelope<'_>,
+        starts: &[usize],
+        dist: Dist,
+        tau: f32,
+        out: &mut Vec<LbVerdict>,
+    ) {
+        out.clear();
+        let cap = self.host.capacity();
+        for starts_c in starts.chunks(cap) {
+            self.dispatch_block_banded(query, env, starts_c, dist, tau, out);
         }
     }
 }
@@ -578,6 +811,68 @@ mod tests {
         k.keogh(&q, &[0.0], &[0.0], Dist::Abs, f32::INFINITY, &mut out);
         assert!(!out[0].pruned && !out[0].abandoned);
         assert_eq!(out[0].bound, 4.0);
+    }
+
+    fn banded_ctx(g: &mut Xoshiro256, n: usize, band: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let series = g.normal_vec_f32(n);
+        let (rlo, rhi) = crate::search::envelope::sakoe_chiba_envelope(&series, band);
+        (series, rlo, rhi)
+    }
+
+    #[test]
+    fn block_kim_banded_matches_scalar_bitwise() {
+        let mut g = Xoshiro256::new(95);
+        for _ in 0..100 {
+            let q = g.normal_vec_f32(1 + g.below(12) as usize);
+            let n = 8 + g.below(40) as usize;
+            let band = g.below(6) as usize;
+            let (series, rlo, rhi) = banded_ctx(&mut g, n, band);
+            let env = BandEnvelope { rlo: &rlo, rhi: &rhi, series: &series };
+            let starts: Vec<usize> = (0..1 + g.below(70) as usize).map(|_| g.below(n as u64) as usize).collect();
+            for dist in [Dist::Sq, Dist::Abs] {
+                let mut want = Vec::new();
+                let mut got = Vec::new();
+                ScalarLbKernel::new().kim_banded(&q, &env, &starts, dist, &mut want);
+                BlockLbKernel::new(8).kim_banded(&q, &env, &starts, dist, &mut got);
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_keogh_banded_matches_scalar_bitwise_with_flags() {
+        let mut g = Xoshiro256::new(96);
+        for trial in 0..200 {
+            let q = g.normal_vec_f32(1 + g.below(10) as usize);
+            let n = 8 + g.below(40) as usize;
+            let band = g.below(6) as usize;
+            let (series, rlo, rhi) = banded_ctx(&mut g, n, band);
+            let env = BandEnvelope { rlo: &rlo, rhi: &rhi, series: &series };
+            let starts: Vec<usize> = (0..1 + g.below(70) as usize).map(|_| g.below(n as u64) as usize).collect();
+            let tau = if g.below(5) == 0 { f32::INFINITY } else { g.uniform(0.0, 8.0) as f32 };
+            for dist in [Dist::Sq, Dist::Abs] {
+                let mut want = Vec::new();
+                let mut got = Vec::new();
+                ScalarLbKernel::new().keogh_banded(&q, &env, &starts, dist, tau, &mut want);
+                for cap in [1usize, 3, 8, 64] {
+                    got.clear();
+                    BlockLbKernel::new(cap).keogh_banded(&q, &env, &starts, dist, tau, &mut got);
+                    assert_eq!(want.len(), got.len());
+                    for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                        assert_eq!(
+                            a.bound.to_bits(),
+                            b.bound.to_bits(),
+                            "trial {trial} cap {cap} lane {k}"
+                        );
+                        assert_eq!(a.pruned, b.pruned, "trial {trial} cap {cap} lane {k}");
+                        assert_eq!(a.abandoned, b.abandoned, "trial {trial} cap {cap} lane {k}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

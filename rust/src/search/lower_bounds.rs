@@ -16,9 +16,46 @@
 //! Hence the cascade chain `LB_Kim <= LB_Keogh <= sDTW(q, w)` holds by
 //! construction: Kim is two terms of Keogh's sum, and Keogh's sum is
 //! dominated by the per-row minimum costs of any path.  Tighter per-row
-//! (banded) envelopes are **not** admissible here: the free start lets a
-//! path align any query row to any window column, so only the full-window
-//! range bounds every alignment.
+//! (banded) envelopes are **not** admissible against the *unconstrained*
+//! cost: the free start lets a path align any query row to any window
+//! column, so only the full-window range bounds every alignment.
+//!
+//! # Banded bounds
+//!
+//! A banded search (`--band B`) replaces the free-start recurrence with
+//! the **anchored** Sakoe-Chiba one
+//! ([`crate::dtw::sdtw_banded_anchored_into`]): the path starts at the
+//! window's column 0 and every cell obeys `|i - j| <= B`.  That anchor
+//! is exactly what restores per-row envelopes to admissibility.  For a
+//! candidate starting at reference position `s`:
+//!
+//! 1. **Row 0 is exact.**  The anchored row 0 is a cumulative run that
+//!    *always* pays `d(q[0], r[s])` as its first term, so the bound may
+//!    charge the exact distance `d(q[0], r[s])` — no interval slack.
+//! 2. **Row `i` is banded.**  Row `i` may only match window columns
+//!    `j ∈ [i-B, i+B]`, i.e. reference positions `t = s+j` with
+//!    `|t - (s+i)| <= B` and `t <= s + width - 1 <= n-1`.  All those
+//!    values lie inside the reference's Sakoe-Chiba envelope at
+//!    `t_i = min(s+i, n-1)`: when `s+i <= n-1` the envelope interval
+//!    `[s+i-B, s+i+B]` covers the reachable span outright, and when
+//!    `s+i > n-1` (short tail window, feasible only thanks to the band)
+//!    every reachable `t` satisfies `t <= n-1` and
+//!    `t >= s+i-B > n-1-B`, so the clipped interval at `n-1` still
+//!    covers it.  Hence `gap(q[i], rlo[t_i], rhi[t_i])` lower-bounds
+//!    row `i`'s contribution.
+//!
+//! [`lb_keogh_banded_verdict`] sums (1) + (2); [`lb_kim_banded`] keeps
+//! terms 0 and M-1 of the same sum, so `Kim <= Keogh` stays a
+//! prefix-of-sum fact (IEEE-754 addition is weakly monotone and every
+//! term is non-negative), and both chain below the anchored banded cost
+//! the banded DP kernels compute.  `sakoe_chiba_envelope` is O(n) once
+//! per search; each candidate then costs O(M) exactly like the
+//! unconstrained bounds — and typically tighter, because each row's
+//! interval spans only `2B+1` reference values instead of the whole
+//! window's `W` (not a per-candidate theorem: for rows `i < B` the
+//! envelope interval reaches left of the window, so the two bounds are
+//! formally incomparable — the win is statistical, measured by the
+//! `banded_search` bench).
 //!
 //! Both bounds support *early abandoning*: once a partial sum exceeds the
 //! caller's threshold the rest of the sum cannot bring it back down
@@ -83,6 +120,81 @@ pub fn lb_keogh_verdict(
                 pruned: true,
                 abandoned: i + 1 < query.len(),
             };
+        }
+    }
+    super::lb_kernel::LbVerdict { bound: sum, pruned: sum > tau, abandoned: false }
+}
+
+// ------------------------------------------------------------- banded
+
+/// The shared context a banded search computes once per reference: the
+/// Sakoe-Chiba envelope of the (normalized) series plus the series
+/// itself.  `rlo[t] = min(series[t-band ..= t+band])` (clipped), `rhi`
+/// the max — [`super::envelope::sakoe_chiba_envelope`]'s output.  Every
+/// candidate's banded bound then reads this one context at its own
+/// offsets; nothing here is per-candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct BandEnvelope<'a> {
+    pub rlo: &'a [f32],
+    pub rhi: &'a [f32],
+    pub series: &'a [f32],
+}
+
+impl<'a> BandEnvelope<'a> {
+    /// The envelope position row `i` of a candidate anchored at `start`
+    /// reads: `min(start + i, n - 1)` — see the module-level clipping
+    /// argument for why the tail clip stays admissible.
+    #[inline(always)]
+    pub fn row_index(&self, start: usize, i: usize) -> usize {
+        (start + i).min(self.series.len() - 1)
+    }
+}
+
+/// Banded LB_Kim for a candidate anchored at `start`: the **exact**
+/// first-cell distance `d(q[0], series[start])` (the anchor forces that
+/// cell onto every path) plus, for M >= 2, the last query row's gap to
+/// the reference envelope at `min(start + M - 1, n - 1)`.  These are
+/// terms 0 and M-1 of [`lb_keogh_banded_verdict`]'s sum, so
+/// `lb_kim_banded <= lb_keogh_banded` bitwise, and both lower-bound the
+/// anchored banded cost.  For M == 1 the anchored cost *is*
+/// `d(q[0], series[start])` (the row-0 run is monotone, its minimum is
+/// its first cell), so the bound is exact.
+pub fn lb_kim_banded(query: &[f32], env: &BandEnvelope<'_>, start: usize, dist: Dist) -> f32 {
+    assert!(!query.is_empty(), "empty query");
+    debug_assert!(start < env.series.len(), "start beyond reference");
+    let first = dist.eval(query[0], env.series[start]);
+    if query.len() == 1 {
+        first
+    } else {
+        let t = env.row_index(start, query.len() - 1);
+        first + interval_gap(query[query.len() - 1], env.rlo[t], env.rhi[t], dist)
+    }
+}
+
+/// Banded LB_Keogh with full accounting, the banded analogue of
+/// [`lb_keogh_verdict`] and the referee loop the block kernel's banded
+/// path is proven bit-identical against: the exact anchored first term,
+/// then per-row envelope gaps at `min(start + i, n - 1)`, abandoning on
+/// the same `sum > tau` predicate after exactly the same term.
+pub fn lb_keogh_banded_verdict(
+    query: &[f32],
+    env: &BandEnvelope<'_>,
+    start: usize,
+    dist: Dist,
+    tau: f32,
+) -> super::lb_kernel::LbVerdict {
+    assert!(!query.is_empty(), "empty query");
+    debug_assert!(start < env.series.len(), "start beyond reference");
+    let m = query.len();
+    let mut sum = dist.eval(query[0], env.series[start]);
+    if sum > tau {
+        return super::lb_kernel::LbVerdict { bound: sum, pruned: true, abandoned: m > 1 };
+    }
+    for (i, &q) in query.iter().enumerate().skip(1) {
+        let t = env.row_index(start, i);
+        sum += interval_gap(q, env.rlo[t], env.rhi[t], dist);
+        if sum > tau {
+            return super::lb_kernel::LbVerdict { bound: sum, pruned: true, abandoned: i + 1 < m };
         }
     }
     super::lb_kernel::LbVerdict { bound: sum, pruned: sum > tau, abandoned: false }
@@ -162,5 +274,111 @@ mod tests {
         let (lo, hi) = range_of(&q);
         assert_eq!(lb_kim(&q, lo, hi, Dist::Sq), 0.0);
         assert_eq!(lb_keogh(&q, lo, hi, Dist::Sq, f32::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn banded_bounds_admissible_vs_anchored_cost() {
+        use crate::dtw::sdtw_banded_anchored_into;
+        use crate::search::envelope::sakoe_chiba_envelope;
+        let mut g = Xoshiro256::new(73);
+        let (mut prev, mut cur) = (Vec::new(), Vec::new());
+        for _ in 0..200 {
+            let m = 1 + g.below(8) as usize;
+            let n = 4 + g.below(28) as usize;
+            let band = g.below(6) as usize;
+            let q = g.normal_vec_f32(m);
+            let r = g.normal_vec_f32(n);
+            let (rlo, rhi) = sakoe_chiba_envelope(&r, band);
+            let env = BandEnvelope { rlo: &rlo, rhi: &rhi, series: &r };
+            for dist in [Dist::Sq, Dist::Abs] {
+                for s in 0..n {
+                    // window = the whole tail: the widest any candidate
+                    // at s can be, so its anchored cost is the smallest
+                    let Some(got) = sdtw_banded_anchored_into(
+                        &q,
+                        &r[s..],
+                        band,
+                        f32::INFINITY,
+                        dist,
+                        &mut prev,
+                        &mut cur,
+                    ) else {
+                        continue; // band-infeasible start: no cost to bound
+                    };
+                    let kim = lb_kim_banded(&q, &env, s, dist);
+                    let keogh =
+                        lb_keogh_banded_verdict(&q, &env, s, dist, f32::INFINITY).bound;
+                    assert!(kim <= keogh, "kim {kim} > keogh {keogh} (s={s} band={band})");
+                    assert!(
+                        keogh <= got.cost * (1.0 + 1e-5) + 1e-6,
+                        "keogh {keogh} > anchored {} (s={s} band={band} m={m})",
+                        got.cost
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_kim_exact_for_single_element_query() {
+        use crate::search::envelope::sakoe_chiba_envelope;
+        let r = [0.5f32, -1.0, 2.0, 0.25];
+        let (rlo, rhi) = sakoe_chiba_envelope(&r, 1);
+        let env = BandEnvelope { rlo: &rlo, rhi: &rhi, series: &r };
+        let q = [1.5f32];
+        for s in 0..r.len() {
+            let want = Dist::Sq.eval(q[0], r[s]);
+            assert_eq!(lb_kim_banded(&q, &env, s, Dist::Sq).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn banded_abandon_is_partial_and_flagged() {
+        use crate::search::envelope::sakoe_chiba_envelope;
+        // query far above a flat reference: every term is 81 (sq)
+        let r = [1.0f32; 8];
+        let (rlo, rhi) = sakoe_chiba_envelope(&r, 2);
+        let env = BandEnvelope { rlo: &rlo, rhi: &rhi, series: &r };
+        let q = [10.0f32; 4];
+        let v = lb_keogh_banded_verdict(&q, &env, 0, Dist::Sq, 100.0);
+        assert!(v.pruned && v.abandoned);
+        assert_eq!(v.bound, 2.0 * 81.0);
+        let full = lb_keogh_banded_verdict(&q, &env, 0, Dist::Sq, f32::INFINITY);
+        assert!(!full.pruned && !full.abandoned);
+        assert_eq!(full.bound, 4.0 * 81.0);
+        // crossing exactly on the last term: pruned but complete
+        let edge = lb_keogh_banded_verdict(&q, &env, 0, Dist::Sq, 3.5 * 81.0);
+        assert!(edge.pruned && !edge.abandoned);
+        assert_eq!(edge.bound, 4.0 * 81.0);
+    }
+
+    #[test]
+    fn banded_tail_clip_stays_admissible() {
+        use crate::dtw::sdtw_banded_anchored_into;
+        use crate::search::envelope::sakoe_chiba_envelope;
+        // starts near the end of the reference: rows clip at n-1
+        let mut g = Xoshiro256::new(75);
+        let (mut prev, mut cur) = (Vec::new(), Vec::new());
+        let r = g.normal_vec_f32(12);
+        let q = g.normal_vec_f32(5);
+        for band in [1usize, 2, 4, 8] {
+            let (rlo, rhi) = sakoe_chiba_envelope(&r, band);
+            let env = BandEnvelope { rlo: &rlo, rhi: &rhi, series: &r };
+            for s in 8..12 {
+                let Some(got) = sdtw_banded_anchored_into(
+                    &q,
+                    &r[s..],
+                    band,
+                    f32::INFINITY,
+                    Dist::Sq,
+                    &mut prev,
+                    &mut cur,
+                ) else {
+                    continue;
+                };
+                let keogh = lb_keogh_banded_verdict(&q, &env, s, Dist::Sq, f32::INFINITY).bound;
+                assert!(keogh <= got.cost * (1.0 + 1e-5) + 1e-6, "s={s} band={band}");
+            }
+        }
     }
 }

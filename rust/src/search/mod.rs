@@ -56,7 +56,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-pub use cascade::{sdtw_window_abandoning, CascadeOpts, CascadeStats};
+pub use cascade::{effective_band, sdtw_window_abandoning, CascadeOpts, CascadeStats};
 pub use index::{CandidateIndex, ReferenceIndex};
 pub use lb_kernel::{
     BlockLbKernel, LbKernel, LbKernelKind, LbKernelSpec, LbVerdict, ScalarLbKernel,

@@ -216,6 +216,10 @@ impl CandidateIndex for StreamingIndex {
     fn stride(&self) -> usize {
         StreamingIndex::stride(self)
     }
+
+    fn series(&self) -> &[f32] {
+        StreamingIndex::reference(self)
+    }
 }
 
 /// Per-(query, params) delta-search state: the exact costs that can

@@ -6,7 +6,7 @@
 //!   {"op":"search","query":[...],"k":5,"window":192,"stride":1,
 //!    "exclusion":96,"shards":4,"parallelism":4,
 //!    "kernel":"scalar|scan|lanes","lanes":8,
-//!    "lb_kernel":"scalar|block","lb_block":64,"stream":b}
+//!    "lb_kernel":"scalar|block","lb_block":64,"band":48,"stream":b}
 //!   {"op":"append","samples":[...],"window":192,"stride":1}
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //!   {"op":"metrics","format":"prometheus"}   (text exposition payload)
@@ -252,6 +252,7 @@ impl Request {
                         lanes: parse_usize(v, "lanes", d.lanes)?,
                         lb_kernel,
                         lb_block: parse_usize(v, "lb_block", d.lb_block)?,
+                        band: parse_usize(v, "band", d.band)?,
                         stream: v.get("stream").and_then(Json::as_bool).unwrap_or(false),
                         explain: v.get("explain").and_then(Json::as_bool).unwrap_or(false),
                     },
@@ -348,6 +349,9 @@ impl Request {
                 if options.lb_block != d.lb_block {
                     pairs.push(("lb_block", Json::Int(options.lb_block as i64)));
                 }
+                if options.band != d.band {
+                    pairs.push(("band", Json::Int(options.band as i64)));
+                }
                 if options.stream {
                     pairs.push(("stream", Json::Bool(true)));
                 }
@@ -422,6 +426,12 @@ pub struct SearchFields {
     /// Keogh evaluations early-abandoned mid-sum (subset of
     /// `pruned_keogh`; 0 from servers predating the field).
     pub lb_abandons: u64,
+    /// Windows accounted to the band-infeasibility pre-prune (0 from
+    /// servers predating band-constrained search).
+    pub pruned_band: u64,
+    /// DP cells skipped by the Sakoe-Chiba band across survivor lanes
+    /// (0 from servers predating band-constrained search).
+    pub band_cells_skipped: u64,
 }
 
 /// One trace span as it crosses the wire (see [`crate::obs::Span`]).
@@ -485,6 +495,12 @@ pub struct MetricsFields {
     pub lb_blocks: u64,
     /// Keogh evaluations early-abandoned mid-sum, all searches.
     pub lb_abandons: u64,
+    /// Windows accounted to the band-infeasibility pre-prune, all
+    /// searches (0 from servers predating band-constrained search).
+    pub pruned_band: u64,
+    /// DP cells skipped by the Sakoe-Chiba band across all searches
+    /// (0 from servers predating band-constrained search).
+    pub band_cells_skipped: u64,
     /// Mean candidates per LB block (0.0 until a block has run).
     pub lb_block_occupancy: f64,
     /// Connections currently open at the serving front end (gauge).
@@ -533,6 +549,8 @@ impl Response {
             survivor_batches: r.stats.survivor_batches,
             lb_blocks: r.stats.lb_blocks,
             lb_abandons: r.stats.lb_abandons,
+            pruned_band: r.stats.pruned_band,
+            band_cells_skipped: r.stats.band_cells_skipped,
         }))
     }
 
@@ -567,6 +585,8 @@ impl Response {
             lane_occupancy: m.search_lane_occupancy_mean,
             lb_blocks: m.search_lb_blocks,
             lb_abandons: m.search_lb_abandons,
+            pruned_band: m.search_pruned_band,
+            band_cells_skipped: m.search_band_cells_skipped,
             lb_block_occupancy: m.search_lb_block_occupancy_mean,
             conns_open: m.conns_open,
             frames_oversized: m.frames_oversized,
@@ -650,6 +670,8 @@ impl Response {
                     ("survivor_batches", Json::Int(s.survivor_batches as i64)),
                     ("lb_blocks", Json::Int(s.lb_blocks as i64)),
                     ("lb_abandons", Json::Int(s.lb_abandons as i64)),
+                    ("pruned_band", Json::Int(s.pruned_band as i64)),
+                    ("band_cells_skipped", Json::Int(s.band_cells_skipped as i64)),
                 ])
                 .to_string()
             }
@@ -705,6 +727,8 @@ impl Response {
                     ("lane_occupancy", Json::Num(m.lane_occupancy)),
                     ("lb_blocks", Json::Int(m.lb_blocks as i64)),
                     ("lb_abandons", Json::Int(m.lb_abandons as i64)),
+                    ("pruned_band", Json::Int(m.pruned_band as i64)),
+                    ("band_cells_skipped", Json::Int(m.band_cells_skipped as i64)),
                     ("lb_block_occupancy", Json::Num(m.lb_block_occupancy)),
                     ("conns_open", Json::Int(m.conns_open as i64)),
                     ("frames_oversized", Json::Int(m.frames_oversized as i64)),
@@ -787,6 +811,8 @@ impl Response {
                 survivor_batches: int("survivor_batches"),
                 lb_blocks: int("lb_blocks"),
                 lb_abandons: int("lb_abandons"),
+                pruned_band: int("pruned_band"),
+                band_cells_skipped: int("band_cells_skipped"),
             })));
         }
         if v.get("appended").is_some() {
@@ -866,6 +892,8 @@ impl Response {
                 lane_occupancy: num("lane_occupancy"),
                 lb_blocks: int("lb_blocks"),
                 lb_abandons: int("lb_abandons"),
+                pruned_band: int("pruned_band"),
+                band_cells_skipped: int("band_cells_skipped"),
                 lb_block_occupancy: num("lb_block_occupancy"),
                 conns_open: int("conns_open"),
                 frames_oversized: int("frames_oversized"),
@@ -941,6 +969,7 @@ mod tests {
                 lanes: 16,
                 lb_kernel: LbKernelKind::Block,
                 lb_block: 32,
+                band: 24,
                 stream: false,
                 explain: false,
             },
@@ -950,6 +979,7 @@ mod tests {
         assert!(enc.contains("\"shards\":4") && enc.contains("\"parallelism\":2"));
         assert!(enc.contains("\"kernel\":\"lanes\"") && enc.contains("\"lanes\":16"));
         assert!(enc.contains("\"lb_kernel\":\"block\"") && enc.contains("\"lb_block\":32"));
+        assert!(enc.contains("\"band\":24"));
         assert_eq!(Request::parse(&enc).unwrap(), custom);
         // sharding/kernel fields omitted on the wire parse as the
         // serial-scalar default
@@ -962,6 +992,7 @@ mod tests {
                 assert_eq!(options.lanes, 0);
                 assert_eq!(options.lb_kernel, LbKernelKind::Scalar);
                 assert_eq!(options.lb_block, 0);
+                assert_eq!(options.band, 0);
                 assert!(!options.stream);
                 assert!(!options.explain);
             }
@@ -986,6 +1017,23 @@ mod tests {
         let scalar = Request::Search { query: vec![1.0], options: SearchOptions::default() };
         assert!(!scalar.encode().contains("lb_kernel"));
         assert!(!scalar.encode().contains("lb_block"));
+    }
+
+    #[test]
+    fn search_request_band_roundtrip() {
+        let req = Request::Search {
+            query: vec![1.0, 2.0],
+            options: SearchOptions { band: 48, ..Default::default() },
+        };
+        let enc = req.encode();
+        assert!(enc.contains("\"band\":48"));
+        assert_eq!(Request::parse(&enc).unwrap(), req);
+        // the default (0 = unconstrained) stays off the wire
+        let off = Request::Search { query: vec![1.0], options: SearchOptions::default() };
+        assert!(!off.encode().contains("band"));
+        // malformed bands rejected
+        assert!(Request::parse(r#"{"op":"search","query":[1],"band":-2}"#).is_err());
+        assert!(Request::parse(r#"{"op":"search","query":[1],"band":"x"}"#).is_err());
     }
 
     #[test]
@@ -1133,6 +1181,8 @@ mod tests {
             survivor_batches: 80,
             lb_blocks: 0,
             lb_abandons: 0,
+            pruned_band: 0,
+            band_cells_skipped: 0,
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
         // empty hit list still recognized as a search response; a k=0
@@ -1151,6 +1201,8 @@ mod tests {
             survivor_batches: 0,
             lb_blocks: 0,
             lb_abandons: 0,
+            pruned_band: 0,
+            band_cells_skipped: 0,
         }));
         assert_eq!(Response::parse(&empty.encode()).unwrap(), empty);
     }
@@ -1193,6 +1245,8 @@ mod tests {
                 survivor_batches: 1,
                 lb_blocks: 0,
                 lb_abandons: 0,
+                pruned_band: 0,
+                band_cells_skipped: 0,
             }));
             let got = match Response::parse(&resp.encode()).unwrap() {
                 Response::Search(s) => s.hits[0].cost,
@@ -1248,6 +1302,8 @@ mod tests {
             lane_occupancy: 6.5,
             lb_blocks: 128,
             lb_abandons: 9,
+            pruned_band: 42,
+            band_cells_skipped: 100_000,
             lb_block_occupancy: 41.5,
             conns_open: 5,
             frames_oversized: 1,
@@ -1474,6 +1530,7 @@ mod tests {
                     lanes: 4,
                     lb_kernel: LbKernelKind::Block,
                     lb_block: 8,
+                    band: 4,
                     stream: true,
                     explain: true,
                 },
@@ -1499,6 +1556,8 @@ mod tests {
                 survivor_batches: 1,
                 lb_blocks: 1,
                 lb_abandons: 1,
+                pruned_band: 1,
+                band_cells_skipped: 6,
             }))
             .encode(),
             Response::Append(AppendFields {

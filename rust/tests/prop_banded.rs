@@ -1,0 +1,336 @@
+//! Property tests for band-constrained (Sakoe-Chiba) search: every DP
+//! kernel's banded path is bit-identical to the anchored banded oracle
+//! (`dtw::sdtw_banded_anchored_into`), a band that covers the window is
+//! bit-identical to the unconstrained search, and the banded cascade's
+//! top-K is invariant across the serial, sharded, and streaming-delta
+//! executors with partition-exact counters.  Via the in-repo property
+//! harness.
+
+use std::sync::Arc;
+
+use sdtw_repro::dtw::{
+    band_feasible, sdtw_banded, sdtw_banded_anchored_into, Dist, KernelKind, KernelSpec, Lane,
+};
+use sdtw_repro::search::{
+    select_topk, CascadeOpts, Hit, LbKernelSpec, ReferenceIndex, SearchEngine, StreamingEngine,
+};
+use sdtw_repro::testutil::check;
+
+/// Random-walk style series (levels drift — the family where envelopes
+/// and bands both do real work).
+fn walk(g: &mut sdtw_repro::testutil::GenCtx, lo: usize, hi: usize) -> Vec<f32> {
+    let base = g.vec_f32(lo, hi);
+    let mut level = 0f32;
+    base.iter()
+        .map(|&step| {
+            level += step * 0.5;
+            level
+        })
+        .collect()
+}
+
+/// Banded brute force: cost every candidate window with the anchored
+/// banded oracle, then the shared greedy selection.
+fn banded_brute_topk(
+    query: &[f32],
+    index: &ReferenceIndex,
+    band: usize,
+    k: usize,
+    exclusion: usize,
+) -> Vec<Hit> {
+    let mut prev = Vec::new();
+    let mut cur = Vec::new();
+    let mut hits = Vec::new();
+    for t in 0..index.candidates() {
+        if let Some(m) = sdtw_banded_anchored_into(
+            query,
+            index.window_slice(t),
+            band,
+            f32::INFINITY,
+            Dist::Sq,
+            &mut prev,
+            &mut cur,
+        ) {
+            let start = index.start(t);
+            hits.push(Hit { start, end: start + m.end, cost: m.cost });
+        }
+    }
+    select_topk(&hits, k, exclusion)
+}
+
+fn assert_bit_identical(label: &str, a: &[Hit], b: &[Hit]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{label}: {} vs {} hits", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.start != y.start || x.end != y.end || x.cost.to_bits() != y.cost.to_bits() {
+            return Err(format!("{label}: hit {i} differs: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_banded_kernels_bit_identical_to_anchored_oracle() {
+    // every DpKernel::run_banded over ragged lanes == the anchored
+    // oracle, cell for cell, including infeasible lanes (None) and the
+    // early-abandon threshold
+    check(801, 150, |g| {
+        let n_lanes = g.usize_in(1, 9);
+        let mut queries = Vec::with_capacity(n_lanes);
+        let mut windows = Vec::with_capacity(n_lanes);
+        for _ in 0..n_lanes {
+            queries.push(g.vec_f32(1, 12));
+            windows.push(walk(g, 1, 24));
+        }
+        let lanes: Vec<Lane<'_>> = queries
+            .iter()
+            .zip(&windows)
+            .map(|(q, w)| Lane { query: q, window: w })
+            .collect();
+        let band = g.usize_in(0, 16); // 0 is a legal (degenerate) radius here
+        let abandon_at = if g.usize_in(0, 1) == 0 { f32::INFINITY } else { 4.0 };
+
+        // oracle per lane
+        let mut prev = Vec::new();
+        let mut cur = Vec::new();
+        let want: Vec<_> = lanes
+            .iter()
+            .map(|l| {
+                sdtw_banded_anchored_into(
+                    l.query,
+                    l.window,
+                    band,
+                    abandon_at,
+                    Dist::Sq,
+                    &mut prev,
+                    &mut cur,
+                )
+            })
+            .collect();
+
+        let specs = [
+            KernelSpec::SCALAR,
+            KernelSpec { kind: KernelKind::Scan, width: g.usize_in(1, 8), lanes: 0 },
+            KernelSpec { kind: KernelKind::Lanes, width: 0, lanes: g.usize_in(1, 6) },
+        ];
+        let mut got = Vec::new();
+        for spec in specs {
+            let mut kernel = spec.instantiate();
+            kernel.run_banded(&lanes, band, abandon_at, Dist::Sq, &mut got);
+            if got.len() != want.len() {
+                return Err(format!("{}: {} results for {} lanes", kernel.name(), got.len(), want.len()));
+            }
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                let same = match (a, b) {
+                    (None, None) => true,
+                    (Some(x), Some(y)) => {
+                        x.end == y.end && x.cost.to_bits() == y.cost.to_bits()
+                    }
+                    _ => false,
+                };
+                if !same {
+                    return Err(format!(
+                        "{} lane {i} (band {band}): {a:?} vs oracle {b:?}",
+                        kernel.name()
+                    ));
+                }
+                let feasible = band_feasible(lanes[i].query.len(), lanes[i].window.len(), band);
+                if !feasible && a.is_some() {
+                    return Err(format!(
+                        "{} lane {i}: infeasible band {band} produced {a:?}",
+                        kernel.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_global_banded_oracle_is_min_over_anchored_starts() {
+    // sdtw_banded over the whole reference == the best anchored banded
+    // alignment over every start's tail — the identity that makes the
+    // stride-1 banded search a faithful decomposition of the global scan
+    check(802, 150, |g| {
+        let q = g.vec_f32(1, 10);
+        let r = walk(g, 1, 40);
+        let band = g.usize_in(1, 12);
+        let global = sdtw_banded(&q, &r, band, Dist::Sq);
+        let mut prev = Vec::new();
+        let mut cur = Vec::new();
+        let mut best: Option<(f32, usize)> = None;
+        for s in 0..r.len() {
+            if let Some(m) = sdtw_banded_anchored_into(
+                &q,
+                &r[s..],
+                band,
+                f32::INFINITY,
+                Dist::Sq,
+                &mut prev,
+                &mut cur,
+            ) {
+                // same tie policy as sdtw_banded: strict improvement in
+                // the same start order keeps the earliest start on ties
+                if best.map_or(true, |(c, _)| m.cost < c) {
+                    best = Some((m.cost, s + m.end));
+                }
+            }
+        }
+        match best {
+            None => {
+                if global.cost.is_finite() {
+                    return Err(format!("no anchored start but global {global:?}"));
+                }
+            }
+            Some((cost, end)) => {
+                if cost.to_bits() != global.cost.to_bits() || end != global.end {
+                    return Err(format!(
+                        "anchored min ({cost}, {end}) != global {global:?} (band {band})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_band_covering_window_is_bit_identical_to_unconstrained() {
+    // band >= window resolves to the unconstrained search at the options
+    // layer: hits AND stats must be identical, bit for bit
+    check(803, 100, |g| {
+        let r = Arc::new(walk(g, 40, 160));
+        let m = g.usize_in(3, 10);
+        let window = g.usize_in(m, (m + 10).min(r.len()));
+        let k = g.usize_in(1, 4);
+        let exclusion = g.usize_in(0, window);
+        let q = g.vec_f32(m, m);
+        let engine =
+            SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let base = engine
+            .search_opts(&q, k, exclusion, CascadeOpts::default(), 1)
+            .map_err(|e| e.to_string())?;
+        for band in [window, window + 1, window + 977] {
+            let opts = CascadeOpts::default().with_band(band);
+            let got = engine
+                .search_opts(&q, k, exclusion, opts, 1)
+                .map_err(|e| e.to_string())?;
+            if got != base {
+                return Err(format!("band {band} (window {window}) diverged: {got:?}"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_banded_cascade_topk_invariant_across_executors() {
+    // the acceptance invariant: banded cascade top-K == banded brute
+    // force, identically on the serial, sharded, and streaming-delta
+    // paths, with partition-exact counters everywhere
+    check(804, 80, |g| {
+        let r = Arc::new(walk(g, 60, 200));
+        let m = g.usize_in(3, 10);
+        let window = g.usize_in(m, (m + 10).min(r.len()));
+        let k = g.usize_in(1, 4);
+        let exclusion = g.usize_in(1, window);
+        let band = g.usize_in(1, window.saturating_sub(1).max(1));
+        let q = g.vec_f32(m, m);
+        let engine =
+            SearchEngine::new(r.clone(), window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let brute = banded_brute_topk(&q, engine.index(), band, k, exclusion);
+
+        let variants = [
+            CascadeOpts::default(),
+            CascadeOpts::default().with_kernel(KernelSpec {
+                kind: KernelKind::Lanes,
+                width: 0,
+                lanes: g.usize_in(1, 5),
+            }),
+            CascadeOpts::default().with_lb(LbKernelSpec::block(g.usize_in(1, 8))),
+        ];
+        for base in variants {
+            let opts = base.with_band(band);
+            let serial = engine
+                .search_opts(&q, k, exclusion, opts, 1)
+                .map_err(|e| e.to_string())?;
+            assert_bit_identical("serial", &serial.hits, &brute)?;
+            let s = serial.stats;
+            if s.pruned_total() + s.dp_full != s.candidates {
+                return Err(format!("serial counters don't partition: {s:?}"));
+            }
+
+            let shards = g.usize_in(2, 5);
+            let sharded = engine
+                .search_opts(&q, k, exclusion, opts, shards)
+                .map_err(|e| e.to_string())?;
+            assert_bit_identical("sharded", &sharded.hits, &brute)?;
+            let s = sharded.stats;
+            if s.pruned_total() + s.dp_full != s.candidates {
+                return Err(format!("sharded counters don't partition: {s:?}"));
+            }
+        }
+
+        // streaming: warm up on a prefix, append the rest in chunks, and
+        // delta-search with the band — hits must match the rebuilt brute
+        let opts = CascadeOpts::default().with_band(band);
+        let warm = g.usize_in(window, r.len());
+        let mut stream =
+            StreamingEngine::new(&r[..warm], window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        // a mid-stream banded search populates the delta cache so the
+        // final pass exercises the watermark path, not a cold rebuild
+        stream
+            .search_delta(&q, k, exclusion, opts)
+            .map_err(|e| e.to_string())?;
+        let mut at = warm;
+        while at < r.len() {
+            let end = (at + g.usize_in(1, 40)).min(r.len());
+            stream.append(&r[at..end]);
+            at = end;
+        }
+        let d = stream
+            .search_delta(&q, k, exclusion, opts)
+            .map_err(|e| e.to_string())?;
+        assert_bit_identical("streaming", &d.outcome.hits, &brute)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_infeasible_band_prunes_everything() {
+    // query longer than window + band: no candidate can align inside the
+    // band, the whole range lands in `pruned_band`, and no stage runs
+    check(805, 80, |g| {
+        let r = Arc::new(walk(g, 40, 120));
+        let window = g.usize_in(2, 12.min(r.len()));
+        // band must stay < window or the options layer resolves it to
+        // the unconstrained search
+        let band = g.usize_in(1, (window - 1).min(4));
+        let m = window + band + g.usize_in(1, 6); // strictly infeasible
+        let q = g.vec_f32(m, m);
+        if band_feasible(q.len(), window, band) {
+            return Err("generator produced a feasible shape".into());
+        }
+        let engine =
+            SearchEngine::new(r, window, 1, Dist::Sq).map_err(|e| e.to_string())?;
+        let opts = CascadeOpts::default().with_band(band);
+        let out = engine
+            .search_opts(&q, 3, 1, opts, 1)
+            .map_err(|e| e.to_string())?;
+        if !out.hits.is_empty() {
+            return Err(format!("infeasible band produced hits: {:?}", out.hits));
+        }
+        let s = out.stats;
+        if s.pruned_band != s.candidates || s.dp_full != 0 || s.survivor_batches != 0 {
+            return Err(format!("infeasible band mis-accounted: {s:?}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
