@@ -1,0 +1,533 @@
+#!/usr/bin/env python3
+"""Repo-invariant lint: enforce the cross-cutting rules the Rust tree
+keeps by hand (sibling of bench_check.py, same --selftest contract).
+
+Four rule classes, each with a FAIL line per violation:
+
+  * **relaxed**: every ``Ordering::Relaxed`` in rust/src either lives in
+    a whitelisted file (whole-file justification below) or carries a
+    justification comment mentioning "Relaxed" on the same line or the
+    three lines above.  Memory-ordering relaxations are load-bearing
+    correctness arguments; they don't get to be implicit.
+  * **wiring**: every ``pub <name>: u64`` counter field of
+    ``CascadeStats`` and ``MetricsSnapshot`` is wired end-to-end — proto
+    encode+parse (>= 2 occurrences in server/proto.rs), the text
+    ``render``, the Prometheus exposition, and docs/METRICS.md — or is
+    exempted *with a reason* in the wiring tables below.  Adding a
+    counter without touching every surface (or consciously exempting
+    it) fails the lint; that is the "wired end-to-end" rule from
+    docs/METRICS.md made mechanical.
+  * **kernel**: the kernel modules (dtw/, search/lower_bounds.rs,
+    search/lb_kernel.rs) contain no nondeterminism sources — hash-map
+    iteration, wall-clock time, randomness outside util/rng.  These
+    files carry the bit-identity proofs; a HashMap iteration order or a
+    timestamp in one would silently void them.
+  * **unsafe**: ``#![forbid(unsafe_code)]`` stays at the top of
+    rust/src/lib.rs (the fuzz workspace is a separate crate and stays
+    out of scope).
+
+``--selftest`` copies the tree to a tempdir, injects one synthetic
+violation per rule class (an unjustified Relaxed, an unwired counter
+field, a severed docs surface, a HashMap in a kernel module, a removed
+forbid attribute), and exits 0 only if every class fires — proof the
+lint can actually fail — after first requiring the pristine copy to
+pass clean.
+"""
+
+import argparse
+import os
+import re
+import shutil
+import sys
+import tempfile
+
+# --------------------------------------------------------------------------
+# rule 1: Ordering::Relaxed justification
+# --------------------------------------------------------------------------
+
+# Whole-file whitelist: files whose *every* Relaxed shares one argument.
+RELAXED_WHITELIST = {
+    "rust/src/coordinator/metrics.rs":
+        "monotonic event counters; cross-counter snapshot coherence is "
+        "explicitly not promised (docs/METRICS.md)",
+    "rust/src/util/logger.rs":
+        "log-level gate and drop counters; a stale read costs at most "
+        "one log line, never correctness",
+    "rust/src/obs/mod.rs":
+        "trace ids and sampling counters; observability is provably "
+        "inert (rust/tests/prop_obs.rs)",
+    "rust/src/coordinator/service.rs":
+        "request-id allocation via fetch_add; uniqueness needs the "
+        "RMW's atomicity, not ordering",
+}
+
+# How many lines above a Relaxed a justification comment may sit.
+RELAXED_COMMENT_WINDOW = 3
+
+
+def check_relaxed(root):
+    failures = []
+    for relpath, text in rust_sources(root):
+        lines = text.splitlines()
+        hits = [i for i, l in enumerate(lines) if "Ordering::Relaxed" in l]
+        if not hits:
+            continue
+        if relpath in RELAXED_WHITELIST:
+            continue
+        for i in hits:
+            window = lines[max(0, i - RELAXED_COMMENT_WINDOW): i + 1]
+            justified = any(
+                "//" in l and "Relaxed" in l.split("//", 1)[1] for l in window
+            )
+            if not justified:
+                failures.append(
+                    f"relaxed: {relpath}:{i + 1}: Ordering::Relaxed without a "
+                    f"justification comment (mention 'Relaxed' in a comment "
+                    f"within {RELAXED_COMMENT_WINDOW} lines, or whitelist the "
+                    f"file with a reason in ci/lint_invariants.py)"
+                )
+    # a stale whitelist entry is itself a failure: it would silently
+    # stop covering the file it claims to
+    for relpath in RELAXED_WHITELIST:
+        if not os.path.isfile(os.path.join(root, relpath)):
+            failures.append(f"relaxed: whitelist entry {relpath} does not exist")
+    return failures
+
+
+# --------------------------------------------------------------------------
+# rule 2: counter wiring (the "wired end-to-end" rule)
+# --------------------------------------------------------------------------
+
+PROTO = "rust/src/server/proto.rs"
+METRICS = "rust/src/coordinator/metrics.rs"
+CASCADE = "rust/src/search/cascade.rs"
+DOCS = "docs/METRICS.md"
+
+
+def EX(reason):
+    return ("exempt", reason)
+
+
+# CascadeStats: per-search counters.  Surfaces: the wire (search
+# responses in proto.rs), the metrics sink (the snapshot counterpart in
+# metrics.rs), and docs/METRICS.md (documented under its snapshot name).
+# Entries override the default token (= "<field>" on proto, and
+# "search_<field>" on metrics/docs); EX(reason) waives a surface.
+CASCADE_WIRING = {
+    "candidates": {"proto": "windows", "metrics": "search_windows",
+                   "docs": "search_windows"},
+    "skipped": {"metrics": "search_skipped", "docs": "search_skipped"},
+    "lb_evals": {
+        "proto": EX("not on the wire: occupancy is the derived form "
+                    "(documented in METRICS.md)"),
+    },
+}
+
+# MetricsSnapshot: process counters.  Surfaces: proto.rs (the metrics
+# verb), the render() body, the render_prometheus() body, METRICS.md.
+# Default token everywhere is the field name itself ("self.<field>" for
+# the two render bodies).
+SNAPSHOT_WIRING = {
+    "errors": {"proto": EX("not on the metrics verb; exposed via render "
+                           "and sdtw_errors_total")},
+    "rejected": {"proto": EX("not on the metrics verb; exposed via render "
+                             "and sdtw_rejected_total")},
+    "real_rows": {
+        "proto": EX("wire carries the derived padding_fraction"),
+        "render": EX("rendered as the derived padding= percentage"),
+        "prometheus": EX("exposed via the derived gsps/padding gauges"),
+    },
+    "padded_rows": {
+        "proto": EX("wire carries the derived padding_fraction"),
+        "render": EX("rendered as the derived padding= percentage"),
+        "prometheus": EX("exposed via the derived gsps/padding gauges"),
+    },
+    "floats_processed": {
+        "proto": EX("wire carries the derived device/offered gsps"),
+        "render": EX("rendered as the derived gsps rates"),
+        "prometheus": EX("exposed via the derived sdtw_device_gsps gauge"),
+    },
+    "cells": {
+        "proto": EX("wire carries the derived device/offered gsps"),
+        "render": EX("rendered as the derived gsps rates"),
+        "prometheus": EX("exposed via the derived sdtw_device_gsps gauge"),
+    },
+    "search_skipped": {
+        "proto": EX("wire carries search_pruned (the total); the per-stage "
+                    "split rides each search response"),
+        "render": EX("folded into the pruned=% aggregate "
+                     "(search_pruned_total())"),
+        "prometheus": EX("included in sdtw_search_prune_fraction; k=0-only "
+                         "diagnostic otherwise"),
+    },
+    "search_pruned_kim": {
+        "proto": EX("wire carries search_pruned (the total); the per-stage "
+                    "split rides each search response"),
+    },
+    "search_pruned_keogh": {
+        "proto": EX("wire carries search_pruned (the total); the per-stage "
+                    "split rides each search response"),
+    },
+    "search_dp_abandoned": {
+        "proto": EX("wire carries search_pruned (the total); the per-stage "
+                    "split rides each search response"),
+    },
+    "search_dp_full": {
+        "proto": EX("wire carries search_pruned (the total); dp_full rides "
+                    "each search response"),
+    },
+    "search_survivor_batches": {
+        "proto": "survivor_batches",
+        "prometheus": EX("DP-kernel occupancy diagnostic; render + metrics "
+                         "verb only"),
+    },
+    "search_lb_blocks": {
+        "proto": "lb_blocks",
+        "prometheus": EX("LB-kernel occupancy diagnostic; render + metrics "
+                         "verb only"),
+    },
+    "search_lb_evals": {
+        "proto": EX("not on the wire; lb_block_occupancy is the derived "
+                    "form"),
+        "render": EX("exposed as the derived lb_occupancy mean"),
+        "prometheus": EX("exposed as the derived lb_occupancy mean"),
+    },
+    "search_lb_abandons": {
+        "proto": "lb_abandons",
+        "prometheus": EX("LB-kernel occupancy diagnostic; render + metrics "
+                         "verb only"),
+    },
+    "search_pruned_band": {"proto": "pruned_band"},
+    "search_band_cells_skipped": {"proto": "band_cells_skipped"},
+    "searches_sharded": {
+        "prometheus": EX("sharded-executor diagnostic; render + metrics "
+                         "verb only"),
+    },
+    "search_shards": {
+        "proto": EX("render-only; the wire carries searches_sharded and "
+                    "search_tightenings"),
+        "prometheus": EX("sharded-executor diagnostic; render only"),
+    },
+    "search_tau_tightenings": {
+        "proto": "search_tightenings",
+        "prometheus": EX("sharded-executor diagnostic; render + metrics "
+                         "verb only"),
+    },
+    "search_imbalance_samples": {
+        "proto": EX("render-only imbalance diagnostics; the mean is "
+                    "derived"),
+        "prometheus": EX("render-only imbalance diagnostics"),
+    },
+    "stream_samples": {
+        "prometheus": EX("sdtw_stream_appends_total is the Prometheus "
+                         "counter; samples ride the metrics verb"),
+    },
+    "delta_searches": {},
+    "delta_candidates_scanned": {
+        "proto": "delta_scanned",
+        "prometheus": EX("sdtw_delta_searches_total is the Prometheus "
+                         "counter; scanned/skipped ride the metrics verb"),
+    },
+    "delta_candidates_skipped": {
+        "proto": "delta_skipped",
+        "prometheus": EX("sdtw_delta_searches_total is the Prometheus "
+                         "counter; scanned/skipped ride the metrics verb"),
+    },
+}
+
+
+def struct_u64_fields(text, struct_name):
+    """Extract the pub u64 field names of one struct by brace matching."""
+    m = re.search(rf"pub struct {struct_name}\b[^{{]*{{", text)
+    if not m:
+        return None
+    depth, i = 1, m.end()
+    start = m.end()
+    while i < len(text) and depth:
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+        i += 1
+    body = text[start:i]
+    return re.findall(r"pub (\w+): u64", body)
+
+
+def fn_body(text, needle):
+    """Extract one fn's body (brace-matched) starting at `needle`."""
+    at = text.find(needle)
+    if at < 0:
+        return None
+    brace = text.find("{", at)
+    if brace < 0:
+        return None
+    depth, i = 1, brace + 1
+    while i < len(text) and depth:
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+        i += 1
+    return text[brace + 1:i]
+
+
+def has_token(text, token, minimum=1):
+    return len(re.findall(rf"\b{re.escape(token)}\b", text)) >= minimum
+
+
+def check_wiring(root):
+    failures = []
+
+    def read(rel):
+        path = os.path.join(root, rel)
+        if not os.path.isfile(path):
+            failures.append(f"wiring: required file {rel} is missing")
+            return None
+        with open(path, encoding="utf-8") as f:
+            return f.read()
+
+    proto = read(PROTO)
+    metrics = read(METRICS)
+    cascade = read(CASCADE)
+    docs = read(DOCS)
+    if None in (proto, metrics, cascade, docs):
+        return failures
+
+    render = fn_body(metrics, "pub fn render(&self)")
+    prom = fn_body(metrics, "pub fn render_prometheus(&self)")
+    if render is None or prom is None:
+        failures.append(
+            "wiring: could not locate render()/render_prometheus() in "
+            f"{METRICS} — the lint's surface extraction needs updating"
+        )
+        return failures
+
+    def check(struct, field, wiring, surfaces):
+        spec = wiring.get(field, {})
+        unknown = set(spec) - set(surfaces)
+        if unknown:
+            failures.append(
+                f"wiring: {struct}.{field}: unknown surface(s) "
+                f"{sorted(unknown)} in the wiring table"
+            )
+        for surface, (text, default, where, minimum) in surfaces.items():
+            entry = spec.get(surface, default)
+            if isinstance(entry, tuple) and entry[0] == "exempt":
+                continue  # consciously waived, with a recorded reason
+            if not has_token(text, entry, minimum):
+                need = f" (>= {minimum} occurrences)" if minimum > 1 else ""
+                failures.append(
+                    f"wiring: {struct}.{field}: token '{entry}' not found in "
+                    f"{where}{need} — wire the counter end-to-end or exempt "
+                    f"it with a reason in ci/lint_invariants.py"
+                )
+
+    fields = struct_u64_fields(cascade, "CascadeStats")
+    if fields is None or len(fields) < 5:
+        failures.append(
+            f"wiring: CascadeStats extraction from {CASCADE} returned "
+            f"{fields!r} — the struct moved or the parser broke; an empty "
+            f"field list would vacuously pass, so this is a hard failure"
+        )
+    else:
+        for f in fields:
+            check("CascadeStats", f, CASCADE_WIRING, {
+                "proto": (proto, f, PROTO, 2),
+                "metrics": (metrics, f"search_{f}", METRICS, 1),
+                "docs": (docs, f"search_{f}", DOCS, 1),
+            })
+
+    fields = struct_u64_fields(metrics, "MetricsSnapshot")
+    if fields is None or len(fields) < 10:
+        failures.append(
+            f"wiring: MetricsSnapshot extraction from {METRICS} returned "
+            f"{fields!r} — the struct moved or the parser broke; an empty "
+            f"field list would vacuously pass, so this is a hard failure"
+        )
+    else:
+        for f in fields:
+            check("MetricsSnapshot", f, SNAPSHOT_WIRING, {
+                "proto": (proto, f, PROTO, 2),
+                "render": (render, f, f"{METRICS} render()", 1),
+                "prometheus": (prom, f, f"{METRICS} render_prometheus()", 1),
+                "docs": (docs, f, DOCS, 1),
+            })
+    return failures
+
+
+# --------------------------------------------------------------------------
+# rule 3: kernel-module determinism
+# --------------------------------------------------------------------------
+
+KERNEL_PATHS = ["rust/src/dtw", "rust/src/search/lower_bounds.rs",
+                "rust/src/search/lb_kernel.rs"]
+# Nondeterminism sources: unordered iteration, wall-clock time, and
+# randomness.  Seeded determinism via util::rng is the one allowed form.
+KERNEL_FORBIDDEN = [
+    r"\bHashMap\b", r"\bHashSet\b", r"\bInstant\b", r"\bSystemTime\b",
+    r"\bthread_rng\b", r"\brandom\b", r"\brand\b",
+]
+
+
+def check_kernel(root):
+    failures = []
+    files = []
+    for rel in KERNEL_PATHS:
+        path = os.path.join(root, rel)
+        if os.path.isdir(path):
+            for dirpath, _, names in sorted(os.walk(path)):
+                files += [os.path.join(dirpath, n)
+                          for n in sorted(names) if n.endswith(".rs")]
+        elif os.path.isfile(path):
+            files.append(path)
+        else:
+            failures.append(f"kernel: expected kernel module {rel} is missing")
+    for path in files:
+        rel = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines):
+            code = line.split("//", 1)[0]  # comments may *talk* about these
+            if "util::rng" in code:
+                continue  # the one sanctioned (seeded, deterministic) source
+            for pat in KERNEL_FORBIDDEN:
+                if re.search(pat, code):
+                    failures.append(
+                        f"kernel: {rel}:{i + 1}: nondeterminism source "
+                        f"{pat} in a kernel module (bit-identity depends on "
+                        f"these files being pure)"
+                    )
+    return failures
+
+
+# --------------------------------------------------------------------------
+# rule 4: forbid(unsafe_code)
+# --------------------------------------------------------------------------
+
+def check_unsafe(root):
+    path = os.path.join(root, "rust/src/lib.rs")
+    if not os.path.isfile(path):
+        return ["unsafe: rust/src/lib.rs is missing"]
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    if "#![forbid(unsafe_code)]" not in text:
+        return ["unsafe: rust/src/lib.rs lost #![forbid(unsafe_code)]"]
+    return []
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def rust_sources(root):
+    src = os.path.join(root, "rust/src")
+    for dirpath, _, names in sorted(os.walk(src)):
+        for name in sorted(names):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            with open(path, encoding="utf-8") as f:
+                yield os.path.relpath(path, root), f.read()
+
+
+def run_all(root):
+    return (check_relaxed(root) + check_wiring(root)
+            + check_kernel(root) + check_unsafe(root))
+
+
+def selftest(root):
+    """Inject one violation per rule class; every class must fire."""
+
+    def fresh_copy(tmp):
+        dst = os.path.join(tmp, "tree")
+        os.makedirs(os.path.join(dst, "rust"))
+        shutil.copytree(os.path.join(root, "rust/src"),
+                        os.path.join(dst, "rust/src"))
+        os.makedirs(os.path.join(dst, "docs"))
+        shutil.copy(os.path.join(root, DOCS), os.path.join(dst, DOCS))
+        return dst
+
+    def mutate(rel, fn):
+        def apply(dst):
+            path = os.path.join(dst, rel)
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(fn(text))
+        return apply
+
+    injections = [
+        ("relaxed", mutate(
+            "rust/src/search/mod.rs",
+            lambda t: t + "\nfn _lint_probe() -> u32 {\n"
+                         "    static P: std::sync::atomic::AtomicU32 =\n"
+                         "        std::sync::atomic::AtomicU32::new(0);\n"
+                         "    P.load(std::sync::atomic::Ordering::Relaxed)\n"
+                         "}\n")),
+        ("wiring", mutate(
+            CASCADE,
+            lambda t: t.replace("pub struct CascadeStats {",
+                                "pub struct CascadeStats {\n"
+                                "    pub injected_unwired_counter: u64,", 1))),
+        ("wiring", mutate(
+            DOCS,
+            lambda t: t.replace("search_tau_tightenings", "REDACTED"))),
+        ("kernel", mutate(
+            "rust/src/dtw/mod.rs",
+            lambda t: t + "\nfn _probe() { "
+                         "let _ = std::collections::HashMap::<u32, u32>::new(); "
+                         "}\n")),
+        ("unsafe", mutate(
+            "rust/src/lib.rs",
+            lambda t: t.replace("#![forbid(unsafe_code)]", ""))),
+    ]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        pristine = fresh_copy(os.path.join(tmp, "p"))
+        baseline = run_all(pristine)
+        if baseline:
+            for f in baseline:
+                print(f"selftest baseline FAIL: {f}", file=sys.stderr)
+            print("selftest FAILED: pristine tree does not pass clean",
+                  file=sys.stderr)
+            return 1
+        for i, (cls, inject) in enumerate(injections):
+            dst = fresh_copy(os.path.join(tmp, f"i{i}"))
+            inject(dst)
+            fired = [f for f in run_all(dst) if f.startswith(cls + ":")]
+            if not fired:
+                print(f"selftest FAILED: injected {cls} violation #{i} "
+                      f"did not trip the {cls} rule", file=sys.stderr)
+                return 1
+    print(f"selftest OK: all {len(injections)} injected violations tripped "
+          "their rule class (and the pristine tree passed clean)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="repo root (default: the parent of ci/)")
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args()
+    root = os.path.abspath(args.root)
+
+    if args.selftest:
+        return selftest(root)
+
+    failures = run_all(root)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        print(f"{len(failures)} invariant violation(s)", file=sys.stderr)
+        return 1
+    relaxed = sum(t.count("Ordering::Relaxed") for _, t in rust_sources(root))
+    print(f"invariant lint OK: {relaxed} Relaxed sites justified or "
+          "whitelisted, counters wired end-to-end, kernel modules pure, "
+          "unsafe forbidden")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+//! In-tree concurrency model checking for the repo's three real
+//! synchronization protocols.
+//!
+//! The repo's standing guarantee is *bit-identical results under any
+//! parallelism*.  Property tests (`prop_sharded`, `prop_streaming`,
+//! `integration_mux`) sample a handful of interleavings per run; this
+//! module *checks* the protocols instead: each one is re-expressed as a
+//! small explicit-state thread program over model primitives
+//! ([`sync::ModelAtomicU32`], [`sync::ModelMutex`],
+//! [`sync::ModelCondvar`]) and handed to a deterministic DFS scheduler
+//! ([`sched::Checker`]) that enumerates **every** interleaving up to a
+//! bounded depth and asserts a sequential-specification oracle at every
+//! terminal state.
+//!
+//! The three protocol models, each kept in lock-step with the code it
+//! mirrors (the lint and `docs/ANALYSIS.md` track the pairing):
+//!
+//! * [`tau`] — the shared prune threshold of `search::sharded`
+//!   (`SharedThreshold`): concurrent tightenings must leave τ equal to
+//!   the tightest value any thread computed, and the published bits
+//!   must never regress to a looser bound.  The buggy variant models
+//!   the historical `load(Relaxed)`-then-`store(Release)` publish and
+//!   reproduces its lost-update window; the fixed variant models the
+//!   `compare_exchange_weak` min-loop now in `SharedThreshold::tighten`.
+//! * [`queue_model`] — `coordinator::queue::BoundedQueue` push/pop/
+//!   close: no item lost or duplicated, capacity respected, close
+//!   drains, and every blocked thread is woken (the buggy variant drops
+//!   the close-time notify and deadlocks).
+//! * [`reactor_model`] — the reactor's per-connection `Pending` slot
+//!   protocol (`server::reactor`): executor writes the response then
+//!   flips `done`; the poller harvests in slot order, so responses for
+//!   one connection come back in request order (FIFO id-echo).  The
+//!   buggy variant flips `done` before the write lands and surfaces the
+//!   torn read.
+//!
+//! Everything here is deterministic — no wall clock, no randomness, no
+//! iteration-order dependence — so a reported counterexample trace
+//! replays exactly, on every machine, every time.  The models explore
+//! sequentially-consistent interleavings (atomicity bugs, lost
+//! wakeups, deadlocks); weak-memory reordering is out of scope and
+//! covered by the TSan CI lane — `docs/ANALYSIS.md` spells out the
+//! division of labor.
+
+pub mod queue_model;
+pub mod reactor_model;
+pub mod sched;
+pub mod sync;
+pub mod tau;
+
+pub use sched::{Checker, Program, Report, StepOutcome, Violation, ViolationKind};

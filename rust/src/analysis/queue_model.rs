@@ -1,0 +1,280 @@
+//! Model of `coordinator::queue::BoundedQueue` push/pop/close.
+//!
+//! The real queue is a `Mutex<VecDeque>` plus two condvars
+//! (`not_empty`, `not_full`) and a `closed` flag.  The model mirrors
+//! exactly that shape with [`super::sync`] primitives and explores
+//! every schedule of producers, consumers, and a closer.  Step
+//! granularity: one *lock-hold* is one atomic step (mutual exclusion
+//! makes the critical section indivisible for other lock-takers), and
+//! a condvar wait is modeled faithfully as park-and-unlock in a single
+//! step — the atomicity the real `Condvar::wait` provides and the
+//! thing naive sleep/poll loops get wrong.
+//!
+//! Oracles (the sequential specification of the queue):
+//! * **No lost or duplicated items** — every produced item is either
+//!   delivered to exactly one consumer or rejected with `Closed` back
+//!   to its producer; nothing else.
+//! * **Capacity** — the buffer never exceeds `cap` (invariant, checked
+//!   after every step).
+//! * **FIFO** — each consumer observes any one producer's items in
+//!   push order (pops take the front, so global order is preserved).
+//! * **Termination** — every schedule ends with all threads done; a
+//!   parked thread nobody will wake is reported as a deadlock.  The
+//!   [`QueueModel::buggy_close`] variant drops the close-time
+//!   `notify_all` and the checker finds the missed-wakeup deadlock the
+//!   real `close()` exists to prevent.
+
+use super::sched::{Program, StepOutcome};
+use super::sync::{ModelCondvar, ModelMutex};
+
+/// See the module docs.  Thread layout: producers first, then
+/// consumers, then one closer (always present — a queue nobody closes
+/// never terminates its consumers).
+pub struct QueueModel {
+    cap: usize,
+    /// Items per producer; all items globally distinct.
+    producers: Vec<Vec<u8>>,
+    consumers: usize,
+    /// When false, `close()` forgets `notify_all` (the injected bug).
+    close_notifies: bool,
+}
+
+impl QueueModel {
+    pub fn new(cap: usize, producers: &[&[u8]], consumers: usize) -> QueueModel {
+        let producers: Vec<Vec<u8>> = producers.iter().map(|p| p.to_vec()).collect();
+        let mut all: Vec<u8> = producers.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(
+            all.len(),
+            producers.iter().map(Vec::len).sum::<usize>(),
+            "items must be globally distinct for the no-duplicates oracle"
+        );
+        QueueModel { cap, producers, consumers, close_notifies: true }
+    }
+
+    /// The injected missed-wakeup bug: close flips the flag but wakes
+    /// nobody.  [`super::Checker`] must report a deadlock on this.
+    pub fn buggy_close(mut self) -> QueueModel {
+        self.close_notifies = false;
+        self
+    }
+
+    fn closer_tid(&self) -> usize {
+        self.producers.len() + self.consumers
+    }
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct QueueState {
+    mutex: ModelMutex,
+    not_empty: ModelCondvar,
+    not_full: ModelCondvar,
+    buf: Vec<u8>,
+    closed: bool,
+    /// Per producer: index of the next item to hand off.
+    next: Vec<usize>,
+    /// Per producer: items whose push returned `Closed`.
+    rejected: Vec<Vec<u8>>,
+    /// Per consumer: items delivered, in pop order.
+    popped: Vec<Vec<u8>>,
+    /// Per consumer: saw empty+closed and finished.
+    drained: Vec<bool>,
+    close_done: bool,
+}
+
+impl Program for QueueModel {
+    type State = QueueState;
+
+    fn threads(&self) -> usize {
+        self.producers.len() + self.consumers + 1
+    }
+
+    fn init(&self) -> QueueState {
+        QueueState {
+            mutex: ModelMutex::new(),
+            not_empty: ModelCondvar::new(),
+            not_full: ModelCondvar::new(),
+            buf: Vec::new(),
+            closed: false,
+            next: vec![0; self.producers.len()],
+            rejected: vec![Vec::new(); self.producers.len()],
+            popped: vec![Vec::new(); self.consumers],
+            drained: vec![false; self.consumers],
+            close_done: false,
+        }
+    }
+
+    fn step(&self, st: &mut QueueState, tid: usize) -> StepOutcome {
+        let np = self.producers.len();
+        if tid < np {
+            // ---- producer: BoundedQueue::push ----
+            let i = st.next[tid];
+            if i >= self.producers[tid].len() {
+                return StepOutcome::Done;
+            }
+            if st.not_full.parked(tid) {
+                return StepOutcome::Blocked; // waiting for a wakeup
+            }
+            if !st.mutex.try_lock(tid) {
+                return StepOutcome::Blocked;
+            }
+            // critical section (atomic within this one step)
+            let item = self.producers[tid][i];
+            if st.closed {
+                st.rejected[tid].push(item); // push() -> Err(Closed)
+                st.next[tid] += 1;
+            } else if st.buf.len() >= self.cap {
+                st.not_full.park(tid); // Condvar::wait: park + unlock
+            } else {
+                st.buf.push(item);
+                st.not_empty.unpark_one();
+                st.next[tid] += 1;
+            }
+            st.mutex.unlock(tid);
+            StepOutcome::Ran
+        } else if tid < np + self.consumers {
+            // ---- consumer: loop { BoundedQueue::pop } until None ----
+            let c = tid - np;
+            if st.drained[c] {
+                return StepOutcome::Done;
+            }
+            if st.not_empty.parked(tid) {
+                return StepOutcome::Blocked;
+            }
+            if !st.mutex.try_lock(tid) {
+                return StepOutcome::Blocked;
+            }
+            if !st.buf.is_empty() {
+                let item = st.buf.remove(0); // pop_front: FIFO
+                st.popped[c].push(item);
+                st.not_full.unpark_one();
+            } else if st.closed {
+                st.drained[c] = true; // pop() -> None: empty and closed
+            } else {
+                st.not_empty.park(tid);
+            }
+            st.mutex.unlock(tid);
+            StepOutcome::Ran
+        } else {
+            // ---- closer: BoundedQueue::close ----
+            if st.close_done {
+                return StepOutcome::Done;
+            }
+            if !st.mutex.try_lock(tid) {
+                return StepOutcome::Blocked;
+            }
+            st.closed = true;
+            if self.close_notifies {
+                st.not_empty.unpark_all();
+                st.not_full.unpark_all();
+            }
+            st.mutex.unlock(tid);
+            st.close_done = true;
+            StepOutcome::Ran
+        }
+    }
+
+    fn invariant(&self, st: &QueueState) -> Result<(), String> {
+        if st.buf.len() > self.cap {
+            return Err(format!(
+                "capacity violated: {} items in a cap-{} queue",
+                st.buf.len(),
+                self.cap
+            ));
+        }
+        Ok(())
+    }
+
+    fn finale(&self, st: &QueueState) -> Result<(), String> {
+        // no lost or duplicated items: delivered ∪ rejected must be
+        // exactly the produced multiset
+        let mut accounted: Vec<u8> = st
+            .popped
+            .iter()
+            .flatten()
+            .chain(st.rejected.iter().flatten())
+            .copied()
+            .collect();
+        accounted.sort_unstable();
+        let mut produced: Vec<u8> = self.producers.iter().flatten().copied().collect();
+        produced.sort_unstable();
+        if accounted != produced {
+            return Err(format!(
+                "items lost or duplicated: delivered+rejected {accounted:?} \
+                 != produced {produced:?}"
+            ));
+        }
+        // FIFO per producer, per consumer: any one producer's items
+        // must appear in each consumer's pop stream in push order
+        for (p, items) in self.producers.iter().enumerate() {
+            for (c, popped) in st.popped.iter().enumerate() {
+                let seen: Vec<u8> =
+                    popped.iter().copied().filter(|x| items.contains(x)).collect();
+                let mut expect = items.clone();
+                expect.retain(|x| seen.contains(x));
+                if seen != expect {
+                    return Err(format!(
+                        "FIFO violated: consumer {c} saw producer {p}'s items as \
+                         {seen:?}, push order was {expect:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sched::{Checker, ViolationKind};
+    use super::*;
+
+    /// SPSC through a cap-1 queue with a racing closer: every schedule
+    /// delivers-or-rejects both items, in order, and terminates.
+    #[test]
+    fn spsc_cap1_with_racing_close_is_clean() {
+        let model = QueueModel::new(1, &[&[1, 2]], 1);
+        let report = Checker::new(model).run();
+        assert!(report.clean(), "{:?}", report.violation);
+        // close can land before, between, or after the pushes: multiple
+        // distinct terminal outcomes, all individually checked
+        assert!(report.executions > 1, "{report:?}");
+    }
+
+    /// Two producers, one consumer: no loss, no duplication, FIFO per
+    /// producer under every interleaving.
+    #[test]
+    fn mpsc_two_producers_is_clean() {
+        let model = QueueModel::new(1, &[&[1], &[2]], 1);
+        let report = Checker::new(model).run();
+        assert!(report.clean(), "{:?}", report.violation);
+    }
+
+    /// Two consumers racing over one producer's items.
+    #[test]
+    fn spmc_two_consumers_is_clean() {
+        let model = QueueModel::new(2, &[&[1, 2]], 2);
+        let report = Checker::new(model).run();
+        assert!(report.clean(), "{:?}", report.violation);
+    }
+
+    /// The injected bug: close() without notify_all leaves a parked
+    /// consumer (or producer) asleep forever.  The checker must find
+    /// the missed-wakeup schedule and report it as a deadlock.
+    #[test]
+    fn close_without_notify_deadlocks() {
+        let model = QueueModel::new(1, &[&[1]], 1).buggy_close();
+        let report = Checker::new(model).run();
+        let v = report.violation.expect("missed wakeup must deadlock");
+        assert_eq!(v.kind, ViolationKind::Deadlock, "{}", v.message);
+        assert!(!v.trace.is_empty(), "deadlock needs at least one step");
+    }
+
+    #[test]
+    fn queue_reports_are_reproducible() {
+        let a = Checker::new(QueueModel::new(1, &[&[1, 2]], 1)).run();
+        let b = Checker::new(QueueModel::new(1, &[&[1, 2]], 1)).run();
+        assert_eq!(a, b);
+    }
+}

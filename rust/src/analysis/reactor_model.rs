@@ -1,0 +1,187 @@
+//! Model of the reactor's per-connection `Pending` slot protocol
+//! (`server::reactor`).
+//!
+//! In the real front end, each pipelined request on a connection gets a
+//! `Pending` slot in a FIFO: an executor worker computes the response,
+//! writes it into the slot's `Mutex<Option<String>>`, and only *then*
+//! flips the slot's `done: AtomicBool` with `Release`.  The poller
+//! harvests with the mirror-image order — `done.load(Acquire)` first,
+//! take the payload second — and only ever harvests the **front**
+//! unharvested slot, which is what turns out-of-order completion on
+//! the pool back into in-order (id-echoed) responses on the wire.
+//!
+//! The model has one executor thread per slot (so completion order is
+//! fully explored) and one poller.  The write-payload and flip-done
+//! steps are deliberately *separate* atomic steps, because their order
+//! is the entire protocol:
+//!
+//! * [`ReactorModel::new`] — payload first, `done` second (the real
+//!   code).  Every schedule yields the payloads in slot order; clean.
+//! * [`ReactorModel::buggy_done_first`] — flips `done` before the
+//!   payload lands.  Some schedule lets the poller harvest an empty
+//!   slot (a torn read); the checker reports it.  This is the bug the
+//!   Release/Acquire pair prevents at the hardware level and the slot
+//!   order prevents at the protocol level — `docs/ANALYSIS.md` walks
+//!   through both halves.
+
+use super::sched::{Program, StepOutcome};
+
+/// See the module docs.  Thread `i` (for `i < slots`) is the executor
+/// for slot `i`; thread `slots` is the poller.
+pub struct ReactorModel {
+    slots: usize,
+    /// When true, executors flip `done` before writing the payload.
+    done_first: bool,
+}
+
+impl ReactorModel {
+    pub fn new(slots: usize) -> ReactorModel {
+        ReactorModel { slots, done_first: false }
+    }
+
+    /// The injected publish-order bug.  [`super::Checker`] must find
+    /// the torn harvest.
+    pub fn buggy_done_first(slots: usize) -> ReactorModel {
+        ReactorModel { slots, done_first: true }
+    }
+
+    /// The response the executor for `slot` produces (the id-echo).
+    fn payload(slot: usize) -> u8 {
+        10 + slot as u8
+    }
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct ReactorState {
+    /// `Pending::done` per slot.
+    done: Vec<bool>,
+    /// `Pending::out` per slot (`None` until the executor writes it;
+    /// taken back to `None` by the poller's harvest).
+    out: Vec<Option<u8>>,
+    /// Executor pcs: 0 = first publish step, 1 = second, 2 = done.
+    exec_pc: Vec<u8>,
+    /// Front of the unharvested FIFO.
+    harvested: usize,
+    /// Responses in wire order.
+    responses: Vec<u8>,
+    /// Poller read an empty slot whose `done` was already set.
+    torn: bool,
+}
+
+impl Program for ReactorModel {
+    type State = ReactorState;
+
+    fn threads(&self) -> usize {
+        self.slots + 1
+    }
+
+    fn init(&self) -> ReactorState {
+        ReactorState {
+            done: vec![false; self.slots],
+            out: vec![None; self.slots],
+            exec_pc: vec![0; self.slots],
+            harvested: 0,
+            responses: Vec::new(),
+            torn: false,
+        }
+    }
+
+    fn step(&self, st: &mut ReactorState, tid: usize) -> StepOutcome {
+        if tid < self.slots {
+            // ---- executor for slot `tid`: two-step publish ----
+            let write_payload_now = match (st.exec_pc[tid], self.done_first) {
+                (0, false) | (1, true) => true,
+                (0, true) | (1, false) => false,
+                _ => return StepOutcome::Done,
+            };
+            if write_payload_now {
+                st.out[tid] = Some(Self::payload(tid));
+            } else {
+                st.done[tid] = true;
+            }
+            st.exec_pc[tid] += 1;
+            StepOutcome::Ran
+        } else {
+            // ---- poller: harvest the front slot when its done flag
+            // is visible; never skip ahead (the FIFO guarantee) ----
+            let f = st.harvested;
+            if f >= self.slots {
+                return StepOutcome::Done;
+            }
+            if !st.done[f] {
+                // real poller sleeps/polls; model as blocked until the
+                // executor's flip makes progress possible
+                return StepOutcome::Blocked;
+            }
+            match st.out[f].take() {
+                Some(v) => st.responses.push(v),
+                None => st.torn = true, // done visible but payload absent
+            }
+            st.harvested += 1;
+            StepOutcome::Ran
+        }
+    }
+
+    fn invariant(&self, st: &ReactorState) -> Result<(), String> {
+        if st.torn {
+            return Err(
+                "torn harvest: done flag visible before the payload write \
+                 (publish order inverted)"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+
+    fn finale(&self, st: &ReactorState) -> Result<(), String> {
+        let want: Vec<u8> = (0..self.slots).map(Self::payload).collect();
+        if st.responses != want {
+            return Err(format!(
+                "FIFO id-echo violated: wire order {:?} != slot order {want:?}",
+                st.responses
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sched::{Checker, ViolationKind};
+    use super::*;
+
+    /// Real publish order, two pipelined requests: every completion
+    /// order (including slot 1 finishing first) still echoes responses
+    /// in slot order, and no harvest is ever torn.
+    #[test]
+    fn payload_then_done_is_fifo_clean() {
+        let report = Checker::new(ReactorModel::new(2)).run();
+        assert!(report.clean(), "{:?}", report.violation);
+        // 2 executors x 2 steps + poller: genuinely interleaved
+        assert!(report.states > 8, "{report:?}");
+        assert_eq!(report.executions, 1, "one terminal state: all echoed in order");
+    }
+
+    #[test]
+    fn three_slots_still_clean() {
+        let report = Checker::new(ReactorModel::new(3)).run();
+        assert!(report.clean(), "{:?}", report.violation);
+    }
+
+    /// Inverted publish order: the poller can observe `done` before
+    /// the payload and harvest an empty slot.
+    #[test]
+    fn done_before_payload_tears() {
+        let report = Checker::new(ReactorModel::buggy_done_first(2)).run();
+        let v = report.violation.expect("inverted publish order must tear");
+        assert_eq!(v.kind, ViolationKind::Invariant, "{}", v.message);
+        assert!(v.message.contains("torn"), "{}", v.message);
+    }
+
+    #[test]
+    fn reactor_reports_are_reproducible() {
+        let a = Checker::new(ReactorModel::new(2)).run();
+        let b = Checker::new(ReactorModel::new(2)).run();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,392 @@
+//! Deterministic schedule-exploration core: a DFS over every
+//! interleaving of a small multi-threaded [`Program`].
+//!
+//! A [`Program`] is a set of threads, each a hand-written state machine
+//! whose *entire* mutable world (shared state, per-thread program
+//! counters, and thread-local registers) lives in one cloneable
+//! [`Program::State`] value.  One [`Program::step`] call executes one
+//! *atomic step* of one thread — the model's unit of atomicity, chosen
+//! to match the real code's atomic accesses and mutex critical sections
+//! (see the protocol models for the per-step justification).
+//!
+//! [`Checker::run`] enumerates interleavings by depth-first search: at
+//! every reachable configuration it tries each thread in index order,
+//! clones the state, executes that thread's next step, and recurses.
+//! Exploration is *exhaustive up to step granularity* and *memoized* —
+//! a configuration (state value, which embeds every pc) is explored
+//! once no matter how many schedules reach it, which collapses the
+//! factorial schedule space to the (small) reachable state graph.
+//!
+//! Guarantees the rest of the crate leans on:
+//!
+//! * **Deterministic.**  No wall clock, no randomness, no dependence on
+//!   `HashSet` iteration order (the memo set is only ever *queried*):
+//!   thread choices are tried in index order, so the first violation
+//!   found — and its counterexample trace — is identical on every run.
+//! * **Sound for atomicity bugs, not weak memory.**  Steps interleave
+//!   under sequential consistency.  Lost updates, broken FIFO
+//!   harvesting, missed wakeups, and deadlocks all manifest under SC
+//!   interleavings and are found here; compiler/hardware *reorderings*
+//!   are not modeled — that is what the TSan CI lane and the
+//!   Acquire/Release arguments in `docs/ANALYSIS.md` cover.
+//! * **Complete violation surface.**  [`Program::invariant`] runs after
+//!   every step (safety), [`Program::finale`] at every distinct
+//!   terminal state (sequential-specification oracle), and a
+//!   configuration where no thread can run but some thread is not done
+//!   is reported as a deadlock.
+//!
+//! The depth bound exists only as a runaway guard (models with
+//! unbounded loops would otherwise never terminate); every in-tree
+//! model is loop-bounded and the tests assert `!depth_limited`.
+
+use std::collections::HashSet;
+use std::fmt::Debug;
+use std::hash::Hash;
+
+/// What one atomic step of one thread did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The thread executed a step and (possibly) changed the state.
+    Ran,
+    /// The thread cannot progress right now (parked on a condvar wait
+    /// set, spinning on a held [`super::sync::ModelMutex`], or waiting
+    /// for a predicate another thread must establish).  A `Blocked`
+    /// step MUST NOT mutate the state — the scheduler treats the clone
+    /// as discarded.
+    Blocked,
+    /// The thread has no more work.  Must be returned idempotently (and
+    /// without mutation) for every later call on the same thread.
+    Done,
+}
+
+/// A small multi-threaded program the checker can exhaustively explore.
+pub trait Program {
+    /// The whole mutable world: shared state + every thread's pc and
+    /// registers.  `Eq + Hash` power the memoized DFS; keep it small.
+    type State: Clone + Eq + Hash + Debug;
+
+    /// Number of threads (fixed for the whole run).
+    fn threads(&self) -> usize;
+
+    /// The initial configuration.
+    fn init(&self) -> Self::State;
+
+    /// Execute one atomic step of thread `tid`, mutating `st` in place.
+    fn step(&self, st: &mut Self::State, tid: usize) -> StepOutcome;
+
+    /// Safety property checked after every step (e.g. "published τ
+    /// never regressed", "queue never exceeds capacity").
+    fn invariant(&self, _st: &Self::State) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Sequential-specification oracle checked at every distinct
+    /// terminal state (all threads `Done`).
+    fn finale(&self, _st: &Self::State) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// How a run failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// [`Program::invariant`] rejected a reachable state.
+    Invariant,
+    /// [`Program::finale`] rejected a terminal state.
+    Finale,
+    /// Some thread is not done, yet no thread can run.
+    Deadlock,
+}
+
+/// A counterexample: the violated property plus the exact schedule
+/// (sequence of thread ids) that reaches it from the initial state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub message: String,
+    /// Thread id executed at each step, in order.  Replaying this
+    /// schedule through [`Program::step`] reproduces the violation.
+    pub trace: Vec<usize>,
+}
+
+/// What an exhaustive run covered.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    /// Distinct configurations visited (memoized DFS node count).
+    pub states: u64,
+    /// Steps executed across all explored schedules (DFS edge count).
+    pub transitions: u64,
+    /// Distinct terminal states checked against [`Program::finale`].
+    pub executions: u64,
+    /// True if any branch hit the depth bound (exploration was then
+    /// incomplete; in-tree models assert this stays false).
+    pub depth_limited: bool,
+    /// The first violation found (in deterministic DFS order), if any.
+    pub violation: Option<Violation>,
+}
+
+impl Report {
+    /// True when exploration completed with no violation and no branch
+    /// was cut by the depth bound.
+    pub fn clean(&self) -> bool {
+        self.violation.is_none() && !self.depth_limited
+    }
+}
+
+/// The exhaustive interleaving explorer.  See the module docs.
+pub struct Checker<P: Program> {
+    program: P,
+    max_depth: usize,
+}
+
+impl<P: Program> Checker<P> {
+    pub fn new(program: P) -> Checker<P> {
+        Checker { program, max_depth: 4096 }
+    }
+
+    /// Replace the runaway-guard depth bound (steps per schedule).
+    pub fn with_max_depth(mut self, max_depth: usize) -> Checker<P> {
+        self.max_depth = max_depth;
+        self
+    }
+
+    /// Exhaustively explore every interleaving; first violation wins.
+    pub fn run(&self) -> Report {
+        let mut report = Report {
+            states: 0,
+            transitions: 0,
+            executions: 0,
+            depth_limited: false,
+            violation: None,
+        };
+        let init = self.program.init();
+        if let Err(message) = self.program.invariant(&init) {
+            report.violation = Some(Violation {
+                kind: ViolationKind::Invariant,
+                message,
+                trace: Vec::new(),
+            });
+            return report;
+        }
+        let mut seen: HashSet<P::State> = HashSet::new();
+        let mut trace: Vec<usize> = Vec::new();
+        report.violation = self.dfs(&init, &mut trace, &mut seen, &mut report);
+        report
+    }
+
+    fn dfs(
+        &self,
+        st: &P::State,
+        trace: &mut Vec<usize>,
+        seen: &mut HashSet<P::State>,
+        report: &mut Report,
+    ) -> Option<Violation> {
+        if !seen.insert(st.clone()) {
+            // configuration already fully explored from an earlier
+            // schedule; any violation reachable from it was found then
+            return None;
+        }
+        report.states += 1;
+        if trace.len() >= self.max_depth {
+            report.depth_limited = true;
+            return None;
+        }
+        let mut ran_any = false;
+        let mut all_done = true;
+        for tid in 0..self.program.threads() {
+            let mut next = st.clone();
+            match self.program.step(&mut next, tid) {
+                StepOutcome::Ran => {
+                    ran_any = true;
+                    all_done = false;
+                    report.transitions += 1;
+                    trace.push(tid);
+                    if let Err(message) = self.program.invariant(&next) {
+                        return Some(Violation {
+                            kind: ViolationKind::Invariant,
+                            message,
+                            trace: trace.clone(),
+                        });
+                    }
+                    if let Some(v) = self.dfs(&next, trace, seen, report) {
+                        return Some(v);
+                    }
+                    trace.pop();
+                }
+                StepOutcome::Blocked => {
+                    all_done = false;
+                }
+                StepOutcome::Done => {}
+            }
+        }
+        if all_done {
+            report.executions += 1;
+            if let Err(message) = self.program.finale(st) {
+                return Some(Violation {
+                    kind: ViolationKind::Finale,
+                    message,
+                    trace: trace.clone(),
+                });
+            }
+        } else if !ran_any {
+            return Some(Violation {
+                kind: ViolationKind::Deadlock,
+                message: "no thread can run but not all threads are done".to_string(),
+                trace: trace.clone(),
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads, each incrementing a non-atomic counter via separate
+    /// load and store steps — the canonical lost-update demo.
+    #[derive(Clone)]
+    struct RacyIncrement {
+        atomic: bool,
+    }
+
+    #[derive(Clone, PartialEq, Eq, Hash, Debug)]
+    struct IncState {
+        pc: [u8; 2],
+        reg: [u32; 2],
+        shared: u32,
+    }
+
+    impl Program for RacyIncrement {
+        type State = IncState;
+
+        fn threads(&self) -> usize {
+            2
+        }
+
+        fn init(&self) -> IncState {
+            IncState { pc: [0; 2], reg: [0; 2], shared: 0 }
+        }
+
+        fn step(&self, st: &mut IncState, tid: usize) -> StepOutcome {
+            if self.atomic {
+                // single-step fetch_add: no window, no bug
+                match st.pc[tid] {
+                    0 => {
+                        st.shared += 1;
+                        st.pc[tid] = 1;
+                        StepOutcome::Ran
+                    }
+                    _ => StepOutcome::Done,
+                }
+            } else {
+                match st.pc[tid] {
+                    0 => {
+                        st.reg[tid] = st.shared; // load
+                        st.pc[tid] = 1;
+                        StepOutcome::Ran
+                    }
+                    1 => {
+                        st.shared = st.reg[tid] + 1; // store
+                        st.pc[tid] = 2;
+                        StepOutcome::Ran
+                    }
+                    _ => StepOutcome::Done,
+                }
+            }
+        }
+
+        fn finale(&self, st: &IncState) -> Result<(), String> {
+            if st.shared == 2 {
+                Ok(())
+            } else {
+                Err(format!("lost update: final counter {} != 2", st.shared))
+            }
+        }
+    }
+
+    #[test]
+    fn finds_the_textbook_lost_update() {
+        let report = Checker::new(RacyIncrement { atomic: false }).run();
+        let v = report.violation.expect("split load/store must lose an update");
+        assert_eq!(v.kind, ViolationKind::Finale);
+        assert!(v.message.contains("lost update"), "{}", v.message);
+        // the canonical interleaving: both threads load before either
+        // stores — DFS in thread-index order finds 0,1,... first
+        assert!(v.trace.len() >= 3, "trace too short: {:?}", v.trace);
+        assert!(!report.depth_limited);
+    }
+
+    #[test]
+    fn atomic_variant_is_clean_and_exhaustive() {
+        let report = Checker::new(RacyIncrement { atomic: true }).run();
+        assert!(report.clean(), "{:?}", report.violation);
+        // 2 threads x 1 step: exactly 4 configurations (00,10,01,11)
+        assert_eq!(report.states, 4);
+        assert_eq!(report.executions, 1, "one distinct terminal state");
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let a = Checker::new(RacyIncrement { atomic: false }).run();
+        let b = Checker::new(RacyIncrement { atomic: false }).run();
+        assert_eq!(a, b, "same program must yield an identical report");
+    }
+
+    /// A thread that blocks forever on a predicate nobody establishes.
+    #[derive(Clone)]
+    struct Stuck;
+
+    impl Program for Stuck {
+        type State = u8;
+
+        fn threads(&self) -> usize {
+            1
+        }
+
+        fn init(&self) -> u8 {
+            0
+        }
+
+        fn step(&self, _st: &mut u8, _tid: usize) -> StepOutcome {
+            StepOutcome::Blocked
+        }
+    }
+
+    #[test]
+    fn reports_deadlock() {
+        let report = Checker::new(Stuck).run();
+        let v = report.violation.expect("a permanently blocked thread is a deadlock");
+        assert_eq!(v.kind, ViolationKind::Deadlock);
+        assert!(v.trace.is_empty(), "deadlocked at the initial state");
+    }
+
+    /// An unbounded spinner must trip the runaway guard, not hang.
+    #[derive(Clone)]
+    struct Spinner;
+
+    impl Program for Spinner {
+        type State = u64;
+
+        fn threads(&self) -> usize {
+            1
+        }
+
+        fn init(&self) -> u64 {
+            0
+        }
+
+        fn step(&self, st: &mut u64, _tid: usize) -> StepOutcome {
+            *st += 1; // every state distinct: memoization cannot save us
+            StepOutcome::Ran
+        }
+    }
+
+    #[test]
+    fn depth_bound_stops_runaway_models() {
+        let report = Checker::new(Spinner).with_max_depth(16).run();
+        assert!(report.depth_limited);
+        assert!(report.violation.is_none());
+        assert!(!report.clean(), "depth-limited runs are not clean");
+    }
+}

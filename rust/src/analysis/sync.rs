@@ -1,0 +1,197 @@
+//! Model counterparts of the synchronization primitives the real code
+//! uses (`AtomicU32`, `Mutex`, `Condvar`), built for exhaustive
+//! exploration instead of execution.
+//!
+//! Each primitive is a plain value embedded in a [`super::Program`]'s
+//! cloneable state.  Every method is one *atomic step* of the model —
+//! the same granularity the hardware gives the real operation — so the
+//! DFS scheduler interleaves them exactly as the machine may.  The
+//! crucial difference from `std::sync`: blocking is explicit.  A model
+//! thread that cannot take a mutex or whose condvar predicate is false
+//! returns [`super::StepOutcome::Blocked`] from its `step` and retries
+//! when rescheduled; the checker then proves that some schedule exists
+//! where it proceeds (or reports deadlock when none does).
+//!
+//! These are models, not instrumented wrappers: there is no `unsafe`,
+//! no real parking, and no memory-order parameter.  The checker
+//! explores sequentially consistent interleavings — the strongest
+//! ordering — which is what makes *atomicity* violations (lost
+//! updates, torn protocols, missed wakeups) show up.  Ordering
+//! *relaxations* in the real code are argued separately in
+//! `docs/ANALYSIS.md` and dynamically checked by the TSan lane.
+
+/// Model of `std::sync::atomic::AtomicU32`.  Each method is one atomic
+/// step; a split load-then-store must be written as two steps in the
+/// program (which is precisely how the τ lost-update becomes visible).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct ModelAtomicU32 {
+    value: u32,
+}
+
+impl ModelAtomicU32 {
+    pub fn new(value: u32) -> ModelAtomicU32 {
+        ModelAtomicU32 { value }
+    }
+
+    pub fn load(&self) -> u32 {
+        self.value
+    }
+
+    pub fn store(&mut self, value: u32) {
+        self.value = value;
+    }
+
+    /// Returns the previous value, like `AtomicU32::fetch_add`.
+    pub fn fetch_add(&mut self, delta: u32) -> u32 {
+        let prev = self.value;
+        self.value = self.value.wrapping_add(delta);
+        prev
+    }
+
+    /// CAS: on success returns `Ok(current)`, on failure
+    /// `Err(actual)` — mirroring `AtomicU32::compare_exchange`.  The
+    /// model has no spurious failures, so it stands in for both the
+    /// strong and `_weak` forms; a retry *loop* around it (as in
+    /// `SharedThreshold::tighten`) covers the weak form's behavior.
+    pub fn compare_exchange(&mut self, current: u32, new: u32) -> Result<u32, u32> {
+        if self.value == current {
+            self.value = new;
+            Ok(current)
+        } else {
+            Err(self.value)
+        }
+    }
+}
+
+/// Thread id within a model program (index into `Program::threads()`).
+pub type ThreadId = usize;
+
+/// Model of `std::sync::Mutex` ownership (the guarded data lives
+/// alongside it in the program state; holding the lock is what makes a
+/// multi-step critical section atomic *with respect to other threads
+/// that also take the lock*).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct ModelMutex {
+    owner: Option<ThreadId>,
+}
+
+impl ModelMutex {
+    pub fn new() -> ModelMutex {
+        ModelMutex { owner: None }
+    }
+
+    /// One atomic acquire attempt.  On failure the caller must return
+    /// [`super::StepOutcome::Blocked`] without mutating anything else.
+    pub fn try_lock(&mut self, tid: ThreadId) -> bool {
+        debug_assert_ne!(self.owner, Some(tid), "model mutex is not reentrant");
+        if self.owner.is_none() {
+            self.owner = Some(tid);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn unlock(&mut self, tid: ThreadId) {
+        debug_assert_eq!(self.owner, Some(tid), "unlock by non-owner");
+        self.owner = None;
+    }
+
+    pub fn held_by(&self, tid: ThreadId) -> bool {
+        self.owner == Some(tid)
+    }
+
+    pub fn locked(&self) -> bool {
+        self.owner.is_some()
+    }
+}
+
+/// Model of `std::sync::Condvar` as a wait *set* (bitmask over thread
+/// ids, so state stays `Copy + Hash` and at most 32 threads — far
+/// beyond any tractable model).
+///
+/// The real `Condvar::wait` atomically releases the mutex and parks;
+/// model programs express that as: holding the lock, check the
+/// predicate; if false, `park` + `unlock` in the same step, and from
+/// then on return `Blocked` while `parked`.  A waker calls
+/// `unpark_one`/`unpark_all` (modeling `notify_one`/`notify_all`);
+/// the woken thread's next step re-acquires the lock and re-checks the
+/// predicate — the spurious-wakeup-safe loop the real code also needs.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct ModelCondvar {
+    waiters: u32,
+}
+
+impl ModelCondvar {
+    pub fn new() -> ModelCondvar {
+        ModelCondvar { waiters: 0 }
+    }
+
+    pub fn park(&mut self, tid: ThreadId) {
+        debug_assert!(tid < 32, "ModelCondvar supports at most 32 threads");
+        self.waiters |= 1 << tid;
+    }
+
+    pub fn parked(&self, tid: ThreadId) -> bool {
+        self.waiters & (1 << tid) != 0
+    }
+
+    /// Wake the lowest-id waiter (deterministic stand-in for
+    /// `notify_one`; the DFS separately explores all schedules of the
+    /// woken thread, so picking a fixed waiter loses no generality for
+    /// our symmetric-waiter models).
+    pub fn unpark_one(&mut self) {
+        if self.waiters != 0 {
+            self.waiters &= self.waiters - 1;
+        }
+    }
+
+    /// Wake everyone (`notify_all`).
+    pub fn unpark_all(&mut self) {
+        self.waiters = 0;
+    }
+
+    pub fn has_waiters(&self) -> bool {
+        self.waiters != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_cas_success_and_failure() {
+        let mut a = ModelAtomicU32::new(5);
+        assert_eq!(a.compare_exchange(5, 9), Ok(5));
+        assert_eq!(a.load(), 9);
+        assert_eq!(a.compare_exchange(5, 1), Err(9));
+        assert_eq!(a.load(), 9);
+        assert_eq!(a.fetch_add(2), 9);
+        assert_eq!(a.load(), 11);
+    }
+
+    #[test]
+    fn mutex_mutual_exclusion() {
+        let mut m = ModelMutex::new();
+        assert!(m.try_lock(0));
+        assert!(!m.try_lock(1), "second taker must fail while held");
+        assert!(m.held_by(0));
+        m.unlock(0);
+        assert!(!m.locked());
+        assert!(m.try_lock(1));
+    }
+
+    #[test]
+    fn condvar_unpark_one_wakes_lowest_waiter() {
+        let mut cv = ModelCondvar::new();
+        cv.park(2);
+        cv.park(0);
+        assert!(cv.parked(0) && cv.parked(2));
+        cv.unpark_one();
+        assert!(!cv.parked(0), "lowest id woken first");
+        assert!(cv.parked(2));
+        cv.unpark_all();
+        assert!(!cv.has_waiters());
+    }
+}

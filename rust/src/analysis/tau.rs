@@ -1,0 +1,241 @@
+//! Model of the sharded search's shared prune threshold
+//! (`search::sharded::SharedThreshold`).
+//!
+//! In the real code every shard worker records survivor costs into one
+//! `SharedThreshold`; the heap update happens under a mutex, and the
+//! resulting τ is *published* to a lock-free `AtomicU32` that the hot
+//! pruning loops read.  The published value must be **monotone
+//! non-increasing** (a reader may see a stale τ, but stale is only ever
+//! *looser*, which keeps pruning admissible — `docs/ANALYSIS.md`), and
+//! when the dust settles the published τ must equal the **tightest**
+//! value any worker computed.
+//!
+//! Two publish protocols are modeled:
+//!
+//! * [`TauModel::buggy`] — the load-then-store window: `load` the
+//!   current bits, compare, `store` the new value as a *separate* step.
+//!   Two concurrent tightenings can interleave load-load-store-store
+//!   and leave the **looser** τ published (a lost update that both
+//!   regresses τ and corrupts the final value).  The checker finds
+//!   this in a 2-thread model in a handful of states; it is the
+//!   regression scenario for the historical `search/sharded.rs:103`
+//!   publish and must keep failing forever.
+//! * [`TauModel::fixed`] — the `compare_exchange_weak` min-loop now in
+//!   `SharedThreshold::tighten`: re-read on CAS failure, give up when
+//!   the current value is already at least as tight.  Every
+//!   interleaving publishes the minimum, and τ never regresses.
+//!
+//! τ values are carried as `u32` bit patterns.  Real τ values are
+//! non-negative finite `f32`s, whose IEEE-754 bit patterns order
+//! identically to the floats themselves — the same trick
+//! `SharedThreshold` itself relies on — so `u32` comparisons model
+//! `f32` comparisons exactly.
+
+use super::sched::{Program, StepOutcome};
+use super::sync::ModelAtomicU32;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Protocol {
+    /// load(Relaxed) → compare → store(Release) as separate steps.
+    LoadThenStore,
+    /// compare_exchange_weak min-loop (the shipped fix).
+    CasMinLoop,
+}
+
+/// See the module docs.  One thread per candidate value; each thread
+/// tries to tighten the shared τ to its value.
+pub struct TauModel {
+    protocol: Protocol,
+    init_tau: u32,
+    candidates: Vec<u32>,
+}
+
+impl TauModel {
+    /// The historical load-then-store publish.  [`super::Checker`]
+    /// must report a violation on this model.
+    pub fn buggy(init_tau: u32, candidates: &[u32]) -> TauModel {
+        TauModel {
+            protocol: Protocol::LoadThenStore,
+            init_tau,
+            candidates: candidates.to_vec(),
+        }
+    }
+
+    /// The `compare_exchange_weak` min-loop.  Must verify clean.
+    pub fn fixed(init_tau: u32, candidates: &[u32]) -> TauModel {
+        TauModel {
+            protocol: Protocol::CasMinLoop,
+            init_tau,
+            candidates: candidates.to_vec(),
+        }
+    }
+
+    /// The sequential specification: the tightest value in play.
+    fn expected_final(&self) -> u32 {
+        self.candidates.iter().copied().fold(self.init_tau, u32::min)
+    }
+}
+
+/// Per-thread pcs: 0 = load, 1 = publish (store or CAS), 2 = done.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct TauState {
+    bits: ModelAtomicU32,
+    pc: Vec<u8>,
+    /// Thread-local copy of the last observed published value.
+    observed: Vec<u32>,
+    /// Tightest value ever published; `bits` rising above it means a
+    /// looser τ overwrote a tighter one (the monotonicity oracle).
+    floor: u32,
+}
+
+impl Program for TauModel {
+    type State = TauState;
+
+    fn threads(&self) -> usize {
+        self.candidates.len()
+    }
+
+    fn init(&self) -> TauState {
+        TauState {
+            bits: ModelAtomicU32::new(self.init_tau),
+            pc: vec![0; self.candidates.len()],
+            observed: vec![0; self.candidates.len()],
+            floor: self.init_tau,
+        }
+    }
+
+    fn step(&self, st: &mut TauState, tid: usize) -> StepOutcome {
+        let mine = self.candidates[tid];
+        match st.pc[tid] {
+            0 => {
+                // one atomic load of the published bits
+                st.observed[tid] = st.bits.load();
+                st.pc[tid] = 1;
+                StepOutcome::Ran
+            }
+            1 => {
+                if mine >= st.observed[tid] {
+                    // current τ already at least as tight; nothing to do
+                    st.pc[tid] = 2;
+                    return StepOutcome::Ran;
+                }
+                match self.protocol {
+                    Protocol::LoadThenStore => {
+                        // blind store based on the (possibly stale)
+                        // observation — the lost-update window
+                        st.bits.store(mine);
+                        st.floor = st.floor.min(mine);
+                        st.pc[tid] = 2;
+                    }
+                    Protocol::CasMinLoop => {
+                        match st.bits.compare_exchange(st.observed[tid], mine) {
+                            Ok(_) => {
+                                st.floor = st.floor.min(mine);
+                                st.pc[tid] = 2;
+                            }
+                            // raced: adopt the fresh value and retry
+                            Err(actual) => st.observed[tid] = actual,
+                        }
+                    }
+                }
+                StepOutcome::Ran
+            }
+            _ => StepOutcome::Done,
+        }
+    }
+
+    fn invariant(&self, st: &TauState) -> Result<(), String> {
+        // τ must be monotone non-increasing: the published bits may
+        // never rise back above the tightest value ever published
+        // (`floor`, maintained at every publish step).  In the buggy
+        // protocol a stale store of a looser value over a tighter one
+        // trips this mid-run, before the finale even looks.
+        if st.bits.load() > st.floor {
+            return Err(format!(
+                "published τ regressed: bits {} above tightest-ever {}",
+                st.bits.load(),
+                st.floor
+            ));
+        }
+        Ok(())
+    }
+
+    fn finale(&self, st: &TauState) -> Result<(), String> {
+        let want = self.expected_final();
+        let got = st.bits.load();
+        if got != want {
+            return Err(format!(
+                "lost update: final τ bits {got} != tightest candidate {want} \
+                 (a looser τ stayed published)"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sched::{Checker, ViolationKind};
+    use super::*;
+
+    /// The regression scenario from ISSUE 9: two shards tighten
+    /// concurrently through the load-then-store publish; some schedule
+    /// leaves the looser τ published.  This is the interleaving the
+    /// property tests never reliably hit and the checker always finds.
+    #[test]
+    fn buggy_publish_loses_an_update() {
+        let report = Checker::new(TauModel::buggy(100, &[30, 50])).run();
+        let v = report
+            .violation
+            .expect("load-then-store publish must lose a tightening");
+        // the looser store lands on top of the tighter one: caught the
+        // moment τ regresses, before the run even finishes
+        assert_eq!(v.kind, ViolationKind::Invariant, "{}", v.message);
+        assert!(v.message.contains("regressed"), "{}", v.message);
+        // the counterexample is replayable: a concrete schedule exists
+        assert!(!v.trace.is_empty());
+        assert!(!report.depth_limited);
+    }
+
+    /// With three threads the same window also breaks monotonicity
+    /// mid-run (τ can be observed going 100 → 30 → 50).
+    #[test]
+    fn buggy_publish_three_threads_still_fails() {
+        let report = Checker::new(TauModel::buggy(100, &[30, 50, 70])).run();
+        assert!(report.violation.is_some());
+        assert!(!report.depth_limited);
+    }
+
+    /// The shipped fix: every interleaving of the CAS min-loop ends at
+    /// the tightest candidate and never regresses.  Exhaustive — the
+    /// report counts every reachable configuration.
+    #[test]
+    fn cas_min_loop_is_correct_for_two_threads() {
+        let report = Checker::new(TauModel::fixed(100, &[30, 50])).run();
+        assert!(report.clean(), "{:?}", report.violation);
+        assert!(report.executions >= 1);
+        assert!(report.states > 4, "must actually branch over schedules");
+    }
+
+    #[test]
+    fn cas_min_loop_is_correct_for_three_threads() {
+        let report = Checker::new(TauModel::fixed(100, &[30, 50, 70])).run();
+        assert!(report.clean(), "{:?}", report.violation);
+        assert!(!report.depth_limited);
+    }
+
+    /// Ties and no-op candidates (value ≥ current τ) are fine too.
+    #[test]
+    fn cas_min_loop_handles_ties_and_loosers() {
+        let report = Checker::new(TauModel::fixed(40, &[40, 60, 40])).run();
+        assert!(report.clean(), "{:?}", report.violation);
+    }
+
+    /// Determinism of the checker itself over a nontrivial model.
+    #[test]
+    fn tau_reports_are_reproducible() {
+        let a = Checker::new(TauModel::buggy(100, &[30, 50])).run();
+        let b = Checker::new(TauModel::buggy(100, &[30, 50])).run();
+        assert_eq!(a, b);
+    }
+}

@@ -14,6 +14,12 @@
 //! generation.  See DESIGN.md for the paper↔module map and EXPERIMENTS.md
 //! for reproduction results.
 
+// The whole serving stack is safe Rust; the fuzz workspace (rust/fuzz)
+// is a separate crate and stays out of scope.  Enforced by
+// ci/lint_invariants.py so the attribute cannot silently disappear.
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -155,6 +155,9 @@ impl SearchEngine {
                 let cursor = &cursor;
                 let out = &out;
                 scope.spawn(move || loop {
+                    // Relaxed: work-claim ticket; the fetch_add's RMW
+                    // atomicity alone makes claims unique, and results
+                    // are published through the slot mutexes
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= queries.len() {
                         break;

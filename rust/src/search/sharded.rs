@@ -95,19 +95,55 @@ impl SharedThreshold {
 
     /// Record one exact DP cost and republish τ if it tightened.
     pub fn record(&self, cost: f32) {
-        let mut heap = self.heap.lock().unwrap();
-        heap.push(cost);
-        let t = heap.threshold();
-        // publish under the lock: τ is monotonically non-increasing, so
-        // readers can only ever see a value that is still admissible
-        if t < f32::from_bits(self.bits.load(Ordering::Relaxed)) {
-            self.bits.store(t.to_bits(), Ordering::Release);
-            self.tightenings.fetch_add(1, Ordering::Relaxed);
+        let t = {
+            let mut heap = self.heap.lock().unwrap();
+            heap.push(cost);
+            heap.threshold()
+        };
+        // publish outside the lock: tighten() makes concurrent
+        // publishes commute, so the mutex only covers the heap update
+        self.tighten(t);
+    }
+
+    /// Publish `t` as the new τ iff it is tighter than the current
+    /// value, via a `compare_exchange_weak` min-loop.
+    ///
+    /// The naive `load`-then-`store` publish has a lost-update window:
+    /// two concurrent tightenings can interleave load/load/store/store
+    /// and leave the *looser* τ published — the exact schedule
+    /// `analysis::tau::TauModel::buggy` finds exhaustively.  The CAS
+    /// loop closes it: a publish that loses the race observes the
+    /// fresher value and either retries or stops because the published
+    /// τ is already at least as tight, so τ is monotone non-increasing
+    /// under every interleaving (`analysis::tau::TauModel::fixed`
+    /// checks all of them; `docs/ANALYSIS.md` has the ordering proof).
+    pub fn tighten(&self, t: f32) {
+        // Relaxed: the initial read is only a guess — the CAS below
+        // revalidates it, and Release on success is what publishes
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        while t < f32::from_bits(cur) {
+            match self.bits.compare_exchange_weak(
+                cur,
+                t.to_bits(),
+                Ordering::Release,
+                // Relaxed on failure: the loop revalidates against the
+                // returned value before any retry
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    // Relaxed: plain event counter, only read after the
+                    // worker scope joins (no ordering conveyed)
+                    self.tightenings.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(actual) => cur = actual,
+            }
         }
     }
 
     /// How often τ strictly decreased over the whole search.
     pub fn tightenings(&self) -> u64 {
+        // Relaxed: counter read after the worker scope joins
         self.tightenings.load(Ordering::Relaxed)
     }
 }
@@ -153,6 +189,14 @@ pub struct ShardedOutcome {
     pub shards: Vec<ShardReport>,
     /// Times the shared τ strictly tightened across the whole search.
     pub tau_tightenings: u64,
+    /// The published τ when the last worker finished: the cap-th
+    /// smallest exact cost any shard computed (+inf if the heap never
+    /// filled).  Interleaving-independent — every window whose cost is
+    /// at or below the cap-th smallest true cost survives all pruning
+    /// (the admissibility argument above), so the same multiset always
+    /// reaches the heap; `prop_sharded` asserts bit-equality with the
+    /// single-thread run.
+    pub final_tau: f32,
 }
 
 impl ShardedOutcome {
@@ -251,7 +295,13 @@ pub fn search_sharded_index<I: CandidateIndex + Sync + ?Sized>(
         for s in &shards {
             stats.merge(&s.stats);
         }
-        return Ok(ShardedOutcome { hits: Vec::new(), stats, shards, tau_tightenings: 0 });
+        return Ok(ShardedOutcome {
+            hits: Vec::new(),
+            stats,
+            shards,
+            tau_tightenings: 0,
+            final_tau: f32::INFINITY,
+        });
     }
 
     // one τ for the whole search: cap over the TOTAL candidate count,
@@ -333,6 +383,7 @@ pub fn search_sharded_index<I: CandidateIndex + Sync + ?Sized>(
         stats,
         shards: reports,
         tau_tightenings: shared.tightenings(),
+        final_tau: shared.tau(),
     })
 }
 
@@ -361,6 +412,10 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn setup(n: usize, window: usize, stride: usize, seed: u64) -> (SearchEngine, Xoshiro256) {
+        // Miri runs these end-to-end searches orders of magnitude
+        // slower; shrink the reference so the sharded unit tests fit
+        // the Miri CI lane's time box (semantics are size-independent)
+        let n = if cfg!(miri) { (n / 10).max(40) } else { n };
         let mut g = Xoshiro256::new(seed);
         let r = Arc::new(g.normal_vec_f32(n));
         (SearchEngine::new(r, window, stride, Dist::Sq).unwrap(), g)
@@ -447,6 +502,7 @@ mod tests {
             stats: CascadeStats::default(),
             shards: vec![report(0, 0.0), report(1, 0.0)],
             tau_tightenings: 0,
+            final_tau: f32::INFINITY,
         };
         assert_eq!(degenerate.imbalance(), None);
         // no shards at all
@@ -455,6 +511,7 @@ mod tests {
             stats: CascadeStats::default(),
             shards: Vec::new(),
             tau_tightenings: 0,
+            final_tau: f32::INFINITY,
         };
         assert_eq!(empty.imbalance(), None);
         // measurable timings keep the documented >= 1.0 semantics
@@ -463,6 +520,7 @@ mod tests {
             stats: CascadeStats::default(),
             shards: vec![report(0, 1.0), report(1, 3.0)],
             tau_tightenings: 0,
+            final_tau: f32::INFINITY,
         };
         let r = measured.imbalance().expect("timings are meaningful");
         assert!((r - 1.5).abs() < 1e-12, "3ms max over 2ms mean");
@@ -481,6 +539,46 @@ mod tests {
         tau.record(10.0); // ignored
         assert_eq!(tau.tau(), 3.0);
         assert_eq!(tau.tightenings(), 2);
+    }
+
+    /// The lost-update regression, exercised on the real type: hammer
+    /// `record` from several threads and require the published τ to be
+    /// bit-identical to a serial replay of the same costs.  Before the
+    /// `tighten` CAS min-loop a looser τ could survive the race (the
+    /// schedule `analysis::tau` reproduces deterministically); with it
+    /// the final τ is the cap-th smallest cost no matter the timing.
+    #[test]
+    fn concurrent_records_publish_the_tightest_tau() {
+        let iters = if cfg!(miri) { 20 } else { 4000 };
+        let shared = SharedThreshold::new(8);
+        let costs: Vec<Vec<f32>> = (0..4u64)
+            .map(|t| {
+                let mut g = Xoshiro256::new(90 + t);
+                (0..iters).map(|_| g.normal_vec_f32(1)[0].abs()).collect()
+            })
+            .collect();
+        std::thread::scope(|scope| {
+            for c in &costs {
+                let shared = &shared;
+                scope.spawn(move || {
+                    for &x in c {
+                        shared.record(x);
+                    }
+                });
+            }
+        });
+        let mut serial = BoundedCostHeap::new(8);
+        for c in &costs {
+            for &x in c {
+                serial.push(x);
+            }
+        }
+        assert_eq!(
+            shared.tau().to_bits(),
+            serial.threshold().to_bits(),
+            "published τ must equal the serial heap threshold bit-for-bit"
+        );
+        assert!(shared.tightenings() >= 1);
     }
 
     #[test]

@@ -77,6 +77,12 @@ pub struct Reactor {
 
 /// One request's landing slot.  The executor completes it; the poller
 /// harvests it when it reaches the front of the connection's FIFO.
+///
+/// The publish order (payload into `out`, *then* the `done` flip) is
+/// what makes the harvest read safe; [`crate::analysis::reactor_model`]
+/// model-checks the id-echo FIFO under every executor completion order
+/// and keeps the inverted-order torn read as a failing variant (see
+/// `docs/ANALYSIS.md`).
 #[derive(Default)]
 struct Pending {
     done: AtomicBool,
@@ -195,6 +201,8 @@ impl Reactor {
         let metrics = self.service.metrics_sink().clone();
         let mut conns: Vec<Conn> = Vec::new();
         let mut buf = vec![0u8; 16 * 1024];
+        // Relaxed: the stop flag is a shutdown hint polled once per
+        // poller sweep; no data is published through it, only loop exit
         while !self.stop.load(Ordering::Relaxed) {
             let mut progress = false;
             loop {

@@ -79,6 +79,8 @@ impl Server {
     /// are detached; they exit when their peer disconnects.
     pub fn serve(&self) -> Result<()> {
         log_info!("listening on {}", self.local_addr()?);
+        // Relaxed: the stop flag is a shutdown hint polled once per
+        // accept; no data is published through it, only loop exit
         while !self.stop.load(Ordering::Relaxed) {
             match self.listener.accept() {
                 Ok((stream, peer)) => {

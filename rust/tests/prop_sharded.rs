@@ -67,12 +67,27 @@ fn prop_sharded_executor_bit_identical_to_serial_and_brute() {
             .map_err(|e| e.to_string())?;
         assert_bit_identical("serial vs brute", &serial.hits, &brute)?;
 
+        // the single-shard single-thread run is the serial τ reference:
+        // every parallel configuration must publish the same final τ
+        // bit-for-bit (it is the cap-th smallest true cost — see
+        // ShardedOutcome::final_tau)
+        let reference_tau = engine
+            .search_sharded(&q, k, exclusion, CascadeOpts::default(), 1, 1)
+            .map_err(|e| e.to_string())?
+            .final_tau;
+
         // shard counts spanning 1, a few, the candidate count, and beyond
         for shards in [1, g.usize_in(2, 8), candidates.max(1), candidates + 9] {
             let threads = g.usize_in(1, 4);
             let out = engine
                 .search_sharded(&q, k, exclusion, CascadeOpts::default(), shards, threads)
                 .map_err(|e| e.to_string())?;
+            if out.final_tau.to_bits() != reference_tau.to_bits() {
+                return Err(format!(
+                    "{shards} shards × {threads} threads: final τ {} != serial τ {}",
+                    out.final_tau, reference_tau
+                ));
+            }
             assert_bit_identical(
                 &format!("{shards} shards × {threads} threads"),
                 &out.hits,
@@ -156,6 +171,16 @@ fn stress_concurrent_tightening_never_drops_a_true_hit() {
     let brute = brute_topk(&qn, engine.index(), k, exclusion);
     assert_eq!(brute.len(), k, "workload must fill all K slots");
 
+    // serial τ reference: the racing runs below must land on the same
+    // published τ bit-for-bit — the lost-update regression assertion
+    // for SharedThreshold::tighten (a load-then-store publish can leave
+    // a looser τ; the CAS min-loop cannot)
+    let serial_tau = engine
+        .search_sharded(&qn, k, exclusion, CascadeOpts::default(), 1, 1)
+        .unwrap()
+        .final_tau;
+    assert!(serial_tau.is_finite(), "planted workload must fill the τ heap");
+
     let mut tightened_at_least_once = false;
     for run in 0..20 {
         let shards = [2, 4, 8, 16][run % 4];
@@ -165,6 +190,12 @@ fn stress_concurrent_tightening_never_drops_a_true_hit() {
         assert_eq!(
             out.hits, brute,
             "run {run} ({shards} shards): sharded top-K diverged from brute force"
+        );
+        assert_eq!(
+            out.final_tau.to_bits(),
+            serial_tau.to_bits(),
+            "run {run} ({shards} shards): final τ {} != serial τ {serial_tau}",
+            out.final_tau
         );
         tightened_at_least_once |= out.tau_tightenings > 0;
         // pruning must actually engage — the threshold the workers race
