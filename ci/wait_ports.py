@@ -1,0 +1,39 @@
+#!/usr/bin/env python3
+"""Block until every given localhost TCP port accepts a connection.
+
+Usage: wait_ports.py PORT [PORT ...]
+
+CI helper for the serve smoke lanes: a freshly `cargo run` server takes
+an unpredictable moment to bind (the first invocation may still be
+linking), and the cluster coordinator refuses to start until its
+workers answer the capability handshake.  Polls each port with a short
+connect timeout and fails hard after a generous overall deadline so a
+crashed server surfaces as a clear error instead of a hang.
+"""
+
+import socket
+import sys
+import time
+
+DEADLINE_S = 180.0
+
+
+def main(argv):
+    ports = [int(p) for p in argv[1:]]
+    if not ports:
+        sys.exit("usage: wait_ports.py PORT [PORT ...]")
+    deadline = time.monotonic() + DEADLINE_S
+    for port in ports:
+        while True:
+            try:
+                with socket.create_connection(("127.0.0.1", port), timeout=1):
+                    break
+            except OSError:
+                if time.monotonic() > deadline:
+                    sys.exit(f"port {port} did not come up within {DEADLINE_S:.0f}s")
+                time.sleep(0.25)
+        print(f"port {port} up")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -30,6 +30,10 @@ pub struct ServeConfig {
     /// Outstanding pipelined requests per connection before the reactor
     /// stops reading that socket.
     pub max_inflight: usize,
+    /// Comma-separated worker node addresses (`host:port,host:port`).
+    /// Empty = single-node; non-empty turns the server into a cluster
+    /// coordinator that ships index segments to these nodes.
+    pub cluster: String,
 }
 
 impl Default for ServeConfig {
@@ -45,6 +49,7 @@ impl Default for ServeConfig {
             threads: 4,
             max_frame: DEFAULT_MAX_FRAME,
             max_inflight: 32,
+            cluster: String::new(),
         }
     }
 }
@@ -61,6 +66,7 @@ impl ServeConfig {
         "serve.threads",
         "serve.max_frame",
         "serve.max_inflight",
+        "serve.cluster",
     ];
 
     /// Build from a parsed doc, with defaults for missing keys and an
@@ -115,6 +121,10 @@ impl ServeConfig {
                 .get_i64("serve.max_inflight")
                 .map(|v| v as usize)
                 .unwrap_or(d.max_inflight),
+            cluster: doc
+                .get_str("serve.cluster")
+                .map(str::to_string)
+                .unwrap_or(d.cluster),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -211,6 +221,16 @@ mod tests {
             let doc = ConfigDoc::parse(&format!("[serve]\n{bad}")).unwrap();
             assert!(ServeConfig::from_doc(&doc).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn cluster_key_parses_and_defaults_empty() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc).unwrap().cluster, "");
+        let doc =
+            ConfigDoc::parse("[serve]\ncluster = \"10.0.0.1:7071,10.0.0.2:7071\"").unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster, "10.0.0.1:7071,10.0.0.2:7071");
     }
 
     #[test]

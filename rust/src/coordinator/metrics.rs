@@ -84,6 +84,14 @@ pub struct Metrics {
     /// mean's denominator — zero-timing searches are excluded, not
     /// counted as "perfectly even")
     search_imbalance_samples: AtomicU64,
+    // ------------------------- cluster counters
+    /// worker nodes attached to the cluster backend (gauge; 0 when the
+    /// service runs single-node)
+    cluster_nodes: AtomicU64,
+    /// τ-tightening messages pushed to remote nodes mid-search
+    tau_broadcasts: AtomicU64,
+    /// shard chunks stolen from a slower node's deque
+    shards_stolen: AtomicU64,
     // ------------------------- serving-edge counters
     /// connections currently open at the serving front end (gauge)
     conns_open: AtomicU64,
@@ -138,6 +146,9 @@ impl Metrics {
             search_tau_tightenings: AtomicU64::new(0),
             search_imbalance_milli: AtomicU64::new(0),
             search_imbalance_samples: AtomicU64::new(0),
+            cluster_nodes: AtomicU64::new(0),
+            tau_broadcasts: AtomicU64::new(0),
+            shards_stolen: AtomicU64::new(0),
             conns_open: AtomicU64::new(0),
             frames_oversized: AtomicU64::new(0),
             requests_pipelined: AtomicU64::new(0),
@@ -204,6 +215,33 @@ impl Metrics {
                 .fetch_add((r.max(0.0) * 1e3).round() as u64, Ordering::Relaxed);
             self.search_imbalance_samples.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Record the cluster's node count once a shard backend attaches
+    /// (gauge; stays 0 on a single-node service).
+    pub fn set_cluster_nodes(&self, n: u64) {
+        self.cluster_nodes.store(n, Ordering::Relaxed);
+    }
+
+    /// Record one completed *cluster* top-K search: the merged cascade
+    /// counters plus the cluster executor's telemetry — remote shard
+    /// verbs run, τ tightenings observed at the coordinator, τ
+    /// broadcasts pushed to other nodes, and shard chunks stolen off a
+    /// slower node's deque.  Per-shard wall times live on the worker
+    /// nodes, so no imbalance sample is recorded here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_search_cluster(
+        &self,
+        latency_ms: f64,
+        stats: &CascadeStats,
+        shards: u64,
+        tau_tightenings: u64,
+        tau_broadcasts: u64,
+        shards_stolen: u64,
+    ) {
+        self.on_search_sharded(latency_ms, stats, shards, tau_tightenings, None);
+        self.tau_broadcasts.fetch_add(tau_broadcasts, Ordering::Relaxed);
+        self.shards_stolen.fetch_add(shards_stolen, Ordering::Relaxed);
     }
 
     /// A connection opened at the serving front end (either the blocking
@@ -358,6 +396,9 @@ impl Metrics {
                         / n as f64
                 }
             },
+            cluster_nodes: self.cluster_nodes.load(Ordering::Relaxed),
+            tau_broadcasts: self.tau_broadcasts.load(Ordering::Relaxed),
+            shards_stolen: self.shards_stolen.load(Ordering::Relaxed),
             conns_open: self.conns_open.load(Ordering::Relaxed),
             frames_oversized: self.frames_oversized.load(Ordering::Relaxed),
             requests_pipelined: self.requests_pipelined.load(Ordering::Relaxed),
@@ -464,6 +505,15 @@ pub struct MetricsSnapshot {
     /// ≥ 1.0, 1.0 = perfectly even) over the searches with measurable
     /// timings; 0.0 until one such search runs.
     pub search_imbalance_mean: f64,
+    /// Worker nodes attached to the cluster shard backend (gauge; 0 on
+    /// a single-node service).
+    pub cluster_nodes: u64,
+    /// τ-tightening messages the coordinator pushed to remote nodes
+    /// mid-search (one per receiving node per strict improvement).
+    pub tau_broadcasts: u64,
+    /// Shard chunks a node stole off another node's deque when it
+    /// drained its own range first.
+    pub shards_stolen: u64,
     /// Connections currently open at the serving front end (gauge; both
     /// the blocking and reactor edges maintain it).
     pub conns_open: u64,
@@ -579,6 +629,12 @@ impl MetricsSnapshot {
                 out.push_str(" imbalance=n/a");
             }
         }
+        if self.cluster_nodes > 0 {
+            out.push_str(&format!(
+                " cluster(nodes={} tau_broadcasts={} shards_stolen={})",
+                self.cluster_nodes, self.tau_broadcasts, self.shards_stolen,
+            ));
+        }
         if self.conns_open > 0 || self.frames_oversized > 0 || self.requests_pipelined > 0 {
             out.push_str(&format!(
                 " edge(conns_open={} oversized={} pipelined={})",
@@ -675,6 +731,16 @@ impl MetricsSnapshot {
             self.search_band_cells_skipped,
         );
         counter(
+            "sdtw_tau_broadcasts_total",
+            "Tau tightenings broadcast to remote cluster nodes mid-search.",
+            self.tau_broadcasts,
+        );
+        counter(
+            "sdtw_shards_stolen_total",
+            "Shard chunks stolen across cluster nodes for load balance.",
+            self.shards_stolen,
+        );
+        counter(
             "sdtw_frames_oversized_total",
             "Frames dropped for exceeding the max-frame cap.",
             self.frames_oversized,
@@ -714,6 +780,11 @@ impl MetricsSnapshot {
             "sdtw_conns_open",
             "Connections currently open at the serving front end.",
             self.conns_open as f64,
+        );
+        gauge(
+            "sdtw_cluster_nodes",
+            "Worker nodes attached to the cluster shard backend.",
+            self.cluster_nodes as f64,
         );
         gauge(
             "sdtw_search_prune_fraction",
@@ -974,6 +1045,37 @@ mod tests {
         assert!(r.contains("sharded=2"));
         assert!(r.contains("shards=12"));
         assert!(r.contains("tightenings=16"));
+    }
+
+    #[test]
+    fn cluster_counters_accumulate_and_render_only_when_attached() {
+        let m = Metrics::new();
+        let stats = CascadeStats { candidates: 10, dp_full: 10, ..Default::default() };
+        // before a backend attaches, the cluster block stays hidden even
+        // if a (hypothetical) cluster search ran
+        let s = m.snapshot();
+        assert_eq!(s.cluster_nodes, 0);
+        assert!(!s.render().contains("cluster("));
+        m.set_cluster_nodes(3);
+        m.on_search_cluster(2.0, &stats, 8, 5, 10, 2);
+        m.on_search_cluster(4.0, &stats, 8, 1, 2, 0);
+        let s = m.snapshot();
+        // a cluster search is a sharded search is a search
+        assert_eq!(s.searches, 2);
+        assert_eq!(s.searches_sharded, 2);
+        assert_eq!(s.search_shards, 16);
+        assert_eq!(s.search_tau_tightenings, 6);
+        // no per-shard wall times at the coordinator: never an imbalance sample
+        assert_eq!(s.search_imbalance_samples, 0);
+        assert_eq!(s.cluster_nodes, 3);
+        assert_eq!(s.tau_broadcasts, 12);
+        assert_eq!(s.shards_stolen, 2);
+        let r = s.render();
+        assert!(r.contains("cluster(nodes=3 tau_broadcasts=12 shards_stolen=2)"));
+        let text = s.render_prometheus();
+        assert!(text.contains("sdtw_cluster_nodes 3"));
+        assert!(text.contains("sdtw_tau_broadcasts_total 12"));
+        assert!(text.contains("sdtw_shards_stolen_total 2"));
     }
 
     #[test]

@@ -53,7 +53,7 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::BoundedQueue;
 pub use request::{
     AlignOptions, AlignRequest, AlignResponse, AppendOptions, AppendResponse, RequestId,
-    SearchOptions, SearchResponse,
+    ResolvedSearch, SearchOptions, SearchResponse,
 };
 pub use router::Router;
 pub use service::{SdtwService, ServiceOptions};

@@ -3,8 +3,12 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use crate::dtw::kernel::{KernelKind, KernelSpec};
-use crate::search::{CascadeStats, Hit, LbKernelKind, LbKernelSpec};
+use crate::search::{
+    effective_band, CascadeOpts, CascadeStats, Hit, LbKernelKind, LbKernelSpec,
+};
 
 pub type RequestId = u64;
 
@@ -122,38 +126,75 @@ impl Default for SearchOptions {
     }
 }
 
+/// Every auto (`0`) field of a [`SearchOptions`] resolved against a
+/// concrete query/reference shape in one validated pass — the single
+/// options surface the service, CLI, and cluster coordinator consume.
+/// Replaces the accreted per-field resolvers (`resolve_exclusion`,
+/// `resolve_kernel`, `resolve_lb_kernel`, `resolve_sharding`,
+/// `effective_band` call sites); with exactly one resolver the verbs
+/// cannot drift.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResolvedSearch {
+    /// Match sites to return (validated `>= 1`).
+    pub k: usize,
+    /// Concrete candidate window length.
+    pub window: usize,
+    /// Concrete candidate stride (`>= 1`).
+    pub stride: usize,
+    /// Concrete trivial-match exclusion (`>= 1`).
+    pub exclusion: usize,
+    /// Concrete shard count (`1` = the serial engine).
+    pub shards: usize,
+    /// Concrete executor thread budget (`>= 1`).
+    pub parallelism: usize,
+    /// Stage-3 DP kernel selection (auto params stay 0 for
+    /// `KernelSpec::instantiate`).
+    pub kernel: KernelSpec,
+    /// Kim/Keogh prefilter kernel selection.
+    pub lb_kernel: LbKernelSpec,
+    /// Effective Sakoe-Chiba radius: already mapped through
+    /// [`effective_band`], so a radius that covers the window has
+    /// collapsed to `0` (= unconstrained) here.
+    pub band: usize,
+}
+
+impl ResolvedSearch {
+    /// The cascade options this resolution selects — the one place the
+    /// kernel/LB/band knobs turn into [`CascadeOpts`].
+    pub fn cascade_opts(&self) -> CascadeOpts {
+        CascadeOpts::default()
+            .with_kernel(self.kernel)
+            .with_lb(self.lb_kernel)
+            .with_band(self.band)
+    }
+}
+
 impl SearchOptions {
-    /// Resolve the auto (zero) fields against a concrete query/reference
-    /// shape: `(window, stride, exclusion)`.  The single definition of
-    /// the protocol's "0 = auto" semantics — used by the service and the
-    /// CLI so they cannot drift.
-    pub fn resolve(&self, qlen: usize, reflen: usize) -> (usize, usize, usize) {
+    /// Resolve every auto (zero) field against a concrete
+    /// query/reference shape, validating as it goes.  The single
+    /// definition of the protocol's "0 = auto" semantics — used by the
+    /// service, the CLI, and the cluster coordinator so they cannot
+    /// drift.
+    pub fn resolve(&self, qlen: usize, reflen: usize) -> Result<ResolvedSearch> {
+        anyhow::ensure!(qlen >= 1, "empty query");
         let window = if self.window == 0 {
             (qlen + qlen / 2).min(reflen)
         } else {
             self.window
         };
-        let stride = self.stride.max(1);
-        (window, stride, self.resolve_exclusion(window))
+        anyhow::ensure!(
+            window <= reflen,
+            "window {window} exceeds reference length {reflen}"
+        );
+        self.resolve_for_window(window)
     }
 
-    /// Resolve just the exclusion field against an already-known window
-    /// (the streaming path, where the session fixes the window).  The
-    /// single definition of "0 = half the window" — shared with
-    /// [`SearchOptions::resolve`] so the paths cannot drift.
-    pub fn resolve_exclusion(&self, window: usize) -> usize {
-        if self.exclusion == 0 {
-            (window / 2).max(1)
-        } else {
-            self.exclusion
-        }
-    }
-
-    /// Resolve the sharding fields: `(shards, parallelism)`.
-    /// `parallelism = 0` means the host's available parallelism;
-    /// `shards = 0` means one shard per resolved worker thread.  A
-    /// result of `(1, _)` selects the serial engine.
-    pub fn resolve_sharding(&self) -> (usize, usize) {
+    /// Resolve against an already-fixed window — the streaming session
+    /// and cluster paths, where the live index's shape wins and the
+    /// request has already been checked against it.
+    pub fn resolve_for_window(&self, window: usize) -> Result<ResolvedSearch> {
+        anyhow::ensure!(self.k >= 1, "k must be >= 1");
+        anyhow::ensure!(window >= 1, "window must be >= 1");
         let parallelism = if self.parallelism == 0 {
             std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -162,22 +203,22 @@ impl SearchOptions {
             self.parallelism
         };
         let shards = if self.shards == 0 { parallelism } else { self.shards };
-        (shards, parallelism)
-    }
-
-    /// Resolve the kernel fields into a [`KernelSpec`] (auto params stay
-    /// 0; `KernelSpec::instantiate` substitutes the defaults).  The
-    /// single definition shared by the service and the CLI.
-    pub fn resolve_kernel(&self) -> KernelSpec {
-        KernelSpec { kind: self.kernel, width: 0, lanes: self.lanes }
-    }
-
-    /// Resolve the lower-bound prefilter fields into an [`LbKernelSpec`]
-    /// (auto block stays 0; `LbKernelSpec::instantiate` substitutes the
-    /// default).  The single definition shared by the service and the
-    /// CLI, mirroring [`SearchOptions::resolve_kernel`].
-    pub fn resolve_lb_kernel(&self) -> LbKernelSpec {
-        LbKernelSpec { kind: self.lb_kernel, block: self.lb_block }
+        let exclusion = if self.exclusion == 0 {
+            (window / 2).max(1)
+        } else {
+            self.exclusion
+        };
+        Ok(ResolvedSearch {
+            k: self.k,
+            window,
+            stride: self.stride.max(1),
+            exclusion,
+            shards,
+            parallelism,
+            kernel: KernelSpec { kind: self.kernel, width: 0, lanes: self.lanes },
+            lb_kernel: LbKernelSpec { kind: self.lb_kernel, block: self.lb_block },
+            band: effective_band(self.band, window).unwrap_or(0),
+        })
     }
 }
 
@@ -261,52 +302,86 @@ mod tests {
 
     #[test]
     fn search_options_resolve_kernel() {
-        assert_eq!(SearchOptions::default().resolve_kernel(), KernelSpec::SCALAR);
+        assert_eq!(
+            SearchOptions::default().resolve(128, 2048).unwrap().kernel,
+            KernelSpec::SCALAR
+        );
         let o = SearchOptions { kernel: KernelKind::Lanes, lanes: 16, ..Default::default() };
-        let spec = o.resolve_kernel();
+        let spec = o.resolve(128, 2048).unwrap().kernel;
         assert_eq!(spec.kind, KernelKind::Lanes);
         assert_eq!(spec.lanes, 16);
     }
 
     #[test]
     fn search_options_resolve_lb_kernel() {
-        assert_eq!(SearchOptions::default().resolve_lb_kernel(), LbKernelSpec::SCALAR);
+        assert_eq!(
+            SearchOptions::default().resolve(128, 2048).unwrap().lb_kernel,
+            LbKernelSpec::SCALAR
+        );
         let o = SearchOptions {
             lb_kernel: LbKernelKind::Block,
             lb_block: 32,
             ..Default::default()
         };
-        let spec = o.resolve_lb_kernel();
+        let spec = o.resolve(128, 2048).unwrap().lb_kernel;
         assert_eq!(spec.kind, LbKernelKind::Block);
         assert_eq!(spec.block, 32);
     }
 
     #[test]
     fn search_options_resolve_auto_and_explicit() {
-        let auto = SearchOptions::default().resolve(128, 2048);
-        assert_eq!(auto, (192, 1, 96));
+        let auto = SearchOptions::default().resolve(128, 2048).unwrap();
+        assert_eq!((auto.window, auto.stride, auto.exclusion), (192, 1, 96));
         // auto window clamps to the reference
-        assert_eq!(SearchOptions::default().resolve(128, 150), (150, 1, 75));
+        let clamped = SearchOptions::default().resolve(128, 150).unwrap();
+        assert_eq!((clamped.window, clamped.stride, clamped.exclusion), (150, 1, 75));
         let explicit =
             SearchOptions { k: 3, window: 64, stride: 0, exclusion: 7, ..Default::default() };
-        assert_eq!(explicit.resolve(128, 2048), (64, 1, 7));
+        let r = explicit.resolve(128, 2048).unwrap();
+        assert_eq!((r.window, r.stride, r.exclusion), (64, 1, 7));
+        assert_eq!(r.k, 3);
     }
 
     #[test]
     fn search_options_resolve_sharding() {
         // defaults: serial
-        assert_eq!(SearchOptions::default().resolve_sharding(), (1, 1));
+        let d = SearchOptions::default().resolve(128, 2048).unwrap();
+        assert_eq!((d.shards, d.parallelism), (1, 1));
         // explicit shard/thread counts pass through
         let o = SearchOptions { shards: 4, parallelism: 2, ..Default::default() };
-        assert_eq!(o.resolve_sharding(), (4, 2));
+        let r = o.resolve(128, 2048).unwrap();
+        assert_eq!((r.shards, r.parallelism), (4, 2));
         // shards auto: one per worker thread
         let o = SearchOptions { shards: 0, parallelism: 3, ..Default::default() };
-        assert_eq!(o.resolve_sharding(), (3, 3));
+        let r = o.resolve(128, 2048).unwrap();
+        assert_eq!((r.shards, r.parallelism), (3, 3));
         // parallelism auto: host parallelism, at least 1
         let o = SearchOptions { shards: 2, parallelism: 0, ..Default::default() };
-        let (shards, parallelism) = o.resolve_sharding();
-        assert_eq!(shards, 2);
-        assert!(parallelism >= 1);
+        let r = o.resolve(128, 2048).unwrap();
+        assert_eq!(r.shards, 2);
+        assert!(r.parallelism >= 1);
+    }
+
+    #[test]
+    fn search_options_resolve_validates() {
+        // empty query / bad k / oversized window fail up front, in the
+        // one resolver every verb shares
+        assert!(SearchOptions::default().resolve(0, 2048).is_err());
+        let o = SearchOptions { k: 0, ..Default::default() };
+        assert!(o.resolve(128, 2048).is_err());
+        let o = SearchOptions { window: 4096, ..Default::default() };
+        assert!(o.resolve(128, 2048).is_err());
+    }
+
+    #[test]
+    fn search_options_resolve_band_collapses_to_effective() {
+        // a radius covering the window is the unconstrained search
+        let o = SearchOptions { window: 64, band: 64, ..Default::default() };
+        assert_eq!(o.resolve(128, 2048).unwrap().band, 0);
+        let o = SearchOptions { window: 64, band: 63, ..Default::default() };
+        assert_eq!(o.resolve(128, 2048).unwrap().band, 63);
+        // cascade_opts carries the same resolution (idempotent mapping)
+        assert_eq!(o.resolve(128, 2048).unwrap().cascade_opts().band, 63);
     }
 
     #[test]

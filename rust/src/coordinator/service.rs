@@ -37,6 +37,7 @@ use crate::normalize;
 use crate::obs;
 use crate::runtime::artifact::{Kind, Manifest, VariantMeta};
 use crate::runtime::Engine;
+use crate::search::cluster::{self, ClusterBackend, RemoteTau, ShardBackend, ShardRun};
 use crate::search::{CascadeOpts, SearchEngine, StreamingEngine};
 
 /// Service construction options.
@@ -115,6 +116,31 @@ pub struct SdtwService {
     search_engines: std::sync::Mutex<HashMap<(usize, usize), Arc<SearchEngine>>>,
     /// True when started without engines/dispatcher (align fails fast).
     search_only: bool,
+    /// Coordinator role: the shard backend every search/append routes
+    /// through once [`SdtwService::attach_cluster`] ran (None = the
+    /// ordinary single-process paths).
+    cluster: Option<Arc<dyn ShardBackend>>,
+    /// Worker role: index segments shipped by a coordinator's
+    /// `segment.put`, keyed by segment id.  Per-segment engines carry
+    /// their own mutex so shard searches on different segments (own +
+    /// stolen) never serialize on the map lock.
+    cluster_segments: std::sync::Mutex<HashMap<u64, Arc<ClusterSegment>>>,
+    /// Worker role: τ cells keyed by search id — where a coordinator's
+    /// `tau` broadcasts land so in-flight `search.shard` verbs for the
+    /// same sid see remote tightenings mid-cascade.
+    tau_cells: std::sync::Mutex<HashMap<u64, Arc<RemoteTau>>>,
+}
+
+/// One index segment held by a worker node: an append-only streaming
+/// engine over the coordinator-shipped (pre-normalized) samples, plus
+/// the coordinate maps back to the global frame.
+struct ClusterSegment {
+    /// First global candidate this segment owns.
+    base: u64,
+    /// Global sample offset of the segment's first sample (`base ·
+    /// stride` — local hit positions shift by this before the wire).
+    start: usize,
+    engine: std::sync::Mutex<StreamingEngine>,
 }
 
 impl SdtwService {
@@ -204,6 +230,9 @@ impl SdtwService {
             streaming: std::sync::Mutex::new(None),
             search_engines: std::sync::Mutex::new(HashMap::new()),
             search_only: false,
+            cluster: None,
+            cluster_segments: std::sync::Mutex::new(HashMap::new()),
+            tau_cells: std::sync::Mutex::new(HashMap::new()),
         })
     }
 
@@ -260,6 +289,9 @@ impl SdtwService {
             streaming: std::sync::Mutex::new(None),
             search_engines: std::sync::Mutex::new(HashMap::new()),
             search_only: true,
+            cluster: None,
+            cluster_segments: std::sync::Mutex::new(HashMap::new()),
+            tau_cells: std::sync::Mutex::new(HashMap::new()),
         })
     }
 
@@ -414,29 +446,27 @@ impl SdtwService {
     ) -> Result<SearchResponse> {
         anyhow::ensure!(!query.is_empty(), "empty query");
         anyhow::ensure!(options.k >= 1, "k must be >= 1");
+        if let Some(cluster) = &self.cluster {
+            // coordinator role: every search targets the cluster index.
+            // The backend is append-only, so `stream` is moot — startup
+            // reference and appended tail are one growing candidate set.
+            return self.search_cluster_inner(query, options, cluster.clone());
+        }
         if options.stream {
             return self.search_stream_inner(query, options);
         }
-        let reflen = self.reference.len();
-        let (window, stride, exclusion) = options.resolve(query.len(), reflen);
-        anyhow::ensure!(
-            window <= reflen,
-            "window {window} exceeds reference length {reflen}"
-        );
-        let (shards, parallelism) = options.resolve_sharding();
-        // the stage-3 DP kernel and the stage-1/2 LB prefilter kernel
-        // ride inside the cascade options; any choice returns
-        // bit-identical hits (kernel-layer + τ-refresh invariants)
-        let cascade_opts = CascadeOpts::default()
-            .with_kernel(options.resolve_kernel())
-            .with_lb(options.resolve_lb_kernel())
-            .with_band(options.band);
+        // one validated resolution for the whole request: window/stride/
+        // exclusion, sharding, both kernel selections, and the effective
+        // band — any choice returns bit-identical hits (kernel-layer +
+        // τ-refresh invariants)
+        let r = options.resolve(query.len(), self.reference.len())?;
+        let cascade_opts = r.cascade_opts();
 
         let submitted = Instant::now();
-        let engine = self.search_engine(window, stride)?;
+        let engine = self.search_engine(r.window, r.stride)?;
         let qn = normalize::znormed(&query);
-        if shards <= 1 {
-            let outcome = engine.search_opts(&qn, options.k, exclusion, cascade_opts, 1)?;
+        if r.shards <= 1 {
+            let outcome = engine.search_opts(&qn, r.k, r.exclusion, cascade_opts, 1)?;
             let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
             self.metrics.on_search(latency_ms, &outcome.stats);
             Ok(SearchResponse {
@@ -450,11 +480,11 @@ impl SdtwService {
         } else {
             let outcome = engine.search_sharded(
                 &qn,
-                options.k,
-                exclusion,
+                r.k,
+                r.exclusion,
                 cascade_opts,
-                shards,
-                parallelism,
+                r.shards,
+                r.parallelism,
             )?;
             let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
             self.metrics.on_search_sharded(
@@ -475,6 +505,55 @@ impl SdtwService {
         }
     }
 
+    /// Cluster search (coordinator role): resolve against the cluster
+    /// index's fixed shape, fan out through the backend, and record the
+    /// distribution counters.  Hits are bit-identical to the serial
+    /// engine over the same candidate set (`search::cluster` docs); the
+    /// request's kernel knobs are moot — workers pick their own kernels,
+    /// which cannot change results by the same invariant.
+    fn search_cluster_inner(
+        &self,
+        query: Vec<f32>,
+        options: SearchOptions,
+        cluster: Arc<dyn ShardBackend>,
+    ) -> Result<SearchResponse> {
+        // same shape contract as the streaming session: explicit
+        // window/stride must match the live index, 0 adopts it
+        anyhow::ensure!(
+            options.window == 0 || options.window == cluster.window(),
+            "window {} does not match the cluster index's window {}",
+            options.window,
+            cluster.window()
+        );
+        anyhow::ensure!(
+            options.stride == 0 || options.stride == cluster.stride(),
+            "stride {} does not match the cluster index's stride {}",
+            options.stride,
+            cluster.stride()
+        );
+        let r = options.resolve_for_window(cluster.window())?;
+        let submitted = Instant::now();
+        let qn = normalize::znormed(&query);
+        let out = cluster.search(&qn, r.k, r.exclusion, r.band)?;
+        let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+        self.metrics.on_search_cluster(
+            latency_ms,
+            &out.stats,
+            out.shards,
+            out.tau_tightenings,
+            out.tau_broadcasts,
+            out.shards_stolen,
+        );
+        Ok(SearchResponse {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            shards: out.shards as usize,
+            tau_tightenings: out.tau_tightenings,
+            hits: out.hits,
+            latency_ms,
+            stats: out.stats,
+        })
+    }
+
     /// Streaming search: runs against the session grown by
     /// [`SdtwService::append_blocking`] instead of the startup
     /// reference.  The serial path cascades only the candidates appended
@@ -488,11 +567,6 @@ impl SdtwService {
         query: Vec<f32>,
         options: SearchOptions,
     ) -> Result<SearchResponse> {
-        let (shards, parallelism) = options.resolve_sharding();
-        let cascade_opts = CascadeOpts::default()
-            .with_kernel(options.resolve_kernel())
-            .with_lb(options.resolve_lb_kernel())
-            .with_band(options.band);
         let submitted = Instant::now();
         let qn = normalize::znormed(&query);
 
@@ -501,11 +575,14 @@ impl SdtwService {
             .as_mut()
             .context("no streaming session: send an append first")?;
         ensure_session_shape(engine, options.window, options.stride)?;
-        let exclusion = options.resolve_exclusion(engine.index().window());
+        // the session's shape wins; one validated resolution covers
+        // exclusion, sharding, kernels, and band (as on the batch path)
+        let r = options.resolve_for_window(engine.index().window())?;
+        let cascade_opts = r.cascade_opts();
 
-        if shards <= 1 {
+        if r.shards <= 1 {
             let t_delta = Instant::now();
-            let d = engine.search_delta(&qn, options.k, exclusion, cascade_opts)?;
+            let d = engine.search_delta(&qn, r.k, r.exclusion, cascade_opts)?;
             if obs::current().sampled {
                 obs::record_span(
                     obs::Stage::Delta,
@@ -528,11 +605,11 @@ impl SdtwService {
         } else {
             let outcome = engine.search_sharded(
                 &qn,
-                options.k,
-                exclusion,
+                r.k,
+                r.exclusion,
                 cascade_opts,
-                shards,
-                parallelism,
+                r.shards,
+                r.parallelism,
             )?;
             let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
             self.metrics.on_search_sharded(
@@ -584,6 +661,33 @@ impl SdtwService {
         // does not need the mutex.
         let (mean, std) = self.frozen_stats;
         let normalized: Vec<f32> = samples.iter().map(|&v| (v - mean) / std).collect();
+        if let Some(cluster) = &self.cluster {
+            // coordinator role: the append grows the tail node's segment
+            // (segment owners are fixed; only the tail accepts growth)
+            anyhow::ensure!(
+                options.window == 0 || options.window == cluster.window(),
+                "window {} does not match the cluster index's window {}",
+                options.window,
+                cluster.window()
+            );
+            anyhow::ensure!(
+                options.stride == 0 || options.stride == cluster.stride(),
+                "stride {} does not match the cluster index's stride {}",
+                options.stride,
+                cluster.stride()
+            );
+            let candidates = cluster.append(&normalized)?;
+            self.metrics.on_stream_append(samples.len() as u64);
+            return Ok(AppendResponse {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                appended: samples.len(),
+                stream_len: cluster.stream_len() as usize,
+                candidates: candidates as usize,
+                window: cluster.window(),
+                stride: cluster.stride(),
+                latency_ms: submitted.elapsed().as_secs_f64() * 1e3,
+            });
+        }
         let mut guard = self.streaming.lock().unwrap();
         if guard.is_none() {
             // first append opens the session; its (window, stride) are
@@ -593,7 +697,8 @@ impl SdtwService {
                 stride: options.stride,
                 ..Default::default()
             };
-            let (window, stride, _) = probe.resolve(self.qlen(), self.reference.len());
+            let r = probe.resolve(self.qlen(), self.reference.len())?;
+            let (window, stride) = (r.window, r.stride);
             let engine = StreamingEngine::new(&self.reference, window, stride, Dist::Sq)?;
             log_info!(
                 "streaming session opened: window={window} stride={stride}, seeded with \
@@ -656,6 +761,191 @@ impl SdtwService {
         );
         cache.insert((window, stride), engine.clone());
         Ok(engine)
+    }
+
+    // --- cluster: coordinator role ---
+
+    /// Turn this service into a cluster coordinator: connect to `addrs`,
+    /// negotiate wire v2, partition the normalized reference into one
+    /// segment per node and ship them.  Every subsequent search/append
+    /// routes through the cluster instead of the local engines.  The
+    /// cluster index's shape is the service's auto resolution for the
+    /// primary query length, fixed for the backend's lifetime.
+    pub fn attach_cluster(&mut self, addrs: &[String]) -> Result<()> {
+        let probe = SearchOptions::default();
+        let r = probe.resolve(self.qlen(), self.reference.len())?;
+        let backend = ClusterBackend::attach(addrs, &self.reference, r.window, r.stride)?;
+        log_info!(
+            "cluster attached: {} nodes, window={} stride={} ({} candidates)",
+            backend.nodes(),
+            r.window,
+            r.stride,
+            backend.candidates()
+        );
+        self.attach_shard_backend(Arc::new(backend));
+        Ok(())
+    }
+
+    /// Attach an arbitrary [`ShardBackend`] (the seam the cluster tests
+    /// use to run the exact coordinator paths over an in-process
+    /// backend).
+    pub fn attach_shard_backend(&mut self, backend: Arc<dyn ShardBackend>) {
+        self.metrics.set_cluster_nodes(backend.nodes() as u64);
+        self.cluster = Some(backend);
+    }
+
+    // --- cluster: worker role (the v2 cluster verbs land here) ---
+
+    /// Bound on per-worker τ cells: sids are coordinator-monotonic, so
+    /// beyond the cap the smallest (oldest) sid is the finished search.
+    /// An evicted-then-revived cell would start back at +inf — stale τ
+    /// is only ever looser, so that cannot break exactness.
+    const TAU_CELL_CAP: usize = 64;
+
+    /// Get or create the τ cell for a search id.
+    fn tau_cell(&self, sid: u64) -> Arc<RemoteTau> {
+        let mut cells = self.tau_cells.lock().unwrap();
+        if let Some(c) = cells.get(&sid) {
+            return c.clone();
+        }
+        if cells.len() >= Self::TAU_CELL_CAP {
+            if let Some(&evict) = cells.keys().min() {
+                cells.remove(&evict);
+            }
+        }
+        let c = Arc::new(RemoteTau::new());
+        cells.insert(sid, c.clone());
+        c
+    }
+
+    /// `segment.put`: index a coordinator-shipped segment.  Samples are
+    /// already in the coordinator's frozen normalization frame — workers
+    /// never normalize cluster data, which is what keeps windows
+    /// byte-identical to the coordinator's own reference.  Returns the
+    /// candidate count indexed.
+    pub fn segment_put(
+        &self,
+        segment: u64,
+        base: u64,
+        start: u64,
+        window: usize,
+        stride: usize,
+        samples: Vec<f32>,
+    ) -> Result<u64> {
+        // the sample offset must sit where the global stride grid says
+        // candidate `base` starts, or local hit coordinates would map
+        // back off-grid
+        anyhow::ensure!(
+            stride >= 1 && start == base.saturating_mul(stride as u64),
+            "segment sample offset {start} disagrees with base {base} × stride {stride}"
+        );
+        let engine = StreamingEngine::new(&samples, window, stride, Dist::Sq)?;
+        let candidates = engine.index().candidates() as u64;
+        log_info!(
+            "segment {segment} stored: base={base}, {candidates} candidates \
+             (window={window} stride={stride}, {} samples)",
+            samples.len()
+        );
+        self.cluster_segments.lock().unwrap().insert(
+            segment,
+            Arc::new(ClusterSegment {
+                base,
+                start: start as usize,
+                engine: std::sync::Mutex::new(engine),
+            }),
+        );
+        Ok(candidates)
+    }
+
+    /// `segment.append`: grow a stored segment at its tail (pre-normalized
+    /// samples, as `segment.put`).  Returns the segment's new candidate
+    /// count.
+    pub fn segment_append(&self, segment: u64, samples: Vec<f32>) -> Result<u64> {
+        let seg = self.cluster_segment(segment)?;
+        let mut engine = seg.engine.lock().unwrap();
+        engine.append(&samples);
+        Ok(engine.index().candidates() as u64)
+    }
+
+    fn cluster_segment(&self, segment: u64) -> Result<Arc<ClusterSegment>> {
+        self.cluster_segments
+            .lock()
+            .unwrap()
+            .get(&segment)
+            .cloned()
+            .with_context(|| format!("unknown segment {segment}"))
+    }
+
+    /// `search.shard`: run global candidates `[lo, hi)` of a stored
+    /// segment through the cascade, with the prune threshold fed by a
+    /// cap-`cap` local heap AND the sid's τ cell (where concurrent `tau`
+    /// broadcasts land mid-cascade).  `cap` is the coordinator-computed
+    /// GLOBAL heap cap — trusting it is what makes per-node pruning
+    /// admissible (`search::cluster` docs).  `exclusion` travels for
+    /// observability only; its pruning effect is already inside `cap`.
+    /// Returns the run (hits mapped to global sample coordinates) and
+    /// the worker-side latency.
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_shard(
+        &self,
+        sid: u64,
+        segment: u64,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        cap: usize,
+        lo: u64,
+        hi: u64,
+        tau: f32,
+        band: usize,
+    ) -> Result<(ShardRun, f64)> {
+        let _ = exclusion;
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        anyhow::ensure!(k >= 1, "k must be >= 1");
+        anyhow::ensure!(cap >= 1, "cap must be >= 1");
+        anyhow::ensure!(lo <= hi, "shard range [{lo}, {hi}) is inverted");
+        let submitted = Instant::now();
+        let cell = self.tau_cell(sid);
+        let seg = self.cluster_segment(segment)?;
+        let engine = seg.engine.lock().unwrap();
+        let total = engine.index().candidates() as u64;
+        anyhow::ensure!(
+            lo >= seg.base && hi.saturating_sub(seg.base) <= total,
+            "shard range [{lo}, {hi}) outside segment {segment} = [{}, {})",
+            seg.base,
+            seg.base + total
+        );
+        let range = (lo - seg.base) as usize..(hi - seg.base) as usize;
+        let mut run = cluster::run_shard(
+            engine.index(),
+            query,
+            engine.dist(),
+            k,
+            cap,
+            CascadeOpts::default().with_band(band),
+            range,
+            tau,
+            &cell,
+        );
+        // hits leave in global sample coordinates — the coordinator
+        // merges across nodes without knowing segment layouts
+        for h in &mut run.hits {
+            h.start += seg.start;
+            h.end += seg.start;
+        }
+        let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+        // a shard run is a search to this node's operator: same counters
+        self.metrics.on_search(latency_ms, &run.stats);
+        Ok((run, latency_ms))
+    }
+
+    /// `tau`: merge a remote τ-tightening into the sid's cell; returns
+    /// the cell value after the merge.  Monotone non-increasing, so
+    /// duplicated/reordered broadcasts are harmless.
+    pub fn tau_update(&self, sid: u64, tau: f32) -> f32 {
+        let cell = self.tau_cell(sid);
+        cell.tighten(tau);
+        cell.get()
     }
 
     /// Graceful shutdown: drain queued work, then stop threads.

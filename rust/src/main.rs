@@ -306,12 +306,13 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         stream: false,
         explain: a.has("explain"),
     };
-    let (window, stride, exclusion) = search_options.resolve(qlen, reflen);
-    let (shards, parallelism) = search_options.resolve_sharding();
+    let r = search_options.resolve(qlen, reflen)?;
+    let (window, stride, exclusion) = (r.window, r.stride, r.exclusion);
+    let (shards, parallelism) = (r.shards, r.parallelism);
     // --width is a CLI-only scan refinement on top of the shared spec
     let kernel_spec = sdtw_repro::dtw::KernelSpec {
         width: a.get_or("width", 0usize)?,
-        ..search_options.resolve_kernel()
+        ..r.kernel
     };
     let opts = if a.has("no-cascade") {
         sdtw_repro::search::CascadeOpts::BRUTE
@@ -319,8 +320,8 @@ fn cmd_search(raw: Vec<String>) -> Result<()> {
         sdtw_repro::search::CascadeOpts::default()
     }
     .with_kernel(kernel_spec)
-    .with_lb(search_options.resolve_lb_kernel())
-    .with_band(search_options.band);
+    .with_lb(r.lb_kernel)
+    .with_band(r.band);
 
     // trace context for this one-shot search: span sampling follows
     // SDTW_TRACE; --explain turns on per-candidate explain events
@@ -583,12 +584,12 @@ fn cmd_stream(raw: Vec<String>) -> Result<()> {
         band: a.get_or("band", 0usize)?,
         ..Default::default()
     };
-    let (window, stride, exclusion) = probe.resolve(qlen, reflen);
-    anyhow::ensure!(window <= reflen, "window {window} exceeds stream length {reflen}");
+    let r = probe.resolve(qlen, reflen)?;
+    let (window, stride, exclusion) = (r.window, r.stride, r.exclusion);
     let opts = sdtw_repro::search::CascadeOpts::default()
-        .with_kernel(probe.resolve_kernel())
-        .with_lb(probe.resolve_lb_kernel())
-        .with_band(probe.band);
+        .with_kernel(r.kernel)
+        .with_lb(r.lb_kernel)
+        .with_band(r.band);
 
     // normalization policy: the offline CLI has the whole stream up
     // front, so it normalizes once with full-stream stats — that is what
@@ -721,6 +722,11 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt("threads", "reactor executor threads (overrides config)")
         .opt("max-frame", "per-frame byte cap at the socket edge (overrides config)")
         .opt("max-inflight", "pipelined requests per connection (overrides config)")
+        .opt(
+            "cluster",
+            "comma-separated worker addresses host:port,...; makes this server a \
+             cluster coordinator that shards search across them (overrides config)",
+        )
         .opt_default("seed", "42", "reference generator seed")
         .opt_default("family", "ecg", "reference family: cbf|walk|ecg")
         .opt_default("reflen", "2048", "reference length (--search-only mode)")
@@ -756,6 +762,9 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
     if let Some(m) = a.get_parsed::<usize>("max-inflight")? {
         cfg.max_inflight = m;
     }
+    if let Some(c) = a.get("cluster") {
+        cfg.cluster = c.to_string();
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!("{}", e.msg))?;
     if let Err(e) = logger::set_spec(&cfg.log_level) {
         eprintln!("warning: ignoring log_level: {e}");
@@ -781,7 +790,19 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
 
     let mut opts = ServiceOptions::from_config(&cfg);
     opts.search_only = search_only;
-    let service = Arc::new(SdtwService::start(opts, reference)?);
+    let mut service = SdtwService::start(opts, reference)?;
+    if !cfg.cluster.is_empty() {
+        let addrs: Vec<String> = cfg
+            .cluster
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!addrs.is_empty(), "--cluster needs at least one worker address");
+        service.attach_cluster(&addrs)?;
+        println!("cluster coordinator over {} worker node(s): {}", addrs.len(), addrs.join(", "));
+    }
+    let service = Arc::new(service);
     if a.has("blocking") {
         let mut server = Server::bind(service, &cfg.addr)?;
         server.set_max_frame(cfg.max_frame);

@@ -1,0 +1,936 @@
+//! Multi-node sharded search: one coordinator fans a query out to N
+//! worker nodes over the wire-v2 cluster verbs, streams τ-tightenings
+//! between nodes as they land, and work-steals whole shard ranges when
+//! pruning skews node wall time.
+//!
+//! ```text
+//!                         ┌───────────── coordinator ─────────────┐
+//!   partition(candidates) │ node thread 0      node thread 1      │
+//!        │                │   deque[0] ◄─steal── deque[1]         │
+//!        ▼                │      │ search.shard     │ search.shard│
+//!   segment.put per node  │      ▼                  ▼             │
+//!        │                │   node 0 ◄──── tau ──── node 1        │
+//!        ▼                │      └── hits/τ ──┬── hits/τ ──┘      │
+//!   RemoteTau (global τ)  │                   ▼                   │
+//!                         │   select_topk over the union          │
+//!                         └───────────────────────────────────────┘
+//! ```
+//!
+//! # Distribution model
+//!
+//! At attach time the coordinator splits the global candidate space into
+//! one contiguous range per node ([`super::index::shard_ranges`]) and
+//! ships each node its *segment*: the reference samples its candidates'
+//! windows cover, already z-normalized in the coordinator's frozen
+//! frame.  Candidate `lo + j` of the global index is candidate `j` of
+//! the segment, and its window is byte-identical to the global window —
+//! segment sample `p` is global sample `p + lo·stride`.  Streaming
+//! appends route to the tail segment's owner, whose append-only index
+//! grows exactly as the single-process [`super::streaming`] engine
+//! would.
+//!
+//! Each search then runs per-node shard verbs over chunks of the node's
+//! range.  A node that drains its own deque steals whole chunks from a
+//! peer's deque (back end, so the victim keeps its cache-warm front) and
+//! receives an ephemeral segment for the stolen range — `shards_stolen`
+//! counts these.
+//!
+//! # Why cluster hits are bit-identical to the serial engine
+//!
+//! The proof is the [`super::sharded`] proof with one more relay hop:
+//!
+//! 1. **Every τ any node ever reads is admissible.**  A worker's local
+//!    [`SharedThreshold`] uses the *coordinator-computed* global cap
+//!    (`prune_heap_cap(k, exclusion, stride)` clamped to the global
+//!    candidate count — never to the shard range), so the heap-cap
+//!    argument holds over its subset of exact costs.  The coordinator's
+//!    [`RemoteTau`] only ever holds a worker-reported τ, i.e. a min over
+//!    admissible values, and the seed each shard verb carries is a stale
+//!    read of that cell.  Stale is only ever *looser* (τ is monotone
+//!    non-increasing), and the min of admissible thresholds is
+//!    admissible — so pruning on any node, at any instant, never cuts a
+//!    window whose cost is at or below the final τ*.
+//! 2. **Every true top-K window completes its DP somewhere.**  Ranges
+//!    are dispatched exactly once (pop under lock, own deque or stolen),
+//!    windows are byte-identical on whichever node runs them, and an
+//!    uncuttable window's exact cost reaches the merge.
+//!
+//! The merged hit list is a superset of the true top-K and the greedy
+//! `(cost, start)` selection over any such superset returns exactly the
+//! brute-force picks (the `topk` superset lemma).  Counters still
+//! partition the candidate space (each range accounted once by the node
+//! that ran it); *which* stage cut a losing window remains timing- and
+//! placement-dependent, exactly as for in-process shards.
+//!
+//! # What is deliberately NOT bit-identical
+//!
+//! `final_tau`.  The serial engine's final τ is the cap-th smallest
+//! exact cost over *one global heap*; the cluster's is the min over
+//! per-node cap-th smallest costs, which can be looser (A = {1, 3},
+//! B = {2, 4}, cap 2: min(3, 4) = 3 but the global heap says 2).  Both
+//! are admissible — only the hits contract is part of the API.
+//! Likewise banded searches build *segment-local* Sakoe-Chiba envelopes;
+//! the clipped envelope interval is a superset of any candidate's
+//! reachable row set (every anchored path stays inside the candidate's
+//! window, which the segment contains), so the banded bounds stay
+//! admissible and hits stay bit-identical, but Kim/Keogh counters can
+//! differ from a single-process banded run near segment edges.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::dtw::Dist;
+use crate::server::{Client, ShardFields};
+use crate::{log_debug, log_info};
+
+use super::cascade::{self, CascadeOpts, CascadeStats, TauSink};
+use super::index::{shard_ranges, CandidateIndex};
+use super::sharded::SharedThreshold;
+use super::streaming::StreamingEngine;
+use super::topk::{prune_heap_cap, select_topk, Hit};
+
+/// A heap-less atomic τ cell: the coordinator's global τ, and the
+/// landing pad for remote tightenings on a worker.
+///
+/// Unlike [`SharedThreshold`] it records no costs of its own — it only
+/// ever holds values that were *already* admissible where they were
+/// computed (a worker's cap-governed heap threshold, or a peer's
+/// broadcast of one).  Reusing a cap-1 `SharedThreshold` here would be
+/// unsound for `k > 1`: a single recorded cost would publish itself as
+/// τ and over-prune.  The min of admissible thresholds is admissible,
+/// so a pure min-cell is exactly the right primitive.
+#[derive(Debug)]
+pub struct RemoteTau {
+    /// `f32::to_bits` of the cell value.  Costs are non-negative, so
+    /// the f32 comparison below is a total order over observed values.
+    bits: AtomicU32,
+}
+
+impl RemoteTau {
+    pub fn new() -> Self {
+        Self { bits: AtomicU32::new(f32::INFINITY.to_bits()) }
+    }
+
+    /// Current cell value (+inf until something tightened it).
+    pub fn get(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    /// Publish `t` iff it is strictly tighter, via the same
+    /// `compare_exchange_weak` min-loop as [`SharedThreshold::tighten`]
+    /// (the lost-update argument in `docs/ANALYSIS.md` carries over
+    /// verbatim).  Returns whether the cell strictly tightened.
+    pub fn tighten(&self, t: f32) -> bool {
+        // Relaxed: the initial read is only a guess — the CAS below
+        // revalidates it, and Release on success is what publishes
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        while t < f32::from_bits(cur) {
+            match self.bits.compare_exchange_weak(
+                cur,
+                t.to_bits(),
+                Ordering::Release,
+                // Relaxed on failure: the loop revalidates against the
+                // returned value before any retry
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+        false
+    }
+}
+
+impl Default for RemoteTau {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A worker shard's [`TauSink`]: exact costs feed the cap-governed
+/// local heap; the effective τ is the min of the local threshold and
+/// whatever the coordinator/peers have pushed into the remote cell.
+/// Both inputs are admissible, so the min is (module docs).
+struct ClusterShardSink<'a> {
+    local: &'a SharedThreshold,
+    remote: &'a RemoteTau,
+}
+
+impl TauSink for ClusterShardSink<'_> {
+    fn tau(&self) -> f32 {
+        self.local.tau().min(self.remote.get())
+    }
+
+    fn record(&mut self, cost: f32) {
+        self.local.record(cost);
+    }
+}
+
+/// What one `search.shard` verb produced on a worker, in the worker's
+/// local frame (the service maps hit positions to global sample
+/// coordinates before they hit the wire).
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    /// Exact-cost hits over the shard range, local sample coordinates.
+    pub hits: Vec<Hit>,
+    /// Per-stage counters for the range (partition-exact).
+    pub stats: CascadeStats,
+    /// The shard's final effective τ: min(local heap threshold, remote
+    /// cell) — what the worker reports back for the coordinator to merge.
+    pub tau: f32,
+    /// Times the *local* threshold strictly tightened during this run.
+    pub tightenings: u64,
+}
+
+/// Run one shard range on a worker node: the cascade over `range` of
+/// `index` with the prune threshold fed by a cap-governed local heap
+/// *and* the node's remote τ cell for this search id.
+///
+/// `cap` is the coordinator-computed global heap cap — callers must NOT
+/// clamp it to `range.len()` (that is only sound when the range is the
+/// whole search; see [`super::cascade::search_range`]).  `seed_tau` is
+/// the coordinator's τ at dispatch time; it lands in the remote cell so
+/// later broadcasts can only tighten further.
+#[allow(clippy::too_many_arguments)]
+pub fn run_shard<I: CandidateIndex + ?Sized>(
+    index: &I,
+    query: &[f32],
+    dist: Dist,
+    k: usize,
+    cap: usize,
+    opts: CascadeOpts,
+    range: Range<usize>,
+    seed_tau: f32,
+    remote: &RemoteTau,
+) -> ShardRun {
+    let local = SharedThreshold::new(cap.max(1));
+    remote.tighten(seed_tau);
+    let mut sink = ClusterShardSink { local: &local, remote };
+    let (hits, stats) = cascade::search_range_with(index, query, dist, k, opts, range, &mut sink);
+    let tau = local.tau().min(remote.get());
+    ShardRun { hits, stats, tau, tightenings: local.tightenings() }
+}
+
+/// A merged cluster search: the exact top-K plus distribution telemetry.
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    /// The top-K match sites, best first — bit-identical to the serial
+    /// engine over the same candidate set (module docs).
+    pub hits: Vec<Hit>,
+    /// Cascade counters merged over every shard on every node;
+    /// partitions the global candidate space.
+    pub stats: CascadeStats,
+    /// Shard verbs executed across all nodes (owned + stolen).
+    pub shards: u64,
+    /// Local-threshold tightenings summed over all shard runs.
+    pub tau_tightenings: u64,
+    /// τ-tightening messages sent between nodes during this search.
+    pub tau_broadcasts: u64,
+    /// Shard ranges executed by a node that did not own them.
+    pub shards_stolen: u64,
+    /// The coordinator's τ cell after the last shard (admissible, but
+    /// NOT bit-identical to the serial final τ — module docs).
+    pub final_tau: f32,
+    /// Nodes that participated.
+    pub nodes: usize,
+}
+
+/// Where shard work executes: in this process or across the cluster.
+///
+/// The service routes searches and appends through this seam; the
+/// in-process [`LocalBackend`] and the remote [`ClusterBackend`] answer
+/// with the same `ClusterOutcome` shape and the same bit-identity
+/// contract, so every test written against one backend pins the other.
+pub trait ShardBackend: Send + Sync {
+    /// Nodes serving this backend (1 for in-process).
+    fn nodes(&self) -> usize;
+    /// Global candidate count (grows with appends).
+    fn candidates(&self) -> u64;
+    /// Samples in the global stream (reference + appends).
+    fn stream_len(&self) -> u64;
+    /// Candidate window width (fixed at attach).
+    fn window(&self) -> usize;
+    /// Candidate stride (fixed at attach).
+    fn stride(&self) -> usize;
+    /// Top-K search over the whole backend.  `query` is already
+    /// z-normalized; `band` is the raw wire knob (0 = off).
+    fn search(&self, query: &[f32], k: usize, exclusion: usize, band: usize)
+        -> Result<ClusterOutcome>;
+    /// Append pre-normalized samples to the tail of the stream; returns
+    /// the new global candidate count.
+    fn append(&self, samples: &[f32]) -> Result<u64>;
+}
+
+/// In-process [`ShardBackend`]: one node, the existing sharded executor
+/// over an append-only streaming index.  This is both the reference
+/// implementation the cluster is tested against and the fallback when
+/// `--cluster` lists no nodes.
+pub struct LocalBackend {
+    engine: Mutex<StreamingEngine>,
+    shards: usize,
+    parallelism: usize,
+}
+
+impl LocalBackend {
+    /// `reference` must already be z-normalized (the service's frozen
+    /// frame), matching what [`ClusterBackend::attach`] ships to nodes.
+    pub fn new(
+        reference: &[f32],
+        window: usize,
+        stride: usize,
+        shards: usize,
+        parallelism: usize,
+    ) -> Result<LocalBackend> {
+        Ok(LocalBackend {
+            engine: Mutex::new(StreamingEngine::new(reference, window, stride, Dist::Sq)?),
+            shards: shards.max(1),
+            parallelism: parallelism.max(1),
+        })
+    }
+}
+
+impl ShardBackend for LocalBackend {
+    fn nodes(&self) -> usize {
+        1
+    }
+
+    fn candidates(&self) -> u64 {
+        self.engine.lock().unwrap().index().candidates() as u64
+    }
+
+    fn stream_len(&self) -> u64 {
+        self.engine.lock().unwrap().index().len() as u64
+    }
+
+    fn window(&self) -> usize {
+        self.engine.lock().unwrap().index().window()
+    }
+
+    fn stride(&self) -> usize {
+        self.engine.lock().unwrap().index().stride()
+    }
+
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        band: usize,
+    ) -> Result<ClusterOutcome> {
+        let engine = self.engine.lock().unwrap();
+        let opts = CascadeOpts::default().with_band(band);
+        let out = engine.search_sharded(query, k, exclusion, opts, self.shards, self.parallelism)?;
+        Ok(ClusterOutcome {
+            hits: out.hits,
+            stats: out.stats,
+            shards: out.shards.len() as u64,
+            tau_tightenings: out.tau_tightenings,
+            tau_broadcasts: 0,
+            shards_stolen: 0,
+            final_tau: out.final_tau,
+            nodes: 1,
+        })
+    }
+
+    fn append(&self, samples: &[f32]) -> Result<u64> {
+        let mut engine = self.engine.lock().unwrap();
+        engine.append(samples);
+        Ok(engine.index().candidates() as u64)
+    }
+}
+
+/// One worker node as the coordinator sees it.
+struct NodeHandle {
+    addr: String,
+    /// Search-path connection: owned by this node's coordinator thread
+    /// for the duration of a search (`segment.put` for stolen ranges and
+    /// `search.shard` dispatches travel here, strictly request/response).
+    data: Mutex<Client>,
+    /// Control connection: τ broadcasts from *other* nodes' threads and
+    /// streaming appends — everything that must land while the data
+    /// connection is blocked inside a shard verb.
+    ctl: Mutex<Client>,
+    /// The node's home segment id (its index at attach time).
+    segment: u64,
+}
+
+/// Remote [`ShardBackend`]: ships segments at attach, then serves every
+/// search by fanning per-node shard verbs with cross-node τ gossip and
+/// chunk-granular work stealing (module docs).
+pub struct ClusterBackend {
+    nodes: Vec<NodeHandle>,
+    /// Per-node global candidate ranges; the tail range grows on append.
+    parts: Mutex<Vec<Range<u64>>>,
+    /// The coordinator's copy of the global normalized stream (startup
+    /// reference + appends) — the sample source for stolen-range
+    /// segments and future node re-attachment.
+    stream: Mutex<Vec<f32>>,
+    window: usize,
+    stride: usize,
+    /// Search ids, unique per coordinator (workers key τ cells by them).
+    next_sid: AtomicU64,
+    /// Segment ids for stolen-range shipments (home segments took
+    /// `0..nodes`).
+    next_segment: AtomicU64,
+}
+
+/// Shard chunks per node per search: enough that a fast node can steal
+/// and a τ broadcast has a shard boundary to land before, small enough
+/// that per-verb overhead stays negligible.
+const CHUNKS_PER_NODE: usize = 4;
+
+impl ClusterBackend {
+    /// Connect to `addrs`, negotiate wire v2 on every connection, and
+    /// ship each node its segment of the (already z-normalized)
+    /// `reference`.
+    pub fn attach(
+        addrs: &[String],
+        reference: &[f32],
+        window: usize,
+        stride: usize,
+    ) -> Result<ClusterBackend> {
+        anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one node");
+        anyhow::ensure!(window >= 1 && stride >= 1, "window and stride must be >= 1");
+        anyhow::ensure!(
+            reference.len() >= window,
+            "reference shorter than one window"
+        );
+        let candidates = (reference.len() - window) / stride + 1;
+        let parts: Vec<Range<u64>> = shard_ranges(candidates, addrs.len())
+            .into_iter()
+            .map(|r| r.start as u64..r.end as u64)
+            .collect();
+        anyhow::ensure!(
+            parts.len() == addrs.len(),
+            "reference has {candidates} candidates — too few for {} nodes",
+            addrs.len()
+        );
+        let mut nodes = Vec::with_capacity(addrs.len());
+        for (i, (addr, part)) in addrs.iter().zip(&parts).enumerate() {
+            let conn = |role: &str| -> Result<Client> {
+                let mut c = Client::connect(addr)
+                    .with_context(|| format!("cluster node {i} ({addr}), {role} connection"))?;
+                let proto = c.hello()?;
+                anyhow::ensure!(
+                    proto >= 2 && c.has_feature("search.shard"),
+                    "cluster node {i} ({addr}) speaks wire v{proto} without search.shard — \
+                     upgrade the node or remove it from --cluster"
+                );
+                Ok(c)
+            };
+            let mut data = conn("data")?;
+            let ctl = conn("ctl")?;
+            let (lo, hi) = (part.start as usize, part.end as usize);
+            let samples = &reference[lo * stride..(hi - 1) * stride + window];
+            let got = data.segment_put(i as u64, part.start, (lo * stride) as u64, window, stride, samples)?;
+            anyhow::ensure!(
+                got == part.end - part.start,
+                "node {i} ({addr}) indexed {got} candidates for segment {i}, expected {}",
+                part.end - part.start
+            );
+            log_info!(
+                "cluster node {i} ({addr}): segment {i} = candidates [{}, {}) ({} samples)",
+                part.start,
+                part.end,
+                samples.len()
+            );
+            nodes.push(NodeHandle { addr: addr.clone(), data: Mutex::new(data), ctl: Mutex::new(ctl), segment: i as u64 });
+        }
+        let n = nodes.len() as u64;
+        Ok(ClusterBackend {
+            nodes,
+            parts: Mutex::new(parts),
+            stream: Mutex::new(reference.to_vec()),
+            window,
+            stride,
+            next_sid: AtomicU64::new(1),
+            next_segment: AtomicU64::new(n),
+        })
+    }
+
+    /// One node's search loop: drain the own deque, then steal.
+    #[allow(clippy::too_many_arguments)]
+    fn node_loop(
+        &self,
+        i: usize,
+        sid: u64,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        cap: usize,
+        band: usize,
+        deques: &[Mutex<VecDeque<Range<u64>>>],
+        global: &RemoteTau,
+        merge: &Mutex<(Vec<Hit>, CascadeStats)>,
+        counters: &ClusterCounters,
+    ) -> Result<()> {
+        let mut data = self.nodes[i].data.lock().unwrap();
+        loop {
+            // own work first (front: keeps the node walking its segment
+            // in order), then steal from the back of a peer's deque
+            let mut job = deques[i].lock().unwrap().pop_front().map(|r| (r, self.nodes[i].segment));
+            if job.is_none() {
+                for (j, victim) in deques.iter().enumerate() {
+                    if j == i {
+                        continue;
+                    }
+                    let stolen = victim.lock().unwrap().pop_back();
+                    if let Some(range) = stolen {
+                        // Relaxed: segment ids only need uniqueness, no ordering
+                        let seg = self.next_segment.fetch_add(1, Ordering::Relaxed);
+                        let (lo, hi) = (range.start as usize, range.end as usize);
+                        let samples = {
+                            let stream = self.stream.lock().unwrap();
+                            stream[lo * self.stride..(hi - 1) * self.stride + self.window].to_vec()
+                        };
+                        let got = data.segment_put(
+                            seg,
+                            range.start,
+                            (lo * self.stride) as u64,
+                            self.window,
+                            self.stride,
+                            &samples,
+                        )?;
+                        anyhow::ensure!(
+                            got == range.end - range.start,
+                            "stolen segment {seg} indexed {got} candidates, expected {}",
+                            range.end - range.start
+                        );
+                        // Relaxed: plain event counters, read after the scope joins
+                        counters.stolen.fetch_add(1, Ordering::Relaxed);
+                        log_debug!(
+                            "node {i} stole candidates [{}, {}) from node {j}",
+                            range.start,
+                            range.end
+                        );
+                        job = Some((range, seg));
+                        break;
+                    }
+                }
+            }
+            let Some((range, segment)) = job else { return Ok(()) };
+            let f = data.search_shard(
+                sid,
+                segment,
+                query,
+                k,
+                exclusion,
+                cap,
+                range.start,
+                range.end,
+                global.get(),
+                band,
+            )?;
+            {
+                let mut m = merge.lock().unwrap();
+                m.1.merge(&f.stats());
+                m.0.extend(f.hits.iter().copied());
+            }
+            // Relaxed: plain event counters, read after the scope joins
+            counters.shards.fetch_add(1, Ordering::Relaxed);
+            counters.tightenings.fetch_add(f.tightenings, Ordering::Relaxed);
+            // relay the worker's τ: if it strictly tightened the global
+            // cell, every *other* node hears about it now, mid-search
+            if global.tighten(f.tau) {
+                let t = global.get();
+                for (j, peer) in self.nodes.iter().enumerate() {
+                    if j == i {
+                        continue;
+                    }
+                    let mut ctl = peer.ctl.lock().unwrap();
+                    ctl.tau(sid, t).with_context(|| {
+                        format!("broadcasting tau to node {j} ({})", peer.addr)
+                    })?;
+                    // Relaxed: plain event counter, read after the scope joins
+                    counters.broadcasts.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Search-scoped atomic counters shared by the node threads.
+#[derive(Default)]
+struct ClusterCounters {
+    shards: AtomicU64,
+    tightenings: AtomicU64,
+    broadcasts: AtomicU64,
+    stolen: AtomicU64,
+}
+
+impl ShardBackend for ClusterBackend {
+    fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn candidates(&self) -> u64 {
+        self.parts.lock().unwrap().iter().map(|p| p.end - p.start).sum()
+    }
+
+    fn stream_len(&self) -> u64 {
+        self.stream.lock().unwrap().len() as u64
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn stride(&self) -> usize {
+        self.stride
+    }
+
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        band: usize,
+    ) -> Result<ClusterOutcome> {
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        // snapshot the partition: an append racing this search grows the
+        // tail range *after* the snapshot and is simply not part of this
+        // search's candidate set (same contract as a serial search that
+        // started before the append)
+        let parts: Vec<Range<u64>> = self.parts.lock().unwrap().clone();
+        let total: u64 = parts.iter().map(|p| p.end - p.start).sum();
+        if k == 0 {
+            // nothing runs, nothing crosses the network; account the
+            // whole candidate space as skipped (partition invariant)
+            return Ok(ClusterOutcome {
+                hits: Vec::new(),
+                stats: CascadeStats {
+                    candidates: total,
+                    skipped: total,
+                    ..Default::default()
+                },
+                shards: 0,
+                tau_tightenings: 0,
+                tau_broadcasts: 0,
+                shards_stolen: 0,
+                final_tau: f32::INFINITY,
+                nodes: self.nodes.len(),
+            });
+        }
+        // the GLOBAL cap: clamped to the global candidate count, never a
+        // node range — per-node heaps with this cap are admissible over
+        // any candidate subset (module docs)
+        let cap = prune_heap_cap(k, exclusion, self.stride).min(total.max(1) as usize);
+        // Relaxed: sid only needs uniqueness, no ordering
+        let sid = self.next_sid.fetch_add(1, Ordering::Relaxed);
+        let deques: Vec<Mutex<VecDeque<Range<u64>>>> = parts
+            .iter()
+            .map(|p| {
+                let chunks = shard_ranges((p.end - p.start) as usize, CHUNKS_PER_NODE)
+                    .into_iter()
+                    .map(|c| p.start + c.start as u64..p.start + c.end as u64)
+                    .collect::<VecDeque<_>>();
+                Mutex::new(chunks)
+            })
+            .collect();
+        let global = RemoteTau::new();
+        let merge = Mutex::new((Vec::<Hit>::new(), CascadeStats::default()));
+        let counters = ClusterCounters::default();
+        let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for i in 0..self.nodes.len() {
+                let deques = &deques;
+                let global = &global;
+                let merge = &merge;
+                let counters = &counters;
+                let errors = &errors;
+                scope.spawn(move || {
+                    if let Err(e) = self.node_loop(
+                        i, sid, query, k, exclusion, cap, band, deques, global, merge, counters,
+                    ) {
+                        errors.lock().unwrap().push(e.context(format!(
+                            "cluster node {i} ({})",
+                            self.nodes[i].addr
+                        )));
+                    }
+                });
+            }
+        });
+        let errors = errors.into_inner().unwrap();
+        if let Some(e) = errors.into_iter().next() {
+            // a failed node means its undispatched ranges may be lost;
+            // surviving nodes steal what they can, but the search cannot
+            // claim the exactness contract — fail it
+            return Err(e);
+        }
+        let (all_hits, stats) = merge.into_inner().unwrap();
+        anyhow::ensure!(
+            stats.candidates == total,
+            "cluster shards covered {} of {total} candidates",
+            stats.candidates
+        );
+        Ok(ClusterOutcome {
+            hits: select_topk(&all_hits, k, exclusion),
+            stats,
+            shards: counters.shards.into_inner(),
+            tau_tightenings: counters.tightenings.into_inner(),
+            tau_broadcasts: counters.broadcasts.into_inner(),
+            shards_stolen: counters.stolen.into_inner(),
+            final_tau: global.get(),
+            nodes: self.nodes.len(),
+        })
+    }
+
+    fn append(&self, samples: &[f32]) -> Result<u64> {
+        anyhow::ensure!(!samples.is_empty(), "empty append");
+        // serialize appends under the partition lock so two appends
+        // cannot interleave their tail-growth bookkeeping
+        let mut parts = self.parts.lock().unwrap();
+        let tail = self.nodes.len() - 1;
+        let new_local = {
+            let mut ctl = self.nodes[tail].ctl.lock().unwrap();
+            ctl.segment_append(self.nodes[tail].segment, samples)?
+        };
+        let base = parts[tail].start;
+        anyhow::ensure!(
+            base + new_local >= parts[tail].end,
+            "tail node shrank: segment reports {new_local} candidates below base {base}"
+        );
+        parts[tail].end = base + new_local;
+        self.stream.lock().unwrap().extend_from_slice(samples);
+        Ok(parts.iter().map(|p| p.end - p.start).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn remote_tau_is_monotone_and_reports_strict_tightening() {
+        let cell = RemoteTau::new();
+        assert_eq!(cell.get(), f32::INFINITY);
+        assert!(cell.tighten(5.0));
+        assert!(!cell.tighten(5.0), "equal is not strictly tighter");
+        assert!(!cell.tighten(7.0), "looser never lands");
+        assert_eq!(cell.get(), 5.0);
+        assert!(cell.tighten(1.25));
+        assert_eq!(cell.get(), 1.25);
+    }
+
+    #[test]
+    fn remote_tau_concurrent_tightenings_keep_the_min() {
+        let cell = RemoteTau::new();
+        let vals: Vec<Vec<f32>> = (0..4u64)
+            .map(|t| {
+                let mut g = Xoshiro256::new(7 + t);
+                (0..500).map(|_| g.normal_vec_f32(1)[0].abs()).collect()
+            })
+            .collect();
+        let min = vals
+            .iter()
+            .flatten()
+            .fold(f32::INFINITY, |a, &b| a.min(b));
+        std::thread::scope(|scope| {
+            for v in &vals {
+                let cell = &cell;
+                scope.spawn(move || {
+                    for &x in v {
+                        cell.tighten(x);
+                    }
+                });
+            }
+        });
+        assert_eq!(cell.get().to_bits(), min.to_bits());
+    }
+
+    #[test]
+    fn cluster_sink_takes_the_min_of_local_and_remote() {
+        let local = SharedThreshold::new(1);
+        let remote = RemoteTau::new();
+        let mut sink = ClusterShardSink { local: &local, remote: &remote };
+        assert_eq!(sink.tau(), f32::INFINITY);
+        remote.tighten(4.0);
+        assert_eq!(sink.tau(), 4.0, "remote tightening visible mid-shard");
+        sink.record(2.0); // cap-1 heap publishes immediately
+        assert_eq!(sink.tau(), 2.0);
+        remote.tighten(1.0);
+        assert_eq!(sink.tau(), 1.0);
+    }
+
+    /// `run_shard` over the whole range with the global cap must match
+    /// the serial engine — the degenerate one-node, one-shard cluster.
+    #[test]
+    fn run_shard_whole_range_matches_serial() {
+        let mut g = Xoshiro256::new(41);
+        let reference = g.normal_vec_f32(400);
+        let q = g.normal_vec_f32(16);
+        let engine = StreamingEngine::new(&reference, 24, 1, Dist::Sq).unwrap();
+        let ix = engine.index();
+        let (k, exclusion) = (3, 12);
+        let serial = cascade::search_range(
+            ix,
+            &q,
+            Dist::Sq,
+            k,
+            exclusion,
+            CascadeOpts::default(),
+            0..ix.candidates(),
+        );
+        let serial_top = select_topk(&serial.0, k, exclusion);
+        let cap = prune_heap_cap(k, exclusion, ix.stride()).min(ix.candidates());
+        let remote = RemoteTau::new();
+        let run = run_shard(
+            ix,
+            &q,
+            Dist::Sq,
+            k,
+            cap,
+            CascadeOpts::default(),
+            0..ix.candidates(),
+            f32::INFINITY,
+            &remote,
+        );
+        let top = select_topk(&run.hits, k, exclusion);
+        assert_eq!(top.len(), serial_top.len());
+        for (a, b) in top.iter().zip(&serial_top) {
+            assert_eq!((a.start, a.end, a.cost.to_bits()), (b.start, b.end, b.cost.to_bits()));
+        }
+        assert_eq!(run.stats.candidates, ix.candidates() as u64);
+        assert_eq!(
+            run.stats.pruned_total() + run.stats.dp_full,
+            run.stats.candidates
+        );
+    }
+
+    /// Segment-local shard runs merged with the global cap reproduce the
+    /// serial picks bit-for-bit — the in-process model of the two-node
+    /// cluster, including a stale seeded τ.
+    #[test]
+    fn segmented_runs_with_global_cap_merge_to_serial_topk() {
+        let mut g = Xoshiro256::new(42);
+        let reference = g.normal_vec_f32(600);
+        let q = g.normal_vec_f32(16);
+        let (window, stride) = (24usize, 1usize);
+        let full = StreamingEngine::new(&reference, window, stride, Dist::Sq).unwrap();
+        let total = full.index().candidates();
+        let (k, exclusion) = (4, 12);
+        let serial = {
+            let (hits, _) = cascade::search_range(
+                full.index(),
+                &q,
+                Dist::Sq,
+                k,
+                exclusion,
+                CascadeOpts::default(),
+                0..total,
+            );
+            select_topk(&hits, k, exclusion)
+        };
+        let cap = prune_heap_cap(k, exclusion, stride).min(total);
+        for band in [0usize, 6] {
+            let mut all = Vec::new();
+            let mut merged = CascadeStats::default();
+            let mut seed = f32::INFINITY;
+            for part in shard_ranges(total, 2) {
+                let (lo, hi) = (part.start, part.end);
+                let samples = &reference[lo * stride..(hi - 1) * stride + window];
+                let seg = StreamingEngine::new(samples, window, stride, Dist::Sq).unwrap();
+                assert_eq!(seg.index().candidates(), hi - lo, "segment math");
+                let remote = RemoteTau::new();
+                let run = run_shard(
+                    seg.index(),
+                    &q,
+                    Dist::Sq,
+                    k,
+                    cap,
+                    CascadeOpts::default().with_band(band),
+                    0..hi - lo,
+                    seed, // node 2 starts from node 1's reported τ
+                    &remote,
+                );
+                merged.merge(&run.stats);
+                seed = seed.min(run.tau);
+                all.extend(run.hits.iter().map(|h| Hit {
+                    start: h.start + lo * stride,
+                    end: h.end + lo * stride,
+                    cost: h.cost,
+                }));
+            }
+            let serial_ref = if band == 0 {
+                serial.clone()
+            } else {
+                let (hits, _) = cascade::search_range(
+                    full.index(),
+                    &q,
+                    Dist::Sq,
+                    k,
+                    exclusion,
+                    CascadeOpts::default().with_band(band),
+                    0..total,
+                );
+                select_topk(&hits, k, exclusion)
+            };
+            let top = select_topk(&all, k, exclusion);
+            assert_eq!(top.len(), serial_ref.len(), "band={band}");
+            for (a, b) in top.iter().zip(&serial_ref) {
+                assert_eq!(
+                    (a.start, a.end, a.cost.to_bits()),
+                    (b.start, b.end, b.cost.to_bits()),
+                    "band={band}"
+                );
+            }
+            assert_eq!(merged.candidates, total as u64, "band={band}: partition-exact");
+            assert_eq!(merged.pruned_total() + merged.dp_full, merged.candidates);
+        }
+    }
+
+    #[test]
+    fn local_backend_matches_serial_and_appends() {
+        let mut g = Xoshiro256::new(43);
+        let reference = g.normal_vec_f32(500);
+        let q = g.normal_vec_f32(16);
+        let (window, stride, k, exclusion) = (20usize, 1usize, 3usize, 10usize);
+        let backend = LocalBackend::new(&reference, window, stride, 4, 2).unwrap();
+        let serial = StreamingEngine::new(&reference, window, stride, Dist::Sq).unwrap();
+        let serial_hits = {
+            let (hits, _) = cascade::search_range(
+                serial.index(),
+                &q,
+                Dist::Sq,
+                k,
+                exclusion,
+                CascadeOpts::default(),
+                0..serial.index().candidates(),
+            );
+            select_topk(&hits, k, exclusion)
+        };
+        let out = backend.search(&q, k, exclusion, 0).unwrap();
+        assert_eq!(out.nodes, 1);
+        assert_eq!(out.tau_broadcasts, 0);
+        assert_eq!(out.shards_stolen, 0);
+        assert_eq!(out.hits.len(), serial_hits.len());
+        for (a, b) in out.hits.iter().zip(&serial_hits) {
+            assert_eq!((a.start, a.end, a.cost.to_bits()), (b.start, b.end, b.cost.to_bits()));
+        }
+        // appends grow the candidate space exactly like the streaming engine
+        let extra = g.normal_vec_f32(60);
+        let after = backend.append(&extra).unwrap();
+        let mut rebuilt = reference.clone();
+        rebuilt.extend_from_slice(&extra);
+        let full = StreamingEngine::new(&rebuilt, window, stride, Dist::Sq).unwrap();
+        assert_eq!(after, full.index().candidates() as u64);
+        assert_eq!(backend.stream_len(), rebuilt.len() as u64);
+    }
+
+    #[test]
+    fn k_zero_outcome_accounts_everything_as_skipped() {
+        let mut g = Xoshiro256::new(44);
+        let reference = g.normal_vec_f32(200);
+        let backend = LocalBackend::new(&reference, 16, 1, 2, 2).unwrap();
+        let out = backend.search(&g.normal_vec_f32(8), 0, 4, 0).unwrap();
+        assert!(out.hits.is_empty());
+        assert_eq!(out.stats.candidates, backend.candidates());
+        assert_eq!(out.stats.pruned_total() + out.stats.dp_full, out.stats.candidates);
+    }
+}

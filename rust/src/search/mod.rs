@@ -43,6 +43,7 @@
 //! startup frame — see the [`streaming`] module docs).
 
 pub mod cascade;
+pub mod cluster;
 pub mod envelope;
 pub mod index;
 pub mod lb_kernel;
@@ -57,6 +58,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 pub use cascade::{effective_band, sdtw_window_abandoning, CascadeOpts, CascadeStats};
+pub use cluster::{
+    ClusterBackend, ClusterOutcome, LocalBackend, RemoteTau, ShardBackend, ShardRun,
+};
 pub use index::{CandidateIndex, ReferenceIndex};
 pub use lb_kernel::{
     BlockLbKernel, LbKernel, LbKernelKind, LbKernelSpec, LbVerdict, ScalarLbKernel,

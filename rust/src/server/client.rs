@@ -19,7 +19,8 @@ use std::net::TcpStream;
 use anyhow::{bail, Context, Result};
 
 use super::proto::{
-    AppendFields, MetricsFields, Request, RequestId, Response, SearchFields, TraceSpanFields,
+    AppendFields, MetricsFields, Request, RequestId, Response, SearchFields, ShardFields,
+    TraceSpanFields, PROTO_VERSION,
 };
 use crate::coordinator::{AlignOptions, AppendOptions, SearchOptions};
 
@@ -27,16 +28,64 @@ use crate::coordinator::{AlignOptions, AppendOptions, SearchOptions};
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Wire version negotiated by [`Client::hello`]; 1 until then, so a
+    /// client that never says hello speaks byte-identical legacy v1.
+    proto: u64,
+    /// Feature strings the peer advertised (empty for v1 peers).
+    features: Vec<String>,
 }
 
 impl Client {
+    /// Connect without negotiating: the connection speaks v1 until
+    /// [`Client::hello`] upgrades it.  Existing byte-identity tests
+    /// depend on `connect` writing nothing.
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true).ok();
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            proto: 1,
+            features: Vec::new(),
         })
+    }
+
+    /// Connect and negotiate the wire version in one step — the normal
+    /// entry point for v2-aware callers (CLI, cluster coordinator).
+    pub fn connect_negotiated(addr: &str) -> Result<Client> {
+        let mut c = Client::connect(addr)?;
+        c.hello()?;
+        Ok(c)
+    }
+
+    /// Negotiate the wire version.  A v2+ peer answers with its proto
+    /// and feature list; a v1 peer rejects the unknown op with a
+    /// protocol error, which we treat as a successful negotiation *down*
+    /// to v1 — the connection keeps working with legacy encodings.
+    pub fn hello(&mut self) -> Result<u64> {
+        match self.roundtrip(&Request::Hello)? {
+            Response::Hello { proto, features } => {
+                // Speak the highest version both sides understand.
+                self.proto = proto.min(PROTO_VERSION);
+                self.features = features;
+            }
+            Response::Error { .. } => {
+                self.proto = 1;
+                self.features = Vec::new();
+            }
+            other => bail!("unexpected reply to hello: {other:?}"),
+        }
+        Ok(self.proto)
+    }
+
+    /// The wire version this connection speaks (1 before [`Client::hello`]).
+    pub fn proto(&self) -> u64 {
+        self.proto
+    }
+
+    /// Whether the peer advertised a feature string (always false on v1).
+    pub fn has_feature(&self, name: &str) -> bool {
+        self.features.iter().any(|f| f == name)
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
@@ -76,7 +125,7 @@ impl Client {
     pub fn info(&mut self) -> Result<(usize, usize, usize)> {
         match self.roundtrip(&Request::Info)? {
             Response::Info { qlen, reflen, batch } => Ok((qlen, reflen, batch)),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to info: {other:?}"),
         }
     }
@@ -84,7 +133,7 @@ impl Client {
     pub fn metrics(&mut self) -> Result<MetricsFields> {
         match self.roundtrip(&Request::Metrics { prometheus: false })? {
             Response::Metrics(m) => Ok(*m),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to metrics: {other:?}"),
         }
     }
@@ -93,7 +142,7 @@ impl Client {
     pub fn metrics_prometheus(&mut self) -> Result<String> {
         match self.roundtrip(&Request::Metrics { prometheus: true })? {
             Response::Prometheus(text) => Ok(text),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to metrics: {other:?}"),
         }
     }
@@ -104,7 +153,7 @@ impl Client {
     pub fn trace(&mut self, limit: usize) -> Result<Vec<TraceSpanFields>> {
         match self.roundtrip(&Request::Trace { limit })? {
             Response::Trace(spans) => Ok(spans),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to trace: {other:?}"),
         }
     }
@@ -118,7 +167,7 @@ impl Client {
         let req = Request::Align { query: query.to_vec(), options };
         match self.roundtrip(&req)? {
             Response::Align { cost, end, latency_ms, .. } => Ok((cost, end, latency_ms)),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to align: {other:?}"),
         }
     }
@@ -135,7 +184,7 @@ impl Client {
         let req = Request::Search { query: query.to_vec(), options };
         match self.roundtrip(&req)? {
             Response::Search(s) => Ok(*s),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to search: {other:?}"),
         }
     }
@@ -150,8 +199,97 @@ impl Client {
         let req = Request::Append { samples: samples.to_vec(), options };
         match self.roundtrip(&req)? {
             Response::Append(a) => Ok(a),
-            Response::Error(e) => bail!("server error: {e}"),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
             other => bail!("unexpected reply to append: {other:?}"),
+        }
+    }
+
+    // --- cluster verbs (wire v2; the coordinator side of the cluster
+    // backend — see `search::cluster`) ---
+
+    /// Ship an index segment: pre-normalized `samples` indexed with
+    /// `window`/`stride`, owning global candidates starting at `base`
+    /// (global sample offset `start`).  Returns the candidate count the
+    /// node indexed.
+    pub fn segment_put(
+        &mut self,
+        segment: u64,
+        base: u64,
+        start: u64,
+        window: usize,
+        stride: usize,
+        samples: &[f32],
+    ) -> Result<u64> {
+        let req = Request::SegmentPut {
+            segment,
+            base,
+            start,
+            window,
+            stride,
+            samples: samples.to_vec(),
+        };
+        match self.roundtrip(&req)? {
+            Response::SegmentPut { candidates, .. } => Ok(candidates),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
+            other => bail!("unexpected reply to segment.put: {other:?}"),
+        }
+    }
+
+    /// Grow a previously shipped segment at its tail; returns the
+    /// segment's new candidate count.
+    pub fn segment_append(&mut self, segment: u64, samples: &[f32]) -> Result<u64> {
+        let req = Request::SegmentAppend { segment, samples: samples.to_vec() };
+        match self.roundtrip(&req)? {
+            Response::SegmentPut { candidates, .. } => Ok(candidates),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
+            other => bail!("unexpected reply to segment.append: {other:?}"),
+        }
+    }
+
+    /// Run one shard of search `sid` on the node: global candidates
+    /// `[lo, hi)` of `segment`, seeded with the coordinator's current τ.
+    /// `cap` must be the coordinator-computed GLOBAL heap cap.  The
+    /// reply's hits are already in global sample coordinates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_shard(
+        &mut self,
+        sid: u64,
+        segment: u64,
+        query: &[f32],
+        k: usize,
+        exclusion: usize,
+        cap: usize,
+        lo: u64,
+        hi: u64,
+        tau: f32,
+        band: usize,
+    ) -> Result<ShardFields> {
+        let req = Request::SearchShard {
+            sid,
+            segment,
+            query: query.to_vec(),
+            k,
+            exclusion,
+            cap,
+            lo,
+            hi,
+            tau,
+            band,
+        };
+        match self.roundtrip(&req)? {
+            Response::Shard(f) => Ok(*f),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
+            other => bail!("unexpected reply to search.shard: {other:?}"),
+        }
+    }
+
+    /// Push a τ-tightening for search `sid` to the node; returns the
+    /// node's τ cell value after the merge.
+    pub fn tau(&mut self, sid: u64, tau: f32) -> Result<f32> {
+        match self.roundtrip(&Request::Tau { sid, tau })? {
+            Response::TauAck { tau, .. } => Ok(tau),
+            Response::Error { code, message } => bail!("server error [{}]: {message}", code.as_str()),
+            other => bail!("unexpected reply to tau: {other:?}"),
         }
     }
 }

@@ -30,6 +30,8 @@ pub mod server;
 
 pub use client::Client;
 pub use frame::{FrameDecoder, FrameEvent, DEFAULT_MAX_FRAME};
-pub use proto::{Request, RequestId, Response};
+pub use proto::{
+    ErrorCode, Request, RequestId, Response, ShardFields, PROTO_FEATURES, PROTO_VERSION,
+};
 pub use reactor::{Reactor, ReactorOptions};
 pub use server::Server;

@@ -11,7 +11,28 @@
 //!   {"op":"info"} | {"op":"metrics"} | {"op":"ping"}
 //!   {"op":"metrics","format":"prometheus"}   (text exposition payload)
 //!   {"op":"trace","limit":100}               (recent spans, oldest first)
+//!   {"op":"hello"}                           (v2 capability handshake)
+//!   {"op":"segment.put","segment":s,"base":c,"start":p,
+//!    "window":w,"stride":d,"samples":[...]}  (install an index segment)
+//!   {"op":"segment.append","segment":s,"samples":[...]}
+//!   {"op":"search.shard","sid":i,"segment":s,"query":[...],"k":1,
+//!    "exclusion":e,"cap":c,"lo":a,"hi":b,"tau":t,"band":r}
+//!   {"op":"tau","sid":i,"tau":t}             (cross-node τ broadcast)
 //! Responses: {"ok":true, ...fields} | {"ok":false,"error":"..."}
+//!
+//! # Wire v2 (`docs/PROTOCOL.md` is the full spec)
+//!
+//! The protocol is versioned by capability, not by framing: every frame
+//! is still one JSON object per line.  A client that sends
+//! `{"op":"hello"}` receives `{"ok":true,"proto":2,"features":[...]}`
+//! and may then rely on v2 behavior on that connection — today that
+//! means typed error codes (`"code"` appears alongside the legacy
+//! `"error"` message) and the cluster verbs above.  A connection that
+//! never says hello gets byte-identical v1 encodings for everything it
+//! can express, which is what keeps old clients working unchanged
+//! (pinned by the byte-identity suites).  Unknown request keys are
+//! rejected as `bad_request` on every op, so misspelled knobs fail loud
+//! instead of silently running with defaults.
 //!
 //! Forward compatibility: an `ok:true` response whose shape this build
 //! does not recognize parses as [`Response::Unknown`] (raw line
@@ -123,6 +144,76 @@ fn splice_id(encoded: String, id: Option<&RequestId>) -> String {
     }
 }
 
+/// The wire protocol version this build speaks (`{"op":"hello"}`).
+pub const PROTO_VERSION: u64 = 2;
+
+/// The capability list a hello response advertises: every verb this
+/// build dispatches plus the non-verb capabilities (`ids` = request-id
+/// echo, `errors.coded` = typed `"code"` on error responses).
+pub const PROTO_FEATURES: &[&str] = &[
+    "align",
+    "append",
+    "errors.coded",
+    "hello",
+    "ids",
+    "info",
+    "metrics",
+    "ping",
+    "search",
+    "search.shard",
+    "segment.append",
+    "segment.put",
+    "tau",
+    "trace",
+];
+
+/// Typed wire error category (`"code"` on v2 error responses).
+///
+/// The legacy `"error"` message always travels too, so v1 peers keep
+/// parsing errors unchanged; the code is what lets programs branch
+/// without string-matching messages.  An error parsed off the wire
+/// without a `"code"` member (a v1 peer) decodes as
+/// [`ErrorCode::Internal`], the catch-all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed JSON, unknown/invalid request keys, bad field types.
+    BadRequest,
+    /// A request line exceeded the serving edge's max-frame cap.
+    FrameTooLarge,
+    /// Well-formed request naming an op this server does not dispatch.
+    UnsupportedVerb,
+    /// Cluster verb referencing a segment/range/shape that does not
+    /// match what the node holds.
+    ShapeMismatch,
+    /// Verb accepted but execution failed (also the v1 catch-all).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::FrameTooLarge => "frame_too_large",
+            ErrorCode::UnsupportedVerb => "unsupported_verb",
+            ErrorCode::ShapeMismatch => "shape_mismatch",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`]; unknown codes (a newer server)
+    /// decode as `None` and callers fall back to [`ErrorCode::Internal`].
+    pub fn from_name(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "frame_too_large" => ErrorCode::FrameTooLarge,
+            "unsupported_verb" => ErrorCode::UnsupportedVerb,
+            "shape_mismatch" => ErrorCode::ShapeMismatch,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
 /// Parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -137,6 +228,47 @@ pub enum Request {
     /// `limit: 0` means "everything currently buffered".
     Trace { limit: usize },
     Ping,
+    /// Wire v2 capability handshake: upgrades the connection to v2
+    /// encodings and advertises the verb/capability list.
+    Hello,
+    /// Install (or replace) an index segment on a worker node.
+    /// `base` is the segment's first *global* candidate id, `start` its
+    /// first global sample position (`base * stride`); `samples` are
+    /// pre-normalized by the coordinator so DP costs stay bit-identical
+    /// to the single-process engine.
+    SegmentPut {
+        segment: u64,
+        base: u64,
+        start: u64,
+        window: usize,
+        stride: usize,
+        samples: Vec<f32>,
+    },
+    /// Grow a previously installed segment (streaming appends routed to
+    /// the segment's owner; samples pre-normalized like `segment.put`).
+    SegmentAppend { segment: u64, samples: Vec<f32> },
+    /// Cascade one shard range `lo..hi` (global candidate ids) of a
+    /// previously installed segment.  `tau` seeds the node's prune
+    /// threshold (+inf = no seed; any value another node published is
+    /// admissible — stale τ is only ever looser), `cap` is the
+    /// coordinator-computed bounded-heap cap (the single global
+    /// `prune_heap_cap` value, so per-node heaps stay admissible for
+    /// the *whole* search, not just their slice).
+    SearchShard {
+        sid: u64,
+        segment: u64,
+        query: Vec<f32>,
+        k: usize,
+        exclusion: usize,
+        cap: usize,
+        lo: u64,
+        hi: u64,
+        tau: f32,
+        band: usize,
+    },
+    /// Cross-node τ broadcast: another node's search `sid` tightened
+    /// its threshold to `tau`.
+    Tau { sid: u64, tau: f32 },
 }
 
 fn parse_floats(v: &Json, key: &str, op: &str) -> Result<Vec<f32>> {
@@ -172,6 +304,33 @@ fn parse_usize(v: &Json, key: &str, default: usize) -> Result<usize> {
     }
 }
 
+/// A required non-negative integer field (the cluster verbs' ids and
+/// candidate coordinates).
+fn parse_u64_required(v: &Json, key: &str, op: &str) -> Result<u64> {
+    let i = v
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("{op} needs {key}"))?
+        .as_i64()
+        .ok_or_else(|| anyhow::anyhow!("{key} must be an integer"))?;
+    anyhow::ensure!(i >= 0, "{key} must be non-negative");
+    Ok(i as u64)
+}
+
+/// Reject request members outside the op's allowlist (`"op"` and the
+/// pipelining `"id"` are always legal).  Every op calls this first, so
+/// a misspelled knob fails as `bad_request` instead of silently running
+/// with defaults — the contract `docs/PROTOCOL.md` documents.
+fn check_keys(v: &Json, op: &str, allowed: &[&str]) -> Result<()> {
+    if let Some(map) = v.as_obj() {
+        for k in map.keys() {
+            if k != "op" && k != "id" && !allowed.contains(&k.as_str()) {
+                bail!("unknown key {k:?} for op {op:?}");
+            }
+        }
+    }
+    Ok(())
+}
+
 impl Request {
     pub fn parse(line: &str) -> Result<Request> {
         let v = Json::parse(line.trim())?;
@@ -198,9 +357,74 @@ impl Request {
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("missing op"))?;
         match op {
-            "ping" => Ok(Request::Ping),
-            "info" => Ok(Request::Info),
+            "ping" => {
+                check_keys(v, op, &[])?;
+                Ok(Request::Ping)
+            }
+            "info" => {
+                check_keys(v, op, &[])?;
+                Ok(Request::Info)
+            }
+            "hello" => {
+                check_keys(v, op, &[])?;
+                Ok(Request::Hello)
+            }
+            "segment.put" => {
+                check_keys(v, op, &["segment", "base", "start", "window", "stride", "samples"])?;
+                let window = parse_usize(v, "window", 0)?;
+                let stride = parse_usize(v, "stride", 1)?;
+                anyhow::ensure!(window >= 1, "segment.put needs window >= 1");
+                anyhow::ensure!(stride >= 1, "segment.put needs stride >= 1");
+                Ok(Request::SegmentPut {
+                    segment: parse_u64_required(v, "segment", op)?,
+                    base: parse_u64_required(v, "base", op)?,
+                    start: parse_u64_required(v, "start", op)?,
+                    window,
+                    stride,
+                    samples: parse_floats(v, "samples", op)?,
+                })
+            }
+            "segment.append" => {
+                check_keys(v, op, &["segment", "samples"])?;
+                Ok(Request::SegmentAppend {
+                    segment: parse_u64_required(v, "segment", op)?,
+                    samples: parse_floats(v, "samples", op)?,
+                })
+            }
+            "search.shard" => {
+                check_keys(
+                    v,
+                    op,
+                    &["sid", "segment", "query", "k", "exclusion", "cap", "lo", "hi", "tau", "band"],
+                )?;
+                let tau = match v.get("tau") {
+                    None => f32::INFINITY,
+                    Some(x) => parse_wire_f32(x)
+                        .ok_or_else(|| anyhow::anyhow!("tau must be a wire float"))?,
+                };
+                Ok(Request::SearchShard {
+                    sid: parse_u64_required(v, "sid", op)?,
+                    segment: parse_u64_required(v, "segment", op)?,
+                    query: parse_query(v, op)?,
+                    k: parse_usize(v, "k", 1)?,
+                    exclusion: parse_usize(v, "exclusion", 0)?,
+                    cap: parse_usize(v, "cap", 0)?,
+                    lo: parse_u64_required(v, "lo", op)?,
+                    hi: parse_u64_required(v, "hi", op)?,
+                    tau,
+                    band: parse_usize(v, "band", 0)?,
+                })
+            }
+            "tau" => {
+                check_keys(v, op, &["sid", "tau"])?;
+                let tau = parse_wire_f32(
+                    v.get("tau").ok_or_else(|| anyhow::anyhow!("tau op needs tau"))?,
+                )
+                .ok_or_else(|| anyhow::anyhow!("tau must be a wire float"))?;
+                Ok(Request::Tau { sid: parse_u64_required(v, "sid", op)?, tau })
+            }
             "metrics" => {
+                check_keys(v, op, &["format"])?;
                 let prometheus = match v.get("format").map(|x| x.as_str()) {
                     None => false,
                     Some(Some("prometheus")) => true,
@@ -209,8 +433,12 @@ impl Request {
                 };
                 Ok(Request::Metrics { prometheus })
             }
-            "trace" => Ok(Request::Trace { limit: parse_usize(v, "limit", 0)? }),
+            "trace" => {
+                check_keys(v, op, &["limit"])?;
+                Ok(Request::Trace { limit: parse_usize(v, "limit", 0)? })
+            }
             "align" => {
+                check_keys(v, op, &["query", "pruned", "quantized", "half"])?;
                 let query = parse_query(v, "align")?;
                 let flag = |k: &str| v.get(k).and_then(Json::as_bool).unwrap_or(false);
                 Ok(Request::Align {
@@ -223,6 +451,14 @@ impl Request {
                 })
             }
             "search" => {
+                check_keys(
+                    v,
+                    op,
+                    &[
+                        "query", "k", "window", "stride", "exclusion", "shards", "parallelism",
+                        "kernel", "lanes", "lb_kernel", "lb_block", "band", "stream", "explain",
+                    ],
+                )?;
                 let query = parse_query(v, "search")?;
                 let d = SearchOptions::default();
                 let kernel = match v.get("kernel").map(|x| x.as_str()) {
@@ -259,6 +495,7 @@ impl Request {
                 })
             }
             "append" => {
+                check_keys(v, op, &["samples", "window", "stride"])?;
                 let samples = parse_floats(v, "samples", "append")?;
                 Ok(Request::Append {
                     samples,
@@ -282,6 +519,62 @@ impl Request {
         match self {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Info => r#"{"op":"info"}"#.to_string(),
+            Request::Hello => r#"{"op":"hello"}"#.to_string(),
+            Request::SegmentPut { segment, base, start, window, stride, samples } => {
+                Json::obj(vec![
+                    ("op", Json::str("segment.put")),
+                    ("segment", Json::Int(*segment as i64)),
+                    ("base", Json::Int(*base as i64)),
+                    ("start", Json::Int(*start as i64)),
+                    ("window", Json::Int(*window as i64)),
+                    ("stride", Json::Int(*stride as i64)),
+                    ("samples", Json::f32s(samples)),
+                ])
+                .to_string()
+            }
+            Request::SegmentAppend { segment, samples } => Json::obj(vec![
+                ("op", Json::str("segment.append")),
+                ("segment", Json::Int(*segment as i64)),
+                ("samples", Json::f32s(samples)),
+            ])
+            .to_string(),
+            Request::SearchShard {
+                sid,
+                segment,
+                query,
+                k,
+                exclusion,
+                cap,
+                lo,
+                hi,
+                tau,
+                band,
+            } => {
+                let mut pairs = vec![
+                    ("op", Json::str("search.shard")),
+                    ("sid", Json::Int(*sid as i64)),
+                    ("segment", Json::Int(*segment as i64)),
+                    ("query", Json::f32s(query)),
+                    ("k", Json::Int(*k as i64)),
+                    ("exclusion", Json::Int(*exclusion as i64)),
+                    ("cap", Json::Int(*cap as i64)),
+                    ("lo", Json::Int(*lo as i64)),
+                    ("hi", Json::Int(*hi as i64)),
+                ];
+                if !(tau.is_infinite() && tau.is_sign_positive()) {
+                    pairs.push(("tau", wire_f32(*tau)));
+                }
+                if *band != 0 {
+                    pairs.push(("band", Json::Int(*band as i64)));
+                }
+                Json::obj(pairs).to_string()
+            }
+            Request::Tau { sid, tau } => Json::obj(vec![
+                ("op", Json::str("tau")),
+                ("sid", Json::Int(*sid as i64)),
+                ("tau", wire_f32(*tau)),
+            ])
+            .to_string(),
             Request::Metrics { prometheus: false } => r#"{"op":"metrics"}"#.to_string(),
             Request::Metrics { prometheus: true } => {
                 r#"{"op":"metrics","format":"prometheus"}"#.to_string()
@@ -391,10 +684,108 @@ pub enum Response {
     /// Prometheus text exposition payload
     /// (`{"op":"metrics","format":"prometheus"}`).
     Prometheus(String),
-    Error(String),
+    /// Wire v2 capability handshake answer (`{"op":"hello"}`).
+    Hello { proto: u64, features: Vec<String> },
+    /// Segment installed/grown on a worker node: its id and how many
+    /// candidate windows it now indexes.
+    SegmentPut { segment: u64, candidates: u64 },
+    /// One shard range cascaded on a worker node (`search.shard`).
+    Shard(Box<ShardFields>),
+    /// τ broadcast acknowledged: the node's (possibly already tighter)
+    /// threshold for the search after folding the broadcast in.
+    TauAck { sid: u64, tau: f32 },
+    /// Protocol/verb failure.  `code` categorizes it for programs
+    /// ([`ErrorCode`]); `message` is the human text v1 peers already
+    /// parse.  The default [`Response::encode`] emits the legacy
+    /// code-less form byte-identically; only hello-negotiated
+    /// connections see the `"code"` member
+    /// ([`Response::encode_versioned`]).
+    Error { code: ErrorCode, message: String },
     /// An `ok:true` response this build does not recognize (a newer
     /// verb); the raw line is preserved and re-encoded verbatim.
     Unknown(String),
+}
+
+/// The per-shard fields that cross the wire for a `search.shard`
+/// response.  Hit coordinates are *global* sample positions (the worker
+/// adds its segment's start offset back), and the full
+/// [`crate::search::CascadeStats`] counter set travels so the
+/// coordinator's merged counters stay partition-exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardFields {
+    pub sid: u64,
+    /// Hits in global sample coordinates, this shard range only.
+    pub hits: Vec<Hit>,
+    /// The node's published τ after this range (admissible for the
+    /// whole search by the shared-cap argument; +inf if its heap never
+    /// filled).
+    pub tau: f32,
+    /// Times the node's local threshold strictly tightened.
+    pub tightenings: u64,
+    pub latency_ms: f64,
+    pub windows: u64,
+    pub pruned_kim: u64,
+    pub pruned_keogh: u64,
+    pub dp_abandoned: u64,
+    pub dp_full: u64,
+    pub skipped: u64,
+    pub survivor_batches: u64,
+    pub lb_blocks: u64,
+    pub lb_evals: u64,
+    pub lb_abandons: u64,
+    pub pruned_band: u64,
+    pub band_cells_skipped: u64,
+}
+
+impl ShardFields {
+    /// The wire counters as a [`crate::search::CascadeStats`] (the
+    /// coordinator merges these across shards and nodes).
+    pub fn stats(&self) -> crate::search::CascadeStats {
+        crate::search::CascadeStats {
+            candidates: self.windows,
+            pruned_kim: self.pruned_kim,
+            pruned_keogh: self.pruned_keogh,
+            dp_abandoned: self.dp_abandoned,
+            dp_full: self.dp_full,
+            skipped: self.skipped,
+            survivor_batches: self.survivor_batches,
+            lb_blocks: self.lb_blocks,
+            lb_evals: self.lb_evals,
+            lb_abandons: self.lb_abandons,
+            pruned_band: self.pruned_band,
+            band_cells_skipped: self.band_cells_skipped,
+        }
+    }
+
+    /// Build the wire fields from a cascaded range's outcome.
+    pub fn from_stats(
+        sid: u64,
+        hits: Vec<Hit>,
+        tau: f32,
+        tightenings: u64,
+        latency_ms: f64,
+        stats: &crate::search::CascadeStats,
+    ) -> ShardFields {
+        ShardFields {
+            sid,
+            hits,
+            tau,
+            tightenings,
+            latency_ms,
+            windows: stats.candidates,
+            pruned_kim: stats.pruned_kim,
+            pruned_keogh: stats.pruned_keogh,
+            dp_abandoned: stats.dp_abandoned,
+            dp_full: stats.dp_full,
+            skipped: stats.skipped,
+            survivor_batches: stats.survivor_batches,
+            lb_blocks: stats.lb_blocks,
+            lb_evals: stats.lb_evals,
+            lb_abandons: stats.lb_abandons,
+            pruned_band: stats.pruned_band,
+            band_cells_skipped: stats.band_cells_skipped,
+        }
+    }
 }
 
 /// The search fields that cross the wire.
@@ -519,12 +910,34 @@ pub struct MetricsFields {
     pub delta_scanned: u64,
     /// Candidates the delta searches skipped via the watermark.
     pub delta_skipped: u64,
+    /// Worker nodes attached to the cluster shard backend (gauge; 0
+    /// from single-node or pre-cluster servers).
+    pub cluster_nodes: u64,
+    /// τ tightenings broadcast to remote cluster nodes mid-search (0
+    /// from pre-cluster servers).
+    pub tau_broadcasts: u64,
+    /// Shard chunks stolen across cluster nodes (0 from pre-cluster
+    /// servers).
+    pub shards_stolen: u64,
     /// Per-stage trace aggregates (empty when tracing is off, or when
     /// talking to a pre-observability server that does not send them).
     pub stages: Vec<crate::obs::StageSummary>,
 }
 
 impl Response {
+    /// A typed protocol error (see [`ErrorCode`]).
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error { code, message: message.into() }
+    }
+
+    /// The hello answer this build sends.
+    pub fn hello() -> Response {
+        Response::Hello {
+            proto: PROTO_VERSION,
+            features: PROTO_FEATURES.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     pub fn from_align(r: &AlignResponse) -> Response {
         Response::Align {
             cost: r.cost,
@@ -596,6 +1009,9 @@ impl Response {
             delta_searches: m.delta_searches,
             delta_scanned: m.delta_candidates_scanned,
             delta_skipped: m.delta_candidates_skipped,
+            cluster_nodes: m.cluster_nodes,
+            tau_broadcasts: m.tau_broadcasts,
+            shards_stolen: m.shards_stolen,
             stages: m.stages.clone(),
         }))
     }
@@ -626,6 +1042,31 @@ impl Response {
         match self {
             Response::Unknown(_) => self.encode(),
             _ => splice_id(self.encode(), id),
+        }
+    }
+
+    /// [`Response::encode_with_id`] for a connection negotiated to
+    /// `proto` (the hello handshake).  `proto < 2` is byte-identical to
+    /// the unversioned encoding; `proto >= 2` adds the typed `"code"`
+    /// member to error responses — every other shape is identical on
+    /// both versions, which is the v1/v2 compatibility story.
+    pub fn encode_with_id_versioned(&self, id: Option<&RequestId>, proto: u64) -> String {
+        match self {
+            Response::Unknown(_) => self.encode(),
+            _ => splice_id(self.encode_versioned(proto), id),
+        }
+    }
+
+    /// [`Response::encode`] for a negotiated protocol version.
+    pub fn encode_versioned(&self, proto: u64) -> String {
+        match self {
+            Response::Error { code, message } if proto >= 2 => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("code", Json::str(code.as_str())),
+                ("error", Json::str(message)),
+            ])
+            .to_string(),
+            _ => self.encode(),
         }
     }
 
@@ -738,6 +1179,9 @@ impl Response {
                     ("delta_searches", Json::Int(m.delta_searches as i64)),
                     ("delta_scanned", Json::Int(m.delta_scanned as i64)),
                     ("delta_skipped", Json::Int(m.delta_skipped as i64)),
+                    ("cluster_nodes", Json::Int(m.cluster_nodes as i64)),
+                    ("tau_broadcasts", Json::Int(m.tau_broadcasts as i64)),
+                    ("shards_stolen", Json::Int(m.shards_stolen as i64)),
                 ];
                 if !m.stages.is_empty() {
                     pairs.push((
@@ -757,9 +1201,57 @@ impl Response {
                 }
                 Json::obj(pairs).to_string()
             }
-            Response::Error(e) => Json::obj(vec![
+            Response::Hello { proto, features } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("proto", Json::Int(*proto as i64)),
+                ("features", Json::arr(features.iter().map(|f| Json::str(f)))),
+            ])
+            .to_string(),
+            Response::SegmentPut { segment, candidates } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("segment", Json::Int(*segment as i64)),
+                ("candidates", Json::Int(*candidates as i64)),
+            ])
+            .to_string(),
+            Response::TauAck { sid, tau } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("sid", Json::Int(*sid as i64)),
+                ("tau", wire_f32(*tau)),
+            ])
+            .to_string(),
+            Response::Shard(s) => {
+                let hits = Json::arr(s.hits.iter().map(|h| {
+                    Json::obj(vec![
+                        ("start", Json::Int(h.start as i64)),
+                        ("end", Json::Int(h.end as i64)),
+                        ("cost", wire_f32(h.cost)),
+                    ])
+                }));
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("sid", Json::Int(s.sid as i64)),
+                    ("hits", hits),
+                    ("tau", wire_f32(s.tau)),
+                    ("tightenings", Json::Int(s.tightenings as i64)),
+                    ("latency_ms", Json::Num(s.latency_ms)),
+                    ("windows", Json::Int(s.windows as i64)),
+                    ("pruned_kim", Json::Int(s.pruned_kim as i64)),
+                    ("pruned_keogh", Json::Int(s.pruned_keogh as i64)),
+                    ("dp_abandoned", Json::Int(s.dp_abandoned as i64)),
+                    ("dp_full", Json::Int(s.dp_full as i64)),
+                    ("skipped", Json::Int(s.skipped as i64)),
+                    ("survivor_batches", Json::Int(s.survivor_batches as i64)),
+                    ("lb_blocks", Json::Int(s.lb_blocks as i64)),
+                    ("lb_evals", Json::Int(s.lb_evals as i64)),
+                    ("lb_abandons", Json::Int(s.lb_abandons as i64)),
+                    ("pruned_band", Json::Int(s.pruned_band as i64)),
+                    ("band_cells_skipped", Json::Int(s.band_cells_skipped as i64)),
+                ])
+                .to_string()
+            }
+            Response::Error { message, .. } => Json::obj(vec![
                 ("ok", Json::Bool(false)),
-                ("error", Json::str(e)),
+                ("error", Json::str(message)),
             ])
             .to_string(),
             Response::Unknown(raw) => raw.clone(),
@@ -782,10 +1274,76 @@ impl Response {
                 .get("error")
                 .and_then(Json::as_str)
                 .unwrap_or("unknown error");
-            return Ok(Response::Error(e.to_string()));
+            // the "code" member is v2-only; its absence (a v1 peer) and
+            // any code from a newer build both decode as the catch-all
+            let code = v
+                .get("code")
+                .and_then(Json::as_str)
+                .and_then(ErrorCode::from_name)
+                .unwrap_or(ErrorCode::Internal);
+            return Ok(Response::Error { code, message: e.to_string() });
         }
         if v.get("pong").is_some() {
             return Ok(Response::Pong);
+        }
+        if let Some(proto) = v.get("proto").and_then(Json::as_i64) {
+            let features = v
+                .get("features")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|f| f.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            return Ok(Response::Hello { proto: proto.max(0) as u64, features });
+        }
+        // shard responses carry both "sid" and "hits", so they must be
+        // sniffed before the generic search-response "hits" check; a
+        // bare "sid" is the τ-broadcast ack
+        if let Some(sid) = v.get("sid").and_then(Json::as_i64) {
+            let sid = sid.max(0) as u64;
+            if let Some(hits) = v.get("hits").and_then(Json::as_arr) {
+                let mut parsed = Vec::with_capacity(hits.len());
+                for h in hits {
+                    parsed.push(Hit {
+                        start: h.get("start").and_then(Json::as_i64).unwrap_or(0) as usize,
+                        end: h.get("end").and_then(Json::as_i64).unwrap_or(0) as usize,
+                        cost: h.get("cost").and_then(parse_wire_f32).unwrap_or(0.0),
+                    });
+                }
+                let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
+                return Ok(Response::Shard(Box::new(ShardFields {
+                    sid,
+                    hits: parsed,
+                    tau: v.get("tau").and_then(parse_wire_f32).unwrap_or(f32::INFINITY),
+                    tightenings: int("tightenings"),
+                    latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    windows: int("windows"),
+                    pruned_kim: int("pruned_kim"),
+                    pruned_keogh: int("pruned_keogh"),
+                    dp_abandoned: int("dp_abandoned"),
+                    dp_full: int("dp_full"),
+                    skipped: int("skipped"),
+                    survivor_batches: int("survivor_batches"),
+                    lb_blocks: int("lb_blocks"),
+                    lb_evals: int("lb_evals"),
+                    lb_abandons: int("lb_abandons"),
+                    pruned_band: int("pruned_band"),
+                    band_cells_skipped: int("band_cells_skipped"),
+                })));
+            }
+            return Ok(Response::TauAck {
+                sid,
+                tau: v.get("tau").and_then(parse_wire_f32).unwrap_or(f32::INFINITY),
+            });
+        }
+        if v.get("segment").is_some() {
+            let int = |k: &str| v.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
+            return Ok(Response::SegmentPut {
+                segment: int("segment"),
+                candidates: int("candidates"),
+            });
         }
         if let Some(hits) = v.get("hits").and_then(Json::as_arr) {
             let mut parsed = Vec::with_capacity(hits.len());
@@ -903,6 +1461,9 @@ impl Response {
                 delta_searches: int("delta_searches"),
                 delta_scanned: int("delta_scanned"),
                 delta_skipped: int("delta_skipped"),
+                cluster_nodes: int("cluster_nodes"),
+                tau_broadcasts: int("tau_broadcasts"),
+                shards_stolen: int("shards_stolen"),
                 stages: v
                     .get("stages")
                     .and_then(Json::as_arr)
@@ -1157,7 +1718,7 @@ mod tests {
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
         let r = Response::Info { qlen: 128, reflen: 2048, batch: 8 };
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
-        let r = Response::Error("nope".into());
+        let r = Response::error(ErrorCode::Internal, "nope");
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
         assert_eq!(Response::parse(&Response::Pong.encode()).unwrap(), Response::Pong);
     }
@@ -1313,6 +1874,9 @@ mod tests {
             delta_searches: 2,
             delta_scanned: 512,
             delta_skipped: 7489,
+            cluster_nodes: 3,
+            tau_broadcasts: 21,
+            shards_stolen: 4,
             stages: vec![],
         }));
         assert_eq!(Response::parse(&r.encode()).unwrap(), r);
@@ -1435,10 +1999,10 @@ mod tests {
         // error responses carry the id too, so a pipelined client can
         // match a failure to the request that caused it
         let id = RequestId::Int(-3);
-        let enc = Response::Error("nope".into()).encode_with_id(Some(&id));
+        let enc = Response::error(ErrorCode::Internal, "nope").encode_with_id(Some(&id));
         assert_eq!(enc, r#"{"id":-3,"ok":false,"error":"nope"}"#);
         let (got, resp) = Response::parse_with_id(&enc).unwrap();
-        assert_eq!((got, resp), (Some(id), Response::Error("nope".into())));
+        assert_eq!((got, resp), (Some(id), Response::error(ErrorCode::Internal, "nope")));
     }
 
     #[test]
@@ -1456,7 +2020,7 @@ mod tests {
         let resps = [
             Response::Pong,
             Response::Info { qlen: 1, reflen: 2, batch: 3 },
-            Response::Error("e".into()),
+            Response::error(ErrorCode::Internal, "e"),
             Response::Prometheus("x 1\n".into()),
         ];
         for r in resps {
@@ -1595,5 +2159,202 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let r = Request::parse(r#"{"op":"hello"}"#).unwrap();
+        assert_eq!(r, Request::Hello);
+        assert_eq!(r.encode(), r#"{"op":"hello"}"#);
+
+        let resp = Response::hello();
+        let parsed = Response::parse(&resp.encode()).unwrap();
+        assert_eq!(parsed, resp);
+        match parsed {
+            Response::Hello { proto, features } => {
+                assert_eq!(proto, PROTO_VERSION);
+                assert_eq!(
+                    features,
+                    PROTO_FEATURES.iter().map(|s| s.to_string()).collect::<Vec<_>>()
+                );
+                // the feature list is the negotiation surface; keep it sorted
+                // so clients can binary-search and diffs stay reviewable
+                let mut sorted = features.clone();
+                sorted.sort();
+                assert_eq!(features, sorted);
+            }
+            other => panic!("expected hello, got {other:?}"),
+        }
+        // a features-less hello (minimal v2 peer) still parses
+        assert_eq!(
+            Response::parse(r#"{"ok":true,"proto":2}"#).unwrap(),
+            Response::Hello { proto: 2, features: vec![] }
+        );
+    }
+
+    #[test]
+    fn error_codes_roundtrip_v2_and_degrade_to_v1() {
+        let codes = [
+            ErrorCode::BadRequest,
+            ErrorCode::FrameTooLarge,
+            ErrorCode::UnsupportedVerb,
+            ErrorCode::ShapeMismatch,
+            ErrorCode::Internal,
+        ];
+        for code in codes {
+            let r = Response::error(code, "boom: details");
+            // v2 encoding round-trips the code exactly
+            let enc2 = r.encode_versioned(2);
+            assert!(enc2.contains(&format!(r#""code":"{}""#, code.as_str())), "{enc2}");
+            assert_eq!(Response::parse(&enc2).unwrap(), r);
+            // v1 encoding drops the code; parsing degrades to Internal but
+            // keeps the message byte-for-byte
+            let enc1 = r.encode();
+            assert_eq!(enc1, r#"{"ok":false,"error":"boom: details"}"#);
+            assert_eq!(
+                Response::parse(&enc1).unwrap(),
+                Response::error(ErrorCode::Internal, "boom: details")
+            );
+            // name mapping is a bijection over the known codes
+            assert_eq!(ErrorCode::from_name(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_name("no_such_code"), None);
+        // ids splice identically on both versions
+        let id = RequestId::Int(7);
+        let r = Response::error(ErrorCode::BadRequest, "e");
+        assert_eq!(r.encode_with_id(Some(&id)), r#"{"id":7,"ok":false,"error":"e"}"#);
+        assert_eq!(
+            r.encode_with_id_versioned(Some(&id), 2),
+            r#"{"id":7,"ok":false,"code":"bad_request","error":"e"}"#
+        );
+        assert_eq!(Response::parse_with_id(&r.encode_with_id_versioned(Some(&id), 2)).unwrap(), (Some(id), r));
+    }
+
+    #[test]
+    fn cluster_request_roundtrips() {
+        let reqs = [
+            Request::SegmentPut {
+                segment: 3,
+                base: 128,
+                start: 256,
+                window: 16,
+                stride: 2,
+                samples: vec![0.5, -1.25, f32::INFINITY],
+            },
+            Request::SegmentAppend { segment: 3, samples: vec![1.0, 2.5] },
+            Request::SearchShard {
+                sid: 9,
+                segment: 3,
+                query: vec![0.1, 0.2],
+                k: 2,
+                exclusion: 4,
+                cap: 7,
+                lo: 128,
+                hi: 200,
+                tau: 1.5,
+                band: 6,
+            },
+            // +inf τ and band 0 are elided on the wire; the parse default
+            // must restore them
+            Request::SearchShard {
+                sid: 10,
+                segment: 0,
+                query: vec![1.0],
+                k: 1,
+                exclusion: 0,
+                cap: 1,
+                lo: 0,
+                hi: 1,
+                tau: f32::INFINITY,
+                band: 0,
+            },
+            Request::Tau { sid: 9, tau: 0.125 },
+        ];
+        for r in reqs {
+            let enc = r.encode();
+            assert_eq!(Request::parse(&enc).unwrap(), r, "{enc}");
+            // encode→parse→encode is a fixed point
+            assert_eq!(Request::parse(&enc).unwrap().encode(), enc);
+        }
+        let elided = Request::SearchShard {
+            sid: 10,
+            segment: 0,
+            query: vec![1.0],
+            k: 1,
+            exclusion: 0,
+            cap: 1,
+            lo: 0,
+            hi: 1,
+            tau: f32::INFINITY,
+            band: 0,
+        }
+        .encode();
+        assert!(!elided.contains("tau"), "{elided}");
+        assert!(!elided.contains("band"), "{elided}");
+    }
+
+    #[test]
+    fn cluster_response_roundtrips() {
+        let stats = crate::search::CascadeStats {
+            candidates: 40,
+            pruned_kim: 10,
+            pruned_keogh: 5,
+            dp_abandoned: 3,
+            dp_full: 22,
+            skipped: 0,
+            survivor_batches: 4,
+            lb_blocks: 6,
+            lb_evals: 35,
+            lb_abandons: 2,
+            pruned_band: 0,
+            band_cells_skipped: 0,
+        };
+        let hits = vec![Hit { start: 130, end: 145, cost: 0.75 }];
+        let shard = Response::Shard(Box::new(ShardFields::from_stats(9, hits, 0.75, 3, 1.5, &stats)));
+        let parsed = Response::parse(&shard.encode()).unwrap();
+        assert_eq!(parsed, shard);
+        if let Response::Shard(f) = &parsed {
+            // stats() must invert from_stats so the coordinator merges
+            // exactly what the worker measured
+            assert_eq!(f.stats(), stats);
+        }
+
+        // infinite τ survives the wire (no hits found under the cap)
+        let dry = Response::Shard(Box::new(ShardFields::from_stats(
+            11,
+            vec![],
+            f32::INFINITY,
+            0,
+            0.25,
+            &crate::search::CascadeStats::default(),
+        )));
+        assert_eq!(Response::parse(&dry.encode()).unwrap(), dry);
+
+        let put = Response::SegmentPut { segment: 3, candidates: 72 };
+        assert_eq!(Response::parse(&put.encode()).unwrap(), put);
+
+        let ack = Response::TauAck { sid: 9, tau: 0.5 };
+        assert_eq!(Response::parse(&ack.encode()).unwrap(), ack);
+        let ack_inf = Response::TauAck { sid: 9, tau: f32::INFINITY };
+        assert_eq!(Response::parse(&ack_inf.encode()).unwrap(), ack_inf);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let bad = [
+            r#"{"op":"ping","x":1}"#,
+            r#"{"op":"hello","extra":true}"#,
+            r#"{"op":"search","query":[1.0],"windw":5}"#,
+            r#"{"op":"append","samples":[1.0],"window":8,"step":2}"#,
+            r#"{"op":"tau","sid":1,"tau":0.5,"who":"n1"}"#,
+            r#"{"op":"segment.put","segment":1,"window":4,"samples":[1.0],"color":"red"}"#,
+        ];
+        for line in bad {
+            let err = Request::parse(line).unwrap_err().to_string();
+            assert!(err.contains("unknown key"), "{line}: {err}");
+        }
+        // "id" stays legal everywhere: it is the pipelining envelope,
+        // not an op parameter
+        assert_eq!(Request::parse(r#"{"op":"ping","id":4}"#).unwrap(), Request::Ping);
     }
 }

@@ -35,14 +35,14 @@
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::frame::{FrameDecoder, FrameEvent, DEFAULT_MAX_FRAME};
-use super::server::{oversized_response, respond_to_frame};
+use super::server::{oversized_response, respond_to_frame_versioned};
 use crate::coordinator::queue::PushError;
 use crate::coordinator::{BoundedQueue, Metrics, SdtwService};
 use crate::util::json::Json;
@@ -117,6 +117,10 @@ struct Job {
     line: String,
     json: Option<Json>,
     slot: Arc<Pending>,
+    /// The owning connection's negotiated wire version — shared with
+    /// every other job on that connection, so a `hello` raises it for
+    /// frames dispatched after it.
+    proto: Arc<AtomicU64>,
 }
 
 /// Per-connection state machine.
@@ -133,6 +137,9 @@ struct Conn {
     written: usize,
     /// Peer half-closed: drain in-flight work, flush, then close.
     eof: bool,
+    /// Negotiated wire version: 1 (legacy encodings) until a `hello`
+    /// dispatched on this connection upgrades it.
+    proto: Arc<AtomicU64>,
 }
 
 impl Conn {
@@ -146,6 +153,7 @@ impl Conn {
             outbuf: Vec::new(),
             written: 0,
             eof: false,
+            proto: Arc::new(AtomicU64::new(1)),
         }
     }
 }
@@ -252,7 +260,7 @@ impl Reactor {
 
 fn executor_loop(queue: &BoundedQueue<Job>, service: &SdtwService) {
     while let Some(job) = queue.pop() {
-        let text = respond_to_frame(&job.line, job.json.as_ref(), service);
+        let text = respond_to_frame_versioned(&job.line, job.json.as_ref(), service, &job.proto);
         job.slot.complete(text);
     }
 }
@@ -360,7 +368,10 @@ fn drain_events(
         match event {
             FrameEvent::Oversized { at } => {
                 metrics.on_frame_oversized();
-                let text = oversized_response(opts.max_frame, at).encode();
+                // Relaxed: connection-local handshake state; only this
+                // connection's jobs store to it
+                let v = conn.proto.load(Ordering::Relaxed);
+                let text = oversized_response(opts.max_frame, at).encode_with_id_versioned(None, v);
                 conn.inflight.push_back(Pending::ready(text));
             }
             FrameEvent::Frame(frame) => {
@@ -376,7 +387,7 @@ fn drain_events(
                 }
                 let slot = Arc::new(Pending::default());
                 conn.inflight.push_back(slot.clone());
-                let job = Job { line, json: frame.json.ok(), slot };
+                let job = Job { line, json: frame.json.ok(), slot, proto: conn.proto.clone() };
                 match queue.try_push(job) {
                     Ok(()) => {}
                     Err(PushError::Full(job)) => conn.stalled = Some(job),

@@ -24,14 +24,14 @@
 
 use std::io::{BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::frame::{FrameDecoder, FrameEvent, DEFAULT_MAX_FRAME};
-use super::proto::{Request, RequestId, Response};
+use super::proto::{ErrorCode, Request, RequestId, Response, ShardFields, PROTO_VERSION};
 use crate::coordinator::{Metrics, SdtwService};
 use crate::obs;
 use crate::util::json::Json;
@@ -129,6 +129,9 @@ fn frame_loop(
     let mut writer = BufWriter::new(stream.try_clone()?);
     let mut decoder = FrameDecoder::new(max_frame);
     let mut chunk = [0u8; 16 * 1024];
+    // Per-connection negotiated wire version: starts at 1 (legacy
+    // byte-identical encodings) and is raised by a `hello` exchange.
+    let proto = AtomicU64::new(1);
     loop {
         let n = stream.read(&mut chunk)?;
         if n == 0 {
@@ -145,11 +148,14 @@ fn frame_loop(
                     if decoder.has_pending() {
                         metrics.on_pipelined_request();
                     }
-                    respond_to_frame(line, frame.json.as_ref().ok(), service)
+                    respond_to_frame_versioned(line, frame.json.as_ref().ok(), service, &proto)
                 }
                 FrameEvent::Oversized { at } => {
                     metrics.on_frame_oversized();
-                    Some(oversized_response(max_frame, at).encode())
+                    // Relaxed: the proto cell is connection-local state,
+                    // read and written only by this connection's pipeline
+                    let v = proto.load(Ordering::Relaxed);
+                    Some(oversized_response(max_frame, at).encode_with_id_versioned(None, v))
                 }
             };
             if let Some(text) = reply {
@@ -169,9 +175,10 @@ fn frame_loop(
 /// byte stream however it was chunked, which the integration suite
 /// relies on.
 pub(crate) fn oversized_response(max_frame: usize, at: u64) -> Response {
-    Response::Error(format!(
-        "frame exceeds max-frame cap ({max_frame} bytes) at byte {at}"
-    ))
+    Response::error(
+        ErrorCode::FrameTooLarge,
+        format!("frame exceeds max-frame cap ({max_frame} bytes) at byte {at}"),
+    )
 }
 
 /// Shared dispatch path for both front ends: one wire frame in, one
@@ -185,6 +192,25 @@ pub fn respond_to_frame(
     line: &str,
     parsed: Option<&Json>,
     service: &SdtwService,
+) -> Option<String> {
+    // A fresh v1 cell: callers without connection state always get the
+    // legacy byte-identical encodings.
+    let proto = AtomicU64::new(1);
+    respond_to_frame_versioned(line, parsed, service, &proto)
+}
+
+/// [`respond_to_frame`] with per-connection protocol state: `proto`
+/// holds the connection's negotiated wire version (1 until a `hello`
+/// succeeds, then [`PROTO_VERSION`]).  Responses are encoded at the
+/// version in effect when dispatch finishes, so a request pipelined
+/// *behind* a hello on the same connection may still be answered in v1
+/// framing if it is dispatched concurrently — clients must await the
+/// hello response before relying on v2 shapes (ours does).
+pub fn respond_to_frame_versioned(
+    line: &str,
+    parsed: Option<&Json>,
+    service: &SdtwService,
+    proto: &AtomicU64,
 ) -> Option<String> {
     if line.trim().is_empty() {
         return None;
@@ -202,7 +228,15 @@ pub fn respond_to_frame(
     };
     let id = value.and_then(RequestId::extract);
     let response = traced_dispatch(line, value, service);
-    Some(response.encode_with_id(id.as_ref()))
+    if matches!(response, Response::Hello { .. }) {
+        // Relaxed: connection-local handshake state; ordering against
+        // other connections is irrelevant and this pipeline observes
+        // its own store on the next frame
+        proto.store(PROTO_VERSION, Ordering::Relaxed);
+    }
+    // Relaxed: reads back this connection's own handshake store above
+    let v = proto.load(Ordering::Relaxed);
+    Some(response.encode_with_id_versioned(id.as_ref(), v))
 }
 
 /// Decode, dispatch, encode.  Errors become protocol-level Error
@@ -225,7 +259,7 @@ fn traced_dispatch(line: &str, value: Option<&Json>, service: &SdtwService) -> R
     };
     let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
     let outcome = match &response {
-        Response::Error(_) => "error",
+        Response::Error { .. } => "error",
         _ => "ok",
     };
     log_info!(
@@ -241,17 +275,64 @@ fn traced_dispatch(line: &str, value: Option<&Json>, service: &SdtwService) -> R
 fn dispatch_line(line: &str, service: &SdtwService) -> (&'static str, Response) {
     match Json::parse(line.trim()) {
         Ok(v) => dispatch_value(&v, service),
-        Err(e) => ("parse", Response::Error(format!("bad request: {e}"))),
+        Err(e) => (
+            "parse",
+            Response::error(ErrorCode::BadRequest, format!("bad request: {e}")),
+        ),
     }
 }
 
 fn dispatch_value(v: &Json, service: &SdtwService) -> (&'static str, Response) {
     let req = match Request::from_json(v) {
         Ok(r) => r,
-        Err(e) => return ("parse", Response::Error(format!("bad request: {e}"))),
+        Err(e) => {
+            // Verb-level unknowns get their own code so a v2 client can
+            // distinguish "old server" from "malformed request"; the
+            // message text is unchanged either way (v1 compatibility).
+            let code = if e.to_string().starts_with("unknown op") {
+                ErrorCode::UnsupportedVerb
+            } else {
+                ErrorCode::BadRequest
+            };
+            return ("parse", Response::error(code, format!("bad request: {e}")));
+        }
     };
     match req {
         Request::Ping => ("ping", Response::Pong),
+        Request::Hello => ("hello", Response::hello()),
+        Request::SegmentPut { segment, base, start, window, stride, samples } => (
+            "segment.put",
+            match service.segment_put(segment, base, start, window, stride, samples) {
+                Ok(candidates) => Response::SegmentPut { segment, candidates },
+                Err(e) => Response::error(ErrorCode::ShapeMismatch, format!("{e:#}")),
+            },
+        ),
+        Request::SegmentAppend { segment, samples } => (
+            "segment.append",
+            match service.segment_append(segment, samples) {
+                Ok(candidates) => Response::SegmentPut { segment, candidates },
+                Err(e) => Response::error(ErrorCode::ShapeMismatch, format!("{e:#}")),
+            },
+        ),
+        Request::SearchShard { sid, segment, query, k, exclusion, cap, lo, hi, tau, band } => (
+            "search.shard",
+            match service.search_shard(sid, segment, &query, k, exclusion, cap, lo, hi, tau, band)
+            {
+                Ok((run, latency_ms)) => Response::Shard(Box::new(ShardFields::from_stats(
+                    sid,
+                    run.hits,
+                    run.tau,
+                    run.tightenings,
+                    latency_ms,
+                    &run.stats,
+                ))),
+                Err(e) => Response::error(ErrorCode::ShapeMismatch, format!("{e:#}")),
+            },
+        ),
+        Request::Tau { sid, tau } => {
+            let tau = service.tau_update(sid, tau);
+            ("tau", Response::TauAck { sid, tau })
+        }
         Request::Info => (
             "info",
             Response::Info {
@@ -275,21 +356,21 @@ fn dispatch_value(v: &Json, service: &SdtwService) -> (&'static str, Response) {
             "align",
             match service.align_blocking(query, options) {
                 Ok(resp) => Response::from_align(&resp),
-                Err(e) => Response::Error(format!("{e:#}")),
+                Err(e) => Response::error(ErrorCode::Internal, format!("{e:#}")),
             },
         ),
         Request::Search { query, options } => (
             "search",
             match service.search_blocking(query, options) {
                 Ok(resp) => Response::from_search(&resp),
-                Err(e) => Response::Error(format!("{e:#}")),
+                Err(e) => Response::error(ErrorCode::Internal, format!("{e:#}")),
             },
         ),
         Request::Append { samples, options } => (
             "append",
             match service.append_blocking(samples, options) {
                 Ok(resp) => Response::from_append(&resp),
-                Err(e) => Response::Error(format!("{e:#}")),
+                Err(e) => Response::error(ErrorCode::Internal, format!("{e:#}")),
             },
         ),
     }

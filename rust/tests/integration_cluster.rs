@@ -1,0 +1,496 @@
+//! Integration: multi-node sharded search over real sockets.  Two
+//! worker nodes (search-only services behind the blocking and reactor
+//! front ends) receive index segments from a coordinator, which fans
+//! every search out as `search.shard` verbs, relays τ-tightenings
+//! between the nodes mid-search, and steals shard chunks on skew.
+//! The contract under test everywhere: cluster hits are bit-identical
+//! to the single-process serial engine, and the merged stage counters
+//! partition the candidate space exactly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sdtw_repro::coordinator::{
+    AppendOptions, SdtwService, SearchOptions, ServiceOptions,
+};
+use sdtw_repro::dtw::Dist;
+use sdtw_repro::search::cluster::{run_shard, LocalBackend, RemoteTau};
+use sdtw_repro::search::topk::prune_heap_cap;
+use sdtw_repro::search::{CascadeOpts, Hit, StreamingEngine};
+use sdtw_repro::server::{Client, Reactor, ReactorOptions, Server};
+use sdtw_repro::util::rng::Xoshiro256;
+
+fn search_only(reference: Vec<f32>) -> Arc<SdtwService> {
+    Arc::new(
+        SdtwService::start(
+            ServiceOptions { search_only: true, ..Default::default() },
+            reference,
+        )
+        .unwrap(),
+    )
+}
+
+/// A worker node's own startup reference is irrelevant to cluster
+/// traffic — everything it searches arrives via `segment.put`.
+fn worker_service() -> Arc<SdtwService> {
+    let mut rng = Xoshiro256::new(1);
+    search_only(rng.normal_vec_f32(64))
+}
+
+struct TestServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TestServer {
+    fn blocking(service: Arc<SdtwService>) -> TestServer {
+        let s = Server::bind(service, "127.0.0.1:0").unwrap();
+        let addr = s.local_addr().unwrap().to_string();
+        let stop = s.stop_flag();
+        TestServer { addr, stop, join: Some(std::thread::spawn(move || s.serve())) }
+    }
+
+    fn reactor(service: Arc<SdtwService>) -> TestServer {
+        let r = Reactor::bind(service, "127.0.0.1:0", ReactorOptions::default()).unwrap();
+        let addr = r.local_addr().unwrap().to_string();
+        let stop = r.stop_flag();
+        TestServer { addr, stop, join: Some(std::thread::spawn(move || r.serve())) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// A coordinator service attached to the given worker addresses.
+fn coordinator(reference: Vec<f32>, addrs: &[String]) -> SdtwService {
+    let mut svc = SdtwService::start(
+        ServiceOptions { search_only: true, ..Default::default() },
+        reference,
+    )
+    .unwrap();
+    svc.attach_cluster(addrs).unwrap();
+    svc
+}
+
+/// The (window, stride) a coordinator over `reflen` samples resolves
+/// for its cluster index — what a serial comparison search must pin.
+fn cluster_shape(reflen: usize) -> (usize, usize) {
+    let r = SearchOptions::default()
+        .resolve(SdtwService::SEARCH_ONLY_QLEN, reflen)
+        .unwrap();
+    (r.window, r.stride)
+}
+
+fn assert_hits_bit_identical(cluster: &[Hit], serial: &[Hit], ctx: &str) {
+    assert_eq!(cluster.len(), serial.len(), "{ctx}: hit count");
+    for (a, b) in cluster.iter().zip(serial) {
+        assert_eq!(
+            (a.start, a.end, a.cost.to_bits()),
+            (b.start, b.end, b.cost.to_bits()),
+            "{ctx}: cluster hits must be bit-identical to serial"
+        );
+    }
+}
+
+#[test]
+fn two_node_cluster_hits_are_bit_identical_to_serial_and_partition_exact() {
+    let w1 = TestServer::blocking(worker_service());
+    let w2 = TestServer::blocking(worker_service());
+    let mut rng = Xoshiro256::new(40);
+    let reference = rng.normal_vec_f32(512);
+    let coord = coordinator(reference.clone(), &[w1.addr.clone(), w2.addr.clone()]);
+    let serial = search_only(reference.clone());
+    let (window, stride) = cluster_shape(reference.len());
+    let total = ((reference.len() - window) / stride + 1) as u64;
+
+    let mut searches = 0u64;
+    for (seed, k, exclusion, band) in
+        [(7u64, 1usize, 4usize, 0usize), (8, 3, 8, 0), (9, 2, 16, 40), (10, 5, 2, 0)]
+    {
+        let mut qrng = Xoshiro256::new(seed);
+        let q = qrng.normal_vec_f32(32);
+        let opts = SearchOptions { k, exclusion, band, ..Default::default() };
+        let serial_resp = serial
+            .search_blocking(q.clone(), SearchOptions { window, stride, ..opts })
+            .unwrap();
+        let resp = coord.search_blocking(q, opts).unwrap();
+        searches += 1;
+
+        let ctx = format!("seed={seed} k={k} exclusion={exclusion} band={band}");
+        assert_hits_bit_identical(&resp.hits, &serial_resp.hits, &ctx);
+        assert_eq!(resp.stats.candidates, total, "{ctx}: every candidate accounted");
+        assert_eq!(
+            resp.stats.pruned_total() + resp.stats.dp_full,
+            resp.stats.candidates,
+            "{ctx}: stage counters partition the candidate space"
+        );
+        // 2 nodes × 4 chunks each, whoever ends up executing them
+        assert_eq!(resp.shards, 8, "{ctx}");
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.cluster_nodes, 2);
+    assert_eq!(m.searches, searches);
+    assert_eq!(m.search_shards, 8 * searches);
+    // k=1 gives a heap cap of 1: the first completed DP anywhere
+    // publishes a finite τ, whose relay to the other node is observable
+    assert!(
+        m.tau_broadcasts >= 1,
+        "a 2-node search must broadcast at least one τ-tightening, got {}",
+        m.tau_broadcasts
+    );
+}
+
+#[test]
+fn cluster_search_serves_over_the_wire_with_cluster_counters() {
+    let w1 = TestServer::blocking(worker_service());
+    let w2 = TestServer::blocking(worker_service());
+    let mut rng = Xoshiro256::new(50);
+    let reference = rng.normal_vec_f32(480);
+    let coord_svc =
+        Arc::new(coordinator(reference.clone(), &[w1.addr.clone(), w2.addr.clone()]));
+    let coord = TestServer::blocking(coord_svc);
+    let serial = search_only(reference.clone());
+    let (window, stride) = cluster_shape(reference.len());
+
+    let q = rng.normal_vec_f32(48);
+    let opts = SearchOptions { k: 2, exclusion: 6, ..Default::default() };
+    let serial_resp = serial
+        .search_blocking(q.clone(), SearchOptions { window, stride, ..opts })
+        .unwrap();
+
+    let mut client = Client::connect(&coord.addr).unwrap();
+    let s = client.search(&q, opts).unwrap();
+    assert_hits_bit_identical(&s.hits, &serial_resp.hits, "over the wire");
+    assert_eq!(s.shards, 8, "per-node chunks surface as the response's shard count");
+    assert_eq!(
+        s.windows,
+        ((reference.len() - window) / stride + 1) as u64,
+        "candidate accounting crosses the wire"
+    );
+
+    // the new MetricsFields counters cross the wire too
+    let m = client.metrics().unwrap();
+    assert_eq!(m.cluster_nodes, 2);
+    assert!(m.tau_broadcasts >= 1, "got {}", m.tau_broadcasts);
+}
+
+#[test]
+fn appends_route_to_the_tail_node_and_match_the_single_process_stream() {
+    // workers behind the reactor front end this time: τ broadcasts and
+    // appends arrive on the ctl connection while a shard verb is in
+    // flight on the data connection, so the worker must multiplex
+    let w1 = TestServer::reactor(worker_service());
+    let w2 = TestServer::reactor(worker_service());
+    let mut rng = Xoshiro256::new(60);
+    let reference = rng.normal_vec_f32(512);
+    let coord = coordinator(reference.clone(), &[w1.addr.clone(), w2.addr.clone()]);
+    let serial = search_only(reference.clone());
+
+    // same raw samples into both: the cluster routes them to the tail
+    // node's segment, the serial service into its streaming session —
+    // both normalize with the same frozen startup stats
+    for chunk in [rng.normal_vec_f32(64), rng.normal_vec_f32(37)] {
+        let a = coord.append_blocking(chunk.clone(), AppendOptions::default()).unwrap();
+        let b = serial.append_blocking(chunk, AppendOptions::default()).unwrap();
+        assert_eq!(a.candidates, b.candidates, "candidate growth must agree");
+        assert_eq!(a.stream_len, b.stream_len);
+        assert_eq!((a.window, a.stride), (b.window, b.stride));
+    }
+
+    let q = rng.normal_vec_f32(24);
+    for (k, exclusion) in [(1usize, 4usize), (3, 10)] {
+        let opts = SearchOptions { k, exclusion, ..Default::default() };
+        let serial_resp = serial
+            .search_blocking(q.clone(), SearchOptions { stream: true, ..opts })
+            .unwrap();
+        let resp = coord.search_blocking(q.clone(), opts).unwrap();
+        assert_hits_bit_identical(
+            &resp.hits,
+            &serial_resp.hits,
+            &format!("post-append k={k}"),
+        );
+        assert_eq!(
+            resp.stats.pruned_total() + resp.stats.dp_full,
+            resp.stats.candidates
+        );
+    }
+}
+
+/// A byte-level TCP proxy that delays each `search.shard` request line
+/// by `delay` before forwarding it (everything else — hello,
+/// `segment.put`, τ broadcasts, and all responses — passes through
+/// immediately): a deterministic stand-in for a node whose shard verbs
+/// are slow, without also slowing the coordinator's control traffic.
+fn delay_proxy(target: String, delay: Duration) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for inbound in listener.incoming() {
+            let Ok(inbound) = inbound else { break };
+            let Ok(upstream) = TcpStream::connect(&target) else { break };
+            let in_read = inbound.try_clone().unwrap();
+            let mut up_write = upstream.try_clone().unwrap();
+            std::thread::spawn(move || {
+                let mut reader = BufReader::new(in_read);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            if line.contains("\"op\":\"search.shard\"") {
+                                std::thread::sleep(delay);
+                            }
+                            if up_write.write_all(line.as_bytes()).is_err()
+                                || up_write.flush().is_err()
+                            {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+            let mut out = inbound;
+            std::thread::spawn(move || {
+                let mut reader = BufReader::new(upstream);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            if out.write_all(line.as_bytes()).is_err()
+                                || out.flush().is_err()
+                            {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn a_slow_node_gets_its_chunks_stolen_without_changing_results() {
+    let w1 = TestServer::blocking(worker_service());
+    let w2 = TestServer::blocking(worker_service());
+    // node 1 answers each shard verb ~150ms late; node 0 drains its own
+    // four chunks in well under that and must steal node 1's backlog
+    let slow = delay_proxy(w2.addr.clone(), Duration::from_millis(150));
+    let mut rng = Xoshiro256::new(70);
+    let reference = rng.normal_vec_f32(512);
+    let coord = coordinator(reference.clone(), &[w1.addr.clone(), slow]);
+    let serial = search_only(reference.clone());
+    let (window, stride) = cluster_shape(reference.len());
+
+    let q = rng.normal_vec_f32(32);
+    let opts = SearchOptions { k: 2, exclusion: 6, ..Default::default() };
+    let serial_resp = serial
+        .search_blocking(q.clone(), SearchOptions { window, stride, ..opts })
+        .unwrap();
+    let resp = coord.search_blocking(q, opts).unwrap();
+
+    assert_hits_bit_identical(&resp.hits, &serial_resp.hits, "with stealing");
+    assert_eq!(
+        resp.stats.pruned_total() + resp.stats.dp_full,
+        resp.stats.candidates,
+        "stolen chunks are accounted exactly once"
+    );
+    assert_eq!(resp.shards, 8, "every chunk executed, whoever ran it");
+    let m = coord.metrics();
+    assert!(
+        m.shards_stolen >= 1,
+        "the fast node must steal from the slow one, got {}",
+        m.shards_stolen
+    );
+}
+
+#[test]
+fn worker_cluster_verbs_answer_directly_over_the_wire() {
+    let ts = TestServer::blocking(worker_service());
+    let mut client = Client::connect_negotiated(&ts.addr).unwrap();
+    assert!(client.proto() >= 2);
+    assert!(client.has_feature("search.shard"));
+
+    // ship a segment that does not start at the global origin: 135
+    // candidates based at global candidate 10, stride 2 (sample 20)
+    let (window, stride, base) = (32usize, 2usize, 10u64);
+    let mut rng = Xoshiro256::new(80);
+    let samples = rng.normal_vec_f32(300);
+    let candidates = (samples.len() - window) / stride + 1;
+    let got = client
+        .segment_put(5, base, base * stride as u64, window, stride, &samples)
+        .unwrap();
+    assert_eq!(got, candidates as u64);
+
+    // the shard verb must reproduce an in-process run_shard bit-for-bit,
+    // with hit coordinates mapped into the global sample frame
+    let q = rng.normal_vec_f32(16);
+    let (k, exclusion) = (2usize, 3usize);
+    let cap = prune_heap_cap(k, exclusion, stride).min(candidates);
+    let engine = StreamingEngine::new(&samples, window, stride, Dist::Sq).unwrap();
+    let expected = run_shard(
+        engine.index(),
+        &q,
+        Dist::Sq,
+        k,
+        cap,
+        CascadeOpts::default(),
+        0..candidates,
+        f32::INFINITY,
+        &RemoteTau::new(),
+    );
+    let f = client
+        .search_shard(
+            77,
+            5,
+            &q,
+            k,
+            exclusion,
+            cap,
+            base,
+            base + candidates as u64,
+            f32::INFINITY,
+            0,
+        )
+        .unwrap();
+    assert_eq!(f.sid, 77);
+    assert_eq!(f.windows, expected.stats.candidates);
+    assert_eq!(f.dp_full, expected.stats.dp_full);
+    assert_eq!(f.tau.to_bits(), expected.tau.to_bits(), "τ survives the wire exactly");
+    assert_eq!(f.hits.len(), expected.hits.len());
+    let offset = (base as usize) * stride;
+    for (a, b) in f.hits.iter().zip(&expected.hits) {
+        assert_eq!(
+            (a.start, a.end, a.cost.to_bits()),
+            (b.start + offset, b.end + offset, b.cost.to_bits()),
+            "wire hits in global coordinates"
+        );
+    }
+
+    // τ broadcasts merge monotonically and ack with the cell value
+    assert_eq!(client.tau(77, 3.5).unwrap(), 3.5);
+    assert_eq!(client.tau(77, 9.0).unwrap(), 3.5, "looser τ never lands");
+    assert_eq!(client.tau(77, 1.25).unwrap(), 1.25);
+
+    // segment.append grows the segment's candidate count
+    let extra = rng.normal_vec_f32(20);
+    let grown = client.segment_append(5, &extra).unwrap();
+    assert_eq!(grown, ((samples.len() + extra.len() - window) / stride + 1) as u64);
+
+    // typed errors: unknown segment, and a sample offset off the grid
+    let err = client
+        .search_shard(1, 99, &q, 1, 1, 1, 0, 1, f32::INFINITY, 0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("[shape_mismatch]"), "{err}");
+    assert!(err.contains("unknown segment"), "{err}");
+    let err = client
+        .segment_put(6, base, base * stride as u64 + 1, window, stride, &samples)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("[shape_mismatch]"), "{err}");
+}
+
+#[test]
+fn wire_v1_sessions_stay_byte_identical_and_v2_adds_error_codes() {
+    let blocking = TestServer::blocking(worker_service());
+    let reactor = TestServer::reactor(worker_service());
+
+    let exchange = |addr: &str, lines: &[&str]| -> Vec<String> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        lines
+            .iter()
+            .map(|l| {
+                stream.write_all(l.as_bytes()).unwrap();
+                stream.write_all(b"\n").unwrap();
+                stream.flush().unwrap();
+                let mut line = String::new();
+                assert!(reader.read_line(&mut line).unwrap() > 0, "closed on {l}");
+                line.trim_end_matches('\n').to_string()
+            })
+            .collect()
+    };
+
+    // a session that never says hello speaks wire v1, byte-for-byte
+    let v1 = ["{\"op\":\"ping\"}", "{\"op\":\"nope\"}", "{\"id\":4,\"op\":\"nope\"}"];
+    // hello upgrades the SAME connection: errors gain the "code" member
+    let v2 = ["{\"op\":\"hello\"}", "{\"op\":\"nope\"}", "{\"op\":\"ping\"}"];
+    for ts in [&blocking, &reactor] {
+        let a = exchange(&ts.addr, &v1);
+        assert_eq!(a[0], "{\"ok\":true,\"pong\":true}");
+        assert!(a[1].contains("\"ok\":false"), "{}", a[1]);
+        assert!(
+            !a[1].contains("\"code\""),
+            "a v1 session must never see the v2 code member: {}",
+            a[1]
+        );
+        assert!(a[2].starts_with("{\"id\":4,\"ok\":false"), "{}", a[2]);
+
+        let b = exchange(&ts.addr, &v2);
+        assert!(b[0].starts_with("{\"ok\":true,\"proto\":2,"), "{}", b[0]);
+        assert!(b[0].contains("\"search.shard\""), "{}", b[0]);
+        assert!(b[0].contains("\"errors.coded\""), "{}", b[0]);
+        assert!(
+            b[1].contains("\"code\":\"unsupported_verb\""),
+            "post-hello errors carry the typed code: {}",
+            b[1]
+        );
+        assert_eq!(b[2], "{\"ok\":true,\"pong\":true}", "happy verbs stay v1-shaped");
+    }
+
+    // and the two front ends agree byte-for-byte on both dialects
+    assert_eq!(exchange(&blocking.addr, &v1), exchange(&reactor.addr, &v1));
+    assert_eq!(exchange(&blocking.addr, &v2), exchange(&reactor.addr, &v2));
+}
+
+#[test]
+fn a_local_backend_attached_in_process_drives_the_same_coordinator_paths() {
+    let mut rng = Xoshiro256::new(90);
+    let reference = rng.normal_vec_f32(400);
+    let (window, stride) = cluster_shape(reference.len());
+
+    // the backend indexes the service's frozen-frame (normalized) view
+    let normalized = sdtw_repro::normalize::znormed(&reference);
+    let backend = LocalBackend::new(&normalized, window, stride, 4, 2).unwrap();
+    let mut svc = SdtwService::start(
+        ServiceOptions { search_only: true, ..Default::default() },
+        reference.clone(),
+    )
+    .unwrap();
+    svc.attach_shard_backend(Arc::new(backend));
+    let serial = search_only(reference);
+
+    let q = rng.normal_vec_f32(24);
+    let opts = SearchOptions { k: 3, exclusion: 8, ..Default::default() };
+    let serial_resp = serial
+        .search_blocking(q.clone(), SearchOptions { window, stride, ..opts })
+        .unwrap();
+    let resp = svc.search_blocking(q, opts).unwrap();
+    assert_hits_bit_identical(&resp.hits, &serial_resp.hits, "local backend");
+    assert_eq!(
+        resp.stats.pruned_total() + resp.stats.dp_full,
+        resp.stats.candidates
+    );
+
+    let m = svc.metrics();
+    assert_eq!(m.cluster_nodes, 1, "the in-process backend is a one-node cluster");
+    assert_eq!(m.tau_broadcasts, 0, "nothing remote to broadcast to");
+    assert_eq!(m.shards_stolen, 0);
+}
